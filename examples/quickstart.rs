@@ -1,0 +1,76 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! 1. open the PJRT runtime over the AOT artifacts,
+//! 2. train a 6-bit LBW detector for a handful of steps,
+//! 3. run detection on a fresh SynthVOC scene,
+//! 4. quantize one layer by hand and inspect its structure.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use lbw_net::coordinator::trainer::{TrainConfig, Trainer};
+use lbw_net::data::{generate_scene, SceneConfig, ShapeClass};
+use lbw_net::detection::{decode_grid, nms};
+use lbw_net::quant::threshold::lbw_quantize_layer;
+use lbw_net::runtime::{lit_f32, to_f32, Runtime};
+
+fn main() -> Result<()> {
+    // --- 1. runtime ---------------------------------------------------
+    let rt = Runtime::open_default()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // --- 2. a tiny training run (60 steps, 6-bit weights) -------------
+    let cfg = TrainConfig {
+        bits: 6,
+        steps: 60,
+        train_scenes: 128,
+        eval_scenes: 32,
+        log_every: 20,
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&rt, cfg)?;
+    let outcome = trainer.train()?;
+    println!(
+        "trained 60 steps: loss {:.3} -> {:.3}, mAP {:.3}",
+        outcome.history.first().unwrap().loss,
+        outcome.history.last().unwrap().loss,
+        outcome.final_map
+    );
+
+    // --- 3. detect on a fresh scene ------------------------------------
+    let ck = &outcome.checkpoint;
+    let scene = generate_scene(4242, 0, &SceneConfig::default());
+    let infer = rt.load("infer_a_b6_bs1")?;
+    let out = infer.run(&[
+        lit_f32(&ck.params, &[ck.params.len()])?,
+        lit_f32(&ck.state, &[ck.state.len()])?,
+        lit_f32(&scene.image, &[1, 64, 64, 3])?,
+    ])?;
+    let dets = nms(decode_grid(&to_f32(&out[0])?, &to_f32(&out[1])?, 0.3), 0.45);
+    println!("\nscene has {} objects:", scene.objects.len());
+    for g in &scene.objects {
+        println!("  GT  {:>9} at ({:.0},{:.0})", ShapeClass::from_index(g.class).name(), g.bbox.x1, g.bbox.y1);
+    }
+    for d in &dets {
+        println!(
+            "  DET {:>9} score {:.2} at ({:.0},{:.0})",
+            ShapeClass::from_index(d.class).name(),
+            d.score,
+            d.bbox.x1,
+            d.bbox.y1
+        );
+    }
+
+    // --- 4. quantize one layer by hand ---------------------------------
+    let e = trainer.spec.param("s2.b0.conv2.w")?;
+    let w = &ck.params[e.offset..e.offset + e.size];
+    let q = lbw_quantize_layer(w, 6, 0.75);
+    println!(
+        "\nlayer s2.b0.conv2.w: {} weights -> scale 2^{}, {:.1}% zeros, {} levels used",
+        w.len(),
+        q.s,
+        q.sparsity() * 100.0,
+        q.level_counts(6).iter().filter(|&&k| k > 0).count()
+    );
+    Ok(())
+}

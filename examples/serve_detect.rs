@@ -1,0 +1,108 @@
+//! Serving demo: the batched detection server under concurrent load,
+//! with the Fig.-1-style qualitative comparison between the float model
+//! and the 6-bit LBW model on the same scenes.
+//!
+//! Run with: `cargo run --release --example serve_detect`
+//! (expects a checkpoint from `examples/train_detect` or `repro train`;
+//! falls back to a fresh short training run if none exists.)
+
+use std::path::Path;
+
+use anyhow::Result;
+use lbw_net::coordinator::params::Checkpoint;
+use lbw_net::coordinator::server::{DetectServer, ServerConfig};
+use lbw_net::coordinator::trainer::{TrainConfig, Trainer};
+use lbw_net::data::{generate_scene, SceneConfig, ShapeClass};
+use lbw_net::runtime::Runtime;
+
+fn get_checkpoint() -> Result<Checkpoint> {
+    let path = Path::new("train_detect_b6.lbw");
+    if path.exists() {
+        println!("using checkpoint {}", path.display());
+        return Checkpoint::load(path);
+    }
+    println!("no checkpoint found; training 120 quick steps first...");
+    let rt = Runtime::open_default()?;
+    let trainer = Trainer::new(
+        &rt,
+        TrainConfig { bits: 6, steps: 120, train_scenes: 512, eval_scenes: 32, log_every: 40, ..Default::default() },
+    )?;
+    Ok(trainer.train()?.checkpoint)
+}
+
+fn main() -> Result<()> {
+    let ck = get_checkpoint()?;
+
+    // --- batched serving under concurrent load --------------------------
+    let server = DetectServer::start(
+        &ck.arch,
+        ck.bits,
+        ck.params.clone(),
+        ck.state.clone(),
+        ServerConfig::default(),
+    )?;
+    let handle = server.handle();
+    let requests = 96usize;
+    let concurrency = 6usize;
+    let t0 = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..concurrency {
+        let h = handle.clone();
+        clients.push(std::thread::spawn(move || {
+            let cfg = SceneConfig::default();
+            for i in 0..requests / concurrency {
+                let s = generate_scene(999, (c * 100 + i) as u64, &cfg);
+                h.detect(s.image).expect("detect");
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {requests} requests with {concurrency} concurrent clients in {wall:.2}s \
+         -> {:.1} img/s",
+        requests as f64 / wall
+    );
+    println!("latency: {}", handle.latency_summary());
+    drop(handle);
+    server.shutdown();
+
+    // --- Fig. 1 analogue: float vs 6-bit on the same scenes -------------
+    println!("\n=== Fig. 1 analogue: 32-bit vs 6-bit detections ===");
+    let rt = Runtime::open_default()?;
+    let infer32 = rt.load("infer_a_b32_bs1")?;
+    let infer6 = rt.load("infer_a_b6_bs1")?;
+    use lbw_net::detection::{decode_grid, nms};
+    use lbw_net::runtime::{lit_f32, to_f32};
+    for i in 0..3u64 {
+        // scene 2 is "crowded": many objects, the paper's hard case
+        let cfg = if i == 2 {
+            SceneConfig { min_objects: 4, max_objects: 4, ..Default::default() }
+        } else {
+            SceneConfig::default()
+        };
+        let s = generate_scene(2024, i, &cfg);
+        println!("scene {i}: {} ground-truth objects", s.objects.len());
+        for (name, exe) in [("32-bit", &infer32), (" 6-bit", &infer6)] {
+            let out = exe.run(&[
+                lit_f32(&ck.params, &[ck.params.len()])?,
+                lit_f32(&ck.state, &[ck.state.len()])?,
+                lit_f32(&s.image, &[1, 64, 64, 3])?,
+            ])?;
+            let dets = nms(decode_grid(&to_f32(&out[0])?, &to_f32(&out[1])?, 0.35), 0.45);
+            let matched = s
+                .objects
+                .iter()
+                .filter(|g| dets.iter().any(|d| d.class == g.class && d.bbox.iou(&g.bbox) >= 0.5))
+                .count();
+            print!("  {name}: {} detections (matched {matched}/{})", dets.len(), s.objects.len());
+            for d in &dets {
+                print!(" [{} {:.2}]", ShapeClass::from_index(d.class).name(), d.score);
+            }
+            println!();
+        }
+    }
+    Ok(())
+}

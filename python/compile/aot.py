@@ -1,0 +1,173 @@
+# AOT exporter: lower the L2 graphs to HLO *text* artifacts for the
+# rust runtime.
+#
+# HLO text (NOT lowered.compiler_ir("hlo") protos / .serialize()) is the
+# interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+# instruction ids which xla_extension 0.5.1 (the version behind the
+# published `xla` 0.1.6 crate) rejects; the text parser reassigns ids
+# and round-trips cleanly. See /opt/xla-example/README.md.
+#
+# Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+#
+# Emits, per DESIGN.md "Parameter/artifact contract":
+#   train_step_{arch}_{bits}.hlo.txt
+#   infer_{arch}_{bits}_bs{1,8}.hlo.txt
+#   quantize_b{bits}.hlo.txt            (parity oracle, N = 4096)
+#   param_spec_{arch}.json              (flat layout for rust)
+#   manifest.json                       (artifact -> signature map)
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+TRAIN_BATCH = 8
+QUANT_N = 4096
+TRAIN_BITS = {"a": (2, 4, 5, 6, 32), "b": (4, 5, 6, 32)}
+INQ_BITS = {"a": (4, 5), "b": ()}  # INQ baseline comparison runs on arch a
+INFER_BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _spec_json(entries):
+    return [
+        {
+            "name": e.name,
+            "shape": list(e.shape),
+            "kind": e.kind,
+            "quantize": e.quantize,
+            "offset": e.offset,
+            "size": e.size,
+        }
+        for e in entries
+    ]
+
+
+def export_one(out_dir, name, fn, args, manifest):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    t0 = time.time()
+    # keep_unused: the fp32 train_step ignores mu_ratio; the artifact
+    # signature must stay uniform across bit-widths for the rust driver.
+    text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    manifest[name] = {
+        "file": f"{name}.hlo.txt",
+        "inputs": [[list(a.shape), str(a.dtype)] for a in args],
+    }
+    print(f"  {name}: {len(text)} chars in {time.time() - t0:.1f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact-name prefixes to export (for iteration)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "img": M.IMG,
+        "grid": M.GRID,
+        "num_classes": M.NUM_CLASSES,
+        "anchor": M.ANCHOR,
+        "train_batch": TRAIN_BATCH,
+        "quant_n": QUANT_N,
+        "artifacts": {},
+    }
+    only = args.only.split(",") if args.only else None
+
+    def want(name):
+        return only is None or any(name.startswith(p) for p in only)
+
+    for arch_name, arch in M.ARCHS.items():
+        P, S = M.num_params(arch), M.num_state(arch)
+        spec = {
+            "arch": arch_name,
+            "num_params": P,
+            "num_state": S,
+            "params": _spec_json(M.param_spec(arch)),
+            "state": _spec_json(M.state_spec(arch)),
+        }
+        with open(os.path.join(args.out_dir, f"param_spec_{arch_name}.json"), "w") as f:
+            json.dump(spec, f, indent=1)
+        B, G = TRAIN_BATCH, M.GRID
+        for bits in TRAIN_BITS[arch_name]:
+            name = f"train_step_{arch_name}_b{bits}"
+            if want(name):
+                export_one(
+                    args.out_dir, name, M.make_train_step(arch, bits),
+                    (
+                        f32(P), f32(P), f32(S),
+                        f32(B, M.IMG, M.IMG, 3), i32(B, G, G), f32(B, G, G, 4),
+                        f32(B, G, G), f32(), f32(), f32(), f32(),
+                    ),
+                    manifest["artifacts"],
+                )
+        for bits in INQ_BITS[arch_name]:
+            name = f"train_step_inq_{arch_name}_b{bits}"
+            if want(name):
+                export_one(
+                    args.out_dir, name, M.make_train_step_inq(arch, bits),
+                    (
+                        f32(P), f32(P), f32(S),
+                        f32(B, M.IMG, M.IMG, 3), i32(B, G, G), f32(B, G, G, 4),
+                        f32(B, G, G), f32(P), f32(), f32(), f32(), f32(),
+                    ),
+                    manifest["artifacts"],
+                )
+        for bits in TRAIN_BITS[arch_name]:
+            for bs in INFER_BATCHES:
+                name = f"infer_{arch_name}_b{bits}_bs{bs}"
+                if want(name):
+                    export_one(
+                        args.out_dir, name, M.make_infer(arch, bits),
+                        (f32(P), f32(S), f32(bs, M.IMG, M.IMG, 3)),
+                        manifest["artifacts"],
+                    )
+
+    for bits in (2, 3, 4, 5, 6):
+        name = f"quantize_b{bits}"
+        if want(name):
+            export_one(
+                args.out_dir, name, M.make_quantize_op(bits),
+                (f32(QUANT_N), f32()),
+                manifest["artifacts"],
+            )
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    existing = {}
+    if only is not None and os.path.exists(man_path):
+        with open(man_path) as f:
+            existing = json.load(f).get("artifacts", {})
+    existing.update(manifest["artifacts"])
+    manifest["artifacts"] = existing
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+# Layer-1 Pallas kernel: the LBW-Net quantization projection (eq. 3).
+#
+# This is the paper's per-step hot spot: every training iteration each
+# convolutional layer's full-precision weights are projected onto
+# 2^s x {0, +-2^{1-n}, ..., +-1}. The elementwise threshold cascade of
+# eq. (3) runs as a Pallas kernel tiled into VMEM-sized 1-D blocks; the
+# closed-form scale of eq. (4) (cheap reductions over the level map) is
+# computed in jnp on top so it fuses into the surrounding HLO.
+#
+# TPU adaptation (DESIGN.md section "Hardware adaptation"): the paper's
+# deployment story is GPU/ASIC bit-shifts; here the *training-time*
+# projection is expressed as an HBM->VMEM streamed elementwise pass,
+# BLOCK=2048 f32 elements = 8 KiB per operand block (in+2 outs = 24 KiB,
+# double-buffered 48 KiB, far under the ~16 MiB VMEM budget, chosen so
+# the grid is long enough to pipeline).
+#
+# interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+# custom-calls; interpret mode lowers the kernel to plain HLO so the
+# rust runtime can run the same artifact. Real-TPU perf is estimated in
+# DESIGN.md / EXPERIMENTS.md section Perf.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 2048
+
+
+def _lbw_threshold_kernel(w_ref, mu_ref, q_ref, t_ref, *, n: int):
+    """Per-block eq. (3): level assignment + Q~ (unscaled sign * 2^{-t}).
+
+    Branch-free cascade with exact power-of-two comparisons (matches
+    ref.ref_level_index bit-for-bit):
+        t    = sum_{j=1..n-1} [ |w| < 2^{1-j} mu ]
+        zero = |w| < (2^{2-n}/3) mu
+    """
+    w = w_ref[...]
+    mu = mu_ref[0]
+    a = jnp.abs(w)
+    t = jnp.zeros(w.shape, dtype=jnp.int32)
+    mag = jnp.ones(w.shape, dtype=jnp.float32)
+    # n is a static Python int: the cascade unrolls to n-1 vector compares
+    # (n = 2^{b-2} <= 16 for b <= 6). The magnitude 2^{-t} is built by
+    # exact halving alongside t (jnp.exp2 is polynomial-approximated on
+    # XLA-CPU and not bit-exact for f32).
+    for j in range(1, n):
+        below = a < (2.0 ** (1 - j)) * mu
+        t = t + below.astype(jnp.int32)
+        mag = jnp.where(below, mag * 0.5, mag)
+    zero = a < ((2.0 ** (2 - n)) / 3.0) * mu
+    t = jnp.where(zero, jnp.int32(-1), t)
+    q_ref[...] = jnp.sign(w) * jnp.where(zero, 0.0, mag)
+    t_ref[...] = t
+
+
+def _pad_to_block(x):
+    n = x.shape[0]
+    rem = (-n) % BLOCK
+    if rem:
+        # Pad with zeros: padded entries land in level -1 (pruned) and do
+        # not perturb the eq. (4) sums (zero L1 mass, zero count).
+        x = jnp.concatenate([x, jnp.zeros((rem,), x.dtype)])
+    return x
+
+
+def lbw_qtilde(w, mu, b: int):
+    """Pallas-backed Q~ + level map of eq. (3) for a flat f32 vector."""
+    n = ref.levels_for_bits(b)
+    flat = _pad_to_block(w.reshape(-1))
+    grid = (flat.shape[0] // BLOCK,)
+    q, t = pl.pallas_call(
+        functools.partial(_lbw_threshold_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),  # mu broadcast to every block
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+            jax.ShapeDtypeStruct(flat.shape, jnp.int32),
+        ],
+        interpret=True,
+    )(flat, mu.reshape(1))
+    size = w.size
+    return q[:size].reshape(w.shape), t[:size].reshape(w.shape)
+
+
+def lbw_quantize(w, mu, b: int):
+    """Full LBW projection W^q = 2^{s~*} Q~ (eqs. (3)+(4)).
+
+    ``w`` any-shape f32, ``mu`` scalar. Returns (wq, levels, s). The
+    scale reductions run in jnp (they are O(4) masked sums over the
+    level map and fuse with the caller); the elementwise cascade runs
+    in the Pallas kernel above.
+    """
+    q, t = lbw_qtilde(w, mu, b)
+    s = ref.ref_scale_power(w, t, b)
+    return (2.0**s) * q, t, s
+
+
+def lbw_quantize_layer(w, b: int, mu_ratio):
+    """Layerwise projection used by training: mu = mu_ratio * ||W||_inf.
+
+    The paper selects mu_ratio = 3/4 for b >= 4 (section 2.2); it stays
+    a runtime scalar so the coordinator can sweep it (the mu-ablation
+    bench).
+    """
+    mu = mu_ratio * jnp.max(jnp.abs(w))
+    wq, _, _ = lbw_quantize(w, mu, b)
+    return wq
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def lbw_quantize_ste(w, b: int, mu_ratio):
+    """Straight-through projection for the projected-SGD step.
+
+    Forward: quantized weights. Backward: identity to the
+    full-precision weights — "the minibatch gradient is evaluated at
+    the quantized weights, and a scaled gradient is subtracted from the
+    full-precision weights" (section 2.2). custom_vjp because the
+    interpret-mode pallas_call has no autodiff rule; the STE rule is
+    exactly what the paper prescribes anyway.
+    """
+    return lbw_quantize_layer(w, b, mu_ratio)
+
+
+def _ste_fwd(w, b, mu_ratio):
+    return lbw_quantize_layer(w, b, mu_ratio), None
+
+
+def _ste_bwd(b, _res, g):
+    return g, None  # d/dw = identity; no gradient to mu_ratio
+
+
+lbw_quantize_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def inq_effective(w, frozen, b: int, mu_ratio):
+    """INQ effective weights (the baseline of Zhou et al. [25]): the
+    `frozen` partition is pinned to its LBW-quantized value (zero
+    gradient), the remainder stays full-precision and trainable.
+
+    custom_vjp: the interpret-mode Pallas projection has no autodiff
+    rule, and INQ's gradient is exactly `g * (1 - frozen)`.
+    """
+    wq = lbw_quantize_layer(w, b, mu_ratio)
+    return frozen * wq + (1.0 - frozen) * w
+
+
+def _inq_fwd(w, frozen, b, mu_ratio):
+    return inq_effective(w, frozen, b, mu_ratio), frozen
+
+
+def _inq_bwd(b, frozen, g):
+    return g * (1.0 - frozen), jnp.zeros_like(frozen), jnp.zeros(())
+
+
+inq_effective.defvjp(_inq_fwd, _inq_bwd)

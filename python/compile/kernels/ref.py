@@ -1,0 +1,123 @@
+# Pure-jnp correctness oracle for the Pallas kernels.
+#
+# These are the ground-truth implementations of the paper's math:
+#   * eq. (3): semi-analytical threshold quantization Q~ with one free
+#     parameter mu (LBW-Net section 2.1),
+#   * eq. (4) / Theorem 2: closed-form optimal power-of-two scale 2^s,
+#   * a plain matmul used to check the MXU-tiled Pallas kernel.
+#
+# pytest (python/tests/) asserts the Pallas kernels match these to
+# float tolerance; the rust implementation (rust/src/quant/threshold.rs)
+# is cross-checked against the AOT artifact built on top of them.
+import jax.numpy as jnp
+import numpy as np
+
+
+def levels_for_bits(b: int) -> int:
+    """n = 2^{b-2}: number of nonzero magnitude levels {2^{-t}}, t=0..n-1."""
+    if b < 2:
+        raise ValueError(f"bit-width must be >= 2, got {b}")
+    return 2 ** (b - 2)
+
+
+def ref_level_index(w, mu, b: int):
+    """Per-element level assignment of eq. (3).
+
+    Returns int32 levels: t in [0, n-1] means |q| = 2^{-t}; -1 means
+    pruned to zero. Uses exact comparisons (no log2) so the boundary
+    behaviour is bit-reproducible across jnp / Pallas / rust:
+
+        t = sum_{j=1..n-1} [ |w|/mu < 2^{1-j} ]      (capped at n-1)
+        zero iff |w|/mu < 2^{2-n}/3
+
+    which is algebraically identical to the case analysis in eq. (3)
+    (for t in 1..n-2 the interval is [2^{-t} mu, 2^{-t+1} mu); the last
+    level keeps [2^{2-n} mu / 3, 2^{2-n} mu) because its lower neighbour
+    is 0, and the top level keeps everything >= mu).
+    """
+    n = levels_for_bits(b)
+    a = jnp.abs(w)
+    r = a / mu
+    t = jnp.zeros(w.shape, dtype=jnp.int32)
+    for j in range(1, n):
+        t = t + (r < 2.0 ** (1 - j)).astype(jnp.int32)
+    zero = r < (2.0 ** (2 - n)) / 3.0
+    return jnp.where(zero, jnp.int32(-1), t)
+
+
+def ref_qtilde(w, mu, b: int):
+    """Q~ of eq. (3): sign(w) * 2^{-t}, or 0 when pruned.
+
+    2^{-t} is built by exact halving alongside the comparison cascade so
+    the result is bit-identical to the Pallas kernel and the rust
+    implementation (no transcendental exp2).
+    """
+    n = levels_for_bits(b)
+    a = jnp.abs(w)
+    mag = jnp.ones(w.shape, dtype=jnp.float32)
+    for j in range(1, n):
+        mag = jnp.where(a < (2.0 ** (1 - j)) * mu, mag * 0.5, mag)
+    t = ref_level_index(w, mu, b)
+    return jnp.sign(w) * jnp.where(t < 0, 0.0, mag), t
+
+
+def ref_scale_power(w, t, b: int, max_terms: int = 4):
+    """Optimal scale power s~* of eq. (4) / Theorem 2.
+
+    s = floor(log2( 4 * sum_t 2^{-t} ||W_[k_t]||_1 / (3 * sum_t k_t 2^{-2t}) ))
+
+    Following section 2.2 we truncate the sums at the first
+    ``max_terms`` levels (the tails are negligible). Returns f32 scalar
+    s (an integer value); s = 0 when every weight was pruned.
+    """
+    n = levels_for_bits(b)
+    a = jnp.abs(w)
+    num = jnp.float32(0.0)
+    den = jnp.float32(0.0)
+    for lv in range(min(n, max_terms)):
+        mask = (t == lv).astype(jnp.float32)
+        num = num + (2.0 ** (-lv)) * jnp.sum(a * mask)
+        den = den + (2.0 ** (-2 * lv)) * jnp.sum(mask)
+    s = jnp.floor(jnp.log2(4.0 * num / (3.0 * den)))
+    return jnp.where(den > 0, s, 0.0)
+
+
+def ref_lbw_quantize(w, mu, b: int):
+    """Full LBW quantization: W^q = 2^{s~*} Q~ (eqs. (3)+(4)).
+
+    Returns (wq, levels_i32, s_f32). ``mu`` is the free threshold
+    parameter, selected as 0.75 * ||W||_inf per layer in training.
+    """
+    q, t = ref_qtilde(w, mu, b)
+    s = ref_scale_power(w, t, b)
+    return (2.0 ** s) * q, t, s
+
+
+def ref_matmul(x, w):
+    """Oracle for the tiled Pallas matmul: plain f32 x @ w."""
+    return jnp.matmul(x, w)
+
+
+def np_lbw_quantize(w: np.ndarray, mu: float, b: int):
+    """Numpy twin of ref_lbw_quantize for test-vector generation."""
+    n = levels_for_bits(b)
+    a = np.abs(w).astype(np.float32)
+    r = a / np.float32(mu)
+    t = np.zeros(w.shape, dtype=np.int32)
+    for j in range(1, n):
+        t += (r < np.float32(2.0 ** (1 - j))).astype(np.int32)
+    t = np.where(r < np.float32((2.0 ** (2 - n)) / 3.0), -1, t)
+    num = np.float32(0.0)
+    den = np.float32(0.0)
+    for lv in range(min(n, 4)):
+        mask = t == lv
+        num += np.float32(2.0 ** (-lv)) * a[mask].sum(dtype=np.float32)
+        den += np.float32(2.0 ** (-2 * lv)) * np.float32(mask.sum())
+    s = np.floor(np.log2(4.0 * num / (3.0 * den))) if den > 0 else 0.0
+    # numpy's exp2 IS exact for integer args, but mirror the halving
+    # construction anyway for uniformity across the three implementations.
+    mag = np.ones(w.shape, dtype=np.float32)
+    for j in range(1, n):
+        mag = np.where(r < np.float32(2.0 ** (1 - j)), mag * np.float32(0.5), mag)
+    mag = np.where(t < 0, np.float32(0.0), mag)
+    return (np.float32(2.0**s) * np.sign(w) * mag).astype(np.float32), t, float(s)

@@ -1,0 +1,444 @@
+# Layer-2: the LBW-Net detection model in JAX.
+#
+# microResNet backbone + R-FCN-lite position-sensitive detection head
+# (DESIGN.md "Substitutions"), with the paper's projected-SGD training
+# step: every convolution kernel is pushed through the Pallas LBW
+# projection (eq. 3 + eq. 4) with straight-through gradients before the
+# forward pass, so "the minibatch gradient is evaluated at the
+# quantized weights, and a scaled gradient is subtracted from the
+# full-precision weights" (section 2.2). Batch norm + Nesterov momentum
+# as in the paper.
+#
+# Everything here is build-time only: aot.py lowers train_step / infer
+# to HLO text and the rust coordinator drives those artifacts.
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import lbw, matmul as mm, psvote
+
+# ----------------------------------------------------------------------
+# Problem constants (mirrored in rust/src/data and rust/src/nn).
+IMG = 64          # input image side (RGB, NHWC)
+GRID = 8          # detection grid side (IMG / 8 total stride)
+K = 3             # k x k position-sensitive groups (R-FCN's k=3)
+NUM_CLASSES = 4   # SynthVOC object classes: circle, square, triangle, cross
+NUM_CLS = NUM_CLASSES + 1  # + background at index 0
+ANCHOR = 16.0     # box size anchor in pixels (log-space regression base)
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """Backbone depth/width preset.
+
+    ``a`` plays the role of ResNet-50 in Table 1, ``b`` the deeper
+    ResNet-101 (same two-depth axis, scaled to this testbed).
+    """
+
+    name: str
+    blocks: Tuple[int, int, int]   # residual blocks per stage
+    widths: Tuple[int, int, int]   # channels per stage
+    head_width: int
+
+    @property
+    def stem_width(self) -> int:
+        return self.widths[0]
+
+
+ARCHS: Dict[str, ArchConfig] = {
+    "a": ArchConfig("a", blocks=(1, 1, 1), widths=(16, 32, 64), head_width=64),
+    "b": ArchConfig("b", blocks=(2, 2, 2), widths=(16, 32, 64), head_width=64),
+}
+
+
+# ----------------------------------------------------------------------
+# Parameter specification: a deterministic, named layout of every
+# trainable tensor (params) and every BN running statistic (state),
+# flattened into single f32 vectors. The same spec is emitted as JSON at
+# AOT time and parsed by rust/src/coordinator/params.rs — rust never
+# hardcodes offsets.
+
+@dataclasses.dataclass(frozen=True)
+class ParamEntry:
+    name: str
+    shape: Tuple[int, ...]
+    kind: str        # conv | bias | bn_scale | bn_bias | bn_mean | bn_var
+    quantize: bool   # True for every convolution kernel (paper: all conv layers)
+    offset: int
+    size: int
+
+
+def _conv_shape(kh, kw, cin, cout):
+    return (kh, kw, cin, cout)  # HWIO, matches lax.conv dimension numbers
+
+
+def _build_layer_list(arch: ArchConfig) -> List[Tuple[str, Tuple[int, ...], str, bool]]:
+    """Forward-order list of (name, shape, kind, quantize)."""
+    layers: List[Tuple[str, Tuple[int, ...], str, bool]] = []
+
+    def conv(name, kh, kw, cin, cout):
+        layers.append((f"{name}.w", _conv_shape(kh, kw, cin, cout), "conv", True))
+
+    def bn(name, c):
+        layers.append((f"{name}.scale", (c,), "bn_scale", False))
+        layers.append((f"{name}.bias", (c,), "bn_bias", False))
+
+    conv("stem", 3, 3, 3, arch.stem_width)
+    bn("stem.bn", arch.stem_width)
+    cin = arch.stem_width
+    for si, (nblocks, cout) in enumerate(zip(arch.blocks, arch.widths)):
+        for bi in range(nblocks):
+            p = f"s{si}.b{bi}"
+            conv(f"{p}.conv1", 3, 3, cin, cout)
+            bn(f"{p}.bn1", cout)
+            conv(f"{p}.conv2", 3, 3, cout, cout)
+            bn(f"{p}.bn2", cout)
+            if cin != cout:
+                conv(f"{p}.skip", 1, 1, cin, cout)
+            cin = cout
+    conv("head", 3, 3, cin, arch.head_width)
+    bn("head.bn", arch.head_width)
+    # 1x1 heads run through the Pallas tiled matmul; stored as [Cin, Cout].
+    layers.append(("cls.w", (arch.head_width, K * K * NUM_CLS), "conv", True))
+    layers.append(("cls.b", (K * K * NUM_CLS,), "bias", False))
+    layers.append(("reg.w", (arch.head_width, 4), "conv", True))
+    layers.append(("reg.b", (4,), "bias", False))
+    return layers
+
+
+def param_spec(arch: ArchConfig) -> List[ParamEntry]:
+    entries = []
+    off = 0
+    for name, shape, kind, q in _build_layer_list(arch):
+        size = int(np.prod(shape))
+        entries.append(ParamEntry(name, shape, kind, q, off, size))
+        off += size
+    return entries
+
+
+def state_spec(arch: ArchConfig) -> List[ParamEntry]:
+    """BN running mean/var, in forward order."""
+    entries = []
+    off = 0
+    for name, shape, kind, _ in _build_layer_list(arch):
+        if kind == "bn_scale":
+            c = shape[0]
+            base = name[: -len(".scale")]
+            for leaf in ("mean", "var"):
+                entries.append(ParamEntry(f"{base}.{leaf}", (c,), f"bn_{leaf}", False, off, c))
+                off += c
+    return entries
+
+
+def num_params(arch: ArchConfig) -> int:
+    sp = param_spec(arch)
+    return sp[-1].offset + sp[-1].size
+
+
+def num_state(arch: ArchConfig) -> int:
+    sp = state_spec(arch)
+    return sp[-1].offset + sp[-1].size
+
+
+def unflatten(flat, spec: List[ParamEntry]):
+    return {
+        e.name: jax.lax.dynamic_slice(flat, (e.offset,), (e.size,)).reshape(e.shape)
+        for e in spec
+    }
+
+
+def flatten_dict(d, spec: List[ParamEntry]):
+    return jnp.concatenate([d[e.name].reshape(-1) for e in spec])
+
+
+def init_params(arch: ArchConfig, seed: int = 0) -> np.ndarray:
+    """He-normal conv init, BN scale 1 / bias 0, zero biases.
+
+    All bit-widths share the *same* initial weights for a fair
+    comparison, mirroring the shared-initialization protocol of the
+    paper's Table 1 (section 3.1).
+    """
+    rng = np.random.default_rng(seed)
+    out = np.zeros(num_params(arch), dtype=np.float32)
+    for e in param_spec(arch):
+        if e.kind == "conv":
+            fan_in = int(np.prod(e.shape[:-1]))
+            w = rng.normal(0.0, np.sqrt(2.0 / fan_in), e.size).astype(np.float32)
+            out[e.offset : e.offset + e.size] = w
+        elif e.kind == "bn_scale":
+            out[e.offset : e.offset + e.size] = 1.0
+        # bn_bias / bias stay zero
+    return out
+
+
+def init_state(arch: ArchConfig) -> np.ndarray:
+    out = np.zeros(num_state(arch), dtype=np.float32)
+    for e in state_spec(arch):
+        if e.kind == "bn_var":
+            out[e.offset : e.offset + e.size] = 1.0
+    return out
+
+
+# ----------------------------------------------------------------------
+# Forward pass.
+
+def _conv2d(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _batch_norm(x, scale, bias, mean, var, train: bool):
+    """In train mode normalizes with batch statistics (and reports them
+    for the running-average update); in eval mode uses the provided
+    running statistics."""
+    if train:
+        m = jnp.mean(x, axis=(0, 1, 2))
+        v = jnp.var(x, axis=(0, 1, 2))
+    else:
+        m, v = mean, var
+    y = (x - m) * jax.lax.rsqrt(v + BN_EPS) * scale + bias
+    return y, m, v
+
+
+def _maybe_quantize(w, bits: int, mu_ratio):
+    """Project conv weights through the LBW Pallas kernel (STE); identity
+    at full precision (bits >= 32)."""
+    if bits >= 32:
+        return w
+    return lbw.lbw_quantize_ste(w, bits, mu_ratio)
+
+
+def _inq_effective(w, frozen, bits: int, mu_ratio):
+    """INQ-style effective weights (Zhou et al. [25], the paper's main
+    comparator): the `frozen` partition is replaced by its quantized
+    value and receives NO gradient; the rest stays full-precision and
+    trainable. µ comes from the full layer so frozen/trainable share
+    the level grid."""
+    return lbw.inq_effective(w, frozen, bits, mu_ratio)
+
+
+def ps_vote(maps):
+    """Position-sensitive voting over the detection grid (jnp oracle).
+
+    maps: [B, G, G, K*K, C]. Group g = (dy, dx) in {-1,0,1}^2 holds the
+    evidence "this cell looks like part (dy,dx) of an object"; the score
+    of cell (y, x) averages group (dy, dx) read at neighbour
+    (y+dy, x+dx) — the dense-grid analogue of R-FCN's PS-RoI pooling
+    (k = 3). Zero padding outside the grid.
+
+    The production graph uses the Pallas kernel
+    (`kernels/psvote.py::ps_vote`); this jnp version is its pytest
+    oracle and documents the semantics.
+    """
+    b, g1, g2, kk, c = maps.shape
+    assert kk == K * K
+    padded = jnp.pad(maps, ((0, 0), (1, 1), (1, 1), (0, 0), (0, 0)))
+    votes = []
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            gidx = (dy + 1) * K + (dx + 1)
+            votes.append(padded[:, 1 + dy : 1 + dy + g1, 1 + dx : 1 + dx + g2, gidx, :])
+    return jnp.mean(jnp.stack(votes, axis=0), axis=0)  # [B, G, G, C]
+
+
+def forward(pd, sd, x, arch: ArchConfig, bits: int, mu_ratio, train: bool, md=None):
+    """Run the detector.
+
+    pd/sd: name->tensor dicts (params / BN state). x: [B,64,64,3].
+    ``md``: optional frozen-mask dict (same keys as pd) switching the
+    weight transform from LBW projected-SGD to INQ incremental
+    quantization. Returns (cls_logits, reg, new_state_dict).
+    """
+    new_state = {}
+
+    def bn(name, h):
+        y, m, v = _batch_norm(
+            h, pd[f"{name}.scale"], pd[f"{name}.bias"],
+            sd[f"{name}.mean"], sd[f"{name}.var"], train,
+        )
+        if train:
+            new_state[f"{name}.mean"] = BN_MOMENTUM * sd[f"{name}.mean"] + (1 - BN_MOMENTUM) * m
+            new_state[f"{name}.var"] = BN_MOMENTUM * sd[f"{name}.var"] + (1 - BN_MOMENTUM) * v
+        else:
+            new_state[f"{name}.mean"] = sd[f"{name}.mean"]
+            new_state[f"{name}.var"] = sd[f"{name}.var"]
+        return y
+
+    def qw(name):
+        if md is not None:
+            return _inq_effective(pd[name], md[name], bits, mu_ratio)
+        return _maybe_quantize(pd[name], bits, mu_ratio)
+
+    h = _conv2d(x, qw("stem.w"), stride=2)
+    h = jax.nn.relu(bn("stem.bn", h))
+    cin = arch.stem_width
+    for si, (nblocks, cout) in enumerate(zip(arch.blocks, arch.widths)):
+        for bi in range(nblocks):
+            p = f"s{si}.b{bi}"
+            stride = 2 if (bi == 0 and si > 0) else 1
+            r = _conv2d(h, qw(f"{p}.conv1.w"), stride=stride)
+            r = jax.nn.relu(bn(f"{p}.bn1", r))
+            r = _conv2d(r, qw(f"{p}.conv2.w"), stride=1)
+            r = bn(f"{p}.bn2", r)
+            if cin != cout:
+                skip = _conv2d(h, qw(f"{p}.skip.w"), stride=stride)
+            elif stride != 1:
+                skip = h[:, ::stride, ::stride, :]
+            else:
+                skip = h
+            h = jax.nn.relu(r + skip)
+            cin = cout
+    h = _conv2d(h, qw("head.w"), stride=1)
+    h = jax.nn.relu(bn("head.bn", h))
+    # 1x1 heads via the MXU-tiled Pallas matmul.
+    cls_maps = mm.conv1x1(h, qw("cls.w"), pd["cls.b"])
+    b = x.shape[0]
+    cls_maps = cls_maps.reshape(b, GRID, GRID, K * K, NUM_CLS)
+    cls_logits = psvote.ps_vote(cls_maps)
+    reg = mm.conv1x1(h, qw("reg.w"), pd["reg.b"])
+    return cls_logits, reg, new_state
+
+
+# ----------------------------------------------------------------------
+# Loss + projected-SGD train step.
+
+def _smooth_l1(x):
+    ax = jnp.abs(x)
+    return jnp.where(ax < 1.0, 0.5 * x * x, ax - 0.5)
+
+
+def detection_loss(cls_logits, reg, cls_t, box_t, pos):
+    """Grid detection loss.
+
+    cls_t: int32 [B,G,G] (0 = background, 1..NUM_CLASSES = object class);
+    box_t: f32 [B,G,G,4] encoded (ty, tx, th, tw); pos: f32 [B,G,G] mask.
+    Positives are upweighted 4x in the CE (the grid is background-heavy,
+    playing the role of R-FCN's OHEM).
+    """
+    logp = jax.nn.log_softmax(cls_logits, axis=-1)
+    onehot = jax.nn.one_hot(cls_t, NUM_CLS, dtype=jnp.float32)
+    ce = -jnp.sum(onehot * logp, axis=-1)
+    w = 1.0 + 3.0 * pos
+    cls_loss = jnp.sum(ce * w) / jnp.sum(w)
+    npos = jnp.maximum(jnp.sum(pos), 1.0)
+    box_loss = jnp.sum(_smooth_l1(reg - box_t) * pos[..., None]) / npos
+    return cls_loss, box_loss
+
+
+def make_train_step(arch: ArchConfig, bits: int):
+    """Build the jittable projected-SGD + Nesterov momentum step.
+
+    Flat signature (all f32 unless noted):
+      (params[P], vel[P], state[S], images[B,64,64,3], cls_t[B,G,G] i32,
+       box_t[B,G,G,4], pos[B,G,G], lr[], momentum[], mu_ratio[], wd[])
+      -> (params'[P], vel'[P], state'[S], loss[], cls_loss[], box_loss[])
+    """
+    pspec, sspec = param_spec(arch), state_spec(arch)
+
+    def loss_fn(params, state, images, cls_t, box_t, pos, mu_ratio, wd):
+        pd = unflatten(params, pspec)
+        sd = unflatten(state, sspec)
+        cls_logits, reg, new_sd = forward(pd, sd, images, arch, bits, mu_ratio, train=True)
+        cls_loss, box_loss = detection_loss(cls_logits, reg, cls_t, box_t, pos)
+        # Weight decay acts on the *full-precision* weights (the shadow
+        # variables of projected SGD).
+        l2 = sum(jnp.sum(pd[e.name] ** 2) for e in pspec if e.kind == "conv")
+        loss = cls_loss + box_loss + 0.5 * wd * l2
+        new_state = flatten_dict(new_sd, sspec)
+        return loss, (cls_loss, box_loss, new_state)
+
+    def train_step(params, vel, state, images, cls_t, box_t, pos, lr, momentum, mu_ratio, wd):
+        (loss, (cls_loss, box_loss, new_state)), g = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params, state, images, cls_t, box_t, pos, mu_ratio, wd)
+        # Nesterov momentum on the full-precision shadow weights.
+        new_vel = momentum * vel - lr * g
+        new_params = params + momentum * new_vel - lr * g
+        return new_params, new_vel, new_state, loss, cls_loss, box_loss
+
+    return train_step
+
+
+def make_train_step_inq(arch: ArchConfig, bits: int):
+    """INQ baseline train step (incremental network quantization).
+
+    Same flat signature as make_train_step plus a `frozen[P]` mask after
+    `pos`: frozen weights are pinned to their quantized values (zero
+    gradient), the rest trains at full precision. The rust coordinator
+    drives the INQ schedule (re-partitioning between phases).
+
+      (params[P], vel[P], state[S], images, cls_t, box_t, pos,
+       frozen[P], lr[], momentum[], mu_ratio[], wd[])
+      -> (params'[P], vel'[P], state'[S], loss[], cls_loss[], box_loss[])
+    """
+    pspec, sspec = param_spec(arch), state_spec(arch)
+
+    def loss_fn(params, state, images, cls_t, box_t, pos, frozen, mu_ratio, wd):
+        pd = unflatten(params, pspec)
+        sd = unflatten(state, sspec)
+        md = unflatten(frozen, pspec)
+        cls_logits, reg, new_sd = forward(
+            pd, sd, images, arch, bits, mu_ratio, train=True, md=md
+        )
+        cls_loss, box_loss = detection_loss(cls_logits, reg, cls_t, box_t, pos)
+        l2 = sum(jnp.sum(pd[e.name] ** 2) for e in pspec if e.kind == "conv")
+        loss = cls_loss + box_loss + 0.5 * wd * l2
+        return loss, (cls_loss, box_loss, flatten_dict(new_sd, sspec))
+
+    def train_step(params, vel, state, images, cls_t, box_t, pos, frozen,
+                   lr, momentum, mu_ratio, wd):
+        (loss, (cls_loss, box_loss, new_state)), g = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params, state, images, cls_t, box_t, pos, frozen, mu_ratio, wd)
+        # frozen weights receive no update (their grad is already 0 via
+        # stop_gradient, but momentum could still drift them: mask it)
+        live = 1.0 - frozen
+        new_vel = (momentum * vel - lr * g) * live
+        new_params = params + (momentum * new_vel - lr * g) * live
+        return new_params, new_vel, new_state, loss, cls_loss, box_loss
+
+    return train_step
+
+
+def make_infer(arch: ArchConfig, bits: int):
+    """Inference graph: quantized weights (b < 32), BN running stats,
+    softmax class probabilities.
+
+    (params[P], state[S], images[B,64,64,3])
+      -> (cls_prob[B,G,G,NUM_CLS], reg[B,G,G,4])
+    """
+    pspec, sspec = param_spec(arch), state_spec(arch)
+
+    def infer(params, state, images):
+        pd = unflatten(params, pspec)
+        sd = unflatten(state, sspec)
+        mu_ratio = jnp.float32(0.75)  # paper's choice for b >= 4
+        cls_logits, reg, _ = forward(pd, sd, images, arch, bits, mu_ratio, train=False)
+        return jax.nn.softmax(cls_logits, axis=-1), reg
+
+    return infer
+
+
+def make_quantize_op(bits: int):
+    """Standalone quantization graph: the parity oracle the rust
+    implementation is integration-tested against.
+
+    (w[N], mu[]) -> (wq[N], levels[N] i32, s[])
+    """
+
+    def quantize(w, mu):
+        wq, t, s = lbw.lbw_quantize(w, mu, bits)
+        return wq, t, s
+
+    return quantize

@@ -1,0 +1,6 @@
+# Allow running `pytest python/tests/` from the repository root (the
+# `compile` package lives in python/).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,148 @@
+# Kernel-vs-reference correctness: the CORE L1 signal.
+#
+# The Pallas LBW quantizer must match the pure-jnp oracle bit-for-bit
+# (both use the exact-comparison cascade; no transcendentals), and the
+# tiled matmul must match jnp.matmul to f32 tolerance. hypothesis
+# sweeps shapes, dtyped ranges, bit-widths, and mu ratios.
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lbw, matmul, ref
+
+BITS = [2, 3, 4, 5, 6]
+
+
+def _rand_w(n, seed, scale=0.05):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0.0, scale, n).astype(np.float32)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n", [1, 7, 2048, 2049, 5000])
+def test_pallas_matches_ref(bits, n):
+    w = jnp.asarray(_rand_w(n, seed=n * 31 + bits))
+    mu = 0.75 * jnp.max(jnp.abs(w))
+    wq_k, t_k = lbw.lbw_qtilde(w, mu, bits)
+    wq_r, t_r = ref.ref_qtilde(w, mu, bits)
+    np.testing.assert_array_equal(np.asarray(t_k), np.asarray(t_r))
+    np.testing.assert_array_equal(np.asarray(wq_k), np.asarray(wq_r))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_full_quantize_matches_numpy(bits):
+    w = _rand_w(4096, seed=bits)
+    mu = float(0.75 * np.abs(w).max())
+    wq_k, t_k, s_k = lbw.lbw_quantize(jnp.asarray(w), jnp.float32(mu), bits)
+    wq_n, t_n, s_n = ref.np_lbw_quantize(w, mu, bits)
+    np.testing.assert_array_equal(np.asarray(t_k), t_n)
+    assert float(s_k) == s_n
+    np.testing.assert_array_equal(np.asarray(wq_k), wq_n)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    bits=st.sampled_from(BITS),
+    scale=st.floats(1e-3, 10.0),
+    ratio=st.floats(0.1, 1.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_quantized_values_are_powers_of_two(n, bits, scale, ratio, seed):
+    """Every quantized weight is 0 or +-2^k; level map consistent with
+    the output value; mu sweep included (the free parameter)."""
+    w = _rand_w(n, seed, scale)
+    if np.abs(w).max() == 0.0:
+        return
+    mu = np.float32(ratio * np.abs(w).max())
+    wq, t, s = lbw.lbw_quantize(jnp.asarray(w), jnp.asarray(mu), bits)
+    wq, t, s = np.asarray(wq), np.asarray(t), float(s)
+    nlev = ref.levels_for_bits(bits)
+    assert t.min() >= -1 and t.max() < nlev
+    zero = t == -1
+    assert (wq[zero] == 0).all()
+    nz = wq[~zero]
+    if nz.size:
+        m = np.frexp(np.abs(nz))[0]  # mantissa of a power of two is 0.5
+        np.testing.assert_array_equal(m, np.full_like(m, 0.5))
+        expected = np.exp2(s - t[~zero].astype(np.float64)) * np.sign(w[~zero])
+        np.testing.assert_allclose(nz, expected, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bits=st.sampled_from(BITS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_projection_no_worse_than_naive_scale(bits, seed):
+    """The eq.(4) scale must beat (or tie) its power-of-two neighbours:
+    floor-to-nearest-pow2 of the unconstrained optimum is optimal among
+    integer s for the fixed level assignment."""
+    w = _rand_w(1024, seed)
+    mu = np.float32(0.75 * np.abs(w).max())
+    wq, t, s = lbw.lbw_quantize(jnp.asarray(w), jnp.asarray(mu), bits)
+    wq, t = np.asarray(wq), np.asarray(t)
+    q = np.where(t < 0, 0.0, np.exp2(-np.maximum(t, 0).astype(np.float64))) * np.sign(w)
+    err = ((wq - w) ** 2).sum()
+    for ds in (-1, 1):
+        alt = np.exp2(float(s) + ds) * q
+        assert err <= ((alt - w) ** 2).sum() + 1e-6
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_ternary_special_case_structure(bits):
+    """b=2 must produce exactly {0, +-2^s}; b>2 produces at most
+    2^{b-2} distinct magnitudes (paper: 2^{b-1}+1 candidate values)."""
+    w = _rand_w(8192, seed=7)
+    mu = np.float32(0.75 * np.abs(w).max())
+    wq = np.asarray(lbw.lbw_quantize(jnp.asarray(w), jnp.asarray(mu), bits)[0])
+    mags = np.unique(np.abs(wq[wq != 0]))
+    assert len(mags) <= ref.levels_for_bits(bits)
+    if bits == 2:
+        assert len(mags) <= 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.sampled_from([16, 64, 128]),
+    n=st.sampled_from([4, 45, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(matmul.matmul(x, w)),
+        np.asarray(ref.ref_matmul(x, w)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_matmul_grad_matches_jnp():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(130, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 45)).astype(np.float32))
+    f_k = lambda x, w: jnp.sum(jnp.sin(matmul.matmul(x, w)))
+    f_r = lambda x, w: jnp.sum(jnp.sin(jnp.matmul(x, w)))
+    gx_k, gw_k = jax.grad(f_k, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_r, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx_k), np.asarray(gx_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw_k), np.asarray(gw_r), rtol=1e-4, atol=1e-4)
+
+
+def test_ste_gradient_is_identity():
+    w = jnp.asarray(_rand_w(3000, seed=11))
+    g = jax.grad(lambda w: jnp.sum(lbw.lbw_quantize_ste(w, 6, jnp.float32(0.75)) * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), np.full(3000, 3.0, np.float32))
+
+
+def test_mu_zero_edge_case():
+    """All-zero weight vector: everything prunes, s falls back to 0."""
+    w = jnp.zeros(128, jnp.float32)
+    wq, t, s = lbw.lbw_quantize(w, jnp.float32(1.0), 6)
+    assert (np.asarray(wq) == 0).all() and (np.asarray(t) == -1).all()
+    assert float(s) == 0.0

@@ -1,0 +1,99 @@
+# Pallas PS-vote kernel vs the jnp oracle, and the INQ baseline
+# train-step semantics.
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import psvote
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_psvote_kernel_matches_oracle(b, seed):
+    rng = np.random.default_rng(seed)
+    maps = jnp.asarray(
+        rng.normal(size=(b, M.GRID, M.GRID, M.K * M.K, M.NUM_CLS)).astype(np.float32)
+    )
+    got = psvote.ps_vote(maps)
+    want = M.ps_vote(maps)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_psvote_vjp_matches_oracle_grad():
+    rng = np.random.default_rng(3)
+    maps = jnp.asarray(
+        rng.normal(size=(2, M.GRID, M.GRID, M.K * M.K, M.NUM_CLS)).astype(np.float32)
+    )
+    f_k = lambda m: jnp.sum(jnp.sin(psvote.ps_vote(m)))
+    f_r = lambda m: jnp.sum(jnp.sin(M.ps_vote(m)))
+    gk = jax.grad(f_k)(maps)
+    gr = jax.grad(f_r)(maps)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-5, atol=1e-6)
+
+
+def _batch(b, seed=0):
+    rng = np.random.default_rng(seed)
+    imgs = jnp.asarray(rng.normal(0, 1, (b, M.IMG, M.IMG, 3)).astype(np.float32))
+    cls_t = jnp.asarray(rng.integers(0, M.NUM_CLS, (b, M.GRID, M.GRID)).astype(np.int32))
+    box_t = jnp.asarray(rng.normal(0, 0.3, (b, M.GRID, M.GRID, 4)).astype(np.float32))
+    pos = (cls_t > 0).astype(jnp.float32)
+    return imgs, cls_t, box_t, pos
+
+
+@pytest.fixture(scope="module")
+def arch():
+    return M.ARCHS["a"]
+
+
+def test_inq_frozen_weights_do_not_move(arch):
+    """With a frozen partition, those parameter slots must stay exactly
+    at their full-precision values (INQ freezes the quantized copy; the
+    shadow floats are pinned)."""
+    step = jax.jit(M.make_train_step_inq(arch, 4))
+    params = jnp.asarray(M.init_params(arch))
+    vel = jnp.zeros_like(params)
+    state = jnp.asarray(M.init_state(arch))
+    imgs, cls_t, box_t, pos = _batch(4)
+    # freeze the first conv layer entirely
+    e = M.param_spec(arch)[0]
+    frozen = jnp.zeros_like(params).at[e.offset : e.offset + e.size].set(1.0)
+    hyper = (jnp.float32(0.05), jnp.float32(0.9), jnp.float32(0.75), jnp.float32(0.0))
+    p, v, s, loss, _, _ = step(params, vel, state, imgs, cls_t, box_t, pos, frozen, *hyper)
+    frozen_np = np.asarray(frozen) > 0
+    np.testing.assert_array_equal(np.asarray(p)[frozen_np], np.asarray(params)[frozen_np])
+    assert not np.array_equal(np.asarray(p)[~frozen_np], np.asarray(params)[~frozen_np])
+    assert np.isfinite(float(loss))
+
+
+def test_inq_all_frozen_trains_nothing_but_bn(arch):
+    step = jax.jit(M.make_train_step_inq(arch, 4))
+    params = jnp.asarray(M.init_params(arch, seed=2))
+    vel = jnp.zeros_like(params)
+    state = jnp.asarray(M.init_state(arch))
+    imgs, cls_t, box_t, pos = _batch(4, seed=5)
+    frozen = jnp.ones_like(params)
+    hyper = (jnp.float32(0.05), jnp.float32(0.9), jnp.float32(0.75), jnp.float32(0.0))
+    p, _, s, loss, _, _ = step(params, vel, state, imgs, cls_t, box_t, pos, frozen, *hyper)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(params))
+    # BN running stats still update (they are state, not params)
+    assert not np.array_equal(np.asarray(s), np.asarray(state))
+
+
+def test_inq_loss_decreases_over_steps(arch):
+    step = jax.jit(M.make_train_step_inq(arch, 4))
+    params = jnp.asarray(M.init_params(arch, seed=3))
+    vel = jnp.zeros_like(params)
+    state = jnp.asarray(M.init_state(arch))
+    imgs, cls_t, box_t, pos = _batch(4, seed=7)
+    frozen = jnp.zeros_like(params)  # phase 0: nothing frozen yet
+    hyper = (jnp.float32(0.02), jnp.float32(0.9), jnp.float32(0.75), jnp.float32(1e-5))
+    losses = []
+    for _ in range(5):
+        params, vel, state, loss, _, _ = step(
+            params, vel, state, imgs, cls_t, box_t, pos, frozen, *hyper
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses

@@ -1,0 +1,67 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **µ choice** (the paper's single free parameter, §2.2): detection
+//!    mAP after short training at µ/‖W‖∞ ∈ {0.5, 0.75, 1.0} — the paper
+//!    selects 0.75 on detection performance, not approximation error.
+//! 2. **LBW projected-SGD vs INQ incremental quantization** (the
+//!    paper's main comparator [25]) at b=4, same budget.
+//! 3. **Data augmentation** on/off.
+//!
+//! Short-budget runs: directions, not converged numbers (full runs via
+//! the CLI; see EXPERIMENTS.md).
+
+use lbw_net::coordinator::inq::{train_inq, InqConfig};
+use lbw_net::coordinator::trainer::{TrainConfig, Trainer};
+use lbw_net::runtime::{default_artifacts_dir, Runtime};
+
+fn main() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        println!("bench_ablation: artifacts not built, skipping");
+        return;
+    }
+    let rt = Runtime::open_default().unwrap();
+    let steps = 120u64;
+    let base = TrainConfig {
+        arch: "a".into(),
+        bits: 4,
+        steps,
+        train_scenes: 512,
+        eval_scenes: 64,
+        log_every: 0,
+        ..Default::default()
+    };
+
+    println!("=== ablation 1: µ ratio (b=4, {steps} steps) ===");
+    println!("{:<10} {:<10}", "mu/||W||", "mAP");
+    for ratio in [0.5f32, 0.75, 1.0] {
+        let trainer =
+            Trainer::new(&rt, TrainConfig { mu_ratio: ratio, ..base.clone() }).unwrap();
+        let out = trainer.train().unwrap();
+        println!("{:<10.2} {:<10.4}", ratio, out.final_map);
+    }
+
+    println!("\n=== ablation 2: LBW projected-SGD vs INQ (b=4, {steps} steps) ===");
+    let lbw = Trainer::new(&rt, base.clone()).unwrap().train().unwrap();
+    println!("{:<28} mAP {:.4}", "LBW (quantize every step)", lbw.final_map);
+    if rt.manifest.artifacts.contains_key("train_step_inq_a_b4") {
+        let inq = train_inq(&rt, &InqConfig { base: base.clone(), ..Default::default() }).unwrap();
+        println!("{:<28} mAP {:.4}", "INQ (4-phase incremental)", inq.final_map);
+        println!(
+            "phase-end losses: {:?}",
+            inq.phase_losses.iter().map(|l| (l * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+        );
+    } else {
+        println!("(INQ artifacts not built — rerun `make artifacts`)");
+    }
+
+    println!("\n=== ablation 3: augmentation (b=6, {steps} steps) ===");
+    for aug in [false, true] {
+        let trainer = Trainer::new(
+            &rt,
+            TrainConfig { bits: 6, augment: aug, ..base.clone() },
+        )
+        .unwrap();
+        let out = trainer.train().unwrap();
+        println!("augment={:<6} mAP {:.4}", aug, out.final_map);
+    }
+}

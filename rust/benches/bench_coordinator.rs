@@ -1,0 +1,100 @@
+//! L3 coordinator micro-benchmarks: the pieces of the request path the
+//! rust layer owns — scene generation, target encoding, decode + NMS,
+//! mAP, literal marshalling, and the batched server's overhead over
+//! raw artifact execution. The coordinator must not be the bottleneck
+//! (DESIGN.md §Perf).
+
+use lbw_net::consts::{GRID, IMG, NUM_CLS, TRAIN_BATCH};
+use lbw_net::coordinator::server::{DetectServer, ServerConfig};
+use lbw_net::data::{encode_targets, generate_scene, Rng, Scene, SceneConfig};
+use lbw_net::detection::{decode_grid, mean_ap, nms, ApMode};
+use lbw_net::runtime::{default_artifacts_dir, lit_f32, Runtime};
+use lbw_net::util::bench::run;
+
+fn main() {
+    println!("=== bench_coordinator: L3 hot-path pieces ===");
+    let cfg = SceneConfig::default();
+
+    run("generate_scene", 300, || generate_scene(1, 42, &cfg));
+    let scenes: Vec<Scene> = (0..TRAIN_BATCH as u64).map(|i| generate_scene(1, i, &cfg)).collect();
+    run("encode_targets (batch 8)", 300, || encode_targets(&scenes));
+
+    // decode + nms on a dense synthetic prediction
+    let mut rng = Rng::new(3);
+    let cls: Vec<f32> = (0..GRID * GRID * NUM_CLS).map(|_| rng.uniform()).collect();
+    let reg: Vec<f32> = (0..GRID * GRID * 4).map(|_| rng.normal() * 0.2).collect();
+    run("decode_grid + NMS (dense grid)", 200, || {
+        nms(decode_grid(&cls, &reg, 0.2), 0.45)
+    });
+
+    // mAP over a realistic eval set
+    let mut dets = Vec::new();
+    let mut gts = Vec::new();
+    for img in 0..256usize {
+        let s = generate_scene(7, img as u64, &cfg);
+        for (k, g) in s.objects.iter().enumerate() {
+            gts.push((img, *g));
+            dets.push((
+                img,
+                lbw_net::detection::Detection {
+                    bbox: g.bbox,
+                    class: if k % 7 == 0 { (g.class + 1) % 4 } else { g.class },
+                    score: rng.uniform(),
+                },
+            ));
+        }
+    }
+    run("mean_ap VOC-11pt (256 imgs)", 300, || mean_ap(&dets, &gts, ApMode::Voc11Point));
+
+    // literal marshalling cost (the params upload dominates)
+    let params: Vec<f32> = (0..117_377).map(|_| rng.normal()).collect();
+    run("lit_f32 params (117k)", 200, || lit_f32(&params, &[params.len()]).unwrap());
+    let imgs: Vec<f32> = (0..TRAIN_BATCH * IMG * IMG * 3).map(|_| rng.normal()).collect();
+    run("lit_f32 image batch (8x64x64x3)", 200, || {
+        lit_f32(&imgs, &[TRAIN_BATCH, IMG, IMG, 3]).unwrap()
+    });
+
+    // batched server overhead vs raw executable
+    if default_artifacts_dir().join("manifest.json").exists() {
+        println!("\n=== serving: raw artifact vs batched server ===");
+        let rt = Runtime::open_default().unwrap();
+        let spec =
+            lbw_net::coordinator::params::ParamSpec::load_from_dir(&default_artifacts_dir(), "a")
+                .unwrap();
+        let p = lbw_net::coordinator::init::init_params(&spec, 1);
+        let st = lbw_net::coordinator::init::init_state(&spec);
+        let exe = rt.load("infer_a_b6_bs8").unwrap();
+        let batch_imgs: Vec<f32> = (0..TRAIN_BATCH * IMG * IMG * 3).map(|_| rng.normal()).collect();
+        let raw = run("raw infer_a_b6_bs8 (8 imgs)", 2000, || {
+            exe.run(&[
+                lit_f32(&p, &[p.len()]).unwrap(),
+                lit_f32(&st, &[st.len()]).unwrap(),
+                lit_f32(&batch_imgs, &[TRAIN_BATCH, IMG, IMG, 3]).unwrap(),
+            ])
+            .unwrap()
+        });
+
+        let server =
+            DetectServer::start("a", 6, p.clone(), st.clone(), ServerConfig::default()).unwrap();
+        let handle = server.handle();
+        let img: Vec<f32> = (0..IMG * IMG * 3).map(|_| rng.normal()).collect();
+        // 8 concurrent clients -> full batches
+        let served = run("server round (8 concurrent)", 3000, || {
+            let mut clients = Vec::new();
+            for _ in 0..8 {
+                let h = handle.clone();
+                let im = img.clone();
+                clients.push(std::thread::spawn(move || h.detect(im).unwrap()));
+            }
+            clients.into_iter().map(|c| c.join().unwrap().len()).sum::<usize>()
+        });
+        println!(
+            "    batching overhead vs raw batch-8 execution: {:.2}x",
+            served.mean.as_secs_f64() / raw.mean.as_secs_f64()
+        );
+        drop(handle);
+        server.shutdown();
+    } else {
+        println!("(artifacts not built: skipping server bench)");
+    }
+}

@@ -1,0 +1,89 @@
+//! §2.1 exactness + quantizer throughput bench.
+//!
+//! * the `O(N log N)` exact ternary solver vs the eq.(3) scheme at
+//!   model-layer sizes (throughput), and
+//! * the approximation-error comparison of exact / semi-analytic /
+//!   baseline schemes (quality), reproducing the paper's §2.1 claims:
+//!   ternary exact solvable at scale, enumeration infeasible for b≥3,
+//!   eq.(3) a low-cost approximation.
+
+use lbw_net::data::Rng;
+use lbw_net::quant::{baselines, exact, l2_err, threshold};
+use lbw_net::util::bench::run;
+
+fn weights(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() * 0.03 * (1.0 + rng.normal().abs())).collect()
+}
+
+fn main() {
+    println!("=== bench_quant: quantizer throughput (layer-sized vectors) ===");
+    let sizes = [4_608usize, 36_864, 117_377];
+    for &n in &sizes {
+        let w = weights(n, n as u64);
+        run(&format!("eq.(3) LBW b=6, N={n}"), 300, || {
+            threshold::lbw_quantize_layer(&w, 6, 0.75)
+        });
+        run(&format!("eq.(3) LBW b=2, N={n}"), 300, || {
+            threshold::lbw_quantize_layer(&w, 2, 0.75)
+        });
+        run(&format!("exact ternary (Thm 1), N={n}"), 300, || exact::ternary_exact(&w));
+    }
+
+    println!("\n=== exact enumeration cost growth (b=3, small N) ===");
+    for n in [8usize, 12, 16, 20] {
+        let w = weights(n, 99 + n as u64);
+        run(&format!("exact_enumerate b=3, N={n}"), 200, || exact::exact_enumerate(&w, 3));
+    }
+
+    println!("\n=== quality: L2 error per scheme (N=16384, mean of 5 draws) ===");
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let draws: Vec<Vec<f32>> = (0..5).map(|s| weights(16_384, 1000 + s)).collect();
+    let mut add = |name: &str, f: &dyn Fn(&[f32]) -> Vec<f32>| {
+        let e: f64 = draws.iter().map(|w| l2_err(w, &f(w))).sum::<f64>() / draws.len() as f64;
+        rows.push((name.to_string(), e));
+    };
+    add("exact ternary (Thm 1)", &|w| exact::ternary_exact(w).wq);
+    add("LBW b=2", &|w| threshold::lbw_quantize_layer(w, 2, 0.75).wq);
+    add("LBW b=4", &|w| threshold::lbw_quantize_layer(w, 4, 0.75).wq);
+    add("LBW b=5", &|w| threshold::lbw_quantize_layer(w, 5, 0.75).wq);
+    add("LBW b=6", &|w| threshold::lbw_quantize_layer(w, 6, 0.75).wq);
+    add("TWN", &|w| baselines::twn(w));
+    add("XNOR", &|w| baselines::xnor(w));
+    add("BinaryConnect", &|w| baselines::binary_connect(w));
+    add("DoReFa b=4", &|w| baselines::dorefa(w, 4));
+    add("INQ b=5", &|w| baselines::inq_round(w, 5));
+    for (name, e) in rows {
+        println!("{name:<26} {e:>14.6e}");
+    }
+
+    println!("\n=== ablation: eq.(4) partial sums vs full sums (b=6) ===");
+    // SCALE_TERMS=4 partial sums (paper §2.2) vs summing all 16 levels:
+    // the resulting scale must agree on realistic layers.
+    let mut agree = 0;
+    let total = 50;
+    for seed in 0..total {
+        let w = weights(36_864, 5000 + seed);
+        let q = threshold::lbw_quantize_layer(&w, 6, 0.75);
+        // full-sum scale
+        let (_, t) = threshold::qtilde(&w, 0.75 * w.iter().fold(0.0f32, |m, &x| m.max(x.abs())), 6);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for lv in 0..16i32 {
+            let l1: f64 = w
+                .iter()
+                .zip(&t)
+                .filter(|(_, &ti)| ti == lv)
+                .map(|(x, _)| x.abs() as f64)
+                .sum();
+            let k = t.iter().filter(|&&ti| ti == lv).count() as f64;
+            num += f64::powi(2.0, -lv) * l1;
+            den += f64::powi(2.0, -2 * lv) * k;
+        }
+        let s_full = (4.0 * num / (3.0 * den)).log2().floor() as i32;
+        if s_full == q.s {
+            agree += 1;
+        }
+    }
+    println!("partial-sum scale == full-sum scale on {agree}/{total} layers (paper: tails negligible)");
+}

@@ -1,0 +1,40 @@
+//! Table 1 smoke bench: a scaled-down version of the mAP-vs-bit-width
+//! grid (the full run is `repro table1 --steps 400`; results in
+//! EXPERIMENTS.md). Here: µResNet-A, short training, bits {4, 6, 32},
+//! verifying the protocol end-to-end and timing one projected-SGD
+//! training step per bit-width.
+
+use lbw_net::coordinator::trainer::{TrainConfig, Trainer};
+use lbw_net::runtime::{default_artifacts_dir, Runtime};
+
+fn main() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        println!("bench_table1: artifacts not built, skipping");
+        return;
+    }
+    let rt = Runtime::open_default().unwrap();
+    let steps = 50u64;
+    println!("=== bench_table1: Table 1 smoke (µResNet-A, {steps} steps) ===");
+    println!("{:<6} {:<10} {:<14} {:<12}", "bits", "mAP", "ms/step", "loss end");
+    for bits in [4u32, 6, 32] {
+        let cfg = TrainConfig {
+            arch: "a".into(),
+            bits,
+            steps,
+            train_scenes: 256,
+            eval_scenes: 64,
+            log_every: steps, // only the final row
+            ..Default::default()
+        };
+        let trainer = Trainer::new(&rt, cfg).unwrap();
+        let out = trainer.train().unwrap();
+        println!(
+            "{:<6} {:<10.4} {:<14.1} {:<12.4}",
+            bits,
+            out.final_map,
+            out.mean_step_ms,
+            out.history.last().map(|h| h.loss).unwrap_or(f32::NAN)
+        );
+    }
+    println!("\n(full Table 1 reproduction: `target/release/repro table1 --steps 400`)");
+}

@@ -1,0 +1,214 @@
+//! TOML configuration system: one file describes the model variant,
+//! training hyper-parameters, quantization, and dataset generation.
+//! Defaults reproduce the paper's experiments; CLI flags override.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::trainer::TrainConfig;
+use crate::data::SceneConfig;
+use crate::util::toml::{parse as toml_parse, TomlDoc};
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub model: ModelSection,
+    pub train: TrainSection,
+    pub quant: QuantSection,
+    pub data: DataSection,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSection {
+    /// Backbone variant: "a" (ResNet-50 analogue) or "b" (ResNet-101
+    /// analogue).
+    pub arch: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainSection {
+    pub steps: u64,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub lr_drops: Vec<f64>,
+    pub seed: u64,
+    pub eval_every: u64,
+    pub log_every: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantSection {
+    /// Weight bit-width; 32 disables quantization.
+    pub bits: u32,
+    /// µ = mu_ratio · ‖W‖∞ (paper: 0.75 for b ≥ 4).
+    pub mu_ratio: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct DataSection {
+    pub train_scenes: u64,
+    pub eval_scenes: u64,
+    pub min_objects: usize,
+    pub max_objects: usize,
+    pub noise: f32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let t = TrainConfig::default();
+        let s = SceneConfig::default();
+        Config {
+            model: ModelSection { arch: t.arch.clone() },
+            train: TrainSection {
+                steps: t.steps,
+                lr: t.lr,
+                momentum: t.momentum,
+                weight_decay: t.weight_decay,
+                lr_drops: t.lr_drops.clone(),
+                seed: t.seed,
+                eval_every: t.eval_every,
+                log_every: t.log_every,
+            },
+            quant: QuantSection { bits: t.bits, mu_ratio: t.mu_ratio },
+            data: DataSection {
+                train_scenes: t.train_scenes,
+                eval_scenes: t.eval_scenes,
+                min_objects: s.min_objects,
+                max_objects: s.max_objects,
+                noise: s.noise,
+            },
+        }
+    }
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse a TOML document, overriding defaults key by key.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc: TomlDoc = toml_parse(text)?;
+        let mut cfg = Config::default();
+        for (key, v) in &doc {
+            match key.as_str() {
+                "model.arch" => cfg.model.arch = v.as_str()?.to_string(),
+                "train.steps" => cfg.train.steps = v.as_u64()?,
+                "train.lr" => cfg.train.lr = v.as_f32()?,
+                "train.momentum" => cfg.train.momentum = v.as_f32()?,
+                "train.weight_decay" => cfg.train.weight_decay = v.as_f32()?,
+                "train.lr_drops" => cfg.train.lr_drops = v.as_f64_arr()?,
+                "train.seed" => cfg.train.seed = v.as_u64()?,
+                "train.eval_every" => cfg.train.eval_every = v.as_u64()?,
+                "train.log_every" => cfg.train.log_every = v.as_u64()?,
+                "quant.bits" => cfg.quant.bits = v.as_u32()?,
+                "quant.mu_ratio" => cfg.quant.mu_ratio = v.as_f32()?,
+                "data.train_scenes" => cfg.data.train_scenes = v.as_u64()?,
+                "data.eval_scenes" => cfg.data.eval_scenes = v.as_u64()?,
+                "data.min_objects" => cfg.data.min_objects = v.as_usize()?,
+                "data.max_objects" => cfg.data.max_objects = v.as_usize()?,
+                "data.noise" => cfg.data.noise = v.as_f32()?,
+                other => anyhow::bail!("unknown config key `{other}`"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.model.arch == "a" || self.model.arch == "b",
+            "arch must be 'a' or 'b', got {}",
+            self.model.arch
+        );
+        ensure!(
+            matches!(self.quant.bits, 2 | 4 | 5 | 6 | 32),
+            "bits must be one of 2/4/5/6/32 (artifacts exist for these), got {}",
+            self.quant.bits
+        );
+        ensure!(self.quant.mu_ratio > 0.0 && self.quant.mu_ratio <= 2.0, "mu_ratio out of range");
+        ensure!(
+            self.data.min_objects >= 1 && self.data.max_objects >= self.data.min_objects,
+            "bad object count range"
+        );
+        Ok(())
+    }
+
+    /// Lower into the trainer's config.
+    pub fn to_train_config(&self) -> TrainConfig {
+        TrainConfig {
+            arch: self.model.arch.clone(),
+            bits: self.quant.bits,
+            steps: self.train.steps,
+            lr: self.train.lr,
+            momentum: self.train.momentum,
+            mu_ratio: self.quant.mu_ratio,
+            weight_decay: self.train.weight_decay,
+            lr_drops: self.train.lr_drops.clone(),
+            seed: self.train.seed,
+            train_scenes: self.data.train_scenes,
+            eval_scenes: self.data.eval_scenes,
+            eval_every: self.train.eval_every,
+            log_every: self.train.log_every,
+            augment: false,
+            scene_cfg: SceneConfig {
+                min_objects: self.data.min_objects,
+                max_objects: self.data.max_objects,
+                noise: self.data.noise,
+                ..Default::default()
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_partial_override() {
+        let cfg = Config::from_toml(
+            r#"
+            [quant]
+            bits = 4
+            [train]
+            steps = 42
+            lr_drops = [0.5]
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.quant.bits, 4);
+        assert_eq!(cfg.train.steps, 42);
+        assert_eq!(cfg.train.lr_drops, vec![0.5]);
+        // untouched sections keep defaults
+        assert_eq!(cfg.model.arch, "a");
+        assert!((cfg.quant.mu_ratio - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_bits_rejected() {
+        assert!(Config::from_toml("[quant]\nbits = 7\n").is_err());
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_toml("[quant]\nbitz = 6\n").is_err());
+    }
+
+    #[test]
+    fn lowers_to_train_config() {
+        let mut cfg = Config::default();
+        cfg.model.arch = "b".into();
+        cfg.quant.bits = 5;
+        let t = cfg.to_train_config();
+        assert_eq!(t.arch, "b");
+        assert_eq!(t.bits, 5);
+    }
+}

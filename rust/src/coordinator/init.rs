@@ -1,0 +1,116 @@
+//! Parameter initialization from the spec (He-normal convs, unit BN
+//! scales, zero biases) — mirrors `model.py::init_params` in *protocol*
+//! (all bit-widths share one seed → identical starts, §3.1's fair-
+//! comparison setup), not bit-for-bit.
+
+use super::params::ParamSpec;
+use crate::data::Rng;
+
+/// He-normal initial parameter vector for `spec`, deterministic in
+/// `seed`.
+pub fn init_params(spec: &ParamSpec, seed: u64) -> Vec<f32> {
+    let mut out = vec![0.0f32; spec.num_params];
+    let mut rng = Rng::new(seed ^ 0x1B3D_5EED_C0DE_F00D);
+    for e in &spec.params {
+        match e.kind.as_str() {
+            "conv" => {
+                let fan_in: usize = e.shape[..e.shape.len() - 1].iter().product();
+                let std = (2.0 / fan_in as f32).sqrt();
+                for i in 0..e.size {
+                    out[e.offset + i] = std * rng.normal();
+                }
+            }
+            "bn_scale" => {
+                for i in 0..e.size {
+                    out[e.offset + i] = 1.0;
+                }
+            }
+            _ => {} // biases stay zero
+        }
+    }
+    out
+}
+
+/// Initial BN state: zero means, unit variances.
+pub fn init_state(spec: &ParamSpec) -> Vec<f32> {
+    let mut out = vec![0.0f32; spec.num_state];
+    for e in &spec.state {
+        if e.kind == "bn_var" {
+            for i in 0..e.size {
+                out[e.offset + i] = 1.0;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::params::SpecEntry;
+
+    fn spec() -> ParamSpec {
+        ParamSpec {
+            arch: "t".into(),
+            num_params: 20,
+            num_state: 4,
+            params: vec![
+                SpecEntry {
+                    name: "c.w".into(),
+                    shape: vec![3, 3, 2, 1],
+                    kind: "conv".into(),
+                    quantize: true,
+                    offset: 0,
+                    size: 18,
+                },
+                SpecEntry {
+                    name: "b.scale".into(),
+                    shape: vec![2],
+                    kind: "bn_scale".into(),
+                    quantize: false,
+                    offset: 18,
+                    size: 2,
+                },
+            ],
+            state: vec![
+                SpecEntry {
+                    name: "b.mean".into(),
+                    shape: vec![2],
+                    kind: "bn_mean".into(),
+                    quantize: false,
+                    offset: 0,
+                    size: 2,
+                },
+                SpecEntry {
+                    name: "b.var".into(),
+                    shape: vec![2],
+                    kind: "bn_var".into(),
+                    quantize: false,
+                    offset: 2,
+                    size: 2,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn deterministic_and_scaled() {
+        let s = spec();
+        let a = init_params(&s, 1);
+        let b = init_params(&s, 1);
+        assert_eq!(a, b);
+        let c = init_params(&s, 2);
+        assert_ne!(a, c);
+        // conv std ~ sqrt(2/18)
+        let std = (a[..18].iter().map(|x| x * x).sum::<f32>() / 18.0).sqrt();
+        assert!(std > 0.05 && std < 1.0, "{std}");
+        assert_eq!(&a[18..], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn state_vars_are_one() {
+        let s = spec();
+        let st = init_state(&s);
+        assert_eq!(st, vec![0.0, 0.0, 1.0, 1.0]);
+    }
+}

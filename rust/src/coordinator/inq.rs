@@ -1,0 +1,221 @@
+//! INQ baseline trainer — Incremental Network Quantization (Zhou et
+//! al. [25]), the heuristic scheme the paper positions LBW-Net against.
+//!
+//! INQ converts a network to powers of two *incrementally*: at each
+//! phase a larger fraction of each conv layer's weights (largest
+//! magnitudes first, per the INQ paper's pruning-inspired partition) is
+//! frozen at its quantized value while the remaining full-precision
+//! weights retrain to absorb the error. The schedule runs through the
+//! `train_step_inq_{arch}_{bits}` artifact which takes the frozen mask
+//! as an input; this module owns the partitioning and phase logic.
+
+use anyhow::{ensure, Result};
+
+use super::init::{init_params, init_state};
+use super::params::{Checkpoint, ParamSpec};
+use super::trainer::TrainConfig;
+use crate::consts::{GRID, IMG, TRAIN_BATCH};
+use crate::data::{encode_targets, generate_scene, Scene};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, Runtime};
+
+/// INQ schedule: cumulative frozen fractions per phase (the INQ paper's
+/// default {0.5, 0.75, 0.875, 1.0}).
+#[derive(Debug, Clone)]
+pub struct InqConfig {
+    pub base: TrainConfig,
+    pub phases: Vec<f64>,
+}
+
+impl Default for InqConfig {
+    fn default() -> Self {
+        InqConfig { base: TrainConfig::default(), phases: vec![0.5, 0.75, 0.875, 1.0] }
+    }
+}
+
+/// Frozen mask for one phase: per conv layer, the top `fraction` of
+/// weights by magnitude (ties broken by index). Non-conv parameters are
+/// never frozen.
+pub fn build_mask(spec: &ParamSpec, params: &[f32], fraction: f64) -> Vec<f32> {
+    let mut mask = vec![0.0f32; params.len()];
+    for e in spec.conv_entries() {
+        let w = &params[e.offset..e.offset + e.size];
+        let k = ((e.size as f64) * fraction).round() as usize;
+        if k == 0 {
+            continue;
+        }
+        let mut idx: Vec<usize> = (0..e.size).collect();
+        idx.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap().then(a.cmp(&b)));
+        for &i in idx.iter().take(k.min(e.size)) {
+            mask[e.offset + i] = 1.0;
+        }
+    }
+    mask
+}
+
+/// Outcome of an INQ run: final checkpoint + per-phase losses + mAP.
+#[derive(Debug)]
+pub struct InqOutcome {
+    pub checkpoint: Checkpoint,
+    pub phase_losses: Vec<f32>,
+    pub final_map: f64,
+}
+
+/// Run the INQ schedule. Splits `base.steps` evenly across phases.
+pub fn train_inq(rt: &Runtime, cfg: &InqConfig) -> Result<InqOutcome> {
+    ensure!(!cfg.phases.is_empty(), "empty INQ schedule");
+    ensure!(
+        cfg.phases.windows(2).all(|w| w[0] < w[1]) && *cfg.phases.last().unwrap() == 1.0,
+        "phases must be increasing and end at 1.0"
+    );
+    let spec = ParamSpec::load_from_dir(&crate::runtime::default_artifacts_dir(), &cfg.base.arch)?;
+    let step_exe = rt.load(&format!("train_step_inq_{}_b{}", cfg.base.arch, cfg.base.bits))?;
+    let infer_exe = rt.load(&format!(
+        "infer_{}_b{}_bs{}",
+        cfg.base.arch, cfg.base.bits, TRAIN_BATCH
+    ))?;
+
+    let mut params = init_params(&spec, cfg.base.seed);
+    let mut vel = vec![0.0f32; params.len()];
+    let mut state = init_state(&spec);
+    let steps_per_phase = (cfg.base.steps / cfg.phases.len() as u64).max(1);
+    let mut phase_losses = Vec::new();
+    let mut global_step = 0u64;
+
+    for (pi, &fraction) in cfg.phases.iter().enumerate() {
+        let mask = build_mask(&spec, &params, fraction);
+        let mut last_loss = f32::NAN;
+        for s in 0..steps_per_phase {
+            let scenes: Vec<Scene> = (0..TRAIN_BATCH as u64)
+                .map(|i| {
+                    let idx = (global_step * TRAIN_BATCH as u64 + i) % cfg.base.train_scenes;
+                    generate_scene(cfg.base.seed, idx, &cfg.base.scene_cfg)
+                })
+                .collect();
+            let batch = encode_targets(&scenes);
+            // lr decays by phase (INQ retrains at progressively lower lr)
+            let lr = cfg.base.lr * 0.5f32.powi(pi as i32);
+            let out = step_exe.run(&[
+                lit_f32(&params, &[params.len()])?,
+                lit_f32(&vel, &[vel.len()])?,
+                lit_f32(&state, &[state.len()])?,
+                lit_f32(&batch.images, &[TRAIN_BATCH, IMG, IMG, 3])?,
+                lit_i32(&batch.cls_t, &[TRAIN_BATCH, GRID, GRID])?,
+                lit_f32(&batch.box_t, &[TRAIN_BATCH, GRID, GRID, 4])?,
+                lit_f32(&batch.pos, &[TRAIN_BATCH, GRID, GRID])?,
+                lit_f32(&mask, &[mask.len()])?,
+                lit_scalar(lr),
+                lit_scalar(cfg.base.momentum),
+                lit_scalar(cfg.base.mu_ratio),
+                lit_scalar(cfg.base.weight_decay),
+            ])?;
+            ensure!(out.len() == 6, "inq step returned {} outputs", out.len());
+            params = to_f32(&out[0])?;
+            vel = to_f32(&out[1])?;
+            state = to_f32(&out[2])?;
+            last_loss = out[3].get_first_element::<f32>()?;
+            ensure!(last_loss.is_finite(), "INQ diverged at phase {pi} step {s}");
+            global_step += 1;
+        }
+        phase_losses.push(last_loss);
+        eprintln!(
+            "[inq {} b{}] phase {pi} ({:>5.1}% frozen) loss {last_loss:.4}",
+            cfg.base.arch,
+            cfg.base.bits,
+            fraction * 100.0
+        );
+    }
+
+    // Final evaluation through the matching low-bit infer artifact: at
+    // 100% frozen the in-graph quantization equals re-projecting the
+    // stored full-precision weights with the same (bits, mu) rule.
+    let final_map = super::trainer::evaluate_with_artifact(
+        rt,
+        &infer_exe,
+        &params,
+        &state,
+        cfg.base.seed,
+        cfg.base.train_scenes,
+        cfg.base.eval_scenes,
+        &cfg.base.scene_cfg,
+    )?;
+    Ok(InqOutcome {
+        checkpoint: Checkpoint {
+            arch: cfg.base.arch.clone(),
+            bits: cfg.base.bits,
+            step: cfg.base.steps,
+            params,
+            state,
+        },
+        phase_losses,
+        final_map,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::params::SpecEntry;
+
+    fn spec2() -> ParamSpec {
+        ParamSpec {
+            arch: "t".into(),
+            num_params: 10,
+            num_state: 0,
+            params: vec![
+                SpecEntry {
+                    name: "c.w".into(),
+                    shape: vec![8],
+                    kind: "conv".into(),
+                    quantize: true,
+                    offset: 0,
+                    size: 8,
+                },
+                SpecEntry {
+                    name: "b.bias".into(),
+                    shape: vec![2],
+                    kind: "bias".into(),
+                    quantize: false,
+                    offset: 8,
+                    size: 2,
+                },
+            ],
+            state: vec![],
+        }
+    }
+
+    #[test]
+    fn mask_freezes_largest_magnitudes_only() {
+        let spec = spec2();
+        let params = vec![0.1, -0.9, 0.3, 0.05, -0.4, 0.8, 0.02, -0.2, 9.0, 9.0];
+        let mask = build_mask(&spec, &params, 0.5);
+        // top 4 of the conv layer by |w|: -0.9, 0.8, -0.4, 0.3
+        assert_eq!(mask[1], 1.0);
+        assert_eq!(mask[5], 1.0);
+        assert_eq!(mask[4], 1.0);
+        assert_eq!(mask[2], 1.0);
+        assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), 4);
+        // bias entries never frozen despite huge values
+        assert_eq!(mask[8], 0.0);
+        assert_eq!(mask[9], 0.0);
+    }
+
+    #[test]
+    fn mask_fraction_one_freezes_all_convs() {
+        let spec = spec2();
+        let params = vec![1.0; 10];
+        let mask = build_mask(&spec, &params, 1.0);
+        assert_eq!(mask[..8], [1.0; 8]);
+        assert_eq!(mask[8..], [0.0; 2]);
+    }
+
+    #[test]
+    fn mask_monotone_in_fraction() {
+        let spec = spec2();
+        let params: Vec<f32> = (0..10).map(|i| (i as f32 - 5.0) * 0.1).collect();
+        let m1 = build_mask(&spec, &params, 0.25);
+        let m2 = build_mask(&spec, &params, 0.75);
+        for (a, b) in m1.iter().zip(&m2) {
+            assert!(b >= a, "freezing must be monotone");
+        }
+    }
+}

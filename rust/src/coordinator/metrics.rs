@@ -1,0 +1,104 @@
+//! Lightweight latency/throughput metrics for the trainer and the
+//! detection server.
+
+use std::time::Duration;
+
+/// Online latency recorder with percentile queries.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1000.0
+    }
+
+    /// p in [0, 100].
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[rank.min(s.len() - 1)] as f64 / 1000.0
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            self.count(),
+            self.mean_ms(),
+            self.percentile_ms(50.0),
+            self.percentile_ms(95.0),
+            self.percentile_ms(99.0),
+        )
+    }
+}
+
+/// One row of the training log.
+#[derive(Debug, Clone)]
+pub struct StepLog {
+    pub step: u64,
+    pub loss: f32,
+    pub cls_loss: f32,
+    pub box_loss: f32,
+    pub lr: f32,
+    pub step_ms: f64,
+}
+
+impl StepLog {
+    /// One JSONL line.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("loss", Json::num(self.loss as f64)),
+            ("cls_loss", Json::num(self.cls_loss as f64)),
+            ("box_loss", Json::num(self.box_loss as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("step_ms", Json::num(self.step_ms)),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut l = LatencyStats::new();
+        for i in 1..=100 {
+            l.record(Duration::from_millis(i));
+        }
+        assert_eq!(l.count(), 100);
+        assert!(l.percentile_ms(50.0) <= l.percentile_ms(95.0));
+        assert!(l.percentile_ms(95.0) <= l.percentile_ms(99.0));
+        assert!((l.mean_ms() - 50.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let l = LatencyStats::new();
+        assert_eq!(l.mean_ms(), 0.0);
+        assert_eq!(l.percentile_ms(99.0), 0.0);
+    }
+}

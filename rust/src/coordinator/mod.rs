@@ -1,0 +1,14 @@
+//! Layer-3 coordinator: the training driver, the batched detection
+//! server, parameter/checkpoint management, and metrics. Owns the event
+//! loop and process lifecycle; all heavy math happens inside the AOT
+//! artifacts (training/infer) or the native engines (deployment).
+
+pub mod init;
+pub mod inq;
+pub mod metrics;
+pub mod params;
+pub mod server;
+pub mod trainer;
+
+pub use params::{Checkpoint, ParamSpec};
+pub use trainer::{TrainConfig, Trainer};

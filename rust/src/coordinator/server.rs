@@ -1,0 +1,293 @@
+//! Batched detection server — the deployment-side coordinator.
+//!
+//! Requests (single images) arrive on a bounded queue; the worker
+//! thread groups up to `max_batch` of them within `batch_window`, pads
+//! to the artifact batch size, runs inference, decodes + NMS-filters,
+//! and answers each request through its response channel. This is the
+//! vLLM-router-shaped piece of the stack, sized to this paper: the
+//! contribution lives in the quantized model, so the server is a thin,
+//! correct, measured batching loop.
+//!
+//! PJRT handles are not `Send`, so the worker thread *owns* its
+//! Runtime + executable (created in-thread from the artifact name);
+//! clients only hold channel endpoints.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::consts::{GRID, IMG, NUM_CLS};
+use crate::coordinator::metrics::LatencyStats;
+use crate::detection::{decode_grid, nms, Detection};
+use crate::runtime::{lit_f32, to_f32, Runtime};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum images per forward pass (≤ the artifact batch size).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch.
+    pub batch_window: Duration,
+    pub score_thresh: f32,
+    pub nms_iou: f32,
+    /// Request queue depth (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: crate::consts::TRAIN_BATCH,
+            batch_window: Duration::from_millis(2),
+            score_thresh: 0.4,
+            nms_iou: 0.45,
+            queue_depth: 256,
+        }
+    }
+}
+
+/// An in-flight request (exposed for `serve_loop`'s signature; built
+/// only through [`DetectHandle::detect`]).
+pub struct Request {
+    image: Vec<f32>,
+    resp: SyncSender<Result<Vec<Detection>>>,
+    enqueued: Instant,
+}
+
+/// Handle used by clients to submit detection requests. Cloneable and
+/// thread-safe.
+#[derive(Clone)]
+pub struct DetectHandle {
+    tx: SyncSender<Request>,
+    stats: Arc<Mutex<LatencyStats>>,
+}
+
+impl DetectHandle {
+    /// Detect objects in one `IMG×IMG×3` image (blocks until served).
+    pub fn detect(&self, image: Vec<f32>) -> Result<Vec<Detection>> {
+        anyhow::ensure!(image.len() == IMG * IMG * 3, "bad image size {}", image.len());
+        let (resp, rx) = sync_channel(1);
+        self.tx
+            .send(Request { image, resp, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    pub fn latency_summary(&self) -> String {
+        self.stats.lock().unwrap().summary()
+    }
+
+    pub fn latency(&self) -> LatencyStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+/// The detection server.
+pub struct DetectServer {
+    handle: DetectHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DetectServer {
+    /// Start the worker thread: it opens the artifact directory itself
+    /// (PJRT handles are thread-local by construction here), compiles
+    /// `infer_{arch}_b{bits}_bs{batch}`, and serves until the handle
+    /// side is dropped.
+    pub fn start(
+        arch: &str,
+        bits: u32,
+        params: Vec<f32>,
+        state: Vec<f32>,
+        cfg: ServerConfig,
+    ) -> Result<DetectServer> {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let stats = Arc::new(Mutex::new(LatencyStats::new()));
+        let stats_bg = stats.clone();
+        let artifact = format!("infer_{arch}_b{bits}_bs{}", crate::consts::TRAIN_BATCH);
+        // report startup errors synchronously
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let worker = std::thread::spawn(move || {
+            let rt = match Runtime::open_default() {
+                Ok(rt) => rt,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let exe = match rt.load(&artifact) {
+                Ok(e) => e,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let _ = ready_tx.send(Ok(()));
+            serve_loop(rx, &cfg, stats_bg, |images, batch| {
+                let out = exe.run(&[
+                    lit_f32(&params, &[params.len()])?,
+                    lit_f32(&state, &[state.len()])?,
+                    lit_f32(images, &[batch, IMG, IMG, 3])?,
+                ])?;
+                Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+            });
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server worker died during startup"))??;
+        Ok(DetectServer { handle: DetectHandle { tx, stats }, worker: Some(worker) })
+    }
+
+    pub fn handle(&self) -> DetectHandle {
+        self.handle.clone()
+    }
+
+    /// Stop accepting requests and join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.handle);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The batching loop, generic over the inference function so tests can
+/// inject a mock engine.
+pub fn serve_loop(
+    rx: Receiver<Request>,
+    cfg: &ServerConfig,
+    stats: Arc<Mutex<LatencyStats>>,
+    mut infer: impl FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
+) {
+    let artifact_batch = crate::consts::TRAIN_BATCH.max(cfg.max_batch);
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all handles dropped
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_window;
+        while batch.len() < cfg.max_batch {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let mut images = Vec::with_capacity(artifact_batch * IMG * IMG * 3);
+        for r in &batch {
+            images.extend_from_slice(&r.image);
+        }
+        images.resize(artifact_batch * IMG * IMG * 3, 0.0);
+
+        match infer(&images, artifact_batch) {
+            Ok((cls_prob, reg)) => {
+                for (bi, req) in batch.into_iter().enumerate() {
+                    let cp =
+                        &cls_prob[bi * GRID * GRID * NUM_CLS..(bi + 1) * GRID * GRID * NUM_CLS];
+                    let rg = &reg[bi * GRID * GRID * 4..(bi + 1) * GRID * GRID * 4];
+                    let dets = nms(decode_grid(cp, rg, cfg.score_thresh), cfg.nms_iou);
+                    stats.lock().unwrap().record(req.enqueued.elapsed());
+                    let _ = req.resp.send(Ok(dets));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e}");
+                for req in batch {
+                    let _ = req.resp.send(Err(anyhow!("inference failed: {msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_server(cfg: ServerConfig) -> (DetectHandle, std::thread::JoinHandle<Vec<usize>>) {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let stats = Arc::new(Mutex::new(LatencyStats::new()));
+        let handle = DetectHandle { tx, stats: stats.clone() };
+        let worker = std::thread::spawn(move || {
+            let mut batch_sizes = Vec::new();
+            let counter = std::cell::RefCell::new(&mut batch_sizes);
+            serve_loop(rx, &cfg, stats, |images, batch| {
+                // record the number of *real* images (non-padded): the
+                // mock encodes image identity in pixel 0
+                let real = (0..batch)
+                    .filter(|bi| images[bi * IMG * IMG * 3] != 0.0)
+                    .count();
+                counter.borrow_mut().push(real);
+                // every cell background except cell 0 of class 1, score ~1
+                let mut cls = vec![0.0f32; batch * GRID * GRID * NUM_CLS];
+                for bi in 0..batch {
+                    for cell in 0..GRID * GRID {
+                        cls[(bi * GRID * GRID + cell) * NUM_CLS] = 1.0;
+                    }
+                    cls[bi * GRID * GRID * NUM_CLS] = 0.0;
+                    cls[bi * GRID * GRID * NUM_CLS + 1] = 1.0;
+                }
+                let reg = vec![0.0f32; batch * GRID * GRID * 4];
+                Ok((cls, reg))
+            });
+            batch_sizes
+        });
+        (handle, worker)
+    }
+
+    #[test]
+    fn serves_and_batches() {
+        let cfg = ServerConfig {
+            batch_window: Duration::from_millis(30),
+            ..Default::default()
+        };
+        let (handle, worker) = mock_server(cfg);
+        let mut clients = Vec::new();
+        for _ in 0..8 {
+            let h = handle.clone();
+            clients.push(std::thread::spawn(move || {
+                let img = vec![1.0f32; IMG * IMG * 3];
+                let dets = h.detect(img).unwrap();
+                assert_eq!(dets.len(), 1);
+                assert_eq!(dets[0].class, 0);
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        assert_eq!(handle.latency().count(), 8);
+        drop(handle);
+        let sizes = worker.join().unwrap();
+        let total: usize = sizes.iter().sum();
+        assert_eq!(total, 8);
+        // with an open 30ms window, at least one multi-request batch
+        assert!(sizes.len() < 8, "no batching happened: {sizes:?}");
+    }
+
+    #[test]
+    fn error_propagates_to_all_requests() {
+        let cfg = ServerConfig::default();
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let stats = Arc::new(Mutex::new(LatencyStats::new()));
+        let handle = DetectHandle { tx, stats: stats.clone() };
+        let worker = std::thread::spawn(move || {
+            serve_loop(rx, &cfg, stats, |_, _| anyhow::bail!("engine down"));
+        });
+        let err = handle.detect(vec![0.5; IMG * IMG * 3]).unwrap_err();
+        assert!(err.to_string().contains("engine down"));
+        drop(handle);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_image_size() {
+        let (handle, worker) = mock_server(ServerConfig::default());
+        assert!(handle.detect(vec![0.0; 10]).is_err());
+        drop(handle);
+        worker.join().unwrap();
+    }
+}

@@ -1,0 +1,285 @@
+//! Training coordinator: drives the `train_step_{arch}_{bits}` artifact
+//! over SynthVOC batches, with step-decay learning rate, periodic mAP
+//! evaluation through the matching `infer` artifact, and checkpointing.
+//!
+//! This is the paper's training protocol (§2.2): projected SGD with the
+//! gradient evaluated at the quantized weights (inside the artifact),
+//! Nesterov momentum, BN, and `µ = ¾‖W‖∞` per layer.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use super::init::{init_params, init_state};
+use super::metrics::StepLog;
+use super::params::{Checkpoint, ParamSpec};
+use crate::consts::{GRID, IMG, NUM_CLS, TRAIN_BATCH};
+use crate::data::{encode_targets, generate_scene, Scene, SceneConfig};
+use crate::detection::{decode_grid, mean_ap, nms, ApMode, Detection, GroundTruth};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, Executable, Runtime};
+
+/// Training hyper-parameters (defaults reproduce the Table 1 runs).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub arch: String,
+    pub bits: u32,
+    pub steps: u64,
+    pub lr: f32,
+    pub momentum: f32,
+    pub mu_ratio: f32,
+    pub weight_decay: f32,
+    /// multiply lr by 0.1 at these fractions of total steps
+    pub lr_drops: Vec<f64>,
+    pub seed: u64,
+    pub train_scenes: u64,
+    pub eval_scenes: u64,
+    pub eval_every: u64,
+    pub log_every: u64,
+    /// Apply hflip + brightness augmentation to training scenes.
+    pub augment: bool,
+    pub scene_cfg: SceneConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            arch: "a".into(),
+            bits: 6,
+            steps: 600,
+            lr: 0.05,
+            momentum: 0.9,
+            mu_ratio: 0.75,
+            weight_decay: 1e-5,
+            lr_drops: vec![0.6, 0.85],
+            seed: 17,
+            train_scenes: 2000,
+            eval_scenes: 256,
+            eval_every: 0, // 0 = only at the end
+            log_every: 25,
+            augment: false,
+            scene_cfg: SceneConfig::default(),
+        }
+    }
+}
+
+/// Output of a training run.
+#[derive(Debug)]
+pub struct TrainOutcome {
+    pub checkpoint: Checkpoint,
+    pub history: Vec<StepLog>,
+    pub final_map: f64,
+    pub mean_step_ms: f64,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub spec: ParamSpec,
+    cfg: TrainConfig,
+    step_exe: Arc<Executable>,
+    infer_exe: Arc<Executable>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Self> {
+        let spec = ParamSpec::load_from_dir(&crate::runtime::default_artifacts_dir(), &cfg.arch)?;
+        let step_exe = rt.load(&format!("train_step_{}_b{}", cfg.arch, cfg.bits))?;
+        let infer_exe = rt.load(&format!("infer_{}_b{}_bs{}", cfg.arch, cfg.bits, TRAIN_BATCH))?;
+        Ok(Trainer { rt, spec, cfg, step_exe, infer_exe })
+    }
+
+    fn lr_at(&self, step: u64) -> f32 {
+        let frac = step as f64 / self.cfg.steps.max(1) as f64;
+        let drops = self.cfg.lr_drops.iter().filter(|&&d| frac >= d).count();
+        self.cfg.lr * 0.1f32.powi(drops as i32)
+    }
+
+    fn train_batch(&self, step: u64) -> crate::data::EncodedBatch {
+        let scenes: Vec<Scene> = (0..TRAIN_BATCH as u64)
+            .map(|i| {
+                let idx = (step * TRAIN_BATCH as u64 + i) % self.cfg.train_scenes;
+                let s = generate_scene(self.cfg.seed, idx, &self.cfg.scene_cfg);
+                if self.cfg.augment {
+                    let mut rng = crate::data::Rng::for_item(
+                        self.cfg.seed ^ 0xA06,
+                        step * TRAIN_BATCH as u64 + i,
+                    );
+                    crate::data::augment(&s, &mut rng)
+                } else {
+                    s
+                }
+            })
+            .collect();
+        encode_targets(&scenes)
+    }
+
+    /// Run the full training loop.
+    pub fn train(&self) -> Result<TrainOutcome> {
+        let mut params = init_params(&self.spec, self.cfg.seed);
+        let mut vel = vec![0.0f32; params.len()];
+        let mut state = init_state(&self.spec);
+        let mut history = Vec::new();
+        let mut step_ms_acc = 0.0f64;
+
+        for step in 0..self.cfg.steps {
+            let batch = self.train_batch(step);
+            let lr = self.lr_at(step);
+            let t0 = Instant::now();
+            let out = self.step_exe.run(&[
+                lit_f32(&params, &[params.len()])?,
+                lit_f32(&vel, &[vel.len()])?,
+                lit_f32(&state, &[state.len()])?,
+                lit_f32(&batch.images, &[TRAIN_BATCH, IMG, IMG, 3])?,
+                lit_i32(&batch.cls_t, &[TRAIN_BATCH, GRID, GRID])?,
+                lit_f32(&batch.box_t, &[TRAIN_BATCH, GRID, GRID, 4])?,
+                lit_f32(&batch.pos, &[TRAIN_BATCH, GRID, GRID])?,
+                lit_scalar(lr),
+                lit_scalar(self.cfg.momentum),
+                lit_scalar(self.cfg.mu_ratio),
+                lit_scalar(self.cfg.weight_decay),
+            ])?;
+            let step_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            step_ms_acc += step_ms;
+            ensure!(out.len() == 6, "train_step returned {} outputs", out.len());
+            params = to_f32(&out[0])?;
+            vel = to_f32(&out[1])?;
+            state = to_f32(&out[2])?;
+            let loss = out[3].get_first_element::<f32>()?;
+            let cls_loss = out[4].get_first_element::<f32>()?;
+            let box_loss = out[5].get_first_element::<f32>()?;
+            ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+
+            if self.cfg.log_every > 0 && (step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps)
+            {
+                history.push(StepLog { step, loss, cls_loss, box_loss, lr, step_ms });
+                eprintln!(
+                    "[train {} b{}] step {:>5} loss {loss:.4} (cls {cls_loss:.4} box {box_loss:.4}) lr {lr:.4} {step_ms:.0}ms",
+                    self.cfg.arch, self.cfg.bits, step
+                );
+            }
+            if self.cfg.eval_every > 0 && step > 0 && step % self.cfg.eval_every == 0 {
+                let m = self.evaluate(&params, &state)?;
+                eprintln!("[eval  {} b{}] step {:>5} mAP {:.4}", self.cfg.arch, self.cfg.bits, step, m);
+            }
+        }
+
+        let final_map = self.evaluate(&params, &state)?;
+        let checkpoint = Checkpoint {
+            arch: self.cfg.arch.clone(),
+            bits: self.cfg.bits,
+            step: self.cfg.steps,
+            params,
+            state,
+        };
+        Ok(TrainOutcome {
+            checkpoint,
+            history,
+            final_map,
+            mean_step_ms: step_ms_acc / self.cfg.steps.max(1) as f64,
+        })
+    }
+
+    /// VOC-11-point mAP over the held-out split (scenes indexed past
+    /// the training range, same generative distribution).
+    pub fn evaluate(&self, params: &[f32], state: &[f32]) -> Result<f64> {
+        evaluate_with_artifact(
+            self.rt,
+            &self.infer_exe,
+            params,
+            state,
+            self.cfg.seed,
+            self.cfg.train_scenes,
+            self.cfg.eval_scenes,
+            &self.cfg.scene_cfg,
+        )
+    }
+}
+
+/// Evaluate mAP using an infer artifact over `eval_scenes` held-out
+/// scenes (batched by the artifact's batch size).
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_with_artifact(
+    _rt: &Runtime,
+    infer_exe: &Executable,
+    params: &[f32],
+    state: &[f32],
+    seed: u64,
+    first_index: u64,
+    eval_scenes: u64,
+    scene_cfg: &SceneConfig,
+) -> Result<f64> {
+    let bs = infer_exe.inputs[2].0[0];
+    let mut dets: Vec<(usize, Detection)> = Vec::new();
+    let mut gts: Vec<(usize, GroundTruth)> = Vec::new();
+    let mut img_id = 0usize;
+    let mut idx = first_index;
+    while (img_id as u64) < eval_scenes {
+        let scenes: Vec<Scene> = (0..bs as u64)
+            .map(|i| generate_scene(seed, first_index + (idx - first_index) + i, scene_cfg))
+            .collect();
+        idx += bs as u64;
+        let mut images = Vec::with_capacity(bs * IMG * IMG * 3);
+        for s in &scenes {
+            images.extend_from_slice(&s.image);
+        }
+        let out = infer_exe.run(&[
+            lit_f32(params, &[params.len()])?,
+            lit_f32(state, &[state.len()])?,
+            lit_f32(&images, &[bs, IMG, IMG, 3])?,
+        ])?;
+        let cls_prob = to_f32(&out[0])?;
+        let reg = to_f32(&out[1])?;
+        for (bi, scene) in scenes.iter().enumerate() {
+            if img_id as u64 >= eval_scenes {
+                break;
+            }
+            let cp = &cls_prob[bi * GRID * GRID * NUM_CLS..(bi + 1) * GRID * GRID * NUM_CLS];
+            let rg = &reg[bi * GRID * GRID * 4..(bi + 1) * GRID * GRID * 4];
+            let raw = decode_grid(cp, rg, 0.05);
+            for d in nms(raw, 0.45) {
+                dets.push((img_id, d));
+            }
+            for &g in &scene.objects {
+                gts.push((img_id, g));
+            }
+            img_id += 1;
+        }
+    }
+    Ok(mean_ap(&dets, &gts, ApMode::Voc11Point))
+}
+
+/// Convenience: save a training outcome (checkpoint + JSONL history).
+pub fn save_outcome(out: &TrainOutcome, ckpt_path: &Path) -> Result<()> {
+    out.checkpoint.save(ckpt_path)?;
+    let hist_path = ckpt_path.with_extension("history.jsonl");
+    let mut lines = String::new();
+    for h in &out.history {
+        lines.push_str(&h.to_json());
+        lines.push('\n');
+    }
+    std::fs::write(hist_path, lines)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_drops() {
+        let rt: Option<Runtime> = None; // schedule is pure; no runtime needed
+        let _ = rt;
+        let cfg = TrainConfig { steps: 100, lr: 1.0, lr_drops: vec![0.5, 0.9], ..Default::default() };
+        // Build a Trainer-free probe of the schedule logic by copying it:
+        let lr_at = |step: u64| {
+            let frac = step as f64 / cfg.steps as f64;
+            let drops = cfg.lr_drops.iter().filter(|&&d| frac >= d).count();
+            cfg.lr * 0.1f32.powi(drops as i32)
+        };
+        assert_eq!(lr_at(0), 1.0);
+        assert_eq!(lr_at(49), 1.0);
+        assert!((lr_at(50) - 0.1).abs() < 1e-6);
+        assert!((lr_at(95) - 0.01).abs() < 1e-6);
+    }
+}

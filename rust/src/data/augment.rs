@@ -1,0 +1,125 @@
+//! Training-time augmentation: horizontal flip + brightness jitter,
+//! with exact box transformation. Deterministic per (seed, step) like
+//! everything else in the data path.
+
+use super::generator::Scene;
+use super::Rng;
+use crate::consts::IMG;
+use crate::detection::boxes::BBox;
+
+/// Horizontally mirror a scene (image columns + boxes).
+pub fn hflip(scene: &Scene) -> Scene {
+    let mut image = vec![0.0f32; scene.image.len()];
+    for y in 0..IMG {
+        for x in 0..IMG {
+            let src = (y * IMG + x) * 3;
+            let dst = (y * IMG + (IMG - 1 - x)) * 3;
+            image[dst..dst + 3].copy_from_slice(&scene.image[src..src + 3]);
+        }
+    }
+    let objects = scene
+        .objects
+        .iter()
+        .map(|o| {
+            let mut o = *o;
+            o.bbox = BBox::new(
+                IMG as f32 - o.bbox.x2,
+                o.bbox.y1,
+                IMG as f32 - o.bbox.x1,
+                o.bbox.y2,
+            );
+            o
+        })
+        .collect();
+    Scene { image, objects }
+}
+
+/// Additive brightness jitter (uniform per image, clamps nothing: the
+/// model sees zero-centered floats).
+pub fn brightness(scene: &Scene, delta: f32) -> Scene {
+    let mut s = scene.clone();
+    for x in s.image.iter_mut() {
+        *x += delta;
+    }
+    s
+}
+
+/// Apply the standard augmentation pipeline for one training sample:
+/// 50% horizontal flip + brightness jitter in ±0.1.
+pub fn augment(scene: &Scene, rng: &mut Rng) -> Scene {
+    let mut s = if rng.uniform() < 0.5 { hflip(scene) } else { scene.clone() };
+    let delta = rng.range(-0.1, 0.1);
+    for x in s.image.iter_mut() {
+        *x += delta;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate_scene, SceneConfig};
+
+    #[test]
+    fn double_flip_is_identity() {
+        let s = generate_scene(1, 0, &SceneConfig::default());
+        let ff = hflip(&hflip(&s));
+        assert_eq!(ff.image, s.image);
+        for (a, b) in ff.objects.iter().zip(&s.objects) {
+            // IMG - (IMG - x) re-associates: f32-epsilon tolerance
+            assert!((a.bbox.x1 - b.bbox.x1).abs() < 1e-4);
+            assert!((a.bbox.x2 - b.bbox.x2).abs() < 1e-4);
+            assert_eq!(a.bbox.y1, b.bbox.y1);
+            assert_eq!(a.bbox.y2, b.bbox.y2);
+            assert_eq!(a.class, b.class);
+        }
+    }
+
+    #[test]
+    fn flip_preserves_box_geometry() {
+        let s = generate_scene(2, 1, &SceneConfig::default());
+        let f = hflip(&s);
+        for (a, b) in s.objects.iter().zip(&f.objects) {
+            // area and vertical extent unchanged
+            assert!((a.bbox.area() - b.bbox.area()).abs() < 1e-4);
+            assert_eq!(a.bbox.y1, b.bbox.y1);
+            assert_eq!(a.bbox.y2, b.bbox.y2);
+            // horizontally mirrored center
+            let (ca, _) = a.bbox.center();
+            let (cb, _) = b.bbox.center();
+            assert!((ca + cb - IMG as f32).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn flip_moves_pixels_with_boxes() {
+        // pixel at a GT center must appear at the mirrored column
+        let cfg = SceneConfig { noise: 0.0, ..Default::default() };
+        let s = generate_scene(3, 2, &cfg);
+        let f = hflip(&s);
+        let o = &s.objects[0];
+        let (cx, cy) = o.bbox.center();
+        let (x, y) = (cx as usize, cy as usize);
+        let src = (y * IMG + x) * 3;
+        let dst = (y * IMG + (IMG - 1 - x)) * 3;
+        assert_eq!(&s.image[src..src + 3], &f.image[dst..dst + 3]);
+    }
+
+    #[test]
+    fn brightness_shifts_uniformly() {
+        let s = generate_scene(4, 3, &SceneConfig::default());
+        let b = brightness(&s, 0.25);
+        for (a, c) in s.image.iter().zip(&b.image) {
+            assert!((c - a - 0.25).abs() < 1e-6);
+        }
+        assert_eq!(s.objects.len(), b.objects.len());
+    }
+
+    #[test]
+    fn augment_deterministic_per_rng() {
+        let s = generate_scene(5, 4, &SceneConfig::default());
+        let a1 = augment(&s, &mut Rng::new(9));
+        let a2 = augment(&s, &mut Rng::new(9));
+        assert_eq!(a1.image, a2.image);
+    }
+}

@@ -1,0 +1,149 @@
+//! Grid target encoding — the contract between SynthVOC scenes and the
+//! L2 loss (`python/compile/model.py::detection_loss`), inverse of
+//! `detection::boxes::decode_grid`.
+//!
+//! The object's center cell `(gy, gx)` becomes positive with
+//! `cls_t = class + 1` (0 = background) and regression targets
+//! `ty = (cy − (gy+0.5)·CELL)/CELL`, `tx` likewise,
+//! `th = ln(h/ANCHOR)`, `tw = ln(w/ANCHOR)`. When two objects land in
+//! the same cell the larger one wins.
+
+use super::generator::Scene;
+use crate::consts::{ANCHOR, CELL, GRID, IMG};
+
+/// A training batch in exactly the flat layouts the `train_step_*`
+/// artifacts expect.
+#[derive(Debug, Clone)]
+pub struct EncodedBatch {
+    /// `[B, IMG, IMG, 3]`
+    pub images: Vec<f32>,
+    /// `[B, GRID, GRID]` int32: 0 background, 1..=4 object class
+    pub cls_t: Vec<i32>,
+    /// `[B, GRID, GRID, 4]` `(ty, tx, th, tw)`
+    pub box_t: Vec<f32>,
+    /// `[B, GRID, GRID]` positive-cell mask
+    pub pos: Vec<f32>,
+    pub batch: usize,
+}
+
+/// Encode one scene into per-cell targets. Returns
+/// `(cls_t [GRID*GRID], box_t [GRID*GRID*4], pos [GRID*GRID])`.
+pub fn encode_scene(scene: &Scene) -> (Vec<i32>, Vec<f32>, Vec<f32>) {
+    let mut cls_t = vec![0i32; GRID * GRID];
+    let mut box_t = vec![0f32; GRID * GRID * 4];
+    let mut pos = vec![0f32; GRID * GRID];
+    let mut occupied_area = vec![0f32; GRID * GRID];
+    for o in &scene.objects {
+        let (cx, cy) = o.bbox.center();
+        let w = o.bbox.x2 - o.bbox.x1;
+        let h = o.bbox.y2 - o.bbox.y1;
+        let gx = ((cx / CELL) as usize).min(GRID - 1);
+        let gy = ((cy / CELL) as usize).min(GRID - 1);
+        let cell = gy * GRID + gx;
+        let area = o.bbox.area();
+        if pos[cell] > 0.0 && occupied_area[cell] >= area {
+            continue; // larger object already owns this cell
+        }
+        occupied_area[cell] = area;
+        pos[cell] = 1.0;
+        cls_t[cell] = o.class as i32 + 1;
+        let ty = (cy - (gy as f32 + 0.5) * CELL) / CELL;
+        let tx = (cx - (gx as f32 + 0.5) * CELL) / CELL;
+        box_t[cell * 4] = ty;
+        box_t[cell * 4 + 1] = tx;
+        box_t[cell * 4 + 2] = (h / ANCHOR).ln();
+        box_t[cell * 4 + 3] = (w / ANCHOR).ln();
+    }
+    (cls_t, box_t, pos)
+}
+
+/// Encode a batch of scenes into contiguous flat buffers.
+pub fn encode_targets(scenes: &[Scene]) -> EncodedBatch {
+    let b = scenes.len();
+    let mut out = EncodedBatch {
+        images: Vec::with_capacity(b * IMG * IMG * 3),
+        cls_t: Vec::with_capacity(b * GRID * GRID),
+        box_t: Vec::with_capacity(b * GRID * GRID * 4),
+        pos: Vec::with_capacity(b * GRID * GRID),
+        batch: b,
+    };
+    for s in scenes {
+        assert_eq!(s.image.len(), IMG * IMG * 3);
+        out.images.extend_from_slice(&s.image);
+        let (c, bt, p) = encode_scene(s);
+        out.cls_t.extend_from_slice(&c);
+        out.box_t.extend_from_slice(&bt);
+        out.pos.extend_from_slice(&p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate_scene, SceneConfig};
+    use crate::detection::boxes::{decode_grid, BBox, GroundTruth};
+
+    fn scene_with(objects: Vec<GroundTruth>) -> Scene {
+        Scene { image: vec![0.0; IMG * IMG * 3], objects }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let gt = GroundTruth { bbox: BBox::from_center(20.0, 36.0, 24.0, 12.0), class: 2 };
+        let (cls_t, box_t, pos) = encode_scene(&scene_with(vec![gt]));
+        assert_eq!(pos.iter().sum::<f32>(), 1.0);
+        // build a fake perfect prediction from the targets and decode
+        let mut cls_prob = vec![0.0f32; GRID * GRID * crate::consts::NUM_CLS];
+        for (i, &c) in cls_t.iter().enumerate() {
+            cls_prob[i * crate::consts::NUM_CLS + c as usize] = 1.0;
+        }
+        let dets = decode_grid(&cls_prob, &box_t, 0.5);
+        assert_eq!(dets.len(), 1);
+        assert_eq!(dets[0].class, 2);
+        assert!(dets[0].bbox.iou(&gt.bbox) > 0.99, "iou {}", dets[0].bbox.iou(&gt.bbox));
+    }
+
+    #[test]
+    fn larger_object_wins_cell() {
+        let small = GroundTruth { bbox: BBox::from_center(20.0, 20.0, 10.0, 10.0), class: 0 };
+        let big = GroundTruth { bbox: BBox::from_center(21.0, 21.0, 20.0, 20.0), class: 1 };
+        for order in [vec![small, big], vec![big, small]] {
+            let (cls_t, _, pos) = encode_scene(&scene_with(order));
+            assert_eq!(pos.iter().sum::<f32>(), 1.0);
+            let cell = cls_t.iter().position(|&c| c != 0).unwrap();
+            assert_eq!(cls_t[cell], 2, "big object (class 1) must own the cell");
+        }
+    }
+
+    #[test]
+    fn batch_layout_sizes() {
+        let cfg = SceneConfig::default();
+        let scenes: Vec<Scene> = (0..3).map(|i| generate_scene(7, i, &cfg)).collect();
+        let b = encode_targets(&scenes);
+        assert_eq!(b.images.len(), 3 * IMG * IMG * 3);
+        assert_eq!(b.cls_t.len(), 3 * GRID * GRID);
+        assert_eq!(b.box_t.len(), 3 * GRID * GRID * 4);
+        assert_eq!(b.pos.len(), 3 * GRID * GRID);
+        // positives match objects (minus same-cell collisions)
+        let npos: f32 = b.pos.iter().sum();
+        let nobj: usize = scenes.iter().map(|s| s.objects.len()).sum();
+        assert!(npos as usize <= nobj && npos > 0.0);
+    }
+
+    #[test]
+    fn targets_bounded() {
+        let cfg = SceneConfig::default();
+        for i in 0..30 {
+            let s = generate_scene(9, i, &cfg);
+            let (_, box_t, pos) = encode_scene(&s);
+            for cell in 0..GRID * GRID {
+                if pos[cell] > 0.0 {
+                    let t = &box_t[cell * 4..cell * 4 + 4];
+                    assert!(t[0].abs() <= 0.5 + 1e-5 && t[1].abs() <= 0.5 + 1e-5, "{t:?}");
+                    assert!(t[2].abs() < 1.5 && t[3].abs() < 1.5, "{t:?}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Scene composer: background + noise + 1–4 non-crowded shapes, with
+//! exact ground-truth boxes. Pure function of `(seed, index)`.
+
+use super::shapes::{draw, ShapeClass};
+use super::Rng;
+use crate::consts::IMG;
+use crate::detection::boxes::{BBox, GroundTruth};
+
+/// One generated scene: the image (HWC, `IMG×IMG×3`, values roughly
+/// zero-centered) and its ground-truth objects.
+#[derive(Debug, Clone)]
+pub struct Scene {
+    pub image: Vec<f32>,
+    pub objects: Vec<GroundTruth>,
+}
+
+/// Generation knobs.
+#[derive(Debug, Clone)]
+pub struct SceneConfig {
+    pub min_objects: usize,
+    pub max_objects: usize,
+    pub min_size: f32,
+    pub max_size: f32,
+    /// Maximum pairwise IoU between placed objects.
+    pub max_overlap: f32,
+    /// Std-dev of the additive Gaussian pixel noise.
+    pub noise: f32,
+}
+
+impl Default for SceneConfig {
+    fn default() -> Self {
+        SceneConfig {
+            min_objects: 1,
+            max_objects: 4,
+            min_size: 10.0,
+            max_size: 28.0,
+            max_overlap: 0.2,
+            noise: 0.02,
+        }
+    }
+}
+
+/// Generate scene `index` of the dataset identified by `seed`.
+pub fn generate_scene(seed: u64, index: u64, cfg: &SceneConfig) -> Scene {
+    let mut rng = Rng::for_item(seed, index);
+    // muted background color
+    let bg = [rng.range(0.0, 0.35), rng.range(0.0, 0.35), rng.range(0.0, 0.35)];
+    let mut image = Vec::with_capacity(IMG * IMG * 3);
+    for _ in 0..IMG * IMG {
+        image.extend_from_slice(&bg);
+    }
+
+    let n_obj = cfg.min_objects + rng.below(cfg.max_objects - cfg.min_objects + 1);
+    let mut objects: Vec<GroundTruth> = Vec::with_capacity(n_obj);
+    let mut attempts = 0;
+    while objects.len() < n_obj && attempts < 60 {
+        attempts += 1;
+        let w = rng.range(cfg.min_size, cfg.max_size);
+        let h = rng.range(cfg.min_size, cfg.max_size);
+        let cx = rng.range(w / 2.0 + 1.0, IMG as f32 - w / 2.0 - 1.0);
+        let cy = rng.range(h / 2.0 + 1.0, IMG as f32 - h / 2.0 - 1.0);
+        let bbox = BBox::from_center(cx, cy, w, h);
+        if objects.iter().any(|o| o.bbox.iou(&bbox) > cfg.max_overlap) {
+            continue;
+        }
+        let class = rng.below(4);
+        // bright, saturated object color well separated from background
+        let mut color = [rng.range(0.45, 1.0), rng.range(0.45, 1.0), rng.range(0.45, 1.0)];
+        color[rng.below(3)] = rng.range(0.0, 0.25); // force saturation
+        draw(
+            &mut image,
+            ShapeClass::from_index(class),
+            cx,
+            cy,
+            w,
+            h,
+            color,
+        );
+        objects.push(GroundTruth { bbox, class });
+    }
+
+    // additive noise + zero-centering
+    for x in image.iter_mut() {
+        *x += cfg.noise * rng.normal() - 0.3;
+    }
+    Scene { image, objects }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let cfg = SceneConfig::default();
+        let a = generate_scene(5, 9, &cfg);
+        let b = generate_scene(5, 9, &cfg);
+        assert_eq!(a.image, b.image);
+        assert_eq!(a.objects.len(), b.objects.len());
+        let c = generate_scene(5, 10, &cfg);
+        assert_ne!(a.image, c.image);
+    }
+
+    #[test]
+    fn object_count_in_range() {
+        let cfg = SceneConfig::default();
+        for i in 0..50 {
+            let s = generate_scene(1, i, &cfg);
+            assert!(
+                (cfg.min_objects..=cfg.max_objects).contains(&s.objects.len()),
+                "scene {i}: {}",
+                s.objects.len()
+            );
+        }
+    }
+
+    #[test]
+    fn objects_respect_overlap_limit() {
+        let cfg = SceneConfig::default();
+        for i in 0..50 {
+            let s = generate_scene(2, i, &cfg);
+            for a in 0..s.objects.len() {
+                for b in a + 1..s.objects.len() {
+                    assert!(s.objects[a].bbox.iou(&s.objects[b].bbox) <= cfg.max_overlap);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boxes_inside_image() {
+        let cfg = SceneConfig::default();
+        for i in 0..50 {
+            let s = generate_scene(3, i, &cfg);
+            for o in &s.objects {
+                assert!(o.bbox.x1 >= 0.0 && o.bbox.y1 >= 0.0);
+                assert!(o.bbox.x2 <= IMG as f32 && o.bbox.y2 <= IMG as f32);
+                assert!(o.class < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn object_pixels_differ_from_background() {
+        // the drawn object must actually be visible: compare the pixel
+        // at an object center against the image corner
+        let cfg = SceneConfig { noise: 0.0, ..Default::default() };
+        let mut seen = 0;
+        for i in 0..20 {
+            let s = generate_scene(4, i, &cfg);
+            let o = &s.objects[0];
+            let (cx, cy) = o.bbox.center();
+            let base = ((cy as usize).min(IMG - 1) * IMG + (cx as usize).min(IMG - 1)) * 3;
+            let center = &s.image[base..base + 3];
+            let corner = &s.image[0..3];
+            let d: f32 = center.iter().zip(corner).map(|(a, b)| (a - b).abs()).sum();
+            if d > 0.15 {
+                seen += 1;
+            }
+        }
+        assert!(seen >= 15, "visible objects in only {seen}/20 scenes");
+    }
+}

@@ -1,0 +1,169 @@
+//! Shape rasterizer: the four SynthVOC object classes drawn with
+//! anti-aliased coverage into an RGB buffer.
+
+use crate::consts::IMG;
+
+/// The four object classes (class index = discriminant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShapeClass {
+    Circle = 0,
+    Square = 1,
+    Triangle = 2,
+    Cross = 3,
+}
+
+impl ShapeClass {
+    pub const ALL: [ShapeClass; 4] =
+        [ShapeClass::Circle, ShapeClass::Square, ShapeClass::Triangle, ShapeClass::Cross];
+
+    pub fn from_index(i: usize) -> Self {
+        Self::ALL[i]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShapeClass::Circle => "circle",
+            ShapeClass::Square => "square",
+            ShapeClass::Triangle => "triangle",
+            ShapeClass::Cross => "cross",
+        }
+    }
+}
+
+/// Signed "inside" coverage of pixel center `(px, py)` for a shape of
+/// class `class` centered at `(cx, cy)` with bounding size `w × h`
+/// (all in pixels). Returns 0..1 coverage with a soft 1px edge.
+pub fn coverage(class: ShapeClass, px: f32, py: f32, cx: f32, cy: f32, w: f32, h: f32) -> f32 {
+    let dx = px - cx;
+    let dy = py - cy;
+    // signed distance to the boundary, negative inside
+    let sd = match class {
+        ShapeClass::Circle => {
+            let r = w.min(h) / 2.0;
+            ((dx / (w / 2.0)).powi(2) + (dy / (h / 2.0)).powi(2)).sqrt() * r - r
+        }
+        ShapeClass::Square => {
+            let qx = dx.abs() - w / 2.0;
+            let qy = dy.abs() - h / 2.0;
+            qx.max(qy)
+        }
+        ShapeClass::Triangle => {
+            // upward isoceles triangle inscribed in the w x h box:
+            // apex (cx, cy - h/2), base y = cy + h/2
+            let top = -h / 2.0;
+            let bot = h / 2.0;
+            // edge from apex to bottom-right corner (w/2, bot)
+            let ex = w / 2.0;
+            let ey = bot - top;
+            // left-right symmetric: use |dx|
+            let ax = dx.abs();
+            let ay = dy - top;
+            // line through (0,0) and (ex, ey): signed side (positive = outside)
+            let cross = ax * ey - ay * ex;
+            let norm = (ex * ex + ey * ey).sqrt();
+            let d_edge = cross / norm;
+            let d_base = dy - bot;
+            d_edge.max(d_base)
+        }
+        ShapeClass::Cross => {
+            // plus sign: union of horizontal and vertical bars, bar
+            // thickness w/3 (h/3)
+            let bar_w = w / 3.0;
+            let bar_h = h / 3.0;
+            let horiz = (dx.abs() - w / 2.0).max(dy.abs() - bar_h / 2.0);
+            let vert = (dx.abs() - bar_w / 2.0).max(dy.abs() - h / 2.0);
+            horiz.min(vert)
+        }
+    };
+    (0.5 - sd).clamp(0.0, 1.0)
+}
+
+/// Alpha-blend a shape into an `IMG×IMG` RGB (HWC) buffer.
+pub fn draw(
+    img: &mut [f32],
+    class: ShapeClass,
+    cx: f32,
+    cy: f32,
+    w: f32,
+    h: f32,
+    color: [f32; 3],
+) {
+    debug_assert_eq!(img.len(), IMG * IMG * 3);
+    let x0 = ((cx - w / 2.0 - 1.0).floor().max(0.0)) as usize;
+    let x1 = ((cx + w / 2.0 + 1.0).ceil().min(IMG as f32)) as usize;
+    let y0 = ((cy - h / 2.0 - 1.0).floor().max(0.0)) as usize;
+    let y1 = ((cy + h / 2.0 + 1.0).ceil().min(IMG as f32)) as usize;
+    for y in y0..y1 {
+        for x in x0..x1 {
+            let a = coverage(class, x as f32 + 0.5, y as f32 + 0.5, cx, cy, w, h);
+            if a > 0.0 {
+                let base = (y * IMG + x) * 3;
+                for c in 0..3 {
+                    img[base + c] = img[base + c] * (1.0 - a) + color[c] * a;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circle_coverage_center_and_outside() {
+        assert_eq!(coverage(ShapeClass::Circle, 32.0, 32.0, 32.0, 32.0, 20.0, 20.0), 1.0);
+        assert_eq!(coverage(ShapeClass::Circle, 50.0, 32.0, 32.0, 32.0, 20.0, 20.0), 0.0);
+    }
+
+    #[test]
+    fn square_fills_its_box() {
+        // all pixel centers strictly inside are fully covered
+        let mut inside = 0;
+        for y in 0..IMG {
+            for x in 0..IMG {
+                let a = coverage(
+                    ShapeClass::Square,
+                    x as f32 + 0.5,
+                    y as f32 + 0.5,
+                    32.0,
+                    32.0,
+                    16.0,
+                    16.0,
+                );
+                if a == 1.0 {
+                    inside += 1;
+                }
+            }
+        }
+        // ~15x15 fully-covered centers for a 16x16 box with soft edge
+        assert!((200..=256).contains(&inside), "{inside}");
+    }
+
+    #[test]
+    fn triangle_apex_up() {
+        // just below the apex is inside; same height far left is outside
+        assert!(coverage(ShapeClass::Triangle, 32.0, 27.0, 32.0, 32.0, 20.0, 20.0) > 0.5);
+        assert_eq!(coverage(ShapeClass::Triangle, 24.0, 27.0, 32.0, 32.0, 20.0, 20.0), 0.0);
+        // base corners are inside
+        assert!(coverage(ShapeClass::Triangle, 25.0, 41.0, 32.0, 32.0, 20.0, 20.0) > 0.0);
+    }
+
+    #[test]
+    fn cross_has_hole_in_corner() {
+        // the corner of the bounding box is NOT part of a plus sign
+        assert_eq!(coverage(ShapeClass::Cross, 24.0, 24.0, 32.0, 32.0, 18.0, 18.0), 0.0);
+        // but the center and bar ends are
+        assert_eq!(coverage(ShapeClass::Cross, 32.0, 32.0, 32.0, 32.0, 18.0, 18.0), 1.0);
+        assert!(coverage(ShapeClass::Cross, 40.0, 32.0, 32.0, 32.0, 18.0, 18.0) > 0.5);
+    }
+
+    #[test]
+    fn draw_blends_color() {
+        let mut img = vec![0.0f32; IMG * IMG * 3];
+        draw(&mut img, ShapeClass::Square, 32.0, 32.0, 10.0, 10.0, [1.0, 0.5, 0.25]);
+        let base = (32 * IMG + 32) * 3;
+        assert_eq!(&img[base..base + 3], &[1.0, 0.5, 0.25]);
+        assert_eq!(img[0], 0.0); // corner untouched
+    }
+}

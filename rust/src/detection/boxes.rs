@@ -1,0 +1,165 @@
+//! Bounding boxes, IoU, and decoding of the R-FCN-lite grid head
+//! outputs into detections (mirrors the target encoding in
+//! `crate::data::encode`).
+
+use crate::consts::{ANCHOR, CELL, GRID, NUM_CLS};
+
+/// Axis-aligned box in pixel coordinates, `(x1, y1)` top-left
+/// inclusive, `(x2, y2)` bottom-right exclusive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BBox {
+    pub x1: f32,
+    pub y1: f32,
+    pub x2: f32,
+    pub y2: f32,
+}
+
+impl BBox {
+    pub fn new(x1: f32, y1: f32, x2: f32, y2: f32) -> Self {
+        BBox { x1, y1, x2, y2 }
+    }
+
+    pub fn from_center(cx: f32, cy: f32, w: f32, h: f32) -> Self {
+        BBox { x1: cx - w / 2.0, y1: cy - h / 2.0, x2: cx + w / 2.0, y2: cy + h / 2.0 }
+    }
+
+    pub fn area(&self) -> f32 {
+        (self.x2 - self.x1).max(0.0) * (self.y2 - self.y1).max(0.0)
+    }
+
+    pub fn center(&self) -> (f32, f32) {
+        ((self.x1 + self.x2) / 2.0, (self.y1 + self.y2) / 2.0)
+    }
+
+    pub fn iou(&self, other: &BBox) -> f32 {
+        let ix1 = self.x1.max(other.x1);
+        let iy1 = self.y1.max(other.y1);
+        let ix2 = self.x2.min(other.x2);
+        let iy2 = self.y2.min(other.y2);
+        let inter = (ix2 - ix1).max(0.0) * (iy2 - iy1).max(0.0);
+        let union = self.area() + other.area() - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+}
+
+/// A scored class detection.
+#[derive(Debug, Clone, Copy)]
+pub struct Detection {
+    pub bbox: BBox,
+    /// Object class in `[0, NUM_CLASSES)` (background already removed).
+    pub class: usize,
+    pub score: f32,
+}
+
+/// A ground-truth object.
+#[derive(Debug, Clone, Copy)]
+pub struct GroundTruth {
+    pub bbox: BBox,
+    pub class: usize,
+}
+
+/// Decode one image's grid outputs into raw detections (pre-NMS).
+///
+/// `cls_prob`: `[GRID, GRID, NUM_CLS]` softmax probabilities
+/// (background at channel 0); `reg`: `[GRID, GRID, 4]` encoded
+/// `(ty, tx, th, tw)`. Inverse of `data::encode`:
+///
+/// ```text
+/// cy = (y + 0.5) CELL + ty·CELL     h = ANCHOR · e^{th}
+/// cx = (x + 0.5) CELL + tx·CELL     w = ANCHOR · e^{tw}
+/// ```
+pub fn decode_grid(cls_prob: &[f32], reg: &[f32], score_thresh: f32) -> Vec<Detection> {
+    assert_eq!(cls_prob.len(), GRID * GRID * NUM_CLS);
+    assert_eq!(reg.len(), GRID * GRID * 4);
+    let mut out = Vec::new();
+    for y in 0..GRID {
+        for x in 0..GRID {
+            let pbase = (y * GRID + x) * NUM_CLS;
+            let rbase = (y * GRID + x) * 4;
+            // best foreground class in this cell
+            let (mut best_c, mut best_p) = (0usize, 0.0f32);
+            for c in 1..NUM_CLS {
+                let p = cls_prob[pbase + c];
+                if p > best_p {
+                    best_p = p;
+                    best_c = c;
+                }
+            }
+            if best_c == 0 || best_p < score_thresh {
+                continue;
+            }
+            let (ty, tx) = (reg[rbase], reg[rbase + 1]);
+            let (th, tw) = (reg[rbase + 2], reg[rbase + 3]);
+            let cy = (y as f32 + 0.5) * CELL + ty * CELL;
+            let cx = (x as f32 + 0.5) * CELL + tx * CELL;
+            // clamp exp args: early training can emit wild values
+            let h = ANCHOR * th.clamp(-4.0, 4.0).exp();
+            let w = ANCHOR * tw.clamp(-4.0, 4.0).exp();
+            out.push(Detection {
+                bbox: BBox::from_center(cx, cy, w, h),
+                class: best_c - 1,
+                score: best_p,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identity_and_disjoint() {
+        let a = BBox::new(0.0, 0.0, 10.0, 10.0);
+        assert!((a.iou(&a) - 1.0).abs() < 1e-6);
+        let b = BBox::new(20.0, 20.0, 30.0, 30.0);
+        assert_eq!(a.iou(&b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        let a = BBox::new(0.0, 0.0, 10.0, 10.0);
+        let b = BBox::new(5.0, 0.0, 15.0, 10.0);
+        // inter 50, union 150
+        assert!((a.iou(&b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decode_roundtrips_encoding() {
+        // object centered at (cx, cy) = (20, 36), 24x12 px
+        let (cy, cx, h, w) = (36.0f32, 20.0f32, 12.0f32, 24.0f32);
+        let (gy, gx) = ((cy / CELL) as usize, (cx / CELL) as usize);
+        let ty = (cy - (gy as f32 + 0.5) * CELL) / CELL;
+        let tx = (cx - (gx as f32 + 0.5) * CELL) / CELL;
+        let th = (h / ANCHOR).ln();
+        let tw = (w / ANCHOR).ln();
+        let mut cls = vec![0.0f32; GRID * GRID * NUM_CLS];
+        let mut reg = vec![0.0f32; GRID * GRID * 4];
+        cls[(gy * GRID + gx) * NUM_CLS + 3] = 0.9; // class 2
+        let rb = (gy * GRID + gx) * 4;
+        reg[rb..rb + 4].copy_from_slice(&[ty, tx, th, tw]);
+        let dets = decode_grid(&cls, &reg, 0.5);
+        assert_eq!(dets.len(), 1);
+        let d = &dets[0];
+        assert_eq!(d.class, 2);
+        let (dcx, dcy) = d.bbox.center();
+        assert!((dcx - cx).abs() < 1e-4 && (dcy - cy).abs() < 1e-4);
+        assert!((d.bbox.x2 - d.bbox.x1 - w).abs() < 1e-4);
+        assert!((d.bbox.y2 - d.bbox.y1 - h).abs() < 1e-4);
+    }
+
+    #[test]
+    fn decode_respects_threshold_and_background() {
+        let mut cls = vec![0.0f32; GRID * GRID * NUM_CLS];
+        let reg = vec![0.0f32; GRID * GRID * 4];
+        cls[0] = 0.99; // background-dominant cell
+        cls[NUM_CLS + 1] = 0.3; // low-score object
+        assert!(decode_grid(&cls, &reg, 0.5).is_empty());
+        assert_eq!(decode_grid(&cls, &reg, 0.2).len(), 1);
+    }
+}

@@ -1,0 +1,196 @@
+//! VOC-protocol mean Average Precision — the metric of Table 1.
+//!
+//! Detections across the test set are pooled per class, sorted by
+//! score, greedily matched to unmatched ground truth at IoU ≥ 0.5, and
+//! AP is computed either with VOC2007 11-point interpolation (the
+//! protocol the paper's numbers use) or the all-point area under the
+//! interpolated PR curve.
+
+use super::boxes::{Detection, GroundTruth};
+use crate::consts::NUM_CLASSES;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApMode {
+    /// VOC2007: mean of max-precision at recall ∈ {0.0, 0.1, …, 1.0}.
+    Voc11Point,
+    /// Area under the interpolated precision-recall curve.
+    AllPoint,
+}
+
+/// AP for one class. `dets` are `(image_id, Detection)` across the
+/// whole test set; `gts` likewise. IoU match threshold 0.5 (VOC).
+pub fn average_precision(
+    dets: &[(usize, Detection)],
+    gts: &[(usize, GroundTruth)],
+    class: usize,
+    mode: ApMode,
+) -> f64 {
+    let npos = gts.iter().filter(|(_, g)| g.class == class).count();
+    if npos == 0 {
+        return f64::NAN; // class absent from the test set
+    }
+    let mut class_dets: Vec<&(usize, Detection)> =
+        dets.iter().filter(|(_, d)| d.class == class).collect();
+    class_dets.sort_by(|a, b| b.1.score.partial_cmp(&a.1.score).unwrap());
+
+    // per (image, gt-index) matched flags
+    let mut matched = vec![false; gts.len()];
+    let mut tp = Vec::with_capacity(class_dets.len());
+    for (img, d) in class_dets {
+        let mut best_iou = 0.0f32;
+        let mut best_j = None;
+        for (j, (gimg, g)) in gts.iter().enumerate() {
+            if *gimg != *img || g.class != class {
+                continue;
+            }
+            let iou = d.bbox.iou(&g.bbox);
+            if iou > best_iou {
+                best_iou = iou;
+                best_j = Some(j);
+            }
+        }
+        if best_iou >= 0.5 {
+            let j = best_j.unwrap();
+            if !matched[j] {
+                matched[j] = true;
+                tp.push(true);
+                continue;
+            }
+        }
+        tp.push(false); // duplicate or unmatched -> false positive
+    }
+
+    // precision / recall curves
+    let mut cum_tp = 0usize;
+    let mut precision = Vec::with_capacity(tp.len());
+    let mut recall = Vec::with_capacity(tp.len());
+    for (i, &is_tp) in tp.iter().enumerate() {
+        if is_tp {
+            cum_tp += 1;
+        }
+        precision.push(cum_tp as f64 / (i + 1) as f64);
+        recall.push(cum_tp as f64 / npos as f64);
+    }
+
+    match mode {
+        ApMode::Voc11Point => {
+            let mut ap = 0.0;
+            for k in 0..=10 {
+                let r = k as f64 / 10.0;
+                let p = precision
+                    .iter()
+                    .zip(&recall)
+                    .filter(|(_, &rc)| rc >= r)
+                    .map(|(&p, _)| p)
+                    .fold(0.0f64, f64::max);
+                ap += p / 11.0;
+            }
+            ap
+        }
+        ApMode::AllPoint => {
+            // monotone-decreasing interpolation then rectangle sum
+            let mut interp = precision.clone();
+            for i in (0..interp.len().saturating_sub(1)).rev() {
+                interp[i] = interp[i].max(interp[i + 1]);
+            }
+            let mut ap = 0.0;
+            let mut prev_r = 0.0;
+            for (p, r) in interp.iter().zip(&recall) {
+                ap += p * (r - prev_r);
+                prev_r = *r;
+            }
+            ap
+        }
+    }
+}
+
+/// Mean AP over all classes present in the ground truth.
+pub fn mean_ap(
+    dets: &[(usize, Detection)],
+    gts: &[(usize, GroundTruth)],
+    mode: ApMode,
+) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for c in 0..NUM_CLASSES {
+        let ap = average_precision(dets, gts, c, mode);
+        if !ap.is_nan() {
+            sum += ap;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detection::boxes::BBox;
+
+    fn gt(img: usize, x: f32, c: usize) -> (usize, GroundTruth) {
+        (img, GroundTruth { bbox: BBox::new(x, 0.0, x + 10.0, 10.0), class: c })
+    }
+
+    fn det(img: usize, x: f32, s: f32, c: usize) -> (usize, Detection) {
+        (img, Detection { bbox: BBox::new(x, 0.0, x + 10.0, 10.0), class: c, score: s })
+    }
+
+    #[test]
+    fn perfect_detection_gives_ap_one() {
+        let gts = vec![gt(0, 0.0, 0), gt(1, 20.0, 0)];
+        let dets = vec![det(0, 0.0, 0.9, 0), det(1, 20.0, 0.8, 0)];
+        for mode in [ApMode::Voc11Point, ApMode::AllPoint] {
+            let ap = average_precision(&dets, &gts, 0, mode);
+            assert!((ap - 1.0).abs() < 1e-9, "{mode:?}: {ap}");
+        }
+    }
+
+    #[test]
+    fn missed_object_caps_recall() {
+        let gts = vec![gt(0, 0.0, 0), gt(1, 20.0, 0)];
+        let dets = vec![det(0, 0.0, 0.9, 0)];
+        let ap = average_precision(&dets, &gts, 0, ApMode::AllPoint);
+        assert!((ap - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_detection_is_false_positive() {
+        let gts = vec![gt(0, 0.0, 0)];
+        // duplicate ranks below the TP: recall hits 1.0 at rank 1, AP stays 1
+        let dets = vec![det(0, 0.0, 0.9, 0), det(0, 1.0, 0.8, 0)];
+        let ap = average_precision(&dets, &gts, 0, ApMode::AllPoint);
+        assert!((ap - 1.0).abs() < 1e-9);
+        // a disjoint FP ranked above the TP halves the precision at r=1
+        let dets = vec![det(0, 30.0, 0.9, 0), det(0, 0.0, 0.8, 0)];
+        let ap = average_precision(&dets, &gts, 0, ApMode::AllPoint);
+        assert!((ap - 0.5).abs() < 1e-9, "{ap}");
+    }
+
+    #[test]
+    fn wrong_image_does_not_match() {
+        let gts = vec![gt(0, 0.0, 0)];
+        let dets = vec![det(1, 0.0, 0.9, 0)];
+        let ap = average_precision(&dets, &gts, 0, ApMode::AllPoint);
+        assert_eq!(ap, 0.0);
+    }
+
+    #[test]
+    fn mean_ap_averages_only_present_classes() {
+        let gts = vec![gt(0, 0.0, 0), gt(0, 20.0, 1)];
+        let dets = vec![det(0, 0.0, 0.9, 0)]; // class 1 undetected
+        let m = mean_ap(&dets, &gts, ApMode::AllPoint);
+        assert!((m - 0.5).abs() < 1e-9); // (1.0 + 0.0) / 2
+    }
+
+    #[test]
+    fn eleven_point_ge_zero_le_one() {
+        let gts = vec![gt(0, 0.0, 0), gt(1, 0.0, 0), gt(2, 0.0, 0)];
+        let dets = vec![det(0, 0.0, 0.9, 0), det(1, 50.0, 0.8, 0), det(2, 0.0, 0.7, 0)];
+        let ap = average_precision(&dets, &gts, 0, ApMode::Voc11Point);
+        assert!(ap > 0.0 && ap < 1.0, "{ap}");
+    }
+}

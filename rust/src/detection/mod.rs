@@ -1,0 +1,11 @@
+//! Detection toolkit: boxes/IoU, grid decoding, NMS, and VOC-protocol
+//! mAP — the substrate behind Table 1 and the Fig. 1 qualitative
+//! comparison.
+
+pub mod boxes;
+pub mod map;
+pub mod nms;
+
+pub use boxes::{decode_grid, BBox, Detection, GroundTruth};
+pub use map::{average_precision, mean_ap, ApMode};
+pub use nms::nms;

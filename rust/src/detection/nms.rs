@@ -1,0 +1,86 @@
+//! Greedy per-class non-maximum suppression.
+
+use super::boxes::Detection;
+
+/// Standard greedy NMS: per class, keep the highest-scoring detection
+/// and drop any remaining detection of the same class with
+/// `IoU > iou_thresh` against a kept one. Returns detections sorted by
+/// decreasing score.
+pub fn nms(mut dets: Vec<Detection>, iou_thresh: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Detection> = Vec::with_capacity(dets.len());
+    'outer: for d in dets {
+        for k in &keep {
+            if k.class == d.class && k.bbox.iou(&d.bbox) > iou_thresh {
+                continue 'outer;
+            }
+        }
+        keep.push(d);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detection::boxes::BBox;
+    use crate::util::prop_check;
+
+    fn det(x: f32, y: f32, s: f32, c: usize) -> Detection {
+        Detection { bbox: BBox::new(x, y, x + 10.0, y + 10.0), class: c, score: s }
+    }
+
+    #[test]
+    fn suppresses_overlapping_same_class() {
+        let kept = nms(vec![det(0.0, 0.0, 0.9, 0), det(1.0, 1.0, 0.8, 0)], 0.5);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].score, 0.9);
+    }
+
+    #[test]
+    fn keeps_overlapping_different_class() {
+        let kept = nms(vec![det(0.0, 0.0, 0.9, 0), det(1.0, 1.0, 0.8, 1)], 0.5);
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn keeps_disjoint_same_class() {
+        let kept = nms(vec![det(0.0, 0.0, 0.9, 0), det(30.0, 30.0, 0.8, 0)], 0.5);
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(nms(vec![], 0.5).is_empty());
+    }
+
+    #[test]
+    fn prop_output_sorted_and_no_same_class_overlap() {
+        prop_check(400, "nms invariants", |seed| {
+            let n = (seed % 40) as usize;
+            let thresh = 0.05 + 0.9 * ((seed / 40) % 64) as f32 / 64.0;
+            let mut s = seed | 1;
+            let mut rnd = || {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s >> 11) as f32 / (1u64 << 53) as f32
+            };
+            let dets: Vec<Detection> = (0..n)
+                .map(|_| det(rnd() * 50.0, rnd() * 50.0, rnd(), (rnd() * 3.0) as usize))
+                .collect();
+            let kept = nms(dets.clone(), thresh);
+            assert!(kept.len() <= dets.len());
+            for w in kept.windows(2) {
+                assert!(w[0].score >= w[1].score);
+            }
+            for i in 0..kept.len() {
+                for j in i + 1..kept.len() {
+                    if kept[i].class == kept[j].class {
+                        assert!(kept[i].bbox.iou(&kept[j].bbox) <= thresh);
+                    }
+                }
+            }
+        });
+    }
+}

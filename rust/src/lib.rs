@@ -1,0 +1,58 @@
+//! # LBW-Net
+//!
+//! A rust + JAX + Pallas reproduction of *Quantization and Training of
+//! Low Bit-Width Convolutional Neural Networks for Object Detection*
+//! (Yin, Zhang, Qi, Xin — 2016).
+//!
+//! LBW-Net constrains CNN weights to `2^s × {0, ±2^{1-n}, …, ±1}`
+//! (`n = 2^{b-2}`) by least-squares projection during backpropagation.
+//! This crate is the Layer-3 coordinator of the three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the eq. (3)
+//!   threshold projection and an MXU-tiled matmul, lowered with
+//!   `interpret=True` so the CPU PJRT runtime can execute them.
+//! * **L2** — the JAX detection model (`python/compile/model.py`):
+//!   µResNet backbone + R-FCN-lite position-sensitive head, with the
+//!   paper's projected-SGD training step; AOT-lowered once to HLO text.
+//! * **L3** — this crate: PJRT runtime, training/serving coordinator,
+//!   the SynthVOC data substrate, VOC mAP evaluation, the exact
+//!   Theorem-1 quantizers, baselines, statistics (Tables 2–3, Fig. 2),
+//!   and the shift-add deployment engine behind the paper's ≥4×
+//!   speedup claim.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `repro` binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod detection;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Problem constants shared with `python/compile/model.py`. Changing
+/// either side requires regenerating artifacts; the manifest is
+/// cross-checked at runtime load.
+pub mod consts {
+    /// Input image side in pixels (RGB, NHWC).
+    pub const IMG: usize = 64;
+    /// Detection grid side (total stride 8).
+    pub const GRID: usize = 8;
+    /// Grid cell size in pixels.
+    pub const CELL: f32 = (IMG / GRID) as f32;
+    /// Position-sensitive group grid (R-FCN's k).
+    pub const K: usize = 3;
+    /// SynthVOC object classes: circle, square, triangle, cross.
+    pub const NUM_CLASSES: usize = 4;
+    /// Classes + background (index 0).
+    pub const NUM_CLS: usize = NUM_CLASSES + 1;
+    /// Log-space box regression anchor in pixels.
+    pub const ANCHOR: f32 = 16.0;
+    /// Training batch baked into the train_step artifacts.
+    pub const TRAIN_BATCH: usize = 8;
+    /// Flat size of the standalone quantize artifacts.
+    pub const QUANT_N: usize = 4096;
+}

@@ -1,0 +1,468 @@
+//! `repro` — the LBW-Net command-line launcher.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md
+//! "Experiment index"): `train`/`eval`/`table1` for Table 1, `detect`
+//! for Fig. 1, `stats` for Fig. 2 + Tables 2–3, `quantize` for the §2.1
+//! exactness study, `serve` for the deployment latency measurements,
+//! and `gen-data` to materialize SynthVOC scenes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use lbw_net::config::Config;
+use lbw_net::consts::{IMG, NUM_CLASSES};
+use lbw_net::coordinator::params::{Checkpoint, ParamSpec};
+use lbw_net::coordinator::server::{DetectServer, ServerConfig};
+use lbw_net::coordinator::trainer::{evaluate_with_artifact, save_outcome, Trainer};
+use lbw_net::data::{generate_scene, Scene, SceneConfig, ShapeClass};
+use lbw_net::detection::{decode_grid, nms, Detection};
+use lbw_net::nn::{DetectorModel, EngineKind};
+use lbw_net::quant::{baselines, exact, stats, threshold};
+use lbw_net::runtime::{default_artifacts_dir, Runtime};
+use lbw_net::util::cli::Args;
+use lbw_net::util::json::Json;
+
+const USAGE: &str = "\
+repro — LBW-Net reproduction: low bit-width CNNs for object detection
+
+USAGE: repro <subcommand> [--flag value ...]
+
+  train     --arch a --bits 6 [--steps N --lr F --mu-ratio F --seed N --out ckpt.lbw --config cfg.toml]
+  eval      --ckpt PATH [--scenes N --engine artifact|float|shift]
+  detect    --ckpt PATH [--count N --seed N --engine E --thresh F]     (Fig. 1)
+  table1    [--steps N --bits 4,5,6,32 --archs a,b --seed N]           (Table 1)
+  stats     --ckpt PATH [--layers l1,l2]                               (Fig. 2 + Tables 2-3)
+  quantize  [--ckpt PATH --bits 2,4,5,6 --n N]                         (§2.1 exactness)
+  inq       [--bits 4|5 --steps N --seed N --out ckpt.lbw]              (INQ baseline [25])
+  serve     --ckpt PATH [--requests N --concurrency N]                 (deployment latency)
+  gen-data  [--count N --seed N --out DIR]                             (SynthVOC scenes)
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let cfg = match args.get("config") {
+        Some(p) => Config::load(Path::new(p))?,
+        None => Config::default(),
+    };
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args, &cfg),
+        "eval" => cmd_eval(&args, &cfg),
+        "detect" => cmd_detect(&args),
+        "table1" => cmd_table1(&args, &cfg),
+        "stats" => cmd_stats(&args),
+        "quantize" => cmd_quantize(&args),
+        "inq" => cmd_inq(&args, &cfg),
+        "serve" => cmd_serve(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
+    args.check_known(&["arch", "bits", "steps", "lr", "mu-ratio", "seed", "out", "config"])?;
+    let mut tc = cfg.to_train_config();
+    tc.arch = args.str_or("arch", &tc.arch);
+    tc.bits = args.parse_or("bits", tc.bits)?;
+    tc.steps = args.parse_or("steps", tc.steps)?;
+    tc.lr = args.parse_or("lr", tc.lr)?;
+    tc.mu_ratio = args.parse_or("mu-ratio", tc.mu_ratio)?;
+    tc.seed = args.parse_or("seed", tc.seed)?;
+    let out = PathBuf::from(args.str_or("out", "ckpt.lbw"));
+    let rt = Runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    let trainer = Trainer::new(&rt, tc.clone())?;
+    let outcome = trainer.train()?;
+    println!(
+        "done: {} b{} mAP={:.4} mean_step={:.0}ms",
+        tc.arch, tc.bits, outcome.final_map, outcome.mean_step_ms
+    );
+    save_outcome(&outcome, &out)?;
+    println!("checkpoint -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, cfg: &Config) -> Result<()> {
+    args.check_known(&["ckpt", "scenes", "engine", "config"])?;
+    let ck = Checkpoint::load(Path::new(args.require("ckpt")?))?;
+    let scenes: u64 = args.parse_or("scenes", 256)?;
+    let engine = args.str_or("engine", "artifact");
+    let map = eval_checkpoint(&ck, scenes, &engine, cfg)?;
+    println!("mAP({engine}, {} b{}, {scenes} scenes) = {map:.4}", ck.arch, ck.bits);
+    Ok(())
+}
+
+fn eval_checkpoint(ck: &Checkpoint, scenes: u64, engine: &str, cfg: &Config) -> Result<f64> {
+    let scene_cfg = SceneConfig::default();
+    match engine {
+        "artifact" => {
+            let rt = Runtime::open_default()?;
+            let exe = rt.load(&format!("infer_{}_b{}_bs8", ck.arch, ck.bits))?;
+            evaluate_with_artifact(
+                &rt,
+                &exe,
+                &ck.params,
+                &ck.state,
+                cfg.train.seed,
+                cfg.data.train_scenes,
+                scenes,
+                &scene_cfg,
+            )
+        }
+        "float" | "shift" => {
+            let spec = ParamSpec::load_from_dir(&default_artifacts_dir(), &ck.arch)?;
+            let kind = if engine == "float" {
+                EngineKind::Float
+            } else {
+                EngineKind::Shift { bits: ck.bits.min(6) }
+            };
+            let mut model = DetectorModel::build(&spec, ck, kind)?;
+            let mut dets = Vec::new();
+            let mut gts = Vec::new();
+            for i in 0..scenes {
+                let s = generate_scene(cfg.train.seed, cfg.data.train_scenes + i, &scene_cfg);
+                let (cp, rg) = model.forward(&s.image, 1);
+                for d in nms(decode_grid(&cp, &rg, 0.05), 0.45) {
+                    dets.push((i as usize, d));
+                }
+                for &g in &s.objects {
+                    gts.push((i as usize, g));
+                }
+            }
+            Ok(lbw_net::detection::mean_ap(
+                &dets,
+                &gts,
+                lbw_net::detection::ApMode::Voc11Point,
+            ))
+        }
+        other => Err(anyhow!("unknown engine `{other}` (artifact|float|shift)")),
+    }
+}
+
+fn class_name(c: usize) -> &'static str {
+    ShapeClass::from_index(c).name()
+}
+
+fn print_detections(title: &str, dets: &[Detection], scene: &Scene) {
+    println!("  {title}:");
+    for d in dets {
+        println!(
+            "    {:>9} score={:.3} box=({:>5.1},{:>5.1})..({:>5.1},{:>5.1})",
+            class_name(d.class), d.score, d.bbox.x1, d.bbox.y1, d.bbox.x2, d.bbox.y2
+        );
+    }
+    let matched = scene
+        .objects
+        .iter()
+        .filter(|g| dets.iter().any(|d| d.class == g.class && d.bbox.iou(&g.bbox) >= 0.5))
+        .count();
+    println!("    -> matched {matched}/{} ground-truth objects", scene.objects.len());
+}
+
+fn cmd_detect(args: &Args) -> Result<()> {
+    args.check_known(&["ckpt", "count", "seed", "engine", "thresh", "config"])?;
+    let ck = Checkpoint::load(Path::new(args.require("ckpt")?))?;
+    let count: u64 = args.parse_or("count", 3)?;
+    let seed: u64 = args.parse_or("seed", 9000)?;
+    let engine = args.str_or("engine", "artifact");
+    let thresh: f32 = args.parse_or("thresh", 0.5)?;
+
+    let scene_cfg = SceneConfig::default();
+    let rt;
+    let mut native: Option<DetectorModel> = None;
+    let exe = match engine.as_str() {
+        "artifact" => {
+            rt = Runtime::open_default()?;
+            Some(rt.load(&format!("infer_{}_b{}_bs1", ck.arch, ck.bits))?)
+        }
+        "float" | "shift" => {
+            let spec = ParamSpec::load_from_dir(&default_artifacts_dir(), &ck.arch)?;
+            let kind = if engine == "float" {
+                EngineKind::Float
+            } else {
+                EngineKind::Shift { bits: ck.bits.min(6) }
+            };
+            native = Some(DetectorModel::build(&spec, &ck, kind)?);
+            None
+        }
+        other => bail!("unknown engine `{other}`"),
+    };
+    for i in 0..count {
+        let s = generate_scene(seed, i, &scene_cfg);
+        println!("scene {i} (ground truth: {} objects)", s.objects.len());
+        for g in &s.objects {
+            println!(
+                "    GT {:>9} box=({:>5.1},{:>5.1})..({:>5.1},{:>5.1})",
+                class_name(g.class), g.bbox.x1, g.bbox.y1, g.bbox.x2, g.bbox.y2
+            );
+        }
+        let (cp, rg) = if let Some(exe) = &exe {
+            let out = exe.run(&[
+                lbw_net::runtime::lit_f32(&ck.params, &[ck.params.len()])?,
+                lbw_net::runtime::lit_f32(&ck.state, &[ck.state.len()])?,
+                lbw_net::runtime::lit_f32(&s.image, &[1, IMG, IMG, 3])?,
+            ])?;
+            (lbw_net::runtime::to_f32(&out[0])?, lbw_net::runtime::to_f32(&out[1])?)
+        } else {
+            native.as_mut().unwrap().forward(&s.image, 1)
+        };
+        let dets = nms(decode_grid(&cp, &rg, thresh), 0.45);
+        print_detections(&format!("{engine} b{}", ck.bits), &dets, &s);
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args, cfg: &Config) -> Result<()> {
+    args.check_known(&["steps", "bits", "archs", "seed", "config"])?;
+    let steps: u64 = args.parse_or("steps", 400)?;
+    let seed: u64 = args.parse_or("seed", 17)?;
+    let bit_list: Vec<u32> = args
+        .list_or("bits", "4,5,6,32")
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow!("bad bits {s}")))
+        .collect::<Result<_>>()?;
+    let arch_list = args.list_or("archs", "a,b");
+    let rt = Runtime::open_default()?;
+    println!("Table 1 reproduction: SynthVOC, {steps} steps, seed {seed}");
+    println!("{:<8} {:<8} {:<10} {:<14}", "arch", "bits", "mAP", "mean step ms");
+    let mut rows = Vec::new();
+    for arch in &arch_list {
+        for &b in &bit_list {
+            let mut tc = cfg.to_train_config();
+            tc.arch = arch.clone();
+            tc.bits = b;
+            tc.steps = steps;
+            tc.seed = seed;
+            tc.log_every = (steps / 4).max(1);
+            let trainer = Trainer::new(&rt, tc)?;
+            let out = trainer.train()?;
+            println!("{:<8} {:<8} {:<10.4} {:<14.0}", arch, b, out.final_map, out.mean_step_ms);
+            rows.push((arch.clone(), b, out.final_map));
+        }
+    }
+    println!("\nsummary (paper Table 1 shape: mAP grows with bit-width, 6-bit ~ float):");
+    for (arch, b, m) in rows {
+        println!(
+            "  R-FCN-lite µResNet-{}  {:>2}-bit  mAP {:.2}%",
+            arch.to_uppercase(),
+            b,
+            m * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    args.check_known(&["ckpt", "layers", "config"])?;
+    let ck = Checkpoint::load(Path::new(args.require("ckpt")?))?;
+    let spec = ParamSpec::load_from_dir(&default_artifacts_dir(), &ck.arch)?;
+    let layer_names = args.list_or("layers", "s2.b0.conv2.w,cls.w");
+    for name in &layer_names {
+        let w = spec.view(&ck.params, name)?;
+        println!("=== layer {name} ({} weights) ===", w.len());
+        // Fig. 2: histogram + normality
+        println!("{}", stats::render_histogram(w, 31, 50));
+        let m = stats::moments(w);
+        let jb = stats::jarque_bera(w);
+        println!(
+            "mean={:.5} std={:.5} skew={:.3} excess_kurtosis={:.3}",
+            m.mean, m.std, m.skewness, m.excess_kurtosis
+        );
+        println!(
+            "Jarque-Bera={:.1} p-value={:.3e} (paper: p < 1e-5, strongly non-Gaussian)\n",
+            jb.statistic, jb.p_value
+        );
+        // Tables 2-3: bin table across bit-widths
+        let q4 = threshold::lbw_quantize_layer(w, 4, 0.75);
+        let q5 = threshold::lbw_quantize_layer(w, 5, 0.75);
+        let q6 = threshold::lbw_quantize_layer(w, 6, 0.75);
+        println!(
+            "{}",
+            stats::render_bin_table(
+                &[
+                    ("4-bit LBW", &q4.wq),
+                    ("5-bit LBW", &q5.wq),
+                    ("6-bit LBW", &q6.wq),
+                    ("32-bit float", w),
+                ],
+                -16,
+                0,
+            )
+        );
+        println!(
+            "sparsity: 4-bit {:.1}% | 5-bit {:.1}% | 6-bit {:.1}%\n",
+            q4.sparsity() * 100.0,
+            q5.sparsity() * 100.0,
+            q6.sparsity() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    args.check_known(&["ckpt", "bits", "n", "config"])?;
+    let n: usize = args.parse_or("n", 4096)?;
+    // weight source: trained layer or synthetic heavy-tailed vector
+    let w: Vec<f32> = match args.get("ckpt") {
+        Some(p) => {
+            let ck = Checkpoint::load(Path::new(p))?;
+            let spec = ParamSpec::load_from_dir(&default_artifacts_dir(), &ck.arch)?;
+            let e = spec
+                .conv_entries()
+                .max_by_key(|e| e.size)
+                .ok_or_else(|| anyhow!("no conv layers"))?;
+            println!("weights: layer {} of {p}", e.name);
+            ck.params[e.offset..e.offset + e.size.min(n)].to_vec()
+        }
+        None => {
+            println!("weights: synthetic heavy-tailed vector (n={n})");
+            let mut rng = lbw_net::data::Rng::new(42);
+            (0..n).map(|_| rng.normal() * 0.03 * (1.0 + rng.normal().abs())).collect()
+        }
+    };
+    println!(
+        "{:<14} {:<16} {:<16} {:<12} {:<10}",
+        "scheme", "L2 err", "rel. to exact*", "sparsity", "s"
+    );
+    for b in args.list_or("bits", "2,4,5,6") {
+        let b: u32 = b.parse().map_err(|_| anyhow!("bad bits {b}"))?;
+        let q = threshold::lbw_quantize_layer(&w, b, 0.75);
+        let err = lbw_net::quant::l2_err(&w, &q.wq);
+        let exact_err = if b == 2 {
+            exact::ternary_exact(&w).err
+        } else if w.len() <= 18 {
+            exact::exact_enumerate(&w, b).err
+        } else {
+            f64::NAN // enumeration infeasible at this n
+        };
+        let rel = if exact_err.is_nan() { f64::NAN } else { err / exact_err.max(1e-30) };
+        println!(
+            "{:<14} {:<16.6e} {:<16.4} {:<12.3} {:<10}",
+            format!("LBW b={b}"),
+            err,
+            rel,
+            q.sparsity(),
+            q.s
+        );
+    }
+    for (name, wq) in [
+        ("BinaryConnect", baselines::binary_connect(&w)),
+        ("XNOR", baselines::xnor(&w)),
+        ("TWN", baselines::twn(&w)),
+        ("DoReFa-4", baselines::dorefa(&w, 4)),
+        ("INQ-5", baselines::inq_round(&w, 5)),
+    ] {
+        println!("{:<14} {:<16.6e}", name, lbw_net::quant::l2_err(&w, &wq));
+    }
+    println!("(*exact = Theorem-1 solution; enumeration only feasible for b=2 at this n)");
+    Ok(())
+}
+
+fn cmd_inq(args: &Args, cfg: &Config) -> Result<()> {
+    args.check_known(&["bits", "steps", "seed", "out", "config"])?;
+    let mut base = cfg.to_train_config();
+    base.bits = args.parse_or("bits", 4u32)?;
+    base.steps = args.parse_or("steps", base.steps)?;
+    base.seed = args.parse_or("seed", base.seed)?;
+    let out = PathBuf::from(args.str_or("out", "ckpt_inq.lbw"));
+    let rt = Runtime::open_default()?;
+    let outcome = lbw_net::coordinator::inq::train_inq(
+        &rt,
+        &lbw_net::coordinator::inq::InqConfig { base: base.clone(), ..Default::default() },
+    )?;
+    println!(
+        "INQ {} b{}: mAP={:.4}, phase losses {:?}",
+        base.arch, base.bits, outcome.final_map, outcome.phase_losses
+    );
+    outcome.checkpoint.save(&out)?;
+    println!("checkpoint -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.check_known(&["ckpt", "requests", "concurrency", "config"])?;
+    let ck = Checkpoint::load(Path::new(args.require("ckpt")?))?;
+    let requests: usize = args.parse_or("requests", 64)?;
+    let concurrency: usize = args.parse_or("concurrency", 8)?;
+    let server = DetectServer::start(
+        &ck.arch,
+        ck.bits,
+        ck.params.clone(),
+        ck.state.clone(),
+        ServerConfig::default(),
+    )?;
+    let handle = server.handle();
+    let t0 = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..concurrency {
+        let h = handle.clone();
+        let per = requests / concurrency;
+        clients.push(std::thread::spawn(move || {
+            let cfg = SceneConfig::default();
+            let mut n_dets = 0usize;
+            for i in 0..per {
+                let s = generate_scene(777, (c * per + i) as u64, &cfg);
+                n_dets += h.detect(s.image).expect("detect").len();
+            }
+            n_dets
+        }));
+    }
+    let total_dets: usize = clients.into_iter().map(|c| c.join().expect("client")).sum();
+    let wall = t0.elapsed();
+    println!(
+        "served {requests} requests ({concurrency} clients) in {:.2}s -> {:.1} img/s, {total_dets} detections",
+        wall.as_secs_f64(),
+        requests as f64 / wall.as_secs_f64()
+    );
+    println!("latency: {}", handle.latency_summary());
+    drop(handle);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    args.check_known(&["count", "seed", "out", "config"])?;
+    let count: u64 = args.parse_or("count", 8)?;
+    let seed: u64 = args.parse_or("seed", 1)?;
+    let out = PathBuf::from(args.str_or("out", "synthvoc_out"));
+    std::fs::create_dir_all(&out)?;
+    let cfg = SceneConfig::default();
+    for i in 0..count {
+        let s = generate_scene(seed, i, &cfg);
+        // PPM (P6) render, un-normalized
+        let mut ppm = format!("P6\n{IMG} {IMG}\n255\n").into_bytes();
+        for px in s.image.chunks(3) {
+            for c in 0..3 {
+                ppm.push((((px[c] + 0.3).clamp(0.0, 1.0)) * 255.0) as u8);
+            }
+        }
+        std::fs::write(out.join(format!("scene_{i:04}.ppm")), ppm)?;
+        let labels = Json::Arr(
+            s.objects
+                .iter()
+                .map(|o| {
+                    Json::obj(vec![
+                        ("class", Json::str(class_name(o.class))),
+                        ("class_id", Json::num(o.class as f64)),
+                        (
+                            "bbox",
+                            Json::Arr(vec![
+                                Json::num(o.bbox.x1 as f64),
+                                Json::num(o.bbox.y1 as f64),
+                                Json::num(o.bbox.x2 as f64),
+                                Json::num(o.bbox.y2 as f64),
+                            ]),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write(out.join(format!("scene_{i:04}.json")), labels.to_string())?;
+    }
+    println!("wrote {count} scenes ({NUM_CLASSES} classes) to {}", out.display());
+    Ok(())
+}

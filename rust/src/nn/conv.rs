@@ -1,0 +1,184 @@
+//! f32 baseline convolution (NHWC, HWIO weights, SAME padding) — the
+//! "32-bit full-precision" deployment path of the speedup comparison.
+
+use crate::tensor::Tensor;
+
+/// Zero-pad an NHWC tensor by `lo` pixels before and `hi` after, on
+/// both spatial axes.
+pub fn pad_spatial(x: &Tensor, lo: usize, hi: usize) -> Tensor {
+    let (n, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (ph, pw) = (h + lo + hi, w + lo + hi);
+    let mut out = Tensor::zeros(&[n, ph, pw, c]);
+    for ni in 0..n {
+        for y in 0..h {
+            let src = ((ni * h + y) * w) * c;
+            let dst = ((ni * ph + y + lo) * pw + lo) * c;
+            out.data[dst..dst + w * c].copy_from_slice(&x.data[src..src + w * c]);
+        }
+    }
+    out
+}
+
+/// XLA "SAME" padding amounts for kernel `k`, stride `s`, input `n`:
+/// `out = ceil(n/s)`, `total = max((out-1)*s + k - n, 0)`,
+/// `lo = total/2` (asymmetric for even totals — e.g. stride 2 over an
+/// even input pads 0 before and 1 after).
+pub fn same_padding(n: usize, k: usize, s: usize) -> (usize, usize) {
+    let out = n.div_ceil(s);
+    let total = ((out - 1) * s + k).saturating_sub(n);
+    (total / 2, total - total / 2)
+}
+
+/// SAME-padded 2-D convolution: `x` NHWC, `w` HWIO `[kh, kw, cin, cout]`,
+/// square stride. Matches `jax.lax.conv_general_dilated(..., "SAME")`
+/// for odd kernels.
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, h, ww_in, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, wcin, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(cin, wcin, "channel mismatch");
+    assert!(kh % 2 == 1 && kw % 2 == 1, "odd kernels only");
+    let (lo, hi) = same_padding(h, kh, stride);
+    let xp = pad_spatial(x, lo, hi);
+    let (ph, pw) = (h + lo + hi, ww_in + lo + hi);
+    let (oh, ow) = (h.div_ceil(stride), ww_in.div_ceil(stride));
+    let mut out = Tensor::zeros(&[n, oh, ow, cout]);
+
+    // direct convolution; weights re-laid-out as [kh*kw*cin][cout] rows
+    // for a contiguous inner loop over cout
+    for ni in 0..n {
+        for oy in 0..oh {
+            let iy0 = oy * stride;
+            for ox in 0..ow {
+                let ix0 = ox * stride;
+                let obase = ((ni * oh + oy) * ow + ox) * cout;
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let ibase = ((ni * ph + iy0 + ky) * pw + ix0 + kx) * cin;
+                        let wbase = (ky * kw + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = xp.data[ibase + ci];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = wbase + ci * cout;
+                            let orow = &mut out.data[obase..obase + cout];
+                            let wslice = &w.data[wrow..wrow + cout];
+                            for (o, &wv) in orow.iter_mut().zip(wslice) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 1×1 convolution as a plain matmul: `x` NHWC, `w` `[cin, cout]`.
+pub fn conv1x1(x: &Tensor, w: &[f32], cin: usize, cout: usize, bias: Option<&[f32]>) -> Tensor {
+    assert_eq!(*x.shape.last().unwrap(), cin);
+    let rows = x.len() / cin;
+    let mut out_shape = x.shape.clone();
+    *out_shape.last_mut().unwrap() = cout;
+    let mut out = Tensor::zeros(&out_shape);
+    for r in 0..rows {
+        let xrow = &x.data[r * cin..(r + 1) * cin];
+        let orow = &mut out.data[r * cout..(r + 1) * cout];
+        if let Some(b) = bias {
+            orow.copy_from_slice(b);
+        }
+        for (ci, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[ci * cout..(ci + 1) * cout];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel() {
+        // 1x1 kernel = identity mapping per channel
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]);
+        let y = conv2d(&x, &w, 1);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn box_filter_sums_neighbourhood() {
+        let x = Tensor::from_vec(&[1, 3, 3, 1], (1..=9).map(|v| v as f32).collect());
+        let w = Tensor::from_vec(&[3, 3, 1, 1], vec![1.0; 9]);
+        let y = conv2d(&x, &w, 1);
+        // center output = sum of all = 45
+        assert_eq!(y.at4(0, 1, 1, 0), 45.0);
+        // corner output = 1+2+4+5 = 12 (SAME zero padding)
+        assert_eq!(y.at4(0, 0, 0, 0), 12.0);
+    }
+
+    #[test]
+    fn stride_two_shape() {
+        let x = Tensor::zeros(&[1, 8, 8, 2]);
+        let w = Tensor::zeros(&[3, 3, 2, 4]);
+        let y = conv2d(&x, &w, 2);
+        assert_eq!(y.shape, vec![1, 4, 4, 4]);
+    }
+
+    #[test]
+    fn multi_channel_mixing() {
+        // 2 in-channels, 1 out: w = [1, 10] over a 1x1 kernel
+        let x = Tensor::from_vec(&[1, 1, 1, 2], vec![3.0, 4.0]);
+        let w = Tensor::from_vec(&[1, 1, 2, 1], vec![1.0, 10.0]);
+        let y = conv2d(&x, &w, 1);
+        assert_eq!(y.data, vec![43.0]);
+    }
+
+    #[test]
+    fn conv1x1_with_bias() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // identity 2x2
+        let y = conv1x1(&x, &w, 2, 2, Some(&[10.0, 20.0]));
+        assert_eq!(y.data, vec![11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn pad_roundtrip() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let p = pad_spatial(&x, 1, 1);
+        assert_eq!(p.shape, vec![1, 4, 4, 1]);
+        assert_eq!(p.at4(0, 1, 1, 0), 1.0);
+        assert_eq!(p.at4(0, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn same_padding_matches_xla_rule() {
+        assert_eq!(same_padding(64, 3, 1), (1, 1));
+        assert_eq!(same_padding(64, 3, 2), (0, 1)); // asymmetric!
+        assert_eq!(same_padding(65, 3, 2), (1, 1));
+        assert_eq!(same_padding(8, 1, 1), (0, 0));
+    }
+
+    #[test]
+    fn stride_two_alignment_matches_xla() {
+        // 4x1 input [a b c d], k=3 s=2, SAME: out[0] = a+b (pad_lo=0!),
+        // out[1] = c+d+e(pad)=c+d — NOT the symmetric-pad (0+a+b, b+c+d)
+        let x = Tensor::from_vec(&[1, 4, 4, 1], (1..=16).map(|v| v as f32).collect());
+        let w = Tensor::from_vec(&[3, 3, 1, 1], vec![1.0; 9]);
+        let y = conv2d(&x, &w, 2);
+        assert_eq!(y.shape, vec![1, 2, 2, 1]);
+        // out[0,0] covers rows 0..3, cols 0..3 of the unpadded input
+        // (pad_lo = 0): 1+2+3 + 5+6+7 + 9+10+11 = 54
+        assert_eq!(y.at4(0, 0, 0, 0), 54.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Deployment-time layer helpers: BN folding and position-sensitive
+//! voting (mirrors `model.py::ps_vote`).
+
+use crate::consts::{GRID, K, NUM_CLS};
+use crate::tensor::Tensor;
+
+/// Fold batch-norm statistics into a per-channel affine:
+/// `y = x·a + b`, `a = scale/√(var+ε)`, `b = bias − mean·a`.
+pub fn fold_bn(scale: &[f32], bias: &[f32], mean: &[f32], var: &[f32], eps: f32) -> (Vec<f32>, Vec<f32>) {
+    let c = scale.len();
+    assert!(bias.len() == c && mean.len() == c && var.len() == c);
+    let mut a = vec![0.0f32; c];
+    let mut b = vec![0.0f32; c];
+    for i in 0..c {
+        a[i] = scale[i] / (var[i] + eps).sqrt();
+        b[i] = bias[i] - mean[i] * a[i];
+    }
+    (a, b)
+}
+
+/// Position-sensitive vote: `maps` `[B, G, G, K*K·NUM_CLS]` →
+/// `[B, G, G, NUM_CLS]`. Group `g = (dy+1)·K + (dx+1)` is read at the
+/// `(y+dy, x+dx)` neighbour, zero outside the grid — identical to the
+/// L2 graph.
+pub fn ps_vote(maps: &Tensor) -> Tensor {
+    let b = maps.shape[0];
+    assert_eq!(maps.shape[1..], [GRID, GRID, K * K * NUM_CLS]);
+    let mut out = Tensor::zeros(&[b, GRID, GRID, NUM_CLS]);
+    let kk = (K * K) as f32;
+    for ni in 0..b {
+        for y in 0..GRID as i64 {
+            for x in 0..GRID as i64 {
+                for dy in -1i64..=1 {
+                    for dx in -1i64..=1 {
+                        let (sy, sx) = (y + dy, x + dx);
+                        if sy < 0 || sy >= GRID as i64 || sx < 0 || sx >= GRID as i64 {
+                            continue;
+                        }
+                        let g = ((dy + 1) * K as i64 + (dx + 1)) as usize;
+                        let src = ((ni * GRID + sy as usize) * GRID + sx as usize)
+                            * (K * K * NUM_CLS)
+                            + g * NUM_CLS;
+                        let dst = ((ni * GRID + y as usize) * GRID + x as usize) * NUM_CLS;
+                        for c in 0..NUM_CLS {
+                            out.data[dst + c] += maps.data[src + c] / kk;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_bn_identity() {
+        let (a, b) = fold_bn(&[1.0], &[0.0], &[0.0], &[1.0], 0.0);
+        assert_eq!(a, vec![1.0]);
+        assert_eq!(b, vec![0.0]);
+    }
+
+    #[test]
+    fn fold_bn_matches_formula() {
+        let (a, b) = fold_bn(&[2.0], &[1.0], &[3.0], &[4.0], 0.0);
+        // a = 2/2 = 1, b = 1 - 3 = -2
+        assert_eq!(a, vec![1.0]);
+        assert_eq!(b, vec![-2.0]);
+    }
+
+    #[test]
+    fn ps_vote_matches_python_semantics() {
+        // same scenario as python/tests test_ps_vote_center_object
+        let mut maps = Tensor::zeros(&[1, GRID, GRID, K * K * NUM_CLS]);
+        let (y, x, dy, dx): (usize, usize, i64, i64) = (3, 4, 1, -1);
+        let g = ((dy + 1) * K as i64 + (dx + 1)) as usize;
+        let src = ((y as i64 + dy) as usize * GRID + (x as i64 + dx) as usize)
+            * (K * K * NUM_CLS)
+            + g * NUM_CLS
+            + 2;
+        maps.data[src] = 9.0;
+        let out = ps_vote(&maps);
+        let v = out.data[((y * GRID) + x) * NUM_CLS + 2];
+        assert!((v - 1.0).abs() < 1e-6);
+        let max = out.data.iter().cloned().fold(f32::MIN, f32::max);
+        assert_eq!(v, max);
+    }
+
+    #[test]
+    fn ps_vote_edge_cells_get_partial_votes() {
+        // uniform maps: interior cells see 9 votes of 1/9, corner cells 4
+        let maps = Tensor::from_vec(
+            &[1, GRID, GRID, K * K * NUM_CLS],
+            vec![1.0; GRID * GRID * K * K * NUM_CLS],
+        );
+        let out = ps_vote(&maps);
+        let corner = out.data[0];
+        let center = out.data[((3 * GRID) + 3) * NUM_CLS];
+        assert!((center - 1.0).abs() < 1e-6);
+        assert!((corner - 4.0 / 9.0).abs() < 1e-6);
+    }
+}

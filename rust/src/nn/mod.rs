@@ -1,0 +1,23 @@
+//! Rust-native deployment engine — the paper's inference story.
+//!
+//! At deployment LBW-Net replaces floating-point multiplications with
+//! bit shifts (weights are `±2^{s-t}` or zero) and skips zero weights
+//! entirely ("Mask technology", §3.2). This module implements both
+//! engines over the same checkpoint so `bench_speedup` can measure the
+//! ratio on this testbed:
+//!
+//! * [`conv`] — the f32 baseline convolution (direct NHWC, padded).
+//! * [`shift_conv`] — the quantized engine: weights stored as sparse
+//!   (offset, level, sign) codes, activations in 16.16 fixed point,
+//!   inner loop = shift + add, zeros skipped.
+//! * [`layers`] / [`model`] — BN folding and the full µResNet +
+//!   R-FCN-lite forward pass mirroring `python/compile/model.py`,
+//!   cross-checked against the `infer_*` artifacts in
+//!   `integration_engine.rs`.
+
+pub mod conv;
+pub mod layers;
+pub mod model;
+pub mod shift_conv;
+
+pub use model::{DetectorModel, EngineKind};

@@ -1,0 +1,404 @@
+//! Full rust-native detector: builds the µResNet + R-FCN-lite forward
+//! pass from a checkpoint + param spec, with either the f32 engine or
+//! the quantized shift-add engine. Mirrors
+//! `python/compile/model.py::forward` in eval mode and is cross-checked
+//! against the `infer_*` artifacts (integration_engine.rs).
+
+use anyhow::{ensure, Result};
+
+use super::conv::{conv1x1, conv2d};
+use super::layers::{fold_bn, ps_vote};
+use super::shift_conv::ShiftConv;
+use crate::consts::{GRID, IMG, K, NUM_CLS};
+use crate::coordinator::params::{Checkpoint, ParamSpec};
+use crate::tensor::Tensor;
+
+const BN_EPS: f32 = 1e-5;
+
+/// Which convolution engine executes the backbone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// 32-bit float convolutions (deployment baseline).
+    Float,
+    /// LBW-quantized shift-add convolutions at the given bit-width.
+    Shift { bits: u32 },
+}
+
+enum ConvOp {
+    Float(Tensor), // HWIO weights
+    Shift(Box<ShiftConv>),
+}
+
+impl ConvOp {
+    fn run(&mut self, x: &Tensor, stride: usize) -> Tensor {
+        match self {
+            ConvOp::Float(w) => conv2d(x, w, stride),
+            ConvOp::Shift(sc) => sc.forward(x, stride),
+        }
+    }
+}
+
+struct ConvBn {
+    op: ConvOp,
+    stride: usize,
+    /// folded BN affine, applied post-conv
+    scale: Vec<f32>,
+    bias: Vec<f32>,
+    relu: bool,
+}
+
+impl ConvBn {
+    fn run(&mut self, x: &Tensor) -> Tensor {
+        let mut y = self.op.run(x, self.stride);
+        y.affine_channels_(&self.scale, &self.bias);
+        if self.relu {
+            y.relu_();
+        }
+        y
+    }
+}
+
+struct Block {
+    conv1: ConvBn,
+    conv2: ConvBn,
+    skip: Option<ConvOp>,
+    stride: usize,
+}
+
+/// The deployable detector.
+pub struct DetectorModel {
+    stem: ConvBn,
+    blocks: Vec<Block>,
+    head: ConvBn,
+    cls_w: Vec<f32>,
+    cls_b: Vec<f32>,
+    reg_w: Vec<f32>,
+    reg_b: Vec<f32>,
+    head_width: usize,
+    pub engine: EngineKind,
+    /// Total weight-storage bits of all conv layers (for the memory
+    /// table): quantized engines count `bits` per nonzero code.
+    pub weight_bits: usize,
+    /// Mean sparsity across quantized conv layers (0 for float).
+    pub mean_sparsity: f64,
+}
+
+impl DetectorModel {
+    /// Build from a checkpoint. `engine` selects f32 or shift-add; the
+    /// shift engine re-quantizes the stored full-precision weights with
+    /// the paper's `µ = ¾‖W‖∞` rule at the requested bit-width.
+    pub fn build(spec: &ParamSpec, ckpt: &Checkpoint, engine: EngineKind) -> Result<Self> {
+        ensure!(ckpt.params.len() == spec.num_params, "checkpoint/spec param mismatch");
+        ensure!(ckpt.state.len() == spec.num_state, "checkpoint/spec state mismatch");
+        let mut weight_bits = 0usize;
+        let mut sparsities: Vec<f64> = Vec::new();
+
+        let mut conv_op = |name: &str| -> Result<(ConvOp, [usize; 4])> {
+            let e = spec.param(name)?;
+            ensure!(e.shape.len() == 4, "conv {name} must be rank-4");
+            let (kh, kw, cin, cout) = (e.shape[0], e.shape[1], e.shape[2], e.shape[3]);
+            let w = &ckpt.params[e.offset..e.offset + e.size];
+            match engine {
+                EngineKind::Float => {
+                    weight_bits += w.len() * 32;
+                    Ok((
+                        ConvOp::Float(Tensor::from_vec(&e.shape, w.to_vec())),
+                        [kh, kw, cin, cout],
+                    ))
+                }
+                EngineKind::Shift { bits } => {
+                    let q = crate::quant::threshold::lbw_quantize_layer(w, bits, 0.75);
+                    let sc = ShiftConv::from_quant(&q, kh, kw, cin, cout, bits);
+                    weight_bits += sc.model_bits();
+                    sparsities.push(sc.sparsity);
+                    Ok((ConvOp::Shift(Box::new(sc)), [kh, kw, cin, cout]))
+                }
+            }
+        };
+        let bn_affine = |base: &str| -> Result<(Vec<f32>, Vec<f32>)> {
+            let scale = spec.view(&ckpt.params, &format!("{base}.scale"))?;
+            let bias = spec.view(&ckpt.params, &format!("{base}.bias"))?;
+            let mean = spec.view_state(&ckpt.state, &format!("{base}.mean"))?;
+            let var = spec.view_state(&ckpt.state, &format!("{base}.var"))?;
+            Ok(fold_bn(scale, bias, mean, var, BN_EPS))
+        };
+
+        let (op, _) = conv_op("stem.w")?;
+        let (a, b) = bn_affine("stem.bn")?;
+        let stem = ConvBn { op, stride: 2, scale: a, bias: b, relu: true };
+
+        // discover blocks from the spec names
+        let mut blocks = Vec::new();
+        let mut si = 0usize;
+        loop {
+            let mut bi = 0usize;
+            let mut found_any = false;
+            while spec.param(&format!("s{si}.b{bi}.conv1.w")).is_ok() {
+                found_any = true;
+                let p = format!("s{si}.b{bi}");
+                let stride = if bi == 0 && si > 0 { 2 } else { 1 };
+                let (op1, _) = conv_op(&format!("{p}.conv1.w"))?;
+                let (a1, b1) = bn_affine(&format!("{p}.bn1"))?;
+                let (op2, _) = conv_op(&format!("{p}.conv2.w"))?;
+                let (a2, b2) = bn_affine(&format!("{p}.bn2"))?;
+                let skip = if spec.param(&format!("{p}.skip.w")).is_ok() {
+                    Some(conv_op(&format!("{p}.skip.w"))?.0)
+                } else {
+                    None
+                };
+                blocks.push(Block {
+                    conv1: ConvBn { op: op1, stride, scale: a1, bias: b1, relu: true },
+                    conv2: ConvBn { op: op2, stride: 1, scale: a2, bias: b2, relu: false },
+                    skip,
+                    stride,
+                });
+                bi += 1;
+            }
+            if !found_any {
+                break;
+            }
+            si += 1;
+        }
+        ensure!(!blocks.is_empty(), "no residual blocks found in spec");
+
+        let (hop, _) = conv_op("head.w")?;
+        let (ha, hb) = bn_affine("head.bn")?;
+        let head = ConvBn { op: hop, stride: 1, scale: ha, bias: hb, relu: true };
+
+        // 1x1 heads stay float (they are matmuls over few channels; the
+        // L2 graph quantizes them too — the shift engine quantizes the
+        // values but executes them as f32 matmuls, which is what a real
+        // deployment would do for tiny tails).
+        let cls_e = spec.param("cls.w")?;
+        let head_width = cls_e.shape[0];
+        let quantize_head = |w: &[f32]| -> Vec<f32> {
+            match engine {
+                EngineKind::Float => w.to_vec(),
+                EngineKind::Shift { bits } => {
+                    crate::quant::threshold::lbw_quantize_layer(w, bits, 0.75).wq
+                }
+            }
+        };
+        let cls_w = quantize_head(spec.view(&ckpt.params, "cls.w")?);
+        let reg_w = quantize_head(spec.view(&ckpt.params, "reg.w")?);
+        match engine {
+            EngineKind::Float => weight_bits += (cls_w.len() + reg_w.len()) * 32,
+            EngineKind::Shift { bits } => {
+                weight_bits += (cls_w.iter().filter(|&&x| x != 0.0).count()
+                    + reg_w.iter().filter(|&&x| x != 0.0).count())
+                    * bits as usize
+            }
+        }
+
+        let mean_sparsity = if sparsities.is_empty() {
+            0.0
+        } else {
+            sparsities.iter().sum::<f64>() / sparsities.len() as f64
+        };
+
+        Ok(DetectorModel {
+            stem,
+            blocks,
+            head,
+            cls_w,
+            cls_b: spec.view(&ckpt.params, "cls.b")?.to_vec(),
+            reg_w,
+            reg_b: spec.view(&ckpt.params, "reg.b")?.to_vec(),
+            head_width,
+            engine,
+            weight_bits,
+            mean_sparsity,
+        })
+    }
+
+    /// Run detection. `images`: `[B, IMG, IMG, 3]` flat. Returns
+    /// `(cls_prob [B,G,G,NUM_CLS], reg [B,G,G,4])` flat, same layout as
+    /// the `infer_*` artifacts.
+    pub fn forward(&mut self, images: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(images.len(), batch * IMG * IMG * 3);
+        let x = Tensor::from_vec(&[batch, IMG, IMG, 3], images.to_vec());
+        let mut h = self.stem.run(&x);
+        for blk in &mut self.blocks {
+            let mut r = blk.conv1.run(&h);
+            r = blk.conv2.run(&r);
+            let skip = match &mut blk.skip {
+                Some(op) => op.run(&h, blk.stride),
+                None if blk.stride != 1 => h.subsample(blk.stride),
+                None => h.clone(),
+            };
+            r.add_(&skip).relu_();
+            h = r;
+        }
+        h = self.head.run(&h);
+        let cls_maps = conv1x1(&h, &self.cls_w, self.head_width, K * K * NUM_CLS, Some(&self.cls_b));
+        let cls_logits = ps_vote(&cls_maps);
+        let cls_prob = cls_logits.softmax_last();
+        let reg = conv1x1(&h, &self.reg_w, self.head_width, 4, Some(&self.reg_b));
+        debug_assert_eq!(cls_prob.shape, vec![batch, GRID, GRID, NUM_CLS]);
+        (cls_prob.data, reg.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::params::SpecEntry;
+
+    /// Hand-build a minimal spec (stem + 1 block + head + heads) and a
+    /// matching random checkpoint for engine tests without artifacts.
+    fn tiny_spec_ckpt() -> (ParamSpec, Checkpoint) {
+        let mut params: Vec<SpecEntry> = Vec::new();
+        let mut state: Vec<SpecEntry> = Vec::new();
+        let (mut po, mut so) = (0usize, 0usize);
+        let mut add_p = |name: &str, shape: Vec<usize>, kind: &str, q: bool, po: &mut usize| {
+            let size: usize = shape.iter().product();
+            params.push(SpecEntry {
+                name: name.into(),
+                shape,
+                kind: kind.into(),
+                quantize: q,
+                offset: *po,
+                size,
+            });
+            *po += size;
+        };
+        let mut add_s = |name: &str, c: usize, kind: &str, so: &mut usize| {
+            state.push(SpecEntry {
+                name: name.into(),
+                shape: vec![c],
+                kind: kind.into(),
+                quantize: false,
+                offset: *so,
+                size: c,
+            });
+            *so += c;
+        };
+        let w = 8usize; // tiny width
+        add_p("stem.w", vec![3, 3, 3, w], "conv", true, &mut po);
+        add_p("stem.bn.scale", vec![w], "bn_scale", false, &mut po);
+        add_p("stem.bn.bias", vec![w], "bn_bias", false, &mut po);
+        add_s("stem.bn.mean", w, "bn_mean", &mut so);
+        add_s("stem.bn.var", w, "bn_var", &mut so);
+        // stage 0 block 0 (stride 1, no skip); then two stride-2 stages
+        for si in 0..3 {
+            let cin = if si == 0 { w } else { w };
+            let p = format!("s{si}.b0");
+            add_p(&format!("{p}.conv1.w"), vec![3, 3, cin, w], "conv", true, &mut po);
+            add_p(&format!("{p}.bn1.scale"), vec![w], "bn_scale", false, &mut po);
+            add_p(&format!("{p}.bn1.bias"), vec![w], "bn_bias", false, &mut po);
+            add_s(&format!("{p}.bn1.mean"), w, "bn_mean", &mut so);
+            add_s(&format!("{p}.bn1.var"), w, "bn_var", &mut so);
+            add_p(&format!("{p}.conv2.w"), vec![3, 3, w, w], "conv", true, &mut po);
+            add_p(&format!("{p}.bn2.scale"), vec![w], "bn_scale", false, &mut po);
+            add_p(&format!("{p}.bn2.bias"), vec![w], "bn_bias", false, &mut po);
+            add_s(&format!("{p}.bn2.mean"), w, "bn_mean", &mut so);
+            add_s(&format!("{p}.bn2.var"), w, "bn_var", &mut so);
+        }
+        add_p("head.w", vec![3, 3, w, w], "conv", true, &mut po);
+        add_p("head.bn.scale", vec![w], "bn_scale", false, &mut po);
+        add_p("head.bn.bias", vec![w], "bn_bias", false, &mut po);
+        add_s("head.bn.mean", w, "bn_mean", &mut so);
+        add_s("head.bn.var", w, "bn_var", &mut so);
+        add_p("cls.w", vec![w, K * K * NUM_CLS], "conv", true, &mut po);
+        add_p("cls.b", vec![K * K * NUM_CLS], "bias", false, &mut po);
+        add_p("reg.w", vec![w, 4], "conv", true, &mut po);
+        add_p("reg.b", vec![4], "bias", false, &mut po);
+
+        let spec = ParamSpec {
+            arch: "tiny".into(),
+            num_params: po,
+            num_state: so,
+            params,
+            state,
+        };
+        spec.validate().unwrap();
+        let mut s = 12345u64;
+        let mut rnd = || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 11) as f32 / (1u64 << 53) as f32 - 0.5) * 0.4
+        };
+        let mut p = vec![0.0f32; po];
+        for e in &spec.params {
+            for i in 0..e.size {
+                p[e.offset + i] = match e.kind.as_str() {
+                    "bn_scale" => 1.0,
+                    "bn_bias" | "bias" => 0.0,
+                    _ => rnd(),
+                };
+            }
+        }
+        let mut st = vec![0.0f32; so];
+        for e in &spec.state {
+            for i in 0..e.size {
+                st[e.offset + i] = if e.kind == "bn_var" { 1.0 } else { 0.0 };
+            }
+        }
+        let ckpt = Checkpoint { arch: "tiny".into(), bits: 32, step: 0, params: p, state: st };
+        (spec, ckpt)
+    }
+
+    #[test]
+    fn float_engine_runs_and_shapes() {
+        let (spec, ckpt) = tiny_spec_ckpt();
+        let mut m = DetectorModel::build(&spec, &ckpt, EngineKind::Float).unwrap();
+        let imgs = vec![0.1f32; IMG * IMG * 3];
+        let (cls, reg) = m.forward(&imgs, 1);
+        assert_eq!(cls.len(), GRID * GRID * NUM_CLS);
+        assert_eq!(reg.len(), GRID * GRID * 4);
+        for row in cls.chunks(NUM_CLS) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn shift_engine_close_to_float_engine_with_quantized_weights() {
+        // quantize the checkpoint weights, run the FLOAT engine on the
+        // quantized values, and compare against the shift engine: they
+        // must agree to fixed-point tolerance.
+        let (spec, ckpt) = tiny_spec_ckpt();
+        let bits = 6;
+        let mut qckpt = ckpt.clone();
+        for e in spec.conv_entries() {
+            let w = &ckpt.params[e.offset..e.offset + e.size];
+            let q = crate::quant::threshold::lbw_quantize_layer(w, bits, 0.75);
+            qckpt.params[e.offset..e.offset + e.size].copy_from_slice(&q.wq);
+        }
+        let mut float_q = DetectorModel::build(&spec, &qckpt, EngineKind::Float).unwrap();
+        let mut shift = DetectorModel::build(&spec, &ckpt, EngineKind::Shift { bits }).unwrap();
+        let mut s = 5u64;
+        let imgs: Vec<f32> = (0..IMG * IMG * 3)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s >> 11) as f32 / (1u64 << 53) as f32 - 0.3
+            })
+            .collect();
+        let (c1, r1) = float_q.forward(&imgs, 1);
+        let (c2, r2) = shift.forward(&imgs, 1);
+        let dc = c1.iter().zip(&c2).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        let dr = r1.iter().zip(&r2).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(dc < 2e-2, "cls diff {dc}");
+        assert!(dr < 2e-1, "reg diff {dr}");
+    }
+
+    #[test]
+    fn shift_engine_reports_compression() {
+        let (spec, ckpt) = tiny_spec_ckpt();
+        let f = DetectorModel::build(&spec, &ckpt, EngineKind::Float).unwrap();
+        let q4 = DetectorModel::build(&spec, &ckpt, EngineKind::Shift { bits: 4 }).unwrap();
+        let q6 = DetectorModel::build(&spec, &ckpt, EngineKind::Shift { bits: 6 }).unwrap();
+        assert!(q6.weight_bits < f.weight_bits / 4, "6-bit must save >4x memory");
+        assert!(q4.weight_bits < q6.weight_bits);
+        assert!(q4.mean_sparsity > q6.mean_sparsity);
+    }
+
+    #[test]
+    fn build_rejects_wrong_sizes() {
+        let (spec, mut ckpt) = tiny_spec_ckpt();
+        ckpt.params.pop();
+        assert!(DetectorModel::build(&spec, &ckpt, EngineKind::Float).is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! Baseline quantizers the paper positions LBW-Net against (§1):
+//! BinaryConnect [1], XNOR-Net [20], TWN [17], DoReFa-Net [26], and the
+//! INQ power-of-two scheme [25]. Used by `bench_quant` for the
+//! approximation-error comparison and by the ablation benches.
+
+/// BinaryConnect: `W^q = sign(W)` (deterministic variant). 1 bit.
+pub fn binary_connect(w: &[f32]) -> Vec<f32> {
+    w.iter().map(|&x| if x >= 0.0 { 1.0 } else { -1.0 }).collect()
+}
+
+/// XNOR-Net: `W^q = α · sign(W)` with the optimal `α = mean|W|`.
+pub fn xnor(w: &[f32]) -> Vec<f32> {
+    let alpha = if w.is_empty() {
+        0.0
+    } else {
+        w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32
+    };
+    w.iter().map(|&x| if x >= 0.0 { alpha } else { -alpha }).collect()
+}
+
+/// TWN (Ternary Weight Networks): threshold `Δ = 0.7·mean|W|`, scale
+/// `α = mean of |W| over the kept set` — Li et al.'s empirical rule.
+pub fn twn(w: &[f32]) -> Vec<f32> {
+    let mean_abs = if w.is_empty() {
+        0.0
+    } else {
+        w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32
+    };
+    let delta = 0.7 * mean_abs;
+    let kept: Vec<f32> = w.iter().map(|x| x.abs()).filter(|&a| a > delta).collect();
+    let alpha = if kept.is_empty() {
+        0.0
+    } else {
+        kept.iter().sum::<f32>() / kept.len() as f32
+    };
+    w.iter()
+        .map(|&x| {
+            if x.abs() > delta {
+                alpha * x.signum()
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// DoReFa-Net k-bit weights: `W^q = 2·quantize_k(tanh(W)/(2·max|tanh(W)|) + ½) − 1`,
+/// uniform `2^k − 1` levels in [-1, 1], rescaled by `max|W|` to keep
+/// the comparison range-fair.
+pub fn dorefa(w: &[f32], bits: u32) -> Vec<f32> {
+    assert!(bits >= 1);
+    let n = (1u32 << bits) - 1;
+    let max_tanh = w.iter().map(|x| x.tanh().abs()).fold(0.0f32, f32::max);
+    let max_w = w.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+    if max_tanh == 0.0 {
+        return vec![0.0; w.len()];
+    }
+    w.iter()
+        .map(|&x| {
+            let v = x.tanh() / (2.0 * max_tanh) + 0.5; // [0, 1]
+            let q = (v * n as f32).round() / n as f32;
+            (2.0 * q - 1.0) * max_w
+        })
+        .collect()
+}
+
+/// INQ-style quantization: round each weight to the nearest value in
+/// `{0, ±2^{s-n+1}, …, ±2^s}` where `2^s` is the largest power of two
+/// `≤ 4·max|W|/3` — the heuristic scheme of Zhou et al. [25] that
+/// LBW-Net's Theorem 1 replaces with an exact/optimized rule.
+pub fn inq_round(w: &[f32], bits: u32) -> Vec<f32> {
+    let n = crate::quant::levels_for_bits(bits) as i32;
+    let max_w = w.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+    if max_w == 0.0 {
+        return vec![0.0; w.len()];
+    }
+    let s = (4.0 * max_w / 3.0).log2().floor() as i32;
+    w.iter()
+        .map(|&x| {
+            let a = x.abs();
+            // candidate levels 2^{s-t}, t = 0..n-1, plus 0
+            let mut best = 0.0f32;
+            let mut best_d = a;
+            for t in 0..n {
+                let v = f32::powi(2.0, s - t);
+                let d = (a - v).abs();
+                if d < best_d {
+                    best_d = d;
+                    best = v;
+                }
+            }
+            best * x.signum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::quant::l2_err;
+
+    use super::*;
+
+    fn randw(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                let mut acc = 0.0f32;
+                for _ in 0..4 {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    acc += (s >> 11) as f32 / (1u64 << 53) as f32 - 0.5;
+                }
+                acc * 0.1
+            })
+            .collect()
+    }
+
+    #[test]
+    fn binary_is_signs() {
+        let q = binary_connect(&[0.5, -0.1, 0.0]);
+        assert_eq!(q, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn xnor_beats_binary_in_l2() {
+        let w = randw(1000, 1);
+        assert!(l2_err(&w, &xnor(&w)) < l2_err(&w, &binary_connect(&w)));
+    }
+
+    #[test]
+    fn twn_produces_ternary() {
+        let w = randw(1000, 2);
+        let q = twn(&w);
+        let mut vals: Vec<f32> = q.iter().map(|x| x.abs()).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        assert!(vals.len() <= 2); // {0, alpha}
+    }
+
+    #[test]
+    fn lbw_ternary_not_worse_than_twn_much() {
+        // The exact ternary solver minimizes L2 over {0, ±2^s}; TWN
+        // optimizes over a continuous alpha, so it can be better — but
+        // the exact power-of-two solution must be within 2x.
+        let w = randw(4000, 3);
+        let lbw = crate::quant::exact::ternary_exact(&w);
+        let twn_err = l2_err(&w, &twn(&w));
+        assert!(lbw.err < 2.0 * twn_err, "lbw {} vs twn {}", lbw.err, twn_err);
+    }
+
+    #[test]
+    fn dorefa_level_count() {
+        let w = randw(2000, 4);
+        let q = dorefa(&w, 2);
+        let mut vals = q.clone();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        assert!(vals.len() <= 4, "{}", vals.len()); // 2^2-1 levels + sign structure
+    }
+
+    #[test]
+    fn inq_values_are_pow2_or_zero() {
+        let w = randw(2000, 5);
+        for &x in &inq_round(&w, 5) {
+            if x != 0.0 {
+                let m = x.abs().log2();
+                assert!((m - m.round()).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_ternary_beats_inq_at_two_bits() {
+        // The exact Theorem-1 solution optimizes both the assignment
+        // and the scale, so at b=2 it can never lose to the heuristic
+        // INQ rule in L2.
+        for seed in 0..8 {
+            let w = randw(2048, seed + 10);
+            let lbw = crate::quant::exact::ternary_exact(&w);
+            let inq_err = l2_err(&w, &inq_round(&w, 2));
+            assert!(
+                lbw.err <= inq_err * (1.0 + 1e-6),
+                "seed {seed}: exact {} vs inq {}",
+                lbw.err,
+                inq_err
+            );
+        }
+    }
+
+    #[test]
+    fn lbw_mu_rule_trades_l2_for_large_weights() {
+        // §2.1's design point: with µ = ¾‖W‖∞ the scheme deliberately
+        // does NOT minimize L2 — it preserves the large weights
+        // ("a percentage of the large weights plays a key role"). So
+        // (a) INQ's nearest-rounding may beat it in raw L2, but (b) the
+        // top-magnitude weights are encoded at full resolution: every
+        // weight at/above µ maps to the top level ±2^s.
+        let w = randw(4096, 3);
+        let q = crate::quant::threshold::lbw_quantize_layer(&w, 4, 0.75);
+        let winf = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mu = 0.75 * winf;
+        for (i, &x) in w.iter().enumerate() {
+            if x.abs() >= mu {
+                assert_eq!(q.levels[i], 0, "large weight {x} not at top level");
+            }
+        }
+        // a µ swept toward the L2 optimum improves the error, showing
+        // the rule is a detection-driven choice, not an L2 one
+        let best_swept = (1..=12)
+            .map(|k| {
+                let q = crate::quant::threshold::lbw_quantize_layer(&w, 4, 0.1 * k as f32);
+                l2_err(&w, &q.wq)
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!(best_swept <= l2_err(&w, &q.wq) + 1e-9);
+    }
+}

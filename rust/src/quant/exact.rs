@@ -1,0 +1,310 @@
+//! Exact solution of the low bit-width least-squares problem (Theorem 1).
+//!
+//! Quantize `W^f ∈ R^N` to `2^s Q`, `Q_i ∈ {0, ±2^{1-n}, …, ±1}`,
+//! minimizing `‖2^s Q − W^f‖²`. Theorem 1 shows the optimum assigns the
+//! `k₀` largest-magnitude weights to level 0 (`±1`), the next `k₁` to
+//! level 1 (`±1/2`), …, prunes the rest, with
+//!
+//! ```text
+//! (k₀*, …, k_{n-1}*) = argmin g(Σ_t 2^{-t} ‖W_[k_t]‖₁, Σ_t k_t 2^{-2t})
+//! g(u, v) = v (2^{⌊log2(4u/3v)⌋} − u/v)² − u²/v
+//! s*      = ⌊log2(4u*/3v*)⌋
+//! ```
+//!
+//! * b = 2 (ternary): one free count `k₀` — solved exactly in
+//!   `O(N log N)` (sort + prefix scan), as §2.1 describes.
+//! * b ≥ 3: the subproblem (2) is combinatorial; [`exact_enumerate`]
+//!   enumerates level-boundary compositions over the sorted magnitudes
+//!   (feasible for small N) and is the ground truth the semi-analytical
+//!   scheme is compared against in tests and `bench_quant`.
+
+use super::levels_for_bits;
+
+/// The objective `g(u, v)` of Theorem 1. `v = 0` means "quantize
+/// nothing", for which the residual reduction is 0.
+pub fn g_objective(u: f64, v: f64) -> f64 {
+    if v <= 0.0 {
+        return 0.0;
+    }
+    let s = (4.0 * u / (3.0 * v)).log2().floor();
+    let p = f64::powf(2.0, s);
+    v * (p - u / v) * (p - u / v) - u * u / v
+}
+
+/// Optimal scale power `⌊log2(4u/3v)⌋` (shared by Theorems 1 and 2).
+pub fn optimal_s(u: f64, v: f64) -> i32 {
+    (4.0 * u / (3.0 * v)).log2().floor() as i32
+}
+
+/// Exact result: quantized vector + the optimal level counts and scale.
+#[derive(Debug, Clone)]
+pub struct ExactQuant {
+    pub wq: Vec<f32>,
+    /// `k_t*`: number of weights assigned to level `t`.
+    pub counts: Vec<usize>,
+    pub s: i32,
+    /// Squared error `‖W^q − W^f‖²` at the optimum.
+    pub err: f64,
+}
+
+/// Indices of `w` sorted by decreasing magnitude, plus the prefix sums
+/// of the sorted magnitudes (`prefix[k] = Σ_{i<k} |w|_(i)`).
+fn sorted_prefix(w: &[f32]) -> (Vec<usize>, Vec<f64>) {
+    let mut idx: Vec<usize> = (0..w.len()).collect();
+    idx.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+    let mut prefix = Vec::with_capacity(w.len() + 1);
+    prefix.push(0.0);
+    let mut acc = 0.0f64;
+    for &i in &idx {
+        acc += w[i].abs() as f64;
+        prefix.push(acc);
+    }
+    (idx, prefix)
+}
+
+fn build_wq(w: &[f32], idx: &[usize], counts: &[usize], s: i32) -> Vec<f32> {
+    let mut wq = vec![0.0f32; w.len()];
+    let mut pos = 0usize;
+    for (t, &k) in counts.iter().enumerate() {
+        let mag = f32::powi(2.0, s - t as i32);
+        for &i in &idx[pos..pos + k] {
+            wq[i] = mag * w[i].signum();
+        }
+        pos += k;
+    }
+    wq
+}
+
+fn err_of(w: &[f32], wq: &[f32]) -> f64 {
+    super::l2_err(w, wq)
+}
+
+/// Exact ternary (b = 2) solution in `O(N log N)`:
+/// `k₀* = argmin_k g(‖W_[k]‖₁, k)`, `Q* = sign(W_[k₀*])`,
+/// `s* = ⌊log2(4‖W_[k₀*]‖₁ / 3k₀*)⌋`.
+pub fn ternary_exact(w: &[f32]) -> ExactQuant {
+    assert!(!w.is_empty());
+    let (idx, prefix) = sorted_prefix(w);
+    let mut best_k = 0usize;
+    let mut best_g = 0.0f64; // k = 0: empty quantization, g = 0
+    for k in 1..=w.len() {
+        let g = g_objective(prefix[k], k as f64);
+        if g < best_g {
+            best_g = g;
+            best_k = k;
+        }
+    }
+    let s = if best_k > 0 {
+        optimal_s(prefix[best_k], best_k as f64)
+    } else {
+        0
+    };
+    let counts = vec![best_k];
+    let wq = build_wq(w, &idx, &counts, s);
+    let err = err_of(w, &wq);
+    ExactQuant { wq, counts, s, err }
+}
+
+/// Exact b-bit solution by enumeration of the level compositions
+/// `(k₀, …, k_{n-1})` over the magnitude-sorted weights (Theorem 1).
+///
+/// Complexity is `O(binom(N+n, n))` — use only for small `N` (ground
+/// truth in tests / the §2.1-exactness bench). Panics if the search
+/// space exceeds ~50M nodes.
+pub fn exact_enumerate(w: &[f32], bits: u32) -> ExactQuant {
+    assert!(!w.is_empty());
+    let n = levels_for_bits(bits);
+    if n == 1 {
+        return ternary_exact(w);
+    }
+    let nn = w.len();
+    // Search space = number of compositions with sum <= N over n levels
+    // = binom(N + n, n).
+    let mut space = 1f64;
+    for t in 0..n {
+        space = space * (nn + n - t) as f64 / (t + 1) as f64;
+    }
+    assert!(space < 5e7, "exact enumeration infeasible: N={nn}, n={n} (~{space:.2e} nodes)");
+    let (idx, prefix) = sorted_prefix(w);
+
+    // DFS over compositions: level t takes k_t of the remaining sorted
+    // weights. u accumulates 2^{-t} (prefix-sum slice), v accumulates
+    // k_t 2^{-2t}.
+    struct Dfs<'a> {
+        prefix: &'a [f64],
+        nn: usize,
+        n: usize,
+        best_g: f64,
+        best: Vec<usize>,
+    }
+    impl Dfs<'_> {
+        fn go(&mut self, t: usize, taken: usize, u: f64, v: f64, cur: &mut Vec<usize>) {
+            if t == self.n {
+                let g = g_objective(u, v);
+                if g < self.best_g {
+                    self.best_g = g;
+                    self.best = cur.clone();
+                }
+                return;
+            }
+            let w2t = f64::powi(2.0, -(t as i32));
+            let w22t = w2t * w2t;
+            for k in 0..=(self.nn - taken) {
+                let du = w2t * (self.prefix[taken + k] - self.prefix[taken]);
+                let dv = w22t * k as f64;
+                cur.push(k);
+                self.go(t + 1, taken + k, u + du, v + dv, cur);
+                cur.pop();
+            }
+        }
+    }
+    let mut dfs = Dfs { prefix: &prefix, nn, n, best_g: 0.0, best: vec![0; n] };
+    dfs.go(0, 0, 0.0, 0.0, &mut Vec::with_capacity(n));
+
+    let counts = dfs.best;
+    let (u, v) = {
+        let mut u = 0.0;
+        let mut v = 0.0;
+        let mut taken = 0usize;
+        for (t, &k) in counts.iter().enumerate() {
+            u += f64::powi(2.0, -(t as i32)) * (prefix[taken + k] - prefix[taken]);
+            v += f64::powi(2.0, -2 * t as i32) * k as f64;
+            taken += k;
+        }
+        (u, v)
+    };
+    let s = if v > 0.0 { optimal_s(u, v) } else { 0 };
+    let wq = build_wq(w, &idx, &counts, s);
+    let err = err_of(w, &wq);
+    ExactQuant { wq, counts, s, err }
+}
+
+/// Brute-force ternary reference: try every (k, s) pair over a wide s
+/// range. `O(N² + N·S)` — test oracle for [`ternary_exact`].
+pub fn ternary_brute_force(w: &[f32]) -> ExactQuant {
+    let (idx, _) = sorted_prefix(w);
+    let mut best: Option<ExactQuant> = None;
+    for k in 0..=w.len() {
+        for s in -24..8 {
+            let counts = vec![k];
+            let wq = build_wq(w, &idx, &counts, s);
+            let err = err_of(w, &wq);
+            if best.as_ref().map_or(true, |b| err < b.err) {
+                best = Some(ExactQuant { wq, counts, s, err });
+            }
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    fn randw(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                let mut acc = 0.0f32;
+                for _ in 0..4 {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    acc += (s >> 11) as f32 / (1u64 << 53) as f32 - 0.5;
+                }
+                acc * 0.2
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ternary_matches_brute_force() {
+        for seed in 0..20 {
+            let w = randw(24, seed);
+            let fast = ternary_exact(&w);
+            let brute = ternary_brute_force(&w);
+            assert!(
+                fast.err <= brute.err * (1.0 + 1e-9) + 1e-12,
+                "seed {seed}: fast {} > brute {}",
+                fast.err,
+                brute.err
+            );
+        }
+    }
+
+    #[test]
+    fn enumeration_beats_or_ties_threshold_scheme() {
+        // Theorem 1 is exact: the semi-analytical scheme of eq. (3)
+        // can never achieve a strictly lower error.
+        for seed in 0..10 {
+            let w = randw(14, seed + 100);
+            for bits in [2u32, 3, 4] {
+                let exact = exact_enumerate(&w, bits);
+                let approx = crate::quant::threshold::lbw_quantize_layer(&w, bits, 0.75);
+                let approx_err = crate::quant::l2_err(&w, &approx.wq);
+                assert!(
+                    exact.err <= approx_err + 1e-9,
+                    "bits {bits} seed {seed}: exact {} > approx {}",
+                    exact.err,
+                    approx_err
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn enumeration_reduces_to_ternary() {
+        let w = randw(18, 5);
+        let a = exact_enumerate(&w, 2);
+        let b = ternary_exact(&w);
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.s, b.s);
+    }
+
+    #[test]
+    fn single_element() {
+        let q = ternary_exact(&[0.3]);
+        // best ternary approx of 0.3 is 2^-2 = 0.25
+        assert_eq!(q.wq, vec![0.25]);
+    }
+
+    #[test]
+    fn g_objective_sign() {
+        // quantizing something useful must yield negative g (error
+        // reduction relative to all-zero)
+        assert!(g_objective(1.0, 1.0) < 0.0);
+        assert_eq!(g_objective(0.5, 0.0), 0.0);
+    }
+
+    #[test]
+    fn prop_ternary_optimal_vs_random_k() {
+        // No k can beat k0* (checked via the g objective on prefix sums).
+        prop_check(64, "ternary optimal vs random k", |seed| {
+            let w = randw(64, seed * 157 + 1);
+            let exact = ternary_exact(&w);
+            let mut idx: Vec<usize> = (0..w.len()).collect();
+            idx.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+            let k_alt = (seed as usize % 64) + 1;
+            let mut alt_best = f64::INFINITY;
+            for s in -12..4 {
+                let wq = super::build_wq(&w, &idx, &[k_alt], s);
+                alt_best = alt_best.min(super::err_of(&w, &wq));
+            }
+            assert!(exact.err <= alt_best + 1e-9);
+        });
+    }
+
+    #[test]
+    fn prop_exact_err_monotone_in_bits() {
+        // More bits -> richer codebook -> no worse exact error.
+        prop_check(40, "exact err monotone in bits", |seed| {
+            let w = randw(10, seed * 31 + 7);
+            let e2 = exact_enumerate(&w, 2).err;
+            let e3 = exact_enumerate(&w, 3).err;
+            let e4 = exact_enumerate(&w, 4).err;
+            assert!(e3 <= e2 + 1e-9);
+            assert!(e4 <= e3 + 1e-9);
+        });
+    }
+}

@@ -1,0 +1,69 @@
+//! Low bit-width weight quantization — the paper's core contribution.
+//!
+//! * [`threshold`] — the semi-analytical scheme of eq. (3) + eq. (4)
+//!   with the single free parameter µ (the production path; mirrors the
+//!   Pallas kernel bit-for-bit and is integration-tested against the
+//!   `quantize_b{bits}` HLO artifacts).
+//! * [`exact`] — the exact Theorem-1 solution of the least-squares
+//!   problem: closed-form `O(N log N)` ternary (b = 2) solver and the
+//!   combinatorial enumeration for b ≥ 3 (small N).
+//! * [`baselines`] — the comparison quantizers the paper cites: TWN,
+//!   BinaryConnect, XNOR-style scaled sign, DoReFa uniform, INQ-style
+//!   power-of-two rounding.
+//! * [`stats`] — weight-distribution analysis: power-of-two magnitude
+//!   bins (Tables 2–3), histograms, excess kurtosis and Jarque–Bera
+//!   normality (Fig. 2).
+
+pub mod baselines;
+pub mod exact;
+pub mod stats;
+pub mod threshold;
+
+pub use threshold::{lbw_quantize, lbw_quantize_layer, LbwQuant};
+
+/// Number of nonzero magnitude levels for bit-width `b`: `n = 2^{b-2}`.
+///
+/// A b-bit model has `2^{b-1} + 1` candidate values: 2 bits encode zero
+/// and the sign, the remaining `b-2` bits the power (paper §1).
+pub fn levels_for_bits(bits: u32) -> usize {
+    assert!(bits >= 2, "bit-width must be >= 2, got {bits}");
+    1usize << (bits - 2)
+}
+
+/// Squared Euclidean distance between two weight vectors — the
+/// objective of eq. (1), used by tests/benches to compare schemes.
+pub fn l2_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_match_paper_table() {
+        // b=2 -> ternary {0, ±1}; b=4 -> {0, ±1/8..±1}; b=6 -> 16 levels.
+        assert_eq!(levels_for_bits(2), 1);
+        assert_eq!(levels_for_bits(3), 2);
+        assert_eq!(levels_for_bits(4), 4);
+        assert_eq!(levels_for_bits(5), 8);
+        assert_eq!(levels_for_bits(6), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bits_below_two_rejected() {
+        levels_for_bits(1);
+    }
+
+    #[test]
+    fn l2_err_basic() {
+        assert_eq!(l2_err(&[1.0, 2.0], &[1.0, 0.0]), 4.0);
+    }
+}

@@ -1,0 +1,279 @@
+//! Weight-distribution statistics — the analysis machinery behind
+//! Fig. 2 (non-Gaussianity of trained float weights) and Tables 2–3
+//! (per-magnitude-bin weight percentages of low-bit vs float models).
+
+use std::fmt::Write as _;
+
+/// One row of a Table 2/3-style magnitude-bin table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinRow {
+    /// Lower edge exponent: the bin is `[2^lo, 2^{lo+1})`; `None` for
+    /// the catch-all `|w| < 2^{first}` row.
+    pub lo: Option<i32>,
+    /// Percentage of weights in the bin (0–100).
+    pub pct: f64,
+}
+
+/// Percentage of weights per power-of-two magnitude bin, reproducing
+/// the row structure of Tables 2–3: a catch-all `|w| < 2^{lo}` row,
+/// one row per exponent in `[lo, hi)`, and a final `|w| >= 2^{hi}` row
+/// is folded into the last bin by passing `hi` large enough.
+pub fn pow2_bin_table(w: &[f32], lo: i32, hi: i32) -> Vec<BinRow> {
+    assert!(lo < hi);
+    let n = w.len().max(1) as f64;
+    let mut counts = vec![0usize; (hi - lo) as usize + 2];
+    for &x in w {
+        let a = x.abs() as f64;
+        let idx = if a < f64::powi(2.0, lo) {
+            0
+        } else if a >= f64::powi(2.0, hi) {
+            counts.len() - 1
+        } else {
+            (a.log2().floor() as i32 - lo + 1) as usize
+        };
+        counts[idx] += 1;
+    }
+    let mut rows = Vec::with_capacity(counts.len());
+    rows.push(BinRow { lo: None, pct: 100.0 * counts[0] as f64 / n });
+    for (i, &c) in counts[1..counts.len() - 1].iter().enumerate() {
+        rows.push(BinRow { lo: Some(lo + i as i32), pct: 100.0 * c as f64 / n });
+    }
+    rows.push(BinRow { lo: Some(hi), pct: 100.0 * counts[counts.len() - 1] as f64 / n });
+    rows
+}
+
+/// Render a Tables 2/3-style comparison: one column per named weight
+/// vector (e.g. "4-bit LBW", …, "32-bit full-precision").
+pub fn render_bin_table(columns: &[(&str, &[f32])], lo: i32, hi: i32) -> String {
+    let tables: Vec<Vec<BinRow>> =
+        columns.iter().map(|(_, w)| pow2_bin_table(w, lo, hi)).collect();
+    let mut out = String::new();
+    write!(out, "{:<24}", "|w| bin").unwrap();
+    for (name, _) in columns {
+        write!(out, " | {:>12}", name).unwrap();
+    }
+    out.push('\n');
+    for r in 0..tables[0].len() {
+        let label = match tables[0][r].lo {
+            None => {
+                let first = tables[0][1].lo.unwrap();
+                format!("|w| < 2^{first}")
+            }
+            Some(lo_e) if r == tables[0].len() - 1 => format!("2^{lo_e} <= |w|"),
+            Some(lo_e) => format!("2^{lo_e} <= |w| < 2^{}", lo_e + 1),
+        };
+        write!(out, "{label:<24}").unwrap();
+        for t in &tables {
+            write!(out, " | {:>11.3}%", t[r].pct).unwrap();
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Plain equi-width histogram (Fig. 2 rendering).
+pub fn histogram(w: &[f32], bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins >= 1);
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in w {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || lo == hi {
+        return (vec![lo as f64; bins + 1], vec![w.len(); 1]);
+    }
+    let width = (hi - lo) as f64 / bins as f64;
+    let edges: Vec<f64> = (0..=bins).map(|i| lo as f64 + width * i as f64).collect();
+    let mut counts = vec![0usize; bins];
+    for &x in w {
+        let mut i = (((x - lo) as f64) / width) as usize;
+        if i >= bins {
+            i = bins - 1;
+        }
+        counts[i] += 1;
+    }
+    (edges, counts)
+}
+
+/// Render an ASCII histogram of the weight distribution.
+pub fn render_histogram(w: &[f32], bins: usize, width: usize) -> String {
+    let (edges, counts) = histogram(w, bins);
+    let max = *counts.iter().max().unwrap_or(&1) as f64;
+    let mut out = String::new();
+    for (i, &c) in counts.iter().enumerate() {
+        let bar = ((c as f64 / max) * width as f64).round() as usize;
+        writeln!(
+            out,
+            "{:>9.4} .. {:>9.4} | {:<w$} {}",
+            edges[i],
+            edges[i + 1],
+            "#".repeat(bar),
+            c,
+            w = width
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Moment summary of a weight vector.
+#[derive(Debug, Clone, Copy)]
+pub struct Moments {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub skewness: f64,
+    /// Excess kurtosis: 0 for a Gaussian. The paper reports values
+    /// "much larger than 0" for trained conv layers (Fig. 2).
+    pub excess_kurtosis: f64,
+}
+
+pub fn moments(w: &[f32]) -> Moments {
+    let n = w.len();
+    assert!(n >= 2, "need at least 2 samples");
+    let nf = n as f64;
+    let mean = w.iter().map(|&x| x as f64).sum::<f64>() / nf;
+    let (mut m2, mut m3, mut m4) = (0.0, 0.0, 0.0);
+    for &x in w {
+        let d = x as f64 - mean;
+        m2 += d * d;
+        m3 += d * d * d;
+        m4 += d * d * d * d;
+    }
+    m2 /= nf;
+    m3 /= nf;
+    m4 /= nf;
+    let std = m2.sqrt();
+    Moments {
+        n,
+        mean,
+        std,
+        skewness: if m2 > 0.0 { m3 / m2.powf(1.5) } else { 0.0 },
+        excess_kurtosis: if m2 > 0.0 { m4 / (m2 * m2) - 3.0 } else { 0.0 },
+    }
+}
+
+/// Jarque–Bera normality test.
+///
+/// `JB = n/6 (S² + K²/4)` is asymptotically χ²(2) under normality, so
+/// the p-value has the closed form `exp(-JB/2)`. The paper's layers
+/// give p < 1e-5 — "strongly non-Gaussian".
+#[derive(Debug, Clone, Copy)]
+pub struct JarqueBera {
+    pub statistic: f64,
+    pub p_value: f64,
+}
+
+pub fn jarque_bera(w: &[f32]) -> JarqueBera {
+    let m = moments(w);
+    let jb = m.n as f64 / 6.0
+        * (m.skewness * m.skewness + m.excess_kurtosis * m.excess_kurtosis / 4.0);
+    JarqueBera { statistic: jb, p_value: (-jb / 2.0).exp() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    fn gaussian(n: usize, seed: u64, sigma: f64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                let mut acc = 0.0f64;
+                for _ in 0..12 {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    acc += (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5;
+                }
+                (acc * sigma) as f32 // Irwin–Hall(12): ~N(0, sigma^2)
+            })
+            .collect()
+    }
+
+    fn laplace(n: usize, seed: u64, b: f64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                let u = (s >> 11) as f64 / (1u64 << 53) as f64 - 0.5;
+                (-b * u.signum() * (1.0 - 2.0 * u.abs()).ln()) as f32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bins_sum_to_100() {
+        let w = gaussian(10_000, 1, 0.02);
+        let rows = pow2_bin_table(&w, -16, -1);
+        let total: f64 = rows.iter().map(|r| r.pct).sum();
+        assert!((total - 100.0).abs() < 1e-6, "{total}");
+    }
+
+    #[test]
+    fn bins_locate_known_values() {
+        // 0.3 in [2^-2, 2^-1); 0.0009765625 = 2^-10 exactly at an edge
+        let w = [0.3f32, 0.0009765625, 0.0];
+        let rows = pow2_bin_table(&w, -12, 0);
+        let pct_of = |lo: i32| rows.iter().find(|r| r.lo == Some(lo)).unwrap().pct;
+        assert!((pct_of(-2) - 33.333).abs() < 0.01);
+        assert!((pct_of(-10) - 33.333).abs() < 0.01);
+        assert!((rows[0].pct - 33.333).abs() < 0.01); // the 0.0
+    }
+
+    #[test]
+    fn gaussian_passes_jb_laplace_fails() {
+        let g = gaussian(20_000, 3, 1.0);
+        let l = laplace(20_000, 4, 1.0);
+        let jb_g = jarque_bera(&g);
+        let jb_l = jarque_bera(&l);
+        assert!(jb_g.p_value > 1e-4, "gaussian wrongly rejected: {jb_g:?}");
+        assert!(jb_l.p_value < 1e-5, "laplace wrongly accepted: {jb_l:?}");
+        // Laplace excess kurtosis is 3
+        assert!(moments(&l).excess_kurtosis > 1.5);
+    }
+
+    #[test]
+    fn moments_of_known_distribution() {
+        let m = moments(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m.mean - 2.5).abs() < 1e-12);
+        assert!((m.std - (1.25f64).sqrt()).abs() < 1e-9);
+        assert!(m.skewness.abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let w = gaussian(5000, 9, 0.1);
+        let (_, counts) = histogram(&w, 40);
+        assert_eq!(counts.iter().sum::<usize>(), 5000);
+    }
+
+    #[test]
+    fn render_table_has_all_columns() {
+        let w1 = gaussian(1000, 1, 0.02);
+        let w2 = gaussian(1000, 2, 0.02);
+        let s = render_bin_table(&[("a", &w1), ("b", &w2)], -8, -2);
+        assert!(s.contains("|w| < 2^-8"));
+        assert!(s.contains("2^-2 <= |w|"));
+        for line in s.lines() {
+            // two column separators -> two " | " occurrences per row
+            assert_eq!(line.matches(" | ").count(), 2, "{line}");
+        }
+    }
+
+    #[test]
+    fn prop_bin_table_complete() {
+        prop_check(200, "bin table complete", |seed| {
+            let lo = -20 + (seed % 15) as i32;
+            let span = 2 + (seed % 16) as i32;
+            let w = gaussian(500, seed, 0.05);
+            let rows = pow2_bin_table(&w, lo, lo + span);
+            let total: f64 = rows.iter().map(|r| r.pct).sum();
+            assert!((total - 100.0).abs() < 1e-6);
+            assert_eq!(rows.len(), span as usize + 2);
+        });
+    }
+}

@@ -1,0 +1,305 @@
+//! The semi-analytical LBW quantization scheme — eq. (3) + eq. (4).
+//!
+//! This is the paper's production path: an `O(N)` elementwise threshold
+//! cascade with a single free parameter µ, followed by the closed-form
+//! optimal power-of-two scale of Theorem 2. It mirrors the Pallas
+//! kernel (`python/compile/kernels/lbw.py`) operation-for-operation:
+//!
+//! * level index `t = Σ_{j=1..n-1} [ |w| < 2^{1-j} µ ]` (exact
+//!   power-of-two comparisons, no transcendentals),
+//! * prune to zero when `|w| < (2^{2-n}/3) µ`,
+//! * magnitude `2^{-t}` built by exact halving alongside the cascade,
+//! * scale `s = ⌊log2(4 Σ 2^{-t}‖W_[k_t]‖₁ / (3 Σ k_t 2^{-2t}))⌋`
+//!   truncated to the first [`SCALE_TERMS`] levels (§2.2: the tails are
+//!   negligible).
+//!
+//! The integration test `integration_runtime.rs` checks this against
+//! the `quantize_b{bits}` HLO artifact produced by the Pallas kernel.
+
+use super::levels_for_bits;
+
+/// Number of leading levels used in the eq. (4) partial sums (§2.2).
+pub const SCALE_TERMS: usize = 4;
+
+/// Result of the LBW projection of one weight vector.
+#[derive(Debug, Clone)]
+pub struct LbwQuant {
+    /// Quantized weights `2^s · Q̃` (same length as the input).
+    pub wq: Vec<f32>,
+    /// Per-element level: `t ∈ [0, n)` means `|q| = 2^{s-t}`; `-1` means
+    /// pruned to zero.
+    pub levels: Vec<i32>,
+    /// The optimal scale power `s̃*` of eq. (4).
+    pub s: i32,
+    /// The threshold parameter µ actually used.
+    pub mu: f32,
+}
+
+impl LbwQuant {
+    /// Fraction of weights pruned to exactly zero (paper: >82% for the
+    /// 4-bit residual-block layer).
+    pub fn sparsity(&self) -> f64 {
+        self.levels.iter().filter(|&&t| t < 0).count() as f64 / self.levels.len().max(1) as f64
+    }
+
+    /// Occupancy `k_t` of each level `t ∈ [0, n)`.
+    pub fn level_counts(&self, bits: u32) -> Vec<usize> {
+        let mut k = vec![0usize; levels_for_bits(bits)];
+        for &t in &self.levels {
+            if t >= 0 {
+                k[t as usize] += 1;
+            }
+        }
+        k
+    }
+}
+
+/// Eq. (3): per-element level assignment + unscaled `Q̃`.
+///
+/// Returns `(q_tilde, levels)`. Exactly the comparison cascade the
+/// Pallas kernel runs, so results are bit-identical.
+pub fn qtilde(w: &[f32], mu: f32, bits: u32) -> (Vec<f32>, Vec<i32>) {
+    let n = levels_for_bits(bits);
+    if mu <= 0.0 {
+        // degenerate threshold (all-zero layer): prune everything
+        return (vec![0.0; w.len()], vec![-1; w.len()]);
+    }
+    let zero_thresh = (f32::powi(2.0, 2 - n as i32) / 3.0) * mu;
+    let mut q = vec![0.0f32; w.len()];
+    let mut t = vec![0i32; w.len()];
+    for (i, &wi) in w.iter().enumerate() {
+        let a = wi.abs();
+        let mut ti = 0i32;
+        let mut mag = 1.0f32;
+        for j in 1..n as i32 {
+            if a < f32::powi(2.0, 1 - j) * mu {
+                ti += 1;
+                mag *= 0.5;
+            }
+        }
+        if a < zero_thresh {
+            t[i] = -1;
+            q[i] = 0.0;
+        } else {
+            t[i] = ti;
+            // signum(0.0) is 0 in jnp but +1 via f32::signum; match jnp.
+            let sign = if wi > 0.0 {
+                1.0
+            } else if wi < 0.0 {
+                -1.0
+            } else {
+                0.0
+            };
+            q[i] = sign * mag;
+        }
+    }
+    (q, t)
+}
+
+/// Eq. (4) / Theorem 2: the optimal scale power for a level assignment.
+///
+/// `s = ⌊log2(4u / 3v)⌋` with `u = Σ_t 2^{-t} ‖W_[k_t]‖₁` and
+/// `v = Σ_t k_t 2^{-2t}`, both truncated to the first
+/// [`SCALE_TERMS`] levels. Returns 0 when every weight was pruned.
+pub fn scale_power(w: &[f32], levels: &[i32], bits: u32) -> i32 {
+    let n = levels_for_bits(bits).min(SCALE_TERMS);
+    let mut num = 0.0f32;
+    let mut den = 0.0f32;
+    for lv in 0..n as i32 {
+        let mut l1 = 0.0f32;
+        let mut k = 0usize;
+        for (i, &t) in levels.iter().enumerate() {
+            if t == lv {
+                l1 += w[i].abs();
+                k += 1;
+            }
+        }
+        num += f32::powi(2.0, -lv) * l1;
+        den += f32::powi(2.0, -2 * lv) * k as f32;
+    }
+    if den > 0.0 && num > 0.0 {
+        (4.0 * num / (3.0 * den)).log2().floor() as i32
+    } else {
+        0
+    }
+}
+
+/// Full LBW projection `W^q = 2^{s̃*} Q̃` for an explicit µ.
+pub fn lbw_quantize(w: &[f32], mu: f32, bits: u32) -> LbwQuant {
+    let (q, levels) = qtilde(w, mu, bits);
+    let s = scale_power(w, &levels, bits);
+    let scale = f32::powi(2.0, s);
+    let wq = q.iter().map(|&qi| scale * qi).collect();
+    LbwQuant { wq, levels, s, mu }
+}
+
+/// Layerwise projection as used in training: `µ = ratio · ‖W‖∞`.
+///
+/// The paper selects `ratio = 3/4` for b ≥ 4 ("a percentage of the
+/// large weights plays a key role in representing the image features").
+pub fn lbw_quantize_layer(w: &[f32], bits: u32, mu_ratio: f32) -> LbwQuant {
+    let winf = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    lbw_quantize(w, mu_ratio * winf, bits)
+}
+
+/// Memory footprint in bits of a quantized layer (b bits/weight) vs
+/// 32-bit floats — the paper's ~5.3× saving for b = 6 (plus sparsity).
+pub fn compression_ratio(bits: u32) -> f64 {
+    32.0 / bits as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    fn randw(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                // xorshift-ish uniform -> approx normal via sum of 4
+                let mut acc = 0.0f32;
+                for _ in 0..4 {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    acc += (s >> 11) as f32 / (1u64 << 53) as f32 - 0.5;
+                }
+                acc * 0.1
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ternary_is_twn_like() {
+        // b=2: values in {0, ±2^s} only.
+        let w = randw(1000, 3);
+        let q = lbw_quantize_layer(&w, 2, 0.75);
+        let scale = f32::powi(2.0, q.s);
+        for (&wq, &t) in q.wq.iter().zip(&q.levels) {
+            if t < 0 {
+                assert_eq!(wq, 0.0);
+            } else {
+                assert_eq!(t, 0);
+                assert_eq!(wq.abs(), scale);
+            }
+        }
+    }
+
+    #[test]
+    fn six_bit_has_many_levels() {
+        let w = randw(20_000, 7);
+        let q = lbw_quantize_layer(&w, 6, 0.75);
+        let k = q.level_counts(6);
+        // a Gaussian-ish vector populates several of the 16 levels
+        assert!(k.iter().filter(|&&c| c > 0).count() >= 5, "{k:?}");
+    }
+
+    #[test]
+    fn scale_is_near_max_weight() {
+        // With mu = 0.75 max|w|, the top level 2^s must be the power of
+        // two bracketing the largest weights.
+        let w = randw(5000, 11);
+        let winf = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let q = lbw_quantize_layer(&w, 6, 0.75);
+        let top = f32::powi(2.0, q.s);
+        assert!(top <= 2.0 * winf && top >= winf / 4.0, "top={top} winf={winf}");
+    }
+
+    #[test]
+    fn empty_and_zero_vectors() {
+        let q = lbw_quantize(&[], 1.0, 4);
+        assert_eq!(q.s, 0);
+        let q = lbw_quantize(&[0.0; 16], 1.0, 4);
+        assert!(q.wq.iter().all(|&x| x == 0.0));
+        assert_eq!(q.sparsity(), 1.0);
+    }
+
+    #[test]
+    fn level_boundaries_exact() {
+        // Elements exactly on the eq. (3) boundaries: 2^{-t} mu belongs
+        // to level t (>= comparisons), and (2^{2-n}/3) mu survives.
+        let mu = 1.0f32;
+        let bits = 4; // n = 4
+        let w = [1.0, 0.5, 0.25, 0.125, 0.25 / 3.0, 0.25 / 3.0 - 1e-6];
+        let (_, t) = qtilde(&w, mu, bits);
+        assert_eq!(t, vec![0, 1, 2, 3, 3, -1]);
+    }
+
+    #[test]
+    fn prop_values_are_zero_or_pow2() {
+        prop_check(400, "values are zero or pow2", |seed| {
+            let bits = 2 + (seed % 5) as u32;
+            let ratio = 0.1 + 1.1 * ((seed / 5) % 100) as f32 / 100.0;
+            let w = randw(512, seed);
+            let winf = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            assert!(winf > 0.0);
+            let q = lbw_quantize(&w, ratio * winf, bits);
+            for (&x, &t) in q.wq.iter().zip(&q.levels) {
+                if t < 0 {
+                    assert_eq!(x, 0.0);
+                } else {
+                    assert!(x != 0.0);
+                    // mantissa of |x| must be exactly 0.5 (a power of two)
+                    let (m, _e) = frexp(x.abs());
+                    assert_eq!(m, 0.5);
+                    // and consistent with s - t
+                    assert_eq!(x.abs(), f32::powi(2.0, q.s - t));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_sparsity_monotone_in_mu() {
+        // Larger mu prunes more weights: sparsity is monotone.
+        prop_check(300, "sparsity monotone in mu", |seed| {
+            let w = randw(512, seed);
+            let winf = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            assert!(winf > 0.0);
+            let s1 = lbw_quantize(&w, 0.3 * winf, 5).sparsity();
+            let s2 = lbw_quantize(&w, 0.9 * winf, 5).sparsity();
+            assert!(s2 >= s1);
+        });
+    }
+
+    #[test]
+    fn prop_scale_optimal_among_neighbours() {
+        // For the fixed level assignment, s of eq. (4) must (weakly)
+        // beat s±1 in squared error restricted to the first
+        // SCALE_TERMS levels it optimizes over.
+        prop_check(300, "scale optimal among neighbours", |seed| {
+            let bits = 2 + (seed % 5) as u32;
+            let w = randw(256, seed);
+            let winf = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            assert!(winf > 0.0);
+            let q = lbw_quantize(&w, 0.75 * winf, bits);
+            let head: Vec<usize> = (0..w.len())
+                .filter(|&i| q.levels[i] >= 0 && (q.levels[i] as usize) < SCALE_TERMS)
+                .collect();
+            if head.is_empty() {
+                return;
+            }
+            let err = |s: i32| -> f64 {
+                head.iter()
+                    .map(|&i| {
+                        let qv = f64::powi(2.0, s - q.levels[i]) * w[i].signum() as f64;
+                        let d = qv - w[i] as f64;
+                        d * d
+                    })
+                    .sum()
+            };
+            let e0 = err(q.s);
+            assert!(e0 <= err(q.s - 1) + 1e-9, "s-1 better: {} vs {}", e0, err(q.s - 1));
+            assert!(e0 <= err(q.s + 1) + 1e-9, "s+1 better: {} vs {}", e0, err(q.s + 1));
+        });
+    }
+
+    fn frexp(x: f32) -> (f32, i32) {
+        if x == 0.0 {
+            return (0.0, 0);
+        }
+        let e = x.abs().log2().floor() as i32 + 1;
+        (x / f32::powi(2.0, e), e)
+    }
+}

@@ -1,0 +1,234 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts and executes
+//! them on the CPU PJRT client (the `xla` crate over xla_extension
+//! 0.5.1). This is the only bridge between the rust coordinator and the
+//! JAX/Pallas-authored compute graphs — Python is never on this path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Artifact manifest written by `python -m compile.aot`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub img: usize,
+    pub grid: usize,
+    pub num_classes: usize,
+    pub anchor: f32,
+    pub train_batch: usize,
+    pub quant_n: usize,
+    pub artifacts: HashMap<String, ManifestEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub file: String,
+    /// `(shape, dtype)` per input, in call order.
+    pub inputs: Vec<(Vec<usize>, String)>,
+}
+
+impl Manifest {
+    fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut artifacts = HashMap::new();
+        for (name, e) in j.get("artifacts")?.as_obj()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|pair| -> Result<(Vec<usize>, String)> {
+                    let p = pair.as_arr()?;
+                    ensure!(p.len() == 2, "bad input signature");
+                    let shape = p[0]
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((shape, p[1].as_str()?.to_string()))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ManifestEntry { file: e.get("file")?.as_str()?.to_string(), inputs },
+            );
+        }
+        Ok(Manifest {
+            img: j.get("img")?.as_usize()?,
+            grid: j.get("grid")?.as_usize()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            anchor: j.get("anchor")?.as_f64()? as f32,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            quant_n: j.get("quant_n")?.as_usize()?,
+            artifacts,
+        })
+    }
+}
+
+/// A compiled executable plus its manifest signature.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub inputs: Vec<(Vec<usize>, String)>,
+}
+
+impl Executable {
+    /// Execute with positional literals; unwraps the jax `return_tuple`
+    /// convention into a flat `Vec<Literal>`.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        ensure!(
+            args.len() == self.inputs.len(),
+            "{}: got {} args, artifact expects {}",
+            self.name,
+            args.len(),
+            self.inputs.len()
+        );
+        let mut out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.name))?;
+        let buf = out
+            .pop()
+            .and_then(|mut replica| replica.pop())
+            .ok_or_else(|| anyhow!("{}: no outputs", self.name))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: readback failed: {e:?}", self.name))?;
+        Ok(lit.to_tuple().map_err(|e| anyhow!("{}: untuple failed: {e:?}", self.name))?)
+    }
+}
+
+/// Runtime: PJRT client + lazily compiled artifact cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (compiles nothing yet) and sanity-
+    /// check the manifest against the crate's problem constants.
+    pub fn open(artifacts_dir: &Path) -> Result<Self> {
+        let man_path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path).with_context(|| {
+            format!("cannot read {} — run `make artifacts` first", man_path.display())
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        ensure!(manifest.img == crate::consts::IMG, "IMG mismatch vs artifacts");
+        ensure!(manifest.grid == crate::consts::GRID, "GRID mismatch vs artifacts");
+        ensure!(
+            manifest.num_classes == crate::consts::NUM_CLASSES,
+            "NUM_CLASSES mismatch vs artifacts"
+        );
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location: `$REPO/artifacts` (or `LBW_ARTIFACTS`).
+    pub fn open_default() -> Result<Self> {
+        Self::open(&default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let built = Arc::new(Executable {
+            name: name.to_string(),
+            exe,
+            inputs: entry.inputs.clone(),
+        });
+        self.cache.lock().unwrap().insert(name.to_string(), built.clone());
+        Ok(built)
+    }
+}
+
+/// `$CARGO_MANIFEST_DIR/artifacts` at build time, overridable with
+/// `LBW_ARTIFACTS`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("LBW_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// f32 literal of a given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    ensure!(shape.iter().product::<usize>() == data.len(), "shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 literal of a given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    ensure!(shape.iter().product::<usize>() == data.len(), "shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract a literal back to `Vec<f32>`.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a literal back to `Vec<i32>`.
+pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit_f32(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn manifest_parses_if_present() {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let rt = Runtime::open(&dir).unwrap();
+            assert!(rt.manifest.artifacts.contains_key("quantize_b6"));
+            assert_eq!(rt.manifest.train_batch, crate::consts::TRAIN_BATCH);
+            let e = &rt.manifest.artifacts["quantize_b6"];
+            assert_eq!(e.inputs[0].0, vec![crate::consts::QUANT_N]);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal NHWC f32 tensor substrate for the rust-native deployment
+//! engine (`crate::nn`). Deliberately tiny: dense row-major storage,
+//! shape bookkeeping, and the few ops the engine needs. The heavy
+//! training math lives in the AOT-compiled XLA artifacts — this exists
+//! so *deployment* (the paper's 4× speedup story) has no Python and no
+//! XLA dependency at all.
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// NHWC accessors (rank-4 only).
+    #[inline]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 4);
+        let (hh, ww, cc) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * hh + h) * ww + w) * cc + c]
+    }
+
+    #[inline]
+    pub fn at4_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 4);
+        let (hh, ww, cc) = (self.shape[1], self.shape[2], self.shape[3]);
+        &mut self.data[((n * hh + h) * ww + w) * cc + c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Elementwise ReLU in place.
+    pub fn relu_(&mut self) -> &mut Self {
+        for x in &mut self.data {
+            if *x < 0.0 {
+                *x = 0.0;
+            }
+        }
+        self
+    }
+
+    /// `self += other` (same shape).
+    pub fn add_(&mut self, other: &Tensor) -> &mut Self {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        self
+    }
+
+    /// Per-channel affine `y = x*scale[c] + bias[c]` over the last axis
+    /// (folded batch-norm).
+    pub fn affine_channels_(&mut self, scale: &[f32], bias: &[f32]) -> &mut Self {
+        let c = *self.shape.last().unwrap();
+        assert_eq!(scale.len(), c);
+        assert_eq!(bias.len(), c);
+        for chunk in self.data.chunks_mut(c) {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = *x * scale[i] + bias[i];
+            }
+        }
+        self
+    }
+
+    /// Softmax over the last axis.
+    pub fn softmax_last(&self) -> Tensor {
+        let c = *self.shape.last().unwrap();
+        let mut out = self.clone();
+        for chunk in out.data.chunks_mut(c) {
+            let max = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for x in chunk.iter_mut() {
+                *x = (*x - max).exp();
+                sum += *x;
+            }
+            for x in chunk.iter_mut() {
+                *x /= sum;
+            }
+        }
+        out
+    }
+
+    /// Strided spatial subsample (NHWC), the `h[:, ::s, ::s, :]`
+    /// identity-skip path of the residual blocks.
+    pub fn subsample(&self, stride: usize) -> Tensor {
+        assert_eq!(self.rank(), 4);
+        let (n, h, w, c) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+        let mut out = Tensor::zeros(&[n, oh, ow, c]);
+        for ni in 0..n {
+            for y in 0..oh {
+                for x in 0..ow {
+                    for ci in 0..c {
+                        *out.at4_mut(ni, y, x, ci) = self.at4(ni, y * stride, x * stride, ci);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut t = Tensor::zeros(&[2, 3, 4, 5]);
+        *t.at4_mut(1, 2, 3, 4) = 7.0;
+        assert_eq!(t.at4(1, 2, 3, 4), 7.0);
+        assert_eq!(t.data.iter().filter(|&&x| x != 0.0).count(), 1);
+        // last element of the buffer
+        assert_eq!(t.data[2 * 3 * 4 * 5 - 1], 7.0);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let s = t.softmax_last();
+        for row in s.data.chunks(3) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+        assert!(s.data[2] > s.data[1] && s.data[1] > s.data[0]);
+    }
+
+    #[test]
+    fn affine_applies_per_channel() {
+        let mut t = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        t.affine_channels_(&[2.0, 3.0], &[0.5, -0.5]);
+        assert_eq!(t.data, vec![2.5, 2.5, 2.5, 2.5]);
+    }
+
+    #[test]
+    fn subsample_takes_even_indices() {
+        let t = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let s = t.subsample(2);
+        assert_eq!(s.shape, vec![1, 1, 1, 1]);
+        assert_eq!(s.data, vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

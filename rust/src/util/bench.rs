@@ -1,0 +1,84 @@
+//! Micro-benchmark harness for the `rust/benches/*` targets (which use
+//! `harness = false`): warmup, adaptive iteration count, and
+//! median/mean reporting — an in-tree stand-in for criterion.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter (median {:>10.3}, min {:>10.3}, n={})",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.median.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly for roughly `budget` (after one warmup call) and
+/// report timing statistics. The closure's return value is
+/// black-boxed.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    std::hint::black_box(f()); // warmup + keeps the result alive
+    let probe_start = Instant::now();
+    std::hint::black_box(f());
+    let probe = probe_start.elapsed().max(Duration::from_nanos(100));
+    let target_iters = (budget.as_secs_f64() / probe.as_secs_f64()).clamp(3.0, 10_000.0) as u64;
+
+    let mut samples = Vec::with_capacity(target_iters as usize);
+    for _ in 0..target_iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters: target_iters,
+        mean: total / target_iters as u32,
+        median: samples[samples.len() / 2],
+        min: samples[0],
+    }
+}
+
+/// Convenience: run + print.
+pub fn run<T>(name: &str, budget_ms: u64, f: impl FnMut() -> T) -> BenchResult {
+    let r = bench(name, Duration::from_millis(budget_ms), f);
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_sane_numbers() {
+        let r = bench("spin", Duration::from_millis(20), || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.iters >= 3);
+        assert!(r.min <= r.median && r.median <= r.mean * 3);
+    }
+}

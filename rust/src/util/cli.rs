@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser: `--flag value` / `--flag=value` pairs
+//! after a subcommand, with typed getters and an automatic usage error.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: subcommand + flag map.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first token is the subcommand, the rest are
+    /// `--key value` or `--key=value` pairs.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut it = argv.iter();
+        let subcommand = it.next().cloned().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, found `{tok}`"))?;
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow!("flag --{key} expects a value"))?;
+                flags.insert(key.to_string(), v.clone());
+            }
+        }
+        Ok(Args { subcommand, flags })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| anyhow!("flag --{key}: cannot parse `{v}`")),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, key: &str, default: &str) -> Vec<String> {
+        self.str_or(key, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
+    /// Error if any flag is not in `known` (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} for `{}` (known: {known:?})", self.subcommand);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_both_styles() {
+        let a = Args::parse(&argv("train --bits 6 --arch=b --steps 100")).unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.parse_or::<u32>("bits", 0).unwrap(), 6);
+        assert_eq!(a.str_or("arch", "a"), "b");
+        assert_eq!(a.parse_or::<u64>("steps", 0).unwrap(), 100);
+        assert_eq!(a.parse_or::<f32>("lr", 0.5).unwrap(), 0.5); // default
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(Args::parse(&argv("x bare")).is_err());
+        assert!(Args::parse(&argv("x --dangling")).is_err());
+        let a = Args::parse(&argv("x --bits six")).unwrap();
+        assert!(a.parse_or::<u32>("bits", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = Args::parse(&argv("train --bitz 6")).unwrap();
+        assert!(a.check_known(&["bits"]).is_err());
+        assert!(a.check_known(&["bitz"]).is_ok());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&argv("t --bits 4,5,6")).unwrap();
+        assert_eq!(a.list_or("bits", ""), vec!["4", "5", "6"]);
+        assert_eq!(a.list_or("archs", "a,b"), vec!["a", "b"]);
+    }
+}

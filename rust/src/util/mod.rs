@@ -1,0 +1,39 @@
+//! In-tree substrates replacing external crates (the build is fully
+//! offline): a JSON value/parser/serializer, a TOML subset reader, a
+//! CLI argument parser, a micro-benchmark harness, and a seeded
+//! property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod toml;
+
+/// Seeded property-test driver: runs `f` over `cases` deterministic
+/// seeds and panics with the failing seed on the first failure.
+pub fn prop_check(cases: u64, name: &str, mut f: impl FnMut(u64)) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property `{name}` failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn prop_check_passes() {
+        super::prop_check(10, "trivial", |seed| assert!(seed < 10));
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed 5")]
+    fn prop_check_reports_seed() {
+        super::prop_check(10, "fails-at-5", |seed| assert!(seed != 5, "boom"));
+    }
+}

@@ -1,0 +1,186 @@
+//! Minimal TOML subset reader: `[section]` headers, `key = value`
+//! pairs with string / integer / float / bool / flat-array values, and
+//! `#` comments — the subset the config system uses.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f32(&self) -> Result<f32> {
+        match self {
+            TomlValue::Int(i) => Ok(*i as f32),
+            TomlValue::Float(f) => Ok(*f as f32),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i as f64),
+            TomlValue::Float(f) => Ok(*f),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            _ => bail!("not a non-negative integer: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_u32(&self) -> Result<u32> {
+        Ok(self.as_u64()? as u32)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_f64_arr(&self) -> Result<Vec<f64>> {
+        match self {
+            TomlValue::Arr(a) => a.iter().map(|v| v.as_f64()).collect(),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+}
+
+/// `section.key -> value` map.
+pub type TomlDoc = BTreeMap<String, TomlValue>;
+
+/// Parse a TOML-subset document into a flat `section.key` map (keys in
+/// the preamble have no section prefix).
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: bad section header", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let full_key = if section.is_empty() {
+            key.trim().to_string()
+        } else {
+            format!("{section}.{}", key.trim())
+        };
+        let v = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        doc.insert(full_key, v);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no # inside strings in our config subset
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_config_shape() {
+        let doc = parse(
+            r#"
+            # comment
+            [model]
+            arch = "b"      # trailing comment
+            [train]
+            steps = 400
+            lr = 0.05
+            lr_drops = [0.6, 0.85]
+            [quant]
+            bits = 6
+            enabled = true
+        "#,
+        )
+        .unwrap();
+        assert_eq!(doc["model.arch"].as_str().unwrap(), "b");
+        assert_eq!(doc["train.steps"].as_u64().unwrap(), 400);
+        assert!((doc["train.lr"].as_f32().unwrap() - 0.05).abs() < 1e-9);
+        assert_eq!(doc["train.lr_drops"].as_f64_arr().unwrap(), vec![0.6, 0.85]);
+        assert_eq!(doc["quant.enabled"], TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("keyvalue").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn keys_without_section() {
+        let doc = parse("x = 1\n[s]\ny = 2\n").unwrap();
+        assert_eq!(doc["x"].as_u64().unwrap(), 1);
+        assert_eq!(doc["s.y"].as_u64().unwrap(), 2);
+    }
+}

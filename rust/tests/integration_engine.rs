@@ -1,0 +1,110 @@
+//! Deployment-engine ↔ artifact cross-validation: the rust-native
+//! float engine must reproduce the `infer_*_b32` artifact numerics, and
+//! the shift-add engine must track the `infer_*_b6` artifact (same LBW
+//! projection, fixed-point arithmetic) closely enough to keep
+//! detections identical on typical scenes.
+
+use lbw_net::consts::{GRID, IMG, NUM_CLS};
+use lbw_net::coordinator::init::{init_params, init_state};
+use lbw_net::coordinator::params::{Checkpoint, ParamSpec};
+use lbw_net::data::{generate_scene, SceneConfig};
+use lbw_net::nn::{DetectorModel, EngineKind};
+use lbw_net::runtime::{default_artifacts_dir, lit_f32, to_f32, Runtime};
+
+fn setup() -> Option<(Runtime, ParamSpec, Checkpoint)> {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    let rt = Runtime::open_default().unwrap();
+    let spec = ParamSpec::load_from_dir(&default_artifacts_dir(), "a").unwrap();
+    let params = init_params(&spec, 33);
+    let state = init_state(&spec);
+    let ck = Checkpoint { arch: "a".into(), bits: 32, step: 0, params, state };
+    Some((rt, spec, ck))
+}
+
+fn run_artifact(rt: &Runtime, name: &str, ck: &Checkpoint, image: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let exe = rt.load(name).unwrap();
+    let out = exe
+        .run(&[
+            lit_f32(&ck.params, &[ck.params.len()]).unwrap(),
+            lit_f32(&ck.state, &[ck.state.len()]).unwrap(),
+            lit_f32(image, &[1, IMG, IMG, 3]).unwrap(),
+        ])
+        .unwrap();
+    (to_f32(&out[0]).unwrap(), to_f32(&out[1]).unwrap())
+}
+
+#[test]
+fn float_engine_matches_fp32_artifact() {
+    let Some((rt, spec, ck)) = setup() else { return };
+    let mut engine = DetectorModel::build(&spec, &ck, EngineKind::Float).unwrap();
+    for i in 0..3u64 {
+        let s = generate_scene(555, i, &SceneConfig::default());
+        let (cls_a, reg_a) = run_artifact(&rt, "infer_a_b32_bs1", &ck, &s.image);
+        let (cls_e, reg_e) = engine.forward(&s.image, 1);
+        assert_eq!(cls_e.len(), GRID * GRID * NUM_CLS);
+        let dc = cls_a.iter().zip(&cls_e).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        let dr = reg_a.iter().zip(&reg_e).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        // same math, different summation order: f32 tolerance
+        assert!(dc < 2e-3, "scene {i}: cls diff {dc}");
+        assert!(dr < 2e-2, "scene {i}: reg diff {dr}");
+    }
+}
+
+#[test]
+fn shift_engine_tracks_b6_artifact() {
+    let Some((rt, spec, ck)) = setup() else { return };
+    let mut engine = DetectorModel::build(&spec, &ck, EngineKind::Shift { bits: 6 }).unwrap();
+    for i in 0..3u64 {
+        let s = generate_scene(556, i, &SceneConfig::default());
+        let (cls_a, _) = run_artifact(&rt, "infer_a_b6_bs1", &ck, &s.image);
+        let (cls_e, _) = engine.forward(&s.image, 1);
+        let dc = cls_a.iter().zip(&cls_e).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        // fixed-point (16.16) accumulation error through ~12 layers
+        assert!(dc < 5e-2, "scene {i}: cls diff {dc}");
+    }
+}
+
+#[test]
+fn shift_engine_quantization_matches_artifact_projection() {
+    // The per-layer (levels, scale) the shift engine derives must equal
+    // what the quantize artifact computes for the same layer weights.
+    let Some((rt, spec, ck)) = setup() else { return };
+    let exe = rt.load("quantize_b6").unwrap();
+    let n = lbw_net::consts::QUANT_N;
+    for e in spec.conv_entries().take(4) {
+        let w = &ck.params[e.offset..e.offset + e.size];
+        let mut padded = w.to_vec();
+        if padded.len() > n {
+            padded.truncate(n);
+        } else {
+            padded.resize(n, 0.0);
+        }
+        let mu = 0.75 * padded.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let out = exe
+            .run(&[lit_f32(&padded, &[n]).unwrap(), lbw_net::runtime::lit_scalar(mu)])
+            .unwrap();
+        let wq_art = to_f32(&out[0]).unwrap();
+        let q = lbw_net::quant::threshold::lbw_quantize(&padded, mu, 6);
+        assert_eq!(q.wq, wq_art, "layer {}", e.name);
+    }
+}
+
+#[test]
+fn engines_agree_on_detections_after_decode() {
+    use lbw_net::detection::{decode_grid, nms};
+    let Some((rt, spec, ck)) = setup() else { return };
+    let mut float_engine = DetectorModel::build(&spec, &ck, EngineKind::Float).unwrap();
+    let s = generate_scene(557, 0, &SceneConfig::default());
+    let (cls_a, reg_a) = run_artifact(&rt, "infer_a_b32_bs1", &ck, &s.image);
+    let (cls_e, reg_e) = float_engine.forward(&s.image, 1);
+    let d_a = nms(decode_grid(&cls_a, &reg_a, 0.25), 0.45);
+    let d_e = nms(decode_grid(&cls_e, &reg_e, 0.25), 0.45);
+    assert_eq!(d_a.len(), d_e.len());
+    for (a, b) in d_a.iter().zip(&d_e) {
+        assert_eq!(a.class, b.class);
+        assert!(a.bbox.iou(&b.bbox) > 0.95);
+    }
+}

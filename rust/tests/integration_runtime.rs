@@ -1,0 +1,118 @@
+//! Runtime ↔ Pallas parity: the rust eq.(3)/(4) implementation must
+//! match the AOT-compiled `quantize_b{bits}` artifacts (which run the
+//! Pallas kernel through interpret-mode lowering) element-for-element.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise, but CI/`make
+//! test` always builds artifacts first).
+
+use lbw_net::consts::QUANT_N;
+use lbw_net::data::Rng;
+use lbw_net::quant::threshold;
+use lbw_net::runtime::{default_artifacts_dir, lit_f32, lit_scalar, to_f32, to_i32, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Runtime::open_default().expect("runtime"))
+}
+
+fn rand_weights(seed: u64, scale: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..QUANT_N).map(|_| rng.normal() * scale).collect()
+}
+
+#[test]
+fn quantize_artifacts_match_rust_quantizer() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for bits in [2u32, 3, 4, 5, 6] {
+        let exe = rt.load(&format!("quantize_b{bits}")).expect("load artifact");
+        for seed in [1u64, 2, 3] {
+            let w = rand_weights(seed * 97 + bits as u64, 0.05);
+            let mu = 0.75 * w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let out = exe
+                .run(&[lit_f32(&w, &[QUANT_N]).unwrap(), lit_scalar(mu)])
+                .expect("run quantize");
+            assert_eq!(out.len(), 3, "quantize returns (wq, levels, s)");
+            let wq_pallas = to_f32(&out[0]).unwrap();
+            let lv_pallas = to_i32(&out[1]).unwrap();
+            let s_pallas = to_f32(&out[2]).unwrap()[0];
+
+            let q = threshold::lbw_quantize(&w, mu, bits);
+            assert_eq!(q.levels, lv_pallas, "bits {bits} seed {seed}: level maps differ");
+            assert_eq!(
+                q.s as f32, s_pallas,
+                "bits {bits} seed {seed}: scale powers differ"
+            );
+            for (i, (&a, &b)) in q.wq.iter().zip(&wq_pallas).enumerate() {
+                assert_eq!(a, b, "bits {bits} seed {seed} elem {i}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantize_artifact_sparsity_ordering() {
+    // Lower bit-width => more zeros (the Tables 2-3 headline structure),
+    // measured through the artifacts themselves.
+    let Some(rt) = runtime_or_skip() else { return };
+    let w = rand_weights(42, 0.05);
+    let mu = 0.75 * w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let mut prev = -1.0f64;
+    for bits in [6u32, 5, 4, 2] {
+        let exe = rt.load(&format!("quantize_b{bits}")).unwrap();
+        let out = exe.run(&[lit_f32(&w, &[QUANT_N]).unwrap(), lit_scalar(mu)]).unwrap();
+        let lv = to_i32(&out[1]).unwrap();
+        let sparsity = lv.iter().filter(|&&t| t < 0).count() as f64 / lv.len() as f64;
+        assert!(
+            sparsity >= prev,
+            "bits {bits}: sparsity {sparsity} < previous {prev}"
+        );
+        prev = sparsity;
+    }
+}
+
+#[test]
+fn infer_artifact_shapes_and_softmax() {
+    use lbw_net::consts::{GRID, IMG, NUM_CLS};
+    use lbw_net::coordinator::init::{init_params, init_state};
+    use lbw_net::coordinator::params::ParamSpec;
+
+    let Some(rt) = runtime_or_skip() else { return };
+    let spec = ParamSpec::load_from_dir(&default_artifacts_dir(), "a").unwrap();
+    let params = init_params(&spec, 5);
+    let state = init_state(&spec);
+    let exe = rt.load("infer_a_b6_bs1").unwrap();
+    let mut rng = Rng::new(9);
+    let img: Vec<f32> = (0..IMG * IMG * 3).map(|_| rng.normal() * 0.5).collect();
+    let out = exe
+        .run(&[
+            lit_f32(&params, &[params.len()]).unwrap(),
+            lit_f32(&state, &[state.len()]).unwrap(),
+            lit_f32(&img, &[1, IMG, IMG, 3]).unwrap(),
+        ])
+        .unwrap();
+    let cls = to_f32(&out[0]).unwrap();
+    let reg = to_f32(&out[1]).unwrap();
+    assert_eq!(cls.len(), GRID * GRID * NUM_CLS);
+    assert_eq!(reg.len(), GRID * GRID * 4);
+    for row in cls.chunks(NUM_CLS) {
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "softmax row sums to {s}");
+    }
+}
+
+#[test]
+fn manifest_covers_expected_artifact_grid() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // arch a trains at 2/4/5/6/32; arch b at 4/5/6/32; infer at bs 1+8
+    for bits in [2, 4, 5, 6, 32] {
+        assert!(rt.manifest.artifacts.contains_key(&format!("train_step_a_b{bits}")));
+        assert!(rt.manifest.artifacts.contains_key(&format!("infer_a_b{bits}_bs1")));
+        assert!(rt.manifest.artifacts.contains_key(&format!("infer_a_b{bits}_bs8")));
+    }
+    for bits in [4, 5, 6, 32] {
+        assert!(rt.manifest.artifacts.contains_key(&format!("train_step_b_b{bits}")));
+    }
+}

@@ -1,0 +1,91 @@
+//! End-to-end training integration: a short projected-SGD run through
+//! the real `train_step` artifact must reduce the loss, produce finite
+//! state, evaluate, and round-trip through a checkpoint.
+
+use lbw_net::coordinator::params::Checkpoint;
+use lbw_net::coordinator::trainer::{TrainConfig, Trainer};
+use lbw_net::data::SceneConfig;
+use lbw_net::runtime::{default_artifacts_dir, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Runtime::open_default().expect("runtime"))
+}
+
+fn short_cfg(bits: u32, steps: u64) -> TrainConfig {
+    TrainConfig {
+        arch: "a".into(),
+        bits,
+        steps,
+        lr: 0.03,
+        eval_scenes: 32,
+        log_every: 0,
+        train_scenes: 64,
+        scene_cfg: SceneConfig::default(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn short_quantized_training_reduces_loss() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let trainer = Trainer::new(&rt, TrainConfig { log_every: 10, ..short_cfg(6, 40) }).unwrap();
+    let out = trainer.train().unwrap();
+    assert!(out.history.len() >= 2);
+    let first = out.history.first().unwrap().loss;
+    let last = out.history.last().unwrap().loss;
+    assert!(
+        last < first,
+        "loss did not decrease: {first} -> {last}"
+    );
+    assert!(out.final_map.is_finite() && (0.0..=1.0).contains(&out.final_map));
+    // quantized checkpoints keep FULL-PRECISION shadow weights
+    let ck = &out.checkpoint;
+    assert_eq!(ck.bits, 6);
+    assert!(ck.params.iter().all(|x| x.is_finite()));
+    assert!(ck.state.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn float_and_quantized_runs_share_protocol() {
+    // Same seed => same data stream; both must train without NaNs.
+    let Some(rt) = runtime_or_skip() else { return };
+    for bits in [32u32, 4] {
+        let trainer = Trainer::new(&rt, short_cfg(bits, 12)).unwrap();
+        let out = trainer.train().unwrap();
+        assert!(out.final_map.is_finite(), "bits {bits}");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_evaluation() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let trainer = Trainer::new(&rt, short_cfg(6, 10)).unwrap();
+    let out = trainer.train().unwrap();
+    let dir = std::env::temp_dir().join("lbw_int_train");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.lbw");
+    out.checkpoint.save(&path).unwrap();
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.params, out.checkpoint.params);
+    let m1 = trainer.evaluate(&out.checkpoint.params, &out.checkpoint.state).unwrap();
+    let m2 = trainer.evaluate(&ck.params, &ck.state).unwrap();
+    assert_eq!(m1, m2, "evaluation must be deterministic after reload");
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let result = Trainer::new(
+        &rt,
+        TrainConfig { bits: 3, ..short_cfg(3, 1) }, // no train artifact at b=3
+    );
+    let err = match result {
+        Ok(_) => panic!("b=3 trainer unexpectedly constructed"),
+        Err(e) => e,
+    };
+    assert!(format!("{err}").contains("not in manifest"), "{err}");
+}
