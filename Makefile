@@ -1,0 +1,33 @@
+# LBW-Net build entry points.
+#
+#   make build      release build (lib + repro binary)
+#   make test       tier-1 verify: full hermetic test suite
+#   make artifacts  AOT-lower the JAX/Pallas graphs to HLO text
+#                   (needs the python env; optional — everything in
+#                   `make test` passes without artifacts)
+#   make bench      run every in-tree benchmark binary
+#   make lint       rustfmt + clippy, as CI runs them
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test artifacts bench lint clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../artifacts
+
+bench: build
+	$(CARGO) bench
+
+lint:
+	$(CARGO) fmt --check
+	$(CARGO) clippy --all-targets -- -D warnings
+
+clean:
+	$(CARGO) clean

@@ -1,0 +1,169 @@
+//! Serving load generator: sweep shard count × batch window over
+//! SynthVOC scenes and record the throughput/latency trajectory.
+//!
+//! Fully hermetic — the sweep drives the pure-Rust engines behind the
+//! sharded server on a synthetic He-initialized detector, so it runs
+//! on a clean checkout (no Python, no artifacts). Emits
+//! `BENCH_serve.json`: one row per (engine, shards, batch window)
+//! cell with wall time, img/s, latency percentiles, mean batch
+//! occupancy, and the per-shard request counts.
+//!
+//! Run with: `cargo run --release --example bench_serve`
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use lbw_net::coordinator::server::{DetectServer, ServerConfig};
+use lbw_net::data::{generate_scene, SceneConfig};
+use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
+use lbw_net::nn::EngineKind;
+use lbw_net::util::json::Json;
+
+const REQUESTS: usize = 192;
+const CONCURRENCY: usize = 8;
+
+struct Cell {
+    engine: String,
+    shards: usize,
+    window_ms: u64,
+    wall_s: f64,
+    imgs_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+    shard_counts: Vec<usize>,
+}
+
+fn drive(server: &DetectServer, scenes: &[Vec<f32>]) -> Result<Duration> {
+    let handle = server.handle();
+    let t0 = Instant::now();
+    let per = REQUESTS / CONCURRENCY;
+    let mut clients = Vec::new();
+    for c in 0..CONCURRENCY {
+        let h = handle.clone();
+        let imgs: Vec<Vec<f32>> =
+            (0..per).map(|i| scenes[(c * per + i) % scenes.len()].clone()).collect();
+        clients.push(std::thread::spawn(move || -> Result<()> {
+            for img in imgs {
+                h.detect(img)?;
+            }
+            Ok(())
+        }));
+    }
+    for c in clients {
+        c.join().expect("client thread")?;
+    }
+    Ok(t0.elapsed())
+}
+
+fn main() -> Result<()> {
+    let spec = synthetic_spec(SynthConfig::default());
+    let ckpt = synthetic_checkpoint(&spec, 2027, 6);
+    let scene_cfg = SceneConfig::default();
+    let scenes: Vec<Vec<f32>> =
+        (0..32u64).map(|i| generate_scene(4242, i, &scene_cfg).image).collect();
+
+    println!(
+        "=== bench_serve: {REQUESTS} requests, {CONCURRENCY} clients, synthetic detector ==="
+    );
+    println!(
+        "{:<8} {:<7} {:<10} {:>9} {:>9} {:>9} {:>9} {:>11}",
+        "engine", "shards", "window", "img/s", "p50 ms", "p95 ms", "p99 ms", "mean batch"
+    );
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for (engine_name, engine) in
+        [("float", EngineKind::Float), ("shift6", EngineKind::Shift { bits: 6 })]
+    {
+        for &shards in &[1usize, 2, 4] {
+            for &window_ms in &[0u64, 2] {
+                let cfg = ServerConfig {
+                    shards,
+                    max_batch: 8,
+                    batch_window: Duration::from_millis(window_ms),
+                    queue_depth: 256,
+                    ..Default::default()
+                };
+                let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
+                let wall = drive(&server, &scenes)?;
+                let agg = server.handle().latency();
+                let shard_counts: Vec<usize> =
+                    server.shard_latencies().iter().map(|s| s.count()).collect();
+                let cell = Cell {
+                    engine: engine_name.to_string(),
+                    shards,
+                    window_ms,
+                    wall_s: wall.as_secs_f64(),
+                    imgs_per_s: agg.throughput(wall),
+                    p50_ms: agg.percentile_ms(50.0),
+                    p95_ms: agg.percentile_ms(95.0),
+                    p99_ms: agg.percentile_ms(99.0),
+                    mean_batch: agg.mean_batch(),
+                    shard_counts,
+                };
+                println!(
+                    "{:<8} {:<7} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}",
+                    cell.engine,
+                    cell.shards,
+                    format!("{window_ms}ms"),
+                    cell.imgs_per_s,
+                    cell.p50_ms,
+                    cell.p95_ms,
+                    cell.p99_ms,
+                    cell.mean_batch
+                );
+                server.shutdown();
+                cells.push(cell);
+            }
+        }
+    }
+
+    // scaling summary: shards=4 vs shards=1 at the same window/engine
+    for engine in ["float", "shift6"] {
+        let rate = |shards: usize| {
+            cells
+                .iter()
+                .find(|c| c.engine == engine && c.shards == shards && c.window_ms == 2)
+                .map(|c| c.imgs_per_s)
+                .unwrap_or(0.0)
+        };
+        let (r1, r4) = (rate(1), rate(4));
+        if r1 > 0.0 {
+            println!("{engine}: 4-shard speedup over 1 shard = {:.2}x", r4 / r1);
+        }
+    }
+
+    let rows = Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("engine", Json::str(c.engine.as_str())),
+                    ("shards", Json::num(c.shards as f64)),
+                    ("batch_window_ms", Json::num(c.window_ms as f64)),
+                    ("requests", Json::num(REQUESTS as f64)),
+                    ("concurrency", Json::num(CONCURRENCY as f64)),
+                    ("wall_s", Json::num(c.wall_s)),
+                    ("imgs_per_s", Json::num(c.imgs_per_s)),
+                    ("p50_ms", Json::num(c.p50_ms)),
+                    ("p95_ms", Json::num(c.p95_ms)),
+                    ("p99_ms", Json::num(c.p99_ms)),
+                    ("mean_batch", Json::num(c.mean_batch)),
+                    (
+                        "shard_counts",
+                        Json::Arr(c.shard_counts.iter().map(|&n| Json::num(n as f64)).collect()),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_shard_sweep")),
+        ("detector", Json::str("synthetic width-8, 3 stages, b=6 shift + f32 engines")),
+        ("rows", rows),
+    ]);
+    std::fs::write("BENCH_serve.json", doc.to_string())?;
+    println!("\nwrote BENCH_serve.json ({} cells)", cells.len());
+    Ok(())
+}

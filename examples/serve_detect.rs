@@ -1,45 +1,52 @@
-//! Serving demo: the batched detection server under concurrent load,
-//! with the Fig.-1-style qualitative comparison between the float model
-//! and the 6-bit LBW model on the same scenes.
+//! Serving demo: the sharded batched detection server under concurrent
+//! load, plus a Fig.-1-style qualitative comparison between the float
+//! engine and the 6-bit LBW shift-add engine on the same scenes.
 //!
 //! Run with: `cargo run --release --example serve_detect`
-//! (expects a checkpoint from `examples/train_detect` or `repro train`;
-//! falls back to a fresh short training run if none exists.)
+//!
+//! Hermetic by default: on a clean checkout (no Python artifacts) it
+//! serves a synthetic He-initialized detector through the pure-Rust
+//! engines. When AOT artifacts and a trained checkpoint
+//! (`train_detect_b6.lbw`) exist, it uses those instead — same server,
+//! same code path, better detections.
 
 use std::path::Path;
 
 use anyhow::Result;
-use lbw_net::coordinator::params::Checkpoint;
+use lbw_net::coordinator::params::{Checkpoint, ParamSpec};
 use lbw_net::coordinator::server::{DetectServer, ServerConfig};
-use lbw_net::coordinator::trainer::{TrainConfig, Trainer};
 use lbw_net::data::{generate_scene, SceneConfig, ShapeClass};
-use lbw_net::runtime::Runtime;
+use lbw_net::nn::synth::load_or_synthetic;
+use lbw_net::nn::{DetectorModel, EngineKind};
+use lbw_net::runtime::default_artifacts_dir;
 
-fn get_checkpoint() -> Result<Checkpoint> {
-    let path = Path::new("train_detect_b6.lbw");
-    if path.exists() {
-        println!("using checkpoint {}", path.display());
-        return Checkpoint::load(path);
+/// Trained checkpoint + its artifact spec when present, else the
+/// synthetic hermetic pair (one shared policy: `synth::load_or_synthetic`).
+fn get_model() -> Result<(ParamSpec, Checkpoint)> {
+    let ckpt_path = Path::new("train_detect_b6.lbw");
+    let trained =
+        ckpt_path.exists() && default_artifacts_dir().join("param_spec_a.json").exists();
+    if trained {
+        println!("using trained checkpoint {}", ckpt_path.display());
+    } else {
+        println!("no trained checkpoint/artifacts: using a synthetic He-initialized detector");
+        println!(
+            "(train one with `cargo run --release --example train_detect` after `make artifacts`)"
+        );
     }
-    println!("no checkpoint found; training 120 quick steps first...");
-    let rt = Runtime::open_default()?;
-    let trainer = Trainer::new(
-        &rt,
-        TrainConfig { bits: 6, steps: 120, train_scenes: 512, eval_scenes: 32, log_every: 40, ..Default::default() },
-    )?;
-    Ok(trainer.train()?.checkpoint)
+    load_or_synthetic(trained.then_some(ckpt_path), 6, 99)
 }
 
 fn main() -> Result<()> {
-    let ck = get_checkpoint()?;
+    let (spec, ck) = get_model()?;
 
-    // --- batched serving under concurrent load --------------------------
-    let server = DetectServer::start(
-        &ck.arch,
-        ck.bits,
-        ck.params.clone(),
-        ck.state.clone(),
-        ServerConfig::default(),
+    // --- sharded serving under concurrent load --------------------------
+    let shards = 2;
+    let server = DetectServer::start_engine(
+        &spec,
+        &ck,
+        EngineKind::Shift { bits: ck.bits.clamp(2, 6) },
+        ServerConfig { shards, ..Default::default() },
     )?;
     let handle = server.handle();
     let requests = 96usize;
@@ -61,21 +68,20 @@ fn main() -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {requests} requests with {concurrency} concurrent clients in {wall:.2}s \
-         -> {:.1} img/s",
+        "served {requests} requests with {concurrency} concurrent clients on {shards} shards \
+         in {wall:.2}s -> {:.1} img/s",
         requests as f64 / wall
     );
     println!("latency: {}", handle.latency_summary());
     drop(handle);
     server.shutdown();
 
-    // --- Fig. 1 analogue: float vs 6-bit on the same scenes -------------
-    println!("\n=== Fig. 1 analogue: 32-bit vs 6-bit detections ===");
-    let rt = Runtime::open_default()?;
-    let infer32 = rt.load("infer_a_b32_bs1")?;
-    let infer6 = rt.load("infer_a_b6_bs1")?;
+    // --- Fig. 1 analogue: float engine vs 6-bit shift engine ------------
+    println!("\n=== Fig. 1 analogue: f32 engine vs 6-bit shift-add engine ===");
+    let mut float_engine = DetectorModel::build(&spec, &ck, EngineKind::Float)?;
+    let mut shift_engine =
+        DetectorModel::build(&spec, &ck, EngineKind::Shift { bits: ck.bits.clamp(2, 6) })?;
     use lbw_net::detection::{decode_grid, nms};
-    use lbw_net::runtime::{lit_f32, to_f32};
     for i in 0..3u64 {
         // scene 2 is "crowded": many objects, the paper's hard case
         let cfg = if i == 2 {
@@ -85,13 +91,11 @@ fn main() -> Result<()> {
         };
         let s = generate_scene(2024, i, &cfg);
         println!("scene {i}: {} ground-truth objects", s.objects.len());
-        for (name, exe) in [("32-bit", &infer32), (" 6-bit", &infer6)] {
-            let out = exe.run(&[
-                lit_f32(&ck.params, &[ck.params.len()])?,
-                lit_f32(&ck.state, &[ck.state.len()])?,
-                lit_f32(&s.image, &[1, 64, 64, 3])?,
-            ])?;
-            let dets = nms(decode_grid(&to_f32(&out[0])?, &to_f32(&out[1])?, 0.35), 0.45);
+        for (name, engine) in
+            [("  f32", &mut float_engine), ("shift", &mut shift_engine)]
+        {
+            let (cp, rg) = engine.forward(&s.image, 1);
+            let dets = nms(decode_grid(&cp, &rg, 0.35), 0.45);
             let matched = s
                 .objects
                 .iter()
@@ -104,5 +108,12 @@ fn main() -> Result<()> {
             println!();
         }
     }
+    println!(
+        "\nshift engine: sparsity {:.1}%, weight storage {:.1} KiB (f32: {:.1} KiB, {:.1}x smaller)",
+        shift_engine.mean_sparsity * 100.0,
+        shift_engine.weight_bits as f64 / 8192.0,
+        float_engine.weight_bits as f64 / 8192.0,
+        float_engine.weight_bits as f64 / shift_engine.weight_bits as f64
+    );
     Ok(())
 }

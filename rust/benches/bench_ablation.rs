@@ -19,7 +19,14 @@ fn main() {
         println!("bench_ablation: artifacts not built, skipping");
         return;
     }
-    let rt = Runtime::open_default().unwrap();
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) if e.to_string().contains("xla stub") => {
+            println!("bench_ablation: PJRT unavailable (offline xla stub), skipping");
+            return;
+        }
+        Err(e) => panic!("runtime: {e}"),
+    };
     let steps = 120u64;
     let base = TrainConfig {
         arch: "a".into(),

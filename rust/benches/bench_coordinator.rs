@@ -55,9 +55,20 @@ fn main() {
     });
 
     // batched server overhead vs raw executable
-    if default_artifacts_dir().join("manifest.json").exists() {
+    let rt = if default_artifacts_dir().join("manifest.json").exists() {
+        match Runtime::open_default() {
+            Ok(rt) => Some(rt),
+            Err(e) if e.to_string().contains("xla stub") => {
+                println!("(artifacts present but PJRT unavailable — offline xla stub: skipping server bench)");
+                None
+            }
+            Err(e) => panic!("runtime: {e}"),
+        }
+    } else {
+        None
+    };
+    if let Some(rt) = rt {
         println!("\n=== serving: raw artifact vs batched server ===");
-        let rt = Runtime::open_default().unwrap();
         let spec =
             lbw_net::coordinator::params::ParamSpec::load_from_dir(&default_artifacts_dir(), "a")
                 .unwrap();
@@ -94,7 +105,7 @@ fn main() {
         );
         drop(handle);
         server.shutdown();
-    } else {
+    } else if !default_artifacts_dir().join("manifest.json").exists() {
         println!("(artifacts not built: skipping server bench)");
     }
 }

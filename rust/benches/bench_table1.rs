@@ -12,7 +12,14 @@ fn main() {
         println!("bench_table1: artifacts not built, skipping");
         return;
     }
-    let rt = Runtime::open_default().unwrap();
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) if e.to_string().contains("xla stub") => {
+            println!("bench_table1: PJRT unavailable (offline xla stub), skipping");
+            return;
+        }
+        Err(e) => panic!("runtime: {e}"),
+    };
     let steps = 50u64;
     println!("=== bench_table1: Table 1 smoke (µResNet-A, {steps} steps) ===");
     println!("{:<6} {:<10} {:<14} {:<12}", "bits", "mAP", "ms/step", "loss end");

@@ -3,9 +3,11 @@
 //! Defaults reproduce the paper's experiments; CLI flags override.
 
 use std::path::Path;
+use std::time::Duration;
 
 use anyhow::{ensure, Result};
 
+use crate::coordinator::server::ServerConfig;
 use crate::coordinator::trainer::TrainConfig;
 use crate::data::SceneConfig;
 use crate::util::toml::{parse as toml_parse, TomlDoc};
@@ -16,6 +18,7 @@ pub struct Config {
     pub train: TrainSection,
     pub quant: QuantSection,
     pub data: DataSection,
+    pub serve: ServeSection,
 }
 
 #[derive(Debug, Clone)]
@@ -54,6 +57,35 @@ pub struct DataSection {
     pub noise: f32,
 }
 
+/// Deployment-server knobs (the sharded serving engine).
+#[derive(Debug, Clone)]
+pub struct ServeSection {
+    /// Worker shards, each owning its own engine instance.
+    pub shards: usize,
+    /// Serving engine: "artifact" (PJRT fast path), "float", or
+    /// "shift" (the hermetic pure-Rust engines).
+    pub engine: String,
+    pub max_batch: usize,
+    pub batch_window_ms: u64,
+    pub queue_depth: usize,
+    /// Backpressure bound: how long `detect` may wait for queue space.
+    pub submit_timeout_ms: u64,
+}
+
+impl Default for ServeSection {
+    fn default() -> Self {
+        let s = ServerConfig::default();
+        ServeSection {
+            shards: s.shards,
+            engine: "shift".into(),
+            max_batch: s.max_batch,
+            batch_window_ms: s.batch_window.as_millis() as u64,
+            queue_depth: s.queue_depth,
+            submit_timeout_ms: s.submit_timeout.as_millis() as u64,
+        }
+    }
+}
+
 impl Default for Config {
     fn default() -> Self {
         let t = TrainConfig::default();
@@ -78,6 +110,7 @@ impl Default for Config {
                 max_objects: s.max_objects,
                 noise: s.noise,
             },
+            serve: ServeSection::default(),
         }
     }
 }
@@ -110,6 +143,12 @@ impl Config {
                 "data.min_objects" => cfg.data.min_objects = v.as_usize()?,
                 "data.max_objects" => cfg.data.max_objects = v.as_usize()?,
                 "data.noise" => cfg.data.noise = v.as_f32()?,
+                "serve.shards" => cfg.serve.shards = v.as_usize()?,
+                "serve.engine" => cfg.serve.engine = v.as_str()?.to_string(),
+                "serve.max_batch" => cfg.serve.max_batch = v.as_usize()?,
+                "serve.batch_window_ms" => cfg.serve.batch_window_ms = v.as_u64()?,
+                "serve.queue_depth" => cfg.serve.queue_depth = v.as_usize()?,
+                "serve.submit_timeout_ms" => cfg.serve.submit_timeout_ms = v.as_u64()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -133,7 +172,28 @@ impl Config {
             self.data.min_objects >= 1 && self.data.max_objects >= self.data.min_objects,
             "bad object count range"
         );
+        ensure!(self.serve.shards >= 1, "serve.shards must be >= 1");
+        ensure!(self.serve.max_batch >= 1, "serve.max_batch must be >= 1");
+        ensure!(self.serve.queue_depth >= 1, "serve.queue_depth must be >= 1");
+        ensure!(
+            matches!(self.serve.engine.as_str(), "artifact" | "float" | "shift"),
+            "serve.engine must be artifact|float|shift, got {}",
+            self.serve.engine
+        );
         Ok(())
+    }
+
+    /// Lower into the server's config (engine selection is separate —
+    /// see `ServeSection::engine`).
+    pub fn to_server_config(&self) -> ServerConfig {
+        ServerConfig {
+            shards: self.serve.shards,
+            max_batch: self.serve.max_batch,
+            batch_window: Duration::from_millis(self.serve.batch_window_ms),
+            queue_depth: self.serve.queue_depth,
+            submit_timeout: Duration::from_millis(self.serve.submit_timeout_ms),
+            ..ServerConfig::default()
+        }
     }
 
     /// Lower into the trainer's config.
@@ -210,5 +270,35 @@ mod tests {
         let t = cfg.to_train_config();
         assert_eq!(t.arch, "b");
         assert_eq!(t.bits, 5);
+    }
+
+    #[test]
+    fn serve_section_parses_and_lowers() {
+        let cfg = Config::from_toml(
+            r#"
+            [serve]
+            shards = 4
+            engine = "float"
+            max_batch = 16
+            batch_window_ms = 5
+            queue_depth = 64
+            submit_timeout_ms = 250
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.shards, 4);
+        assert_eq!(cfg.serve.engine, "float");
+        let s = cfg.to_server_config();
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.max_batch, 16);
+        assert_eq!(s.batch_window, Duration::from_millis(5));
+        assert_eq!(s.queue_depth, 64);
+        assert_eq!(s.submit_timeout, Duration::from_millis(250));
+    }
+
+    #[test]
+    fn serve_section_validated() {
+        assert!(Config::from_toml("[serve]\nshards = 0\n").is_err());
+        assert!(Config::from_toml("[serve]\nengine = \"gpu\"\n").is_err());
     }
 }

@@ -1,12 +1,17 @@
 //! Lightweight latency/throughput metrics for the trainer and the
-//! detection server.
+//! detection server: per-request latency percentiles, batch-occupancy
+//! counters, and the per-shard → aggregate merge used by the sharded
+//! serving engine.
 
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Online latency recorder with percentile queries.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyStats {
     samples_us: Vec<u64>,
+    /// Inference batches executed (each serves ≥ 1 request).
+    batches: u64,
 }
 
 impl LatencyStats {
@@ -18,8 +23,40 @@ impl LatencyStats {
         self.samples_us.push(d.as_micros() as u64);
     }
 
+    /// Count one executed inference batch (for occupancy reporting).
+    pub fn record_batch(&mut self) {
+        self.batches += 1;
+    }
+
     pub fn count(&self) -> usize {
         self.samples_us.len()
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Mean requests per executed batch (0 when nothing ran).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.count() as f64 / self.batches as f64
+    }
+
+    /// Requests per second over a measured wall-clock interval.
+    pub fn throughput(&self, wall: Duration) -> f64 {
+        let s = wall.as_secs_f64();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.count() as f64 / s
+    }
+
+    /// Fold another recorder into this one (shard → aggregate).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+        self.batches += other.batches;
     }
 
     pub fn mean_ms(&self) -> f64 {
@@ -49,6 +86,55 @@ impl LatencyStats {
             self.percentile_ms(95.0),
             self.percentile_ms(99.0),
         )
+    }
+}
+
+/// Shared per-shard latency recorders plus the aggregate view — the
+/// server hands shard `i` the `Arc` from [`ShardStats::shard`] and the
+/// client handle reads the merged aggregate.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    shards: Vec<Arc<Mutex<LatencyStats>>>,
+}
+
+impl ShardStats {
+    pub fn new(shards: usize) -> Self {
+        ShardStats {
+            shards: (0..shards.max(1))
+                .map(|_| Arc::new(Mutex::new(LatencyStats::new())))
+                .collect(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The recorder owned by shard `i`.
+    pub fn shard(&self, i: usize) -> Arc<Mutex<LatencyStats>> {
+        self.shards[i].clone()
+    }
+
+    /// Snapshot of each shard's recorder.
+    pub fn per_shard(&self) -> Vec<LatencyStats> {
+        self.shards.iter().map(|s| s.lock().unwrap().clone()).collect()
+    }
+
+    /// All shards merged into one aggregate recorder.
+    pub fn merged(&self) -> LatencyStats {
+        let mut all = LatencyStats::new();
+        for s in &self.shards {
+            all.merge(&s.lock().unwrap());
+        }
+        all
+    }
+
+    /// One-line report: aggregate percentiles + per-shard request
+    /// counts (the load-balance picture at a glance).
+    pub fn summary(&self) -> String {
+        let counts: Vec<String> =
+            self.per_shard().iter().map(|s| s.count().to_string()).collect();
+        format!("{} shard_n=[{}]", self.merged().summary(), counts.join(","))
     }
 }
 
@@ -100,5 +186,58 @@ mod tests {
         let l = LatencyStats::new();
         assert_eq!(l.mean_ms(), 0.0);
         assert_eq!(l.percentile_ms(99.0), 0.0);
+        assert_eq!(l.mean_batch(), 0.0);
+        assert_eq!(l.throughput(Duration::from_secs(1)), 0.0);
+    }
+
+    #[test]
+    fn merge_combines_samples_and_batches() {
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        for i in 1..=10 {
+            a.record(Duration::from_millis(i));
+        }
+        a.record_batch();
+        for i in 91..=100 {
+            b.record(Duration::from_millis(i));
+        }
+        b.record_batch();
+        b.record_batch();
+        a.merge(&b);
+        assert_eq!(a.count(), 20);
+        assert_eq!(a.batches(), 3);
+        assert!((a.mean_batch() - 20.0 / 3.0).abs() < 1e-12);
+        // p99 must now reflect b's slow tail
+        assert!(a.percentile_ms(99.0) >= 90.0);
+    }
+
+    #[test]
+    fn throughput_is_count_over_wall() {
+        let mut l = LatencyStats::new();
+        for _ in 0..50 {
+            l.record(Duration::from_millis(1));
+        }
+        assert!((l.throughput(Duration::from_secs(2)) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_stats_merge_and_summary() {
+        let hub = ShardStats::new(3);
+        for i in 0..3usize {
+            let s = hub.shard(i);
+            let mut g = s.lock().unwrap();
+            for k in 0..=i {
+                g.record(Duration::from_millis((10 * (k + 1)) as u64));
+            }
+            g.record_batch();
+        }
+        assert_eq!(hub.num_shards(), 3);
+        let merged = hub.merged();
+        assert_eq!(merged.count(), 6);
+        assert_eq!(merged.batches(), 3);
+        let per = hub.per_shard();
+        assert_eq!(per.iter().map(|s| s.count()).collect::<Vec<_>>(), vec![1, 2, 3]);
+        let s = hub.summary();
+        assert!(s.contains("shard_n=[1,2,3]"), "{s}");
     }
 }

@@ -7,6 +7,7 @@ pub mod init;
 pub mod inq;
 pub mod metrics;
 pub mod params;
+pub mod queue;
 pub mod server;
 pub mod trainer;
 

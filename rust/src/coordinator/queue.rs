@@ -1,0 +1,349 @@
+//! Bounded multi-producer/multi-consumer request queue — the shared
+//! spine of the sharded detection server.
+//!
+//! `std::sync::mpsc` receivers cannot be shared between shard threads,
+//! so this is a small Mutex + Condvar MPMC channel with the exact
+//! semantics the server needs:
+//!
+//! * **bounded** — `queue_depth` is the backpressure limit; producers
+//!   get `Full` back (immediately or after a timeout) instead of
+//!   blocking forever,
+//! * **multi-consumer** — every shard owns a [`Receiver`] clone and
+//!   competes for requests, which is what makes shard scaling
+//!   work-conserving (an idle shard always steals the next request),
+//! * **graceful close** — dropping the last [`Sender`] closes the
+//!   channel; consumers drain whatever is queued and then observe
+//!   `Closed`, so shutdown never abandons accepted requests.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push was refused. The value is handed back to the caller.
+#[derive(Debug)]
+pub enum SendError<T> {
+    /// Queue at capacity (backpressure) — retry later or shed load.
+    Full(T),
+    /// Every receiver is gone or the channel was closed.
+    Closed(T),
+}
+
+/// Outcome of a timed pop.
+#[derive(Debug)]
+pub enum Recv<T> {
+    Item(T),
+    Timeout,
+    /// Closed *and* drained — the consumer should exit.
+    Closed,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+    senders: usize,
+    receivers: usize,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// Producer half. Cloneable; the channel closes when the last clone
+/// drops (or [`Sender::close`] is called).
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Consumer half. Cloneable; shards share one logical queue.
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a bounded MPMC channel of capacity `cap` (≥ 1 enforced).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            buf: VecDeque::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            closed: false,
+            senders: 1,
+            receivers: 1,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+impl<T> Sender<T> {
+    /// Non-blocking push.
+    pub fn try_send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return Err(SendError::Closed(v));
+        }
+        if st.buf.len() >= st.cap {
+            return Err(SendError::Full(v));
+        }
+        st.buf.push_back(v);
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Push, waiting at most `timeout` for space. `Duration::ZERO`
+    /// degenerates to [`Sender::try_send`].
+    pub fn send_timeout(&self, v: T, timeout: Duration) -> Result<(), SendError<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError::Closed(v));
+            }
+            if st.buf.len() < st.cap {
+                st.buf.push_back(v);
+                drop(st);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(SendError::Full(v));
+            }
+            let (g, _timed_out) = self.shared.not_full.wait_timeout(st, left).unwrap();
+            st = g;
+        }
+    }
+
+    /// Close the channel explicitly (consumers drain, then exit).
+    pub fn close(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+
+    /// Requests currently waiting (diagnostics only).
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.senders -= 1;
+        let last = st.senders == 0;
+        if last {
+            st.closed = true;
+        }
+        drop(st);
+        if last {
+            self.shared.not_empty.notify_all();
+            self.shared.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking pop. `None` means closed-and-drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Pop with an absolute deadline (the batching-window primitive).
+    pub fn recv_deadline(&self, deadline: Instant) -> Recv<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return Recv::Item(v);
+            }
+            if st.closed {
+                return Recv::Closed;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Recv::Timeout;
+            }
+            let (g, _timed_out) = self.shared.not_empty.wait_timeout(st, left).unwrap();
+            st = g;
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().receivers += 1;
+        Receiver { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        // when the last receiver is gone (e.g. every shard thread
+        // died), close so blocked/future senders fail fast, and DROP
+        // whatever is still buffered: queued server requests carry
+        // response channels, and dropping them is what unblocks the
+        // clients waiting on replies nobody will ever send
+        let mut st = self.shared.state.lock().unwrap();
+        st.receivers -= 1;
+        let last = st.receivers == 0;
+        let orphaned = if last {
+            st.closed = true;
+            std::mem::take(&mut st.buf)
+        } else {
+            VecDeque::new()
+        };
+        drop(st);
+        if last {
+            self.shared.not_empty.notify_all();
+            self.shared.not_full.notify_all();
+        }
+        drop(orphaned); // outside the lock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_through_one_consumer() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.try_send(i).unwrap();
+        }
+        drop(tx);
+        let got: Vec<i32> = std::iter::from_fn(|| rx.recv()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn full_and_closed_are_distinguished() {
+        let (tx, rx) = bounded(1);
+        tx.try_send(1).unwrap();
+        match tx.try_send(2) {
+            Err(SendError::Full(v)) => assert_eq!(v, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert!(matches!(tx.send_timeout(2, Duration::from_millis(5)), Err(SendError::Full(2))));
+        tx.close();
+        match tx.try_send(3) {
+            Err(SendError::Closed(v)) => assert_eq!(v, 3),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // queued item still drains after close
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn multiple_consumers_partition_the_stream() {
+        let (tx, rx) = bounded(64);
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for i in 0..200 {
+            tx.send_timeout(i, Duration::from_secs(5)).unwrap();
+        }
+        drop(tx);
+        let mut all: Vec<i32> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn send_timeout_unblocks_when_space_frees() {
+        let (tx, rx) = bounded(1);
+        let keep_open = rx.clone(); // queue must not close when `rx` drops
+        tx.try_send(0).unwrap();
+        let t = thread::spawn(move || {
+            // frees a slot after a short delay
+            thread::sleep(Duration::from_millis(20));
+            rx.recv()
+        });
+        tx.send_timeout(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(t.join().unwrap(), Some(0));
+        drop(keep_open);
+    }
+
+    #[test]
+    fn dropping_all_receivers_closes_for_senders() {
+        let (tx, rx) = bounded(2);
+        tx.try_send(1).unwrap();
+        drop(rx);
+        assert!(matches!(tx.try_send(2), Err(SendError::Closed(2))));
+    }
+
+    #[test]
+    fn dropping_last_receiver_releases_buffered_items() {
+        // queued items hold resources (the server's response channels);
+        // losing every consumer must release them so waiters unblock
+        let (tx, rx) = bounded(4);
+        let (item_tx, item_rx) = std::sync::mpsc::sync_channel::<i32>(1);
+        tx.try_send(item_tx).unwrap();
+        drop(rx); // last receiver: buffered sender must be dropped too
+        assert!(item_rx.recv().is_err(), "buffered item leaked past receiver drop");
+    }
+
+    #[test]
+    fn recv_deadline_times_out() {
+        let (_tx, rx) = bounded::<i32>(1);
+        let t0 = Instant::now();
+        match rx.recv_deadline(Instant::now() + Duration::from_millis(10)) {
+            Recv::Timeout => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(8));
+    }
+
+    #[test]
+    fn dropping_last_sender_closes() {
+        let (tx, rx) = bounded::<i32>(4);
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.try_send(9).unwrap();
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(9));
+        assert_eq!(rx.recv(), None);
+    }
+}

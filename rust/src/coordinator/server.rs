@@ -1,196 +1,351 @@
-//! Batched detection server — the deployment-side coordinator.
+//! Sharded batched detection server — the deployment-side coordinator.
 //!
-//! Requests (single images) arrive on a bounded queue; the worker
-//! thread groups up to `max_batch` of them within `batch_window`, pads
-//! to the artifact batch size, runs inference, decodes + NMS-filters,
-//! and answers each request through its response channel. This is the
-//! vLLM-router-shaped piece of the stack, sized to this paper: the
-//! contribution lives in the quantized model, so the server is a thin,
-//! correct, measured batching loop.
+//! Requests (single images) arrive on one bounded MPMC queue
+//! ([`crate::coordinator::queue`]); a pool of `ServerConfig::shards`
+//! worker shards competes for them. Each shard owns its *own* engine
+//! instance, groups up to `max_batch` requests within `batch_window`,
+//! runs inference, decodes + NMS-filters, and answers each request
+//! through its response channel. Per-shard latency recorders merge
+//! into the aggregate view in [`crate::coordinator::metrics`].
 //!
-//! PJRT handles are not `Send`, so the worker thread *owns* its
-//! Runtime + executable (created in-thread from the artifact name);
-//! clients only hold channel endpoints.
+//! Two engine modes share this loop:
+//!
+//! * **engine mode** ([`DetectServer::start_engine`]) — the pure-Rust
+//!   [`DetectorModel`] engines (f32 or LBW shift-add). Hermetic: works
+//!   on a clean checkout with no Python artifacts; this is the paper's
+//!   deployment story (shift-add inference) behind a server.
+//! * **artifact mode** ([`DetectServer::start`]) — the AOT-compiled
+//!   PJRT executable, the optional fast path. PJRT handles are not
+//!   `Send`, so each shard *creates* its Runtime + executable inside
+//!   its own thread; clients only hold channel endpoints.
+//!
+//! Backpressure is explicit: when the queue stays full past
+//! `submit_timeout`, [`DetectHandle::detect`] returns an error instead
+//! of blocking forever — callers shed load instead of deadlocking the
+//! fleet.
 
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::consts::{GRID, IMG, NUM_CLS};
-use crate::coordinator::metrics::LatencyStats;
+use crate::coordinator::metrics::{LatencyStats, ShardStats};
+use crate::coordinator::params::{Checkpoint, ParamSpec};
+use crate::coordinator::queue::{self, Recv, SendError};
 use crate::detection::{decode_grid, nms, Detection};
+use crate::nn::{DetectorModel, EngineKind};
 use crate::runtime::{lit_f32, to_f32, Runtime};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    /// Maximum images per forward pass (≤ the artifact batch size).
+    /// Worker shards, each owning one engine instance.
+    pub shards: usize,
+    /// Maximum images per forward pass.
     pub max_batch: usize,
-    /// How long the batcher waits to fill a batch.
+    /// How long a shard waits to fill a batch after the first request.
     pub batch_window: Duration,
     pub score_thresh: f32,
     pub nms_iou: f32,
-    /// Request queue depth (backpressure bound).
+    /// Request queue depth (the backpressure bound, shared by shards).
     pub queue_depth: usize,
+    /// How long `detect` may wait for queue space before erroring.
+    pub submit_timeout: Duration,
+    /// Pad every executed batch up to this size (1 = no padding). The
+    /// artifact path overrides this with the AOT batch size; the
+    /// engine path runs ragged batches as-is.
+    pub pad_batch: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
+            shards: 1,
             max_batch: crate::consts::TRAIN_BATCH,
             batch_window: Duration::from_millis(2),
             score_thresh: 0.4,
             nms_iou: 0.45,
             queue_depth: 256,
+            submit_timeout: Duration::from_secs(5),
+            pad_batch: 1,
         }
     }
 }
 
-/// An in-flight request (exposed for `serve_loop`'s signature; built
+/// An in-flight request (exposed for [`serve_loop`]'s signature; built
 /// only through [`DetectHandle::detect`]).
 pub struct Request {
     image: Vec<f32>,
-    resp: SyncSender<Result<Vec<Detection>>>,
+    resp: std::sync::mpsc::SyncSender<Result<Vec<Detection>>>,
     enqueued: Instant,
 }
 
 /// Handle used by clients to submit detection requests. Cloneable and
-/// thread-safe.
+/// thread-safe; dropping every handle closes the queue and lets the
+/// shards drain and exit.
 #[derive(Clone)]
 pub struct DetectHandle {
-    tx: SyncSender<Request>,
-    stats: Arc<Mutex<LatencyStats>>,
+    tx: queue::Sender<Request>,
+    stats: Arc<ShardStats>,
+    submit_timeout: Duration,
 }
 
 impl DetectHandle {
-    /// Detect objects in one `IMG×IMG×3` image (blocks until served).
+    /// Detect objects in one `IMG×IMG×3` image. Blocks until served,
+    /// except for admission: if the queue stays full for
+    /// `submit_timeout`, returns a backpressure error immediately.
     pub fn detect(&self, image: Vec<f32>) -> Result<Vec<Detection>> {
+        self.submit(image, self.submit_timeout)
+    }
+
+    /// Like [`DetectHandle::detect`] but never waits for queue space.
+    pub fn try_detect(&self, image: Vec<f32>) -> Result<Vec<Detection>> {
+        self.submit(image, Duration::ZERO)
+    }
+
+    fn submit(&self, image: Vec<f32>, wait: Duration) -> Result<Vec<Detection>> {
         anyhow::ensure!(image.len() == IMG * IMG * 3, "bad image size {}", image.len());
         let (resp, rx) = sync_channel(1);
-        self.tx
-            .send(Request { image, resp, enqueued: Instant::now() })
-            .map_err(|_| anyhow!("server stopped"))?;
+        let req = Request { image, resp, enqueued: Instant::now() };
+        match self.tx.send_timeout(req, wait) {
+            Ok(()) => {}
+            Err(SendError::Full(_)) => {
+                bail!("server overloaded: request queue full after {wait:?} (backpressure)")
+            }
+            Err(SendError::Closed(_)) => bail!("server stopped"),
+        }
         rx.recv().map_err(|_| anyhow!("server dropped request"))?
     }
 
-    pub fn latency_summary(&self) -> String {
-        self.stats.lock().unwrap().summary()
+    /// Aggregate latency across all shards.
+    pub fn latency(&self) -> LatencyStats {
+        self.stats.merged()
     }
 
-    pub fn latency(&self) -> LatencyStats {
-        self.stats.lock().unwrap().clone()
+    /// Per-shard latency snapshots.
+    pub fn shard_latencies(&self) -> Vec<LatencyStats> {
+        self.stats.per_shard()
+    }
+
+    pub fn latency_summary(&self) -> String {
+        self.stats.summary()
     }
 }
 
-/// The detection server.
+/// A shard's inference function: `(flat NHWC images, batch)` →
+/// `(cls_prob, reg)` in the artifact layouts. Created inside the shard
+/// thread, so it does not need to be `Send`.
+pub type InferFn = Box<dyn FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>>;
+
+/// Per-shard constructor, run on the shard's own thread (PJRT handles
+/// must be created in-thread). Receives the shard index.
+pub type ShardSetup = Box<dyn FnOnce(usize) -> Result<InferFn> + Send>;
+
+/// The detection server: a shard pool over one bounded request queue.
 pub struct DetectServer {
     handle: DetectHandle,
-    worker: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<ShardStats>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl DetectServer {
-    /// Start the worker thread: it opens the artifact directory itself
-    /// (PJRT handles are thread-local by construction here), compiles
-    /// `infer_{arch}_b{bits}_bs{batch}`, and serves until the handle
-    /// side is dropped.
+    /// Start in **artifact mode**: each shard opens the artifact
+    /// directory itself, compiles `infer_{arch}_b{bits}_bs{batch}`,
+    /// and serves until every handle is dropped. Startup errors from
+    /// any shard are reported synchronously.
     pub fn start(
         arch: &str,
         bits: u32,
         params: Vec<f32>,
         state: Vec<f32>,
+        mut cfg: ServerConfig,
+    ) -> Result<DetectServer> {
+        // the AOT executable's batch dimension is fixed: pad up to it
+        // and never collect more requests than it can hold (a larger
+        // configured max_batch would shape-error on every call)
+        cfg.max_batch = cfg.max_batch.min(crate::consts::TRAIN_BATCH);
+        cfg.pad_batch = crate::consts::TRAIN_BATCH;
+        let artifact = format!("infer_{arch}_b{bits}_bs{}", crate::consts::TRAIN_BATCH);
+        let params = Arc::new(params);
+        let state = Arc::new(state);
+        let setups: Vec<ShardSetup> = (0..cfg.shards.max(1))
+            .map(|_| {
+                let artifact = artifact.clone();
+                let params = params.clone();
+                let state = state.clone();
+                Box::new(move |_shard: usize| -> Result<InferFn> {
+                    let rt = Runtime::open_default()?;
+                    let exe = rt.load(&artifact)?;
+                    Ok(Box::new(move |images: &[f32], batch: usize| {
+                        let _keep_alive = &rt; // executable outlives via shard thread
+                        let out = exe.run(&[
+                            lit_f32(&params, &[params.len()])?,
+                            lit_f32(&state, &[state.len()])?,
+                            lit_f32(images, &[batch, IMG, IMG, 3])?,
+                        ])?;
+                        Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+                    }))
+                }) as ShardSetup
+            })
+            .collect();
+        Self::start_with(cfg, setups)
+    }
+
+    /// Start in **engine mode**: every shard gets its own pure-Rust
+    /// [`DetectorModel`] built from the checkpoint (re-quantizing for
+    /// the shift engine). No artifacts, no Python — hermetic.
+    pub fn start_engine(
+        spec: &ParamSpec,
+        ckpt: &Checkpoint,
+        engine: EngineKind,
         cfg: ServerConfig,
     ) -> Result<DetectServer> {
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let stats = Arc::new(Mutex::new(LatencyStats::new()));
-        let stats_bg = stats.clone();
-        let artifact = format!("infer_{arch}_b{bits}_bs{}", crate::consts::TRAIN_BATCH);
-        // report startup errors synchronously
-        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
-        let worker = std::thread::spawn(move || {
-            let rt = match Runtime::open_default() {
-                Ok(rt) => rt,
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
+        let mut setups: Vec<ShardSetup> = Vec::with_capacity(cfg.shards.max(1));
+        for _ in 0..cfg.shards.max(1) {
+            let mut model = DetectorModel::build(spec, ckpt, engine)?;
+            setups.push(Box::new(move |_shard: usize| -> Result<InferFn> {
+                Ok(Box::new(move |images: &[f32], batch: usize| {
+                    Ok(model.forward(images, batch))
+                }))
+            }) as ShardSetup);
+        }
+        Self::start_with(cfg, setups)
+    }
+
+    /// Start a shard pool over arbitrary per-shard engines (one
+    /// [`ShardSetup`] per shard — their count overrides
+    /// `cfg.shards`). This is the seam tests and benches use to
+    /// inject mock engines.
+    pub fn start_with(cfg: ServerConfig, setups: Vec<ShardSetup>) -> Result<DetectServer> {
+        anyhow::ensure!(!setups.is_empty(), "server needs at least one shard");
+        let shards = setups.len();
+        let (tx, rx) = queue::bounded(cfg.queue_depth);
+        let stats = Arc::new(ShardStats::new(shards));
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for (i, setup) in setups.into_iter().enumerate() {
+            let rx = rx.clone();
+            let shard_cfg = cfg.clone();
+            let shard_stats = stats.shard(i);
+            let ready = ready_tx.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("lbw-shard-{i}"))
+                .spawn(move || {
+                    let infer = match setup(i) {
+                        Ok(f) => {
+                            let _ = ready.send(Ok(()));
+                            f
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    serve_loop(rx, &shard_cfg, shard_stats, infer);
+                })
+                .map_err(|e| anyhow!("spawning shard {i}: {e}"))?;
+            workers.push(worker);
+        }
+        drop(ready_tx);
+        drop(rx);
+
+        for _ in 0..shards {
+            let shard_ready = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("server worker died during startup"));
+            if let Err(e) = shard_ready.and_then(|r| r) {
+                // close the queue so already-started shards exit, then join
+                tx.close();
+                drop(tx);
+                for w in workers {
+                    let _ = w.join();
                 }
-            };
-            let exe = match rt.load(&artifact) {
-                Ok(e) => e,
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let _ = ready_tx.send(Ok(()));
-            serve_loop(rx, &cfg, stats_bg, |images, batch| {
-                let out = exe.run(&[
-                    lit_f32(&params, &[params.len()])?,
-                    lit_f32(&state, &[state.len()])?,
-                    lit_f32(images, &[batch, IMG, IMG, 3])?,
-                ])?;
-                Ok((to_f32(&out[0])?, to_f32(&out[1])?))
-            });
-        });
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("server worker died during startup"))??;
-        Ok(DetectServer { handle: DetectHandle { tx, stats }, worker: Some(worker) })
+                return Err(e);
+            }
+        }
+        let handle =
+            DetectHandle { tx, stats: stats.clone(), submit_timeout: cfg.submit_timeout };
+        Ok(DetectServer { handle, stats, workers })
     }
 
     pub fn handle(&self) -> DetectHandle {
         self.handle.clone()
     }
 
-    /// Stop accepting requests and join the worker.
-    pub fn shutdown(mut self) {
-        drop(self.handle);
-        if let Some(w) = self.worker.take() {
+    pub fn num_shards(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Per-shard latency snapshots (aggregate via
+    /// [`DetectHandle::latency`]).
+    pub fn shard_latencies(&self) -> Vec<LatencyStats> {
+        self.stats.per_shard()
+    }
+
+    /// Stop accepting requests, drain what was admitted, and join
+    /// every shard. (Clients still holding cloned handles keep the
+    /// queue open — drop them first.)
+    pub fn shutdown(self) {
+        let DetectServer { handle, stats: _, workers } = self;
+        drop(handle);
+        for w in workers {
             let _ = w.join();
         }
     }
 }
 
-/// The batching loop, generic over the inference function so tests can
-/// inject a mock engine.
+/// One shard's batching loop, generic over the inference function so
+/// tests can inject a mock engine. Exits when the queue is closed and
+/// drained.
 pub fn serve_loop(
-    rx: Receiver<Request>,
+    rx: queue::Receiver<Request>,
     cfg: &ServerConfig,
     stats: Arc<Mutex<LatencyStats>>,
     mut infer: impl FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
 ) {
-    let artifact_batch = crate::consts::TRAIN_BATCH.max(cfg.max_batch);
     loop {
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all handles dropped
-        };
+        let Some(first) = rx.recv() else { return };
         let mut batch = vec![first];
+        // with a zero window this still drains already-queued requests
         let deadline = Instant::now() + cfg.batch_window;
-        while batch.len() < cfg.max_batch {
-            let left = deadline.saturating_duration_since(Instant::now());
-            match rx.recv_timeout(left) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+        while batch.len() < cfg.max_batch.max(1) {
+            match rx.recv_deadline(deadline) {
+                Recv::Item(r) => batch.push(r),
+                Recv::Timeout | Recv::Closed => break, // Closed: serve what we hold
             }
         }
 
-        let mut images = Vec::with_capacity(artifact_batch * IMG * IMG * 3);
+        let run_batch = cfg.pad_batch.max(batch.len());
+        let mut images = Vec::with_capacity(run_batch * IMG * IMG * 3);
         for r in &batch {
             images.extend_from_slice(&r.image);
         }
-        images.resize(artifact_batch * IMG * IMG * 3, 0.0);
+        images.resize(run_batch * IMG * IMG * 3, 0.0);
 
-        match infer(&images, artifact_batch) {
+        let result = infer(&images, run_batch).and_then(|(cls_prob, reg)| {
+            // a short engine output would make the per-request slicing
+            // below panic and kill the shard — reject it instead
+            anyhow::ensure!(
+                cls_prob.len() >= run_batch * GRID * GRID * NUM_CLS
+                    && reg.len() >= run_batch * GRID * GRID * 4,
+                "engine returned {} cls / {} reg values for batch {run_batch}",
+                cls_prob.len(),
+                reg.len()
+            );
+            Ok((cls_prob, reg))
+        });
+        match result {
             Ok((cls_prob, reg)) => {
+                let mut shard = stats.lock().unwrap();
+                shard.record_batch();
                 for (bi, req) in batch.into_iter().enumerate() {
                     let cp =
                         &cls_prob[bi * GRID * GRID * NUM_CLS..(bi + 1) * GRID * GRID * NUM_CLS];
                     let rg = &reg[bi * GRID * GRID * 4..(bi + 1) * GRID * GRID * 4];
                     let dets = nms(decode_grid(cp, rg, cfg.score_thresh), cfg.nms_iou);
-                    stats.lock().unwrap().record(req.enqueued.elapsed());
+                    shard.record(req.enqueued.elapsed());
                     let _ = req.resp.send(Ok(dets));
                 }
             }
@@ -208,50 +363,55 @@ pub fn serve_loop(
 mod tests {
     use super::*;
 
-    fn mock_server(cfg: ServerConfig) -> (DetectHandle, std::thread::JoinHandle<Vec<usize>>) {
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let stats = Arc::new(Mutex::new(LatencyStats::new()));
-        let handle = DetectHandle { tx, stats: stats.clone() };
-        let worker = std::thread::spawn(move || {
-            let mut batch_sizes = Vec::new();
-            let counter = std::cell::RefCell::new(&mut batch_sizes);
-            serve_loop(rx, &cfg, stats, |images, batch| {
-                // record the number of *real* images (non-padded): the
-                // mock encodes image identity in pixel 0
-                let real = (0..batch)
-                    .filter(|bi| images[bi * IMG * IMG * 3] != 0.0)
-                    .count();
-                counter.borrow_mut().push(real);
-                // every cell background except cell 0 of class 1, score ~1
+    /// Mock engine: reads each image's pixel 0 as an identity tag `v`
+    /// and answers with a single class-0 detection of score `v` in
+    /// cell 0 (all other cells background). Padded slots have pixel 0
+    /// == 0.0 and fall below any positive score threshold.
+    fn tag_mock(batch_log: Option<Arc<Mutex<Vec<usize>>>>) -> ShardSetup {
+        Box::new(move |_shard| {
+            Ok(Box::new(move |images: &[f32], batch: usize| {
                 let mut cls = vec![0.0f32; batch * GRID * GRID * NUM_CLS];
+                let mut real = 0usize;
                 for bi in 0..batch {
+                    let v = images[bi * IMG * IMG * 3];
+                    if v != 0.0 {
+                        real += 1;
+                    }
                     for cell in 0..GRID * GRID {
                         cls[(bi * GRID * GRID + cell) * NUM_CLS] = 1.0;
                     }
-                    cls[bi * GRID * GRID * NUM_CLS] = 0.0;
-                    cls[bi * GRID * GRID * NUM_CLS + 1] = 1.0;
+                    cls[bi * GRID * GRID * NUM_CLS] = 1.0 - v;
+                    cls[bi * GRID * GRID * NUM_CLS + 1] = v;
+                }
+                if let Some(log) = &batch_log {
+                    log.lock().unwrap().push(real);
                 }
                 let reg = vec![0.0f32; batch * GRID * GRID * 4];
                 Ok((cls, reg))
-            });
-            batch_sizes
-        });
-        (handle, worker)
+            }))
+        })
+    }
+
+    fn tagged_image(v: f32) -> Vec<f32> {
+        let mut img = vec![0.0f32; IMG * IMG * 3];
+        img[0] = v;
+        img
     }
 
     #[test]
-    fn serves_and_batches() {
+    fn serves_and_batches_on_one_shard() {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
         let cfg = ServerConfig {
             batch_window: Duration::from_millis(30),
             ..Default::default()
         };
-        let (handle, worker) = mock_server(cfg);
+        let server = DetectServer::start_with(cfg, vec![tag_mock(Some(sizes.clone()))]).unwrap();
+        let handle = server.handle();
         let mut clients = Vec::new();
         for _ in 0..8 {
             let h = handle.clone();
             clients.push(std::thread::spawn(move || {
-                let img = vec![1.0f32; IMG * IMG * 3];
-                let dets = h.detect(img).unwrap();
+                let dets = h.detect(tagged_image(0.9)).unwrap();
                 assert_eq!(dets.len(), 1);
                 assert_eq!(dets[0].class, 0);
             }));
@@ -261,7 +421,8 @@ mod tests {
         }
         assert_eq!(handle.latency().count(), 8);
         drop(handle);
-        let sizes = worker.join().unwrap();
+        server.shutdown();
+        let sizes = sizes.lock().unwrap();
         let total: usize = sizes.iter().sum();
         assert_eq!(total, 8);
         // with an open 30ms window, at least one multi-request batch
@@ -269,25 +430,114 @@ mod tests {
     }
 
     #[test]
-    fn error_propagates_to_all_requests() {
-        let cfg = ServerConfig::default();
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let stats = Arc::new(Mutex::new(LatencyStats::new()));
-        let handle = DetectHandle { tx, stats: stats.clone() };
-        let worker = std::thread::spawn(move || {
-            serve_loop(rx, &cfg, stats, |_, _| anyhow::bail!("engine down"));
+    fn responses_map_to_their_requests_across_shards() {
+        let cfg = ServerConfig {
+            shards: 3,
+            batch_window: Duration::from_millis(5),
+            max_batch: 4,
+            ..Default::default()
+        };
+        let server =
+            DetectServer::start_with(cfg, (0..3).map(|_| tag_mock(None)).collect()).unwrap();
+        let handle = server.handle();
+        let mut clients = Vec::new();
+        for k in 0..24u32 {
+            let h = handle.clone();
+            // distinct identity tag per request, all above score_thresh
+            let v = 0.5 + 0.4 * (k as f32 / 24.0);
+            clients.push(std::thread::spawn(move || {
+                let dets = h.detect(tagged_image(v)).unwrap();
+                assert_eq!(dets.len(), 1, "tag {v}");
+                assert!(
+                    (dets[0].score - v).abs() < 1e-6,
+                    "response for tag {v} carried score {}",
+                    dets[0].score
+                );
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        assert_eq!(handle.latency().count(), 24);
+        // the pool actually spread work: no shard served everything
+        let per: Vec<usize> = handle.shard_latencies().iter().map(|s| s.count()).collect();
+        assert_eq!(per.iter().sum::<usize>(), 24, "{per:?}");
+        drop(handle);
+        server.shutdown();
+    }
+
+    #[test]
+    fn backpressure_returns_error_instead_of_blocking() {
+        // one shard, blocked until released; queue depth 2
+        let gate = Arc::new(Mutex::new(()));
+        let blocker = gate.lock().unwrap();
+        let gate_shard = gate.clone();
+        let setup: ShardSetup = Box::new(move |_| {
+            Ok(Box::new(move |_images: &[f32], batch: usize| {
+                let _wait = gate_shard.lock().unwrap(); // parked until gate opens
+                Ok((
+                    vec![0.0; batch * GRID * GRID * NUM_CLS],
+                    vec![0.0; batch * GRID * GRID * 4],
+                ))
+            }))
         });
+        let cfg = ServerConfig {
+            queue_depth: 2,
+            max_batch: 1,
+            batch_window: Duration::ZERO,
+            submit_timeout: Duration::from_millis(150),
+            ..Default::default()
+        };
+        let server = DetectServer::start_with(cfg, vec![setup]).unwrap();
+        let handle = server.handle();
+        // saturate: 1 in-flight (popped by the shard) + 2 queued
+        let mut waiters = Vec::new();
+        for _ in 0..3 {
+            let h = handle.clone();
+            waiters.push(std::thread::spawn(move || h.detect(tagged_image(0.6))));
+        }
+        // give the shard time to park and the queue time to fill
+        std::thread::sleep(Duration::from_millis(100));
+        let err = handle.try_detect(tagged_image(0.6)).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        let err = handle.detect(tagged_image(0.6)).unwrap_err();
+        assert!(err.to_string().contains("backpressure"), "{err}");
+        // release the shard: every admitted request completes
+        drop(blocker);
+        for w in waiters {
+            assert!(w.join().unwrap().is_ok());
+        }
+        drop(handle);
+        server.shutdown();
+    }
+
+    #[test]
+    fn error_propagates_to_all_requests() {
+        let setup: ShardSetup =
+            Box::new(|_| Ok(Box::new(|_: &[f32], _| anyhow::bail!("engine down"))));
+        let server = DetectServer::start_with(ServerConfig::default(), vec![setup]).unwrap();
+        let handle = server.handle();
         let err = handle.detect(vec![0.5; IMG * IMG * 3]).unwrap_err();
         assert!(err.to_string().contains("engine down"));
         drop(handle);
-        worker.join().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn startup_error_surfaces_and_joins() {
+        let bad: ShardSetup = Box::new(|_| anyhow::bail!("no engine for you"));
+        let good = tag_mock(None);
+        let err = DetectServer::start_with(ServerConfig::default(), vec![good, bad]).unwrap_err();
+        assert!(err.to_string().contains("no engine for you"), "{err}");
     }
 
     #[test]
     fn rejects_bad_image_size() {
-        let (handle, worker) = mock_server(ServerConfig::default());
+        let server =
+            DetectServer::start_with(ServerConfig::default(), vec![tag_mock(None)]).unwrap();
+        let handle = server.handle();
         assert!(handle.detect(vec![0.0; 10]).is_err());
         drop(handle);
-        worker.join().unwrap();
+        server.shutdown();
     }
 }

@@ -14,14 +14,17 @@
 //! * **L2** — the JAX detection model (`python/compile/model.py`):
 //!   µResNet backbone + R-FCN-lite position-sensitive head, with the
 //!   paper's projected-SGD training step; AOT-lowered once to HLO text.
-//! * **L3** — this crate: PJRT runtime, training/serving coordinator,
-//!   the SynthVOC data substrate, VOC mAP evaluation, the exact
-//!   Theorem-1 quantizers, baselines, statistics (Tables 2–3, Fig. 2),
-//!   and the shift-add deployment engine behind the paper's ≥4×
-//!   speedup claim.
+//! * **L3** — this crate: PJRT runtime, training coordinator, the
+//!   sharded serving engine, the SynthVOC data substrate, VOC mAP
+//!   evaluation, the exact Theorem-1 quantizers, baselines, statistics
+//!   (Tables 2–3, Fig. 2), and the shift-add deployment engine behind
+//!   the paper's ≥4× speedup claim.
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! `repro` binary is self-contained.
+//! Python never runs on the request path, and the deployment stack is
+//! **hermetic**: the sharded server, examples, and the whole test
+//! suite run the pure-Rust engines on a clean checkout (no artifacts
+//! required — see `nn::synth` and `coordinator::server`). The
+//! PJRT-artifact path (`make artifacts`) is the optional fast path.
 
 pub mod config;
 pub mod coordinator;

@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Result};
 use lbw_net::config::Config;
 use lbw_net::consts::{IMG, NUM_CLASSES};
 use lbw_net::coordinator::params::{Checkpoint, ParamSpec};
-use lbw_net::coordinator::server::{DetectServer, ServerConfig};
+use lbw_net::coordinator::server::DetectServer;
 use lbw_net::coordinator::trainer::{evaluate_with_artifact, save_outcome, Trainer};
 use lbw_net::data::{generate_scene, Scene, SceneConfig, ShapeClass};
 use lbw_net::detection::{decode_grid, nms, Detection};
@@ -35,8 +35,13 @@ USAGE: repro <subcommand> [--flag value ...]
   stats     --ckpt PATH [--layers l1,l2]                               (Fig. 2 + Tables 2-3)
   quantize  [--ckpt PATH --bits 2,4,5,6 --n N]                         (§2.1 exactness)
   inq       [--bits 4|5 --steps N --seed N --out ckpt.lbw]              (INQ baseline [25])
-  serve     --ckpt PATH [--requests N --concurrency N]                 (deployment latency)
+  serve     [--ckpt PATH --engine shift|float|artifact --shards N
+             --requests N --concurrency N]                             (sharded serving)
   gen-data  [--count N --seed N --out DIR]                             (SynthVOC scenes)
+
+serve runs hermetically with the pure-Rust engines (shift/float): with
+no --ckpt it builds a synthetic He-initialized detector, so it works on
+a clean checkout. engine=artifact needs `make artifacts` + a checkpoint.
 ";
 
 fn main() -> Result<()> {
@@ -53,7 +58,7 @@ fn main() -> Result<()> {
         "stats" => cmd_stats(&args),
         "quantize" => cmd_quantize(&args),
         "inq" => cmd_inq(&args, &cfg),
-        "serve" => cmd_serve(&args),
+        "serve" => cmd_serve(&args, &cfg),
         "gen-data" => cmd_gen_data(&args),
         "" | "help" | "--help" => {
             print!("{USAGE}");
@@ -383,18 +388,46 @@ fn cmd_inq(args: &Args, cfg: &Config) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    args.check_known(&["ckpt", "requests", "concurrency", "config"])?;
-    let ck = Checkpoint::load(Path::new(args.require("ckpt")?))?;
+fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
+    args.check_known(&["ckpt", "engine", "shards", "requests", "concurrency", "config"])?;
     let requests: usize = args.parse_or("requests", 64)?;
     let concurrency: usize = args.parse_or("concurrency", 8)?;
-    let server = DetectServer::start(
-        &ck.arch,
-        ck.bits,
-        ck.params.clone(),
-        ck.state.clone(),
-        ServerConfig::default(),
-    )?;
+    let engine = args.str_or("engine", &cfg.serve.engine);
+    let mut server_cfg = cfg.to_server_config();
+    server_cfg.shards = args.parse_or("shards", server_cfg.shards)?;
+
+    let server = match engine.as_str() {
+        "artifact" => {
+            let ck = Checkpoint::load(Path::new(args.require("ckpt")?))?;
+            println!(
+                "serving {} b{} via PJRT artifact, {} shard(s)",
+                ck.arch, ck.bits, server_cfg.shards
+            );
+            DetectServer::start(&ck.arch, ck.bits, ck.params.clone(), ck.state.clone(), server_cfg)?
+        }
+        "float" | "shift" => {
+            if args.get("ckpt").is_none() {
+                println!("no --ckpt: serving a synthetic He-initialized detector");
+            }
+            let (spec, ck) = lbw_net::nn::synth::load_or_synthetic(
+                args.get("ckpt").map(Path::new),
+                cfg.quant.bits,
+                cfg.train.seed,
+            )?;
+            let kind = if engine == "float" {
+                EngineKind::Float
+            } else {
+                EngineKind::Shift { bits: ck.bits.clamp(2, 6) }
+            };
+            println!(
+                "serving {} via hermetic {kind:?} engine, {} shard(s)",
+                ck.arch, server_cfg.shards
+            );
+            DetectServer::start_engine(&spec, &ck, kind, server_cfg)?
+        }
+        other => bail!("unknown engine `{other}` (artifact|float|shift)"),
+    };
+
     let handle = server.handle();
     let t0 = std::time::Instant::now();
     let mut clients = Vec::new();
@@ -419,6 +452,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests as f64 / wall.as_secs_f64()
     );
     println!("latency: {}", handle.latency_summary());
+    for (i, s) in server.shard_latencies().iter().enumerate() {
+        println!("  shard {i}: {} (mean batch {:.2})", s.summary(), s.mean_batch());
+    }
     drop(handle);
     server.shutdown();
     Ok(())

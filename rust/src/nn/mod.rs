@@ -14,10 +14,14 @@
 //!   R-FCN-lite forward pass mirroring `python/compile/model.py`,
 //!   cross-checked against the `infer_*` artifacts in
 //!   `integration_engine.rs`.
+//! * [`synth`] — synthetic spec/checkpoint builder so the engines (and
+//!   the sharded server on top of them) run hermetically, with no
+//!   Python artifacts.
 
 pub mod conv;
 pub mod layers;
 pub mod model;
 pub mod shift_conv;
+pub mod synth;
 
 pub use model::{DetectorModel, EngineKind};

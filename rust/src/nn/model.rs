@@ -242,100 +242,13 @@ impl DetectorModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::params::SpecEntry;
+    use crate::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
 
-    /// Hand-build a minimal spec (stem + 1 block + head + heads) and a
-    /// matching random checkpoint for engine tests without artifacts.
+    /// Tiny synthetic spec + He-initialized checkpoint (the shared
+    /// hermetic builder from `nn::synth`).
     fn tiny_spec_ckpt() -> (ParamSpec, Checkpoint) {
-        let mut params: Vec<SpecEntry> = Vec::new();
-        let mut state: Vec<SpecEntry> = Vec::new();
-        let (mut po, mut so) = (0usize, 0usize);
-        let mut add_p = |name: &str, shape: Vec<usize>, kind: &str, q: bool, po: &mut usize| {
-            let size: usize = shape.iter().product();
-            params.push(SpecEntry {
-                name: name.into(),
-                shape,
-                kind: kind.into(),
-                quantize: q,
-                offset: *po,
-                size,
-            });
-            *po += size;
-        };
-        let mut add_s = |name: &str, c: usize, kind: &str, so: &mut usize| {
-            state.push(SpecEntry {
-                name: name.into(),
-                shape: vec![c],
-                kind: kind.into(),
-                quantize: false,
-                offset: *so,
-                size: c,
-            });
-            *so += c;
-        };
-        let w = 8usize; // tiny width
-        add_p("stem.w", vec![3, 3, 3, w], "conv", true, &mut po);
-        add_p("stem.bn.scale", vec![w], "bn_scale", false, &mut po);
-        add_p("stem.bn.bias", vec![w], "bn_bias", false, &mut po);
-        add_s("stem.bn.mean", w, "bn_mean", &mut so);
-        add_s("stem.bn.var", w, "bn_var", &mut so);
-        // stage 0 block 0 (stride 1, no skip); then two stride-2 stages
-        for si in 0..3 {
-            let cin = if si == 0 { w } else { w };
-            let p = format!("s{si}.b0");
-            add_p(&format!("{p}.conv1.w"), vec![3, 3, cin, w], "conv", true, &mut po);
-            add_p(&format!("{p}.bn1.scale"), vec![w], "bn_scale", false, &mut po);
-            add_p(&format!("{p}.bn1.bias"), vec![w], "bn_bias", false, &mut po);
-            add_s(&format!("{p}.bn1.mean"), w, "bn_mean", &mut so);
-            add_s(&format!("{p}.bn1.var"), w, "bn_var", &mut so);
-            add_p(&format!("{p}.conv2.w"), vec![3, 3, w, w], "conv", true, &mut po);
-            add_p(&format!("{p}.bn2.scale"), vec![w], "bn_scale", false, &mut po);
-            add_p(&format!("{p}.bn2.bias"), vec![w], "bn_bias", false, &mut po);
-            add_s(&format!("{p}.bn2.mean"), w, "bn_mean", &mut so);
-            add_s(&format!("{p}.bn2.var"), w, "bn_var", &mut so);
-        }
-        add_p("head.w", vec![3, 3, w, w], "conv", true, &mut po);
-        add_p("head.bn.scale", vec![w], "bn_scale", false, &mut po);
-        add_p("head.bn.bias", vec![w], "bn_bias", false, &mut po);
-        add_s("head.bn.mean", w, "bn_mean", &mut so);
-        add_s("head.bn.var", w, "bn_var", &mut so);
-        add_p("cls.w", vec![w, K * K * NUM_CLS], "conv", true, &mut po);
-        add_p("cls.b", vec![K * K * NUM_CLS], "bias", false, &mut po);
-        add_p("reg.w", vec![w, 4], "conv", true, &mut po);
-        add_p("reg.b", vec![4], "bias", false, &mut po);
-
-        let spec = ParamSpec {
-            arch: "tiny".into(),
-            num_params: po,
-            num_state: so,
-            params,
-            state,
-        };
-        spec.validate().unwrap();
-        let mut s = 12345u64;
-        let mut rnd = || {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            ((s >> 11) as f32 / (1u64 << 53) as f32 - 0.5) * 0.4
-        };
-        let mut p = vec![0.0f32; po];
-        for e in &spec.params {
-            for i in 0..e.size {
-                p[e.offset + i] = match e.kind.as_str() {
-                    "bn_scale" => 1.0,
-                    "bn_bias" | "bias" => 0.0,
-                    _ => rnd(),
-                };
-            }
-        }
-        let mut st = vec![0.0f32; so];
-        for e in &spec.state {
-            for i in 0..e.size {
-                st[e.offset + i] = if e.kind == "bn_var" { 1.0 } else { 0.0 };
-            }
-        }
-        let ckpt = Checkpoint { arch: "tiny".into(), bits: 32, step: 0, params: p, state: st };
+        let spec = synthetic_spec(SynthConfig::default());
+        let ckpt = synthetic_checkpoint(&spec, 12345, 32);
         (spec, ckpt)
     }
 

@@ -49,6 +49,18 @@ enum Row {
     Sparse(Vec<Code>),
 }
 
+/// Row-layout policy. `Auto` picks per patch position by density
+/// (the production path); `Dense`/`Sparse` force one layout everywhere
+/// so tests and benches can exercise both hot loops on any weight
+/// distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RowLayout {
+    #[default]
+    Auto,
+    Dense,
+    Sparse,
+}
+
 /// A quantized convolution layer ready for shift-add execution.
 #[derive(Debug, Clone)]
 pub struct ShiftConv {
@@ -71,8 +83,23 @@ pub struct ShiftConv {
 }
 
 impl ShiftConv {
-    /// Build from an HWIO float kernel quantized with the LBW scheme.
+    /// Build from an HWIO float kernel quantized with the LBW scheme,
+    /// picking each row's layout by density.
     pub fn from_quant(q: &LbwQuant, kh: usize, kw: usize, cin: usize, cout: usize, bits: u32) -> Self {
+        Self::from_quant_with_layout(q, kh, kw, cin, cout, bits, RowLayout::Auto)
+    }
+
+    /// Like [`ShiftConv::from_quant`] but with an explicit row-layout
+    /// policy (tests force `Dense`/`Sparse` to cover both hot loops).
+    pub fn from_quant_with_layout(
+        q: &LbwQuant,
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+        bits: u32,
+        layout: RowLayout,
+    ) -> Self {
         assert_eq!(q.wq.len(), kh * kw * cin * cout);
         let mut rows: Vec<Row> = Vec::with_capacity(kh * kw * cin);
         let mut nz = 0usize;
@@ -86,13 +113,21 @@ impl ShiftConv {
                 }
                 codes.push(Code {
                     cout: co as u16,
-                    shift: t as u8,
+                    // shifts saturate at 31: an i32 shift by >= 32 is
+                    // UB, and at t >= FIX the 16.16 product is already
+                    // all sign bits (|w·x| < 1 fixed-point ulp)
+                    shift: t.min(31) as u8,
                     sign_mask: if q.wq[idx] < 0.0 { -1 } else { 0 },
                 });
             }
             nz += codes.len();
-            if codes.len() * 5 >= cout * 2 {
-                // dense enough: parallel-lane layout
+            let dense = match layout {
+                RowLayout::Auto => codes.len() * 5 >= cout * 2,
+                RowLayout::Dense => true,
+                RowLayout::Sparse => false,
+            };
+            if dense {
+                // parallel-lane layout
                 let mut shifts = vec![0i32; cout];
                 let mut signs = vec![0i32; cout];
                 let mut nzm = vec![0i32; cout];

@@ -1,0 +1,200 @@
+//! Synthetic parameter specs + checkpoints — the hermetic substrate
+//! behind engine-mode serving, tests, and benches.
+//!
+//! `ParamSpec` normally comes from `artifacts/param_spec_{arch}.json`
+//! (written by `python -m compile.aot`). This module builds the same
+//! µResNet + R-FCN-lite layout programmatically so the pure-Rust
+//! engines, the sharded server, and every test run on a clean checkout
+//! with no Python artifacts. The generated spec uses the exact naming
+//! scheme `DetectorModel::build` discovers (`stem.*`, `s{i}.b{j}.*`,
+//! `head.*`, `cls.*`, `reg.*`) and He-normal initialization from
+//! `coordinator::init`, so a synthetic checkpoint behaves like a
+//! freshly-initialized real one.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::consts::{K, NUM_CLS};
+use crate::coordinator::init::{init_params, init_state};
+use crate::coordinator::params::{Checkpoint, ParamSpec, SpecEntry};
+
+/// Shape of a synthetic detector.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthConfig {
+    /// Channel width of every conv layer.
+    pub width: usize,
+    /// Number of stages (stage 0 stride 1, later stages stride 2;
+    /// one residual block each). `3` gives total stride 8 = IMG/GRID,
+    /// which `DetectorModel::forward` requires — other values are for
+    /// layout-only tests.
+    pub stages: usize,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        // small enough for fast tests, deep enough to exercise the
+        // stride-2 skip paths and the PS-vote head
+        SynthConfig { width: 8, stages: 3 }
+    }
+}
+
+/// Build a spec for the synthetic architecture (`arch = "synth"`).
+pub fn synthetic_spec(cfg: SynthConfig) -> ParamSpec {
+    assert!(cfg.width >= 1 && cfg.stages >= 1);
+    let w = cfg.width;
+    let mut params: Vec<SpecEntry> = Vec::new();
+    let mut state: Vec<SpecEntry> = Vec::new();
+    let (mut po, mut so) = (0usize, 0usize);
+
+    let add_p = |params: &mut Vec<SpecEntry>,
+                 po: &mut usize,
+                 name: &str,
+                 shape: Vec<usize>,
+                 kind: &str,
+                 quantize: bool| {
+        let size: usize = shape.iter().product();
+        params.push(SpecEntry {
+            name: name.into(),
+            shape,
+            kind: kind.into(),
+            quantize,
+            offset: *po,
+            size,
+        });
+        *po += size;
+    };
+    let add_bn = |params: &mut Vec<SpecEntry>,
+                  state: &mut Vec<SpecEntry>,
+                  po: &mut usize,
+                  so: &mut usize,
+                  base: &str,
+                  c: usize| {
+        for (suffix, kind) in [("scale", "bn_scale"), ("bias", "bn_bias")] {
+            let size = c;
+            params.push(SpecEntry {
+                name: format!("{base}.{suffix}"),
+                shape: vec![c],
+                kind: kind.into(),
+                quantize: false,
+                offset: *po,
+                size,
+            });
+            *po += size;
+        }
+        for (suffix, kind) in [("mean", "bn_mean"), ("var", "bn_var")] {
+            state.push(SpecEntry {
+                name: format!("{base}.{suffix}"),
+                shape: vec![c],
+                kind: kind.into(),
+                quantize: false,
+                offset: *so,
+                size: c,
+            });
+            *so += c;
+        }
+    };
+
+    add_p(&mut params, &mut po, "stem.w", vec![3, 3, 3, w], "conv", true);
+    add_bn(&mut params, &mut state, &mut po, &mut so, "stem.bn", w);
+    for si in 0..cfg.stages {
+        let p = format!("s{si}.b0");
+        add_p(&mut params, &mut po, &format!("{p}.conv1.w"), vec![3, 3, w, w], "conv", true);
+        add_bn(&mut params, &mut state, &mut po, &mut so, &format!("{p}.bn1"), w);
+        add_p(&mut params, &mut po, &format!("{p}.conv2.w"), vec![3, 3, w, w], "conv", true);
+        add_bn(&mut params, &mut state, &mut po, &mut so, &format!("{p}.bn2"), w);
+    }
+    add_p(&mut params, &mut po, "head.w", vec![3, 3, w, w], "conv", true);
+    add_bn(&mut params, &mut state, &mut po, &mut so, "head.bn", w);
+    add_p(&mut params, &mut po, "cls.w", vec![w, K * K * NUM_CLS], "conv", true);
+    add_p(&mut params, &mut po, "cls.b", vec![K * K * NUM_CLS], "bias", false);
+    add_p(&mut params, &mut po, "reg.w", vec![w, 4], "conv", true);
+    add_p(&mut params, &mut po, "reg.b", vec![4], "bias", false);
+
+    let spec = ParamSpec {
+        arch: "synth".into(),
+        num_params: po,
+        num_state: so,
+        params,
+        state,
+    };
+    spec.validate().expect("synthetic spec is contiguous by construction");
+    spec
+}
+
+/// He-initialized checkpoint for a synthetic spec, deterministic in
+/// `seed`. `bits` is recorded so serving paths pick the matching
+/// shift-engine width.
+pub fn synthetic_checkpoint(spec: &ParamSpec, seed: u64, bits: u32) -> Checkpoint {
+    Checkpoint {
+        arch: spec.arch.clone(),
+        bits,
+        step: 0,
+        params: init_params(spec, seed),
+        state: init_state(spec),
+    }
+}
+
+/// The one serving-model resolution policy: a real checkpoint (plus
+/// its artifact param spec) when a path is given, else the hermetic
+/// synthetic pair. `fallback_bits` of 32 degrades to 6 so the shift
+/// engine always has a valid width.
+pub fn load_or_synthetic(
+    ckpt_path: Option<&Path>,
+    fallback_bits: u32,
+    seed: u64,
+) -> Result<(ParamSpec, Checkpoint)> {
+    match ckpt_path {
+        Some(p) => {
+            let ck = Checkpoint::load(p)?;
+            let spec =
+                ParamSpec::load_from_dir(&crate::runtime::default_artifacts_dir(), &ck.arch)?;
+            Ok((spec, ck))
+        }
+        None => {
+            let spec = synthetic_spec(SynthConfig::default());
+            let bits = if fallback_bits == 32 { 6 } else { fallback_bits };
+            let ck = synthetic_checkpoint(&spec, seed, bits);
+            Ok((spec, ck))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validates_and_names_resolve() {
+        let spec = synthetic_spec(SynthConfig::default());
+        assert_eq!(spec.arch, "synth");
+        for name in ["stem.w", "s0.b0.conv1.w", "s2.b0.conv2.w", "head.w", "cls.w", "reg.b"] {
+            assert!(spec.param(name).is_ok(), "missing {name}");
+        }
+        assert!(spec.state_entry("s1.b0.bn2.var").is_ok());
+        assert!(spec.conv_entries().count() >= 8);
+    }
+
+    #[test]
+    fn checkpoint_matches_spec_and_is_deterministic() {
+        let spec = synthetic_spec(SynthConfig::default());
+        let a = synthetic_checkpoint(&spec, 7, 6);
+        let b = synthetic_checkpoint(&spec, 7, 6);
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.params.len(), spec.num_params);
+        assert_eq!(a.state.len(), spec.num_state);
+        assert_eq!(a.bits, 6);
+        // BN variances initialized to 1 => folded BN is well-defined
+        let var = spec.view_state(&a.state, "stem.bn.var").unwrap();
+        assert!(var.iter().all(|&v| v == 1.0));
+        let c = synthetic_checkpoint(&spec, 8, 6);
+        assert_ne!(a.params, c.params);
+    }
+
+    #[test]
+    fn wider_config_scales_param_count() {
+        let small = synthetic_spec(SynthConfig { width: 4, stages: 2 });
+        let big = synthetic_spec(SynthConfig { width: 16, stages: 4 });
+        assert!(big.num_params > small.num_params * 4);
+    }
+}

@@ -1,0 +1,171 @@
+//! Hermetic property tests for the exact Theorem-1 quantizers
+//! (`quant::exact`) against brute-force and semi-analytical oracles.
+//!
+//! * the `O(N log N)` ternary solver must match the exhaustive search
+//!   over every `(k₀, s)` pair — including ties between magnitudes,
+//!   exact zeros, and all-negative vectors,
+//! * `exact_enumerate` (b = 3, 4) can never be beaten by the eq.(3)
+//!   µ-threshold scheme, whose error stays within a loose relative
+//!   bound of the optimum (it is an approximation, not a heuristic
+//!   with unbounded loss).
+
+use lbw_net::data::Rng;
+use lbw_net::quant::{exact, l2_err, threshold};
+use lbw_net::util::prop_check;
+
+/// Heavy-tailed vector like a trained conv layer.
+fn heavy(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+    (0..n).map(|_| rng.normal() * 0.05 * (1.0 + rng.normal().abs())).collect()
+}
+
+/// Seed-dependent adversarial shaping: ties, zeros, all-negative.
+fn shaped(n: usize, seed: u64) -> Vec<f32> {
+    let mut w = heavy(n, seed);
+    match seed % 4 {
+        0 => {
+            // magnitude ties: values drawn from a 4-element magnitude set
+            let mags = [0.02f32, 0.08, 0.08, 0.31];
+            let mut rng = Rng::new(seed ^ 0x71E5);
+            for x in w.iter_mut() {
+                let m = mags[rng.below(mags.len())];
+                *x = if rng.uniform() < 0.5 { m } else { -m };
+            }
+        }
+        1 => {
+            // exact zeros sprinkled in
+            let mut rng = Rng::new(seed ^ 0x2E05);
+            for x in w.iter_mut() {
+                if rng.uniform() < 0.3 {
+                    *x = 0.0;
+                }
+            }
+        }
+        2 => {
+            // all-negative
+            for x in w.iter_mut() {
+                *x = -x.abs();
+            }
+        }
+        _ => {}
+    }
+    w
+}
+
+#[test]
+fn prop_ternary_fast_matches_brute_force() {
+    prop_check(64, "ternary O(N log N) vs brute force", |seed| {
+        let n = 1 + (seed as usize * 7) % 64;
+        let w = shaped(n, seed + 1);
+        if w.iter().all(|&x| x == 0.0) {
+            return; // degenerate case covered below
+        }
+        let fast = exact::ternary_exact(&w);
+        let brute = exact::ternary_brute_force(&w);
+        assert!(
+            fast.err <= brute.err * (1.0 + 1e-9) + 1e-12,
+            "n={n}: fast {} > brute {}",
+            fast.err,
+            brute.err
+        );
+        // the solver's reported error must be the actual L2 error
+        assert!((fast.err - l2_err(&w, &fast.wq)).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn ternary_degenerate_vectors() {
+    // all zeros: quantize nothing, zero error
+    let z = vec![0.0f32; 16];
+    let q = exact::ternary_exact(&z);
+    assert_eq!(q.err, 0.0);
+    assert!(q.wq.iter().all(|&x| x == 0.0));
+    // single element and an exact tie pair
+    for w in [vec![-0.7f32], vec![0.25f32, -0.25]] {
+        let fast = exact::ternary_exact(&w);
+        let brute = exact::ternary_brute_force(&w);
+        assert!(fast.err <= brute.err * (1.0 + 1e-9) + 1e-12, "{w:?}");
+    }
+    // all-negative: sign symmetry with the all-positive mirror
+    let neg: Vec<f32> = heavy(32, 5).iter().map(|x| -x.abs()).collect();
+    let pos: Vec<f32> = neg.iter().map(|x| x.abs()).collect();
+    let qn = exact::ternary_exact(&neg);
+    let qp = exact::ternary_exact(&pos);
+    assert!((qn.err - qp.err).abs() < 1e-9);
+    assert_eq!(qn.counts, qp.counts);
+    assert!(qn.wq.iter().all(|&x| x <= 0.0));
+}
+
+#[test]
+fn prop_enumerate_never_beaten_by_threshold() {
+    // Theorem 1 enumerates every magnitude-monotone level assignment
+    // (the eq.(3) cascade produces one of them) with the Theorem-2
+    // optimal scale, so it can never lose. The threshold scheme in
+    // turn stays within a loose relative bound of the optimum.
+    let mut worst_ratio = 1.0f64;
+    for seed in 0..24u64 {
+        let n = 6 + (seed as usize % 9); // enumeration stays cheap
+        let w = shaped(n, seed + 100);
+        if w.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for bits in [3u32, 4] {
+            let best = exact::exact_enumerate(&w, bits);
+            let q = threshold::lbw_quantize_layer(&w, bits, 0.75);
+            let approx_err = l2_err(&w, &q.wq);
+            assert!(
+                best.err <= approx_err + 1e-9,
+                "bits {bits} seed {seed}: exact {} > threshold {}",
+                best.err,
+                approx_err
+            );
+            if best.err > 1e-12 {
+                worst_ratio = worst_ratio.max(approx_err / best.err);
+                // loose structural bound: the µ-rule trades L2 error
+                // for large-weight fidelity but never degenerates
+                assert!(
+                    approx_err <= 25.0 * best.err + 1e-9,
+                    "bits {bits} seed {seed}: threshold err {approx_err} vs exact {}",
+                    best.err
+                );
+            }
+        }
+    }
+    // aggregate: on typical draws the scheme is a *close* approximation
+    assert!(worst_ratio < 25.0, "worst threshold/exact ratio {worst_ratio}");
+}
+
+#[test]
+fn enumerate_structural_invariants() {
+    prop_check(20, "enumeration output structure", |seed| {
+        let n = 4 + (seed as usize % 8);
+        let w = shaped(n, seed + 500);
+        for bits in [3u32, 4] {
+            let q = exact::exact_enumerate(&w, bits);
+            let assigned: usize = q.counts.iter().sum();
+            assert!(assigned <= w.len());
+            // every quantized value is 0 or ±2^{s-t}
+            for &x in &q.wq {
+                if x != 0.0 {
+                    let l = x.abs().log2();
+                    assert!((l - l.round()).abs() < 1e-6, "not a power of two: {x}");
+                }
+            }
+            // reported error is the actual error
+            assert!((q.err - l2_err(&w, &q.wq)).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn enumerate_matches_ternary_solver_at_two_bits() {
+    prop_check(16, "b=2 enumeration reduces to ternary solver", |seed| {
+        let w = shaped(10 + (seed as usize % 6), seed + 900);
+        if w.iter().all(|&x| x == 0.0) {
+            return;
+        }
+        let a = exact::exact_enumerate(&w, 2);
+        let b = exact::ternary_exact(&w);
+        assert!((a.err - b.err).abs() < 1e-12);
+    });
+}

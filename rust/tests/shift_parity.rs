@@ -1,0 +1,132 @@
+//! Hermetic parity tests for the shift-add engine: `ShiftConv` (with
+//! the row layout forced `Dense` and `Sparse`) must reproduce the f32
+//! reference convolution run on the *quantized* weights to fixed-point
+//! tolerance, across random shapes, sparsities, strides, and scale
+//! powers — including the `t >= FIX` shift-saturation edge where a
+//! weight's magnitude falls below one 16.16 ulp.
+
+use lbw_net::data::Rng;
+use lbw_net::nn::conv::conv2d;
+use lbw_net::nn::shift_conv::{RowLayout, ShiftConv, FIX};
+use lbw_net::quant::threshold::{lbw_quantize, lbw_quantize_layer};
+use lbw_net::tensor::Tensor;
+use lbw_net::util::prop_check;
+
+fn randv(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut rng = Rng::new(seed | 1);
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+/// Fixed-point tolerance: one rounding ulp per accumulated term.
+fn fix_tol(kh: usize, kw: usize, cin: usize, s: i32) -> f32 {
+    ((kh * kw * cin) as f32 * f32::powi(2.0, s - FIX + 1)).max(1e-4)
+}
+
+#[test]
+fn prop_forced_layouts_match_f32_reference() {
+    prop_check(48, "ShiftConv forced layouts vs f32 conv", |seed| {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B9) + 3);
+        let kh = [1usize, 3][rng.below(2)];
+        let (cin, cout) = ([2usize, 4, 8][rng.below(3)], [3usize, 8, 16][rng.below(3)]);
+        let hw = 5 + rng.below(6); // 5..=10
+        let stride = 1 + rng.below(2);
+        let bits = [2u32, 4, 5, 6][rng.below(4)];
+        // sparsity knob: µ ratio sweeps the pruning threshold
+        let mu_ratio = 0.3 + 0.7 * rng.uniform();
+        // scale-power knob: weight magnitudes span 2^-3 .. 2^3
+        let wscale = f32::powi(2.0, rng.below(7) as i32 - 3) * 0.2;
+
+        let w = randv(kh * kh * cin * cout, seed * 31 + 7, wscale);
+        let q = lbw_quantize_layer(&w, bits, mu_ratio);
+        let x = Tensor::from_vec(
+            &[1, hw, hw, cin],
+            randv(hw * hw * cin, seed * 17 + 11, 1.0),
+        );
+        let expect = conv2d(&x, &Tensor::from_vec(&[kh, kh, cin, cout], q.wq.clone()), stride);
+        let tol = fix_tol(kh, kh, cin, q.s);
+
+        let mut outs = Vec::new();
+        for layout in [RowLayout::Dense, RowLayout::Sparse, RowLayout::Auto] {
+            let mut sc = ShiftConv::from_quant_with_layout(&q, kh, kh, cin, cout, bits, layout);
+            let got = sc.forward(&x, stride);
+            assert_eq!(got.shape, expect.shape, "{layout:?}");
+            let d = got.max_abs_diff(&expect);
+            assert!(
+                d <= tol,
+                "{layout:?} bits={bits} mu={mu_ratio:.2} s={}: diff {d} > tol {tol}",
+                q.s
+            );
+            outs.push(got);
+        }
+        // same integer arithmetic in the same order: the layouts must
+        // agree bitwise, not just within tolerance
+        assert_eq!(outs[0].data, outs[1].data, "Dense vs Sparse diverged");
+        assert_eq!(outs[0].data, outs[2].data, "Dense vs Auto diverged");
+    });
+}
+
+#[test]
+fn shift_saturation_at_t_ge_fix() {
+    // b=7 has n=32 magnitude levels, so with µ = ‖W‖∞ the quantizer
+    // emits levels t ≥ FIX (=16): the 16.16 product underflows to at
+    // most one ulp. The engine must stay within fixed-point tolerance
+    // (and not hit the undefined >= 32-bit shift).
+    let (kh, kw, cin, cout) = (3usize, 3, 2, 4);
+    let n = kh * kw * cin * cout;
+    let mut w = vec![0.0f32; n];
+    // magnitudes 2^0 .. 2^-25 relative to winf = 1.0
+    let exps = [0i32, -1, -3, -8, -14, -16, -18, -20, -25];
+    for (i, x) in w.iter_mut().enumerate() {
+        let e = exps[i % exps.len()];
+        let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+        *x = sign * f32::powi(2.0, e);
+    }
+    let bits = 7;
+    let q = lbw_quantize(&w, 1.0, bits);
+    let deep = q.levels.iter().filter(|&&t| t >= FIX).count();
+    assert!(deep > 0, "test must exercise t >= FIX, levels {:?}", q.levels);
+
+    let x = Tensor::from_vec(&[1, 6, 6, cin], randv(36 * cin, 99, 1.0));
+    let expect = conv2d(&x, &Tensor::from_vec(&[kh, kw, cin, cout], q.wq.clone()), 1);
+    for layout in [RowLayout::Dense, RowLayout::Sparse] {
+        let mut sc = ShiftConv::from_quant_with_layout(&q, kh, kw, cin, cout, bits, layout);
+        let got = sc.forward(&x, 1);
+        let d = got.max_abs_diff(&expect);
+        let tol = fix_tol(kh, kw, cin, q.s);
+        assert!(d <= tol, "{layout:?}: diff {d} > tol {tol}");
+    }
+}
+
+#[test]
+fn stride_two_and_batch_parity() {
+    for bits in [2u32, 5] {
+        let (kh, kw, cin, cout) = (3usize, 3, 4, 6);
+        let w = randv(kh * kw * cin * cout, 123 + bits as u64, 0.3);
+        let q = lbw_quantize_layer(&w, bits, 0.75);
+        let x = Tensor::from_vec(&[2, 8, 8, cin], randv(2 * 64 * cin, 5, 1.0));
+        let expect = conv2d(&x, &Tensor::from_vec(&[kh, kw, cin, cout], q.wq.clone()), 2);
+        for layout in [RowLayout::Dense, RowLayout::Sparse] {
+            let mut sc = ShiftConv::from_quant_with_layout(&q, kh, kw, cin, cout, bits, layout);
+            let got = sc.forward(&x, 2);
+            assert_eq!(got.shape, expect.shape);
+            assert!(got.max_abs_diff(&expect) <= fix_tol(kh, kw, cin, q.s));
+        }
+    }
+}
+
+#[test]
+fn sparse_layout_on_dense_weights_and_vice_versa() {
+    // force the "wrong" layout for the density and check nothing
+    // depends on the Auto heuristic
+    let (kh, kw, cin, cout) = (3usize, 3, 4, 8);
+    let w = randv(kh * kw * cin * cout, 77, 0.2);
+    // b=6 (dense nonzeros) forced Sparse; b=2 (mostly zeros) forced Dense
+    for (bits, layout) in [(6u32, RowLayout::Sparse), (2u32, RowLayout::Dense)] {
+        let q = lbw_quantize_layer(&w, bits, 0.75);
+        let x = Tensor::from_vec(&[1, 7, 7, cin], randv(49 * cin, 13, 0.8));
+        let expect = conv2d(&x, &Tensor::from_vec(&[kh, kw, cin, cout], q.wq.clone()), 1);
+        let mut sc = ShiftConv::from_quant_with_layout(&q, kh, kw, cin, cout, bits, layout);
+        let got = sc.forward(&x, 1);
+        assert!(got.max_abs_diff(&expect) <= fix_tol(kh, kw, cin, q.s), "bits {bits}");
+    }
+}

@@ -1,0 +1,238 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The deployment story of this repo is the pure-Rust engine
+//! (`lbw_net::nn`); the PJRT artifact path is an *optional* fast path
+//! that needs the real `xla_extension` bindings. This stub keeps that
+//! path compiling in the fully-offline build: [`Literal`] is a real,
+//! working host-side tensor container (so literal marshalling helpers
+//! and their tests behave), while [`PjRtClient::cpu`] — the only way
+//! to reach device execution — reports that PJRT is unavailable.
+//!
+//! Swapping in the real crate is a one-line change in the workspace
+//! `Cargo.toml` (point the `xla` dependency at the real bindings); the
+//! API surface below mirrors it.
+
+use std::fmt;
+
+/// Stub error type (mirrors `xla::Error` closely enough for `{e:?}`
+/// formatting and `?` conversion into `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: this is the offline xla stub — \
+     use the hermetic engine serving mode, or build against the real \
+     xla_extension bindings (see README, \"Serving modes\")";
+
+/// Element types the in-tree code marshals. Sealed to f32/i32.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>, dims: Vec<i64>) -> Literal;
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>, dims: Vec<i64>) -> Literal {
+        Literal::F32 { data, dims }
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<f32>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>, dims: Vec<i64>) -> Literal {
+        Literal::I32 { data, dims }
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<i32>> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+/// Host-side literal: dense f32/i32 buffers plus shape, or a tuple.
+/// Fully functional (unlike the execution types below).
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        T::wrap(data.to_vec(), dims)
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        T::wrap(vec![v], vec![])
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.len(),
+        }
+    }
+
+    /// Reshape, checking the element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.len() {
+            return Err(Error(format!(
+                "reshape {:?}: {} elements into {} slots",
+                dims,
+                self.len(),
+                want
+            )));
+        }
+        let mut out = self.clone();
+        match &mut out {
+            Literal::F32 { dims: d, .. } | Literal::I32 { dims: d, .. } => {
+                *d = dims.to_vec();
+            }
+            Literal::Tuple(_) => return Err(Error("cannot reshape a tuple".into())),
+        }
+        Ok(out)
+    }
+
+    /// Copy the buffer out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    /// First element of the buffer (scalars in the train-step outputs).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    /// Unpack a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            other => Ok(vec![other]),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: the text is held but never compiled).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// Computation wrapper (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client. [`PjRtClient::cpu`] always fails in the stub — device
+/// execution needs the real bindings.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Compiled executable (stub: unreachable without a client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors the real replica-major output nesting.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Device buffer (stub: unreachable without a client).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32_i32() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[5i32, 6, 7]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![5, 6, 7]);
+        assert_eq!(i.get_first_element::<i32>().unwrap(), 5);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(4.5f32);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 4.5);
+        let t = Literal::Tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline xla stub"));
+    }
+}
