@@ -6,12 +6,15 @@
 #                   (needs the python env; optional — everything in
 #                   `make test` passes without artifacts)
 #   make bench      run every in-tree benchmark binary
+#   make bench-smoke  reduced bench_serve sweep (planned vs naive
+#                   executors, 1 shard) — fast enough for CI; kernel
+#                   regressions in either executor fail loudly here
 #   make lint       rustfmt + clippy, as CI runs them
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test artifacts bench lint clean
+.PHONY: build test artifacts bench bench-smoke lint clean
 
 build:
 	$(CARGO) build --release
@@ -24,6 +27,9 @@ artifacts:
 
 bench: build
 	$(CARGO) bench
+
+bench-smoke: build
+	$(CARGO) run --release --example bench_serve -- --smoke
 
 lint:
 	$(CARGO) fmt --check

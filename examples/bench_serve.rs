@@ -1,28 +1,35 @@
-//! Serving load generator: sweep shard count × batch window over
-//! SynthVOC scenes and record the throughput/latency trajectory.
+//! Serving load generator: sweep executor × engine × shard count ×
+//! batch window over SynthVOC scenes and record the throughput/latency
+//! trajectory.
 //!
 //! Fully hermetic — the sweep drives the pure-Rust engines behind the
 //! sharded server on a synthetic He-initialized detector, so it runs
 //! on a clean checkout (no Python, no artifacts). Emits
-//! `BENCH_serve.json`: one row per (engine, shards, batch window)
-//! cell with wall time, img/s, latency percentiles, mean batch
-//! occupancy, and the per-shard request counts.
+//! `BENCH_serve.json`: one row per (executor, engine, shards, batch
+//! window) cell with wall time, img/s, latency percentiles, mean batch
+//! occupancy, and the per-shard request counts. The `executor` field
+//! distinguishes the planned arena executor (production path) from the
+//! naive per-op reference; the summary prints the planned/naive img/s
+//! ratio per engine at a single shard.
 //!
 //! Run with: `cargo run --release --example bench_serve`
+//! Smoke mode (CI): `cargo run --release --example bench_serve -- --smoke`
+//! (reduced request count + 1-shard cells only; also honours the
+//! `BENCH_SERVE_REQUESTS` env var).
 
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use lbw_net::coordinator::server::{DetectServer, ServerConfig};
+use lbw_net::coordinator::server::{DetectServer, Executor, ServerConfig};
 use lbw_net::data::{generate_scene, SceneConfig};
 use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
 use lbw_net::nn::EngineKind;
 use lbw_net::util::json::Json;
 
-const REQUESTS: usize = 192;
 const CONCURRENCY: usize = 8;
 
 struct Cell {
+    executor: String,
     engine: String,
     shards: usize,
     window_ms: u64,
@@ -35,10 +42,10 @@ struct Cell {
     shard_counts: Vec<usize>,
 }
 
-fn drive(server: &DetectServer, scenes: &[Vec<f32>]) -> Result<Duration> {
+fn drive(server: &DetectServer, scenes: &[Vec<f32>], requests: usize) -> Result<Duration> {
     let handle = server.handle();
     let t0 = Instant::now();
-    let per = REQUESTS / CONCURRENCY;
+    let per = requests / CONCURRENCY;
     let mut clients = Vec::new();
     for c in 0..CONCURRENCY {
         let h = handle.clone();
@@ -58,6 +65,14 @@ fn drive(server: &DetectServer, scenes: &[Vec<f32>]) -> Result<Duration> {
 }
 
 fn main() -> Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let requests: usize = std::env::var("BENCH_SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 48 } else { 192 });
+    let shard_list: &[usize] = if smoke { &[1] } else { &[1, 2, 4] };
+    let window_list: &[u64] = if smoke { &[2] } else { &[0, 2] };
+
     let spec = synthetic_spec(SynthConfig::default());
     let ckpt = synthetic_checkpoint(&spec, 2027, 6);
     let scene_cfg = SceneConfig::default();
@@ -65,72 +80,91 @@ fn main() -> Result<()> {
         (0..32u64).map(|i| generate_scene(4242, i, &scene_cfg).image).collect();
 
     println!(
-        "=== bench_serve: {REQUESTS} requests, {CONCURRENCY} clients, synthetic detector ==="
+        "=== bench_serve: {requests} requests, {CONCURRENCY} clients, synthetic detector{} ===",
+        if smoke { " (smoke)" } else { "" }
     );
     println!(
-        "{:<8} {:<7} {:<10} {:>9} {:>9} {:>9} {:>9} {:>11}",
-        "engine", "shards", "window", "img/s", "p50 ms", "p95 ms", "p99 ms", "mean batch"
+        "{:<9} {:<8} {:<7} {:<10} {:>9} {:>9} {:>9} {:>9} {:>11}",
+        "executor", "engine", "shards", "window", "img/s", "p50 ms", "p95 ms", "p99 ms",
+        "mean batch"
     );
 
     let mut cells: Vec<Cell> = Vec::new();
-    for (engine_name, engine) in
-        [("float", EngineKind::Float), ("shift6", EngineKind::Shift { bits: 6 })]
-    {
-        for &shards in &[1usize, 2, 4] {
-            for &window_ms in &[0u64, 2] {
-                let cfg = ServerConfig {
-                    shards,
-                    max_batch: 8,
-                    batch_window: Duration::from_millis(window_ms),
-                    queue_depth: 256,
-                    ..Default::default()
-                };
-                let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
-                let wall = drive(&server, &scenes)?;
-                let agg = server.handle().latency();
-                let shard_counts: Vec<usize> =
-                    server.shard_latencies().iter().map(|s| s.count()).collect();
-                let cell = Cell {
-                    engine: engine_name.to_string(),
-                    shards,
-                    window_ms,
-                    wall_s: wall.as_secs_f64(),
-                    imgs_per_s: agg.throughput(wall),
-                    p50_ms: agg.percentile_ms(50.0),
-                    p95_ms: agg.percentile_ms(95.0),
-                    p99_ms: agg.percentile_ms(99.0),
-                    mean_batch: agg.mean_batch(),
-                    shard_counts,
-                };
-                println!(
-                    "{:<8} {:<7} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}",
-                    cell.engine,
-                    cell.shards,
-                    format!("{window_ms}ms"),
-                    cell.imgs_per_s,
-                    cell.p50_ms,
-                    cell.p95_ms,
-                    cell.p99_ms,
-                    cell.mean_batch
-                );
-                server.shutdown();
-                cells.push(cell);
+    for (exec_name, executor) in [("planned", Executor::Planned), ("naive", Executor::Naive)] {
+        for (engine_name, engine) in
+            [("float", EngineKind::Float), ("shift6", EngineKind::Shift { bits: 6 })]
+        {
+            for &shards in shard_list {
+                for &window_ms in window_list {
+                    let cfg = ServerConfig {
+                        shards,
+                        max_batch: 8,
+                        batch_window: Duration::from_millis(window_ms),
+                        queue_depth: 256,
+                        executor,
+                        ..Default::default()
+                    };
+                    let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
+                    let wall = drive(&server, &scenes, requests)?;
+                    let agg = server.handle().latency();
+                    let shard_counts: Vec<usize> =
+                        server.shard_latencies().iter().map(|s| s.count()).collect();
+                    let cell = Cell {
+                        executor: exec_name.to_string(),
+                        engine: engine_name.to_string(),
+                        shards,
+                        window_ms,
+                        wall_s: wall.as_secs_f64(),
+                        imgs_per_s: agg.throughput(wall),
+                        p50_ms: agg.percentile_ms(50.0),
+                        p95_ms: agg.percentile_ms(95.0),
+                        p99_ms: agg.percentile_ms(99.0),
+                        mean_batch: agg.mean_batch(),
+                        shard_counts,
+                    };
+                    println!(
+                        "{:<9} {:<8} {:<7} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}",
+                        cell.executor,
+                        cell.engine,
+                        cell.shards,
+                        format!("{window_ms}ms"),
+                        cell.imgs_per_s,
+                        cell.p50_ms,
+                        cell.p95_ms,
+                        cell.p99_ms,
+                        cell.mean_batch
+                    );
+                    server.shutdown();
+                    cells.push(cell);
+                }
             }
         }
     }
 
-    // scaling summary: shards=4 vs shards=1 at the same window/engine
+    let rate = |exec: &str, engine: &str, shards: usize| {
+        cells
+            .iter()
+            .find(|c| {
+                c.executor == exec && c.engine == engine && c.shards == shards && c.window_ms == 2
+            })
+            .map(|c| c.imgs_per_s)
+            .unwrap_or(0.0)
+    };
+    // the headline ratio: planned vs naive through the identical
+    // serving stack, single shard (the ISSUE-2 acceptance number)
     for engine in ["float", "shift6"] {
-        let rate = |shards: usize| {
-            cells
-                .iter()
-                .find(|c| c.engine == engine && c.shards == shards && c.window_ms == 2)
-                .map(|c| c.imgs_per_s)
-                .unwrap_or(0.0)
-        };
-        let (r1, r4) = (rate(1), rate(4));
-        if r1 > 0.0 {
-            println!("{engine}: 4-shard speedup over 1 shard = {:.2}x", r4 / r1);
+        let (p, n) = (rate("planned", engine, 1), rate("naive", engine, 1));
+        if n > 0.0 {
+            println!("{engine}: planned/naive single-shard speedup = {:.2}x", p / n);
+        }
+    }
+    if !smoke {
+        // scaling summary on the production path: shards=4 vs shards=1
+        for engine in ["float", "shift6"] {
+            let (r1, r4) = (rate("planned", engine, 1), rate("planned", engine, 4));
+            if r1 > 0.0 {
+                println!("{engine}: planned 4-shard speedup over 1 shard = {:.2}x", r4 / r1);
+            }
         }
     }
 
@@ -139,10 +173,11 @@ fn main() -> Result<()> {
             .iter()
             .map(|c| {
                 Json::obj(vec![
+                    ("executor", Json::str(c.executor.as_str())),
                     ("engine", Json::str(c.engine.as_str())),
                     ("shards", Json::num(c.shards as f64)),
                     ("batch_window_ms", Json::num(c.window_ms as f64)),
-                    ("requests", Json::num(REQUESTS as f64)),
+                    ("requests", Json::num(requests as f64)),
                     ("concurrency", Json::num(CONCURRENCY as f64)),
                     ("wall_s", Json::num(c.wall_s)),
                     ("imgs_per_s", Json::num(c.imgs_per_s)),
@@ -160,7 +195,10 @@ fn main() -> Result<()> {
     );
     let doc = Json::obj(vec![
         ("bench", Json::str("serve_shard_sweep")),
-        ("detector", Json::str("synthetic width-8, 3 stages, b=6 shift + f32 engines")),
+        (
+            "detector",
+            Json::str("synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors"),
+        ),
         ("rows", rows),
     ]);
     std::fs::write("BENCH_serve.json", doc.to_string())?;

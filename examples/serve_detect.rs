@@ -41,6 +41,9 @@ fn main() -> Result<()> {
     let (spec, ck) = get_model()?;
 
     // --- sharded serving under concurrent load --------------------------
+    // each shard compiles one reusable plan + activation arena at
+    // startup (ServerConfig::executor defaults to Executor::Planned) —
+    // batched requests then execute with zero per-request setup
     let shards = 2;
     let server = DetectServer::start_engine(
         &spec,
@@ -77,10 +80,14 @@ fn main() -> Result<()> {
     server.shutdown();
 
     // --- Fig. 1 analogue: float engine vs 6-bit shift engine ------------
+    // both engines run through the planned API: build once, compile a
+    // single-image plan, reuse its arena across scenes
     println!("\n=== Fig. 1 analogue: f32 engine vs 6-bit shift-add engine ===");
-    let mut float_engine = DetectorModel::build(&spec, &ck, EngineKind::Float)?;
-    let mut shift_engine =
+    let float_engine = DetectorModel::build(&spec, &ck, EngineKind::Float)?;
+    let shift_engine =
         DetectorModel::build(&spec, &ck, EngineKind::Shift { bits: ck.bits.clamp(2, 6) })?;
+    let mut float_plan = float_engine.plan(1);
+    let mut shift_plan = shift_engine.plan(1);
     use lbw_net::detection::{decode_grid, nms};
     for i in 0..3u64 {
         // scene 2 is "crowded": many objects, the paper's hard case
@@ -91,11 +98,9 @@ fn main() -> Result<()> {
         };
         let s = generate_scene(2024, i, &cfg);
         println!("scene {i}: {} ground-truth objects", s.objects.len());
-        for (name, engine) in
-            [("  f32", &mut float_engine), ("shift", &mut shift_engine)]
-        {
-            let (cp, rg) = engine.forward(&s.image, 1);
-            let dets = nms(decode_grid(&cp, &rg, 0.35), 0.45);
+        for (name, plan) in [("  f32", &mut float_plan), ("shift", &mut shift_plan)] {
+            let (cp, rg) = plan.forward(&s.image, 1);
+            let dets = nms(decode_grid(cp, rg, 0.35), 0.45);
             let matched = s
                 .objects
                 .iter()

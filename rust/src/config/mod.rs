@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use anyhow::{ensure, Result};
 
-use crate::coordinator::server::ServerConfig;
+use crate::coordinator::server::{Executor, ServerConfig};
 use crate::coordinator::trainer::TrainConfig;
 use crate::data::SceneConfig;
 use crate::util::toml::{parse as toml_parse, TomlDoc};
@@ -65,6 +65,9 @@ pub struct ServeSection {
     /// Serving engine: "artifact" (PJRT fast path), "float", or
     /// "shift" (the hermetic pure-Rust engines).
     pub engine: String,
+    /// Engine-mode executor: "planned" (arena executor, the default)
+    /// or "naive" (per-op reference walk, for baselines).
+    pub executor: String,
     pub max_batch: usize,
     pub batch_window_ms: u64,
     pub queue_depth: usize,
@@ -78,6 +81,7 @@ impl Default for ServeSection {
         ServeSection {
             shards: s.shards,
             engine: "shift".into(),
+            executor: "planned".into(),
             max_batch: s.max_batch,
             batch_window_ms: s.batch_window.as_millis() as u64,
             queue_depth: s.queue_depth,
@@ -145,6 +149,7 @@ impl Config {
                 "data.noise" => cfg.data.noise = v.as_f32()?,
                 "serve.shards" => cfg.serve.shards = v.as_usize()?,
                 "serve.engine" => cfg.serve.engine = v.as_str()?.to_string(),
+                "serve.executor" => cfg.serve.executor = v.as_str()?.to_string(),
                 "serve.max_batch" => cfg.serve.max_batch = v.as_usize()?,
                 "serve.batch_window_ms" => cfg.serve.batch_window_ms = v.as_u64()?,
                 "serve.queue_depth" => cfg.serve.queue_depth = v.as_usize()?,
@@ -180,6 +185,11 @@ impl Config {
             "serve.engine must be artifact|float|shift, got {}",
             self.serve.engine
         );
+        ensure!(
+            matches!(self.serve.executor.as_str(), "planned" | "naive"),
+            "serve.executor must be planned|naive, got {}",
+            self.serve.executor
+        );
         Ok(())
     }
 
@@ -192,6 +202,11 @@ impl Config {
             batch_window: Duration::from_millis(self.serve.batch_window_ms),
             queue_depth: self.serve.queue_depth,
             submit_timeout: Duration::from_millis(self.serve.submit_timeout_ms),
+            executor: if self.serve.executor == "naive" {
+                Executor::Naive
+            } else {
+                Executor::Planned
+            },
             ..ServerConfig::default()
         }
     }

@@ -38,6 +38,20 @@ use crate::detection::{decode_grid, nms, Detection};
 use crate::nn::{DetectorModel, EngineKind};
 use crate::runtime::{lit_f32, to_f32, Runtime};
 
+/// Which engine-mode executor runs inside each shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Executor {
+    /// The planned arena executor: one plan + arena compiled per shard
+    /// at startup, reused for every batch (zero allocation per
+    /// forward). The production path.
+    #[default]
+    Planned,
+    /// The naive per-op reference executor (fresh tensors per op) —
+    /// kept selectable so `bench_serve` can measure the planned/naive
+    /// ratio through the identical serving stack.
+    Naive,
+}
+
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -57,6 +71,8 @@ pub struct ServerConfig {
     /// artifact path overrides this with the AOT batch size; the
     /// engine path runs ragged batches as-is.
     pub pad_batch: usize,
+    /// Engine-mode executor variant (ignored by the artifact path).
+    pub executor: Executor,
 }
 
 impl Default for ServerConfig {
@@ -70,6 +86,7 @@ impl Default for ServerConfig {
             queue_depth: 256,
             submit_timeout: Duration::from_secs(5),
             pad_batch: 1,
+            executor: Executor::Planned,
         }
     }
 }
@@ -194,21 +211,44 @@ impl DetectServer {
     }
 
     /// Start in **engine mode**: every shard gets its own pure-Rust
-    /// [`DetectorModel`] built from the checkpoint (re-quantizing for
-    /// the shift engine). No artifacts, no Python — hermetic.
+    /// engine built from the checkpoint (re-quantizing for the shift
+    /// engine). No artifacts, no Python — hermetic.
+    ///
+    /// With the default [`Executor::Planned`] each shard compiles one
+    /// reusable plan + activation arena on its own thread at startup
+    /// and executes every batch through it back-to-back — no
+    /// per-request model setup and no allocation inside the forward
+    /// pass. [`Executor::Naive`] serves through the reference per-op
+    /// executor instead (benchmark baseline).
     pub fn start_engine(
         spec: &ParamSpec,
         ckpt: &Checkpoint,
         engine: EngineKind,
         cfg: ServerConfig,
     ) -> Result<DetectServer> {
+        let executor = cfg.executor;
+        // a shard never runs a batch larger than max(max_batch, pad_batch)
+        let plan_batch = cfg.max_batch.max(cfg.pad_batch).max(1);
         let mut setups: Vec<ShardSetup> = Vec::with_capacity(cfg.shards.max(1));
         for _ in 0..cfg.shards.max(1) {
-            let mut model = DetectorModel::build(spec, ckpt, engine)?;
+            let model = DetectorModel::build(spec, ckpt, engine)?;
             setups.push(Box::new(move |_shard: usize| -> Result<InferFn> {
-                Ok(Box::new(move |images: &[f32], batch: usize| {
-                    Ok(model.forward(images, batch))
-                }))
+                Ok(match executor {
+                    Executor::Planned => {
+                        // compile once on the shard thread; the builder
+                        // model is dropped — the shard owns only the plan
+                        let mut plan = model.plan(plan_batch);
+                        Box::new(move |images: &[f32], batch: usize| {
+                            Ok(plan.forward_vec(images, batch))
+                        })
+                    }
+                    Executor::Naive => {
+                        let mut model = model;
+                        Box::new(move |images: &[f32], batch: usize| {
+                            Ok(model.forward_naive(images, batch))
+                        })
+                    }
+                })
             }) as ShardSetup);
         }
         Self::start_with(cfg, setups)

@@ -17,9 +17,9 @@ use lbw_net::coordinator::server::DetectServer;
 use lbw_net::coordinator::trainer::{evaluate_with_artifact, save_outcome, Trainer};
 use lbw_net::data::{generate_scene, Scene, SceneConfig, ShapeClass};
 use lbw_net::detection::{decode_grid, nms, Detection};
-use lbw_net::nn::{DetectorModel, EngineKind};
+use lbw_net::nn::EngineKind;
 use lbw_net::quant::{baselines, exact, stats, threshold};
-use lbw_net::runtime::{default_artifacts_dir, Runtime};
+use lbw_net::runtime::{default_artifacts_dir, InferBackend, Runtime};
 use lbw_net::util::cli::Args;
 use lbw_net::util::json::Json;
 
@@ -36,7 +36,7 @@ USAGE: repro <subcommand> [--flag value ...]
   quantize  [--ckpt PATH --bits 2,4,5,6 --n N]                         (§2.1 exactness)
   inq       [--bits 4|5 --steps N --seed N --out ckpt.lbw]              (INQ baseline [25])
   serve     [--ckpt PATH --engine shift|float|artifact --shards N
-             --requests N --concurrency N]                             (sharded serving)
+             --executor planned|naive --requests N --concurrency N]    (sharded serving)
   gen-data  [--count N --seed N --out DIR]                             (SynthVOC scenes)
 
 serve runs hermetically with the pure-Rust engines (shift/float): with
@@ -125,12 +125,13 @@ fn eval_checkpoint(ck: &Checkpoint, scenes: u64, engine: &str, cfg: &Config) -> 
             } else {
                 EngineKind::Shift { bits: ck.bits.min(6) }
             };
-            let mut model = DetectorModel::build(&spec, ck, kind)?;
+            // the planned executor: one plan + arena reused per scene
+            let mut backend = InferBackend::planned(&spec, ck, kind, 1)?;
             let mut dets = Vec::new();
             let mut gts = Vec::new();
             for i in 0..scenes {
                 let s = generate_scene(cfg.train.seed, cfg.data.train_scenes + i, &scene_cfg);
-                let (cp, rg) = model.forward(&s.image, 1);
+                let (cp, rg) = backend.infer(&s.image, 1)?;
                 for d in nms(decode_grid(&cp, &rg, 0.05), 0.45) {
                     dets.push((i as usize, d));
                 }
@@ -177,13 +178,10 @@ fn cmd_detect(args: &Args) -> Result<()> {
     let thresh: f32 = args.parse_or("thresh", 0.5)?;
 
     let scene_cfg = SceneConfig::default();
-    let rt;
-    let mut native: Option<DetectorModel> = None;
-    let exe = match engine.as_str() {
-        "artifact" => {
-            rt = Runtime::open_default()?;
-            Some(rt.load(&format!("infer_{}_b{}_bs1", ck.arch, ck.bits))?)
-        }
+    // one backend, engine-agnostic: the AOT artifact or the planned
+    // pure-Rust executor behind the same `infer` call
+    let mut backend = match engine.as_str() {
+        "artifact" => InferBackend::artifact(&ck, 1)?,
         "float" | "shift" => {
             let spec = ParamSpec::load_from_dir(&default_artifacts_dir(), &ck.arch)?;
             let kind = if engine == "float" {
@@ -191,8 +189,7 @@ fn cmd_detect(args: &Args) -> Result<()> {
             } else {
                 EngineKind::Shift { bits: ck.bits.min(6) }
             };
-            native = Some(DetectorModel::build(&spec, &ck, kind)?);
-            None
+            InferBackend::planned(&spec, &ck, kind, 1)?
         }
         other => bail!("unknown engine `{other}`"),
     };
@@ -205,16 +202,7 @@ fn cmd_detect(args: &Args) -> Result<()> {
                 class_name(g.class), g.bbox.x1, g.bbox.y1, g.bbox.x2, g.bbox.y2
             );
         }
-        let (cp, rg) = if let Some(exe) = &exe {
-            let out = exe.run(&[
-                lbw_net::runtime::lit_f32(&ck.params, &[ck.params.len()])?,
-                lbw_net::runtime::lit_f32(&ck.state, &[ck.state.len()])?,
-                lbw_net::runtime::lit_f32(&s.image, &[1, IMG, IMG, 3])?,
-            ])?;
-            (lbw_net::runtime::to_f32(&out[0])?, lbw_net::runtime::to_f32(&out[1])?)
-        } else {
-            native.as_mut().unwrap().forward(&s.image, 1)
-        };
+        let (cp, rg) = backend.infer(&s.image, 1)?;
         let dets = nms(decode_grid(&cp, &rg, thresh), 0.45);
         print_detections(&format!("{engine} b{}", ck.bits), &dets, &s);
     }
@@ -389,12 +377,19 @@ fn cmd_inq(args: &Args, cfg: &Config) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
-    args.check_known(&["ckpt", "engine", "shards", "requests", "concurrency", "config"])?;
+    args.check_known(&[
+        "ckpt", "engine", "executor", "shards", "requests", "concurrency", "config",
+    ])?;
     let requests: usize = args.parse_or("requests", 64)?;
     let concurrency: usize = args.parse_or("concurrency", 8)?;
     let engine = args.str_or("engine", &cfg.serve.engine);
     let mut server_cfg = cfg.to_server_config();
     server_cfg.shards = args.parse_or("shards", server_cfg.shards)?;
+    match args.str_or("executor", &cfg.serve.executor).as_str() {
+        "planned" => server_cfg.executor = lbw_net::coordinator::server::Executor::Planned,
+        "naive" => server_cfg.executor = lbw_net::coordinator::server::Executor::Naive,
+        other => bail!("unknown executor `{other}` (planned|naive)"),
+    }
 
     let server = match engine.as_str() {
         "artifact" => {
@@ -420,8 +415,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
                 EngineKind::Shift { bits: ck.bits.clamp(2, 6) }
             };
             println!(
-                "serving {} via hermetic {kind:?} engine, {} shard(s)",
-                ck.arch, server_cfg.shards
+                "serving {} via hermetic {kind:?} engine ({:?} executor), {} shard(s)",
+                ck.arch, server_cfg.executor, server_cfg.shards
             );
             DetectServer::start_engine(&spec, &ck, kind, server_cfg)?
         }

@@ -26,6 +26,17 @@ pub fn ps_vote(maps: &Tensor) -> Tensor {
     let b = maps.shape[0];
     assert_eq!(maps.shape[1..], [GRID, GRID, K * K * NUM_CLS]);
     let mut out = Tensor::zeros(&[b, GRID, GRID, NUM_CLS]);
+    ps_vote_into(&maps.data, b, &mut out.data);
+    out
+}
+
+/// Allocation-free PS vote for the planned executor: `maps` is a flat
+/// `[b, G, G, K*K·NUM_CLS]` slice, `out` a flat `[b, G, G, NUM_CLS]`
+/// arena slot (overwritten). Same math as [`ps_vote`].
+pub fn ps_vote_into(maps: &[f32], b: usize, out: &mut [f32]) {
+    assert_eq!(maps.len(), b * GRID * GRID * K * K * NUM_CLS);
+    assert_eq!(out.len(), b * GRID * GRID * NUM_CLS);
+    out.fill(0.0);
     let kk = (K * K) as f32;
     for ni in 0..b {
         for y in 0..GRID as i64 {
@@ -42,14 +53,13 @@ pub fn ps_vote(maps: &Tensor) -> Tensor {
                             + g * NUM_CLS;
                         let dst = ((ni * GRID + y as usize) * GRID + x as usize) * NUM_CLS;
                         for c in 0..NUM_CLS {
-                            out.data[dst + c] += maps.data[src + c] / kk;
+                            out[dst + c] += maps[src + c] / kk;
                         }
                     }
                 }
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -14,6 +14,11 @@
 //!   R-FCN-lite forward pass mirroring `python/compile/model.py`,
 //!   cross-checked against the `infer_*` artifacts in
 //!   `integration_engine.rs`.
+//! * [`plan`] — the planned executor: a [`DetectorModel`] compiled
+//!   once into a static op list + preallocated activation arena, run
+//!   with fused conv+BN+ReLU GEMM steps and zero heap allocation per
+//!   forward. This is the serving hot path; the naive per-op walk is
+//!   kept as `DetectorModel::forward_naive` for parity/benchmarks.
 //! * [`synth`] — synthetic spec/checkpoint builder so the engines (and
 //!   the sharded server on top of them) run hermetically, with no
 //!   Python artifacts.
@@ -21,7 +26,9 @@
 pub mod conv;
 pub mod layers;
 pub mod model;
+pub mod plan;
 pub mod shift_conv;
 pub mod synth;
 
 pub use model::{DetectorModel, EngineKind};
+pub use plan::Plan;

@@ -1,13 +1,21 @@
-//! Full rust-native detector: builds the µResNet + R-FCN-lite forward
-//! pass from a checkpoint + param spec, with either the f32 engine or
+//! Full rust-native detector: builds the µResNet + R-FCN-lite layer
+//! graph from a checkpoint + param spec, with either the f32 engine or
 //! the quantized shift-add engine. Mirrors
 //! `python/compile/model.py::forward` in eval mode and is cross-checked
 //! against the `infer_*` artifacts (integration_engine.rs).
+//!
+//! `DetectorModel` is primarily a **builder**: the fast path compiles
+//! it into a planned, arena-allocated executor (`crate::nn::plan`) —
+//! [`DetectorModel::forward`] does this lazily and reuses the plan.
+//! The original per-op tensor walk survives as
+//! [`DetectorModel::forward_naive`], the reference implementation the
+//! planned executor is parity-tested and benchmarked against.
 
 use anyhow::{ensure, Result};
 
 use super::conv::{conv1x1, conv2d};
 use super::layers::{fold_bn, ps_vote};
+use super::plan::Plan;
 use super::shift_conv::ShiftConv;
 use crate::consts::{GRID, IMG, K, NUM_CLS};
 use crate::coordinator::params::{Checkpoint, ParamSpec};
@@ -24,7 +32,7 @@ pub enum EngineKind {
     Shift { bits: u32 },
 }
 
-enum ConvOp {
+pub(crate) enum ConvOp {
     Float(Tensor), // HWIO weights
     Shift(Box<ShiftConv>),
 }
@@ -36,15 +44,23 @@ impl ConvOp {
             ConvOp::Shift(sc) => sc.forward(x, stride),
         }
     }
+
+    /// `(kh, kw, cin, cout)` of the kernel.
+    pub(crate) fn dims(&self) -> (usize, usize, usize, usize) {
+        match self {
+            ConvOp::Float(w) => (w.shape[0], w.shape[1], w.shape[2], w.shape[3]),
+            ConvOp::Shift(sc) => (sc.kh, sc.kw, sc.cin, sc.cout),
+        }
+    }
 }
 
-struct ConvBn {
-    op: ConvOp,
-    stride: usize,
+pub(crate) struct ConvBn {
+    pub(crate) op: ConvOp,
+    pub(crate) stride: usize,
     /// folded BN affine, applied post-conv
-    scale: Vec<f32>,
-    bias: Vec<f32>,
-    relu: bool,
+    pub(crate) scale: Vec<f32>,
+    pub(crate) bias: Vec<f32>,
+    pub(crate) relu: bool,
 }
 
 impl ConvBn {
@@ -58,29 +74,31 @@ impl ConvBn {
     }
 }
 
-struct Block {
-    conv1: ConvBn,
-    conv2: ConvBn,
-    skip: Option<ConvOp>,
-    stride: usize,
+pub(crate) struct Block {
+    pub(crate) conv1: ConvBn,
+    pub(crate) conv2: ConvBn,
+    pub(crate) skip: Option<ConvOp>,
+    pub(crate) stride: usize,
 }
 
 /// The deployable detector.
 pub struct DetectorModel {
-    stem: ConvBn,
-    blocks: Vec<Block>,
-    head: ConvBn,
-    cls_w: Vec<f32>,
-    cls_b: Vec<f32>,
-    reg_w: Vec<f32>,
-    reg_b: Vec<f32>,
-    head_width: usize,
+    pub(crate) stem: ConvBn,
+    pub(crate) blocks: Vec<Block>,
+    pub(crate) head: ConvBn,
+    pub(crate) cls_w: Vec<f32>,
+    pub(crate) cls_b: Vec<f32>,
+    pub(crate) reg_w: Vec<f32>,
+    pub(crate) reg_b: Vec<f32>,
+    pub(crate) head_width: usize,
     pub engine: EngineKind,
     /// Total weight-storage bits of all conv layers (for the memory
     /// table): quantized engines count `bits` per nonzero code.
     pub weight_bits: usize,
     /// Mean sparsity across quantized conv layers (0 for float).
     pub mean_sparsity: f64,
+    /// Lazily compiled planned executor (see [`DetectorModel::forward`]).
+    cached_plan: Option<Plan>,
 }
 
 impl DetectorModel {
@@ -208,25 +226,63 @@ impl DetectorModel {
             engine,
             weight_bits,
             mean_sparsity,
+            cached_plan: None,
         })
     }
 
-    /// Run detection. `images`: `[B, IMG, IMG, 3]` flat. Returns
+    /// Compile a standalone planned executor (own op list + arena) for
+    /// batches up to `max_batch`. See [`crate::nn::plan::Plan`].
+    pub fn plan(&self, max_batch: usize) -> Plan {
+        Plan::compile(self, max_batch)
+    }
+
+    /// Run detection through the **planned executor** (compiled lazily
+    /// on first use, then reused — recompiled only if `batch` outgrows
+    /// the cached arena). `images`: `[B, IMG, IMG, 3]` flat. Returns
     /// `(cls_prob [B,G,G,NUM_CLS], reg [B,G,G,4])` flat, same layout as
     /// the `infer_*` artifacts.
     pub fn forward(&mut self, images: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let need = match &self.cached_plan {
+            None => true,
+            Some(p) => p.max_batch < batch,
+        };
+        if need {
+            let plan = Plan::compile(self, batch.max(crate::consts::TRAIN_BATCH));
+            self.cached_plan = Some(plan);
+        }
+        self.cached_plan
+            .as_mut()
+            .expect("plan compiled above")
+            .forward_vec(images, batch)
+    }
+
+    /// The naive reference executor: the original per-op tensor walk
+    /// (fresh allocation for every pad/conv/skip). Kept as the parity
+    /// baseline for the planned executor and as the `naive` serving
+    /// mode in `bench_serve`'s planned/naive comparison.
+    pub fn forward_naive(&mut self, images: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
         assert_eq!(images.len(), batch * IMG * IMG * 3);
         let x = Tensor::from_vec(&[batch, IMG, IMG, 3], images.to_vec());
         let mut h = self.stem.run(&x);
         for blk in &mut self.blocks {
             let mut r = blk.conv1.run(&h);
             r = blk.conv2.run(&r);
-            let skip = match &mut blk.skip {
-                Some(op) => op.run(&h, blk.stride),
-                None if blk.stride != 1 => h.subsample(blk.stride),
-                None => h.clone(),
-            };
-            r.add_(&skip).relu_();
+            // the identity branch adds `h` in place — no clone of the
+            // whole activation
+            match &mut blk.skip {
+                Some(op) => {
+                    let skip = op.run(&h, blk.stride);
+                    r.add_(&skip);
+                }
+                None if blk.stride != 1 => {
+                    let skip = h.subsample(blk.stride);
+                    r.add_(&skip);
+                }
+                None => {
+                    r.add_(&h);
+                }
+            }
+            r.relu_();
             h = r;
         }
         h = self.head.run(&h);
@@ -263,6 +319,11 @@ mod tests {
         for row in cls.chunks(NUM_CLS) {
             assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
         }
+        // the naive reference agrees
+        let (cls_n, reg_n) = m.forward_naive(&imgs, 1);
+        let dc = cls.iter().zip(&cls_n).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        let dr = reg.iter().zip(&reg_n).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(dc < 1e-5 && dr < 1e-4, "planned/naive drift: cls {dc} reg {dr}");
     }
 
     #[test]

@@ -1,0 +1,567 @@
+//! Planned executor: two-phase **plan → execute** inference.
+//!
+//! [`Plan::compile`] walks a built [`DetectorModel`] once, infers every
+//! activation shape, re-packs the conv weights into lane-padded GEMM
+//! layouts, and preallocates an activation **arena** (ping-pong
+//! buffers plus one column buffer per element type) sized for a
+//! maximum batch. [`Plan::forward`] then executes the static op list
+//! with **zero heap allocations**: every conv runs as implicit-padding
+//! im2col into the arena's column buffer followed by a
+//! register-blocked GEMM (`conv::gemm_bn_relu` for the f32 engine,
+//! `shift_conv::shift_gemm_bn_relu` for the shift-add engine) whose
+//! writeback fuses the folded-BN affine, the residual add (identity
+//! skips alias the producing arena slot instead of being copied), and
+//! ReLU. The sharded server holds one plan + arena per shard, so
+//! batched requests execute back-to-back with no per-request setup.
+//!
+//! The naive per-op tensor walk survives as
+//! [`DetectorModel::forward_naive`]; `rust/tests/plan_parity.rs` pins
+//! the two executors together and `rust/tests/plan_alloc.rs` proves
+//! the zero-allocation claim with a counting allocator.
+
+use crate::consts::{GRID, IMG, K, NUM_CLS};
+use crate::nn::conv::{gemm_bn_relu, im2col, pack_lanes, same_padding, Residual, LANES};
+use crate::nn::layers::ps_vote_into;
+use crate::nn::model::{ConvOp, DetectorModel};
+use crate::nn::shift_conv::{im2col_fix, shift_gemm_bn_relu, DenseLanes, FIX};
+use crate::nn::EngineKind;
+use crate::tensor::softmax_rows_;
+
+// Arena slot indices. Three rotating activation slots carry the
+// backbone; the skip slot holds projection-skip outputs; the tail
+// slots are the detection heads.
+const SKIP: usize = 3;
+const CLS_MAPS: usize = 4;
+const CLS_PROB: usize = 5;
+const REG: usize = 6;
+const NBUF: usize = 7;
+
+/// Where a conv step reads its input from.
+#[derive(Debug, Clone, Copy)]
+enum Src {
+    /// The caller's image slice.
+    Input,
+    /// An arena slot.
+    Buf(usize),
+}
+
+/// Lane-packed weights for one planned conv.
+enum PlannedKernel {
+    /// f32 GEMM weights `[k][cp]` (lane-padded).
+    Float { cp: usize, w: Vec<f32> },
+    /// Shift-add planes + the layer scale `2^{s-FIX}`.
+    Shift { lanes: DenseLanes, scale_out: f32 },
+}
+
+/// How a conv step's residual input is sourced (fused into the GEMM
+/// writeback — no skip tensor is materialized for the identity paths).
+enum ResidualSpec {
+    None,
+    /// Alias another arena slot with the same `[m × cout]` layout
+    /// (identity skip, or a precomputed skip-conv output).
+    Alias(usize),
+    /// Strided identity read from an arena slot holding the pre-stride
+    /// activation `[n, src_h, src_w, cout]`.
+    Subsample { buf: usize, src_h: usize, src_w: usize, stride: usize },
+}
+
+/// One fused conv + BN (+ residual) (+ ReLU) step with shapes inferred
+/// at plan time.
+struct ConvStep {
+    kernel: PlannedKernel,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    lo_h: usize,
+    lo_w: usize,
+    h_in: usize,
+    w_in: usize,
+    oh: usize,
+    ow: usize,
+    src: Src,
+    dst: usize,
+    /// Folded-BN affine (identity for plain convs), applied in the
+    /// GEMM writeback.
+    scale: Vec<f32>,
+    bias: Vec<f32>,
+    relu: bool,
+    residual: ResidualSpec,
+    /// 1×1 stride-1 float convs read the source slot directly as the
+    /// GEMM A-matrix — no im2col pass at all.
+    direct: bool,
+}
+
+impl ConvStep {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        op: &ConvOp,
+        stride: usize,
+        in_geom: (usize, usize),
+        src: Src,
+        dst: usize,
+        scale: Vec<f32>,
+        bias: Vec<f32>,
+        relu: bool,
+        residual: ResidualSpec,
+    ) -> ConvStep {
+        let (kh, kw, cin, cout) = op.dims();
+        let (h, w) = in_geom;
+        let (lo_h, _) = same_padding(h, kh, stride);
+        let (lo_w, _) = same_padding(w, kw, stride);
+        let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+        let kernel = match op {
+            ConvOp::Float(t) => {
+                let (cp, packed) = pack_lanes(&t.data, kh * kw * cin, cout);
+                PlannedKernel::Float { cp, w: packed }
+            }
+            ConvOp::Shift(sc) => PlannedKernel::Shift {
+                lanes: sc.dense_lanes(LANES),
+                scale_out: f32::powi(2.0, sc.s - FIX),
+            },
+        };
+        let direct = matches!(kernel, PlannedKernel::Float { .. })
+            && kh == 1
+            && kw == 1
+            && stride == 1
+            && lo_h == 0
+            && lo_w == 0;
+        ConvStep {
+            kernel,
+            kh,
+            kw,
+            cin,
+            cout,
+            stride,
+            lo_h,
+            lo_w,
+            h_in: h,
+            w_in: w,
+            oh,
+            ow,
+            src,
+            dst,
+            scale,
+            bias,
+            relu,
+            residual,
+            direct,
+        }
+    }
+
+    /// A 1×1 float head (`cls`/`reg`): plain matmul + bias, no BN.
+    fn head1x1(
+        w: &[f32],
+        b: &[f32],
+        cin: usize,
+        cout: usize,
+        src: Src,
+        dst: usize,
+        geom: (usize, usize),
+    ) -> ConvStep {
+        let (cp, packed) = pack_lanes(w, cin, cout);
+        ConvStep {
+            kernel: PlannedKernel::Float { cp, w: packed },
+            kh: 1,
+            kw: 1,
+            cin,
+            cout,
+            stride: 1,
+            lo_h: 0,
+            lo_w: 0,
+            h_in: geom.0,
+            w_in: geom.1,
+            oh: geom.0,
+            ow: geom.1,
+            src,
+            dst,
+            scale: vec![1.0; cout],
+            bias: b.to_vec(),
+            relu: false,
+            residual: ResidualSpec::None,
+            direct: true,
+        }
+    }
+}
+
+enum Step {
+    Conv(ConvStep),
+    /// Position-sensitive vote: `CLS_MAPS` → `CLS_PROB`.
+    PsVote,
+    /// Row softmax in place on `CLS_PROB`.
+    Softmax,
+}
+
+/// Preallocated buffers — the only storage `forward` ever writes.
+struct Arena {
+    bufs: Vec<Vec<f32>>,
+    /// f32 im2col column buffer (float-engine convs).
+    col: Vec<f32>,
+    /// Fixed-point im2col column buffer (shift-engine convs).
+    colq: Vec<i32>,
+}
+
+/// A compiled, reusable forward pass: static op list + activation
+/// arena. Build once per shard via [`DetectorModel::plan`] (or
+/// [`Plan::compile`]), then call [`Plan::forward`] for every batch.
+pub struct Plan {
+    steps: Vec<Step>,
+    arena: Arena,
+    /// Largest batch the arena can hold.
+    pub max_batch: usize,
+    pub engine: EngineKind,
+    /// Copied from the model for reporting.
+    pub weight_bits: usize,
+    pub mean_sparsity: f64,
+}
+
+/// Split one arena slot out mutably, leaving the rest readable.
+fn split_buf(bufs: &mut [Vec<f32>], dst: usize) -> (&mut Vec<f32>, &[Vec<f32>], &[Vec<f32>]) {
+    let (lo, rest) = bufs.split_at_mut(dst);
+    let (d, hi) = rest.split_first_mut().expect("slot index in range");
+    (d, &*lo, &*hi)
+}
+
+/// Shared view of slot `i` out of the `(lo, hi)` halves produced by
+/// [`split_buf`] around the mutable slot `d`.
+fn slot<'a>(lo: &'a [Vec<f32>], hi: &'a [Vec<f32>], d: usize, i: usize) -> &'a [f32] {
+    debug_assert_ne!(i, d, "residual/source slot aliases dst");
+    if i < d {
+        &lo[i]
+    } else {
+        &hi[i - d - 1]
+    }
+}
+
+impl Plan {
+    /// Compile `model` into a static op list + arena sized for
+    /// `max_batch` images. The model is only read; it stays usable as
+    /// the naive reference executor.
+    pub fn compile(model: &DetectorModel, max_batch: usize) -> Plan {
+        let mb = max_batch.max(1);
+        let mut steps: Vec<Step> = Vec::new();
+
+        // --- backbone: stem, residual blocks, head ---------------------
+        let stem = ConvStep::new(
+            &model.stem.op,
+            model.stem.stride,
+            (IMG, IMG),
+            Src::Input,
+            0,
+            model.stem.scale.clone(),
+            model.stem.bias.clone(),
+            model.stem.relu,
+            ResidualSpec::None,
+        );
+        let mut geom = (stem.oh, stem.ow);
+        steps.push(Step::Conv(stem));
+        let mut cur = 0usize;
+        for blk in &model.blocks {
+            let nxt = (cur + 1) % 3;
+            let dst = (cur + 2) % 3;
+            let c1 = ConvStep::new(
+                &blk.conv1.op,
+                blk.conv1.stride,
+                geom,
+                Src::Buf(cur),
+                nxt,
+                blk.conv1.scale.clone(),
+                blk.conv1.bias.clone(),
+                blk.conv1.relu,
+                ResidualSpec::None,
+            );
+            let out_geom = (c1.oh, c1.ow);
+            steps.push(Step::Conv(c1));
+            let residual = match &blk.skip {
+                Some(op) => {
+                    // projection skip: its own conv step into the skip
+                    // slot (no BN, no ReLU), then aliased into conv2
+                    let cout = op.dims().3;
+                    let skip_step = ConvStep::new(
+                        op,
+                        blk.stride,
+                        geom,
+                        Src::Buf(cur),
+                        SKIP,
+                        vec![1.0; cout],
+                        vec![0.0; cout],
+                        false,
+                        ResidualSpec::None,
+                    );
+                    steps.push(Step::Conv(skip_step));
+                    ResidualSpec::Alias(SKIP)
+                }
+                None if blk.stride != 1 => ResidualSpec::Subsample {
+                    buf: cur,
+                    src_h: geom.0,
+                    src_w: geom.1,
+                    stride: blk.stride,
+                },
+                // identity skip: alias the producing slot — the
+                // `h.clone()` of the naive path does not exist here
+                None => ResidualSpec::Alias(cur),
+            };
+            // conv2: BN affine, then residual add, then ReLU — all in
+            // the one writeback. The builder leaves conv2.relu false
+            // (the block applies ReLU after the add); the planned step
+            // fuses that post-add ReLU, so the orders agree.
+            debug_assert!(!blk.conv2.relu, "conv2 must not pre-ReLU before the residual add");
+            let c2 = ConvStep::new(
+                &blk.conv2.op,
+                blk.conv2.stride,
+                out_geom,
+                Src::Buf(nxt),
+                dst,
+                blk.conv2.scale.clone(),
+                blk.conv2.bias.clone(),
+                true,
+                residual,
+            );
+            steps.push(Step::Conv(c2));
+            geom = out_geom;
+            cur = dst;
+        }
+        let head = ConvStep::new(
+            &model.head.op,
+            model.head.stride,
+            geom,
+            Src::Buf(cur),
+            (cur + 1) % 3,
+            model.head.scale.clone(),
+            model.head.bias.clone(),
+            model.head.relu,
+            ResidualSpec::None,
+        );
+        geom = (head.oh, head.ow);
+        let hsrc = (cur + 1) % 3;
+        steps.push(Step::Conv(head));
+        assert_eq!(
+            geom,
+            (GRID, GRID),
+            "planned detector must reduce to the {GRID}x{GRID} grid"
+        );
+
+        // --- detection tail -------------------------------------------
+        steps.push(Step::Conv(ConvStep::head1x1(
+            &model.cls_w,
+            &model.cls_b,
+            model.head_width,
+            K * K * NUM_CLS,
+            Src::Buf(hsrc),
+            CLS_MAPS,
+            geom,
+        )));
+        steps.push(Step::PsVote);
+        steps.push(Step::Softmax);
+        steps.push(Step::Conv(ConvStep::head1x1(
+            &model.reg_w,
+            &model.reg_b,
+            model.head_width,
+            4,
+            Src::Buf(hsrc),
+            REG,
+            geom,
+        )));
+
+        // --- arena sizing (shapes inferred once, here) -----------------
+        let mut sizes = [0usize; NBUF];
+        let (mut col_len, mut colq_len) = (0usize, 0usize);
+        for st in &steps {
+            if let Step::Conv(cs) = st {
+                let m = mb * cs.oh * cs.ow;
+                sizes[cs.dst] = sizes[cs.dst].max(m * cs.cout);
+                if !cs.direct {
+                    let need = m * cs.kh * cs.kw * cs.cin;
+                    match cs.kernel {
+                        PlannedKernel::Float { .. } => col_len = col_len.max(need),
+                        PlannedKernel::Shift { .. } => colq_len = colq_len.max(need),
+                    }
+                }
+            }
+        }
+        sizes[CLS_PROB] = mb * GRID * GRID * NUM_CLS;
+        let arena = Arena {
+            bufs: sizes.iter().map(|&s| vec![0.0f32; s]).collect(),
+            col: vec![0.0f32; col_len],
+            colq: vec![0i32; colq_len],
+        };
+        Plan {
+            steps,
+            arena,
+            max_batch: mb,
+            engine: model.engine,
+            weight_bits: model.weight_bits,
+            mean_sparsity: model.mean_sparsity,
+        }
+    }
+
+    /// Execute the plan on `batch ≤ max_batch` images
+    /// (`[batch, IMG, IMG, 3]` flat). Returns borrowed views of the
+    /// arena's output slots: `(cls_prob [B,G,G,NUM_CLS], reg
+    /// [B,G,G,4])`, valid until the next call. Performs **zero** heap
+    /// allocations (asserted by `rust/tests/plan_alloc.rs`).
+    pub fn forward(&mut self, images: &[f32], batch: usize) -> (&[f32], &[f32]) {
+        assert!(
+            batch >= 1 && batch <= self.max_batch,
+            "batch {batch} > planned max {}",
+            self.max_batch
+        );
+        assert_eq!(images.len(), batch * IMG * IMG * 3, "bad image buffer size");
+        let Arena { bufs, col, colq } = &mut self.arena;
+        for step in &self.steps {
+            match step {
+                Step::Conv(cs) => {
+                    let m = batch * cs.oh * cs.ow;
+                    let kdim = cs.kh * cs.kw * cs.cin;
+                    // phase 1: gather the A matrix (implicit padding)
+                    if !cs.direct {
+                        let src: &[f32] = match cs.src {
+                            Src::Input => images,
+                            Src::Buf(i) => &bufs[i],
+                        };
+                        let src = &src[..batch * cs.h_in * cs.w_in * cs.cin];
+                        match cs.kernel {
+                            PlannedKernel::Float { .. } => im2col(
+                                src, batch, cs.h_in, cs.w_in, cs.cin, cs.kh, cs.kw, cs.stride,
+                                cs.lo_h, cs.lo_w, cs.oh, cs.ow, &mut col[..m * kdim],
+                            ),
+                            PlannedKernel::Shift { .. } => im2col_fix(
+                                src, batch, cs.h_in, cs.w_in, cs.cin, cs.kh, cs.kw, cs.stride,
+                                cs.lo_h, cs.lo_w, cs.oh, cs.ow, &mut colq[..m * kdim],
+                            ),
+                        }
+                    }
+                    // phase 2: fused GEMM into the destination slot
+                    let d = cs.dst;
+                    let (dst, lo, hi) = split_buf(bufs, d);
+                    let res: Residual = match &cs.residual {
+                        ResidualSpec::None => Residual::None,
+                        ResidualSpec::Alias(i) => {
+                            Residual::Add(&slot(lo, hi, d, *i)[..m * cs.cout])
+                        }
+                        ResidualSpec::Subsample { buf, src_h, src_w, stride } => {
+                            Residual::AddStrided {
+                                buf: &slot(lo, hi, d, *buf)[..batch * src_h * src_w * cs.cout],
+                                src_h: *src_h,
+                                src_w: *src_w,
+                                ow: cs.ow,
+                                ohw: cs.oh * cs.ow,
+                                stride: *stride,
+                            }
+                        }
+                    };
+                    match &cs.kernel {
+                        PlannedKernel::Float { cp, w } => {
+                            let a: &[f32] = if cs.direct {
+                                match cs.src {
+                                    Src::Input => &images[..m * kdim],
+                                    Src::Buf(i) => &slot(lo, hi, d, i)[..m * kdim],
+                                }
+                            } else {
+                                &col[..m * kdim]
+                            };
+                            gemm_bn_relu(
+                                a, m, kdim, w, cs.cout, *cp, &cs.scale, &cs.bias, cs.relu,
+                                &res, &mut dst[..m * cs.cout],
+                            );
+                        }
+                        PlannedKernel::Shift { lanes, scale_out } => shift_gemm_bn_relu(
+                            &colq[..m * kdim], m, kdim, lanes, *scale_out, cs.cout, &cs.scale,
+                            &cs.bias, cs.relu, &res, &mut dst[..m * cs.cout],
+                        ),
+                    }
+                }
+                Step::PsVote => {
+                    let (dst, lo, _hi) = split_buf(bufs, CLS_PROB);
+                    let maps = &lo[CLS_MAPS][..batch * GRID * GRID * K * K * NUM_CLS];
+                    ps_vote_into(maps, batch, &mut dst[..batch * GRID * GRID * NUM_CLS]);
+                }
+                Step::Softmax => {
+                    softmax_rows_(&mut bufs[CLS_PROB][..batch * GRID * GRID * NUM_CLS], NUM_CLS)
+                }
+            }
+        }
+        (
+            &self.arena.bufs[CLS_PROB][..batch * GRID * GRID * NUM_CLS],
+            &self.arena.bufs[REG][..batch * GRID * GRID * 4],
+        )
+    }
+
+    /// Like [`Plan::forward`] but returning owned vectors (the
+    /// allocation happens here, outside the planned hot path).
+    pub fn forward_vec(&mut self, images: &[f32], batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let (c, r) = self.forward(images, batch);
+        (c.to_vec(), r.to_vec())
+    }
+
+    /// High-water memory of the activation arena in f32 elements
+    /// (diagnostics; the arena never grows after compile).
+    pub fn arena_len(&self) -> usize {
+        self.arena.bufs.iter().map(|b| b.len()).sum::<usize>()
+            + self.arena.col.len()
+            + self.arena.colq.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s >> 11) as f32 / (1u64 << 53) as f32 - 0.3
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_matches_naive_on_both_engines() {
+        let spec = synthetic_spec(SynthConfig::default());
+        let ckpt = synthetic_checkpoint(&spec, 2024, 6);
+        for engine in [EngineKind::Float, EngineKind::Shift { bits: 6 }] {
+            let mut model = DetectorModel::build(&spec, &ckpt, engine).unwrap();
+            let mut plan = Plan::compile(&model, 2);
+            let imgs = randv(2 * IMG * IMG * 3, 7);
+            let (cn, rn) = model.forward_naive(&imgs, 2);
+            let (cp, rp) = plan.forward(&imgs, 2);
+            let dc = cn.iter().zip(cp).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            let dr = rn.iter().zip(rp).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            assert!(dc <= 1e-4, "{engine:?} cls diff {dc}");
+            assert!(dr <= 1e-3, "{engine:?} reg diff {dr}");
+        }
+    }
+
+    #[test]
+    fn plan_reuses_arena_across_batch_sizes() {
+        let spec = synthetic_spec(SynthConfig::default());
+        let ckpt = synthetic_checkpoint(&spec, 99, 6);
+        let model = DetectorModel::build(&spec, &ckpt, EngineKind::Shift { bits: 6 }).unwrap();
+        let mut plan = Plan::compile(&model, 4);
+        let watermark = plan.arena_len();
+        let imgs = randv(4 * IMG * IMG * 3, 3);
+        for batch in [1usize, 3, 4, 2, 1] {
+            let (c, r) = plan.forward(&imgs[..batch * IMG * IMG * 3], batch);
+            assert_eq!(c.len(), batch * GRID * GRID * NUM_CLS);
+            assert_eq!(r.len(), batch * GRID * GRID * 4);
+            assert_eq!(plan.arena_len(), watermark, "arena must never grow");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "planned max")]
+    fn plan_rejects_oversized_batch() {
+        let spec = synthetic_spec(SynthConfig::default());
+        let ckpt = synthetic_checkpoint(&spec, 1, 6);
+        let model = DetectorModel::build(&spec, &ckpt, EngineKind::Float).unwrap();
+        let mut plan = Plan::compile(&model, 1);
+        let imgs = randv(2 * IMG * IMG * 3, 3);
+        let _ = plan.forward(&imgs, 2);
+    }
+}

@@ -166,12 +166,17 @@ impl ShiftConv {
 
     /// Execute the layer: fixed-point shift-add over a SAME-padded
     /// input. `x` NHWC; returns NHWC f32 (scale `2^{s-FIX}` folded in).
+    /// This is the naive reference path (per-call allocations, padded
+    /// buffer materialized); the planned executor uses
+    /// [`im2col_fix`] + [`shift_gemm_bn_relu`] instead.
     pub fn forward(&mut self, x: &Tensor, stride: usize) -> Tensor {
         let (n, h, w, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
         assert_eq!(cin, self.cin);
-        // XLA SAME padding (asymmetric when the total is odd)
+        // XLA SAME padding, computed per axis (asymmetric when the
+        // total is odd)
         let (lo, hi) = crate::nn::conv::same_padding(h, self.kh, stride);
-        let (ph, pw) = (h + lo + hi, w + lo + hi);
+        let (lo_w, hi_w) = crate::nn::conv::same_padding(w, self.kw, stride);
+        let (ph, pw) = (h + lo + hi, w + lo_w + hi_w);
 
         // activations -> 16.16 fixed point, zero-padded
         let mut xq = vec![0i32; n * ph * pw * cin];
@@ -179,7 +184,7 @@ impl ShiftConv {
         for ni in 0..n {
             for y in 0..h {
                 let src = ((ni * h + y) * w) * cin;
-                let dst = ((ni * ph + y + lo) * pw + lo) * cin;
+                let dst = ((ni * ph + y + lo) * pw + lo_w) * cin;
                 for i in 0..w * cin {
                     xq[dst + i] = (x.data[src + i] * scale_in).round() as i32;
                 }
@@ -241,6 +246,174 @@ impl ShiftConv {
             }
         }
         out
+    }
+}
+
+/// Lane-padded dense shift planes for the planned executor's blocked
+/// shift-add GEMM: for every patch position `p` and (padded) output
+/// channel `j`, `shifts[p*cp + j]` is the right-shift amount,
+/// `signs[p*cp + j]` the branchless sign mask (`0`/`-1`), and
+/// `nz[p*cp + j]` the nonzero mask (`-1` for a real weight, `0` for a
+/// zero weight or a padding lane). Sparse rows are densified — the
+/// activation-side zero skip still provides the "Mask" savings.
+#[derive(Debug, Clone)]
+pub struct DenseLanes {
+    /// `cout` rounded up to the lane width.
+    pub cp: usize,
+    pub shifts: Vec<i32>,
+    pub signs: Vec<i32>,
+    pub nz: Vec<i32>,
+}
+
+impl ShiftConv {
+    /// Export the layer's weight codes as lane-padded dense planes
+    /// (see [`DenseLanes`]). `lanes` is the register-tile width.
+    pub fn dense_lanes(&self, lanes: usize) -> DenseLanes {
+        let k = self.kh * self.kw * self.cin;
+        let cp = self.cout.div_ceil(lanes).max(1) * lanes;
+        let mut shifts = vec![0i32; k * cp];
+        let mut signs = vec![0i32; k * cp];
+        let mut nz = vec![0i32; k * cp];
+        for (pos, row) in self.rows.iter().enumerate() {
+            let base = pos * cp;
+            match row {
+                Row::Dense { shifts: s, signs: g, nz: m } => {
+                    shifts[base..base + self.cout].copy_from_slice(s);
+                    signs[base..base + self.cout].copy_from_slice(g);
+                    nz[base..base + self.cout].copy_from_slice(m);
+                }
+                Row::Sparse(codes) => {
+                    for c in codes {
+                        shifts[base + c.cout as usize] = c.shift as i32;
+                        signs[base + c.cout as usize] = c.sign_mask;
+                        nz[base + c.cout as usize] = -1;
+                    }
+                }
+            }
+        }
+        DenseLanes { cp, shifts, signs, nz }
+    }
+}
+
+/// Fixed-point im2col with implicit SAME padding: activations are
+/// converted to 16.16 during the patch gather, so neither the padded
+/// input nor a separate fixed-point tensor is ever materialized.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_fix(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    lo_h: usize,
+    lo_w: usize,
+    oh: usize,
+    ow: usize,
+    col: &mut [i32],
+) {
+    let scale_in = f32::powi(2.0, FIX);
+    crate::nn::conv::im2col_map(
+        x,
+        n,
+        h,
+        w,
+        cin,
+        kh,
+        kw,
+        stride,
+        lo_h,
+        lo_w,
+        oh,
+        ow,
+        |v| (v * scale_in).round() as i32,
+        col,
+    );
+}
+
+/// Register-blocked shift-add GEMM with the same fused epilogue as
+/// `conv::gemm_bn_relu`: 4 fixed-point patch rows × `LANES` output
+/// channels per tile, the integer accumulator living in registers
+/// across the whole `k` loop. The hot op stays shift + xor-sign +
+/// mask + add — no multiply — and an all-zero activation quad (ReLU
+/// zeros + implicit padding) skips the tile update entirely, the
+/// activation-side analogue of the weight "Mask". The layer scale
+/// `2^{s-FIX}`, folded-BN affine, optional residual, and ReLU are
+/// applied once in the writeback.
+#[allow(clippy::too_many_arguments)]
+pub fn shift_gemm_bn_relu(
+    aq: &[i32],
+    m: usize,
+    k: usize,
+    lanes: &DenseLanes,
+    scale_out: f32,
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &crate::nn::conv::Residual,
+    out: &mut [f32],
+) {
+    use crate::nn::conv::LANES;
+    let cp = lanes.cp;
+    // the tile loop reads LANES-wide rows; a DenseLanes built with a
+    // different lane width would read the next patch row's codes
+    assert_eq!(cp % LANES, 0, "DenseLanes must be built with lane width {LANES}");
+    debug_assert_eq!(aq.len(), m * k);
+    debug_assert_eq!(lanes.shifts.len(), k * cp);
+    debug_assert_eq!(out.len(), m * cout);
+    debug_assert!(scale.len() == cout && bias.len() == cout);
+    let mut i0 = 0usize;
+    while i0 < m {
+        let m4 = (m - i0).min(4);
+        let mut jb = 0usize;
+        while jb < cp {
+            let mut acc = [[0i32; LANES]; 4];
+            for p in 0..k {
+                let mut xs = [0i32; 4];
+                for (r, xr) in xs.iter_mut().enumerate().take(m4) {
+                    *xr = aq[(i0 + r) * k + p];
+                }
+                if (xs[0] | xs[1] | xs[2] | xs[3]) == 0 {
+                    continue;
+                }
+                let base = p * cp + jb;
+                let sh = &lanes.shifts[base..base + LANES];
+                let sg = &lanes.signs[base..base + LANES];
+                let nzm = &lanes.nz[base..base + LANES];
+                for (r, ar) in acc.iter_mut().enumerate().take(m4) {
+                    let xv = xs[r];
+                    if xv != 0 {
+                        for (j, a) in ar.iter_mut().enumerate() {
+                            let v = (xv >> sh[j]) ^ sg[j];
+                            *a += (v - sg[j]) & nzm[j];
+                        }
+                    }
+                }
+            }
+            // fused writeback: layer scale + affine + residual + relu
+            let jn = (cout - jb).min(LANES);
+            for (r, ar) in acc.iter().enumerate().take(m4) {
+                let mi = i0 + r;
+                let res = residual.base(mi, cout);
+                let orow = &mut out[mi * cout + jb..mi * cout + jb + jn];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let c = jb + j;
+                    let mut y = (ar[j] as f32 * scale_out) * scale[c] + bias[c];
+                    if let Some((buf, rbase)) = res {
+                        y += buf[rbase + c];
+                    }
+                    if relu && y < 0.0 {
+                        y = 0.0;
+                    }
+                    *o = y;
+                }
+            }
+            jb += LANES;
+        }
+        i0 += m4;
     }
 }
 
@@ -330,6 +503,72 @@ mod tests {
         let float_bits = wf.len() * 32;
         let ratio = float_bits as f64 / sc.model_bits() as f64;
         assert!(ratio > 4.0, "6-bit compression ratio {ratio}"); // ~5.3x + sparsity
+    }
+
+    /// Non-square regression (the h-only padding bug): shift conv must
+    /// agree with the fixed f32 conv on h ≠ w at stride 2, where the
+    /// two axes genuinely need different padding.
+    #[test]
+    fn non_square_input_matches_float_conv() {
+        let (kh, kw, cin, cout) = (3, 3, 3, 5);
+        let wf = randv(kh * kw * cin * cout, 21, 0.3);
+        let q = lbw_quantize_layer(&wf, 5, 0.75);
+        let x = Tensor::from_vec(&[2, 4, 7, cin], randv(2 * 4 * 7 * cin, 9, 1.0));
+        let expect = conv2d(&x, &Tensor::from_vec(&[kh, kw, cin, cout], q.wq.clone()), 2);
+        let mut sc = ShiftConv::from_quant(&q, kh, kw, cin, cout, 5);
+        let got = sc.forward(&x, 2);
+        assert_eq!(got.shape, expect.shape);
+        assert!(got.max_abs_diff(&expect) < 0.01);
+    }
+
+    /// The blocked shift-add GEMM (planned path) must match the naive
+    /// shift forward across strides, layouts, and lane tails.
+    #[test]
+    fn shift_gemm_matches_naive_forward() {
+        use crate::nn::conv::{same_padding, Residual};
+        for &(n, h, w, cin, cout, stride, bits) in &[
+            (1usize, 10usize, 10usize, 8usize, 16usize, 1usize, 4u32),
+            (2, 8, 6, 4, 5, 2, 6),
+            (1, 5, 9, 3, 11, 1, 2),
+        ] {
+            let wf = randv(9 * cin * cout, 3 + cout as u64, 0.25);
+            let q = lbw_quantize_layer(&wf, bits, 0.75);
+            let x = Tensor::from_vec(&[n, h, w, cin], randv(n * h * w * cin, 77, 1.0));
+            let mut sc = ShiftConv::from_quant(&q, 3, 3, cin, cout, bits);
+            let want = sc.forward(&x, stride);
+
+            let (lo_h, _) = same_padding(h, 3, stride);
+            let (lo_w, _) = same_padding(w, 3, stride);
+            let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+            let (m, k) = (n * oh * ow, 9 * cin);
+            let mut col = vec![0i32; m * k];
+            im2col_fix(&x.data, n, h, w, cin, 3, 3, stride, lo_h, lo_w, oh, ow, &mut col);
+            let lanes = sc.dense_lanes(crate::nn::conv::LANES);
+            let scale_out = f32::powi(2.0, sc.s - FIX);
+            let ones = vec![1.0f32; cout];
+            let zeros = vec![0.0f32; cout];
+            let mut got = vec![0.0f32; m * cout];
+            shift_gemm_bn_relu(
+                &col,
+                m,
+                k,
+                &lanes,
+                scale_out,
+                cout,
+                &ones,
+                &zeros,
+                false,
+                &Residual::None,
+                &mut got,
+            );
+            let d = want
+                .data
+                .iter()
+                .zip(&got)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d <= 1e-5, "n{n} h{h} w{w} c{cin}->{cout} s{stride} b{bits}: diff {d}");
+        }
     }
 
     #[test]

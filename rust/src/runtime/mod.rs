@@ -2,6 +2,12 @@
 //! them on the CPU PJRT client (the `xla` crate over xla_extension
 //! 0.5.1). This is the only bridge between the rust coordinator and the
 //! JAX/Pallas-authored compute graphs — Python is never on this path.
+//!
+//! [`InferBackend`] additionally unifies the two single-process
+//! inference paths behind one `infer(images, batch)` call: the AOT
+//! artifact executable and the pure-Rust **planned executor**
+//! (`crate::nn::plan`) — the CLI's `eval`/`detect` commands are
+//! engine-agnostic through it.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -9,6 +15,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
+use crate::coordinator::params::{Checkpoint, ParamSpec};
+use crate::nn::{DetectorModel, EngineKind, Plan};
 use crate::util::json::Json;
 
 /// Artifact manifest written by `python -m compile.aot`.
@@ -168,6 +176,66 @@ impl Runtime {
         });
         self.cache.lock().unwrap().insert(name.to_string(), built.clone());
         Ok(built)
+    }
+}
+
+/// One-process inference backend: either the AOT PJRT artifact or the
+/// planned pure-Rust engine, behind a single `infer` call. The CLI's
+/// `eval`/`detect` paths are written against this, so engines swap
+/// with a flag instead of duplicated match arms.
+pub enum InferBackend {
+    /// AOT artifact (`infer_{arch}_b{bits}_bs{N}`) + flat checkpoint
+    /// vectors. The runtime is held alive alongside the executable.
+    Artifact {
+        rt: Box<Runtime>,
+        exe: Arc<Executable>,
+        params: Vec<f32>,
+        state: Vec<f32>,
+    },
+    /// The planned arena executor over a pure-Rust engine (hermetic —
+    /// no artifacts needed).
+    Planned(Box<Plan>),
+}
+
+impl InferBackend {
+    /// Open the artifact backend for a checkpoint, compiled at AOT
+    /// batch size `bs`.
+    pub fn artifact(ck: &Checkpoint, bs: usize) -> Result<InferBackend> {
+        let rt = Runtime::open_default()?;
+        let exe = rt.load(&format!("infer_{}_b{}_bs{bs}", ck.arch, ck.bits))?;
+        Ok(InferBackend::Artifact {
+            rt: Box::new(rt),
+            exe,
+            params: ck.params.clone(),
+            state: ck.state.clone(),
+        })
+    }
+
+    /// Build the hermetic planned backend: construct the engine model,
+    /// compile its plan for batches up to `max_batch`, drop the model.
+    pub fn planned(
+        spec: &ParamSpec,
+        ck: &Checkpoint,
+        engine: EngineKind,
+        max_batch: usize,
+    ) -> Result<InferBackend> {
+        let model = DetectorModel::build(spec, ck, engine)?;
+        Ok(InferBackend::Planned(Box::new(model.plan(max_batch))))
+    }
+
+    /// `(cls_prob, reg)` for a flat `[batch, IMG, IMG, 3]` image slab.
+    pub fn infer(&mut self, images: &[f32], batch: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        match self {
+            InferBackend::Artifact { rt: _, exe, params, state } => {
+                let out = exe.run(&[
+                    lit_f32(params, &[params.len()])?,
+                    lit_f32(state, &[state.len()])?,
+                    lit_f32(images, &[batch, crate::consts::IMG, crate::consts::IMG, 3])?,
+                ])?;
+                Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+            }
+            InferBackend::Planned(plan) => Ok(plan.forward_vec(images, batch)),
+        }
     }
 }
 

@@ -98,17 +98,7 @@ impl Tensor {
     pub fn softmax_last(&self) -> Tensor {
         let c = *self.shape.last().unwrap();
         let mut out = self.clone();
-        for chunk in out.data.chunks_mut(c) {
-            let max = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0;
-            for x in chunk.iter_mut() {
-                *x = (*x - max).exp();
-                sum += *x;
-            }
-            for x in chunk.iter_mut() {
-                *x /= sum;
-            }
-        }
+        softmax_rows_(&mut out.data, c);
         out
     }
 
@@ -138,6 +128,23 @@ impl Tensor {
             .zip(&other.data)
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
+    }
+}
+
+/// In-place row softmax over contiguous rows of length `c` — the
+/// allocation-free twin of [`Tensor::softmax_last`], used by the
+/// planned executor on arena slots.
+pub fn softmax_rows_(data: &mut [f32], c: usize) {
+    for chunk in data.chunks_mut(c) {
+        let max = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for x in chunk.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        for x in chunk.iter_mut() {
+            *x /= sum;
+        }
     }
 }
 

@@ -1,0 +1,79 @@
+//! Counting-allocator proof of the ISSUE-2 acceptance criterion:
+//! `Plan::forward` performs **zero heap allocations** after plan
+//! construction. The test binary installs a global allocator that
+//! counts every alloc/realloc, runs the planned executor on both
+//! engines, and asserts the counter does not move across forwards.
+//!
+//! This file intentionally holds a single `#[test]` so no concurrent
+//! test thread can perturb the process-wide counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use lbw_net::consts::{GRID, IMG, NUM_CLS};
+use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
+use lbw_net::nn::{DetectorModel, EngineKind};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn planned_forward_is_allocation_free() {
+    let spec = synthetic_spec(SynthConfig::default());
+    let ckpt = synthetic_checkpoint(&spec, 31337, 6);
+    let mut imgs = vec![0.0f32; 4 * IMG * IMG * 3];
+    let mut s = 9u64;
+    for v in imgs.iter_mut() {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        *v = (s >> 11) as f32 / (1u64 << 53) as f32 - 0.3;
+    }
+
+    for engine in [EngineKind::Float, EngineKind::Shift { bits: 6 }] {
+        let model = DetectorModel::build(&spec, &ckpt, engine).unwrap();
+        let mut plan = model.plan(4);
+        for batch in [1usize, 4] {
+            let view = &imgs[..batch * IMG * IMG * 3];
+            // warm once (the arena is preallocated, but don't let a
+            // hypothetical lazy path hide behind the first call)
+            let _ = plan.forward(view, batch);
+            let before = ALLOCATIONS.load(Ordering::SeqCst);
+            let (cls, reg) = plan.forward(view, batch);
+            let after = ALLOCATIONS.load(Ordering::SeqCst);
+            assert_eq!(cls.len(), batch * GRID * GRID * NUM_CLS);
+            assert_eq!(reg.len(), batch * GRID * GRID * 4);
+            assert_eq!(
+                after - before,
+                0,
+                "{engine:?} batch {batch}: Plan::forward allocated {} time(s)",
+                after - before
+            );
+        }
+    }
+}

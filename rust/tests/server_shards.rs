@@ -117,6 +117,46 @@ fn responses_match_direct_engine_outputs() {
     server.shutdown();
 }
 
+/// The two engine-mode executors must serve the same detections
+/// through the identical server stack (the bench_serve comparison is
+/// only meaningful if they agree).
+#[test]
+fn naive_and_planned_executors_serve_identical_detections() {
+    let (spec, ckpt) = synth_pair();
+    let scene_cfg = SceneConfig::default();
+    let scenes: Vec<Vec<f32>> =
+        (0..6u64).map(|i| generate_scene(55, i, &scene_cfg).image).collect();
+    let mut results: Vec<Vec<Vec<lbw_net::detection::Detection>>> = Vec::new();
+    for executor in [
+        lbw_net::coordinator::server::Executor::Planned,
+        lbw_net::coordinator::server::Executor::Naive,
+    ] {
+        let cfg = ServerConfig {
+            shards: 2,
+            max_batch: 4,
+            score_thresh: 0.05,
+            executor,
+            ..Default::default()
+        };
+        let server =
+            DetectServer::start_engine(&spec, &ckpt, EngineKind::Shift { bits: 6 }, cfg).unwrap();
+        let handle = server.handle();
+        let dets: Vec<_> = scenes.iter().map(|img| handle.detect(img.clone()).unwrap()).collect();
+        drop(handle);
+        server.shutdown();
+        results.push(dets);
+    }
+    let (planned, naive) = (&results[0], &results[1]);
+    for (i, (p, n)) in planned.iter().zip(naive).enumerate() {
+        assert_eq!(p.len(), n.len(), "scene {i}: detection count differs across executors");
+        for (a, b) in p.iter().zip(n) {
+            assert_eq!(a.class, b.class, "scene {i}");
+            assert!((a.score - b.score).abs() < 1e-5, "scene {i}: {} vs {}", a.score, b.score);
+            assert!(a.bbox.iou(&b.bbox) > 0.999, "scene {i}");
+        }
+    }
+}
+
 #[test]
 fn backpressure_errors_instead_of_blocking() {
     // mock engine that stalls so the queue saturates deterministically
