@@ -1,16 +1,19 @@
 //! Serving load generator: sweep executor × engine × shard count ×
-//! batch window over SynthVOC scenes and record the throughput/latency
-//! trajectory.
+//! intra-op threads × batch window over SynthVOC scenes and record the
+//! throughput/latency trajectory.
 //!
 //! Fully hermetic — the sweep drives the pure-Rust engines behind the
 //! sharded server on a synthetic He-initialized detector, so it runs
 //! on a clean checkout (no Python, no artifacts). Emits
-//! `BENCH_serve.json`: one row per (executor, engine, shards, batch
-//! window) cell with wall time, img/s, latency percentiles, mean batch
-//! occupancy, and the per-shard request counts. The `executor` field
-//! distinguishes the planned arena executor (production path) from the
-//! naive per-op reference; the summary prints the planned/naive img/s
-//! ratio per engine at a single shard.
+//! `BENCH_serve.json`: one row per (executor, engine, shards, threads,
+//! batch window) cell with wall time, img/s, latency percentiles, mean
+//! batch occupancy, and the per-shard request counts. The `executor`
+//! field distinguishes the planned arena executor (production path)
+//! from the naive per-op reference; the `threads` field is the
+//! per-shard tile-pool width (planned executor only — the naive walk
+//! is always single-threaded). The summary prints the planned/naive
+//! img/s ratio and the planned 4-thread/1-thread speedup per engine at
+//! a single shard.
 //!
 //! Run with: `cargo run --release --example bench_serve`
 //! Smoke mode (CI): `cargo run --release --example bench_serve -- --smoke`
@@ -32,6 +35,7 @@ struct Cell {
     executor: String,
     engine: String,
     shards: usize,
+    threads: usize,
     window_ms: u64,
     wall_s: f64,
     imgs_per_s: f64,
@@ -84,84 +88,112 @@ fn main() -> Result<()> {
         if smoke { " (smoke)" } else { "" }
     );
     println!(
-        "{:<9} {:<8} {:<7} {:<10} {:>9} {:>9} {:>9} {:>9} {:>11}",
-        "executor", "engine", "shards", "window", "img/s", "p50 ms", "p95 ms", "p99 ms",
-        "mean batch"
+        "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9} {:>9} {:>9} {:>9} {:>11}",
+        "executor", "engine", "shards", "threads", "window", "img/s", "p50 ms", "p95 ms",
+        "p99 ms", "mean batch"
     );
 
     let mut cells: Vec<Cell> = Vec::new();
     for (exec_name, executor) in [("planned", Executor::Planned), ("naive", Executor::Naive)] {
+        // the tile pool only feeds the planned executor's kernels; the
+        // naive walk is single-threaded by construction
+        let thread_list: &[usize] = match executor {
+            Executor::Planned => &[1, 4],
+            Executor::Naive => &[1],
+        };
         for (engine_name, engine) in
             [("float", EngineKind::Float), ("shift6", EngineKind::Shift { bits: 6 })]
         {
             for &shards in shard_list {
-                for &window_ms in window_list {
-                    let cfg = ServerConfig {
-                        shards,
-                        max_batch: 8,
-                        batch_window: Duration::from_millis(window_ms),
-                        queue_depth: 256,
-                        executor,
-                        ..Default::default()
-                    };
-                    let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
-                    let wall = drive(&server, &scenes, requests)?;
-                    let agg = server.handle().latency();
-                    let shard_counts: Vec<usize> =
-                        server.shard_latencies().iter().map(|s| s.count()).collect();
-                    let cell = Cell {
-                        executor: exec_name.to_string(),
-                        engine: engine_name.to_string(),
-                        shards,
-                        window_ms,
-                        wall_s: wall.as_secs_f64(),
-                        imgs_per_s: agg.throughput(wall),
-                        p50_ms: agg.percentile_ms(50.0),
-                        p95_ms: agg.percentile_ms(95.0),
-                        p99_ms: agg.percentile_ms(99.0),
-                        mean_batch: agg.mean_batch(),
-                        shard_counts,
-                    };
-                    println!(
-                        "{:<9} {:<8} {:<7} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}",
-                        cell.executor,
-                        cell.engine,
-                        cell.shards,
-                        format!("{window_ms}ms"),
-                        cell.imgs_per_s,
-                        cell.p50_ms,
-                        cell.p95_ms,
-                        cell.p99_ms,
-                        cell.mean_batch
-                    );
-                    server.shutdown();
-                    cells.push(cell);
+                for &threads in thread_list {
+                    for &window_ms in window_list {
+                        let cfg = ServerConfig {
+                            shards,
+                            threads,
+                            max_batch: 8,
+                            batch_window: Duration::from_millis(window_ms),
+                            queue_depth: 256,
+                            executor,
+                            ..Default::default()
+                        };
+                        let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
+                        let wall = drive(&server, &scenes, requests)?;
+                        let agg = server.handle().latency();
+                        let snap = agg.snapshot();
+                        let shard_counts: Vec<usize> =
+                            server.shard_latencies().iter().map(|s| s.count()).collect();
+                        let cell = Cell {
+                            executor: exec_name.to_string(),
+                            engine: engine_name.to_string(),
+                            shards,
+                            threads,
+                            window_ms,
+                            wall_s: wall.as_secs_f64(),
+                            imgs_per_s: agg.throughput(wall),
+                            p50_ms: snap.percentile_ms(50.0),
+                            p95_ms: snap.percentile_ms(95.0),
+                            p99_ms: snap.percentile_ms(99.0),
+                            mean_batch: agg.mean_batch(),
+                            shard_counts,
+                        };
+                        println!(
+                            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}",
+                            cell.executor,
+                            cell.engine,
+                            cell.shards,
+                            cell.threads,
+                            format!("{window_ms}ms"),
+                            cell.imgs_per_s,
+                            cell.p50_ms,
+                            cell.p95_ms,
+                            cell.p99_ms,
+                            cell.mean_batch
+                        );
+                        server.shutdown();
+                        cells.push(cell);
+                    }
                 }
             }
         }
     }
 
-    let rate = |exec: &str, engine: &str, shards: usize| {
+    let rate = |exec: &str, engine: &str, shards: usize, threads: usize| {
         cells
             .iter()
             .find(|c| {
-                c.executor == exec && c.engine == engine && c.shards == shards && c.window_ms == 2
+                c.executor == exec
+                    && c.engine == engine
+                    && c.shards == shards
+                    && c.threads == threads
+                    && c.window_ms == 2
             })
             .map(|c| c.imgs_per_s)
             .unwrap_or(0.0)
     };
     // the headline ratio: planned vs naive through the identical
-    // serving stack, single shard (the ISSUE-2 acceptance number)
+    // serving stack, single shard, single thread (the ISSUE-2
+    // acceptance number)
     for engine in ["float", "shift6"] {
-        let (p, n) = (rate("planned", engine, 1), rate("naive", engine, 1));
+        let (p, n) = (rate("planned", engine, 1, 1), rate("naive", engine, 1, 1));
         if n > 0.0 {
             println!("{engine}: planned/naive single-shard speedup = {:.2}x", p / n);
+        }
+    }
+    // intra-op scaling: 4-thread vs 1-thread pools at a single shard
+    // (the ISSUE-3 acceptance number)
+    for engine in ["float", "shift6"] {
+        let (t4, t1) = (rate("planned", engine, 1, 4), rate("planned", engine, 1, 1));
+        if t1 > 0.0 {
+            println!(
+                "{engine}: planned 4-thread/1-thread speedup at 1 shard = {:.2}x",
+                t4 / t1
+            );
         }
     }
     if !smoke {
         // scaling summary on the production path: shards=4 vs shards=1
         for engine in ["float", "shift6"] {
-            let (r1, r4) = (rate("planned", engine, 1), rate("planned", engine, 4));
+            let (r1, r4) = (rate("planned", engine, 1, 1), rate("planned", engine, 4, 1));
             if r1 > 0.0 {
                 println!("{engine}: planned 4-shard speedup over 1 shard = {:.2}x", r4 / r1);
             }
@@ -176,6 +208,7 @@ fn main() -> Result<()> {
                     ("executor", Json::str(c.executor.as_str())),
                     ("engine", Json::str(c.engine.as_str())),
                     ("shards", Json::num(c.shards as f64)),
+                    ("threads", Json::num(c.threads as f64)),
                     ("batch_window_ms", Json::num(c.window_ms as f64)),
                     ("requests", Json::num(requests as f64)),
                     ("concurrency", Json::num(CONCURRENCY as f64)),
@@ -197,7 +230,9 @@ fn main() -> Result<()> {
         ("bench", Json::str("serve_shard_sweep")),
         (
             "detector",
-            Json::str("synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors"),
+            Json::str(
+                "synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors, threads {1,4} tile pools",
+            ),
         ),
         ("rows", rows),
     ]);

@@ -1,7 +1,9 @@
 //! §2.1 exactness + quantizer throughput bench.
 //!
-//! * the `O(N log N)` exact ternary solver vs the eq.(3) scheme at
-//!   model-layer sizes (throughput), and
+//! * the exact ternary solver — now `O(N)` end to end via the radix
+//!   magnitude argsort (`quant::radix`) — vs the eq.(3) scheme at
+//!   model-layer sizes (throughput), plus the radix-vs-comparison sort
+//!   ratio at N = 1M, and
 //! * the approximation-error comparison of exact / semi-analytic /
 //!   baseline schemes (quality), reproducing the paper's §2.1 claims:
 //!   ternary exact solvable at scale, enumeration infeasible for b≥3,
@@ -28,6 +30,26 @@ fn main() {
             threshold::lbw_quantize_layer(&w, 2, 0.75)
         });
         run(&format!("exact ternary (Thm 1), N={n}"), 300, || exact::ternary_exact(&w));
+    }
+
+    println!("\n=== O(N) radix magnitude argsort vs comparison sort ===");
+    // the satellite acceptance number: the radix path (the sort inside
+    // every exact solver and the INQ freeze partition) vs the
+    // comparison sort it replaced, at N = 1M
+    {
+        use lbw_net::quant::radix;
+        let n = 1_000_000usize;
+        let w = weights(n, 123_457);
+        let cmp = run(&format!("comparison argsort (desc), N={n}"), 1200, || {
+            radix::argsort_magnitude_desc_by_comparison(&w)
+        });
+        let rad = run(&format!("radix argsort (desc),      N={n}"), 1200, || {
+            radix::argsort_magnitude_desc(&w)
+        });
+        println!(
+            "radix speedup over comparison at N=1M: {:.2}x",
+            cmp.mean.as_secs_f64() / rad.mean.as_secs_f64()
+        );
     }
 
     println!("\n=== exact enumeration cost growth (b=3, small N) ===");

@@ -62,6 +62,9 @@ pub struct DataSection {
 pub struct ServeSection {
     /// Worker shards, each owning its own engine instance.
     pub shards: usize,
+    /// Intra-op threads per shard (the planned executor's tile pool;
+    /// shards × threads total worker threads). Bitwise-neutral knob.
+    pub threads: usize,
     /// Serving engine: "artifact" (PJRT fast path), "float", or
     /// "shift" (the hermetic pure-Rust engines).
     pub engine: String,
@@ -80,6 +83,7 @@ impl Default for ServeSection {
         let s = ServerConfig::default();
         ServeSection {
             shards: s.shards,
+            threads: s.threads,
             engine: "shift".into(),
             executor: "planned".into(),
             max_batch: s.max_batch,
@@ -148,6 +152,7 @@ impl Config {
                 "data.max_objects" => cfg.data.max_objects = v.as_usize()?,
                 "data.noise" => cfg.data.noise = v.as_f32()?,
                 "serve.shards" => cfg.serve.shards = v.as_usize()?,
+                "serve.threads" => cfg.serve.threads = v.as_usize()?,
                 "serve.engine" => cfg.serve.engine = v.as_str()?.to_string(),
                 "serve.executor" => cfg.serve.executor = v.as_str()?.to_string(),
                 "serve.max_batch" => cfg.serve.max_batch = v.as_usize()?,
@@ -178,6 +183,7 @@ impl Config {
             "bad object count range"
         );
         ensure!(self.serve.shards >= 1, "serve.shards must be >= 1");
+        ensure!(self.serve.threads >= 1, "serve.threads must be >= 1");
         ensure!(self.serve.max_batch >= 1, "serve.max_batch must be >= 1");
         ensure!(self.serve.queue_depth >= 1, "serve.queue_depth must be >= 1");
         ensure!(
@@ -198,6 +204,7 @@ impl Config {
     pub fn to_server_config(&self) -> ServerConfig {
         ServerConfig {
             shards: self.serve.shards,
+            threads: self.serve.threads,
             max_batch: self.serve.max_batch,
             batch_window: Duration::from_millis(self.serve.batch_window_ms),
             queue_depth: self.serve.queue_depth,
@@ -293,6 +300,7 @@ mod tests {
             r#"
             [serve]
             shards = 4
+            threads = 3
             engine = "float"
             max_batch = 16
             batch_window_ms = 5
@@ -302,9 +310,11 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.serve.shards, 4);
+        assert_eq!(cfg.serve.threads, 3);
         assert_eq!(cfg.serve.engine, "float");
         let s = cfg.to_server_config();
         assert_eq!(s.shards, 4);
+        assert_eq!(s.threads, 3);
         assert_eq!(s.max_batch, 16);
         assert_eq!(s.batch_window, Duration::from_millis(5));
         assert_eq!(s.queue_depth, 64);
@@ -314,6 +324,7 @@ mod tests {
     #[test]
     fn serve_section_validated() {
         assert!(Config::from_toml("[serve]\nshards = 0\n").is_err());
+        assert!(Config::from_toml("[serve]\nthreads = 0\n").is_err());
         assert!(Config::from_toml("[serve]\nengine = \"gpu\"\n").is_err());
     }
 }

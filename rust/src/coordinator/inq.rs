@@ -34,7 +34,9 @@ impl Default for InqConfig {
 
 /// Frozen mask for one phase: per conv layer, the top `fraction` of
 /// weights by magnitude (ties broken by index). Non-conv parameters are
-/// never frozen.
+/// never frozen. The partition uses the shared O(N) radix magnitude
+/// argsort (`quant::radix`), which is stable — identical order and tie
+/// breaks to the comparison sort it replaced.
 pub fn build_mask(spec: &ParamSpec, params: &[f32], fraction: f64) -> Vec<f32> {
     let mut mask = vec![0.0f32; params.len()];
     for e in spec.conv_entries() {
@@ -43,8 +45,7 @@ pub fn build_mask(spec: &ParamSpec, params: &[f32], fraction: f64) -> Vec<f32> {
         if k == 0 {
             continue;
         }
-        let mut idx: Vec<usize> = (0..e.size).collect();
-        idx.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap().then(a.cmp(&b)));
+        let idx = crate::quant::radix::argsort_magnitude_desc(w);
         for &i in idx.iter().take(k.min(e.size)) {
             mask[e.offset + i] = 1.0;
         }

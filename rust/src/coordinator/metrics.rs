@@ -6,12 +6,38 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Online latency recorder with percentile queries.
-#[derive(Debug, Default, Clone)]
+/// Retained latency samples per recorder. Counters and the mean cover
+/// *every* request ever recorded; percentile queries read the most
+/// recent `DEFAULT_WINDOW` samples — the buffer is bounded, so a
+/// long-lived serving process neither grows without limit nor pays an
+/// O(total-requests) clone + sort under the shard lock on every
+/// metrics scrape.
+pub const DEFAULT_WINDOW: usize = 4096;
+
+/// Online latency recorder with percentile queries over a bounded
+/// ring of recent samples. Percentiles are computed by [`snapshot`]
+/// (one sort per scrape, outside any lock), not on the hot path.
+///
+/// [`snapshot`]: LatencyStats::snapshot
+#[derive(Debug, Clone)]
 pub struct LatencyStats {
-    samples_us: Vec<u64>,
+    /// Ring of the most recent `cap` sample latencies (µs).
+    window: Vec<u64>,
+    /// Next overwrite position once the ring is full.
+    next: usize,
+    cap: usize,
+    /// Total requests recorded (not bounded by the window).
+    count: u64,
+    /// Sum of every recorded latency (µs) — the all-time mean.
+    sum_us: u64,
     /// Inference batches executed (each serves ≥ 1 request).
     batches: u64,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self::with_window(DEFAULT_WINDOW)
+    }
 }
 
 impl LatencyStats {
@@ -19,8 +45,32 @@ impl LatencyStats {
         Self::default()
     }
 
+    /// Recorder retaining at most `cap` samples for percentile queries.
+    pub fn with_window(cap: usize) -> Self {
+        LatencyStats {
+            window: Vec::new(),
+            next: 0,
+            cap: cap.max(1),
+            count: 0,
+            sum_us: 0,
+            batches: 0,
+        }
+    }
+
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
+        let us = d.as_micros() as u64;
+        self.count += 1;
+        self.sum_us += us;
+        self.push_window(us);
+    }
+
+    fn push_window(&mut self, us: u64) {
+        if self.window.len() < self.cap {
+            self.window.push(us);
+        } else {
+            self.window[self.next] = us;
+            self.next = (self.next + 1) % self.cap;
+        }
     }
 
     /// Count one executed inference batch (for occupancy reporting).
@@ -28,8 +78,9 @@ impl LatencyStats {
         self.batches += 1;
     }
 
+    /// Total requests recorded (all time, not just the window).
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.count as usize
     }
 
     pub fn batches(&self) -> u64 {
@@ -54,27 +105,90 @@ impl LatencyStats {
     }
 
     /// Fold another recorder into this one (shard → aggregate).
+    /// Counters and sums add exactly; the percentile window absorbs the
+    /// other recorder's retained samples oldest-first (bounded by this
+    /// recorder's cap — [`ShardStats::merged`] sizes the aggregate at
+    /// shards × window so no shard's samples are evicted).
     pub fn merge(&mut self, other: &LatencyStats) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        self.count += other.count;
+        self.sum_us += other.sum_us;
         self.batches += other.batches;
+        // chronological order: a full ring's oldest sample sits at
+        // `next`, the wrapped head [..next] holds the newest
+        let (newest_wrapped, oldest_first) =
+            other.window.split_at(other.next.min(other.window.len()));
+        for &s in oldest_first.iter().chain(newest_wrapped) {
+            self.push_window(s);
+        }
+    }
+
+    /// All-time mean latency in milliseconds.
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64 / 1000.0
+    }
+
+    /// p in [0, 100], over the retained window. One-off convenience —
+    /// callers reading several percentiles should take one
+    /// [`LatencyStats::snapshot`] and query that (single sort).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.snapshot().percentile_ms(p)
+    }
+
+    /// Sort the retained window **once** and return an immutable view
+    /// answering any number of percentile queries. This is the only
+    /// place samples are sorted.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        let mut sorted_us = self.window.clone();
+        sorted_us.sort_unstable();
+        LatencySnapshot {
+            sorted_us,
+            count: self.count,
+            sum_us: self.sum_us,
+            batches: self.batches,
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        self.snapshot().summary()
+    }
+}
+
+/// A sorted point-in-time view of a [`LatencyStats`] window: all
+/// percentile queries are O(1) indexing, no re-sorting.
+#[derive(Debug, Clone)]
+pub struct LatencySnapshot {
+    sorted_us: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    batches: u64,
+}
+
+impl LatencySnapshot {
+    pub fn count(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
     }
 
     pub fn mean_ms(&self) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.count == 0 {
             return 0.0;
         }
-        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1000.0
+        self.sum_us as f64 / self.count as f64 / 1000.0
     }
 
     /// p in [0, 100].
     pub fn percentile_ms(&self, p: f64) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.sorted_us.is_empty() {
             return 0.0;
         }
-        let mut s = self.samples_us.clone();
-        s.sort_unstable();
-        let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[rank.min(s.len() - 1)] as f64 / 1000.0
+        let rank = ((p / 100.0) * (self.sorted_us.len() - 1) as f64).round() as usize;
+        self.sorted_us[rank.min(self.sorted_us.len() - 1)] as f64 / 1000.0
     }
 
     pub fn summary(&self) -> String {
@@ -120,9 +234,12 @@ impl ShardStats {
         self.shards.iter().map(|s| s.lock().unwrap().clone()).collect()
     }
 
-    /// All shards merged into one aggregate recorder.
+    /// All shards merged into one aggregate recorder. The aggregate's
+    /// window is sized at shards × [`DEFAULT_WINDOW`], so every
+    /// shard's retained samples survive the merge — percentiles cover
+    /// the whole pool, not whichever shard merged last.
     pub fn merged(&self) -> LatencyStats {
-        let mut all = LatencyStats::new();
+        let mut all = LatencyStats::with_window(DEFAULT_WINDOW * self.shards.len().max(1));
         for s in &self.shards {
             all.merge(&s.lock().unwrap());
         }
@@ -209,6 +326,72 @@ mod tests {
         assert!((a.mean_batch() - 20.0 / 3.0).abs() < 1e-12);
         // p99 must now reflect b's slow tail
         assert!(a.percentile_ms(99.0) >= 90.0);
+    }
+
+    /// The percentile window is bounded: counters keep the all-time
+    /// totals while the retained buffer holds only the most recent
+    /// `cap` samples (the metrics-scrape fix — no unbounded clone +
+    /// sort under the shard lock).
+    #[test]
+    fn window_is_bounded_and_keeps_recent_samples() {
+        let mut l = LatencyStats::with_window(4);
+        for i in 1..=100u64 {
+            l.record(Duration::from_millis(i));
+        }
+        assert_eq!(l.count(), 100, "count covers every request");
+        assert!((l.mean_ms() - 50.5).abs() < 1.0, "mean covers every request");
+        let snap = l.snapshot();
+        // window holds the last 4 samples: 97..=100 ms
+        assert_eq!(snap.percentile_ms(0.0), 97.0);
+        assert_eq!(snap.percentile_ms(100.0), 100.0);
+    }
+
+    /// One snapshot answers every percentile identically to the
+    /// per-query path (which now delegates to it).
+    #[test]
+    fn snapshot_consistent_with_percentile_queries() {
+        let mut l = LatencyStats::new();
+        for i in [5u64, 1, 9, 3, 7] {
+            l.record(Duration::from_millis(i));
+        }
+        let snap = l.snapshot();
+        for p in [0.0, 25.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(snap.percentile_ms(p), l.percentile_ms(p), "p{p}");
+        }
+        assert_eq!(snap.count(), l.count());
+        assert_eq!(snap.summary(), l.summary());
+    }
+
+    #[test]
+    fn merge_respects_window_bound() {
+        let mut a = LatencyStats::with_window(3);
+        let mut b = LatencyStats::new();
+        for i in 1..=10u64 {
+            b.record(Duration::from_millis(i));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 10);
+        assert_eq!(a.snapshot().sorted_us.len(), 3, "window stays bounded after merge");
+    }
+
+    /// With every shard at window capacity, the merged aggregate must
+    /// still represent *all* shards — not just whichever merged last.
+    #[test]
+    fn merged_window_covers_all_full_shards() {
+        let hub = ShardStats::new(2);
+        for (i, ms) in [(0usize, 10u64), (1, 1000)] {
+            let s = hub.shard(i);
+            let mut g = s.lock().unwrap();
+            for _ in 0..DEFAULT_WINDOW {
+                g.record(Duration::from_millis(ms));
+            }
+        }
+        let snap = hub.merged().snapshot();
+        assert_eq!(snap.count(), 2 * DEFAULT_WINDOW);
+        // both populations survive the merge: the fast shard owns the
+        // low quartile, the slow shard the high one
+        assert_eq!(snap.percentile_ms(25.0), 10.0);
+        assert_eq!(snap.percentile_ms(75.0), 1000.0);
     }
 
     #[test]

@@ -3,10 +3,13 @@
 //! Requests (single images) arrive on one bounded MPMC queue
 //! ([`crate::coordinator::queue`]); a pool of `ServerConfig::shards`
 //! worker shards competes for them. Each shard owns its *own* engine
-//! instance, groups up to `max_batch` requests within `batch_window`,
-//! runs inference, decodes + NMS-filters, and answers each request
-//! through its response channel. Per-shard latency recorders merge
-//! into the aggregate view in [`crate::coordinator::metrics`].
+//! instance — and, on the planned executor, its own
+//! `ServerConfig::threads`-wide work-stealing tile pool (the shards ×
+//! threads topology) — groups up to `max_batch` requests within
+//! `batch_window`, runs inference, decodes + NMS-filters, and answers
+//! each request through its response channel. Per-shard latency
+//! recorders merge into the aggregate view in
+//! [`crate::coordinator::metrics`].
 //!
 //! Two engine modes share this loop:
 //!
@@ -57,6 +60,13 @@ pub enum Executor {
 pub struct ServerConfig {
     /// Worker shards, each owning one engine instance.
     pub shards: usize,
+    /// Intra-op threads **per shard** (the shards × threads topology):
+    /// each planned-executor shard owns a work-stealing pool of this
+    /// many participants and splits every conv's im2col + GEMM over
+    /// output-row tiles on it. 1 = single-threaded shards (the naive
+    /// executor always runs single-threaded). Outputs are bitwise
+    /// independent of this knob.
+    pub threads: usize,
     /// Maximum images per forward pass.
     pub max_batch: usize,
     /// How long a shard waits to fill a batch after the first request.
@@ -75,10 +85,21 @@ pub struct ServerConfig {
     pub executor: Executor,
 }
 
+/// Default per-shard thread count: `LBW_THREADS` when set (CI runs the
+/// suite under `LBW_THREADS=4` to soak the threaded path), else 1.
+fn default_threads() -> usize {
+    std::env::var("LBW_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             shards: 1,
+            threads: default_threads(),
             max_batch: crate::consts::TRAIN_BATCH,
             batch_window: Duration::from_millis(2),
             score_thresh: 0.4,
@@ -211,15 +232,20 @@ impl DetectServer {
     }
 
     /// Start in **engine mode**: every shard gets its own pure-Rust
-    /// engine built from the checkpoint (re-quantizing for the shift
-    /// engine). No artifacts, no Python — hermetic.
+    /// engine built from the checkpoint. No artifacts, no Python —
+    /// hermetic.
     ///
     /// With the default [`Executor::Planned`] each shard compiles one
-    /// reusable plan + activation arena on its own thread at startup
-    /// and executes every batch through it back-to-back — no
-    /// per-request model setup and no allocation inside the forward
-    /// pass. [`Executor::Naive`] serves through the reference per-op
-    /// executor instead (benchmark baseline).
+    /// reusable plan + activation arena at startup, owns a
+    /// `cfg.threads`-participant work-stealing pool (the shards ×
+    /// threads topology), and executes every batch through it
+    /// back-to-back — no per-request model setup and no allocation
+    /// inside the forward pass. For the shift engine the checkpoint is
+    /// LBW-quantized **once, layer-parallel on a pool**, and the
+    /// projection is shared by every shard build instead of being
+    /// recomputed per shard. [`Executor::Naive`] serves through the
+    /// reference per-op executor instead (benchmark baseline; always
+    /// single-threaded).
     pub fn start_engine(
         spec: &ParamSpec,
         ckpt: &Checkpoint,
@@ -227,17 +253,39 @@ impl DetectServer {
         cfg: ServerConfig,
     ) -> Result<DetectServer> {
         let executor = cfg.executor;
+        let threads = cfg.threads.max(1);
         // a shard never runs a batch larger than max(max_batch, pad_batch)
         let plan_batch = cfg.max_batch.max(cfg.pad_batch).max(1);
+        // quantize every conv layer once, in parallel — all shards
+        // share the projection
+        let quants = match engine {
+            EngineKind::Shift { bits } => {
+                let qpool = crate::runtime::pool::ThreadPool::new(threads);
+                Some(crate::coordinator::trainer::quantize_conv_layers(
+                    spec, &ckpt.params, bits, 0.75, &qpool,
+                ))
+            }
+            EngineKind::Float => None,
+        };
         let mut setups: Vec<ShardSetup> = Vec::with_capacity(cfg.shards.max(1));
         for _ in 0..cfg.shards.max(1) {
-            let model = DetectorModel::build(spec, ckpt, engine)?;
+            let model = DetectorModel::build_with_quants(spec, ckpt, engine, quants.as_ref())?;
+            // one tile pool per planned shard (the naive walk has no
+            // tiled kernels to feed it)
+            let pool = match executor {
+                Executor::Planned => {
+                    Some(Arc::new(crate::runtime::pool::ThreadPool::new(threads)))
+                }
+                Executor::Naive => None,
+            };
             setups.push(Box::new(move |_shard: usize| -> Result<InferFn> {
                 Ok(match executor {
                     Executor::Planned => {
                         // compile once on the shard thread; the builder
-                        // model is dropped — the shard owns only the plan
-                        let mut plan = model.plan(plan_batch);
+                        // model is dropped — the shard owns only the
+                        // plan and its pool
+                        let mut plan =
+                            model.plan_with_pool(plan_batch, pool.expect("planned shard pool"));
                         Box::new(move |images: &[f32], batch: usize| {
                             Ok(plan.forward_vec(images, batch))
                         })

@@ -6,6 +6,7 @@
 //! gradient evaluated at the quantized weights (inside the artifact),
 //! Nesterov momentum, BN, and `µ = ¾‖W‖∞` per layer.
 
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
@@ -14,10 +15,12 @@ use anyhow::{ensure, Result};
 
 use super::init::{init_params, init_state};
 use super::metrics::StepLog;
-use super::params::{Checkpoint, ParamSpec};
+use super::params::{Checkpoint, ParamSpec, SpecEntry};
 use crate::consts::{GRID, IMG, NUM_CLS, TRAIN_BATCH};
 use crate::data::{encode_targets, generate_scene, Scene, SceneConfig};
 use crate::detection::{decode_grid, mean_ap, nms, ApMode, Detection, GroundTruth};
+use crate::quant::threshold::{lbw_quantize_layer, LbwQuant};
+use crate::runtime::pool::{SendPtr, ThreadPool};
 use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, Executable, Runtime};
 
 /// Training hyper-parameters (defaults reproduce the Table 1 runs).
@@ -249,6 +252,47 @@ pub fn evaluate_with_artifact(
     Ok(mean_ap(&dets, &gts, ApMode::Voc11Point))
 }
 
+/// Quantize every conv layer of a flat parameter vector with the
+/// paper's LBW rule (`µ = mu_ratio · ‖W‖∞`), running the layers
+/// **concurrently** on `pool`: each layer is an independent
+/// least-squares problem (eq. 3 + eq. 4 touch only that layer's
+/// weights), so per-layer tasks are stolen off the pool cursor with no
+/// coordination. Returns one projection per quantizable spec entry,
+/// keyed by name — exactly what a sequential `lbw_quantize_layer` loop
+/// produces, in any pool size (each layer's arithmetic is untouched).
+///
+/// The sharded server calls this once at startup and shares the map
+/// across all shard builds (`DetectorModel::build_with_quants`), so an
+/// N-shard shift server quantizes the checkpoint once instead of N
+/// times — and does it in parallel.
+pub fn quantize_conv_layers(
+    spec: &ParamSpec,
+    params: &[f32],
+    bits: u32,
+    mu_ratio: f32,
+    pool: &ThreadPool,
+) -> HashMap<String, LbwQuant> {
+    let entries: Vec<&SpecEntry> = spec.conv_entries().collect();
+    let mut results: Vec<Option<LbwQuant>> = Vec::new();
+    results.resize_with(entries.len(), || None);
+    let base = SendPtr::new(results.as_mut_ptr());
+    let entries_ref = &entries;
+    pool.run(entries.len(), 1, |i0, i1| {
+        for i in i0..i1 {
+            let e = entries_ref[i];
+            let q = lbw_quantize_layer(&params[e.offset..e.offset + e.size], bits, mu_ratio);
+            // SAFETY: slot i is written by exactly the task that claimed
+            // index i; ranges are disjoint
+            unsafe { *base.get().add(i) = Some(q) };
+        }
+    });
+    entries
+        .iter()
+        .zip(results)
+        .map(|(e, q)| (e.name.clone(), q.expect("every layer task ran")))
+        .collect()
+}
+
 /// Convenience: save a training outcome (checkpoint + JSONL history).
 pub fn save_outcome(out: &TrainOutcome, ckpt_path: &Path) -> Result<()> {
     out.checkpoint.save(ckpt_path)?;
@@ -265,6 +309,47 @@ pub fn save_outcome(out: &TrainOutcome, ckpt_path: &Path) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
+
+    /// The pool-parallel per-layer quantization must equal the
+    /// sequential loop exactly — levels, scale, and values — for any
+    /// pool size.
+    #[test]
+    fn parallel_layer_quantization_matches_sequential() {
+        let spec = synthetic_spec(SynthConfig::default());
+        let ckpt = synthetic_checkpoint(&spec, 2026, 6);
+        for threads in [1usize, 4] {
+            let pool = ThreadPool::new(threads);
+            let got = quantize_conv_layers(&spec, &ckpt.params, 6, 0.75, &pool);
+            assert_eq!(got.len(), spec.conv_entries().count());
+            for e in spec.conv_entries() {
+                let want = lbw_quantize_layer(&ckpt.params[e.offset..e.offset + e.size], 6, 0.75);
+                let g = &got[&e.name];
+                assert_eq!(g.s, want.s, "{} scale at {threads} threads", e.name);
+                assert_eq!(g.levels, want.levels, "{} levels", e.name);
+                assert_eq!(g.wq, want.wq, "{} values", e.name);
+            }
+        }
+    }
+
+    /// Every parallel projection lands on the LBW grid (zero or ±2^k)
+    /// — the map is usable as-is by `DetectorModel::build_with_quants`.
+    #[test]
+    fn parallel_quantization_lands_on_pow2_grid() {
+        let spec = synthetic_spec(SynthConfig::default());
+        let ckpt = synthetic_checkpoint(&spec, 11, 4);
+        let pool = ThreadPool::new(2);
+        let quants = quantize_conv_layers(&spec, &ckpt.params, 4, 0.75, &pool);
+        for e in spec.conv_entries() {
+            for &v in &quants[&e.name].wq {
+                assert!(
+                    v == 0.0 || v.abs().log2().fract() == 0.0,
+                    "{}: {v} not on the power-of-two grid",
+                    e.name
+                );
+            }
+        }
+    }
 
     #[test]
     fn lr_schedule_drops() {

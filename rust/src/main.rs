@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Result};
 use lbw_net::config::Config;
 use lbw_net::consts::{IMG, NUM_CLASSES};
 use lbw_net::coordinator::params::{Checkpoint, ParamSpec};
-use lbw_net::coordinator::server::DetectServer;
+use lbw_net::coordinator::server::{DetectServer, ServerConfig};
 use lbw_net::coordinator::trainer::{evaluate_with_artifact, save_outcome, Trainer};
 use lbw_net::data::{generate_scene, Scene, SceneConfig, ShapeClass};
 use lbw_net::detection::{decode_grid, nms, Detection};
@@ -29,15 +29,19 @@ repro — LBW-Net reproduction: low bit-width CNNs for object detection
 USAGE: repro <subcommand> [--flag value ...]
 
   train     --arch a --bits 6 [--steps N --lr F --mu-ratio F --seed N --out ckpt.lbw --config cfg.toml]
-  eval      --ckpt PATH [--scenes N --engine artifact|float|shift]
-  detect    --ckpt PATH [--count N --seed N --engine E --thresh F]     (Fig. 1)
+  eval      --ckpt PATH [--scenes N --engine artifact|float|shift --threads N]
+  detect    --ckpt PATH [--count N --seed N --engine E --thresh F --threads N]  (Fig. 1)
   table1    [--steps N --bits 4,5,6,32 --archs a,b --seed N]           (Table 1)
   stats     --ckpt PATH [--layers l1,l2]                               (Fig. 2 + Tables 2-3)
   quantize  [--ckpt PATH --bits 2,4,5,6 --n N]                         (§2.1 exactness)
   inq       [--bits 4|5 --steps N --seed N --out ckpt.lbw]              (INQ baseline [25])
-  serve     [--ckpt PATH --engine shift|float|artifact --shards N
+  serve     [--ckpt PATH --engine shift|float|artifact --shards N --threads N
              --executor planned|naive --requests N --concurrency N]    (sharded serving)
   gen-data  [--count N --seed N --out DIR]                             (SynthVOC scenes)
+
+--threads is intra-op parallelism: each planned-executor shard splits
+its conv tiles over a work-stealing pool of that many threads (shards x
+threads total). Results are bitwise identical for any thread count.
 
 serve runs hermetically with the pure-Rust engines (shift/float): with
 no --ckpt it builds a synthetic He-initialized detector, so it works on
@@ -92,16 +96,24 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args, cfg: &Config) -> Result<()> {
-    args.check_known(&["ckpt", "scenes", "engine", "config"])?;
+    args.check_known(&["ckpt", "scenes", "engine", "threads", "config"])?;
     let ck = Checkpoint::load(Path::new(args.require("ckpt")?))?;
     let scenes: u64 = args.parse_or("scenes", 256)?;
     let engine = args.str_or("engine", "artifact");
-    let map = eval_checkpoint(&ck, scenes, &engine, cfg)?;
+    // same default as the server: 1, overridable via LBW_THREADS
+    let threads: usize = args.parse_or("threads", ServerConfig::default().threads)?;
+    let map = eval_checkpoint(&ck, scenes, &engine, threads, cfg)?;
     println!("mAP({engine}, {} b{}, {scenes} scenes) = {map:.4}", ck.arch, ck.bits);
     Ok(())
 }
 
-fn eval_checkpoint(ck: &Checkpoint, scenes: u64, engine: &str, cfg: &Config) -> Result<f64> {
+fn eval_checkpoint(
+    ck: &Checkpoint,
+    scenes: u64,
+    engine: &str,
+    threads: usize,
+    cfg: &Config,
+) -> Result<f64> {
     let scene_cfg = SceneConfig::default();
     match engine {
         "artifact" => {
@@ -125,8 +137,9 @@ fn eval_checkpoint(ck: &Checkpoint, scenes: u64, engine: &str, cfg: &Config) -> 
             } else {
                 EngineKind::Shift { bits: ck.bits.min(6) }
             };
-            // the planned executor: one plan + arena reused per scene
-            let mut backend = InferBackend::planned(&spec, ck, kind, 1)?;
+            // the planned executor: one plan + arena (+ tile pool)
+            // reused across every scene
+            let mut backend = InferBackend::planned_threaded(&spec, ck, kind, 1, threads)?;
             let mut dets = Vec::new();
             let mut gts = Vec::new();
             for i in 0..scenes {
@@ -170,12 +183,13 @@ fn print_detections(title: &str, dets: &[Detection], scene: &Scene) {
 }
 
 fn cmd_detect(args: &Args) -> Result<()> {
-    args.check_known(&["ckpt", "count", "seed", "engine", "thresh", "config"])?;
+    args.check_known(&["ckpt", "count", "seed", "engine", "thresh", "threads", "config"])?;
     let ck = Checkpoint::load(Path::new(args.require("ckpt")?))?;
     let count: u64 = args.parse_or("count", 3)?;
     let seed: u64 = args.parse_or("seed", 9000)?;
     let engine = args.str_or("engine", "artifact");
     let thresh: f32 = args.parse_or("thresh", 0.5)?;
+    let threads: usize = args.parse_or("threads", ServerConfig::default().threads)?;
 
     let scene_cfg = SceneConfig::default();
     // one backend, engine-agnostic: the AOT artifact or the planned
@@ -189,7 +203,7 @@ fn cmd_detect(args: &Args) -> Result<()> {
             } else {
                 EngineKind::Shift { bits: ck.bits.min(6) }
             };
-            InferBackend::planned(&spec, &ck, kind, 1)?
+            InferBackend::planned_threaded(&spec, &ck, kind, 1, threads)?
         }
         other => bail!("unknown engine `{other}`"),
     };
@@ -378,13 +392,14 @@ fn cmd_inq(args: &Args, cfg: &Config) -> Result<()> {
 
 fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     args.check_known(&[
-        "ckpt", "engine", "executor", "shards", "requests", "concurrency", "config",
+        "ckpt", "engine", "executor", "shards", "threads", "requests", "concurrency", "config",
     ])?;
     let requests: usize = args.parse_or("requests", 64)?;
     let concurrency: usize = args.parse_or("concurrency", 8)?;
     let engine = args.str_or("engine", &cfg.serve.engine);
     let mut server_cfg = cfg.to_server_config();
     server_cfg.shards = args.parse_or("shards", server_cfg.shards)?;
+    server_cfg.threads = args.parse_or("threads", server_cfg.threads)?;
     match args.str_or("executor", &cfg.serve.executor).as_str() {
         "planned" => server_cfg.executor = lbw_net::coordinator::server::Executor::Planned,
         "naive" => server_cfg.executor = lbw_net::coordinator::server::Executor::Naive,
@@ -415,8 +430,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
                 EngineKind::Shift { bits: ck.bits.clamp(2, 6) }
             };
             println!(
-                "serving {} via hermetic {kind:?} engine ({:?} executor), {} shard(s)",
-                ck.arch, server_cfg.executor, server_cfg.shards
+                "serving {} via hermetic {kind:?} engine ({:?} executor), {} shard(s) x {} thread(s)",
+                ck.arch, server_cfg.executor, server_cfg.shards, server_cfg.threads
             );
             DetectServer::start_engine(&spec, &ck, kind, server_cfg)?
         }

@@ -16,6 +16,7 @@
 //!   allocations — all buffers come from the executor's arena
 //!   (`crate::nn::plan`).
 
+use crate::runtime::pool::{SendPtr, ThreadPool};
 use crate::tensor::Tensor;
 
 /// Output-channel lanes per GEMM register tile. Weights on the planned
@@ -23,6 +24,16 @@ use crate::tensor::Tensor;
 /// this, letting the inner loops run a fixed width the auto-vectorizer
 /// can turn into SIMD.
 pub const LANES: usize = 8;
+
+/// Output rows per stolen GEMM chunk. A multiple of the 4-row register
+/// tile, and a function of nothing else — chunk boundaries (and hence
+/// the tile walk) are identical for every thread count, which keeps
+/// the parallel kernels bitwise-deterministic.
+pub const GEMM_CHUNK: usize = 16;
+
+/// Output rows per stolen im2col chunk (each row costs `kh·kw·cin`
+/// gather work).
+pub const IM2COL_CHUNK: usize = 64;
 
 /// Zero-pad an NHWC tensor by `lo_h`/`hi_h` pixels on the height axis
 /// and `lo_w`/`hi_w` on the width axis (reference path only — the
@@ -131,11 +142,70 @@ pub fn conv1x1(x: &Tensor, w: &[f32], cin: usize, cout: usize, bias: Option<&[f3
 // planned path: implicit-padding im2col + register-blocked fused GEMM
 // ---------------------------------------------------------------------------
 
-/// Gather SAME-padded patch rows into a column buffer, mapping each
-/// element through `f` (identity for the f32 path, fixed-point
-/// conversion for the shift path). `col` must hold
-/// `n*oh*ow * kh*kw*cin` elements; out-of-bounds taps become
-/// `T::default()` — the padded input is never materialized.
+/// Gather SAME-padded patch rows `[row0, row1)` (flat `(ni, oy, ox)`
+/// index) into `col`, mapping each element through `f` (identity for
+/// the f32 path, fixed-point conversion for the shift path). `col`
+/// covers exactly those rows (`(row1-row0) * kh*kw*cin` elements);
+/// out-of-bounds taps become `T::default()` — the padded input is
+/// never materialized. Rows are independent, so the parallel packer
+/// splits the row range across pool chunks.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_rows_map<T: Copy + Default>(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    lo_h: usize,
+    lo_w: usize,
+    ow: usize,
+    ohw: usize,
+    row0: usize,
+    row1: usize,
+    f: impl Fn(f32) -> T,
+    col: &mut [T],
+) {
+    let k = kh * kw * cin;
+    debug_assert_eq!(col.len(), (row1 - row0) * k);
+    for row in row0..row1 {
+        let ni = row / ohw;
+        let rem = row - ni * ohw;
+        let (oy, ox) = (rem / ow, rem % ow);
+        let iy0 = (oy * stride) as isize - lo_h as isize;
+        let ix0 = (ox * stride) as isize - lo_w as isize;
+        let dst = &mut col[(row - row0) * k..(row - row0 + 1) * k];
+        for ky in 0..kh {
+            let y = iy0 + ky as isize;
+            let seg = &mut dst[ky * kw * cin..(ky + 1) * kw * cin];
+            if y < 0 || y >= h as isize {
+                seg.fill(T::default());
+                continue;
+            }
+            // valid kx range for this output column
+            let kx_lo = ((-ix0).max(0) as usize).min(kw);
+            let kx_hi = ((w as isize - ix0).clamp(0, kw as isize)) as usize;
+            if kx_lo > 0 {
+                seg[..kx_lo * cin].fill(T::default());
+            }
+            if kx_hi < kw {
+                seg[kx_hi * cin..].fill(T::default());
+            }
+            if kx_hi > kx_lo {
+                let sbase =
+                    ((ni * h + y as usize) * w + (ix0 + kx_lo as isize) as usize) * cin;
+                let src = &x[sbase..sbase + (kx_hi - kx_lo) * cin];
+                for (d, &s) in seg[kx_lo * cin..kx_hi * cin].iter_mut().zip(src) {
+                    *d = f(s);
+                }
+            }
+        }
+    }
+}
+
+/// Whole-tensor im2col (see [`im2col_rows_map`]). `col` must hold
+/// `n*oh*ow * kh*kw*cin` elements.
 #[allow(clippy::too_many_arguments)]
 pub fn im2col_map<T: Copy + Default>(
     x: &[f32],
@@ -153,45 +223,43 @@ pub fn im2col_map<T: Copy + Default>(
     f: impl Fn(f32) -> T,
     col: &mut [T],
 ) {
-    let k = kh * kw * cin;
     debug_assert_eq!(x.len(), n * h * w * cin);
-    debug_assert_eq!(col.len(), n * oh * ow * k);
-    let mut row = 0usize;
-    for ni in 0..n {
-        for oy in 0..oh {
-            let iy0 = (oy * stride) as isize - lo_h as isize;
-            for ox in 0..ow {
-                let ix0 = (ox * stride) as isize - lo_w as isize;
-                let dst = &mut col[row * k..(row + 1) * k];
-                for ky in 0..kh {
-                    let y = iy0 + ky as isize;
-                    let seg = &mut dst[ky * kw * cin..(ky + 1) * kw * cin];
-                    if y < 0 || y >= h as isize {
-                        seg.fill(T::default());
-                        continue;
-                    }
-                    // valid kx range for this output column
-                    let kx_lo = ((-ix0).max(0) as usize).min(kw);
-                    let kx_hi = ((w as isize - ix0).clamp(0, kw as isize)) as usize;
-                    if kx_lo > 0 {
-                        seg[..kx_lo * cin].fill(T::default());
-                    }
-                    if kx_hi < kw {
-                        seg[kx_hi * cin..].fill(T::default());
-                    }
-                    if kx_hi > kx_lo {
-                        let sbase = ((ni * h + y as usize) * w + (ix0 + kx_lo as isize) as usize)
-                            * cin;
-                        let src = &x[sbase..sbase + (kx_hi - kx_lo) * cin];
-                        for (d, &s) in seg[kx_lo * cin..kx_hi * cin].iter_mut().zip(src) {
-                            *d = f(s);
-                        }
-                    }
-                }
-                row += 1;
-            }
-        }
-    }
+    im2col_rows_map(x, h, w, cin, kh, kw, stride, lo_h, lo_w, ow, oh * ow, 0, n * oh * ow, f, col);
+}
+
+/// Parallel im2col: output rows are packed by whichever pool
+/// participant steals their chunk. Each chunk writes a disjoint slice
+/// of `col`, so the result is identical to the serial packer for any
+/// thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn par_im2col_map<T: Copy + Default + Send>(
+    pool: &ThreadPool,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    lo_h: usize,
+    lo_w: usize,
+    oh: usize,
+    ow: usize,
+    f: impl Fn(f32) -> T + Sync,
+    col: &mut [T],
+) {
+    let k = kh * kw * cin;
+    let rows = n * oh * ow;
+    debug_assert_eq!(x.len(), n * h * w * cin);
+    debug_assert_eq!(col.len(), rows * k);
+    let base = SendPtr::new(col.as_mut_ptr());
+    pool.run(rows, IM2COL_CHUNK, |r0, r1| {
+        // SAFETY: each chunk writes only column rows [r0, r1); chunk
+        // ranges are disjoint by construction
+        let sub = unsafe { std::slice::from_raw_parts_mut(base.get().add(r0 * k), (r1 - r0) * k) };
+        im2col_rows_map(x, h, w, cin, kh, kw, stride, lo_h, lo_w, ow, oh * ow, r0, r1, &f, sub);
+    });
 }
 
 /// f32 im2col with implicit SAME padding (see [`im2col_map`]).
@@ -212,6 +280,27 @@ pub fn im2col(
     col: &mut [f32],
 ) {
     im2col_map(x, n, h, w, cin, kh, kw, stride, lo_h, lo_w, oh, ow, |v| v, col);
+}
+
+/// Parallel f32 im2col (see [`par_im2col_map`]).
+#[allow(clippy::too_many_arguments)]
+pub fn par_im2col(
+    pool: &ThreadPool,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    lo_h: usize,
+    lo_w: usize,
+    oh: usize,
+    ow: usize,
+    col: &mut [f32],
+) {
+    par_im2col_map(pool, x, n, h, w, cin, kh, kw, stride, lo_h, lo_w, oh, ow, |v| v, col);
 }
 
 /// Re-pack `[k][cout]` row-major weights into lane-padded `[k][cp]`
@@ -294,9 +383,69 @@ pub fn gemm_bn_relu(
     debug_assert_eq!(b.len(), k * cp);
     debug_assert_eq!(out.len(), m * cout);
     debug_assert!(scale.len() == cout && bias.len() == cout);
-    let mut i0 = 0usize;
-    while i0 < m {
-        let m4 = (m - i0).min(4);
+    gemm_rows(a, k, b, cout, cp, scale, bias, relu, residual, 0, m, out);
+}
+
+/// Parallel [`gemm_bn_relu`]: output rows `[0, m)` are split into
+/// fixed [`GEMM_CHUNK`]-row tiles stolen off the pool's cursor. Every
+/// output row's accumulator walks `k` in the same order as the serial
+/// kernel and each tile (epilogue included) writes a disjoint slice of
+/// `out`, so the result is **bitwise identical** for any thread count
+/// — there is no split-K reduction anywhere.
+#[allow(clippy::too_many_arguments)]
+pub fn par_gemm_bn_relu(
+    pool: &ThreadPool,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    cout: usize,
+    cp: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &Residual,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * cp);
+    debug_assert_eq!(out.len(), m * cout);
+    debug_assert!(scale.len() == cout && bias.len() == cout);
+    let base = SendPtr::new(out.as_mut_ptr());
+    pool.run(m, GEMM_CHUNK, |r0, r1| {
+        // SAFETY: each chunk writes only output rows [r0, r1); chunk
+        // ranges are disjoint by construction
+        let sub = unsafe {
+            std::slice::from_raw_parts_mut(base.get().add(r0 * cout), (r1 - r0) * cout)
+        };
+        gemm_rows(a, k, b, cout, cp, scale, bias, relu, residual, r0, r1, sub);
+    });
+}
+
+/// Row-range GEMM core: computes output rows `[r0, r1)` into `out`
+/// (which covers exactly those rows). Row indices into `a` and the
+/// residual stay absolute; per-row accumulation order is independent
+/// of how rows are grouped into tiles, so any row partition reproduces
+/// the full-range result bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
+    a: &[f32],
+    k: usize,
+    b: &[f32],
+    cout: usize,
+    cp: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &Residual,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), (r1 - r0) * cout);
+    let mut i0 = r0;
+    while i0 < r1 {
+        let m4 = (r1 - i0).min(4);
         let mut jb = 0usize;
         while jb < cp {
             let mut acc = [[0.0f32; LANES]; 4];
@@ -332,7 +481,7 @@ pub fn gemm_bn_relu(
             for (r, ar) in acc.iter().enumerate().take(m4) {
                 let mi = i0 + r;
                 let res = residual.base(mi, cout);
-                let orow = &mut out[mi * cout + jb..mi * cout + jb + jn];
+                let orow = &mut out[(mi - r0) * cout + jb..(mi - r0) * cout + jb + jn];
                 for (j, o) in orow.iter_mut().enumerate() {
                     let c = jb + j;
                     let mut y = ar[j] * scale[c] + bias[c];
@@ -574,6 +723,50 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(d <= 1e-5, "fused epilogue diff {d}");
+    }
+
+    /// The pool-parallel GEMM and im2col must be **bitwise** equal to
+    /// their serial counterparts for every thread count (row tiles are
+    /// disjoint; no split-K reduction exists).
+    #[test]
+    fn par_kernels_bitwise_match_serial() {
+        use crate::runtime::pool::ThreadPool;
+        let (n, h, w, cin, cout, kh, stride) = (2usize, 9usize, 7usize, 3usize, 13usize, 3usize, 2usize);
+        let x = randv(n * h * w * cin, 51, 1.0);
+        let wt = randv(kh * kh * cin * cout, 52, 0.4);
+        let (lo_h, _) = same_padding(h, kh, stride);
+        let (lo_w, _) = same_padding(w, kh, stride);
+        let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+        let (m, k) = (n * oh * ow, kh * kh * cin);
+        let mut col_s = vec![0.0f32; m * k];
+        im2col(&x, n, h, w, cin, kh, kh, stride, lo_h, lo_w, oh, ow, &mut col_s);
+        let (cp, packed) = pack_lanes(&wt, k, cout);
+        let scale = randv(cout, 53, 1.0);
+        let bias = randv(cout, 54, 0.2);
+        let skip = randv(m * cout, 55, 1.0);
+        let mut out_s = vec![0.0f32; m * cout];
+        gemm_bn_relu(
+            &col_s, m, k, &packed, cout, cp, &scale, &bias, true, &Residual::Add(&skip),
+            &mut out_s,
+        );
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut col_p = vec![0.0f32; m * k];
+            par_im2col(&pool, &x, n, h, w, cin, kh, kh, stride, lo_h, lo_w, oh, ow, &mut col_p);
+            assert!(
+                col_s.iter().zip(&col_p).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "im2col drift at {threads} threads"
+            );
+            let mut out_p = vec![0.0f32; m * cout];
+            par_gemm_bn_relu(
+                &pool, &col_p, m, k, &packed, cout, cp, &scale, &bias, true,
+                &Residual::Add(&skip), &mut out_p,
+            );
+            assert!(
+                out_s.iter().zip(&out_p).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "gemm drift at {threads} threads"
+            );
+        }
     }
 
     /// AddStrided must equal subsample-then-add.

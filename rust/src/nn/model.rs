@@ -11,6 +11,9 @@
 //! [`DetectorModel::forward_naive`], the reference implementation the
 //! planned executor is parity-tested and benchmarked against.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use super::conv::{conv1x1, conv2d};
@@ -19,6 +22,8 @@ use super::plan::Plan;
 use super::shift_conv::ShiftConv;
 use crate::consts::{GRID, IMG, K, NUM_CLS};
 use crate::coordinator::params::{Checkpoint, ParamSpec};
+use crate::quant::threshold::LbwQuant;
+use crate::runtime::pool::ThreadPool;
 use crate::tensor::Tensor;
 
 const BN_EPS: f32 = 1e-5;
@@ -106,6 +111,22 @@ impl DetectorModel {
     /// shift engine re-quantizes the stored full-precision weights with
     /// the paper's `µ = ¾‖W‖∞` rule at the requested bit-width.
     pub fn build(spec: &ParamSpec, ckpt: &Checkpoint, engine: EngineKind) -> Result<Self> {
+        Self::build_with_quants(spec, ckpt, engine, None)
+    }
+
+    /// Like [`DetectorModel::build`], but conv layers whose names
+    /// appear in `quants` reuse the given LBW projection instead of
+    /// re-quantizing. The server quantizes the checkpoint **once, in
+    /// parallel** (`coordinator::trainer::quantize_conv_layers`) and
+    /// shares the map across all shard builds — layers absent from the
+    /// map fall back to the sequential path. The map must have been
+    /// produced at the same bit-width and `µ` ratio as this engine.
+    pub fn build_with_quants(
+        spec: &ParamSpec,
+        ckpt: &Checkpoint,
+        engine: EngineKind,
+        quants: Option<&HashMap<String, LbwQuant>>,
+    ) -> Result<Self> {
         ensure!(ckpt.params.len() == spec.num_params, "checkpoint/spec param mismatch");
         ensure!(ckpt.state.len() == spec.num_state, "checkpoint/spec state mismatch");
         let mut weight_bits = 0usize;
@@ -125,8 +146,15 @@ impl DetectorModel {
                     ))
                 }
                 EngineKind::Shift { bits } => {
-                    let q = crate::quant::threshold::lbw_quantize_layer(w, bits, 0.75);
-                    let sc = ShiftConv::from_quant(&q, kh, kw, cin, cout, bits);
+                    let q_owned;
+                    let q = match quants.and_then(|m| m.get(name)) {
+                        Some(q) => q,
+                        None => {
+                            q_owned = crate::quant::threshold::lbw_quantize_layer(w, bits, 0.75);
+                            &q_owned
+                        }
+                    };
+                    let sc = ShiftConv::from_quant(q, kh, kw, cin, cout, bits);
                     weight_bits += sc.model_bits();
                     sparsities.push(sc.sparsity);
                     Ok((ConvOp::Shift(Box::new(sc)), [kh, kw, cin, cout]))
@@ -189,16 +217,17 @@ impl DetectorModel {
         // deployment would do for tiny tails).
         let cls_e = spec.param("cls.w")?;
         let head_width = cls_e.shape[0];
-        let quantize_head = |w: &[f32]| -> Vec<f32> {
+        let quantize_head = |name: &str, w: &[f32]| -> Vec<f32> {
             match engine {
                 EngineKind::Float => w.to_vec(),
-                EngineKind::Shift { bits } => {
-                    crate::quant::threshold::lbw_quantize_layer(w, bits, 0.75).wq
-                }
+                EngineKind::Shift { bits } => match quants.and_then(|m| m.get(name)) {
+                    Some(q) => q.wq.clone(),
+                    None => crate::quant::threshold::lbw_quantize_layer(w, bits, 0.75).wq,
+                },
             }
         };
-        let cls_w = quantize_head(spec.view(&ckpt.params, "cls.w")?);
-        let reg_w = quantize_head(spec.view(&ckpt.params, "reg.w")?);
+        let cls_w = quantize_head("cls.w", spec.view(&ckpt.params, "cls.w")?);
+        let reg_w = quantize_head("reg.w", spec.view(&ckpt.params, "reg.w")?);
         match engine {
             EngineKind::Float => weight_bits += (cls_w.len() + reg_w.len()) * 32,
             EngineKind::Shift { bits } => {
@@ -234,6 +263,13 @@ impl DetectorModel {
     /// batches up to `max_batch`. See [`crate::nn::plan::Plan`].
     pub fn plan(&self, max_batch: usize) -> Plan {
         Plan::compile(self, max_batch)
+    }
+
+    /// Like [`DetectorModel::plan`], but the plan executes its conv
+    /// tiles on `pool` (one pool per server shard). Outputs are
+    /// bitwise identical to the single-threaded plan.
+    pub fn plan_with_pool(&self, max_batch: usize, pool: Arc<ThreadPool>) -> Plan {
+        Plan::compile_with_pool(self, max_batch, pool)
     }
 
     /// Run detection through the **planned executor** (compiled lazily

@@ -11,20 +11,28 @@
 //! `shift_conv::shift_gemm_bn_relu` for the shift-add engine) whose
 //! writeback fuses the folded-BN affine, the residual add (identity
 //! skips alias the producing arena slot instead of being copied), and
-//! ReLU. The sharded server holds one plan + arena per shard, so
-//! batched requests execute back-to-back with no per-request setup.
+//! ReLU. Both phases are **tile-parallel**: im2col packing and the
+//! GEMM are split over fixed output-row chunks stolen off the plan's
+//! work-stealing pool (`runtime::pool`), with the fused epilogue kept
+//! inside each tile so writebacks stay disjoint — outputs are bitwise
+//! identical for any thread count. The sharded server holds one plan +
+//! arena + pool per shard (shards × threads topology), so batched
+//! requests execute back-to-back with no per-request setup.
 //!
 //! The naive per-op tensor walk survives as
 //! [`DetectorModel::forward_naive`]; `rust/tests/plan_parity.rs` pins
 //! the two executors together and `rust/tests/plan_alloc.rs` proves
 //! the zero-allocation claim with a counting allocator.
 
+use std::sync::Arc;
+
 use crate::consts::{GRID, IMG, K, NUM_CLS};
-use crate::nn::conv::{gemm_bn_relu, im2col, pack_lanes, same_padding, Residual, LANES};
+use crate::nn::conv::{pack_lanes, par_gemm_bn_relu, par_im2col, same_padding, Residual, LANES};
 use crate::nn::layers::ps_vote_into;
 use crate::nn::model::{ConvOp, DetectorModel};
-use crate::nn::shift_conv::{im2col_fix, shift_gemm_bn_relu, DenseLanes, FIX};
+use crate::nn::shift_conv::{par_im2col_fix, par_shift_gemm_bn_relu, DenseLanes, FIX};
 use crate::nn::EngineKind;
+use crate::runtime::pool::ThreadPool;
 use crate::tensor::softmax_rows_;
 
 // Arena slot indices. Three rotating activation slots carry the
@@ -208,6 +216,10 @@ struct Arena {
 pub struct Plan {
     steps: Vec<Step>,
     arena: Arena,
+    /// Intra-op tile pool: every conv's im2col and GEMM are split over
+    /// output-row chunks stolen by the pool's participants. A 1-thread
+    /// pool (the [`Plan::compile`] default) runs everything inline.
+    pool: Arc<ThreadPool>,
     /// Largest batch the arena can hold.
     pub max_batch: usize,
     pub engine: EngineKind,
@@ -236,9 +248,22 @@ fn slot<'a>(lo: &'a [Vec<f32>], hi: &'a [Vec<f32>], d: usize, i: usize) -> &'a [
 
 impl Plan {
     /// Compile `model` into a static op list + arena sized for
-    /// `max_batch` images. The model is only read; it stays usable as
-    /// the naive reference executor.
+    /// `max_batch` images, executing single-threaded. The model is only
+    /// read; it stays usable as the naive reference executor.
     pub fn compile(model: &DetectorModel, max_batch: usize) -> Plan {
+        Plan::compile_with_pool(model, max_batch, Arc::new(ThreadPool::new(1)))
+    }
+
+    /// Like [`Plan::compile`], but every forward runs its conv tiles on
+    /// `pool` (the shards × threads topology: the server hands each
+    /// shard's plan that shard's own pool). Results are bitwise
+    /// identical for any pool size — tile boundaries are fixed and no
+    /// cross-tile reduction exists (`rust/tests/thread_determinism.rs`).
+    pub fn compile_with_pool(
+        model: &DetectorModel,
+        max_batch: usize,
+        pool: Arc<ThreadPool>,
+    ) -> Plan {
         let mb = max_batch.max(1);
         let mut steps: Vec<Step> = Vec::new();
 
@@ -389,11 +414,17 @@ impl Plan {
         Plan {
             steps,
             arena,
+            pool,
             max_batch: mb,
             engine: model.engine,
             weight_bits: model.weight_bits,
             mean_sparsity: model.mean_sparsity,
         }
+    }
+
+    /// Participants in this plan's tile pool (1 = single-threaded).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Execute the plan on `batch ≤ max_batch` images
@@ -408,6 +439,7 @@ impl Plan {
             self.max_batch
         );
         assert_eq!(images.len(), batch * IMG * IMG * 3, "bad image buffer size");
+        let pool = &self.pool;
         let Arena { bufs, col, colq } = &mut self.arena;
         for step in &self.steps {
             match step {
@@ -422,13 +454,13 @@ impl Plan {
                         };
                         let src = &src[..batch * cs.h_in * cs.w_in * cs.cin];
                         match cs.kernel {
-                            PlannedKernel::Float { .. } => im2col(
-                                src, batch, cs.h_in, cs.w_in, cs.cin, cs.kh, cs.kw, cs.stride,
-                                cs.lo_h, cs.lo_w, cs.oh, cs.ow, &mut col[..m * kdim],
+                            PlannedKernel::Float { .. } => par_im2col(
+                                pool, src, batch, cs.h_in, cs.w_in, cs.cin, cs.kh, cs.kw,
+                                cs.stride, cs.lo_h, cs.lo_w, cs.oh, cs.ow, &mut col[..m * kdim],
                             ),
-                            PlannedKernel::Shift { .. } => im2col_fix(
-                                src, batch, cs.h_in, cs.w_in, cs.cin, cs.kh, cs.kw, cs.stride,
-                                cs.lo_h, cs.lo_w, cs.oh, cs.ow, &mut colq[..m * kdim],
+                            PlannedKernel::Shift { .. } => par_im2col_fix(
+                                pool, src, batch, cs.h_in, cs.w_in, cs.cin, cs.kh, cs.kw,
+                                cs.stride, cs.lo_h, cs.lo_w, cs.oh, cs.ow, &mut colq[..m * kdim],
                             ),
                         }
                     }
@@ -461,14 +493,14 @@ impl Plan {
                             } else {
                                 &col[..m * kdim]
                             };
-                            gemm_bn_relu(
-                                a, m, kdim, w, cs.cout, *cp, &cs.scale, &cs.bias, cs.relu,
+                            par_gemm_bn_relu(
+                                pool, a, m, kdim, w, cs.cout, *cp, &cs.scale, &cs.bias, cs.relu,
                                 &res, &mut dst[..m * cs.cout],
                             );
                         }
-                        PlannedKernel::Shift { lanes, scale_out } => shift_gemm_bn_relu(
-                            &colq[..m * kdim], m, kdim, lanes, *scale_out, cs.cout, &cs.scale,
-                            &cs.bias, cs.relu, &res, &mut dst[..m * cs.cout],
+                        PlannedKernel::Shift { lanes, scale_out } => par_shift_gemm_bn_relu(
+                            pool, &colq[..m * kdim], m, kdim, lanes, *scale_out, cs.cout,
+                            &cs.scale, &cs.bias, cs.relu, &res, &mut dst[..m * cs.cout],
                         ),
                     }
                 }

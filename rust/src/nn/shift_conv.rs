@@ -333,6 +333,45 @@ pub fn im2col_fix(
     );
 }
 
+/// Parallel [`im2col_fix`]: patch rows packed across the pool, each
+/// chunk writing a disjoint slice of `col`.
+#[allow(clippy::too_many_arguments)]
+pub fn par_im2col_fix(
+    pool: &crate::runtime::pool::ThreadPool,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    lo_h: usize,
+    lo_w: usize,
+    oh: usize,
+    ow: usize,
+    col: &mut [i32],
+) {
+    let scale_in = f32::powi(2.0, FIX);
+    crate::nn::conv::par_im2col_map(
+        pool,
+        x,
+        n,
+        h,
+        w,
+        cin,
+        kh,
+        kw,
+        stride,
+        lo_h,
+        lo_w,
+        oh,
+        ow,
+        |v| (v * scale_in).round() as i32,
+        col,
+    );
+}
+
 /// Register-blocked shift-add GEMM with the same fused epilogue as
 /// `conv::gemm_bn_relu`: 4 fixed-point patch rows × `LANES` output
 /// channels per tile, the integer accumulator living in registers
@@ -357,17 +396,77 @@ pub fn shift_gemm_bn_relu(
     out: &mut [f32],
 ) {
     use crate::nn::conv::LANES;
-    let cp = lanes.cp;
     // the tile loop reads LANES-wide rows; a DenseLanes built with a
     // different lane width would read the next patch row's codes
-    assert_eq!(cp % LANES, 0, "DenseLanes must be built with lane width {LANES}");
+    assert_eq!(lanes.cp % LANES, 0, "DenseLanes must be built with lane width {LANES}");
     debug_assert_eq!(aq.len(), m * k);
-    debug_assert_eq!(lanes.shifts.len(), k * cp);
+    debug_assert_eq!(lanes.shifts.len(), k * lanes.cp);
     debug_assert_eq!(out.len(), m * cout);
     debug_assert!(scale.len() == cout && bias.len() == cout);
-    let mut i0 = 0usize;
-    while i0 < m {
-        let m4 = (m - i0).min(4);
+    shift_gemm_rows(aq, k, lanes, scale_out, cout, scale, bias, relu, residual, 0, m, out);
+}
+
+/// Parallel [`shift_gemm_bn_relu`]: fixed-size output-row tiles stolen
+/// off the pool cursor, integer accumulators per row, epilogue inside
+/// each tile — bitwise identical for any thread count (integer
+/// accumulation is exact; no split-K reduction exists).
+#[allow(clippy::too_many_arguments)]
+pub fn par_shift_gemm_bn_relu(
+    pool: &crate::runtime::pool::ThreadPool,
+    aq: &[i32],
+    m: usize,
+    k: usize,
+    lanes: &DenseLanes,
+    scale_out: f32,
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &crate::nn::conv::Residual,
+    out: &mut [f32],
+) {
+    use crate::nn::conv::{GEMM_CHUNK, LANES};
+    use crate::runtime::pool::SendPtr;
+    assert_eq!(lanes.cp % LANES, 0, "DenseLanes must be built with lane width {LANES}");
+    debug_assert_eq!(aq.len(), m * k);
+    debug_assert_eq!(lanes.shifts.len(), k * lanes.cp);
+    debug_assert_eq!(out.len(), m * cout);
+    debug_assert!(scale.len() == cout && bias.len() == cout);
+    let base = SendPtr::new(out.as_mut_ptr());
+    pool.run(m, GEMM_CHUNK, |r0, r1| {
+        // SAFETY: each chunk writes only output rows [r0, r1); chunk
+        // ranges are disjoint by construction
+        let sub = unsafe {
+            std::slice::from_raw_parts_mut(base.get().add(r0 * cout), (r1 - r0) * cout)
+        };
+        shift_gemm_rows(aq, k, lanes, scale_out, cout, scale, bias, relu, residual, r0, r1, sub);
+    });
+}
+
+/// Row-range core of the blocked shift-add GEMM: output rows
+/// `[r0, r1)` into `out` (covering exactly those rows); `aq` and
+/// residual row indices stay absolute.
+#[allow(clippy::too_many_arguments)]
+fn shift_gemm_rows(
+    aq: &[i32],
+    k: usize,
+    lanes: &DenseLanes,
+    scale_out: f32,
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &crate::nn::conv::Residual,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    use crate::nn::conv::LANES;
+    let cp = lanes.cp;
+    debug_assert_eq!(out.len(), (r1 - r0) * cout);
+    let mut i0 = r0;
+    while i0 < r1 {
+        let m4 = (r1 - i0).min(4);
         let mut jb = 0usize;
         while jb < cp {
             let mut acc = [[0i32; LANES]; 4];
@@ -398,7 +497,7 @@ pub fn shift_gemm_bn_relu(
             for (r, ar) in acc.iter().enumerate().take(m4) {
                 let mi = i0 + r;
                 let res = residual.base(mi, cout);
-                let orow = &mut out[mi * cout + jb..mi * cout + jb + jn];
+                let orow = &mut out[(mi - r0) * cout + jb..(mi - r0) * cout + jb + jn];
                 for (j, o) in orow.iter_mut().enumerate() {
                     let c = jb + j;
                     let mut y = (ar[j] as f32 * scale_out) * scale[c] + bias[c];
@@ -568,6 +667,49 @@ mod tests {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f32, f32::max);
             assert!(d <= 1e-5, "n{n} h{h} w{w} c{cin}->{cout} s{stride} b{bits}: diff {d}");
+        }
+    }
+
+    /// The pool-parallel shift GEMM must be bitwise equal to the serial
+    /// kernel for every thread count (integer accumulation is exact and
+    /// row tiles are disjoint).
+    #[test]
+    fn par_shift_gemm_bitwise_matches_serial() {
+        use crate::nn::conv::{same_padding, Residual, LANES};
+        use crate::runtime::pool::ThreadPool;
+        let (n, h, w, cin, cout, stride, bits) = (2usize, 9usize, 6usize, 4usize, 11usize, 1usize, 6u32);
+        let wf = randv(9 * cin * cout, 91, 0.25);
+        let q = lbw_quantize_layer(&wf, bits, 0.75);
+        let x = randv(n * h * w * cin, 92, 1.0);
+        let sc = ShiftConv::from_quant(&q, 3, 3, cin, cout, bits);
+        let lanes = sc.dense_lanes(LANES);
+        let (lo_h, _) = same_padding(h, 3, stride);
+        let (lo_w, _) = same_padding(w, 3, stride);
+        let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+        let (m, k) = (n * oh * ow, 9 * cin);
+        let mut col = vec![0i32; m * k];
+        im2col_fix(&x, n, h, w, cin, 3, 3, stride, lo_h, lo_w, oh, ow, &mut col);
+        let scale_out = f32::powi(2.0, sc.s - FIX);
+        let scale = randv(cout, 93, 1.0);
+        let bias = randv(cout, 94, 0.2);
+        let mut want = vec![0.0f32; m * cout];
+        shift_gemm_bn_relu(
+            &col, m, k, &lanes, scale_out, cout, &scale, &bias, true, &Residual::None, &mut want,
+        );
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let mut colq = vec![0i32; m * k];
+            par_im2col_fix(&pool, &x, n, h, w, cin, 3, 3, stride, lo_h, lo_w, oh, ow, &mut colq);
+            assert_eq!(col, colq, "fixed-point im2col drift at {threads} threads");
+            let mut got = vec![0.0f32; m * cout];
+            par_shift_gemm_bn_relu(
+                &pool, &colq, m, k, &lanes, scale_out, cout, &scale, &bias, true,
+                &Residual::None, &mut got,
+            );
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shift gemm drift at {threads} threads"
+            );
         }
     }
 

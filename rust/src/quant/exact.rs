@@ -11,8 +11,10 @@
 //! s*      = ⌊log2(4u*/3v*)⌋
 //! ```
 //!
-//! * b = 2 (ternary): one free count `k₀` — solved exactly in
-//!   `O(N log N)` (sort + prefix scan), as §2.1 describes.
+//! * b = 2 (ternary): one free count `k₀` — solved exactly via sort +
+//!   prefix scan. §2.1 states the `O(N log N)` bound; with the radix
+//!   magnitude argsort (`quant::radix`) the sort is `O(N)`, so the
+//!   whole solve is linear.
 //! * b ≥ 3: the subproblem (2) is combinatorial; [`exact_enumerate`]
 //!   enumerates level-boundary compositions over the sorted magnitudes
 //!   (feasible for small N) and is the ground truth the semi-analytical
@@ -48,10 +50,13 @@ pub struct ExactQuant {
 }
 
 /// Indices of `w` sorted by decreasing magnitude, plus the prefix sums
-/// of the sorted magnitudes (`prefix[k] = Σ_{i<k} |w|_(i)`).
+/// of the sorted magnitudes (`prefix[k] = Σ_{i<k} |w|_(i)`). The sort
+/// is the shared O(N) radix argsort (`quant::radix`), so the whole
+/// magnitude-order + prefix-scan structure is linear — the §2.1
+/// `O(N log N)` bound came entirely from the comparison sort this
+/// replaced.
 fn sorted_prefix(w: &[f32]) -> (Vec<usize>, Vec<f64>) {
-    let mut idx: Vec<usize> = (0..w.len()).collect();
-    idx.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+    let idx = super::radix::argsort_magnitude_desc(w);
     let mut prefix = Vec::with_capacity(w.len() + 1);
     prefix.push(0.0);
     let mut acc = 0.0f64;

@@ -13,9 +13,13 @@
 //! * [`stats`] — weight-distribution analysis: power-of-two magnitude
 //!   bins (Tables 2–3), histograms, excess kurtosis and Jarque–Bera
 //!   normality (Fig. 2).
+//! * [`radix`] — the shared O(N) magnitude argsort (u32 bit-pattern
+//!   radix sort, descending, stable) behind the exact solvers and the
+//!   INQ freeze partition.
 
 pub mod baselines;
 pub mod exact;
+pub mod radix;
 pub mod stats;
 pub mod threshold;
 

@@ -1,0 +1,145 @@
+//! O(N) magnitude argsort — the sort inside Theorem 1.
+//!
+//! Every LBW solver orders weights by decreasing magnitude before the
+//! prefix scan (`quant::exact::sorted_prefix`) or the freeze partition
+//! (`coordinator::inq::build_mask`). A comparison sort makes that step
+//! `O(N log N)`; but `|w|` as an IEEE-754 bit pattern with the sign
+//! bit cleared is a `u32` whose integer order equals the magnitude
+//! order, so a 4-pass LSD counting sort over 8-bit digits does it in
+//! `O(N)` — tightening the paper's §2.1 `O(N log N)` bound in
+//! practice (`bench_quant` measures the ratio at N = 1M).
+//!
+//! The sort is **stable** and runs the digit buckets in descending
+//! order on every pass, so the result is exactly what the replaced
+//! stable comparison sort produced: magnitudes non-increasing, ties in
+//! original index order (pinned by a property test below).
+
+/// `|x|` as an order-preserving `u32` key: clear the sign bit. For
+/// non-negative finite floats, IEEE-754 bit patterns compare like the
+/// values themselves (NaNs, which the solvers never produce, would
+/// simply sort above every finite magnitude instead of panicking the
+/// way `partial_cmp().unwrap()` did).
+#[inline]
+pub fn magnitude_key(x: f32) -> u32 {
+    x.to_bits() & 0x7FFF_FFFF
+}
+
+/// Indices of `w` sorted by **decreasing magnitude** in O(N): LSD
+/// radix sort on [`magnitude_key`], 256-way counting passes with the
+/// buckets laid out high-to-low. Stable — equal magnitudes keep their
+/// original index order, byte-identical to the comparison sort it
+/// replaced ([`argsort_magnitude_desc_by_comparison`]).
+pub fn argsort_magnitude_desc(w: &[f32]) -> Vec<usize> {
+    let n = w.len();
+    assert!(n < u32::MAX as usize, "radix argsort index overflow");
+    let mut cur: Vec<(u32, u32)> = w
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (magnitude_key(x), i as u32))
+        .collect();
+    let mut tmp: Vec<(u32, u32)> = vec![(0, 0); n];
+    for pass in 0..4u32 {
+        let shift = pass * 8;
+        let mut counts = [0usize; 256];
+        for &(k, _) in &cur {
+            counts[((k >> shift) & 0xFF) as usize] += 1;
+        }
+        // every key shares this byte: the pass is the identity
+        if counts.iter().any(|&c| c == n) {
+            continue;
+        }
+        // descending digit order: bucket 255 lands first
+        let mut offs = [0usize; 256];
+        let mut acc = 0usize;
+        for (off, &cnt) in offs.iter_mut().rev().zip(counts.iter().rev()) {
+            *off = acc;
+            acc += cnt;
+        }
+        for &(k, i) in &cur {
+            let b = ((k >> shift) & 0xFF) as usize;
+            tmp[offs[b]] = (k, i);
+            offs[b] += 1;
+        }
+        std::mem::swap(&mut cur, &mut tmp);
+    }
+    cur.into_iter().map(|(_, i)| i as usize).collect()
+}
+
+/// The replaced `O(N log N)` path: stable comparison argsort by
+/// decreasing magnitude key. Kept as the property-test oracle and the
+/// `bench_quant` baseline the radix path is measured against.
+pub fn argsort_magnitude_desc_by_comparison(w: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..w.len()).collect();
+    idx.sort_by(|&a, &b| magnitude_key(w[b]).cmp(&magnitude_key(w[a])));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop_check;
+
+    #[test]
+    fn explicit_order_and_ties() {
+        //       0     1     2     3     4    5      6
+        let w = [0.5, -0.5, 0.25, 0.5, -0.0, 0.0, 0.25];
+        // magnitudes: the three 0.5s first (original order 0, 1, 3),
+        // then the 0.25s (2, 6), then the zeros (4, 5 — |-0.0| == |0.0|)
+        assert_eq!(argsort_magnitude_desc(&w), vec![0, 1, 3, 2, 6, 4, 5]);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(argsort_magnitude_desc(&[]), Vec::<usize>::new());
+        assert_eq!(argsort_magnitude_desc(&[-3.5]), vec![0]);
+    }
+
+    #[test]
+    fn result_is_a_descending_permutation() {
+        let w: Vec<f32> = (0..1000)
+            .map(|i| ((i * 2654435761u64 as usize % 997) as f32 - 498.0) * 0.01)
+            .collect();
+        let idx = argsort_magnitude_desc(&w);
+        let mut seen = vec![false; w.len()];
+        for &i in &idx {
+            assert!(!seen[i], "duplicate index {i}");
+            seen[i] = true;
+        }
+        for pair in idx.windows(2) {
+            assert!(w[pair[0]].abs() >= w[pair[1]].abs());
+        }
+    }
+
+    /// The satellite's acceptance property: radix order — including
+    /// every tie — is identical to the stable comparison sort, on
+    /// vectors dense with duplicated magnitudes, signs, and zeros.
+    #[test]
+    fn prop_radix_matches_stable_comparison_sort() {
+        prop_check(200, "radix argsort == stable comparison argsort", |seed| {
+            let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+            let mut next = || {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                s
+            };
+            let n = (next() % 300) as usize;
+            let w: Vec<f32> = (0..n)
+                .map(|_| {
+                    let r = next();
+                    match r % 5 {
+                        // heavy ties: a small set of power-of-two levels
+                        0 => [0.0f32, -0.0, 0.5, -0.5, 0.25, -0.25, 1.0][(r / 5 % 7) as usize],
+                        // continuous values
+                        _ => (r >> 11) as f32 / (1u64 << 53) as f32 - 0.5,
+                    }
+                })
+                .collect();
+            assert_eq!(
+                argsort_magnitude_desc(&w),
+                argsort_magnitude_desc_by_comparison(&w),
+                "order/tie mismatch"
+            );
+        });
+    }
+}

@@ -7,7 +7,9 @@
 //! inference paths behind one `infer(images, batch)` call: the AOT
 //! artifact executable and the pure-Rust **planned executor**
 //! (`crate::nn::plan`) — the CLI's `eval`/`detect` commands are
-//! engine-agnostic through it.
+//! engine-agnostic through it. The [`pool`] submodule provides the
+//! work-stealing thread pool the planned executor's tile-parallel
+//! kernels run on.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -18,6 +20,8 @@ use anyhow::{anyhow, ensure, Context, Result};
 use crate::coordinator::params::{Checkpoint, ParamSpec};
 use crate::nn::{DetectorModel, EngineKind, Plan};
 use crate::util::json::Json;
+
+pub mod pool;
 
 /// Artifact manifest written by `python -m compile.aot`.
 #[derive(Debug, Clone)]
@@ -219,8 +223,30 @@ impl InferBackend {
         engine: EngineKind,
         max_batch: usize,
     ) -> Result<InferBackend> {
-        let model = DetectorModel::build(spec, ck, engine)?;
-        Ok(InferBackend::Planned(Box::new(model.plan(max_batch))))
+        Self::planned_threaded(spec, ck, engine, max_batch, 1)
+    }
+
+    /// Like [`InferBackend::planned`] with a `threads`-participant tile
+    /// pool. The pool is created once, drives the parallel per-layer
+    /// LBW quantization of the checkpoint (shift engines), and is then
+    /// owned by the plan — every subsequent `infer` call reuses it.
+    /// Outputs are bitwise identical to the single-threaded backend.
+    pub fn planned_threaded(
+        spec: &ParamSpec,
+        ck: &Checkpoint,
+        engine: EngineKind,
+        max_batch: usize,
+        threads: usize,
+    ) -> Result<InferBackend> {
+        let pool = Arc::new(pool::ThreadPool::new(threads.max(1)));
+        let quants = match engine {
+            EngineKind::Shift { bits } => Some(crate::coordinator::trainer::quantize_conv_layers(
+                spec, &ck.params, bits, 0.75, &pool,
+            )),
+            EngineKind::Float => None,
+        };
+        let model = DetectorModel::build_with_quants(spec, ck, engine, quants.as_ref())?;
+        Ok(InferBackend::Planned(Box::new(model.plan_with_pool(max_batch, pool))))
     }
 
     /// `(cls_prob, reg)` for a flat `[batch, IMG, IMG, 3]` image slab.

@@ -1,0 +1,363 @@
+//! Dependency-free work-stealing thread pool for intra-op tile
+//! parallelism.
+//!
+//! The pool runs **index-range jobs**: [`ThreadPool::run`] splits
+//! `[0, len)` into fixed-size chunks and every participant — the
+//! caller plus the resident worker threads — *steals* chunks off one
+//! shared atomic cursor until the range is exhausted. Chunk boundaries
+//! depend only on `(len, chunk)`, never on the thread count, and the
+//! kernels built on top (`conv::par_gemm_bn_relu`,
+//! `shift_conv::par_shift_gemm_bn_relu`, the parallel im2col packers)
+//! write disjoint output rows with no cross-chunk reduction — so
+//! results are **bitwise identical for any number of threads**
+//! (pinned by `rust/tests/thread_determinism.rs`).
+//!
+//! Design constraints, in order:
+//!
+//! * **Zero allocation per job** — the planned executor calls this from
+//!   its allocation-free forward pass. Publishing a job writes a
+//!   `Copy` descriptor under a mutex; the task closure is passed by
+//!   reference through a type-erased pointer (the caller blocks inside
+//!   `run` until the job completes, so the borrow is live for exactly
+//!   as long as workers can touch it).
+//! * **Scoped join** — `run` returns only after every chunk has been
+//!   processed, so callers may capture stack references in the task.
+//! * **Panic isolation** — a panicking chunk is caught in the worker,
+//!   the remaining chunks still run, and `run` re-raises a panic on
+//!   the caller's thread. Workers never die; the pool stays usable.
+//!
+//! With `threads == 1` the pool spawns no workers and `run` executes
+//! the whole range inline — the planned executor's single-threaded
+//! path is byte-for-byte the pre-pool code path.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased task entry point: `(ctx, start, end)` processes the
+/// index range `[start, end)`.
+type TaskFn = unsafe fn(*const (), usize, usize);
+
+/// The published job, copied out by workers under the descriptor lock.
+#[derive(Clone, Copy)]
+struct JobDesc {
+    /// Bumped once per published job; workers wait for a change.
+    epoch: u64,
+    shutdown: bool,
+    call: Option<TaskFn>,
+    /// The task closure, erased (`*const F as usize`).
+    ctx: usize,
+    len: usize,
+    chunk: usize,
+}
+
+struct Shared {
+    desc: Mutex<JobDesc>,
+    /// Signals a new epoch (or shutdown) to idle workers.
+    work: Condvar,
+    /// Next unclaimed index — the work-stealing cursor. Claiming is one
+    /// `fetch_add(chunk)`; chunks are processed by whoever gets there
+    /// first.
+    cursor: AtomicUsize,
+    /// Chunks fully processed for the current job.
+    completed: AtomicUsize,
+    /// Workers currently inside the claim loop. A new job may only be
+    /// published once this drains to zero, so a stale worker can never
+    /// claim against a fresh cursor.
+    active: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+/// Fixed-size work-stealing thread pool. Cheap to share (`Arc`); one
+/// pool per server shard is the intended topology.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    /// Serializes concurrent `run` callers (the pool has one cursor).
+    gate: Mutex<()>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `threads` total participants: the calling
+    /// thread plus `threads - 1` resident workers. `threads <= 1`
+    /// spawns nothing and `run` executes inline.
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            desc: Mutex::new(JobDesc {
+                epoch: 0,
+                shutdown: false,
+                call: None,
+                ctx: 0,
+                len: 0,
+                chunk: 1,
+            }),
+            work: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("lbw-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { shared, gate: Mutex::new(()), workers, threads }
+    }
+
+    /// Total participants (caller + workers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Process `[0, len)` by calling `f(start, end)` over chunks of at
+    /// most `chunk` indices. Blocks until every chunk is done (scoped
+    /// join). Chunk boundaries are `0, chunk, 2·chunk, …` — a function
+    /// of `(len, chunk)` only — so any `f` whose chunks are
+    /// independent produces thread-count-invariant results.
+    ///
+    /// Panics (on the caller's thread) if any chunk panicked; the pool
+    /// remains usable afterwards.
+    pub fn run<F: Fn(usize, usize) + Sync>(&self, len: usize, chunk: usize, f: F) {
+        let chunk = chunk.max(1);
+        if len == 0 {
+            return;
+        }
+        if self.workers.is_empty() || len <= chunk {
+            // single-threaded pool or a single chunk: run inline
+            f(0, len);
+            return;
+        }
+        unsafe fn thunk<F: Fn(usize, usize) + Sync>(ctx: *const (), s: usize, e: usize) {
+            (*(ctx as *const F))(s, e)
+        }
+        // recover a poisoned gate: a previous caller's re-raised task
+        // panic must not wedge the pool (the guard protects no
+        // invariant beyond mutual exclusion of callers)
+        let caller = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+        let shared = &*self.shared;
+        let total_chunks = len.div_ceil(chunk);
+        let call: TaskFn = thunk::<F>;
+        let ctx = &f as *const F as usize;
+        {
+            // Wait for stragglers of the previous job to leave the
+            // claim loop before resetting the cursor: a worker still
+            // inside it could otherwise claim against the new range
+            // with the old task. They exit promptly (their cursor is
+            // exhausted). Spin outside the lock so a preempted
+            // straggler doesn't stall every other worker on the mutex.
+            while shared.active.load(Ordering::Acquire) != 0 {
+                std::thread::yield_now();
+            }
+            let mut d = shared.desc.lock().unwrap();
+            // re-check under the lock: a late-waking worker may have
+            // briefly re-activated against the old cursor, and workers
+            // can only *become* active while holding this lock
+            while shared.active.load(Ordering::Acquire) != 0 {
+                drop(d);
+                std::thread::yield_now();
+                d = shared.desc.lock().unwrap();
+            }
+            shared.cursor.store(0, Ordering::Relaxed);
+            shared.completed.store(0, Ordering::Relaxed);
+            shared.panicked.store(false, Ordering::Relaxed);
+            d.call = Some(call);
+            d.ctx = ctx;
+            d.len = len;
+            d.chunk = chunk;
+            d.epoch += 1;
+            shared.work.notify_all();
+        }
+        // the caller steals chunks too
+        work_chunks(shared, call, ctx, len, chunk);
+        while shared.completed.load(Ordering::Acquire) < total_chunks {
+            std::thread::yield_now();
+        }
+        if shared.panicked.load(Ordering::Acquire) {
+            // release the caller gate *before* re-raising so the
+            // unwind cannot poison it — the pool stays usable
+            drop(caller);
+            panic!("ThreadPool task panicked (see worker stderr)");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut d = self.shared.desc.lock().unwrap();
+            d.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut d = shared.desc.lock().unwrap();
+            loop {
+                if d.shutdown {
+                    return;
+                }
+                if d.epoch != seen {
+                    seen = d.epoch;
+                    break;
+                }
+                d = shared.work.wait(d).unwrap();
+            }
+            // register as active *under the lock*: the publisher holds
+            // it while resetting the cursor, so no worker can slip from
+            // idle into a job mid-publish
+            shared.active.fetch_add(1, Ordering::AcqRel);
+            *d
+        };
+        if let Some(call) = job.call {
+            work_chunks(shared, call, job.ctx, job.len, job.chunk);
+        }
+        shared.active.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Claim-and-process loop shared by workers and the caller.
+fn work_chunks(shared: &Shared, call: TaskFn, ctx: usize, len: usize, chunk: usize) {
+    loop {
+        let start = shared.cursor.fetch_add(chunk, Ordering::Relaxed);
+        if start >= len {
+            return;
+        }
+        let end = (start + chunk).min(len);
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe {
+            call(ctx as *const (), start, end);
+        }));
+        if ok.is_err() {
+            shared.panicked.store(true, Ordering::Release);
+        }
+        // Release: the chunk's output writes happen-before the
+        // caller's Acquire load of `completed`
+        shared.completed.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// A raw pointer the pool's tasks may share across threads. Only safe
+/// when every task writes a provably disjoint region — the pattern all
+/// `par_*` kernels use (disjoint output-row ranges).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+// SAFETY: disjointness of the written regions is the caller's
+// obligation (documented on the type); the pointer itself is plain data.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fill `out[i] = i * 3 + 1` in parallel and check every element.
+    fn par_fill(pool: &ThreadPool, n: usize, chunk: usize) {
+        let mut out = vec![0usize; n];
+        let base = SendPtr::new(out.as_mut_ptr());
+        pool.run(n, chunk, |s, e| {
+            for i in s..e {
+                // SAFETY: [s, e) ranges are disjoint across tasks
+                unsafe { *base.get().add(i) = i * 3 + 1 };
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 3 + 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        assert!(pool.workers.is_empty());
+        par_fill(&pool, 1000, 64);
+    }
+
+    #[test]
+    fn multi_thread_covers_every_chunk() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for &(n, chunk) in &[(10_000usize, 64usize), (7, 2), (129, 128), (64, 64), (0, 16)] {
+            par_fill(&pool, n, chunk);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = ThreadPool::new(3);
+        let n = 4096;
+        for round in 0..50u64 {
+            let mut out = vec![0u64; n];
+            let base = SendPtr::new(out.as_mut_ptr());
+            pool.run(n, 32, |s, e| {
+                for i in s..e {
+                    unsafe { *base.get().add(i) = i as u64 ^ round };
+                }
+            });
+            assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 ^ round));
+        }
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(1024, 16, |s, _e| {
+                if s == 512 {
+                    panic!("chunk 512 exploded");
+                }
+            });
+        }));
+        assert!(boom.is_err(), "panicking chunk must fail the run");
+        // the pool must still work after a panicked job (reuse)
+        par_fill(&pool, 2048, 32);
+        par_fill(&pool, 33, 4);
+    }
+
+    #[test]
+    fn chunk_boundaries_are_thread_count_invariant() {
+        // record which (start, end) pairs each pool produces — the set
+        // must depend only on (len, chunk)
+        let expect: Vec<(usize, usize)> =
+            (0..10).map(|i| (i * 10, ((i + 1) * 10).min(97))).collect();
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let got = Mutex::new(Vec::new());
+            pool.run(97, 10, |s, e| got.lock().unwrap().push((s, e)));
+            let mut got = got.into_inner().unwrap();
+            got.sort_unstable();
+            // threads == 1 runs inline as one range; chunked pools
+            // cover the same indices with the fixed boundaries
+            if threads == 1 {
+                assert_eq!(got, vec![(0, 97)]);
+            } else {
+                assert_eq!(got, expect);
+            }
+        }
+    }
+}

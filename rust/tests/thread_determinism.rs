@@ -1,0 +1,136 @@
+//! Thread-count determinism for the tile-parallel runtime (ISSUE 3):
+//! `Plan::forward` must produce **bitwise identical** outputs for any
+//! pool size — tile boundaries are fixed, output-row writebacks are
+//! disjoint, and no split-K reduction exists — across both engines,
+//! odd (non-lane-multiple) widths, and batches > 1. Also soaks pool
+//! reuse across many forwards and checks the threaded sharded server
+//! answers with the exact same detections as a single-threaded plan.
+//!
+//! Hermetic — synthetic He-initialized detectors only.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lbw_net::consts::{GRID, IMG, NUM_CLS};
+use lbw_net::coordinator::server::{DetectServer, Executor, ServerConfig};
+use lbw_net::detection::{decode_grid, nms};
+use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
+use lbw_net::nn::{DetectorModel, EngineKind};
+use lbw_net::runtime::pool::ThreadPool;
+
+fn rand_images(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f32 / (1u64 << 53) as f32 - 0.3
+        })
+        .collect()
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// threads ∈ {1, 2, 4} × engines {float, shift6} × widths {8, 13} ×
+/// batch 3 — every combination bitwise-equal to the 1-thread plan.
+/// Width 13 is not a multiple of the GEMM lane width (8) or the tile
+/// height (4), covering the padded-lane and ragged-tile tails.
+#[test]
+fn plan_forward_bitwise_invariant_across_thread_counts() {
+    for &(width, seed) in &[(8usize, 11u64), (13, 29)] {
+        let spec = synthetic_spec(SynthConfig { width, stages: 3 });
+        let ckpt = synthetic_checkpoint(&spec, seed, 6);
+        for engine in [EngineKind::Float, EngineKind::Shift { bits: 6 }] {
+            let model = DetectorModel::build(&spec, &ckpt, engine).unwrap();
+            let batch = 3usize;
+            let imgs = rand_images(batch * IMG * IMG * 3, seed ^ 0xD15C);
+            let mut reference: Option<(Vec<f32>, Vec<f32>)> = None;
+            for threads in [1usize, 2, 4] {
+                let pool = Arc::new(ThreadPool::new(threads));
+                let mut plan = model.plan_with_pool(4, pool);
+                let (c, r) = plan.forward(&imgs, batch);
+                assert_eq!(c.len(), batch * GRID * GRID * NUM_CLS);
+                match &reference {
+                    None => reference = Some((c.to_vec(), r.to_vec())),
+                    Some((cr, rr)) => {
+                        let tag = format!("{engine:?} width {width} threads {threads} cls");
+                        assert_bitwise(cr, c, &tag);
+                        let tag = format!("{engine:?} width {width} threads {threads} reg");
+                        assert_bitwise(rr, r, &tag);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A threaded plan reused across many forwards (mixed batch sizes,
+/// dirtied arena) keeps producing the bitwise-same answers — the pool
+/// survives and stays correct across jobs.
+#[test]
+fn threaded_plan_reuse_is_stable() {
+    let spec = synthetic_spec(SynthConfig::default());
+    let ckpt = synthetic_checkpoint(&spec, 77, 6);
+    let model = DetectorModel::build(&spec, &ckpt, EngineKind::Shift { bits: 6 }).unwrap();
+    let imgs = rand_images(4 * IMG * IMG * 3, 3);
+    let mut single = model.plan_with_pool(4, Arc::new(ThreadPool::new(1)));
+    let mut threaded = model.plan_with_pool(4, Arc::new(ThreadPool::new(4)));
+    for &batch in &[4usize, 1, 3, 2, 4, 1, 4] {
+        let view = &imgs[..batch * IMG * IMG * 3];
+        let (cs, rs) = {
+            let (c, r) = single.forward(view, batch);
+            (c.to_vec(), r.to_vec())
+        };
+        let (ct, rt) = threaded.forward(view, batch);
+        assert_bitwise(&cs, ct, &format!("reuse batch {batch} cls"));
+        assert_bitwise(&rs, rt, &format!("reuse batch {batch} reg"));
+    }
+}
+
+/// End to end through the serving stack: a shards × threads server
+/// returns the exact detections a single-threaded plan decodes for the
+/// same images.
+#[test]
+fn threaded_server_matches_single_threaded_plan() {
+    let spec = synthetic_spec(SynthConfig::default());
+    let ckpt = synthetic_checkpoint(&spec, 4712, 6);
+    let engine = EngineKind::Shift { bits: 6 };
+    let cfg = ServerConfig {
+        shards: 2,
+        threads: 4,
+        max_batch: 4,
+        batch_window: Duration::from_millis(2),
+        score_thresh: 0.05,
+        executor: Executor::Planned,
+        ..Default::default()
+    };
+    let (score_thresh, nms_iou) = (cfg.score_thresh, cfg.nms_iou);
+    let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg).unwrap();
+    let handle = server.handle();
+
+    let model = DetectorModel::build(&spec, &ckpt, engine).unwrap();
+    let mut plan = model.plan_with_pool(1, Arc::new(ThreadPool::new(1)));
+    for i in 0..8u64 {
+        let img = rand_images(IMG * IMG * 3, 1000 + i);
+        let got = handle.detect(img.clone()).unwrap();
+        let (cp, rg) = plan.forward(&img, 1);
+        let want = nms(decode_grid(cp, rg, score_thresh), nms_iou);
+        assert_eq!(got.len(), want.len(), "image {i}: detection count");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.class, w.class, "image {i}: class");
+            assert_eq!(g.score.to_bits(), w.score.to_bits(), "image {i}: score bits");
+        }
+    }
+    drop(handle);
+    server.shutdown();
+}
