@@ -7,9 +7,11 @@
 #                   `make test` passes without artifacts)
 #   make bench      run every in-tree benchmark binary
 #   make bench-smoke  reduced bench_serve sweep (planned vs naive
-#                   executors, 1 shard, tile pools at 1 and 4 threads)
-#                   — fast enough for CI; kernel or threading
-#                   regressions in either executor fail loudly here
+#                   executors, 1 shard, tile pools at 1 and 4 threads,
+#                   plus the adaptive-vs-fixed window cells under
+#                   open-loop steady/bursty load) — fast enough for
+#                   CI; kernel, threading, or batching-controller
+#                   regressions fail loudly here
 #   make lint       rustfmt + clippy, as CI runs them
 
 CARGO ?= cargo

@@ -1,6 +1,7 @@
 //! Serving load generator: sweep executor × engine × shard count ×
 //! intra-op threads × batch window over SynthVOC scenes and record the
-//! throughput/latency trajectory.
+//! throughput/latency trajectory — plus an adaptive-vs-fixed window
+//! comparison under open-loop steady and bursty load.
 //!
 //! Fully hermetic — the sweep drives the pure-Rust engines behind the
 //! sharded server on a synthetic He-initialized detector, so it runs
@@ -15,6 +16,14 @@
 //! img/s ratio and the planned 4-thread/1-thread speedup per engine at
 //! a single shard.
 //!
+//! Since the adaptive-window PR every row also carries `"window"`
+//! (`"fixed"` for the classic closed-loop sweep), and an extra
+//! open-loop sweep drives window ∈ {fixed-2ms, adaptive(max 10ms)} ×
+//! load ∈ {steady, bursty} through one planned shift6 shard — those
+//! rows additionally carry `"load"` and the merged `"shed"` counter.
+//! The summary quotes bursty mean-batch occupancy (adaptive vs
+//! fixed-2ms) and steady p95 (adaptive must not lose).
+//!
 //! Run with: `cargo run --release --example bench_serve`
 //! Smoke mode (CI): `cargo run --release --example bench_serve -- --smoke`
 //! (reduced request count + 1-shard cells only; also honours the
@@ -23,7 +32,7 @@
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use lbw_net::coordinator::server::{DetectServer, Executor, ServerConfig};
+use lbw_net::coordinator::server::{DetectServer, Executor, ServerConfig, WindowMode};
 use lbw_net::data::{generate_scene, SceneConfig};
 use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
 use lbw_net::nn::EngineKind;
@@ -36,7 +45,14 @@ struct Cell {
     engine: String,
     shards: usize,
     threads: usize,
+    /// Window policy: "fixed" (classic sweep) or "adaptive".
+    window: String,
+    /// For fixed cells the window; for adaptive cells the max window.
     window_ms: u64,
+    /// Open-loop load shape ("steady"/"bursty"); None for the classic
+    /// closed-loop sweep.
+    load: Option<String>,
+    shed: u64,
     wall_s: f64,
     imgs_per_s: f64,
     p50_ms: f64,
@@ -66,6 +82,46 @@ fn drive(server: &DetectServer, scenes: &[Vec<f32>], requests: usize) -> Result<
         c.join().expect("client thread")?;
     }
     Ok(t0.elapsed())
+}
+
+/// Open-loop driver: every request fires at its scheduled offset from
+/// the start, whether or not earlier ones have completed — the
+/// arrival process is independent of service times, like real traffic.
+/// Returns (wall, requests that got an error, e.g. shed).
+fn drive_open_loop(
+    server: &DetectServer,
+    scenes: &[Vec<f32>],
+    offsets: &[Duration],
+) -> (Duration, usize) {
+    let handle = server.handle();
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for (i, &off) in offsets.iter().enumerate() {
+        let h = handle.clone();
+        let img = scenes[i % scenes.len()].clone();
+        clients.push(std::thread::spawn(move || {
+            std::thread::sleep(off.saturating_sub(t0.elapsed()));
+            h.detect(img).is_err()
+        }));
+    }
+    let mut errors = 0usize;
+    for c in clients {
+        if c.join().expect("open-loop client") {
+            errors += 1;
+        }
+    }
+    (t0.elapsed(), errors)
+}
+
+/// `n` arrivals evenly spaced `gap` apart.
+fn steady_schedule(n: usize, gap: Duration) -> Vec<Duration> {
+    (0..n).map(|i| gap * i as u32).collect()
+}
+
+/// `n` arrivals in bursts of `burst`: `intra` apart inside a burst,
+/// burst heads `period` apart.
+fn bursty_schedule(n: usize, burst: usize, intra: Duration, period: Duration) -> Vec<Duration> {
+    (0..n).map(|i| period * (i / burst) as u32 + intra * (i % burst) as u32).collect()
 }
 
 fn main() -> Result<()> {
@@ -127,7 +183,10 @@ fn main() -> Result<()> {
                             engine: engine_name.to_string(),
                             shards,
                             threads,
+                            window: "fixed".to_string(),
                             window_ms,
+                            load: None,
+                            shed: 0,
                             wall_s: wall.as_secs_f64(),
                             imgs_per_s: agg.throughput(wall),
                             p50_ms: snap.percentile_ms(50.0),
@@ -157,6 +216,103 @@ fn main() -> Result<()> {
         }
     }
 
+    // ---- adaptive-vs-fixed window sweep (open-loop load) ----
+    // one planned shift6 shard; "fixed" is the classic 2ms window,
+    // "adaptive" lets the load observer pick within [0, 10ms]. The
+    // offered load (~160 req/s both shapes) stays under engine
+    // capacity on purpose: a saturated queue batches fully under ANY
+    // policy, so the comparison would measure saturation, not the
+    // window controller.
+    println!("\n--- window sweep (open-loop): planned shift6, 1 shard ---");
+    let steady_gap = Duration::from_millis(6);
+    let burst = 16usize;
+    let window_cells: &[(&str, WindowMode, u64)] =
+        &[("fixed", WindowMode::Fixed, 2), ("adaptive", WindowMode::Adaptive, 10)];
+    for &(win_name, window, window_ms) in window_cells {
+        for load in ["steady", "bursty"] {
+            let offsets = match load {
+                "steady" => steady_schedule(requests, steady_gap),
+                _ => bursty_schedule(
+                    requests,
+                    burst,
+                    Duration::from_millis(1),
+                    Duration::from_millis(100),
+                ),
+            };
+            let cfg = ServerConfig {
+                shards: 1,
+                threads: 1,
+                max_batch: 8,
+                batch_window: Duration::from_millis(window_ms),
+                window,
+                // generous admission deadline: healthy runs shed
+                // nothing (nominal p99 is ~10x lower), but every
+                // request runs the stamp + expiry check, so a
+                // false-shedding regression shows up as nonzero
+                // "shed"/errors in these rows
+                deadline: Some(Duration::from_millis(250)),
+                queue_depth: 256,
+                executor: Executor::Planned,
+                ..Default::default()
+            };
+            let server =
+                DetectServer::start_engine(&spec, &ckpt, EngineKind::Shift { bits: 6 }, cfg)?;
+            let (wall, errors) = drive_open_loop(&server, &scenes, &offsets);
+            let agg = server.handle().latency();
+            let snap = agg.snapshot();
+            let shard_counts: Vec<usize> =
+                server.shard_latencies().iter().map(|s| s.count()).collect();
+            let cell = Cell {
+                executor: "planned".to_string(),
+                engine: "shift6".to_string(),
+                shards: 1,
+                threads: 1,
+                window: win_name.to_string(),
+                window_ms,
+                load: Some(load.to_string()),
+                shed: agg.shed(),
+                wall_s: wall.as_secs_f64(),
+                imgs_per_s: agg.throughput(wall),
+                p50_ms: snap.percentile_ms(50.0),
+                p95_ms: snap.percentile_ms(95.0),
+                p99_ms: snap.percentile_ms(99.0),
+                mean_batch: agg.mean_batch(),
+                shard_counts,
+            };
+            println!(
+                "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  ({load}, errors {errors})",
+                cell.executor,
+                cell.engine,
+                cell.shards,
+                cell.threads,
+                win_name,
+                cell.imgs_per_s,
+                cell.p50_ms,
+                cell.p95_ms,
+                cell.p99_ms,
+                cell.mean_batch
+            );
+            server.shutdown();
+            cells.push(cell);
+        }
+    }
+    // the adaptive-window acceptance numbers: occupancy must win under
+    // bursts, p95 must not lose under steady light load
+    let open = |win: &str, load: &str| {
+        cells.iter().find(|c| c.window == win && c.load.as_deref() == Some(load))
+    };
+    if let (Some(af), Some(ff)) = (open("adaptive", "bursty"), open("fixed", "bursty")) {
+        println!(
+            "bursty: adaptive mean batch {:.2} vs fixed-2ms {:.2} ({:+.0}%)",
+            af.mean_batch,
+            ff.mean_batch,
+            100.0 * (af.mean_batch / ff.mean_batch - 1.0)
+        );
+    }
+    if let (Some(a), Some(f)) = (open("adaptive", "steady"), open("fixed", "steady")) {
+        println!("steady: adaptive p95 {:.2}ms vs fixed-2ms p95 {:.2}ms", a.p95_ms, f.p95_ms);
+    }
+
     let rate = |exec: &str, engine: &str, shards: usize, threads: usize| {
         cells
             .iter()
@@ -166,6 +322,7 @@ fn main() -> Result<()> {
                     && c.shards == shards
                     && c.threads == threads
                     && c.window_ms == 2
+                    && c.load.is_none() // classic closed-loop cells only
             })
             .map(|c| c.imgs_per_s)
             .unwrap_or(0.0)
@@ -204,11 +361,12 @@ fn main() -> Result<()> {
         cells
             .iter()
             .map(|c| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("executor", Json::str(c.executor.as_str())),
                     ("engine", Json::str(c.engine.as_str())),
                     ("shards", Json::num(c.shards as f64)),
                     ("threads", Json::num(c.threads as f64)),
+                    ("window", Json::str(c.window.as_str())),
                     ("batch_window_ms", Json::num(c.window_ms as f64)),
                     ("requests", Json::num(requests as f64)),
                     ("concurrency", Json::num(CONCURRENCY as f64)),
@@ -222,7 +380,12 @@ fn main() -> Result<()> {
                         "shard_counts",
                         Json::Arr(c.shard_counts.iter().map(|&n| Json::num(n as f64)).collect()),
                     ),
-                ])
+                ];
+                if let Some(load) = &c.load {
+                    fields.push(("load", Json::str(load.as_str())));
+                    fields.push(("shed", Json::num(c.shed as f64)));
+                }
+                Json::obj(fields)
             })
             .collect(),
     );
@@ -231,7 +394,7 @@ fn main() -> Result<()> {
         (
             "detector",
             Json::str(
-                "synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors, threads {1,4} tile pools",
+                "synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors, threads {1,4} tile pools, fixed+adaptive batch windows (open-loop steady/bursty)",
             ),
         ),
         ("rows", rows),

@@ -73,6 +73,15 @@ pub struct ServeSection {
     pub executor: String,
     pub max_batch: usize,
     pub batch_window_ms: u64,
+    /// Batch-window policy: "fixed" (always wait `batch_window_ms`) or
+    /// "adaptive" (the load observer picks a window in
+    /// `[0, batch_window_ms]` from the EWMA arrival rate + queue
+    /// depth).
+    pub window: String,
+    /// Admission deadline in ms: a request older than this when a
+    /// shard picks it up is shed with a backpressure error. 0 = never
+    /// shed.
+    pub deadline_ms: u64,
     pub queue_depth: usize,
     /// Backpressure bound: how long `detect` may wait for queue space.
     pub submit_timeout_ms: u64,
@@ -88,6 +97,8 @@ impl Default for ServeSection {
             executor: "planned".into(),
             max_batch: s.max_batch,
             batch_window_ms: s.batch_window.as_millis() as u64,
+            window: s.window.to_string(),
+            deadline_ms: s.deadline.map_or(0, |d| d.as_millis() as u64),
             queue_depth: s.queue_depth,
             submit_timeout_ms: s.submit_timeout.as_millis() as u64,
         }
@@ -157,6 +168,8 @@ impl Config {
                 "serve.executor" => cfg.serve.executor = v.as_str()?.to_string(),
                 "serve.max_batch" => cfg.serve.max_batch = v.as_usize()?,
                 "serve.batch_window_ms" => cfg.serve.batch_window_ms = v.as_u64()?,
+                "serve.window" => cfg.serve.window = v.as_str()?.to_string(),
+                "serve.deadline_ms" => cfg.serve.deadline_ms = v.as_u64()?,
                 "serve.queue_depth" => cfg.serve.queue_depth = v.as_usize()?,
                 "serve.submit_timeout_ms" => cfg.serve.submit_timeout_ms = v.as_u64()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
@@ -196,6 +209,11 @@ impl Config {
             "serve.executor must be planned|naive, got {}",
             self.serve.executor
         );
+        ensure!(
+            matches!(self.serve.window.as_str(), "fixed" | "adaptive"),
+            "serve.window must be fixed|adaptive, got {}",
+            self.serve.window
+        );
         Ok(())
     }
 
@@ -207,6 +225,9 @@ impl Config {
             threads: self.serve.threads,
             max_batch: self.serve.max_batch,
             batch_window: Duration::from_millis(self.serve.batch_window_ms),
+            window: self.serve.window.parse().unwrap_or_default(),
+            deadline: (self.serve.deadline_ms > 0)
+                .then(|| Duration::from_millis(self.serve.deadline_ms)),
             queue_depth: self.serve.queue_depth,
             submit_timeout: Duration::from_millis(self.serve.submit_timeout_ms),
             executor: if self.serve.executor == "naive" {
@@ -326,5 +347,28 @@ mod tests {
         assert!(Config::from_toml("[serve]\nshards = 0\n").is_err());
         assert!(Config::from_toml("[serve]\nthreads = 0\n").is_err());
         assert!(Config::from_toml("[serve]\nengine = \"gpu\"\n").is_err());
+        assert!(Config::from_toml("[serve]\nwindow = \"auto\"\n").is_err());
+    }
+
+    #[test]
+    fn adaptive_window_and_deadline_parse_and_lower() {
+        let cfg = Config::from_toml(
+            r#"
+            [serve]
+            window = "adaptive"
+            batch_window_ms = 8
+            deadline_ms = 50
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.window, "adaptive");
+        assert_eq!(cfg.serve.deadline_ms, 50);
+        let s = cfg.to_server_config();
+        assert_eq!(s.window, crate::coordinator::adaptive::WindowMode::Adaptive);
+        assert_eq!(s.batch_window, Duration::from_millis(8));
+        assert_eq!(s.deadline, Some(Duration::from_millis(50)));
+        // deadline_ms = 0 disables shedding
+        let s = Config::from_toml("[serve]\ndeadline_ms = 0\n").unwrap().to_server_config();
+        assert_eq!(s.deadline, None);
     }
 }

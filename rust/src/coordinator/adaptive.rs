@@ -1,0 +1,257 @@
+//! Adaptive batch windows: the serving-side load observer and
+//! per-shard window controller.
+//!
+//! A batch window trades latency for occupancy: waiting after the
+//! first request lets more requests join the forward pass (good for
+//! throughput), but every waited microsecond is added to every
+//! request's latency (bad when nobody else is coming). The right
+//! window is therefore a function of *load*, not a constant — the
+//! paper's deployment argument (low bit-width inference is fast enough
+//! that the serving path is the bottleneck worth engineering) is
+//! exactly why this knob matters.
+//!
+//! [`AdaptiveWindow`] estimates load from two signals:
+//!
+//! * an **EWMA arrival rate** — each shard records how many requests
+//!   it pulled per loop iteration ([`AdaptiveWindow::observe`]), and
+//! * a **queue-depth snapshot** ([`crate::coordinator::queue::Receiver::depth`])
+//!   taken when the first request of a batch is popped.
+//!
+//! The controller then answers "how long is it worth waiting?" with
+//! the *expected time to fill the batch*: `need / rate`, where `need`
+//! is the number of empty batch slots not already covered by queued
+//! requests. Three regimes fall out:
+//!
+//! * **queue backed up** (`depth ≥ max_batch - 1`): the batch fills
+//!   instantly from the queue — zero extra wait, maximal occupancy.
+//! * **busy** (fill time ≤ the configured max window): wait exactly as
+//!   long as the traffic needs, clamped to the max — occupancy-optimal.
+//! * **light** (fill time ≫ max window): the batch cannot plausibly
+//!   fill within budget, so waiting buys occupancy from nobody — the
+//!   window collapses to zero and singletons serve latency-optimally.
+
+use std::time::{Duration, Instant};
+
+/// How a shard chooses its batch window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WindowMode {
+    /// Always wait `batch_window` after the first request (the
+    /// pre-adaptive behavior; `batch_window` = the window).
+    #[default]
+    Fixed,
+    /// Drive the window from the load observer, between zero and
+    /// `batch_window` (= the configured max).
+    Adaptive,
+}
+
+impl std::str::FromStr for WindowMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "fixed" => Ok(WindowMode::Fixed),
+            "adaptive" => Ok(WindowMode::Adaptive),
+            other => Err(anyhow::anyhow!("window mode must be fixed|adaptive, got `{other}`")),
+        }
+    }
+}
+
+impl std::fmt::Display for WindowMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            WindowMode::Fixed => "fixed",
+            WindowMode::Adaptive => "adaptive",
+        })
+    }
+}
+
+/// EWMA smoothing factor per observation: high enough to track a burst
+/// within a few batches, low enough that one long idle gap does not
+/// erase the rate estimate.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Give-up threshold: when the expected fill time exceeds this many
+/// max-windows, waiting cannot plausibly fill the batch — collapse the
+/// window to zero instead of paying latency for nothing.
+const GIVE_UP: f64 = 2.0;
+
+/// Staleness horizon, in units of the max window: once the shard has
+/// been quiet longer than this, the EWMA is considered stale and the
+/// rate is re-bounded by the actual arrival evidence accumulated over
+/// the idle stretch. Within the horizon the learned rate is honored,
+/// so periodic bursts keep their occupancy-optimal windows across
+/// inter-burst gaps; past it, a lone request after traffic stopped is
+/// served immediately instead of waiting on a rate that no longer
+/// exists.
+const STALE_AFTER: f64 = 32.0;
+
+/// Per-shard load observer + batch-window controller. Owned by one
+/// shard thread; no interior locking.
+#[derive(Debug, Clone)]
+pub struct AdaptiveWindow {
+    max_window: Duration,
+    /// Smoothed arrival rate seen by this shard, requests/second.
+    ewma_rate: f64,
+    last_obs: Option<Instant>,
+}
+
+impl AdaptiveWindow {
+    /// Controller bounded by `max_window` (the widest window it will
+    /// ever ask for).
+    pub fn new(max_window: Duration) -> Self {
+        AdaptiveWindow { max_window, ewma_rate: 0.0, last_obs: None }
+    }
+
+    /// Record one loop iteration: this shard pulled `arrived` requests
+    /// and the previous observation was `now - dt` ago. Idle stretches
+    /// (long `dt`, small `arrived`) decay the rate; bursts raise it.
+    pub fn observe(&mut self, arrived: usize, now: Instant) {
+        if let Some(prev) = self.last_obs {
+            let dt = now.duration_since(prev).as_secs_f64().max(1e-6);
+            let inst = arrived as f64 / dt;
+            self.ewma_rate = EWMA_ALPHA * inst + (1.0 - EWMA_ALPHA) * self.ewma_rate;
+        }
+        self.last_obs = Some(now);
+    }
+
+    /// Smoothed arrival rate (requests/second) — diagnostics.
+    pub fn rate(&self) -> f64 {
+        self.ewma_rate
+    }
+
+    /// The window for the batch whose first request was just popped
+    /// (at `now`) with `queue_depth` requests still waiting behind it.
+    pub fn window(&self, queue_depth: usize, max_batch: usize, now: Instant) -> Duration {
+        // slots the queue does not already cover (the popped first
+        // request occupies one)
+        let need = max_batch.saturating_sub(1).saturating_sub(queue_depth);
+        if need == 0 {
+            return Duration::ZERO; // backed-up queue fills the batch instantly
+        }
+        let max_s = self.max_window.as_secs_f64();
+        let mut rate = self.ewma_rate;
+        if let Some(prev) = self.last_obs {
+            let idle = now.duration_since(prev).as_secs_f64();
+            if idle > STALE_AFTER * max_s {
+                // the stale-rate trap: long after traffic stopped the
+                // EWMA still remembers the last burst — cap it by what
+                // actually arrived over the idle stretch so a lone
+                // request is not held waiting for nobody
+                rate = rate.min((queue_depth + 1) as f64 / idle.max(1e-6));
+            }
+        }
+        if rate <= f64::EPSILON {
+            return Duration::ZERO; // no measured traffic: nothing to wait for
+        }
+        let fill_s = need as f64 / rate;
+        if fill_s > GIVE_UP * max_s {
+            return Duration::ZERO; // light traffic: the wait would buy nothing
+        }
+        Duration::from_secs_f64(fill_s.min(max_s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MAX: Duration = Duration::from_millis(8);
+
+    /// Deterministic controller state: synthetic timestamps, no
+    /// sleeping. Returns the controller and the instant of its last
+    /// observation.
+    fn observed(pairs: &[(usize, u64)]) -> (AdaptiveWindow, Instant) {
+        let mut c = AdaptiveWindow::new(MAX);
+        let base = Instant::now();
+        let mut t = 0u64;
+        for &(arrived, dt_us) in pairs {
+            t += dt_us;
+            c.observe(arrived, base + Duration::from_micros(t));
+        }
+        (c, base + Duration::from_micros(t))
+    }
+
+    #[test]
+    fn steady_light_load_collapses_to_zero() {
+        // one request every 50ms: filling a batch of 8 would take
+        // ~350ms against an 8ms budget — never worth waiting
+        let (c, end) = observed(&[(1, 50_000); 20]);
+        assert!(c.rate() > 0.0);
+        assert_eq!(c.window(0, 8, end), Duration::ZERO);
+    }
+
+    #[test]
+    fn bursty_load_opens_the_window() {
+        // ~8 requests/ms: 7 empty slots fill in ~0.9ms — wait for them
+        let (c, end) = observed(&[(8, 1_000); 10]);
+        let w = c.window(0, 8, end);
+        assert!(w > Duration::ZERO, "burst must open the window (rate {})", c.rate());
+        assert!(w <= MAX);
+    }
+
+    #[test]
+    fn window_narrows_as_queue_covers_the_batch() {
+        let (c, end) = observed(&[(4, 1_000); 10]);
+        let open = c.window(0, 8, end);
+        let partial = c.window(4, 8, end);
+        assert!(open > partial, "queued requests must shrink the wait");
+        assert_eq!(c.window(7, 8, end), Duration::ZERO, "depth >= max_batch-1 fills instantly");
+        assert_eq!(c.window(100, 8, end), Duration::ZERO);
+    }
+
+    #[test]
+    fn window_clamps_at_the_configured_max() {
+        // ~1 request/ms: 7 slots need ~7ms < 8ms max -> waits, but a
+        // 15-slot batch needs ~15ms > 2x8ms give-up -> collapses
+        let (c, end) = observed(&[(1, 1_000); 30]);
+        let w = c.window(0, 8, end);
+        assert!(w > Duration::ZERO && w <= MAX);
+        assert_eq!(c.window(0, 40, end), Duration::ZERO, "hopeless fill gives up");
+    }
+
+    #[test]
+    fn unobserved_controller_never_waits() {
+        let c = AdaptiveWindow::new(MAX);
+        assert_eq!(c.window(0, 8, Instant::now()), Duration::ZERO);
+        // a single observation only anchors the clock — still no rate
+        let mut c = AdaptiveWindow::new(MAX);
+        let t = Instant::now();
+        c.observe(5, t);
+        assert_eq!(c.window(0, 8, t), Duration::ZERO);
+    }
+
+    /// The stale-rate trap: long after traffic stops, the remembered
+    /// burst rate must not hold a lone new request hostage — but
+    /// within the staleness horizon (inter-burst gaps) the learned
+    /// rate keeps the window open.
+    #[test]
+    fn stale_rate_does_not_hold_a_lone_request() {
+        let (c, end) = observed(&[(8, 1_000); 10]); // hot: ~8 req/ms
+        assert!(
+            c.window(0, 8, end + Duration::from_millis(5)) > Duration::ZERO,
+            "within the horizon the burst rate still opens the window"
+        );
+        assert_eq!(
+            c.window(0, 8, end + Duration::from_secs(10)),
+            Duration::ZERO,
+            "after 10s of silence a lone request must serve immediately"
+        );
+    }
+
+    #[test]
+    fn idle_gap_decays_the_rate() {
+        let (mut c, end) = observed(&[(8, 1_000); 10]);
+        let busy = c.rate();
+        c.observe(1, end + Duration::from_secs(1)); // one request after a quiet second
+        assert!(c.rate() < busy, "idle gap must pull the EWMA down");
+    }
+
+    #[test]
+    fn mode_parses_and_prints() {
+        assert_eq!("fixed".parse::<WindowMode>().unwrap(), WindowMode::Fixed);
+        assert_eq!("adaptive".parse::<WindowMode>().unwrap(), WindowMode::Adaptive);
+        assert!("auto".parse::<WindowMode>().is_err());
+        assert_eq!(WindowMode::Adaptive.to_string(), "adaptive");
+        assert_eq!(WindowMode::default(), WindowMode::Fixed);
+    }
+}

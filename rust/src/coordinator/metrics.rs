@@ -30,8 +30,22 @@ pub struct LatencyStats {
     count: u64,
     /// Sum of every recorded latency (µs) — the all-time mean.
     sum_us: u64,
-    /// Inference batches executed (each serves ≥ 1 request).
+    /// Inference batches executed (successful ones serve ≥ 1 request;
+    /// failed ones burn the forward pass and serve nobody — they are
+    /// counted here too so occupancy accounting stays truthful).
     batches: u64,
+    /// Requests answered with an inference error (their batch ran and
+    /// failed).
+    errors: u64,
+    /// Requests shed at admission (deadline expired before a shard
+    /// picked them up — answered with a backpressure error, no forward
+    /// pass burned).
+    shed: u64,
+    /// Queue-depth gauge: depth observed when this shard last popped a
+    /// batch head.
+    depth_last: u64,
+    /// Queue-depth gauge: deepest queue this shard ever observed.
+    depth_max: u64,
 }
 
 impl Default for LatencyStats {
@@ -54,6 +68,10 @@ impl LatencyStats {
             count: 0,
             sum_us: 0,
             batches: 0,
+            errors: 0,
+            shed: 0,
+            depth_last: 0,
+            depth_max: 0,
         }
     }
 
@@ -76,6 +94,48 @@ impl LatencyStats {
     /// Count one executed inference batch (for occupancy reporting).
     pub fn record_batch(&mut self) {
         self.batches += 1;
+    }
+
+    /// Count one batch whose inference **failed**: the forward pass
+    /// was burned but served nobody, and its `requests` members were
+    /// answered with errors. Keeping failed batches in `batches` is
+    /// what keeps `mean_batch` (served requests per executed batch)
+    /// truthful under errors.
+    pub fn record_failed_batch(&mut self, requests: usize) {
+        self.batches += 1;
+        self.errors += requests as u64;
+    }
+
+    /// Count `n` requests shed at admission (deadline expired; no
+    /// forward pass was burned for them).
+    pub fn record_shed(&mut self, n: usize) {
+        self.shed += n as u64;
+    }
+
+    /// Update the queue-depth gauges with a fresh snapshot.
+    pub fn observe_queue_depth(&mut self, depth: usize) {
+        self.depth_last = depth as u64;
+        self.depth_max = self.depth_max.max(depth as u64);
+    }
+
+    /// Requests answered with an inference error.
+    pub fn errors(&self) -> u64 {
+        self.errors
+    }
+
+    /// Requests shed at admission (deadline backpressure).
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// Most recent queue-depth observation.
+    pub fn queue_depth_last(&self) -> u64 {
+        self.depth_last
+    }
+
+    /// Deepest queue ever observed.
+    pub fn queue_depth_max(&self) -> u64 {
+        self.depth_max
     }
 
     /// Total requests recorded (all time, not just the window).
@@ -113,6 +173,12 @@ impl LatencyStats {
         self.count += other.count;
         self.sum_us += other.sum_us;
         self.batches += other.batches;
+        self.errors += other.errors;
+        self.shed += other.shed;
+        // gauges: the aggregate reads the deepest shard (a sum would
+        // double-count the one shared queue every shard observes)
+        self.depth_last = self.depth_last.max(other.depth_last);
+        self.depth_max = self.depth_max.max(other.depth_max);
         // chronological order: a full ring's oldest sample sits at
         // `next`, the wrapped head [..next] holds the newest
         let (newest_wrapped, oldest_first) =
@@ -148,6 +214,10 @@ impl LatencyStats {
             count: self.count,
             sum_us: self.sum_us,
             batches: self.batches,
+            errors: self.errors,
+            shed: self.shed,
+            depth_last: self.depth_last,
+            depth_max: self.depth_max,
         }
     }
 
@@ -164,6 +234,10 @@ pub struct LatencySnapshot {
     count: u64,
     sum_us: u64,
     batches: u64,
+    errors: u64,
+    shed: u64,
+    depth_last: u64,
+    depth_max: u64,
 }
 
 impl LatencySnapshot {
@@ -191,14 +265,26 @@ impl LatencySnapshot {
         self.sorted_us[rank.min(self.sorted_us.len() - 1)] as f64 / 1000.0
     }
 
+    pub fn errors(&self) -> u64 {
+        self.errors
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms err={} shed={} qdepth={}/{}",
             self.count(),
             self.mean_ms(),
             self.percentile_ms(50.0),
             self.percentile_ms(95.0),
             self.percentile_ms(99.0),
+            self.errors,
+            self.shed,
+            self.depth_last,
+            self.depth_max,
         )
     }
 }
@@ -392,6 +478,42 @@ mod tests {
         // low quartile, the slow shard the high one
         assert_eq!(snap.percentile_ms(25.0), 10.0);
         assert_eq!(snap.percentile_ms(75.0), 1000.0);
+    }
+
+    /// Failed batches count toward occupancy (a burned forward pass
+    /// that served nobody must drag `mean_batch` down), and shed/error
+    /// counters plus queue-depth gauges survive the shard merge.
+    #[test]
+    fn errors_shed_and_depth_gauges_merge() {
+        let mut a = LatencyStats::new();
+        for _ in 0..6 {
+            a.record(Duration::from_millis(2));
+        }
+        a.record_batch();
+        a.record_failed_batch(4);
+        a.record_shed(3);
+        a.observe_queue_depth(9);
+        a.observe_queue_depth(2);
+        assert_eq!(a.errors(), 4);
+        assert_eq!(a.shed(), 3);
+        assert_eq!(a.queue_depth_last(), 2);
+        assert_eq!(a.queue_depth_max(), 9);
+        assert!((a.mean_batch() - 3.0).abs() < 1e-12, "6 served over 2 executed batches");
+
+        let mut b = LatencyStats::new();
+        b.record_failed_batch(1);
+        b.record_shed(2);
+        b.observe_queue_depth(5);
+        b.merge(&a);
+        assert_eq!(b.errors(), 5);
+        assert_eq!(b.shed(), 5);
+        assert_eq!(b.queue_depth_last(), 5, "gauge merge takes the deepest shard");
+        assert_eq!(b.queue_depth_max(), 9);
+        let s = b.summary();
+        assert!(s.contains("err=5") && s.contains("shed=5") && s.contains("qdepth=5/9"), "{s}");
+        let snap = b.snapshot();
+        assert_eq!(snap.errors(), 5);
+        assert_eq!(snap.shed(), 5);
     }
 
     #[test]

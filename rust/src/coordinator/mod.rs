@@ -3,6 +3,7 @@
 //! loop and process lifecycle; all heavy math happens inside the AOT
 //! artifacts (training/infer) or the native engines (deployment).
 
+pub mod adaptive;
 pub mod init;
 pub mod inq;
 pub mod metrics;

@@ -199,6 +199,15 @@ impl<T> Receiver<T> {
     }
 }
 
+impl<T> Receiver<T> {
+    /// Requests currently buffered — the adaptive-window controller's
+    /// queue-depth signal. One short lock; the value is a snapshot and
+    /// may be stale the moment it returns (control/diagnostics only).
+    pub fn depth(&self) -> usize {
+        self.shared.state.lock().unwrap().buf.len()
+    }
+}
+
 impl<T> Clone for Receiver<T> {
     fn clone(&self) -> Self {
         self.shared.state.lock().unwrap().receivers += 1;
@@ -323,6 +332,18 @@ mod tests {
         tx.try_send(item_tx).unwrap();
         drop(rx); // last receiver: buffered sender must be dropped too
         assert!(item_rx.recv().is_err(), "buffered item leaked past receiver drop");
+    }
+
+    #[test]
+    fn depth_tracks_buffered_items() {
+        let (tx, rx) = bounded(8);
+        assert_eq!(rx.depth(), 0);
+        for i in 0..5 {
+            tx.try_send(i).unwrap();
+        }
+        assert_eq!(rx.depth(), 5);
+        rx.recv();
+        assert_eq!(rx.depth(), 4);
     }
 
     #[test]

@@ -34,6 +34,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::consts::{GRID, IMG, NUM_CLS};
+use crate::coordinator::adaptive::AdaptiveWindow;
+pub use crate::coordinator::adaptive::WindowMode;
 use crate::coordinator::metrics::{LatencyStats, ShardStats};
 use crate::coordinator::params::{Checkpoint, ParamSpec};
 use crate::coordinator::queue::{self, Recv, SendError};
@@ -71,6 +73,19 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// How long a shard waits to fill a batch after the first request.
     pub batch_window: Duration,
+    /// How `batch_window` is applied: [`WindowMode::Fixed`] waits the
+    /// whole window after every batch head; [`WindowMode::Adaptive`]
+    /// treats it as a *maximum* and lets the per-shard load observer
+    /// (EWMA arrival rate + queue depth, [`AdaptiveWindow`]) choose a
+    /// window in `[0, batch_window]` — zero under light traffic
+    /// (latency-optimal), wide when traffic backs up
+    /// (occupancy-optimal).
+    pub window: WindowMode,
+    /// Admission deadline: a request older than this when a shard
+    /// picks it up is shed with a backpressure error instead of
+    /// burning forward-pass time on an answer the client has likely
+    /// given up on. `None` = never shed.
+    pub deadline: Option<Duration>,
     pub score_thresh: f32,
     pub nms_iou: f32,
     /// Request queue depth (the backpressure bound, shared by shards).
@@ -95,6 +110,15 @@ fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Default window mode: `LBW_WINDOW=fixed|adaptive` when set, else
+/// fixed (the pre-adaptive behavior).
+fn default_window() -> WindowMode {
+    std::env::var("LBW_WINDOW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_default()
+}
+
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
@@ -102,6 +126,8 @@ impl Default for ServerConfig {
             threads: default_threads(),
             max_batch: crate::consts::TRAIN_BATCH,
             batch_window: Duration::from_millis(2),
+            window: default_window(),
+            deadline: None,
             score_thresh: 0.4,
             nms_iou: 0.45,
             queue_depth: 256,
@@ -118,6 +144,9 @@ pub struct Request {
     image: Vec<f32>,
     resp: std::sync::mpsc::SyncSender<Result<Vec<Detection>>>,
     enqueued: Instant,
+    /// Admission deadline stamped at submit; a shard that pops this
+    /// request after the deadline sheds it instead of serving it.
+    deadline: Option<Instant>,
 }
 
 /// Handle used by clients to submit detection requests. Cloneable and
@@ -128,6 +157,7 @@ pub struct DetectHandle {
     tx: queue::Sender<Request>,
     stats: Arc<ShardStats>,
     submit_timeout: Duration,
+    deadline: Option<Duration>,
 }
 
 impl DetectHandle {
@@ -146,7 +176,13 @@ impl DetectHandle {
     fn submit(&self, image: Vec<f32>, wait: Duration) -> Result<Vec<Detection>> {
         anyhow::ensure!(image.len() == IMG * IMG * 3, "bad image size {}", image.len());
         let (resp, rx) = sync_channel(1);
-        let req = Request { image, resp, enqueued: Instant::now() };
+        let now = Instant::now();
+        let req = Request {
+            image,
+            resp,
+            enqueued: now,
+            deadline: self.deadline.map(|d| now + d),
+        };
         match self.tx.send_timeout(req, wait) {
             Ok(()) => {}
             Err(SendError::Full(_)) => {
@@ -353,8 +389,12 @@ impl DetectServer {
                 return Err(e);
             }
         }
-        let handle =
-            DetectHandle { tx, stats: stats.clone(), submit_timeout: cfg.submit_timeout };
+        let handle = DetectHandle {
+            tx,
+            stats: stats.clone(),
+            submit_timeout: cfg.submit_timeout,
+            deadline: cfg.deadline,
+        };
         Ok(DetectServer { handle, stats, workers })
     }
 
@@ -387,27 +427,68 @@ impl DetectServer {
 /// One shard's batching loop, generic over the inference function so
 /// tests can inject a mock engine. Exits when the queue is closed and
 /// drained.
+///
+/// Hot-loop discipline: the shard stats mutex (which metrics scrapes
+/// contend on) is taken exactly **once per batch**, after every
+/// response has already been decoded, NMS-filtered, and sent — never
+/// across the decode path.
 pub fn serve_loop(
     rx: queue::Receiver<Request>,
     cfg: &ServerConfig,
     stats: Arc<Mutex<LatencyStats>>,
     mut infer: impl FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
 ) {
+    let max_batch = cfg.max_batch.max(1);
+    let mut ctl = AdaptiveWindow::new(cfg.batch_window);
+    let mut latencies: Vec<Duration> = Vec::with_capacity(max_batch);
     loop {
         let Some(first) = rx.recv() else { return };
+        // queue-depth snapshot behind the popped head: the adaptive
+        // controller's signal and the metrics gauge
+        let depth = rx.depth();
+        let popped_at = Instant::now();
+        let window = match cfg.window {
+            WindowMode::Fixed => cfg.batch_window,
+            WindowMode::Adaptive => ctl.window(depth, max_batch, popped_at),
+        };
         let mut batch = vec![first];
         // with a zero window this still drains already-queued requests
-        let deadline = Instant::now() + cfg.batch_window;
-        while batch.len() < cfg.max_batch.max(1) {
-            match rx.recv_deadline(deadline) {
+        let close = popped_at + window;
+        while batch.len() < max_batch {
+            match rx.recv_deadline(close) {
                 Recv::Item(r) => batch.push(r),
                 Recv::Timeout | Recv::Closed => break, // Closed: serve what we hold
             }
         }
+        let now = Instant::now();
+        ctl.observe(batch.len(), now);
 
-        let run_batch = cfg.pad_batch.max(batch.len());
+        // admission control: answer expired requests with a
+        // backpressure error instead of burning forward-pass time on
+        // answers their clients have stopped waiting for
+        let mut live = Vec::with_capacity(batch.len());
+        let mut shed = 0usize;
+        for r in batch {
+            if matches!(r.deadline, Some(d) if now > d) {
+                shed += 1;
+                let _ = r.resp.send(Err(anyhow!(
+                    "server overloaded: request shed after exceeding its admission deadline \
+                     (backpressure)"
+                )));
+            } else {
+                live.push(r);
+            }
+        }
+        if live.is_empty() {
+            let mut stats = stats.lock().unwrap();
+            stats.record_shed(shed);
+            stats.observe_queue_depth(depth);
+            continue;
+        }
+
+        let run_batch = cfg.pad_batch.max(live.len());
         let mut images = Vec::with_capacity(run_batch * IMG * IMG * 3);
-        for r in &batch {
+        for r in &live {
             images.extend_from_slice(&r.image);
         }
         images.resize(run_batch * IMG * IMG * 3, 0.0);
@@ -424,24 +505,40 @@ pub fn serve_loop(
             );
             Ok((cls_prob, reg))
         });
+        let served = live.len();
         match result {
             Ok((cls_prob, reg)) => {
-                let mut shard = stats.lock().unwrap();
-                shard.record_batch();
-                for (bi, req) in batch.into_iter().enumerate() {
+                // decode + respond with no lock held...
+                latencies.clear();
+                for (bi, req) in live.into_iter().enumerate() {
                     let cp =
                         &cls_prob[bi * GRID * GRID * NUM_CLS..(bi + 1) * GRID * GRID * NUM_CLS];
                     let rg = &reg[bi * GRID * GRID * 4..(bi + 1) * GRID * GRID * 4];
                     let dets = nms(decode_grid(cp, rg, cfg.score_thresh), cfg.nms_iou);
-                    shard.record(req.enqueued.elapsed());
+                    latencies.push(req.enqueued.elapsed());
                     let _ = req.resp.send(Ok(dets));
                 }
+                // ...then fold the whole batch into one short critical
+                // section
+                let mut stats = stats.lock().unwrap();
+                stats.record_batch();
+                for &d in &latencies {
+                    stats.record(d);
+                }
+                stats.record_shed(shed);
+                stats.observe_queue_depth(depth);
             }
             Err(e) => {
                 let msg = format!("{e}");
-                for req in batch {
+                for req in live {
                     let _ = req.resp.send(Err(anyhow!("inference failed: {msg}")));
                 }
+                // failed batches burn a forward pass serving nobody —
+                // record them so occupancy accounting stays truthful
+                let mut stats = stats.lock().unwrap();
+                stats.record_failed_batch(served);
+                stats.record_shed(shed);
+                stats.observe_queue_depth(depth);
             }
         }
     }

@@ -38,10 +38,17 @@ pub fn hflip(scene: &Scene) -> Scene {
 /// model sees zero-centered floats).
 pub fn brightness(scene: &Scene, delta: f32) -> Scene {
     let mut s = scene.clone();
-    for x in s.image.iter_mut() {
+    shift_brightness(&mut s, delta);
+    s
+}
+
+/// The one shared brightness implementation, in place — used by both
+/// [`brightness`] and [`augment`] (which owns its scene already and
+/// must not pay a second image copy).
+fn shift_brightness(scene: &mut Scene, delta: f32) {
+    for x in scene.image.iter_mut() {
         *x += delta;
     }
-    s
 }
 
 /// Apply the standard augmentation pipeline for one training sample:
@@ -49,9 +56,7 @@ pub fn brightness(scene: &Scene, delta: f32) -> Scene {
 pub fn augment(scene: &Scene, rng: &mut Rng) -> Scene {
     let mut s = if rng.uniform() < 0.5 { hflip(scene) } else { scene.clone() };
     let delta = rng.range(-0.1, 0.1);
-    for x in s.image.iter_mut() {
-        *x += delta;
-    }
+    shift_brightness(&mut s, delta);
     s
 }
 

@@ -31,7 +31,9 @@ pub fn average_precision(
     }
     let mut class_dets: Vec<&(usize, Detection)> =
         dets.iter().filter(|(_, d)| d.class == class).collect();
-    class_dets.sort_by(|a, b| b.1.score.partial_cmp(&a.1.score).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): NaN scores from a
+    // degenerate checkpoint must rank deterministically, not panic
+    class_dets.sort_by(|a, b| b.1.score.total_cmp(&a.1.score));
 
     // per (image, gt-index) matched flags
     let mut matched = vec![false; gts.len()];
@@ -184,6 +186,17 @@ mod tests {
         let dets = vec![det(0, 0.0, 0.9, 0)]; // class 1 undetected
         let m = mean_ap(&dets, &gts, ApMode::AllPoint);
         assert!((m - 0.5).abs() < 1e-9); // (1.0 + 0.0) / 2
+    }
+
+    /// NaN-scored detections (degenerate checkpoint) must not panic
+    /// the ranking sort; finite detections still match as before.
+    #[test]
+    fn nan_scores_do_not_panic_ap() {
+        let gts = vec![gt(0, 0.0, 0)];
+        let dets = vec![det(0, 50.0, f32::NAN, 0), det(0, 0.0, 0.9, 0)];
+        let ap = average_precision(&dets, &gts, 0, ApMode::AllPoint);
+        assert!(ap.is_finite());
+        assert!(ap > 0.0, "the finite TP must still score: {ap}");
     }
 
     #[test]

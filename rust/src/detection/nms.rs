@@ -6,8 +6,13 @@ use super::boxes::Detection;
 /// and drop any remaining detection of the same class with
 /// `IoU > iou_thresh` against a kept one. Returns detections sorted by
 /// decreasing score.
+///
+/// Ordering is [`f32::total_cmp`], never `partial_cmp().unwrap()`: a
+/// degenerate checkpoint can emit NaN scores, and a panic here runs
+/// inside the server's shard threads — it must sort (NaNs at the
+/// extremes), not kill the shard.
 pub fn nms(mut dets: Vec<Detection>, iou_thresh: f32) -> Vec<Detection> {
-    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    dets.sort_by(|a, b| b.score.total_cmp(&a.score));
     let mut keep: Vec<Detection> = Vec::with_capacity(dets.len());
     'outer: for d in dets {
         for k in &keep {
@@ -52,6 +57,27 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(nms(vec![], 0.5).is_empty());
+    }
+
+    /// The shard-killer regression: NaN scores used to panic the
+    /// `partial_cmp().unwrap()` sort. total_cmp must order them
+    /// deterministically and keep every finite detection intact.
+    #[test]
+    fn nan_scores_do_not_panic() {
+        let kept = nms(
+            vec![
+                det(0.0, 0.0, f32::NAN, 0),
+                det(40.0, 40.0, 0.9, 0),
+                det(80.0, 80.0, f32::NAN, 1),
+                det(120.0, 120.0, 0.3, 1),
+            ],
+            0.5,
+        );
+        assert_eq!(kept.len(), 4, "disjoint boxes all survive");
+        assert!(kept.iter().any(|d| (d.score - 0.9).abs() < 1e-9));
+        // and an all-NaN input is equally harmless
+        let all_nan = nms(vec![det(0.0, 0.0, f32::NAN, 0); 5], 0.5);
+        assert!(!all_nan.is_empty());
     }
 
     #[test]

@@ -36,12 +36,18 @@ USAGE: repro <subcommand> [--flag value ...]
   quantize  [--ckpt PATH --bits 2,4,5,6 --n N]                         (§2.1 exactness)
   inq       [--bits 4|5 --steps N --seed N --out ckpt.lbw]              (INQ baseline [25])
   serve     [--ckpt PATH --engine shift|float|artifact --shards N --threads N
-             --executor planned|naive --requests N --concurrency N]    (sharded serving)
+             --executor planned|naive --window fixed|adaptive --deadline-ms N
+             --requests N --concurrency N]                             (sharded serving)
   gen-data  [--count N --seed N --out DIR]                             (SynthVOC scenes)
 
 --threads is intra-op parallelism: each planned-executor shard splits
 its conv tiles over a work-stealing pool of that many threads (shards x
 threads total). Results are bitwise identical for any thread count.
+
+--window adaptive lets each shard size its batch window from live load
+(EWMA arrival rate + queue depth; batch_window_ms caps it; env
+LBW_WINDOW sets the default). --deadline-ms sheds requests that wait
+longer than N ms before a shard picks them up (backpressure error).
 
 serve runs hermetically with the pure-Rust engines (shift/float): with
 no --ckpt it builds a synthetic He-initialized detector, so it works on
@@ -392,7 +398,16 @@ fn cmd_inq(args: &Args, cfg: &Config) -> Result<()> {
 
 fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     args.check_known(&[
-        "ckpt", "engine", "executor", "shards", "threads", "requests", "concurrency", "config",
+        "ckpt",
+        "engine",
+        "executor",
+        "shards",
+        "threads",
+        "window",
+        "deadline-ms",
+        "requests",
+        "concurrency",
+        "config",
     ])?;
     let requests: usize = args.parse_or("requests", 64)?;
     let concurrency: usize = args.parse_or("concurrency", 8)?;
@@ -405,6 +420,10 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         "naive" => server_cfg.executor = lbw_net::coordinator::server::Executor::Naive,
         other => bail!("unknown executor `{other}` (planned|naive)"),
     }
+    server_cfg.window = args.str_or("window", &cfg.serve.window).parse()?;
+    let deadline_ms: u64 = args.parse_or("deadline-ms", cfg.serve.deadline_ms)?;
+    server_cfg.deadline =
+        (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
 
     let server = match engine.as_str() {
         "artifact" => {
@@ -430,8 +449,9 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
                 EngineKind::Shift { bits: ck.bits.clamp(2, 6) }
             };
             println!(
-                "serving {} via hermetic {kind:?} engine ({:?} executor), {} shard(s) x {} thread(s)",
-                ck.arch, server_cfg.executor, server_cfg.shards, server_cfg.threads
+                "serving {} via hermetic {kind:?} engine ({:?} executor), {} shard(s) x {} thread(s), {} window",
+                ck.arch, server_cfg.executor, server_cfg.shards, server_cfg.threads,
+                server_cfg.window
             );
             DetectServer::start_engine(&spec, &ck, kind, server_cfg)?
         }

@@ -157,6 +157,39 @@ fn naive_and_planned_executors_serve_identical_detections() {
     }
 }
 
+/// The shard-killer regression: a degenerate checkpoint emitting NaN
+/// scores used to panic the NMS sort (`partial_cmp().unwrap()`) inside
+/// `serve_loop`, silently killing the shard thread and shrinking the
+/// pool. With `f32::total_cmp` ordering the shard must survive an
+/// all-NaN engine output and keep serving.
+#[test]
+fn nan_scoring_engine_does_not_kill_the_shard() {
+    let nan_engine: ShardSetup = Box::new(|_shard| {
+        Ok(Box::new(|_images: &[f32], batch: usize| {
+            Ok((
+                vec![f32::NAN; batch * GRID * GRID * NUM_CLS],
+                vec![f32::NAN; batch * GRID * GRID * 4],
+            ))
+        }))
+    });
+    let cfg = ServerConfig { shards: 1, ..Default::default() };
+    let server = DetectServer::start_with(cfg, vec![nan_engine]).unwrap();
+    let handle = server.handle();
+    let scene_cfg = SceneConfig::default();
+    for i in 0..6u64 {
+        let img = generate_scene(13, i, &scene_cfg).image;
+        // a NaN-scoring checkpoint yields garbage, not a dead shard:
+        // each request must still get an answer
+        let dets = handle.detect(img).expect("shard must survive NaN scores");
+        assert!(dets.is_empty(), "NaN scores cannot clear the threshold");
+    }
+    // the single shard is demonstrably still alive and counting
+    assert_eq!(handle.latency().count(), 6);
+    assert_eq!(handle.shard_latencies()[0].count(), 6);
+    drop(handle);
+    server.shutdown();
+}
+
 #[test]
 fn backpressure_errors_instead_of_blocking() {
     // mock engine that stalls so the queue saturates deterministically
