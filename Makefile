@@ -8,16 +8,21 @@
 #   make bench      run every in-tree benchmark binary
 #   make bench-smoke  reduced bench_serve sweep (planned vs naive
 #                   executors, 1 shard, tile pools at 1 and 4 threads,
-#                   plus the adaptive-vs-fixed window cells under
-#                   open-loop steady/bursty load) — fast enough for
-#                   CI; kernel, threading, or batching-controller
-#                   regressions fail loudly here
+#                   the adaptive-vs-fixed window cells under open-loop
+#                   steady/bursty load, plus the elastic
+#                   fixed-vs-autoscale cells under bursty load) — fast
+#                   enough for CI; kernel, threading, batching, or
+#                   autoscaling regressions fail loudly here
+#   make bench-gate   regression-gate the fresh BENCH_serve.json
+#                   (self-tests the gate on doctored rows first, then
+#                   fails if planned/naive < 2x, 4t/1t < 1.5x, or an
+#                   autoscale row shows no scale events)
 #   make lint       rustfmt + clippy, as CI runs them
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test artifacts bench bench-smoke lint clean
+.PHONY: build test artifacts bench bench-smoke bench-gate lint clean
 
 build:
 	$(CARGO) build --release
@@ -33,6 +38,10 @@ bench: build
 
 bench-smoke: build
 	$(CARGO) run --release --example bench_serve -- --smoke
+
+bench-gate:
+	$(PYTHON) scripts/bench_gate.py --self-test
+	$(PYTHON) scripts/bench_gate.py BENCH_serve.json
 
 lint:
 	$(CARGO) fmt --check

@@ -24,6 +24,15 @@
 //! The summary quotes bursty mean-batch occupancy (adaptive vs
 //! fixed-2ms) and steady p95 (adaptive must not lose).
 //!
+//! Since the elastic-autoscaling PR an **autoscale sweep** drives the
+//! same open-loop bursty schedule through a fixed single shard and an
+//! elastic pool bounded [1, 4]: the elastic row carries
+//! `"shards": "auto"` plus `"shards_max"`, `"scale_ups"`, and
+//! `"scale_downs"` (the supervisor must both spawn under bursts and
+//! drain in the gaps), and its `"shard_counts"` lists every shard
+//! generation that ever lived. The summary quotes elastic p95 vs the
+//! fixed single shard (elastic must not lose).
+//!
 //! Run with: `cargo run --release --example bench_serve`
 //! Smoke mode (CI): `cargo run --release --example bench_serve -- --smoke`
 //! (reduced request count + 1-shard cells only; also honours the
@@ -32,6 +41,7 @@
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
+use lbw_net::coordinator::autoscale::AutoscaleConfig;
 use lbw_net::coordinator::server::{DetectServer, Executor, ServerConfig, WindowMode};
 use lbw_net::data::{generate_scene, SceneConfig};
 use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
@@ -53,6 +63,9 @@ struct Cell {
     /// closed-loop sweep.
     load: Option<String>,
     shed: u64,
+    /// Elastic cell: `shards` is the initial count and the JSON row
+    /// carries `"shards": "auto"` plus the scale-event counters.
+    auto: Option<AutoCell>,
     wall_s: f64,
     imgs_per_s: f64,
     p50_ms: f64,
@@ -60,6 +73,13 @@ struct Cell {
     p99_ms: f64,
     mean_batch: f64,
     shard_counts: Vec<usize>,
+}
+
+/// The elastic dimensions of an autoscale cell.
+struct AutoCell {
+    shards_max: usize,
+    scale_ups: u64,
+    scale_downs: u64,
 }
 
 fn drive(server: &DetectServer, scenes: &[Vec<f32>], requests: usize) -> Result<Duration> {
@@ -187,6 +207,7 @@ fn main() -> Result<()> {
                             window_ms,
                             load: None,
                             shed: 0,
+                            auto: None,
                             wall_s: wall.as_secs_f64(),
                             imgs_per_s: agg.throughput(wall),
                             p50_ms: snap.percentile_ms(50.0),
@@ -271,6 +292,7 @@ fn main() -> Result<()> {
                 window_ms,
                 load: Some(load.to_string()),
                 shed: agg.shed(),
+                auto: None,
                 wall_s: wall.as_secs_f64(),
                 imgs_per_s: agg.throughput(wall),
                 p50_ms: snap.percentile_ms(50.0),
@@ -311,6 +333,90 @@ fn main() -> Result<()> {
     }
     if let (Some(a), Some(f)) = (open("adaptive", "steady"), open("fixed", "steady")) {
         println!("steady: adaptive p95 {:.2}ms vs fixed-2ms p95 {:.2}ms", a.p95_ms, f.p95_ms);
+    }
+
+    // ---- autoscale sweep (open-loop bursty) ----
+    // same engine/executor, same bursty schedule, two servers: a fixed
+    // single shard vs an elastic pool [1, 4]. Bursts land all at once
+    // (intra 0) so the queue-depth spike is load-shaped, not
+    // engine-speed-shaped; the ~100ms inter-burst gaps are long enough
+    // for the supervisor's idle law to drain back down — each run
+    // should show scale-ups during bursts AND drains between them,
+    // with p95 no worse than the fixed shard (the elastic pool eats
+    // the burst tail faster).
+    println!("\n--- autoscale sweep (open-loop bursty): planned shift6 ---");
+    let auto_offsets =
+        bursty_schedule(requests, burst, Duration::ZERO, Duration::from_millis(100));
+    let mut fixed_1shard_p95 = 0.0f64;
+    for elastic in [false, true] {
+        let cfg = ServerConfig {
+            shards: 1,
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+            queue_depth: 256,
+            executor: Executor::Planned,
+            autoscale: elastic.then(|| AutoscaleConfig {
+                min_shards: 1,
+                max_shards: 4,
+                tick: Duration::from_millis(2),
+                cooldown_ticks: 2,
+                down_idle_ticks: 10,
+                ..AutoscaleConfig::default()
+            }),
+            ..Default::default()
+        };
+        let server =
+            DetectServer::start_engine(&spec, &ckpt, EngineKind::Shift { bits: 6 }, cfg)?;
+        let (wall, errors) = drive_open_loop(&server, &scenes, &auto_offsets);
+        let agg = server.handle().latency();
+        let snap = agg.snapshot();
+        let shard_counts: Vec<usize> =
+            server.shard_latencies().iter().map(|s| s.count()).collect();
+        let (ups, downs) = server.scale_events();
+        let cell = Cell {
+            executor: "planned".to_string(),
+            engine: "shift6".to_string(),
+            shards: 1,
+            threads: 1,
+            window: "fixed".to_string(),
+            window_ms: 2,
+            load: Some("bursty".to_string()),
+            shed: agg.shed(),
+            auto: elastic.then(|| AutoCell { shards_max: 4, scale_ups: ups, scale_downs: downs }),
+            wall_s: wall.as_secs_f64(),
+            imgs_per_s: agg.throughput(wall),
+            p50_ms: snap.percentile_ms(50.0),
+            p95_ms: snap.percentile_ms(95.0),
+            p99_ms: snap.percentile_ms(99.0),
+            mean_batch: agg.mean_batch(),
+            shard_counts,
+        };
+        println!(
+            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  (bursty, errors {errors}, ups {ups}, drains {downs})",
+            cell.executor,
+            cell.engine,
+            if elastic { "auto".to_string() } else { "1".to_string() },
+            cell.threads,
+            "2ms",
+            cell.imgs_per_s,
+            cell.p50_ms,
+            cell.p95_ms,
+            cell.p99_ms,
+            cell.mean_batch
+        );
+        if !elastic {
+            fixed_1shard_p95 = cell.p95_ms;
+        }
+        server.shutdown();
+        cells.push(cell);
+    }
+    if let Some(a) = cells.iter().find(|c| c.auto.is_some()) {
+        let e = a.auto.as_ref().expect("auto cell");
+        println!(
+            "autoscale bursty: p95 {:.2}ms vs fixed-1shard {:.2}ms, {} scale-up(s) / {} drain(s) across {} shard generation(s)",
+            a.p95_ms, fixed_1shard_p95, e.scale_ups, e.scale_downs, a.shard_counts.len()
+        );
     }
 
     let rate = |exec: &str, engine: &str, shards: usize, threads: usize| {
@@ -361,10 +467,17 @@ fn main() -> Result<()> {
         cells
             .iter()
             .map(|c| {
+                let shards_field = match &c.auto {
+                    // elastic rows: shard count is a supervisor
+                    // decision, not a config cell — the row records
+                    // "auto" plus the bound and the scale events
+                    Some(_) => Json::str("auto"),
+                    None => Json::num(c.shards as f64),
+                };
                 let mut fields = vec![
                     ("executor", Json::str(c.executor.as_str())),
                     ("engine", Json::str(c.engine.as_str())),
-                    ("shards", Json::num(c.shards as f64)),
+                    ("shards", shards_field),
                     ("threads", Json::num(c.threads as f64)),
                     ("window", Json::str(c.window.as_str())),
                     ("batch_window_ms", Json::num(c.window_ms as f64)),
@@ -385,6 +498,11 @@ fn main() -> Result<()> {
                     fields.push(("load", Json::str(load.as_str())));
                     fields.push(("shed", Json::num(c.shed as f64)));
                 }
+                if let Some(a) = &c.auto {
+                    fields.push(("shards_max", Json::num(a.shards_max as f64)));
+                    fields.push(("scale_ups", Json::num(a.scale_ups as f64)));
+                    fields.push(("scale_downs", Json::num(a.scale_downs as f64)));
+                }
                 Json::obj(fields)
             })
             .collect(),
@@ -394,7 +512,7 @@ fn main() -> Result<()> {
         (
             "detector",
             Json::str(
-                "synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors, threads {1,4} tile pools, fixed+adaptive batch windows (open-loop steady/bursty)",
+                "synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors, threads {1,4} tile pools, fixed+adaptive batch windows (open-loop steady/bursty), elastic shards-auto cells (open-loop bursty, scale events recorded)",
             ),
         ),
         ("rows", rows),

@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use anyhow::{ensure, Result};
 
-use crate::coordinator::server::{Executor, ServerConfig};
+use crate::coordinator::server::{AutoscaleConfig, Executor, ServerConfig};
 use crate::coordinator::trainer::TrainConfig;
 use crate::data::SceneConfig;
 use crate::util::toml::{parse as toml_parse, TomlDoc};
@@ -85,6 +85,17 @@ pub struct ServeSection {
     pub queue_depth: usize,
     /// Backpressure bound: how long `detect` may wait for queue space.
     pub submit_timeout_ms: u64,
+    /// Elastic shard autoscaling: a supervisor scales the live shard
+    /// set (and steers the effective `max_batch`) between
+    /// `shards_min`/`shards_max` from live load — EWMA arrival rate,
+    /// queue depth, shed counters. `shards` becomes the *initial*
+    /// count. Off by default (fixed pool).
+    pub autoscale: bool,
+    /// Lower autoscale bound (shards never drain below this).
+    pub shards_min: usize,
+    /// Upper autoscale bound. 0 = use the default (env
+    /// `LBW_SHARDS_MAX`, else 4).
+    pub shards_max: usize,
 }
 
 impl Default for ServeSection {
@@ -101,6 +112,9 @@ impl Default for ServeSection {
             deadline_ms: s.deadline.map_or(0, |d| d.as_millis() as u64),
             queue_depth: s.queue_depth,
             submit_timeout_ms: s.submit_timeout.as_millis() as u64,
+            autoscale: false,
+            shards_min: 1,
+            shards_max: 0,
         }
     }
 }
@@ -172,6 +186,9 @@ impl Config {
                 "serve.deadline_ms" => cfg.serve.deadline_ms = v.as_u64()?,
                 "serve.queue_depth" => cfg.serve.queue_depth = v.as_usize()?,
                 "serve.submit_timeout_ms" => cfg.serve.submit_timeout_ms = v.as_u64()?,
+                "serve.autoscale" => cfg.serve.autoscale = v.as_bool()?,
+                "serve.shards_min" => cfg.serve.shards_min = v.as_usize()?,
+                "serve.shards_max" => cfg.serve.shards_max = v.as_usize()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -214,6 +231,11 @@ impl Config {
             "serve.window must be fixed|adaptive, got {}",
             self.serve.window
         );
+        ensure!(self.serve.shards_min >= 1, "serve.shards_min must be >= 1");
+        ensure!(
+            self.serve.shards_max == 0 || self.serve.shards_max >= self.serve.shards_min,
+            "serve.shards_max must be 0 (default) or >= serve.shards_min"
+        );
         Ok(())
     }
 
@@ -235,8 +257,24 @@ impl Config {
             } else {
                 Executor::Planned
             },
+            autoscale: self.serve.autoscale.then(|| self.autoscale_bounds()),
             ..ServerConfig::default()
         }
+    }
+
+    /// The autoscale bounds lowered from `[serve]`, independent of
+    /// whether `serve.autoscale` enables them — the CLI can switch
+    /// autoscaling on (`--autoscale true`) against a config that only
+    /// supplies `shards_min`/`shards_max`, and must not lose those
+    /// bounds.
+    pub fn autoscale_bounds(&self) -> AutoscaleConfig {
+        let defaults = AutoscaleConfig::default();
+        let max_shards = if self.serve.shards_max > 0 {
+            self.serve.shards_max
+        } else {
+            defaults.max_shards // env LBW_SHARDS_MAX, else 4
+        };
+        AutoscaleConfig { min_shards: self.serve.shards_min, max_shards, ..defaults }.normalized()
     }
 
     /// Lower into the trainer's config.
@@ -348,6 +386,47 @@ mod tests {
         assert!(Config::from_toml("[serve]\nthreads = 0\n").is_err());
         assert!(Config::from_toml("[serve]\nengine = \"gpu\"\n").is_err());
         assert!(Config::from_toml("[serve]\nwindow = \"auto\"\n").is_err());
+    }
+
+    #[test]
+    fn autoscale_parses_validates_and_lowers() {
+        let cfg = Config::from_toml(
+            r#"
+            [serve]
+            autoscale = true
+            shards = 2
+            shards_min = 1
+            shards_max = 6
+        "#,
+        )
+        .unwrap();
+        assert!(cfg.serve.autoscale);
+        let s = cfg.to_server_config();
+        let a = s.autoscale.expect("autoscale lowered");
+        assert_eq!((a.min_shards, a.max_shards), (1, 6));
+        assert_eq!(s.shards, 2, "shards stays the initial count");
+
+        // off by default, and off lowers to None
+        let s = Config::default().to_server_config();
+        assert!(s.autoscale.is_none());
+
+        // bounds validated
+        assert!(Config::from_toml("[serve]\nshards_min = 0\n").is_err());
+        assert!(Config::from_toml("[serve]\nshards_min = 4\nshards_max = 2\n").is_err());
+        // shards_max = 0 means "use the default bound"
+        let cfg = Config::from_toml("[serve]\nautoscale = true\nshards_max = 0\n").unwrap();
+        let a = cfg.to_server_config().autoscale.unwrap();
+        assert!(a.max_shards >= 1);
+        // autoscale must be a boolean
+        assert!(Config::from_toml("[serve]\nautoscale = \"yes\"\n").is_err());
+
+        // bounds survive even when the config leaves autoscale off —
+        // the CLI may enable it later (--autoscale true) and must see
+        // the configured floor/ceiling, not the defaults
+        let cfg = Config::from_toml("[serve]\nshards_min = 2\nshards_max = 8\n").unwrap();
+        assert!(cfg.to_server_config().autoscale.is_none());
+        let b = cfg.autoscale_bounds();
+        assert_eq!((b.min_shards, b.max_shards), (2, 8));
     }
 
     #[test]

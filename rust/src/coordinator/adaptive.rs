@@ -70,6 +70,46 @@ impl std::fmt::Display for WindowMode {
 /// erase the rate estimate.
 const EWMA_ALPHA: f64 = 0.3;
 
+/// EWMA arrival-rate estimator — the load signal shared by the
+/// per-shard window controller ([`AdaptiveWindow`]) and the elastic
+/// shard supervisor ([`crate::coordinator::autoscale`]). Each
+/// observation is "`arrived` requests since the previous observation";
+/// the instantaneous rate is smoothed with [`EWMA_ALPHA`].
+#[derive(Debug, Clone, Default)]
+pub struct RateEwma {
+    rate: f64,
+    last_obs: Option<Instant>,
+}
+
+impl RateEwma {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `arrived` arrivals at `now`. The first observation only
+    /// anchors the clock (no interval to rate over yet). Idle
+    /// stretches (long gaps, small `arrived`) decay the rate; bursts
+    /// raise it.
+    pub fn observe(&mut self, arrived: usize, now: Instant) {
+        if let Some(prev) = self.last_obs {
+            let dt = now.duration_since(prev).as_secs_f64().max(1e-6);
+            let inst = arrived as f64 / dt;
+            self.rate = EWMA_ALPHA * inst + (1.0 - EWMA_ALPHA) * self.rate;
+        }
+        self.last_obs = Some(now);
+    }
+
+    /// Smoothed arrival rate, requests/second.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Seconds since the last observation (`None` before the first).
+    pub fn idle_secs(&self, now: Instant) -> Option<f64> {
+        self.last_obs.map(|prev| now.duration_since(prev).as_secs_f64())
+    }
+}
+
 /// Give-up threshold: when the expected fill time exceeds this many
 /// max-windows, waiting cannot plausibly fill the batch — collapse the
 /// window to zero instead of paying latency for nothing.
@@ -90,33 +130,27 @@ const STALE_AFTER: f64 = 32.0;
 #[derive(Debug, Clone)]
 pub struct AdaptiveWindow {
     max_window: Duration,
-    /// Smoothed arrival rate seen by this shard, requests/second.
-    ewma_rate: f64,
-    last_obs: Option<Instant>,
+    /// Smoothed arrival rate seen by this shard.
+    ewma: RateEwma,
 }
 
 impl AdaptiveWindow {
     /// Controller bounded by `max_window` (the widest window it will
     /// ever ask for).
     pub fn new(max_window: Duration) -> Self {
-        AdaptiveWindow { max_window, ewma_rate: 0.0, last_obs: None }
+        AdaptiveWindow { max_window, ewma: RateEwma::new() }
     }
 
     /// Record one loop iteration: this shard pulled `arrived` requests
     /// and the previous observation was `now - dt` ago. Idle stretches
     /// (long `dt`, small `arrived`) decay the rate; bursts raise it.
     pub fn observe(&mut self, arrived: usize, now: Instant) {
-        if let Some(prev) = self.last_obs {
-            let dt = now.duration_since(prev).as_secs_f64().max(1e-6);
-            let inst = arrived as f64 / dt;
-            self.ewma_rate = EWMA_ALPHA * inst + (1.0 - EWMA_ALPHA) * self.ewma_rate;
-        }
-        self.last_obs = Some(now);
+        self.ewma.observe(arrived, now);
     }
 
     /// Smoothed arrival rate (requests/second) — diagnostics.
     pub fn rate(&self) -> f64 {
-        self.ewma_rate
+        self.ewma.rate()
     }
 
     /// The window for the batch whose first request was just popped
@@ -129,9 +163,8 @@ impl AdaptiveWindow {
             return Duration::ZERO; // backed-up queue fills the batch instantly
         }
         let max_s = self.max_window.as_secs_f64();
-        let mut rate = self.ewma_rate;
-        if let Some(prev) = self.last_obs {
-            let idle = now.duration_since(prev).as_secs_f64();
+        let mut rate = self.ewma.rate();
+        if let Some(idle) = self.ewma.idle_secs(now) {
             if idle > STALE_AFTER * max_s {
                 // the stale-rate trap: long after traffic stopped the
                 // EWMA still remembers the last burst — cap it by what
@@ -244,6 +277,25 @@ mod tests {
         let busy = c.rate();
         c.observe(1, end + Duration::from_secs(1)); // one request after a quiet second
         assert!(c.rate() < busy, "idle gap must pull the EWMA down");
+    }
+
+    /// The shared estimator is what both controllers see: first
+    /// observation anchors only, bursts raise the rate, idle decays it.
+    #[test]
+    fn rate_ewma_tracks_bursts_and_idles() {
+        let mut e = RateEwma::new();
+        let t0 = Instant::now();
+        assert_eq!(e.rate(), 0.0);
+        assert!(e.idle_secs(t0).is_none());
+        e.observe(100, t0); // anchor only
+        assert_eq!(e.rate(), 0.0);
+        e.observe(8, t0 + Duration::from_millis(1)); // ~8 req/ms
+        let hot = e.rate();
+        assert!(hot > 1000.0, "burst must raise the rate, got {hot}");
+        e.observe(0, t0 + Duration::from_secs(1));
+        assert!(e.rate() < hot, "idle gap must decay the rate");
+        let idle = e.idle_secs(t0 + Duration::from_secs(3)).unwrap();
+        assert!((idle - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,605 @@
+//! Elastic shard autoscaling: a supervised dynamic shard pool plus the
+//! control law that steers it.
+//!
+//! The paper's deployment pitch is that low bit-width inference is
+//! cheap — and a *quantized* shard is also cheap to **replicate**: the
+//! checkpoint is LBW-quantized once
+//! ([`crate::coordinator::trainer::quantize_conv_layers`]) and every
+//! spawned shard reuses the shared projection
+//! (`DetectorModel::build_with_quants`), so scale-up costs one plan +
+//! arena + tile pool, not a fresh quantization pass. That makes shard
+//! count a *live* serving lever rather than a boot-time constant.
+//!
+//! Three pieces:
+//!
+//! * [`ShardPool`] — the dynamic shard set. Spawning registers a new
+//!   **shard generation** with the metrics hub and subscribes a new
+//!   queue consumer; retiring runs the **drain protocol**: flag the
+//!   shard's cancel token, [`crate::coordinator::queue::Monitor::kick`]
+//!   it awake, let it finish whatever batch it already popped, join the
+//!   thread, and mark the generation retired (its counters stay on the
+//!   books). No accepted request is ever dropped by a scale-down: a
+//!   cancelled shard stops *before* popping, so everything still queued
+//!   is served by the survivors.
+//! * [`decide`]/[`steer_batch`] — the pure control law, driven by the
+//!   same signals the adaptive window controller uses (EWMA arrival
+//!   rate, queue depth) plus the shed counter: scale up when the queue
+//!   outgrows what the live fleet absorbs in one batch round (or when
+//!   requests are shed), scale down after a sustained idle stretch,
+//!   and steer the effective `max_batch` between `batch_min` and the
+//!   configured maximum so light traffic is not held hostage to a
+//!   deep batch budget.
+//! * [`Supervisor`] — the background thread that ticks the control law
+//!   against a live [`ShardPool`].
+//!
+//! Scaling changes *placement*, never *math*: every generation builds
+//! from the same checkpoint and shared quantization, so outputs are
+//! bitwise identical to a fixed-shard run for any scaling schedule
+//! (pinned by `rust/tests/elastic_autoscale.rs`).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::adaptive::RateEwma;
+use crate::coordinator::metrics::ShardStats;
+use crate::coordinator::queue::Monitor;
+use crate::coordinator::server::{serve_loop, Request, ServerConfig, ShardCtl, ShardSetup};
+
+/// Builds the [`ShardSetup`] for a given shard generation — the seam
+/// through which the pool spawns shards at runtime. Engine mode
+/// captures the spec/checkpoint and the shared quantization; tests
+/// inject mock engines.
+pub type ShardFactory = Box<dyn Fn(usize) -> ShardSetup + Send + Sync>;
+
+/// Default upper shard bound: `LBW_SHARDS_MAX` when set, else 4.
+pub fn default_max_shards() -> usize {
+    std::env::var("LBW_SHARDS_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(4)
+}
+
+/// Supervisor knobs. Defaults are tuned for the synthetic detector's
+/// millisecond-scale batches; benches and tests tighten `tick` /
+/// `down_idle_ticks` to force events quickly.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Never drain below this many shards (≥ 1).
+    pub min_shards: usize,
+    /// Never spawn above this many shards (env `LBW_SHARDS_MAX`
+    /// seeds the default).
+    pub max_shards: usize,
+    /// Lower bound for the steered effective `max_batch` (the upper
+    /// bound is the server's configured `max_batch`, which also sizes
+    /// the per-shard plan arena — steering never exceeds it).
+    pub batch_min: usize,
+    /// Control-loop period.
+    pub tick: Duration,
+    /// Ticks to hold after any scale action (anti-flap hysteresis).
+    pub cooldown_ticks: u32,
+    /// Scale up when `depth > factor · live · eff_batch` — the queue
+    /// holds more than the whole fleet absorbs in one batch round.
+    pub up_depth_factor: f64,
+    /// Consecutive empty-queue ticks before one shard is drained.
+    pub down_idle_ticks: u32,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: default_max_shards(),
+            batch_min: 1,
+            tick: Duration::from_millis(5),
+            cooldown_ticks: 4,
+            up_depth_factor: 1.0,
+            down_idle_ticks: 40,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Clamp bounds into a usable shape (`1 ≤ min ≤ max`).
+    pub fn normalized(mut self) -> Self {
+        self.min_shards = self.min_shards.max(1);
+        self.max_shards = self.max_shards.max(self.min_shards);
+        self.batch_min = self.batch_min.max(1);
+        self
+    }
+}
+
+/// Scale events since server start — the bench's `"shards": "auto"`
+/// rows report these.
+#[derive(Debug, Default)]
+pub struct ScaleEvents {
+    ups: AtomicU64,
+    downs: AtomicU64,
+}
+
+impl ScaleEvents {
+    /// Shards spawned after startup (scale-ups).
+    pub fn ups(&self) -> u64 {
+        self.ups.load(Ordering::Relaxed)
+    }
+
+    /// Shards drained (scale-downs).
+    pub fn downs(&self) -> u64 {
+        self.downs.load(Ordering::Relaxed)
+    }
+}
+
+/// One tick's view of the load signals.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleSignals {
+    /// Requests queued right now.
+    pub depth: usize,
+    /// EWMA arrival rate, requests/second (the same estimator the
+    /// adaptive window controller runs per shard).
+    pub rate: f64,
+    /// Requests shed since the previous tick (admission-deadline
+    /// backpressure — the strongest "we are underwater" signal).
+    pub shed_delta: u64,
+    /// Requests answered with engine errors since the previous tick
+    /// (diagnostic; errors mean a sick engine, not load — more shards
+    /// would serve more errors, so the law does not scale on them).
+    pub err_delta: u64,
+    /// Live shards.
+    pub live: usize,
+    /// Effective max batch currently steered.
+    pub eff_batch: usize,
+}
+
+/// What the control law wants done this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    Up,
+    Down,
+    Hold,
+}
+
+/// The pure control law (unit-testable with synthetic signals).
+///
+/// * **Up** when the queue outgrows one batch round of the live fleet
+///   (`depth > up_depth_factor · live · eff_batch`), when requests
+///   were shed since the last tick, or when the EWMA arrival rate
+///   alone would overfill the fleet within one tick — bounded by
+///   `max_shards`.
+/// * **Down** after `down_idle_ticks` consecutive empty-queue ticks —
+///   bounded by `min_shards`.
+/// * **Hold** otherwise, and always while `cooldown` ticks remain.
+pub fn decide(
+    s: &ScaleSignals,
+    cfg: &AutoscaleConfig,
+    idle_ticks: u32,
+    cooldown: u32,
+) -> ScaleAction {
+    if cooldown > 0 {
+        return ScaleAction::Hold;
+    }
+    if s.live < cfg.min_shards {
+        return ScaleAction::Up; // below the floor (e.g. a shard died)
+    }
+    let absorb = cfg.up_depth_factor * (s.live * s.eff_batch) as f64;
+    let tick_arrivals = s.rate * cfg.tick.as_secs_f64();
+    if (s.depth as f64 > absorb || s.shed_delta > 0 || tick_arrivals > absorb)
+        && s.live < cfg.max_shards
+    {
+        return ScaleAction::Up;
+    }
+    if s.live > cfg.min_shards && idle_ticks >= cfg.down_idle_ticks {
+        return ScaleAction::Down;
+    }
+    ScaleAction::Hold
+}
+
+/// Steered effective `max_batch`: enough slots for each live shard to
+/// absorb its share of the current backlog in one round (plus one for
+/// the request a shard pops as its batch head), clamped to
+/// `[batch_min, batch_max]`. Deep queues open the full batch budget;
+/// an idle queue collapses it so light traffic serves small,
+/// latency-optimal batches.
+pub fn steer_batch(depth: usize, live: usize, batch_min: usize, batch_max: usize) -> usize {
+    let live = live.max(1);
+    let hi = batch_max.max(1);
+    let lo = batch_min.clamp(1, hi); // a floor above the cap must not panic the clamp
+    let per_shard = depth.div_ceil(live) + 1;
+    per_shard.clamp(lo, hi)
+}
+
+/// A live shard's handle inside the pool.
+struct ShardHandle {
+    gen: usize,
+    cancel: Arc<AtomicBool>,
+    join: JoinHandle<()>,
+}
+
+struct PoolInner {
+    live: Vec<ShardHandle>,
+}
+
+/// The supervised dynamic shard set: spawn and drain shards at
+/// runtime over one shared request queue. Both fixed and elastic
+/// servers run on this pool — a fixed server is simply a pool nobody
+/// ever rescales.
+pub struct ShardPool {
+    cfg: ServerConfig,
+    monitor: Monitor<Request>,
+    stats: Arc<ShardStats>,
+    /// Effective max batch every shard reads per loop iteration; the
+    /// supervisor steers it within `[1, cfg.max_batch]`.
+    eff_batch: Arc<AtomicUsize>,
+    factory: Option<ShardFactory>,
+    events: ScaleEvents,
+    inner: Mutex<PoolInner>,
+}
+
+impl ShardPool {
+    /// A pool over `monitor`'s queue. `factory` enables runtime
+    /// scale-up; without one the pool can still drain (scale down) but
+    /// not spawn beyond its initial shards.
+    pub fn new(
+        cfg: ServerConfig,
+        monitor: Monitor<Request>,
+        stats: Arc<ShardStats>,
+        factory: Option<ShardFactory>,
+    ) -> Self {
+        let eff_batch = Arc::new(AtomicUsize::new(cfg.max_batch.max(1)));
+        ShardPool {
+            cfg,
+            monitor,
+            stats,
+            eff_batch,
+            factory,
+            events: ScaleEvents::default(),
+            inner: Mutex::new(PoolInner { live: Vec::new() }),
+        }
+    }
+
+    /// Live shard count.
+    pub fn live(&self) -> usize {
+        self.inner.lock().unwrap().live.len()
+    }
+
+    /// Scale events since startup: `(ups, downs)`.
+    pub fn events(&self) -> (u64, u64) {
+        (self.events.ups(), self.events.downs())
+    }
+
+    /// The effective max batch shards are currently running with.
+    pub fn effective_max_batch(&self) -> usize {
+        self.eff_batch.load(Ordering::Relaxed)
+    }
+
+    /// Steer the effective max batch (clamped to `[1, cfg.max_batch]`
+    /// — the per-shard plan arena is sized for `cfg.max_batch` and can
+    /// never be exceeded).
+    pub fn steer_max_batch(&self, target: usize) {
+        let t = target.clamp(1, self.cfg.max_batch.max(1));
+        self.eff_batch.store(t, Ordering::Relaxed);
+    }
+
+    /// Queue observability for the supervisor.
+    pub fn monitor(&self) -> &Monitor<Request> {
+        &self.monitor
+    }
+
+    pub fn stats(&self) -> &Arc<ShardStats> {
+        &self.stats
+    }
+
+    /// Spawn one shard at startup (no scale-up event recorded).
+    pub fn spawn_initial(&self, setup: ShardSetup) -> Result<usize> {
+        self.spawn_inner(|_gen| setup)
+    }
+
+    /// Spawn one startup shard through the factory (no scale-up event
+    /// recorded — events count only runtime rescales).
+    pub fn spawn_initial_from_factory(&self) -> Result<usize> {
+        let factory = self
+            .factory
+            .as_ref()
+            .ok_or_else(|| anyhow!("this server has no shard factory (fixed pool)"))?;
+        self.spawn_inner(|g| factory(g))
+    }
+
+    /// Spawn one shard through the factory and count a scale-up event.
+    pub fn scale_up(&self) -> Result<usize> {
+        let factory = self
+            .factory
+            .as_ref()
+            .ok_or_else(|| anyhow!("this server has no shard factory (fixed pool)"))?;
+        let gen = self.spawn_inner(|g| factory(g))?;
+        self.events.ups.fetch_add(1, Ordering::Relaxed);
+        Ok(gen)
+    }
+
+    fn spawn_inner(&self, make: impl FnOnce(usize) -> ShardSetup) -> Result<usize> {
+        let (gen, shard_stats) = self.stats.register();
+        let setup = make(gen);
+        let rx = self.monitor.subscribe();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let ctl = ShardCtl { cancel: cancel.clone(), max_batch: self.eff_batch.clone() };
+        let shard_cfg = self.cfg.clone();
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let join = std::thread::Builder::new()
+            .name(format!("lbw-shard-g{gen}"))
+            .spawn(move || {
+                // per-shard engine construction happens on the shard's
+                // own thread (PJRT handles are not Send)
+                let infer = match setup(gen) {
+                    Ok(f) => {
+                        let _ = ready_tx.send(Ok(()));
+                        f
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                serve_loop(rx, &shard_cfg, shard_stats, ctl, infer);
+            })
+            .map_err(|e| anyhow!("spawning shard generation {gen}: {e}"))?;
+        let ready = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("shard generation {gen} died during startup"));
+        if let Err(e) = ready.and_then(|r| r) {
+            let _ = join.join();
+            // the shard never served: drop its generation outright so
+            // a supervisor retrying a failing factory cannot grow the
+            // registry tick after tick
+            self.stats.discard(gen);
+            return Err(e);
+        }
+        self.inner.lock().unwrap().live.push(ShardHandle { gen, cancel, join });
+        Ok(gen)
+    }
+
+    /// Retire the newest shard via the drain protocol: flag its cancel
+    /// token, kick it awake, let it finish the batch it already holds,
+    /// join the thread, and mark its generation retired (counters
+    /// survive in the merged stats). Returns the drained generation.
+    /// Refuses to drain the last shard — a zero-shard server would
+    /// strand every queued request.
+    pub fn drain_one(&self) -> Result<usize> {
+        let handle = {
+            let mut inner = self.inner.lock().unwrap();
+            anyhow::ensure!(inner.live.len() > 1, "cannot drain the last live shard");
+            inner.live.pop().expect("checked non-empty")
+        };
+        handle.cancel.store(true, Ordering::Release);
+        self.monitor.kick();
+        // synchronous: when this returns, the shard's in-flight batch
+        // has been served and its final stats are recorded
+        let _ = handle.join.join();
+        self.stats.retire(handle.gen);
+        // wake senders that sat out the drain window so they re-check
+        // capacity (see Sender::send_timeout's drain-safety notes)
+        self.monitor.kick();
+        self.events.downs.fetch_add(1, Ordering::Relaxed);
+        Ok(handle.gen)
+    }
+
+    /// Cancel and join every shard (startup-failure rollback).
+    pub fn abort_all(&self) {
+        let handles = {
+            let mut inner = self.inner.lock().unwrap();
+            std::mem::take(&mut inner.live)
+        };
+        for h in &handles {
+            h.cancel.store(true, Ordering::Release);
+        }
+        self.monitor.kick();
+        for h in handles {
+            let _ = h.join.join();
+            self.stats.retire(h.gen);
+        }
+    }
+
+    /// Join every shard after the queue has closed (server shutdown —
+    /// shards exit on their own once the queue is drained).
+    pub fn join_all(&self) {
+        let handles = {
+            let mut inner = self.inner.lock().unwrap();
+            std::mem::take(&mut inner.live)
+        };
+        for h in handles {
+            let _ = h.join.join();
+        }
+    }
+}
+
+/// The background control loop: ticks the law against a live pool
+/// until the queue closes.
+pub struct Supervisor;
+
+impl Supervisor {
+    /// Spawn the supervisor thread. It exits (without joining shards —
+    /// shutdown does that) once the request queue closes.
+    pub fn spawn(pool: Arc<ShardPool>, auto: AutoscaleConfig) -> JoinHandle<()> {
+        let auto = auto.normalized();
+        std::thread::Builder::new()
+            .name("lbw-autoscale".into())
+            .spawn(move || Self::run(&pool, &auto))
+            .expect("spawning autoscale supervisor")
+    }
+
+    fn run(pool: &ShardPool, auto: &AutoscaleConfig) {
+        let mut ewma = RateEwma::new();
+        let mut last_served: u64 = 0;
+        let mut last_shed: u64 = 0;
+        let mut last_err: u64 = 0;
+        let mut last_depth: usize = 0;
+        let mut idle_ticks: u32 = 0;
+        let mut cooldown: u32 = 0;
+        loop {
+            if pool.monitor().is_closed() {
+                return; // server shutting down; shards drain themselves
+            }
+            std::thread::sleep(auto.tick);
+            let now = std::time::Instant::now();
+            let depth = pool.monitor().depth();
+            let (served, shed, err) = pool.stats().counter_totals();
+            // arrivals since last tick ≈ newly-finished (served + shed)
+            // plus queue growth; clamped at zero when the queue drains
+            let finished = (served + shed).saturating_sub(last_served + last_shed);
+            let arrived = (finished as i64 + depth as i64 - last_depth as i64).max(0) as usize;
+            ewma.observe(arrived, now);
+            let live = pool.live();
+            let eff = steer_batch(depth, live, auto.batch_min, pool.cfg.max_batch);
+            pool.steer_max_batch(eff);
+            if depth == 0 {
+                idle_ticks = idle_ticks.saturating_add(1);
+            } else {
+                idle_ticks = 0;
+            }
+            let signals = ScaleSignals {
+                depth,
+                rate: ewma.rate(),
+                shed_delta: shed.saturating_sub(last_shed),
+                err_delta: err.saturating_sub(last_err),
+                live,
+                eff_batch: eff,
+            };
+            cooldown = cooldown.saturating_sub(1);
+            match decide(&signals, auto, idle_ticks, cooldown) {
+                ScaleAction::Up => {
+                    // cooldown on failure too: a failing factory must
+                    // back off, not be hammered every tick
+                    let _ = pool.scale_up();
+                    cooldown = auto.cooldown_ticks.max(1);
+                }
+                ScaleAction::Down => {
+                    let _ = pool.drain_one();
+                    cooldown = auto.cooldown_ticks.max(1);
+                    idle_ticks = 0;
+                }
+                ScaleAction::Hold => {}
+            }
+            last_served = served;
+            last_shed = shed;
+            last_err = err;
+            last_depth = depth;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            batch_min: 1,
+            tick: Duration::from_millis(5),
+            cooldown_ticks: 4,
+            up_depth_factor: 1.0,
+            down_idle_ticks: 10,
+        }
+    }
+
+    fn signals(depth: usize, live: usize, eff_batch: usize) -> ScaleSignals {
+        ScaleSignals { depth, rate: 0.0, shed_delta: 0, err_delta: 0, live, eff_batch }
+    }
+
+    #[test]
+    fn deep_queue_scales_up_until_the_cap() {
+        let c = cfg();
+        // depth 20 > 1 shard x 8 batch -> up
+        assert_eq!(decide(&signals(20, 1, 8), &c, 0, 0), ScaleAction::Up);
+        // still deeper than 2x8 -> up again
+        assert_eq!(decide(&signals(20, 2, 8), &c, 0, 0), ScaleAction::Up);
+        // at the cap: hold no matter how deep
+        assert_eq!(decide(&signals(500, 4, 8), &c, 0, 0), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn shed_requests_force_scale_up() {
+        let c = cfg();
+        let mut s = signals(0, 1, 8);
+        s.shed_delta = 3;
+        assert_eq!(decide(&s, &c, 0, 0), ScaleAction::Up);
+        // errors alone do not: a sick engine is not a load problem
+        let mut s = signals(0, 1, 8);
+        s.err_delta = 3;
+        assert_eq!(decide(&s, &c, 0, 0), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn sustained_idle_drains_down_to_the_floor() {
+        let c = cfg();
+        assert_eq!(decide(&signals(0, 3, 8), &c, 9, 0), ScaleAction::Hold, "not idle long enough");
+        assert_eq!(decide(&signals(0, 3, 8), &c, 10, 0), ScaleAction::Down);
+        // at the floor: hold forever
+        assert_eq!(decide(&signals(0, 1, 8), &c, 1000, 0), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn cooldown_suppresses_everything() {
+        let c = cfg();
+        assert_eq!(decide(&signals(100, 1, 8), &c, 0, 1), ScaleAction::Hold);
+        assert_eq!(decide(&signals(0, 3, 8), &c, 100, 2), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn below_floor_recovers() {
+        let c = AutoscaleConfig { min_shards: 2, ..cfg() };
+        assert_eq!(decide(&signals(0, 1, 8), &c, 0, 0), ScaleAction::Up);
+    }
+
+    #[test]
+    fn rate_pressure_scales_up_before_the_queue_backs_up() {
+        let c = cfg();
+        let mut s = signals(0, 1, 4);
+        // 2000 req/s x 5ms tick = 10 expected arrivals > 1x4 absorb
+        s.rate = 2000.0;
+        assert_eq!(decide(&s, &c, 0, 0), ScaleAction::Up);
+        s.rate = 100.0; // 0.5 per tick: comfortably absorbed
+        assert_eq!(decide(&s, &c, 0, 0), ScaleAction::Hold);
+    }
+
+    #[test]
+    fn steer_batch_tracks_backlog_per_shard() {
+        // idle queue collapses to the floor
+        assert_eq!(steer_batch(0, 2, 1, 8), 1);
+        assert_eq!(steer_batch(0, 2, 3, 8), 3, "respects batch_min");
+        // backlog spreads over live shards, +1 for the popped head
+        assert_eq!(steer_batch(6, 2, 1, 8), 4);
+        // deep backlog opens the full budget, never beyond batch_max
+        assert_eq!(steer_batch(100, 2, 1, 8), 8);
+        // degenerate inputs stay sane
+        assert_eq!(steer_batch(5, 0, 1, 8), 6);
+        assert_eq!(steer_batch(0, 1, 0, 0), 1);
+    }
+
+    #[test]
+    fn normalized_clamps_bounds() {
+        let c = AutoscaleConfig {
+            min_shards: 0,
+            max_shards: 0,
+            batch_min: 0,
+            ..AutoscaleConfig::default()
+        }
+        .normalized();
+        assert_eq!((c.min_shards, c.max_shards, c.batch_min), (1, 1, 1));
+        let c = AutoscaleConfig { min_shards: 5, max_shards: 2, ..AutoscaleConfig::default() }
+            .normalized();
+        assert_eq!((c.min_shards, c.max_shards), (5, 5));
+    }
+
+    #[test]
+    fn default_max_shards_honours_env_shape() {
+        // cannot mutate the process env safely in a threaded test run;
+        // just pin the no-env default
+        if std::env::var("LBW_SHARDS_MAX").is_err() {
+            assert_eq!(default_max_shards(), 4);
+        }
+    }
+}

@@ -289,54 +289,227 @@ impl LatencySnapshot {
     }
 }
 
+/// One shard generation's slot in the registry: the recorder plus
+/// whether the shard is still live. Retired slots keep their recorder —
+/// a drained shard's counters must survive in the merged aggregate, or
+/// scale-down would silently erase served requests from the books.
+#[derive(Debug)]
+struct ShardSlot {
+    /// Shard generation — a monotonically increasing id. Fixed pools
+    /// use generations 0..n; the elastic pool keeps minting new ones
+    /// as shards are spawned, so a generation is never reused.
+    gen: usize,
+    stats: Arc<Mutex<LatencyStats>>,
+    live: bool,
+}
+
+/// Retired generations kept individually before being folded into the
+/// accumulated-history recorder. Bounds registry growth on a
+/// long-lived elastic server (every drain retires a generation) while
+/// keeping the most recent drains individually inspectable.
+pub const RETIRED_KEEP: usize = 64;
+
+#[derive(Debug)]
+struct Registry {
+    slots: Vec<ShardSlot>,
+    /// Next generation id to mint — explicit (not derived from the
+    /// last slot) so folding or discarding slots can never cause a
+    /// generation id to be reused.
+    next_gen: usize,
+    /// Generations folded out of `slots`: their counters merge here
+    /// exactly (totals never lose a request); only per-generation
+    /// detail is dropped.
+    folded: LatencyStats,
+    folded_gens: usize,
+}
+
+impl Registry {
+    fn fold_excess(&mut self) {
+        while self.slots.iter().filter(|s| !s.live).count() > RETIRED_KEEP {
+            let i = self
+                .slots
+                .iter()
+                .position(|s| !s.live)
+                .expect("counted at least one retired slot");
+            let slot = self.slots.remove(i);
+            self.folded.merge(&slot.stats.lock().unwrap());
+            self.folded_gens += 1;
+        }
+    }
+}
+
 /// Shared per-shard latency recorders plus the aggregate view — the
-/// server hands shard `i` the `Arc` from [`ShardStats::shard`] and the
-/// client handle reads the merged aggregate.
-#[derive(Debug, Clone)]
+/// server hands each shard generation the `Arc` from
+/// [`ShardStats::register`] (or [`ShardStats::shard`] for fixed
+/// pools) and the client handle reads the merged aggregate.
+///
+/// Shard **generations**: the elastic pool spawns and retires shards
+/// at runtime. Registration mints a new generation; retirement flips
+/// the slot to retired without discarding its counters, so
+/// [`ShardStats::merged`] and [`ShardStats::summary`] always account
+/// for every request ever served, across every generation that ever
+/// lived. The registry stays bounded: beyond [`RETIRED_KEEP`] retired
+/// generations, the oldest fold into one accumulated-history recorder
+/// (exact totals, per-generation detail dropped), and a failed spawn's
+/// never-served generation is discarded outright.
+#[derive(Debug)]
 pub struct ShardStats {
-    shards: Vec<Arc<Mutex<LatencyStats>>>,
+    inner: Mutex<Registry>,
 }
 
 impl ShardStats {
+    /// A registry pre-seeded with `shards` live generations (0..n) —
+    /// the fixed-pool constructor.
     pub fn new(shards: usize) -> Self {
+        let n = shards.max(1);
         ShardStats {
-            shards: (0..shards.max(1))
-                .map(|_| Arc::new(Mutex::new(LatencyStats::new())))
-                .collect(),
+            inner: Mutex::new(Registry {
+                slots: (0..n)
+                    .map(|gen| ShardSlot {
+                        gen,
+                        stats: Arc::new(Mutex::new(LatencyStats::new())),
+                        live: true,
+                    })
+                    .collect(),
+                next_gen: n,
+                folded: LatencyStats::new(),
+                folded_gens: 0,
+            }),
         }
     }
 
+    /// An empty registry — the elastic pool registers every generation
+    /// itself.
+    pub fn empty() -> Self {
+        ShardStats {
+            inner: Mutex::new(Registry {
+                slots: Vec::new(),
+                next_gen: 0,
+                folded: LatencyStats::new(),
+                folded_gens: 0,
+            }),
+        }
+    }
+
+    /// Mint the next shard generation and return `(gen, recorder)`.
+    pub fn register(&self) -> (usize, Arc<Mutex<LatencyStats>>) {
+        let mut reg = self.inner.lock().unwrap();
+        let gen = reg.next_gen;
+        reg.next_gen += 1;
+        let stats = Arc::new(Mutex::new(LatencyStats::new()));
+        reg.slots.push(ShardSlot { gen, stats: stats.clone(), live: true });
+        reg.fold_excess();
+        (gen, stats)
+    }
+
+    /// Mark generation `gen` retired (drained). Its recorder — and
+    /// every counter in it — stays in the registry and keeps counting
+    /// toward [`ShardStats::merged`].
+    pub fn retire(&self, gen: usize) {
+        let mut reg = self.inner.lock().unwrap();
+        if let Some(s) = reg.slots.iter_mut().find(|s| s.gen == gen) {
+            s.live = false;
+        }
+        reg.fold_excess();
+    }
+
+    /// Roll back a generation whose shard never started (spawn
+    /// failure): if it recorded nothing, the slot is removed entirely
+    /// — a supervisor retrying a failing factory must not grow the
+    /// registry — otherwise it degrades to [`ShardStats::retire`].
+    pub fn discard(&self, gen: usize) {
+        let mut reg = self.inner.lock().unwrap();
+        if let Some(i) = reg.slots.iter().position(|s| s.gen == gen) {
+            let untouched = {
+                let g = reg.slots[i].stats.lock().unwrap();
+                g.count == 0 && g.batches == 0 && g.shed == 0 && g.errors == 0
+            };
+            if untouched {
+                reg.slots.remove(i);
+            } else {
+                reg.slots[i].live = false;
+            }
+        }
+    }
+
+    /// Live shard count (retired generations excluded).
     pub fn num_shards(&self) -> usize {
-        self.shards.len()
+        self.inner.lock().unwrap().slots.iter().filter(|s| s.live).count()
     }
 
-    /// The recorder owned by shard `i`.
+    /// Generations ever registered and not discarded, live, retired,
+    /// or folded.
+    pub fn num_generations(&self) -> usize {
+        let reg = self.inner.lock().unwrap();
+        reg.slots.len() + reg.folded_gens
+    }
+
+    /// The recorder owned by the `i`-th generation (fixed pools index
+    /// their shards 0..n).
     pub fn shard(&self, i: usize) -> Arc<Mutex<LatencyStats>> {
-        self.shards[i].clone()
+        self.inner.lock().unwrap().slots[i].stats.clone()
     }
 
-    /// Snapshot of each shard's recorder.
+    /// Snapshot of each generation's recorder, in generation order —
+    /// retired generations included (plus one trailing accumulator
+    /// entry once old generations have been folded), so per-shard
+    /// counts always sum to the aggregate.
     pub fn per_shard(&self) -> Vec<LatencyStats> {
-        self.shards.iter().map(|s| s.lock().unwrap().clone()).collect()
-    }
-
-    /// All shards merged into one aggregate recorder. The aggregate's
-    /// window is sized at shards × [`DEFAULT_WINDOW`], so every
-    /// shard's retained samples survive the merge — percentiles cover
-    /// the whole pool, not whichever shard merged last.
-    pub fn merged(&self) -> LatencyStats {
-        let mut all = LatencyStats::with_window(DEFAULT_WINDOW * self.shards.len().max(1));
-        for s in &self.shards {
-            all.merge(&s.lock().unwrap());
+        let reg = self.inner.lock().unwrap();
+        let mut all: Vec<LatencyStats> =
+            reg.slots.iter().map(|s| s.stats.lock().unwrap().clone()).collect();
+        if reg.folded_gens > 0 {
+            all.push(reg.folded.clone());
         }
         all
     }
 
-    /// One-line report: aggregate percentiles + per-shard request
-    /// counts (the load-balance picture at a glance).
+    /// Cheap counter totals across every generation —
+    /// `(requests, shed, errors)` — without cloning any percentile
+    /// window. The autoscale supervisor polls this every tick.
+    pub fn counter_totals(&self) -> (u64, u64, u64) {
+        let reg = self.inner.lock().unwrap();
+        let mut t = (reg.folded.count, reg.folded.shed, reg.folded.errors);
+        for s in reg.slots.iter() {
+            let g = s.stats.lock().unwrap();
+            t.0 += g.count;
+            t.1 += g.shed;
+            t.2 += g.errors;
+        }
+        t
+    }
+
+    /// All generations merged into one aggregate recorder — retired
+    /// and folded shards included. The aggregate's window is sized at
+    /// generations × [`DEFAULT_WINDOW`], so every retained sample
+    /// survives the merge — percentiles cover the whole pool's
+    /// history, not whichever shard merged last.
+    pub fn merged(&self) -> LatencyStats {
+        let reg = self.inner.lock().unwrap();
+        let mut all = LatencyStats::with_window(DEFAULT_WINDOW * (reg.slots.len() + 1).max(1));
+        all.merge(&reg.folded);
+        for s in reg.slots.iter() {
+            all.merge(&s.stats.lock().unwrap());
+        }
+        all
+    }
+
+    /// One-line report: aggregate percentiles + per-generation request
+    /// counts (the load-balance picture at a glance). Retired
+    /// generations render in parentheses — `shard_n=[40,(12),8]` reads
+    /// "gen 1 was drained after serving 12" — and folded history as
+    /// one `(+k gens: n)` entry.
     pub fn summary(&self) -> String {
-        let counts: Vec<String> =
-            self.per_shard().iter().map(|s| s.count().to_string()).collect();
+        let reg = self.inner.lock().unwrap();
+        let mut counts: Vec<String> = Vec::with_capacity(reg.slots.len() + 1);
+        if reg.folded_gens > 0 {
+            counts.push(format!("(+{} gens: {})", reg.folded_gens, reg.folded.count()));
+        }
+        for s in reg.slots.iter() {
+            let n = s.stats.lock().unwrap().count();
+            counts.push(if s.live { n.to_string() } else { format!("({n})") });
+        }
+        drop(reg);
         format!("{} shard_n=[{}]", self.merged().summary(), counts.join(","))
     }
 }
@@ -523,6 +696,111 @@ mod tests {
             l.record(Duration::from_millis(1));
         }
         assert!((l.throughput(Duration::from_secs(2)) - 25.0).abs() < 1e-9);
+    }
+
+    /// Scale-down must not cook the books: a retired generation's
+    /// counters survive in `merged()`, `per_shard()`, and the summary.
+    #[test]
+    fn retired_generations_survive_the_merge() {
+        let hub = ShardStats::empty();
+        let (g0, s0) = hub.register();
+        let (g1, s1) = hub.register();
+        assert_eq!((g0, g1), (0, 1));
+        for _ in 0..5 {
+            s0.lock().unwrap().record(Duration::from_millis(10));
+        }
+        s0.lock().unwrap().record_batch();
+        for _ in 0..3 {
+            s1.lock().unwrap().record(Duration::from_millis(20));
+        }
+        s1.lock().unwrap().record_batch();
+        s1.lock().unwrap().record_shed(2);
+
+        hub.retire(g1);
+        assert_eq!(hub.num_shards(), 1, "retired generations leave the live count");
+        assert_eq!(hub.num_generations(), 2);
+        let merged = hub.merged();
+        assert_eq!(merged.count(), 8, "retired shard's requests stay on the books");
+        assert_eq!(merged.batches(), 2);
+        assert_eq!(merged.shed(), 2);
+        let per = hub.per_shard();
+        assert_eq!(per.iter().map(|s| s.count()).collect::<Vec<_>>(), vec![5, 3]);
+        let s = hub.summary();
+        assert!(s.contains("shard_n=[5,(3)]"), "retired gen renders in parens: {s}");
+
+        // a replacement mints a fresh generation, never reuses gen 1
+        let (g2, _s2) = hub.register();
+        assert_eq!(g2, 2);
+        assert_eq!(hub.num_shards(), 2);
+    }
+
+    /// A failed spawn's generation must vanish (a supervisor retrying
+    /// a broken factory cannot grow the registry), while a generation
+    /// that served anything degrades to a normal retire.
+    #[test]
+    fn discard_removes_never_served_generations() {
+        let hub = ShardStats::empty();
+        let (_g0, _s0) = hub.register();
+        for _ in 0..100 {
+            let (g, _s) = hub.register();
+            hub.discard(g);
+        }
+        assert_eq!(hub.num_generations(), 1, "failed spawns leave no trace");
+        let (g1, s1) = hub.register();
+        s1.lock().unwrap().record(Duration::from_millis(1));
+        hub.discard(g1);
+        assert_eq!(hub.num_generations(), 2, "a serving generation is retired, not erased");
+        assert_eq!(hub.merged().count(), 1);
+        // generation ids are never reused even after discards
+        let (g2, _s2) = hub.register();
+        assert_eq!(g2, 102);
+    }
+
+    /// Beyond RETIRED_KEEP retired generations, the oldest fold into
+    /// one accumulated-history entry — the registry stays bounded but
+    /// the totals never lose a request.
+    #[test]
+    fn old_retired_generations_fold_but_totals_stay_exact() {
+        let hub = ShardStats::empty();
+        let (_g_live, live) = hub.register();
+        let total = RETIRED_KEEP + 10;
+        for _ in 0..total {
+            let (g, s) = hub.register();
+            s.lock().unwrap().record(Duration::from_millis(5));
+            hub.retire(g);
+        }
+        live.lock().unwrap().record(Duration::from_millis(1));
+        assert_eq!(hub.num_shards(), 1);
+        assert_eq!(hub.num_generations(), 1 + total, "folded generations still counted");
+        assert!(
+            hub.per_shard().len() < 1 + total,
+            "the slot list must stay bounded after folding"
+        );
+        assert_eq!(hub.merged().count(), total + 1, "folding must not lose a single request");
+        let per_sum: usize = hub.per_shard().iter().map(|s| s.count()).sum();
+        assert_eq!(per_sum, total + 1, "per-shard view includes the folded accumulator");
+        assert_eq!(hub.counter_totals().0, (total + 1) as u64);
+        let s = hub.summary();
+        assert!(s.contains("gens:"), "folded history must be visible: {s}");
+    }
+
+    #[test]
+    fn counter_totals_are_cheap_and_cover_all_generations() {
+        let hub = ShardStats::new(2);
+        {
+            let s = hub.shard(0);
+            let mut g = s.lock().unwrap();
+            g.record(Duration::from_millis(1));
+            g.record_shed(4);
+        }
+        {
+            let s = hub.shard(1);
+            let mut g = s.lock().unwrap();
+            g.record(Duration::from_millis(1));
+            g.record(Duration::from_millis(1));
+            g.record_failed_batch(3);
+        }
+        assert_eq!(hub.counter_totals(), (3, 4, 3));
     }
 
     #[test]

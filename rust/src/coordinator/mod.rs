@@ -4,6 +4,7 @@
 //! artifacts (training/infer) or the native engines (deployment).
 
 pub mod adaptive;
+pub mod autoscale;
 pub mod init;
 pub mod inq;
 pub mod metrics;

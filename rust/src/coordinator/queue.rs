@@ -13,9 +13,16 @@
 //!   work-conserving (an idle shard always steals the next request),
 //! * **graceful close** — dropping the last [`Sender`] closes the
 //!   channel; consumers drain whatever is queued and then observe
-//!   `Closed`, so shutdown never abandons accepted requests.
+//!   `Closed`, so shutdown never abandons accepted requests,
+//! * **per-consumer drain** — the elastic shard pool retires one shard
+//!   at a time: the supervisor flags the shard's cancel token, calls
+//!   [`Monitor::kick`], and the shard's [`Receiver::recv_cancellable`]
+//!   returns [`Recv::Cancelled`] instead of popping another request.
+//!   Everything still queued stays in the buffer for the surviving
+//!   consumers, so scale-down never drops an accepted request.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -35,6 +42,9 @@ pub enum Recv<T> {
     Timeout,
     /// Closed *and* drained — the consumer should exit.
     Closed,
+    /// This consumer's cancel token was set (shard drain): stop popping
+    /// and exit. Queued items stay buffered for surviving consumers.
+    Cancelled,
 }
 
 struct State<T> {
@@ -96,6 +106,17 @@ impl<T> Sender<T> {
 
     /// Push, waiting at most `timeout` for space. `Duration::ZERO`
     /// degenerates to [`Sender::try_send`].
+    ///
+    /// Drain-safe: while a shard drain is in progress the queue may
+    /// momentarily have nobody popping — even *zero* active consumers
+    /// during a 1→1 shard replacement. Backpressure must NOT be
+    /// reported early in that window ("nobody is popping" would be a
+    /// tempting fast-fail, and a wrong one): the loop always waits out
+    /// the timeout and re-checks capacity after every wake, so once
+    /// the drain completes (the pool [`Monitor::kick`]s, and the
+    /// replacement shard's pops notify `not_full`) a blocked submit
+    /// proceeds instead of surfacing a spurious "queue full" to the
+    /// client.
     pub fn send_timeout(&self, v: T, timeout: Duration) -> Result<(), SendError<T>> {
         let deadline = Instant::now() + timeout;
         let mut st = self.shared.state.lock().unwrap();
@@ -206,6 +227,93 @@ impl<T> Receiver<T> {
     pub fn depth(&self) -> usize {
         self.shared.state.lock().unwrap().buf.len()
     }
+
+    /// Blocking pop that also honours a drain token: returns
+    /// [`Recv::Cancelled`] as soon as `cancel` is observed set —
+    /// checked *before* popping, so a retiring consumer never takes a
+    /// request it will not serve (the buffer stays intact for the
+    /// surviving consumers). The canceller must call [`Monitor::kick`]
+    /// after setting the flag so a consumer parked on an empty queue
+    /// wakes up and notices.
+    pub fn recv_cancellable(&self, cancel: &AtomicBool) -> Recv<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if cancel.load(Ordering::Acquire) {
+                return Recv::Cancelled;
+            }
+            if let Some(v) = st.buf.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return Recv::Item(v);
+            }
+            if st.closed {
+                return Recv::Closed;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// A control-plane view of this queue (does not count as a
+    /// consumer).
+    pub fn monitor(&self) -> Monitor<T> {
+        Monitor { shared: self.shared.clone() }
+    }
+}
+
+/// Control-plane handle for the elastic supervisor: observe depth,
+/// wake parked threads, subscribe new consumers. Unlike a [`Receiver`]
+/// clone it does **not** count toward the consumer count, so holding
+/// one never keeps the channel alive past its last real consumer (the
+/// all-shards-died cleanup that releases buffered requests still
+/// fires).
+pub struct Monitor<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for Monitor<T> {
+    fn clone(&self) -> Self {
+        Monitor { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Monitor<T> {
+    /// Requests currently buffered (snapshot).
+    pub fn depth(&self) -> usize {
+        self.shared.state.lock().unwrap().buf.len()
+    }
+
+    /// True once the channel is closed (senders gone, `close()` called,
+    /// or every consumer died).
+    pub fn is_closed(&self) -> bool {
+        self.shared.state.lock().unwrap().closed
+    }
+
+    /// Wake every parked producer and consumer so they re-check their
+    /// predicates — the drain protocol's wake-up call after setting a
+    /// cancel token.
+    ///
+    /// Lock-then-notify: cancel tokens are `AtomicBool`s mutated
+    /// *outside* the state mutex, so a consumer can sit between its
+    /// token check and its condvar park while still holding the lock.
+    /// Acquiring (and releasing) the mutex here orders this wake-up
+    /// after that park — the notification cannot fall into the
+    /// check/park window and be lost, which would otherwise leave a
+    /// drained shard parked forever on an idle queue (and
+    /// `drain_one`'s join wedged behind it).
+    pub fn kick(&self) {
+        drop(self.shared.state.lock().unwrap());
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+
+    /// Register a new consumer (elastic scale-up). If the channel
+    /// already closed the new [`Receiver`] observes `Closed`
+    /// immediately — a shard spawned into a dying server exits cleanly.
+    pub fn subscribe(&self) -> Receiver<T> {
+        self.shared.state.lock().unwrap().receivers += 1;
+        Receiver { shared: self.shared.clone() }
+    }
+
 }
 
 impl<T> Clone for Receiver<T> {
@@ -355,6 +463,82 @@ mod tests {
             other => panic!("expected Timeout, got {other:?}"),
         }
         assert!(t0.elapsed() >= Duration::from_millis(8));
+    }
+
+    #[test]
+    fn recv_cancellable_stops_before_popping() {
+        let (tx, rx) = bounded(8);
+        for i in 0..3 {
+            tx.try_send(i).unwrap();
+        }
+        let cancel = AtomicBool::new(true);
+        // cancel wins over a non-empty buffer: the retiring consumer
+        // must not take a request it will not serve
+        assert!(matches!(rx.recv_cancellable(&cancel), Recv::Cancelled));
+        assert_eq!(rx.depth(), 3, "cancelled pop must leave the buffer intact");
+        cancel.store(false, Ordering::Release);
+        assert!(matches!(rx.recv_cancellable(&cancel), Recv::Item(0)));
+    }
+
+    #[test]
+    fn kick_wakes_a_parked_cancellable_consumer() {
+        let (_tx, rx) = bounded::<i32>(4);
+        let cancel = Arc::new(AtomicBool::new(false));
+        let mon = rx.monitor();
+        let c = cancel.clone();
+        let t = thread::spawn(move || rx.recv_cancellable(&c));
+        thread::sleep(Duration::from_millis(30)); // consumer parks on empty queue
+        cancel.store(true, Ordering::Release);
+        mon.kick();
+        assert!(matches!(t.join().unwrap(), Recv::Cancelled));
+    }
+
+    /// The drain-window backpressure regression: a submit blocked on a
+    /// full queue while the only consumer is draining must NOT report
+    /// backpressure early — when the drain completes and a replacement
+    /// consumer frees capacity within the timeout, the submit succeeds.
+    #[test]
+    fn send_timeout_rechecks_capacity_after_drain_completes() {
+        let (tx, rx) = bounded(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap(); // full
+        let cancel = Arc::new(AtomicBool::new(true));
+        let mon = rx.monitor();
+        mon.kick();
+        // the sole consumer observes its cancel token and stops popping
+        assert!(matches!(rx.recv_cancellable(&cancel), Recv::Cancelled));
+        let sender = {
+            let tx = tx.clone();
+            thread::spawn(move || tx.send_timeout(3, Duration::from_secs(5)))
+        };
+        thread::sleep(Duration::from_millis(40)); // sender is now parked on the full queue
+        // drain completes; a replacement consumer registers and pops
+        let replacement = mon.subscribe();
+        drop(rx);
+        mon.kick();
+        assert_eq!(replacement.recv(), Some(1));
+        assert!(
+            sender.join().unwrap().is_ok(),
+            "submit must re-check capacity after the drain instead of reporting backpressure"
+        );
+        assert_eq!(replacement.recv(), Some(2));
+        assert_eq!(replacement.recv(), Some(3));
+    }
+
+    #[test]
+    fn monitor_is_control_plane_only() {
+        let (tx, rx) = bounded(4);
+        let mon = rx.monitor();
+        tx.try_send(7).unwrap();
+        assert_eq!(mon.depth(), 1);
+        assert!(!mon.is_closed());
+        // a monitor is not a consumer: dropping the last receiver still
+        // closes the channel and releases the buffer
+        drop(rx);
+        assert!(mon.is_closed());
+        assert!(matches!(tx.try_send(8), Err(SendError::Closed(8))));
+        // a late subscriber on the closed channel exits immediately
+        assert!(mon.subscribe().recv().is_none());
     }
 
     #[test]

@@ -11,6 +11,15 @@
 //! recorders merge into the aggregate view in
 //! [`crate::coordinator::metrics`].
 //!
+//! The shard set is a **supervised dynamic pool**
+//! ([`crate::coordinator::autoscale::ShardPool`]), not a fixed-at-start
+//! array: with `ServerConfig::autoscale` set, a supervisor thread
+//! spawns shards under load (reusing the quantize-once checkpoint
+//! projection — a memory-light operation for a low bit-width engine)
+//! and retires them through a drain protocol when traffic recedes.
+//! Scaling changes placement only; outputs stay bitwise identical to a
+//! fixed-shard run for any scaling schedule.
+//!
 //! Two engine modes share this loop:
 //!
 //! * **engine mode** ([`DetectServer::start_engine`]) — the pure-Rust
@@ -27,6 +36,7 @@
 //! of blocking forever — callers shed load instead of deadlocking the
 //! fleet.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -36,6 +46,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::consts::{GRID, IMG, NUM_CLS};
 use crate::coordinator::adaptive::AdaptiveWindow;
 pub use crate::coordinator::adaptive::WindowMode;
+pub use crate::coordinator::autoscale::{AutoscaleConfig, ShardFactory};
+use crate::coordinator::autoscale::{ShardPool, Supervisor};
 use crate::coordinator::metrics::{LatencyStats, ShardStats};
 use crate::coordinator::params::{Checkpoint, ParamSpec};
 use crate::coordinator::queue::{self, Recv, SendError};
@@ -98,6 +110,12 @@ pub struct ServerConfig {
     pub pad_batch: usize,
     /// Engine-mode executor variant (ignored by the artifact path).
     pub executor: Executor,
+    /// Elastic autoscaling: `Some` starts a supervisor that scales the
+    /// live shard set (and steers the effective `max_batch`) between
+    /// the configured bounds from live load; `None` keeps the classic
+    /// fixed-at-start pool. `shards` is the *initial* shard count
+    /// either way (clamped into the autoscale bounds when enabled).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 /// Default per-shard thread count: `LBW_THREADS` when set (CI runs the
@@ -134,6 +152,30 @@ impl Default for ServerConfig {
             submit_timeout: Duration::from_secs(5),
             pad_batch: 1,
             executor: Executor::Planned,
+            autoscale: None,
+        }
+    }
+}
+
+/// Per-shard control handles: the drain cancel token and the shared
+/// effective-max-batch cell the autoscale supervisor steers. Fixed
+/// pools use [`ShardCtl::fixed`], which never cancels and pins the
+/// effective batch at the configured maximum.
+pub struct ShardCtl {
+    /// Drain token: once set (and the queue kicked) the shard stops
+    /// popping, finishes nothing it has not already taken, and exits.
+    pub cancel: Arc<AtomicBool>,
+    /// Effective max batch, read once per batch head; always clamped
+    /// to `[1, cfg.max_batch]` (the plan arena's capacity).
+    pub max_batch: Arc<AtomicUsize>,
+}
+
+impl ShardCtl {
+    /// Control handles for a shard nobody will ever drain or steer.
+    pub fn fixed(max_batch: usize) -> Self {
+        ShardCtl {
+            cancel: Arc::new(AtomicBool::new(false)),
+            max_batch: Arc::new(AtomicUsize::new(max_batch.max(1))),
         }
     }
 }
@@ -217,11 +259,13 @@ pub type InferFn = Box<dyn FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>>
 /// must be created in-thread). Receives the shard index.
 pub type ShardSetup = Box<dyn FnOnce(usize) -> Result<InferFn> + Send>;
 
-/// The detection server: a shard pool over one bounded request queue.
+/// The detection server: a supervised dynamic shard pool over one
+/// bounded request queue.
 pub struct DetectServer {
     handle: DetectHandle,
     stats: Arc<ShardStats>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    pool: Arc<ShardPool>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl DetectServer {
@@ -244,27 +288,25 @@ impl DetectServer {
         let artifact = format!("infer_{arch}_b{bits}_bs{}", crate::consts::TRAIN_BATCH);
         let params = Arc::new(params);
         let state = Arc::new(state);
-        let setups: Vec<ShardSetup> = (0..cfg.shards.max(1))
-            .map(|_| {
-                let artifact = artifact.clone();
-                let params = params.clone();
-                let state = state.clone();
-                Box::new(move |_shard: usize| -> Result<InferFn> {
-                    let rt = Runtime::open_default()?;
-                    let exe = rt.load(&artifact)?;
-                    Ok(Box::new(move |images: &[f32], batch: usize| {
-                        let _keep_alive = &rt; // executable outlives via shard thread
-                        let out = exe.run(&[
-                            lit_f32(&params, &[params.len()])?,
-                            lit_f32(&state, &[state.len()])?,
-                            lit_f32(images, &[batch, IMG, IMG, 3])?,
-                        ])?;
-                        Ok((to_f32(&out[0])?, to_f32(&out[1])?))
-                    }))
-                }) as ShardSetup
-            })
-            .collect();
-        Self::start_with(cfg, setups)
+        let factory: ShardFactory = Box::new(move |_gen| {
+            let artifact = artifact.clone();
+            let params = params.clone();
+            let state = state.clone();
+            Box::new(move |_shard: usize| -> Result<InferFn> {
+                let rt = Runtime::open_default()?;
+                let exe = rt.load(&artifact)?;
+                Ok(Box::new(move |images: &[f32], batch: usize| {
+                    let _keep_alive = &rt; // executable outlives via shard thread
+                    let out = exe.run(&[
+                        lit_f32(&params, &[params.len()])?,
+                        lit_f32(&state, &[state.len()])?,
+                        lit_f32(images, &[batch, IMG, IMG, 3])?,
+                    ])?;
+                    Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+                }))
+            }) as ShardSetup
+        });
+        Self::start_elastic(cfg, factory)
     }
 
     /// Start in **engine mode**: every shard gets its own pure-Rust
@@ -292,9 +334,11 @@ impl DetectServer {
         let threads = cfg.threads.max(1);
         // a shard never runs a batch larger than max(max_batch, pad_batch)
         let plan_batch = cfg.max_batch.max(cfg.pad_batch).max(1);
-        // quantize every conv layer once, in parallel — all shards
-        // share the projection
-        let quants = match engine {
+        // quantize every conv layer once, in parallel — every shard
+        // generation ever spawned shares the projection (this is what
+        // makes elastic scale-up memory-light: a new shard costs one
+        // plan + arena + tile pool, never a quantization pass)
+        let quants = Arc::new(match engine {
             EngineKind::Shift { bits } => {
                 let qpool = crate::runtime::pool::ThreadPool::new(threads);
                 Some(crate::coordinator::trainer::quantize_conv_layers(
@@ -302,10 +346,17 @@ impl DetectServer {
                 ))
             }
             EngineKind::Float => None,
-        };
-        let mut setups: Vec<ShardSetup> = Vec::with_capacity(cfg.shards.max(1));
-        for _ in 0..cfg.shards.max(1) {
-            let model = DetectorModel::build_with_quants(spec, ckpt, engine, quants.as_ref())?;
+        });
+        // fail fast on a bad spec/checkpoint before any thread spawns
+        // (the factory also runs on the supervisor thread later, where
+        // a mismatch error would surface asynchronously)
+        anyhow::ensure!(ckpt.params.len() == spec.num_params, "checkpoint/spec param mismatch");
+        anyhow::ensure!(ckpt.state.len() == spec.num_state, "checkpoint/spec state mismatch");
+        let spec = spec.clone();
+        let ckpt = ckpt.clone();
+        let factory: ShardFactory = Box::new(move |_gen| {
+            let model =
+                DetectorModel::build_with_quants(&spec, &ckpt, engine, quants.as_ref().as_ref());
             // one tile pool per planned shard (the naive walk has no
             // tiled kernels to feed it)
             let pool = match executor {
@@ -314,119 +365,180 @@ impl DetectServer {
                 }
                 Executor::Naive => None,
             };
-            setups.push(Box::new(move |_shard: usize| -> Result<InferFn> {
+            Box::new(move |_shard: usize| -> Result<InferFn> {
                 Ok(match executor {
                     Executor::Planned => {
                         // compile once on the shard thread; the builder
                         // model is dropped — the shard owns only the
                         // plan and its pool
                         let mut plan =
-                            model.plan_with_pool(plan_batch, pool.expect("planned shard pool"));
+                            model?.plan_with_pool(plan_batch, pool.expect("planned shard pool"));
                         Box::new(move |images: &[f32], batch: usize| {
                             Ok(plan.forward_vec(images, batch))
                         })
                     }
                     Executor::Naive => {
-                        let mut model = model;
+                        let mut model = model?;
                         Box::new(move |images: &[f32], batch: usize| {
                             Ok(model.forward_naive(images, batch))
                         })
                     }
                 })
-            }) as ShardSetup);
-        }
-        Self::start_with(cfg, setups)
+            }) as ShardSetup
+        });
+        Self::start_elastic(cfg, factory)
     }
 
     /// Start a shard pool over arbitrary per-shard engines (one
     /// [`ShardSetup`] per shard — their count overrides
     /// `cfg.shards`). This is the seam tests and benches use to
-    /// inject mock engines.
+    /// inject mock engines. The pool is fixed: with no factory there
+    /// is nothing to spawn from, so `cfg.autoscale` is ignored (use
+    /// [`DetectServer::start_elastic`] with a mock factory to test
+    /// scaling).
     pub fn start_with(cfg: ServerConfig, setups: Vec<ShardSetup>) -> Result<DetectServer> {
         anyhow::ensure!(!setups.is_empty(), "server needs at least one shard");
-        let shards = setups.len();
-        let (tx, rx) = queue::bounded(cfg.queue_depth);
-        let stats = Arc::new(ShardStats::new(shards));
-        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(shards);
-        let mut workers = Vec::with_capacity(shards);
-        for (i, setup) in setups.into_iter().enumerate() {
-            let rx = rx.clone();
-            let shard_cfg = cfg.clone();
-            let shard_stats = stats.shard(i);
-            let ready = ready_tx.clone();
-            let worker = std::thread::Builder::new()
-                .name(format!("lbw-shard-{i}"))
-                .spawn(move || {
-                    let infer = match setup(i) {
-                        Ok(f) => {
-                            let _ = ready.send(Ok(()));
-                            f
-                        }
-                        Err(e) => {
-                            let _ = ready.send(Err(e));
-                            return;
-                        }
-                    };
-                    serve_loop(rx, &shard_cfg, shard_stats, infer);
-                })
-                .map_err(|e| anyhow!("spawning shard {i}: {e}"))?;
-            workers.push(worker);
-        }
-        drop(ready_tx);
-        drop(rx);
+        Self::boot(cfg, Some(setups), None)
+    }
 
-        for _ in 0..shards {
-            let shard_ready = ready_rx
-                .recv()
-                .map_err(|_| anyhow!("server worker died during startup"));
-            if let Err(e) = shard_ready.and_then(|r| r) {
-                // close the queue so already-started shards exit, then join
-                tx.close();
-                drop(tx);
-                for w in workers {
-                    let _ = w.join();
-                }
-                return Err(e);
-            }
+    /// Start a **supervised dynamic pool**: `cfg.shards` initial
+    /// shards spawned through `factory`, then — when `cfg.autoscale`
+    /// is set — a supervisor thread that scales the live shard set and
+    /// steers the effective `max_batch` between the configured bounds.
+    /// Without `cfg.autoscale` the pool stays at its initial size
+    /// unless driven manually via [`DetectServer::scaler`].
+    pub fn start_elastic(cfg: ServerConfig, factory: ShardFactory) -> Result<DetectServer> {
+        Self::boot(cfg, None, Some(factory))
+    }
+
+    fn boot(
+        cfg: ServerConfig,
+        setups: Option<Vec<ShardSetup>>,
+        factory: Option<ShardFactory>,
+    ) -> Result<DetectServer> {
+        // autoscaling needs a factory to spawn from; a fixed setup
+        // list cannot be supervised
+        let auto = if factory.is_some() {
+            cfg.autoscale.clone().map(AutoscaleConfig::normalized)
+        } else {
+            None
+        };
+        let initial = match (&setups, &auto) {
+            (Some(s), _) => s.len(),
+            (None, Some(a)) => cfg.shards.clamp(a.min_shards, a.max_shards),
+            (None, None) => cfg.shards.max(1),
+        };
+        let mut cfg = cfg;
+        cfg.autoscale = auto.clone();
+        let (tx, rx) = queue::bounded(cfg.queue_depth);
+        let stats = Arc::new(ShardStats::empty());
+        let pool = Arc::new(ShardPool::new(cfg.clone(), rx.monitor(), stats.clone(), factory));
+        // the template receiver keeps the queue open until the first
+        // shard subscribes; from then on the shards themselves keep
+        // the consumer count honest (all-shards-died still closes it)
+        let spawned = match setups {
+            Some(setups) => setups.into_iter().try_for_each(|s| pool.spawn_initial(s).map(|_| ())),
+            None => (0..initial).try_for_each(|_| pool.spawn_initial_from_factory().map(|_| ())),
+        };
+        drop(rx);
+        if let Err(e) = spawned {
+            pool.abort_all();
+            tx.close();
+            return Err(e);
         }
+        let supervisor = auto.map(|a| Supervisor::spawn(pool.clone(), a));
         let handle = DetectHandle {
             tx,
             stats: stats.clone(),
             submit_timeout: cfg.submit_timeout,
             deadline: cfg.deadline,
         };
-        Ok(DetectServer { handle, stats, workers })
+        Ok(DetectServer { handle, stats, pool, supervisor })
     }
 
     pub fn handle(&self) -> DetectHandle {
         self.handle.clone()
     }
 
+    /// Live shards (retired generations excluded).
     pub fn num_shards(&self) -> usize {
-        self.workers.len()
+        self.pool.live()
     }
 
-    /// Per-shard latency snapshots (aggregate via
-    /// [`DetectHandle::latency`]).
+    /// Scale events since startup: `(scale_ups, drains)`.
+    pub fn scale_events(&self) -> (u64, u64) {
+        self.pool.events()
+    }
+
+    /// Manual scaling seam: drive the pool by hand (tests, operational
+    /// tooling). Works with or without a supervisor — but driving both
+    /// at once races the control law.
+    pub fn scaler(&self) -> Scaler {
+        Scaler { pool: self.pool.clone() }
+    }
+
+    /// Per-shard latency snapshots across every generation, retired
+    /// included (aggregate via [`DetectHandle::latency`]).
     pub fn shard_latencies(&self) -> Vec<LatencyStats> {
         self.stats.per_shard()
     }
 
     /// Stop accepting requests, drain what was admitted, and join
-    /// every shard. (Clients still holding cloned handles keep the
-    /// queue open — drop them first.)
+    /// the supervisor and every shard. (Clients still holding cloned
+    /// handles keep the queue open — drop them first.)
     pub fn shutdown(self) {
-        let DetectServer { handle, stats: _, workers } = self;
+        let DetectServer { handle, stats: _, pool, supervisor } = self;
         drop(handle);
-        for w in workers {
-            let _ = w.join();
+        if let Some(s) = supervisor {
+            let _ = s.join();
         }
+        pool.join_all();
+    }
+}
+
+/// Manual handle onto a server's dynamic shard pool.
+#[derive(Clone)]
+pub struct Scaler {
+    pool: Arc<ShardPool>,
+}
+
+impl Scaler {
+    /// Spawn one shard through the server's factory (errors on a
+    /// fixed, factory-less pool).
+    pub fn scale_up(&self) -> Result<usize> {
+        self.pool.scale_up()
+    }
+
+    /// Drain the newest shard (errors rather than drain the last one).
+    pub fn drain_one(&self) -> Result<usize> {
+        self.pool.drain_one()
+    }
+
+    pub fn live(&self) -> usize {
+        self.pool.live()
+    }
+
+    pub fn events(&self) -> (u64, u64) {
+        self.pool.events()
+    }
+
+    /// Steer the effective max batch (clamped to the plan capacity).
+    pub fn steer_max_batch(&self, target: usize) {
+        self.pool.steer_max_batch(target)
+    }
+
+    pub fn effective_max_batch(&self) -> usize {
+        self.pool.effective_max_batch()
     }
 }
 
 /// One shard's batching loop, generic over the inference function so
 /// tests can inject a mock engine. Exits when the queue is closed and
-/// drained.
+/// drained, **or** when the shard's drain token (`shard.cancel`) is
+/// set — checked before every pop, so a retiring shard finishes the
+/// batch it already holds, takes nothing more, and leaves everything
+/// still queued to the surviving shards (zero lost requests on
+/// scale-down).
 ///
 /// Hot-loop discipline: the shard stats mutex (which metrics scrapes
 /// contend on) is taken exactly **once per batch**, after every
@@ -436,13 +548,25 @@ pub fn serve_loop(
     rx: queue::Receiver<Request>,
     cfg: &ServerConfig,
     stats: Arc<Mutex<LatencyStats>>,
+    shard: ShardCtl,
     mut infer: impl FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
 ) {
-    let max_batch = cfg.max_batch.max(1);
+    // the plan arena's hard capacity; the steered effective max batch
+    // can narrow below it but never exceed it
+    let plan_cap = cfg.max_batch.max(1);
     let mut ctl = AdaptiveWindow::new(cfg.batch_window);
-    let mut latencies: Vec<Duration> = Vec::with_capacity(max_batch);
+    let mut latencies: Vec<Duration> = Vec::with_capacity(plan_cap);
     loop {
-        let Some(first) = rx.recv() else { return };
+        let first = match rx.recv_cancellable(&shard.cancel) {
+            Recv::Item(r) => r,
+            // Closed: queue drained at shutdown. Cancelled: this shard
+            // is being drained — stop popping, exit; final stats are
+            // already recorded per batch.
+            _ => return,
+        };
+        // the autoscale supervisor steers the effective batch budget
+        // between ticks; read once per batch head
+        let max_batch = shard.max_batch.load(Ordering::Relaxed).clamp(1, plan_cap);
         // queue-depth snapshot behind the popped head: the adaptive
         // controller's signal and the metrics gauge
         let depth = rx.depth();
@@ -457,7 +581,10 @@ pub fn serve_loop(
         while batch.len() < max_batch {
             match rx.recv_deadline(close) {
                 Recv::Item(r) => batch.push(r),
-                Recv::Timeout | Recv::Closed => break, // Closed: serve what we hold
+                // Closed: serve what we hold. (Cancelled is never
+                // produced by recv_deadline — a drain takes effect at
+                // the next batch-head pop, after this batch is served.)
+                Recv::Timeout | Recv::Closed | Recv::Cancelled => break,
             }
         }
         let now = Instant::now();

@@ -37,6 +37,7 @@ USAGE: repro <subcommand> [--flag value ...]
   inq       [--bits 4|5 --steps N --seed N --out ckpt.lbw]              (INQ baseline [25])
   serve     [--ckpt PATH --engine shift|float|artifact --shards N --threads N
              --executor planned|naive --window fixed|adaptive --deadline-ms N
+             --autoscale true|false --shards-max N
              --requests N --concurrency N]                             (sharded serving)
   gen-data  [--count N --seed N --out DIR]                             (SynthVOC scenes)
 
@@ -48,6 +49,13 @@ threads total). Results are bitwise identical for any thread count.
 (EWMA arrival rate + queue depth; batch_window_ms caps it; env
 LBW_WINDOW sets the default). --deadline-ms sheds requests that wait
 longer than N ms before a shard picks them up (backpressure error).
+
+--autoscale true puts the shard set under an elastic supervisor: shards
+are spawned under load (reusing the quantize-once projection) and
+drained — finish in-flight batches, lose nothing — when traffic
+recedes, between [serve.shards_min, --shards-max] (env LBW_SHARDS_MAX
+sets the default upper bound). Scaling never changes outputs, only
+placement. --shards stays the initial count.
 
 serve runs hermetically with the pure-Rust engines (shift/float): with
 no --ckpt it builds a synthetic He-initialized detector, so it works on
@@ -405,6 +413,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         "threads",
         "window",
         "deadline-ms",
+        "autoscale",
+        "shards-max",
         "requests",
         "concurrency",
         "config",
@@ -424,6 +434,16 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let deadline_ms: u64 = args.parse_or("deadline-ms", cfg.serve.deadline_ms)?;
     server_cfg.deadline =
         (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
+    let autoscale: bool = args.parse_or("autoscale", cfg.serve.autoscale)?;
+    if autoscale {
+        // the config's shards_min/shards_max bounds apply whether
+        // autoscale was enabled by the config or by this flag
+        let mut auto = server_cfg.autoscale.take().unwrap_or_else(|| cfg.autoscale_bounds());
+        auto.max_shards = args.parse_or("shards-max", auto.max_shards)?;
+        server_cfg.autoscale = Some(auto.normalized());
+    } else {
+        server_cfg.autoscale = None;
+    }
 
     let server = match engine.as_str() {
         "artifact" => {
@@ -448,11 +468,18 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             } else {
                 EngineKind::Shift { bits: ck.bits.clamp(2, 6) }
             };
-            println!(
-                "serving {} via hermetic {kind:?} engine ({:?} executor), {} shard(s) x {} thread(s), {} window",
-                ck.arch, server_cfg.executor, server_cfg.shards, server_cfg.threads,
-                server_cfg.window
-            );
+            match &server_cfg.autoscale {
+                Some(a) => println!(
+                    "serving {} via hermetic {kind:?} engine ({:?} executor), elastic shards {}..{} (start {}) x {} thread(s), {} window",
+                    ck.arch, server_cfg.executor, a.min_shards, a.max_shards,
+                    server_cfg.shards, server_cfg.threads, server_cfg.window
+                ),
+                None => println!(
+                    "serving {} via hermetic {kind:?} engine ({:?} executor), {} shard(s) x {} thread(s), {} window",
+                    ck.arch, server_cfg.executor, server_cfg.shards, server_cfg.threads,
+                    server_cfg.window
+                ),
+            }
             DetectServer::start_engine(&spec, &ck, kind, server_cfg)?
         }
         other => bail!("unknown engine `{other}` (artifact|float|shift)"),
@@ -483,7 +510,14 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     );
     println!("latency: {}", handle.latency_summary());
     for (i, s) in server.shard_latencies().iter().enumerate() {
-        println!("  shard {i}: {} (mean batch {:.2})", s.summary(), s.mean_batch());
+        println!("  shard gen {i}: {} (mean batch {:.2})", s.summary(), s.mean_batch());
+    }
+    let (ups, downs) = server.scale_events();
+    if ups + downs > 0 {
+        println!(
+            "autoscale: {ups} scale-up(s), {downs} drain(s), {} shard(s) live at exit",
+            server.num_shards()
+        );
     }
     drop(handle);
     server.shutdown();

@@ -55,6 +55,13 @@ impl TomlValue {
         }
     }
 
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("not a boolean: {self:?}"),
+        }
+    }
+
     pub fn as_f64_arr(&self) -> Result<Vec<f64>> {
         match self {
             TomlValue::Arr(a) => a.iter().map(|v| v.as_f64()).collect(),

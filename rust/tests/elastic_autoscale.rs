@@ -1,0 +1,331 @@
+//! Elastic shard autoscaling integration tests: the drain protocol
+//! loses nothing and keeps truthful generation-tagged counters, scaling
+//! never changes outputs (fixed-vs-auto bitwise parity on both
+//! engines), and the supervisor both spawns under a burst and drains
+//! back down when traffic stops.
+//!
+//! Hermetic: mock engines for the protocol tests, the synthetic
+//! He-initialized detector for the parity test.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lbw_net::consts::{GRID, IMG, NUM_CLS};
+use lbw_net::coordinator::autoscale::AutoscaleConfig;
+use lbw_net::coordinator::server::{DetectServer, ServerConfig, ShardFactory, ShardSetup};
+use lbw_net::data::{generate_scene, SceneConfig};
+use lbw_net::detection::{decode_grid, nms, Detection};
+use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
+use lbw_net::nn::{DetectorModel, EngineKind};
+
+/// Mock engine: echoes each image's pixel 0 as a class-0 detection
+/// score in cell 0, sleeping `work` per batch so drains overlap
+/// in-flight work. Tracks how many setups ever ran (= generations
+/// actually spawned).
+fn tag_factory(work: Duration, setups: Arc<AtomicUsize>) -> ShardFactory {
+    Box::new(move |_gen| {
+        setups.fetch_add(1, Ordering::SeqCst);
+        Box::new(move |_shard| {
+            Ok(Box::new(move |images: &[f32], batch: usize| {
+                if work > Duration::ZERO {
+                    std::thread::sleep(work);
+                }
+                let mut cls = vec![0.0f32; batch * GRID * GRID * NUM_CLS];
+                for bi in 0..batch {
+                    let v = images[bi * IMG * IMG * 3];
+                    for cell in 0..GRID * GRID {
+                        cls[(bi * GRID * GRID + cell) * NUM_CLS] = 1.0;
+                    }
+                    cls[bi * GRID * GRID * NUM_CLS] = 1.0 - v;
+                    cls[bi * GRID * GRID * NUM_CLS + 1] = v;
+                }
+                let reg = vec![0.0f32; batch * GRID * GRID * 4];
+                Ok((cls, reg))
+            }))
+        }) as ShardSetup
+    })
+}
+
+fn tagged_image(v: f32) -> Vec<f32> {
+    let mut img = vec![0.0f32; IMG * IMG * 3];
+    img[0] = v;
+    img
+}
+
+/// The scale-down acceptance test: retire shards mid-burst and prove
+/// zero lost, zero duplicated, zero cross-wired responses — and that
+/// the merged counters stay truthful across shard generations.
+#[test]
+fn drain_mid_burst_loses_no_requests_and_keeps_truthful_counters() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig {
+        shards: 3,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+        queue_depth: 64,
+        submit_timeout: Duration::from_secs(30),
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_elastic(cfg, tag_factory(Duration::from_millis(2), setups.clone()))
+            .unwrap();
+    assert_eq!(server.num_shards(), 3);
+    assert_eq!(setups.load(Ordering::SeqCst), 3);
+    let handle = server.handle();
+    let scaler = server.scaler();
+
+    let burst = 48usize;
+    let mut clients = Vec::new();
+    for k in 0..burst {
+        let h = handle.clone();
+        // distinct identity tag per request, all above score_thresh
+        let v = 0.5 + 0.4 * (k as f32 / burst as f32);
+        clients.push((v, std::thread::spawn(move || h.detect(tagged_image(v)))));
+    }
+    // retire two shards while the burst is in flight; drain_one is
+    // synchronous — when it returns, the shard has finished its
+    // in-flight batch and its stats are merged
+    std::thread::sleep(Duration::from_millis(5));
+    scaler.drain_one().unwrap();
+    scaler.drain_one().unwrap();
+    assert_eq!(server.num_shards(), 1);
+    // the last shard is load-bearing: draining it must be refused
+    let err = scaler.drain_one().unwrap_err();
+    assert!(err.to_string().contains("last live shard"), "{err}");
+
+    for (v, c) in clients {
+        let dets = c.join().unwrap().unwrap_or_else(|e| panic!("tag {v} lost to drain: {e}"));
+        assert_eq!(dets.len(), 1, "tag {v}");
+        assert!(
+            (dets[0].score - v).abs() < 1e-6,
+            "response for tag {v} carried score {} (cross-wired by drain?)",
+            dets[0].score
+        );
+    }
+
+    // truthful books across generations: every request accounted for,
+    // retired generations' counters intact in per-shard and merged
+    let agg = handle.latency();
+    assert_eq!(agg.count(), burst, "merged count must cover retired generations");
+    assert_eq!(agg.errors(), 0);
+    assert_eq!(agg.shed(), 0);
+    let per: Vec<usize> = handle.shard_latencies().iter().map(|s| s.count()).collect();
+    assert_eq!(per.len(), 3, "all three generations stay on the books");
+    assert_eq!(per.iter().sum::<usize>(), burst, "{per:?}");
+    assert_eq!(server.scale_events(), (0, 2));
+    // the drained generations render in parens in the summary
+    let summary = handle.latency_summary();
+    assert!(summary.contains('('), "retired generations must be visible: {summary}");
+
+    drop(handle);
+    server.shutdown();
+}
+
+#[test]
+fn scale_up_spawns_fresh_generations_that_serve() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig {
+        shards: 1,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+        submit_timeout: Duration::from_secs(30),
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_elastic(cfg, tag_factory(Duration::from_millis(1), setups.clone()))
+            .unwrap();
+    let scaler = server.scaler();
+    assert_eq!(scaler.scale_up().unwrap(), 1, "next generation id");
+    assert_eq!(scaler.scale_up().unwrap(), 2);
+    assert_eq!(server.num_shards(), 3);
+    assert_eq!(setups.load(Ordering::SeqCst), 3, "factory built each generation");
+    assert_eq!(server.scale_events(), (2, 0));
+
+    let handle = server.handle();
+    let mut clients = Vec::new();
+    for _ in 0..24 {
+        let h = handle.clone();
+        clients.push(std::thread::spawn(move || h.detect(tagged_image(0.8)).unwrap()));
+    }
+    for c in clients {
+        assert_eq!(c.join().unwrap().len(), 1);
+    }
+    assert_eq!(handle.latency().count(), 24);
+    let per: Vec<usize> = handle.shard_latencies().iter().map(|s| s.count()).collect();
+    assert_eq!(per.iter().sum::<usize>(), 24, "{per:?}");
+    drop(handle);
+    server.shutdown();
+}
+
+/// Steering is clamped to the plan arena's capacity: the supervisor
+/// can narrow the effective batch, never exceed `max_batch`.
+#[test]
+fn steered_max_batch_is_clamped_to_plan_capacity() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig { max_batch: 8, ..Default::default() };
+    let server =
+        DetectServer::start_elastic(cfg, tag_factory(Duration::ZERO, setups)).unwrap();
+    let scaler = server.scaler();
+    assert_eq!(scaler.effective_max_batch(), 8);
+    scaler.steer_max_batch(100);
+    assert_eq!(scaler.effective_max_batch(), 8, "never beyond the arena");
+    scaler.steer_max_batch(0);
+    assert_eq!(scaler.effective_max_batch(), 1, "never below one");
+    scaler.steer_max_batch(3);
+    assert_eq!(scaler.effective_max_batch(), 3);
+    server.shutdown();
+}
+
+/// The tentpole invariant: scaling changes placement, never math.
+/// A server rescaled mid-run — up twice, down once, with steered
+/// batches — must produce responses bitwise identical to the direct
+/// single-model reference, for both engines.
+#[test]
+fn fixed_vs_auto_outputs_bitwise_identical() {
+    let spec = synthetic_spec(SynthConfig::default());
+    let ckpt = synthetic_checkpoint(&spec, 4711, 6);
+    let scene_cfg = SceneConfig::default();
+    let scenes: Vec<Vec<f32>> =
+        (0..10u64).map(|i| generate_scene(77, i, &scene_cfg).image).collect();
+
+    for engine in [EngineKind::Float, EngineKind::Shift { bits: 6 }] {
+        // reference: the plain model, outside any server
+        let score_thresh = 0.05f32;
+        let nms_iou = ServerConfig::default().nms_iou;
+        let mut reference = DetectorModel::build(&spec, &ckpt, engine).unwrap();
+        let expected: Vec<Vec<Detection>> = scenes
+            .iter()
+            .map(|img| {
+                let (cp, rg) = reference.forward(img, 1);
+                nms(decode_grid(&cp, &rg, score_thresh), nms_iou)
+            })
+            .collect();
+        assert!(
+            expected.iter().any(|d| !d.is_empty()),
+            "reference produced no detections; parity would be vacuous"
+        );
+
+        let cfg = ServerConfig {
+            shards: 1,
+            max_batch: 4,
+            batch_window: Duration::from_millis(1),
+            score_thresh,
+            submit_timeout: Duration::from_secs(30),
+            ..Default::default()
+        };
+        let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg).unwrap();
+        let handle = server.handle();
+        let scaler = server.scaler();
+
+        // an adversarial scaling schedule between request waves
+        let mut got: Vec<Vec<Detection>> = Vec::new();
+        for (wave, chunk) in scenes.chunks(3).enumerate() {
+            match wave {
+                0 => {}
+                1 => {
+                    scaler.scale_up().unwrap();
+                    scaler.steer_max_batch(1);
+                }
+                2 => {
+                    scaler.scale_up().unwrap();
+                    scaler.steer_max_batch(4);
+                }
+                _ => {
+                    scaler.drain_one().unwrap();
+                }
+            }
+            // concurrent submits so batching/steering actually mixes
+            let clients: Vec<_> = chunk
+                .iter()
+                .map(|img| {
+                    let h = handle.clone();
+                    let img = img.clone();
+                    std::thread::spawn(move || h.detect(img).unwrap())
+                })
+                .collect();
+            for c in clients {
+                got.push(c.join().unwrap());
+            }
+        }
+        assert!(server.scale_events().0 >= 2 && server.scale_events().1 >= 1);
+
+        for (i, (g, w)) in got.iter().zip(&expected).enumerate() {
+            assert_eq!(g.len(), w.len(), "{engine:?} scene {i}: detection count");
+            for (a, b) in g.iter().zip(w) {
+                assert_eq!(a.class, b.class, "{engine:?} scene {i}");
+                assert_eq!(
+                    a.score.to_bits(),
+                    b.score.to_bits(),
+                    "{engine:?} scene {i}: score {} vs {} — scaling changed math",
+                    a.score,
+                    b.score
+                );
+                for (ga, gb) in [
+                    (a.bbox.x1, b.bbox.x1),
+                    (a.bbox.y1, b.bbox.y1),
+                    (a.bbox.x2, b.bbox.x2),
+                    (a.bbox.y2, b.bbox.y2),
+                ] {
+                    assert_eq!(ga.to_bits(), gb.to_bits(), "{engine:?} scene {i}: bbox");
+                }
+            }
+        }
+        drop(handle);
+        server.shutdown();
+    }
+}
+
+/// Autopilot end to end: a burst into a 1-shard elastic server must
+/// spawn at least one extra shard, and the idle stretch afterwards
+/// must drain back to the floor — with every request served.
+#[test]
+fn supervisor_scales_up_under_burst_and_drains_when_idle() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig {
+        shards: 1,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+        queue_depth: 256,
+        submit_timeout: Duration::from_secs(30),
+        autoscale: Some(AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            tick: Duration::from_millis(2),
+            cooldown_ticks: 1,
+            down_idle_ticks: 5,
+            ..AutoscaleConfig::default()
+        }),
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_elastic(cfg, tag_factory(Duration::from_millis(3), setups)).unwrap();
+    let handle = server.handle();
+
+    // 32 simultaneous arrivals >> 1 shard x 4 batch: the depth spike
+    // is load-shaped, so the supervisor must scale up
+    let mut clients = Vec::new();
+    for _ in 0..32 {
+        let h = handle.clone();
+        clients.push(std::thread::spawn(move || h.detect(tagged_image(0.7))));
+    }
+    for c in clients {
+        c.join().unwrap().unwrap();
+    }
+    assert_eq!(handle.latency().count(), 32, "every burst request served");
+    let (ups, _) = server.scale_events();
+    assert!(ups >= 1, "burst must trigger at least one scale-up");
+
+    // idle: the supervisor drains back to the floor within its idle
+    // horizon (5 ticks x 2ms, plus drain joins); poll generously
+    let t0 = Instant::now();
+    while server.num_shards() > 1 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(server.num_shards(), 1, "idle must drain back to min_shards");
+    let (_, downs) = server.scale_events();
+    assert!(downs >= 1);
+
+    drop(handle);
+    server.shutdown();
+}

@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression gate for BENCH_serve.json.
+
+Parses the file `make bench-smoke` just wrote and FAILS (exit 1) when
+the serving trajectory regresses below the floors the ROADMAP commits
+to:
+
+  * planned/naive img/s ratio at 1 shard, 1 thread, fixed 2ms window
+    (closed loop) must stay >= PLANNED_RATIO_MIN for every engine;
+  * planned 4-thread/1-thread img/s speedup at 1 shard must stay
+    >= THREAD_RATIO_MIN for every engine;
+  * every `"shards": "auto"` row must record >= 1 scale-up AND >= 1
+    drain (an elastic supervisor that never scales is a regression).
+
+Floors are overridable via env (GATE_PLANNED_RATIO_MIN,
+GATE_THREAD_RATIO_MIN) so a deliberate trade-off can be landed without
+editing this script.
+
+Usage:
+    scripts/bench_gate.py [BENCH_serve.json]
+    scripts/bench_gate.py --self-test
+
+--self-test feeds the gate doctored rows (a collapsed planned/naive
+ratio, a flat thread speedup, an eventless autoscale row) and asserts
+each one is caught, then feeds a healthy set and asserts it passes —
+proof in CI that the gate *can* fail before it is trusted to pass.
+"""
+
+import json
+import os
+import sys
+
+PLANNED_RATIO_MIN = float(os.environ.get("GATE_PLANNED_RATIO_MIN", "2.0"))
+THREAD_RATIO_MIN = float(os.environ.get("GATE_THREAD_RATIO_MIN", "1.5"))
+ENGINES = ("float", "shift6")
+
+
+def closed_loop_rate(rows, executor, engine, threads):
+    """img/s of the classic closed-loop cell (1 shard, fixed 2ms)."""
+    for r in rows:
+        if (
+            r.get("executor") == executor
+            and r.get("engine") == engine
+            and r.get("shards") == 1
+            and r.get("threads") == threads
+            and r.get("window") == "fixed"
+            and r.get("batch_window_ms") == 2
+            and "load" not in r
+        ):
+            return r.get("imgs_per_s", 0.0)
+    return None
+
+
+def check(rows):
+    """Return a list of failure strings (empty = gate passes)."""
+    failures = []
+    for engine in ENGINES:
+        planned = closed_loop_rate(rows, "planned", engine, 1)
+        naive = closed_loop_rate(rows, "naive", engine, 1)
+        if planned is None or naive is None:
+            failures.append(
+                f"{engine}: missing closed-loop planned/naive 1-shard rows "
+                "(did the sweep run?)"
+            )
+        elif naive <= 0 or planned / naive < PLANNED_RATIO_MIN:
+            ratio = planned / naive if naive > 0 else float("nan")
+            failures.append(
+                f"{engine}: planned/naive single-shard ratio {ratio:.2f}x "
+                f"< {PLANNED_RATIO_MIN}x floor"
+            )
+        t1 = closed_loop_rate(rows, "planned", engine, 1)
+        t4 = closed_loop_rate(rows, "planned", engine, 4)
+        if t1 is None or t4 is None:
+            failures.append(f"{engine}: missing planned 1-thread/4-thread rows")
+        elif t1 <= 0 or t4 / t1 < THREAD_RATIO_MIN:
+            ratio = t4 / t1 if t1 > 0 else float("nan")
+            failures.append(
+                f"{engine}: planned 4-thread/1-thread speedup {ratio:.2f}x "
+                f"< {THREAD_RATIO_MIN}x floor"
+            )
+    for r in rows:
+        if r.get("shards") == "auto":
+            ups = r.get("scale_ups", 0)
+            downs = r.get("scale_downs", 0)
+            if ups < 1 or downs < 1:
+                failures.append(
+                    f"autoscale row ({r.get('engine')}, load {r.get('load')}): "
+                    f"{ups} scale-up(s) / {downs} drain(s) — the supervisor "
+                    "must both spawn under bursts and drain in the gaps"
+                )
+    return failures
+
+
+def healthy_rows():
+    base = {"window": "fixed", "batch_window_ms": 2}
+    rows = []
+    for engine in ENGINES:
+        rows += [
+            dict(base, executor="planned", engine=engine, shards=1, threads=1, imgs_per_s=300.0),
+            dict(base, executor="naive", engine=engine, shards=1, threads=1, imgs_per_s=100.0),
+            dict(base, executor="planned", engine=engine, shards=1, threads=4, imgs_per_s=600.0),
+        ]
+    rows.append(
+        dict(
+            base,
+            executor="planned",
+            engine="shift6",
+            shards="auto",
+            threads=1,
+            load="bursty",
+            scale_ups=2,
+            scale_downs=1,
+        )
+    )
+    return rows
+
+
+def self_test():
+    assert check(healthy_rows()) == [], "healthy trajectory must pass the gate"
+
+    # injected regression 1: planned/naive ratio collapses to ~1.1x
+    doctored = healthy_rows()
+    for r in doctored:
+        if r["executor"] == "naive" and r["engine"] == "shift6":
+            r["imgs_per_s"] = 280.0
+    fails = check(doctored)
+    assert any("planned/naive" in f and "shift6" in f for f in fails), fails
+
+    # injected regression 2: thread speedup collapses to 1.0x
+    doctored = healthy_rows()
+    for r in doctored:
+        if r["executor"] == "planned" and r["threads"] == 4 and r["engine"] == "float":
+            r["imgs_per_s"] = 300.0
+    fails = check(doctored)
+    assert any("4-thread/1-thread" in f and "float" in f for f in fails), fails
+
+    # injected regression 3: the elastic supervisor never drains
+    doctored = healthy_rows()
+    for r in doctored:
+        if r.get("shards") == "auto":
+            r["scale_downs"] = 0
+    fails = check(doctored)
+    assert any("autoscale" in f for f in fails), fails
+
+    # injected regression 4: the sweep silently lost its naive rows
+    doctored = [r for r in healthy_rows() if r["executor"] != "naive"]
+    fails = check(doctored)
+    assert any("missing" in f for f in fails), fails
+
+    print("bench_gate self-test: all injected regressions caught, healthy set passes")
+
+
+def main(argv):
+    if len(argv) > 1 and argv[1] == "--self-test":
+        self_test()
+        return 0
+    path = argv[1] if len(argv) > 1 else "BENCH_serve.json"
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("rows", [])
+    failures = check(rows)
+    if failures:
+        print(f"bench gate FAILED on {path}:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(
+        f"bench gate passed on {path}: planned/naive >= {PLANNED_RATIO_MIN}x, "
+        f"4t/1t >= {THREAD_RATIO_MIN}x, autoscale rows show scale events"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
