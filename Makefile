@@ -17,12 +17,21 @@
 #                   (self-tests the gate on doctored rows first, then
 #                   fails if planned/naive < 2x, 4t/1t < 1.5x, or an
 #                   autoscale row shows no scale events)
+#   make bench-train-smoke  hermetic accuracy trajectory: train the
+#                   float detector, quantize + retrain every method
+#                   (exact ternary, LBW 4/6-bit, DoReFa, INQ) on 2
+#                   seeds, write BENCH_train.json
+#   make accuracy-gate  regression-gate the fresh BENCH_train.json
+#                   (self-tests on doctored rows first, then fails if
+#                   6-bit drifts > 0.06 mAP below float, ternary
+#                   collapses, or the bit ordering inverts)
 #   make lint       rustfmt + clippy, as CI runs them
 
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test artifacts bench bench-smoke bench-gate lint clean
+.PHONY: build test artifacts bench bench-smoke bench-gate \
+	bench-train-smoke accuracy-gate lint clean
 
 build:
 	$(CARGO) build --release
@@ -42,6 +51,13 @@ bench-smoke: build
 bench-gate:
 	$(PYTHON) scripts/bench_gate.py --self-test
 	$(PYTHON) scripts/bench_gate.py BENCH_serve.json
+
+bench-train-smoke: build
+	$(CARGO) run --release --example bench_train -- --smoke
+
+accuracy-gate:
+	$(PYTHON) scripts/accuracy_gate.py --self-test
+	$(PYTHON) scripts/accuracy_gate.py BENCH_train.json
 
 lint:
 	$(CARGO) fmt --check

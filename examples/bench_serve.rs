@@ -33,6 +33,12 @@
 //! generation that ever lived. The summary quotes elastic p95 vs the
 //! fixed single shard (elastic must not lose).
 //!
+//! Since the trained-checkpoint PR every row also carries
+//! `"checkpoint"` (`"synth"` for the He-init synthetic checkpoint) and
+//! one extra closed-loop cell serves a checkpoint produced by a short
+//! hermetic training run (`"checkpoint": "trained"`) — the gate's
+//! baselines stay on the synth rows.
+//!
 //! Run with: `cargo run --release --example bench_serve`
 //! Smoke mode (CI): `cargo run --release --example bench_serve -- --smoke`
 //! (reduced request count + 1-shard cells only; also honours the
@@ -43,6 +49,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use lbw_net::coordinator::autoscale::AutoscaleConfig;
 use lbw_net::coordinator::server::{DetectServer, Executor, ServerConfig, WindowMode};
+use lbw_net::coordinator::trainer::{HermeticTrainer, TrainConfig, TrainMethod};
 use lbw_net::data::{generate_scene, SceneConfig};
 use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
 use lbw_net::nn::EngineKind;
@@ -66,6 +73,9 @@ struct Cell {
     /// Elastic cell: `shards` is the initial count and the JSON row
     /// carries `"shards": "auto"` plus the scale-event counters.
     auto: Option<AutoCell>,
+    /// Where the served weights came from: "synth" (He-init synthetic
+    /// checkpoint) or "trained" (a hermetic training run).
+    checkpoint: &'static str,
     wall_s: f64,
     imgs_per_s: f64,
     p50_ms: f64,
@@ -208,6 +218,7 @@ fn main() -> Result<()> {
                             load: None,
                             shed: 0,
                             auto: None,
+                            checkpoint: "synth",
                             wall_s: wall.as_secs_f64(),
                             imgs_per_s: agg.throughput(wall),
                             p50_ms: snap.percentile_ms(50.0),
@@ -293,6 +304,7 @@ fn main() -> Result<()> {
                 load: Some(load.to_string()),
                 shed: agg.shed(),
                 auto: None,
+                checkpoint: "synth",
                 wall_s: wall.as_secs_f64(),
                 imgs_per_s: agg.throughput(wall),
                 p50_ms: snap.percentile_ms(50.0),
@@ -384,6 +396,7 @@ fn main() -> Result<()> {
             load: Some("bursty".to_string()),
             shed: agg.shed(),
             auto: elastic.then(|| AutoCell { shards_max: 4, scale_ups: ups, scale_downs: downs }),
+            checkpoint: "synth",
             wall_s: wall.as_secs_f64(),
             imgs_per_s: agg.throughput(wall),
             p50_ms: snap.percentile_ms(50.0),
@@ -419,6 +432,82 @@ fn main() -> Result<()> {
         );
     }
 
+    // ---- trained-checkpoint cell ----
+    // the same planned shift6 single-shard closed loop, but serving a
+    // checkpoint a short hermetic training run produced instead of the
+    // He-init synthetic one — proof the serving stack consumes real
+    // trainer output, and a throughput cross-check that trained weight
+    // statistics (lower variance, more pruned-to-zero after LBW) do
+    // not regress the shift engine. `checkpoint: "trained"` keeps the
+    // gate's closed-loop baselines on the synth rows.
+    println!("\n--- trained-checkpoint cell: planned shift6, 1 shard ---");
+    let train_cfg = TrainConfig {
+        seed: 2027,
+        steps: if smoke { 30 } else { 120 },
+        lr: 0.05,
+        train_scenes: 64,
+        eval_scenes: 8,
+        log_every: 0,
+        ..Default::default()
+    };
+    let trained = HermeticTrainer::new(train_cfg, 8, TrainMethod::Float)?
+        .train()?
+        .outcome
+        .checkpoint;
+    {
+        let cfg = ServerConfig {
+            shards: 1,
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+            queue_depth: 256,
+            executor: Executor::Planned,
+            ..Default::default()
+        };
+        let server =
+            DetectServer::start_engine(&spec, &trained, EngineKind::Shift { bits: 6 }, cfg)?;
+        let wall = drive(&server, &scenes, requests)?;
+        let agg = server.handle().latency();
+        let snap = agg.snapshot();
+        let shard_counts: Vec<usize> =
+            server.shard_latencies().iter().map(|s| s.count()).collect();
+        let cell = Cell {
+            executor: "planned".to_string(),
+            engine: "shift6".to_string(),
+            shards: 1,
+            threads: 1,
+            window: "fixed".to_string(),
+            window_ms: 2,
+            load: None,
+            shed: 0,
+            auto: None,
+            checkpoint: "trained",
+            wall_s: wall.as_secs_f64(),
+            imgs_per_s: agg.throughput(wall),
+            p50_ms: snap.percentile_ms(50.0),
+            p95_ms: snap.percentile_ms(95.0),
+            p99_ms: snap.percentile_ms(99.0),
+            mean_batch: agg.mean_batch(),
+            shard_counts,
+        };
+        println!(
+            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  (trained ckpt, step {})",
+            cell.executor,
+            cell.engine,
+            cell.shards,
+            cell.threads,
+            "2ms",
+            cell.imgs_per_s,
+            cell.p50_ms,
+            cell.p95_ms,
+            cell.p99_ms,
+            cell.mean_batch,
+            trained.step
+        );
+        server.shutdown();
+        cells.push(cell);
+    }
+
     let rate = |exec: &str, engine: &str, shards: usize, threads: usize| {
         cells
             .iter()
@@ -429,6 +518,7 @@ fn main() -> Result<()> {
                     && c.threads == threads
                     && c.window_ms == 2
                     && c.load.is_none() // classic closed-loop cells only
+                    && c.checkpoint == "synth"
             })
             .map(|c| c.imgs_per_s)
             .unwrap_or(0.0)
@@ -481,6 +571,7 @@ fn main() -> Result<()> {
                     ("threads", Json::num(c.threads as f64)),
                     ("window", Json::str(c.window.as_str())),
                     ("batch_window_ms", Json::num(c.window_ms as f64)),
+                    ("checkpoint", Json::str(c.checkpoint)),
                     ("requests", Json::num(requests as f64)),
                     ("concurrency", Json::num(CONCURRENCY as f64)),
                     ("wall_s", Json::num(c.wall_s)),

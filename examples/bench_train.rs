@@ -1,0 +1,245 @@
+//! Trained-checkpoint accuracy trajectory: the paper's Table-1 loop,
+//! hermetic. Train the float µResNet detector on SynthVOC, then carry
+//! each checkpoint through every quantization method — exact ternary
+//! (Theorem 1, b = 2), the semi-analytical LBW threshold at 4 and 6
+//! bits, a DoReFa straight-through uniform baseline at 6 bits, and INQ
+//! partitioned freezing at 6 bits — re-training each with projected
+//! SGD and scoring held-out mAP. One `BENCH_train.json` row per
+//! {method × bits × seed} with mAP, quantization distance ‖Wq − W‖₂,
+//! zero-weight sparsity, compression ratio, first/last loss, and wall
+//! time. `scripts/accuracy_gate.py` gates the result (6-bit within a
+//! fixed mAP delta of float; ternary above a floor; error monotone in
+//! bit-width).
+//!
+//! Fully hermetic: runs on a clean checkout with no Python and no
+//! artifacts (`nn::grad` supplies the backward pass).
+//!
+//! Run with: `cargo run --release --example bench_train -- --smoke`
+//! (the CI profile: 600 float + 200 fine-tune steps, 2 seeds, ~2 min).
+//! The full profile (`--full`) stretches to 3000 + 1000 steps on 3
+//! seeds for a smoother trajectory.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+use lbw_net::coordinator::inq::train_inq_hermetic;
+use lbw_net::coordinator::trainer::{
+    write_bench_train, HermeticTrainer, TrainConfig, TrainMethod, TrainRow,
+};
+use lbw_net::quant::threshold::compression_ratio;
+
+/// INQ cumulative-freeze schedule (the INQ paper's default).
+const INQ_PHASES: [f64; 4] = [0.5, 0.75, 0.875, 1.0];
+
+struct Profile {
+    name: &'static str,
+    width: usize,
+    batch: usize,
+    float_steps: u64,
+    float_lr: f32,
+    ft_steps: u64,
+    ft_lr: f32,
+    train_scenes: u64,
+    eval_scenes: u64,
+    seeds: &'static [u64],
+}
+
+const SMOKE: Profile = Profile {
+    name: "smoke",
+    width: 8,
+    batch: 8,
+    float_steps: 600,
+    float_lr: 0.05,
+    ft_steps: 200,
+    ft_lr: 0.01,
+    train_scenes: 256,
+    eval_scenes: 48,
+    seeds: &[17, 18],
+};
+
+const FULL: Profile = Profile {
+    name: "full",
+    width: 8,
+    batch: 8,
+    float_steps: 3000,
+    float_lr: 0.05,
+    ft_steps: 1000,
+    ft_lr: 0.01,
+    train_scenes: 2000,
+    eval_scenes: 256,
+    seeds: &[17, 18, 19],
+};
+
+fn base_cfg(p: &Profile, seed: u64) -> TrainConfig {
+    TrainConfig {
+        seed,
+        steps: p.float_steps,
+        lr: p.float_lr,
+        train_scenes: p.train_scenes,
+        eval_scenes: p.eval_scenes,
+        log_every: 100,
+        ..Default::default()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn row(
+    p: &Profile,
+    method: &str,
+    bits: u32,
+    seed: u64,
+    steps: u64,
+    map: f64,
+    quant_dist: f64,
+    sparsity: f64,
+    loss_first: f64,
+    loss_last: f64,
+    wall_s: f64,
+) -> TrainRow {
+    TrainRow {
+        method: method.to_string(),
+        bits,
+        seed,
+        steps,
+        profile: p.name.to_string(),
+        map,
+        quant_dist,
+        sparsity,
+        compression: if bits >= 32 { 1.0 } else { compression_ratio(bits) },
+        loss_first,
+        loss_last,
+        wall_s,
+    }
+}
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let p = if full { FULL } else { SMOKE };
+    println!(
+        "bench_train [{}]: {} float + {} ft steps, {} train / {} eval scenes, seeds {:?}",
+        p.name, p.float_steps, p.ft_steps, p.train_scenes, p.eval_scenes, p.seeds
+    );
+
+    let ft_methods = [
+        TrainMethod::TernaryExact,
+        TrainMethod::Lbw { bits: 4 },
+        TrainMethod::Lbw { bits: 6 },
+        TrainMethod::Dorefa { bits: 6 },
+    ];
+
+    let mut rows: Vec<TrainRow> = Vec::new();
+    for &seed in p.seeds {
+        let cfg = base_cfg(&p, seed);
+
+        // 1. float pretraining
+        let float_trainer =
+            HermeticTrainer::new(cfg.clone(), p.width, TrainMethod::Float)?.with_batch(p.batch);
+        let t0 = Instant::now();
+        let float_out = float_trainer.train()?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "[seed {seed}] float: mAP {:.4} loss {:.3} -> {:.3} ({wall:.1}s)",
+            float_out.outcome.final_map, float_out.loss_first, float_out.loss_last
+        );
+        rows.push(row(
+            &p,
+            "float",
+            32,
+            seed,
+            p.float_steps,
+            float_out.outcome.final_map,
+            float_out.quant_dist,
+            float_out.sparsity,
+            float_out.loss_first,
+            float_out.loss_last,
+            wall,
+        ));
+        let float_ckpt = float_out.outcome.checkpoint;
+
+        // 2. quantize + retrain per projection method
+        for method in ft_methods {
+            let trainer =
+                HermeticTrainer::new(cfg.clone(), p.width, method)?.with_batch(p.batch);
+            let t0 = Instant::now();
+            let out = trainer.train_from(&float_ckpt, p.ft_steps, p.ft_lr, p.float_steps)?;
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "[seed {seed}] {}: mAP {:.4} dist {:.2} sparsity {:.3} ({wall:.1}s)",
+                method.name(),
+                out.outcome.final_map,
+                out.quant_dist,
+                out.sparsity
+            );
+            rows.push(row(
+                &p,
+                &method.name(),
+                method.bits(),
+                seed,
+                p.ft_steps,
+                out.outcome.final_map,
+                out.quant_dist,
+                out.sparsity,
+                out.loss_first,
+                out.loss_last,
+                wall,
+            ));
+        }
+
+        // 3. INQ partitioned freezing (retrains the float shadows)
+        let t0 = Instant::now();
+        let inq = train_inq_hermetic(
+            &float_trainer,
+            6,
+            &INQ_PHASES,
+            &float_ckpt,
+            p.ft_steps,
+            p.ft_lr,
+            p.float_steps,
+        )?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "[seed {seed}] inq-6: mAP {:.4} dist {:.2} phases {:?} ({wall:.1}s)",
+            inq.final_map,
+            inq.quant_dist,
+            inq.phases.iter().map(|ph| ph.frozen_total).collect::<Vec<_>>()
+        );
+        rows.push(row(
+            &p,
+            "inq-6",
+            6,
+            seed,
+            p.ft_steps,
+            inq.final_map,
+            inq.quant_dist,
+            inq.sparsity,
+            inq.loss_first,
+            inq.loss_last,
+            wall,
+        ));
+    }
+
+    // summary: mean mAP per method across seeds
+    println!("\n== accuracy trajectory (mean mAP over {} seeds) ==", p.seeds.len());
+    let mut methods: Vec<String> = Vec::new();
+    for r in &rows {
+        if !methods.contains(&r.method) {
+            methods.push(r.method.clone());
+        }
+    }
+    for m in &methods {
+        let maps: Vec<f64> =
+            rows.iter().filter(|r| &r.method == m).map(|r| r.map).collect();
+        let mean = maps.iter().sum::<f64>() / maps.len() as f64;
+        let r0 = rows.iter().find(|r| &r.method == m).unwrap();
+        println!(
+            "  {m:>13}  bits {:>2}  mAP {mean:.4}  compression {:.1}x",
+            r0.bits, r0.compression
+        );
+    }
+
+    let out = Path::new("BENCH_train.json");
+    write_bench_train(out, p.name, &rows)?;
+    println!("\nwrote {} ({} rows)", out.display(), rows.len());
+    Ok(())
+}

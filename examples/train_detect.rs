@@ -7,16 +7,69 @@
 //! cross-checks the rust-native deployment engines (f32 and shift-add)
 //! against the artifact numerics on the trained weights.
 //!
-//! Results recorded in EXPERIMENTS.md.
+//! Results recorded in EXPERIMENTS.md. Both runs are also emitted as
+//! BENCH_train.json-schema rows (`BENCH_train_artifact.json`, profile
+//! `"artifact"`) so the artifact and hermetic trajectories can be
+//! compared row-for-row — the accuracy gate itself runs on the
+//! hermetic `make bench-train-smoke` output, which covers every
+//! method.
 //!
 //! Run with: `cargo run --release --example train_detect [STEPS]`
 
+use std::time::Instant;
+
 use anyhow::Result;
 use lbw_net::coordinator::params::ParamSpec;
-use lbw_net::coordinator::trainer::{save_outcome, TrainConfig, Trainer};
+use lbw_net::coordinator::trainer::{
+    save_outcome, write_bench_train, TrainConfig, TrainOutcome, Trainer, TrainRow,
+};
 use lbw_net::data::{generate_scene, SceneConfig};
 use lbw_net::nn::{DetectorModel, EngineKind};
+use lbw_net::quant::threshold::{compression_ratio, lbw_quantize_layer};
 use lbw_net::runtime::{default_artifacts_dir, lit_f32, to_f32, Runtime};
+
+/// An artifact-trainer outcome as a BENCH_train.json row. Quantization
+/// distance and sparsity are recomputed from the final shadow weights
+/// with the same `µ = ¾‖W‖∞` rule the training artifact projects with.
+fn artifact_row(
+    spec: &ParamSpec,
+    out: &TrainOutcome,
+    bits: u32,
+    seed: u64,
+    steps: u64,
+    wall_s: f64,
+) -> TrainRow {
+    let mut dist2 = 0.0f64;
+    let (mut zeros, mut total) = (0usize, 0usize);
+    if bits < 32 {
+        for e in spec.conv_entries() {
+            let w = &out.checkpoint.params[e.offset..e.offset + e.size];
+            let q = lbw_quantize_layer(w, bits, 0.75);
+            for (a, b) in w.iter().zip(&q.wq) {
+                let d = (a - b) as f64;
+                dist2 += d * d;
+                if *b == 0.0 {
+                    zeros += 1;
+                }
+            }
+            total += e.size;
+        }
+    }
+    TrainRow {
+        method: if bits >= 32 { "float".into() } else { format!("lbw-{bits}") },
+        bits,
+        seed,
+        steps,
+        profile: "artifact".into(),
+        map: out.final_map,
+        quant_dist: dist2.sqrt(),
+        sparsity: zeros as f64 / total.max(1) as f64,
+        compression: if bits >= 32 { 1.0 } else { compression_ratio(bits) },
+        loss_first: out.history.first().map_or(f64::NAN, |h| h.loss as f64),
+        loss_last: out.history.last().map_or(f64::NAN, |h| h.loss as f64),
+        wall_s,
+    }
+}
 
 fn main() -> Result<()> {
     let steps: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(400);
@@ -35,7 +88,9 @@ fn main() -> Result<()> {
     // --- 6-bit LBW run --------------------------------------------------
     println!("\n=== 6-bit LBW-Net ===");
     let t6 = Trainer::new(&rt, TrainConfig { bits: 6, ..base.clone() })?;
+    let t0 = Instant::now();
     let out6 = t6.train()?;
+    let wall6 = t0.elapsed().as_secs_f64();
     println!("loss curve (step, loss):");
     for h in &out6.history {
         println!("  {:>5} {:.4}", h.step, h.loss);
@@ -45,7 +100,9 @@ fn main() -> Result<()> {
     // --- float baseline, same seed/init ---------------------------------
     println!("\n=== 32-bit float baseline (same init) ===");
     let t32 = Trainer::new(&rt, TrainConfig { bits: 32, log_every: steps / 4, ..base.clone() })?;
+    let t0 = Instant::now();
     let out32 = t32.train()?;
+    let wall32 = t0.elapsed().as_secs_f64();
     println!("32-bit mAP: {:.4}", out32.final_map);
     println!(
         "\nTable-1-style gap: 6-bit is {:.2} mAP points below float \
@@ -61,6 +118,16 @@ fn main() -> Result<()> {
     // --- deployment cross-check -----------------------------------------
     println!("\n=== deployment engine cross-check ===");
     let spec = ParamSpec::load_from_dir(&default_artifacts_dir(), "a")?;
+
+    // --- accuracy-trajectory rows (BENCH_train.json schema) --------------
+    let rows = vec![
+        artifact_row(&spec, &out32, 32, base.seed, steps, wall32),
+        artifact_row(&spec, &out6, 6, base.seed, steps, wall6),
+    ];
+    let bench_path = std::path::Path::new("BENCH_train_artifact.json");
+    write_bench_train(bench_path, "artifact", &rows)?;
+    println!("trajectory rows -> {}", bench_path.display());
+
     let ck = &out6.checkpoint;
     let mut float_engine = DetectorModel::build(&spec, ck, EngineKind::Float)?;
     let mut shift_engine = DetectorModel::build(&spec, ck, EngineKind::Shift { bits: 6 })?;

@@ -13,9 +13,10 @@ use anyhow::{ensure, Result};
 
 use super::init::{init_params, init_state};
 use super::params::{Checkpoint, ParamSpec};
-use super::trainer::TrainConfig;
+use super::trainer::{HermeticTrainer, TrainConfig};
 use crate::consts::{GRID, IMG, TRAIN_BATCH};
 use crate::data::{encode_targets, generate_scene, Scene};
+use crate::quant::threshold::lbw_quantize_layer;
 use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, Runtime};
 
 /// INQ schedule: cumulative frozen fractions per phase (the INQ paper's
@@ -152,6 +153,165 @@ pub fn train_inq(rt: &Runtime, cfg: &InqConfig) -> Result<InqOutcome> {
     })
 }
 
+/// Advance the accumulated INQ partition to `fraction`: build this
+/// phase's magnitude mask on the *current* weights, quantize each conv
+/// layer with the LBW rule, and overwrite exactly the newly-frozen
+/// slots with their quantized values (already-frozen slots are left
+/// bitwise-untouched — re-quantizing them would violate the freeze).
+/// `frozen` is OR-accumulated so the partition is monotone by
+/// construction even if magnitude order shifts between phases.
+///
+/// Returns `(newly_frozen_count, squared L2 perturbation applied)`.
+pub fn freeze_phase(
+    spec: &ParamSpec,
+    params: &mut [f32],
+    frozen: &mut [f32],
+    fraction: f64,
+    bits: u32,
+    mu_ratio: f32,
+) -> (usize, f64) {
+    let mask = build_mask(spec, params, fraction);
+    let mut newly = 0usize;
+    let mut dist2 = 0.0f64;
+    for e in spec.conv_entries() {
+        let q = lbw_quantize_layer(&params[e.offset..e.offset + e.size], bits, mu_ratio);
+        for i in 0..e.size {
+            let j = e.offset + i;
+            if mask[j] == 1.0 && frozen[j] == 0.0 {
+                let d = (params[j] - q.wq[i]) as f64;
+                dist2 += d * d;
+                params[j] = q.wq[i];
+                frozen[j] = 1.0;
+                newly += 1;
+            }
+        }
+    }
+    (newly, dist2)
+}
+
+/// Per-phase record of a hermetic INQ run.
+#[derive(Debug, Clone)]
+pub struct InqPhaseLog {
+    pub fraction: f64,
+    pub newly_frozen: usize,
+    pub frozen_total: usize,
+    pub lr: f32,
+    pub last_loss: f64,
+}
+
+/// Outcome of [`train_inq_hermetic`].
+#[derive(Debug)]
+pub struct InqHermeticOutcome {
+    /// Final checkpoint: every conv weight frozen on the power-of-two
+    /// grid (the phase schedule must end at fraction 1.0).
+    pub checkpoint: Checkpoint,
+    pub phases: Vec<InqPhaseLog>,
+    pub final_map: f64,
+    /// Total L2 perturbation applied across all freeze phases.
+    pub quant_dist: f64,
+    /// Zero fraction among conv weights of the final checkpoint.
+    pub sparsity: f64,
+    pub loss_first: f64,
+    pub loss_last: f64,
+}
+
+/// Hermetic INQ: warm-start from `start`, then per phase freeze the
+/// top-magnitude partition at its LBW-quantized values and retrain the
+/// rest through [`HermeticTrainer::step_once`] with the frozen mask
+/// (gradient + velocity zeroed on frozen slots, lr halved per phase —
+/// the same schedule as the artifact [`train_inq`]). The trainer must
+/// use `TrainMethod::Float`: freezing *is* the projection here.
+///
+/// `steps` are split evenly across retraining phases; the terminal
+/// fraction-1.0 phase only freezes (nothing is left to retrain).
+pub fn train_inq_hermetic(
+    trainer: &HermeticTrainer,
+    bits: u32,
+    phases: &[f64],
+    start: &Checkpoint,
+    steps: u64,
+    lr: f32,
+    start_step: u64,
+) -> Result<InqHermeticOutcome> {
+    ensure!(!phases.is_empty(), "empty INQ schedule");
+    ensure!(
+        phases.windows(2).all(|w| w[0] < w[1]) && *phases.last().unwrap() == 1.0,
+        "phases must be increasing and end at 1.0"
+    );
+    ensure!(
+        trainer.method == super::trainer::TrainMethod::Float,
+        "hermetic INQ retrains float shadows under a freeze mask"
+    );
+    let spec = &trainer.spec;
+    ensure!(start.params.len() == spec.num_params, "checkpoint/spec mismatch");
+    let mut params = start.params.clone();
+    let mut state = start.state.clone();
+    let mut vel = vec![0.0f32; params.len()];
+    let mut frozen = vec![0.0f32; params.len()];
+    let retrain_phases = phases.iter().filter(|&&f| f < 1.0).count().max(1);
+    let per_phase = (steps / retrain_phases as u64).max(1);
+    let mut gstep = start_step;
+    let mut phase_logs = Vec::new();
+    let mut dist2 = 0.0f64;
+    let mut loss_first = f64::NAN;
+    let mut loss_last = f64::NAN;
+
+    for (pi, &fraction) in phases.iter().enumerate() {
+        let (newly, d2) =
+            freeze_phase(spec, &mut params, &mut frozen, fraction, bits, trainer.cfg.mu_ratio);
+        dist2 += d2;
+        // a freshly frozen slot must not carry stale momentum
+        for (v, &f) in vel.iter_mut().zip(&frozen) {
+            if f != 0.0 {
+                *v = 0.0;
+            }
+        }
+        let phase_lr = lr * 0.5f32.powi(pi as i32);
+        let mut last_loss = f64::NAN;
+        if fraction < 1.0 {
+            for _ in 0..per_phase {
+                let (loss, _, _) =
+                    trainer.step_once(&mut params, &mut vel, &mut state, gstep, phase_lr, Some(&frozen))?;
+                if loss_first.is_nan() {
+                    loss_first = loss;
+                }
+                loss_last = loss;
+                last_loss = loss;
+                gstep += 1;
+            }
+        }
+        phase_logs.push(InqPhaseLog {
+            fraction,
+            newly_frozen: newly,
+            frozen_total: frozen.iter().filter(|&&f| f != 0.0).count(),
+            lr: phase_lr,
+            last_loss,
+        });
+    }
+
+    let (mut zeros, mut total) = (0usize, 0usize);
+    for e in spec.conv_entries() {
+        zeros += params[e.offset..e.offset + e.size].iter().filter(|&&x| x == 0.0).count();
+        total += e.size;
+    }
+    let final_map = trainer.evaluate_projected(&params, &state)?;
+    Ok(InqHermeticOutcome {
+        checkpoint: Checkpoint {
+            arch: spec.arch.clone(),
+            bits,
+            step: gstep,
+            params,
+            state,
+        },
+        phases: phase_logs,
+        final_map,
+        quant_dist: dist2.sqrt(),
+        sparsity: zeros as f64 / total.max(1) as f64,
+        loss_first,
+        loss_last,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,5 +378,116 @@ mod tests {
         for (a, b) in m1.iter().zip(&m2) {
             assert!(b >= a, "freezing must be monotone");
         }
+    }
+
+    use crate::coordinator::trainer::TrainMethod;
+    use crate::data::SceneConfig;
+
+    fn tiny_trainer(seed: u64) -> HermeticTrainer {
+        let cfg = TrainConfig {
+            seed,
+            steps: 4,
+            lr: 0.02,
+            train_scenes: 8,
+            eval_scenes: 2,
+            log_every: 0,
+            scene_cfg: SceneConfig::default(),
+            ..Default::default()
+        };
+        HermeticTrainer::new(cfg, 4, TrainMethod::Float).unwrap().with_batch(2)
+    }
+
+    /// The two INQ training-loop invariants the artifact path could
+    /// never test hermetically: (a) weights frozen by the partition are
+    /// BITWISE-unchanged by retraining steps, (b) the accumulated
+    /// frozen set only grows across phases and a later `freeze_phase`
+    /// never rewrites an already-frozen slot.
+    #[test]
+    fn retraining_leaves_frozen_slots_bitwise_unchanged() {
+        let trainer = tiny_trainer(5);
+        let (params, state) = trainer.init();
+        let mut params = params;
+        let mut state = state;
+        let mut vel = vec![0.0f32; params.len()];
+        let mut frozen = vec![0.0f32; params.len()];
+
+        let (newly, _) =
+            freeze_phase(&trainer.spec, &mut params, &mut frozen, 0.5, 6, trainer.cfg.mu_ratio);
+        assert!(newly > 0);
+        let snapshot: Vec<(usize, u32)> = frozen
+            .iter()
+            .enumerate()
+            .filter(|(_, &f)| f != 0.0)
+            .map(|(i, _)| (i, params[i].to_bits()))
+            .collect();
+
+        let before_free = params.clone();
+        for s in 0..3u64 {
+            trainer
+                .step_once(&mut params, &mut vel, &mut state, s, 0.02, Some(&frozen))
+                .unwrap();
+        }
+        for &(i, bits) in &snapshot {
+            assert_eq!(params[i].to_bits(), bits, "frozen slot {i} moved during retraining");
+        }
+        // the run actually trained: some unfrozen weight moved
+        assert!(
+            params
+                .iter()
+                .zip(&before_free)
+                .zip(&frozen)
+                .any(|((a, b), &f)| f == 0.0 && a.to_bits() != b.to_bits()),
+            "no unfrozen weight changed — the retraining step is inert"
+        );
+
+        // phase 2: the accumulated set grows and never rewrites
+        let frozen_before = frozen.clone();
+        let (newly2, _) =
+            freeze_phase(&trainer.spec, &mut params, &mut frozen, 1.0, 6, trainer.cfg.mu_ratio);
+        assert!(newly2 > 0);
+        for (a, b) in frozen_before.iter().zip(&frozen) {
+            assert!(b >= a, "frozen set must be monotone across stages");
+        }
+        for &(i, bits) in &snapshot {
+            assert_eq!(params[i].to_bits(), bits, "freeze_phase rewrote frozen slot {i}");
+        }
+        let conv_total: usize = trainer.spec.conv_entries().map(|e| e.size).sum();
+        assert_eq!(
+            frozen.iter().filter(|&&f| f != 0.0).count(),
+            conv_total,
+            "fraction 1.0 must freeze every conv weight"
+        );
+    }
+
+    #[test]
+    fn hermetic_inq_run_ends_fully_quantized() {
+        let trainer = tiny_trainer(9);
+        let (params, state) = trainer.init();
+        let start = Checkpoint {
+            arch: trainer.spec.arch.clone(),
+            bits: 32,
+            step: 0,
+            params,
+            state,
+        };
+        let out =
+            train_inq_hermetic(&trainer, 6, &[0.5, 0.75, 1.0], &start, 4, 0.01, 100).unwrap();
+        // frozen set monotone across the recorded phases
+        let totals: Vec<usize> = out.phases.iter().map(|p| p.frozen_total).collect();
+        assert!(totals.windows(2).all(|w| w[0] <= w[1]), "{totals:?}");
+        let conv_total: usize = trainer.spec.conv_entries().map(|e| e.size).sum();
+        assert_eq!(*totals.last().unwrap(), conv_total);
+        // every conv weight of the final checkpoint is 0 or ±2^k
+        for e in trainer.spec.conv_entries() {
+            for &v in &out.checkpoint.params[e.offset..e.offset + e.size] {
+                assert!(
+                    v == 0.0 || v.abs().log2().fract() == 0.0,
+                    "{}: {v} not on the power-of-two grid",
+                    e.name
+                );
+            }
+        }
+        assert!(out.final_map.is_finite() && (0.0..=1.0).contains(&out.final_map));
+        assert!(out.quant_dist > 0.0);
     }
 }

@@ -19,6 +19,8 @@ use super::params::{Checkpoint, ParamSpec, SpecEntry};
 use crate::consts::{GRID, IMG, NUM_CLS, TRAIN_BATCH};
 use crate::data::{encode_targets, generate_scene, Scene, SceneConfig};
 use crate::detection::{decode_grid, mean_ap, nms, ApMode, Detection, GroundTruth};
+use crate::nn::grad::{detection_loss_grads, TrainGraph};
+use crate::nn::synth::{synthetic_spec, SynthConfig};
 use crate::quant::threshold::{lbw_quantize_layer, LbwQuant};
 use crate::runtime::pool::{SendPtr, ThreadPool};
 use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_f32, Executable, Runtime};
@@ -93,9 +95,7 @@ impl<'rt> Trainer<'rt> {
     }
 
     fn lr_at(&self, step: u64) -> f32 {
-        let frac = step as f64 / self.cfg.steps.max(1) as f64;
-        let drops = self.cfg.lr_drops.iter().filter(|&&d| frac >= d).count();
-        self.cfg.lr * 0.1f32.powi(drops as i32)
+        lr_schedule(self.cfg.lr, &self.cfg.lr_drops, step, self.cfg.steps)
     }
 
     fn train_batch(&self, step: u64) -> crate::data::EncodedBatch {
@@ -250,6 +250,401 @@ pub fn evaluate_with_artifact(
         }
     }
     Ok(mean_ap(&dets, &gts, ApMode::Voc11Point))
+}
+
+/// The step-decay learning-rate schedule shared by the artifact and
+/// hermetic trainers: `lr · 0.1^(number of drop fractions passed)`.
+pub fn lr_schedule(lr: f32, lr_drops: &[f64], step: u64, steps: u64) -> f32 {
+    let frac = step as f64 / steps.max(1) as f64;
+    let drops = lr_drops.iter().filter(|&&d| frac >= d).count();
+    lr * 0.1f32.powi(drops as i32)
+}
+
+/// Which weight projection the hermetic trainer applies on every step
+/// (projected SGD: the forward/backward run at the projected weights,
+/// the update lands on the full-precision shadow weights).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainMethod {
+    /// No projection — the float baseline (and the INQ retraining
+    /// substrate, where freezing replaces projection).
+    Float,
+    /// Exact Theorem-1 ternary solver (`quant::exact`), b = 2.
+    TernaryExact,
+    /// Semi-analytical eq.(3)+(4) threshold (`quant::threshold`).
+    Lbw { bits: u32 },
+    /// DoReFa straight-through uniform baseline (`quant::baselines`).
+    Dorefa { bits: u32 },
+}
+
+impl TrainMethod {
+    /// The `method` field of a BENCH_train.json row.
+    pub fn name(&self) -> String {
+        match self {
+            TrainMethod::Float => "float".into(),
+            TrainMethod::TernaryExact => "ternary-exact".into(),
+            TrainMethod::Lbw { bits } => format!("lbw-{bits}"),
+            TrainMethod::Dorefa { bits } => format!("dorefa-{bits}"),
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            TrainMethod::Float => 32,
+            TrainMethod::TernaryExact => 2,
+            TrainMethod::Lbw { bits } | TrainMethod::Dorefa { bits } => *bits,
+        }
+    }
+}
+
+/// A projection of the shadow parameters: the effective weights the
+/// forward/backward pass runs at, plus the quantization metrics the
+/// accuracy trajectory records.
+pub struct Projection {
+    /// Full params-layout vector; conv entries replaced, rest shared.
+    pub eff: Vec<f32>,
+    /// `‖W^q − W^f‖₂` summed over conv layers (eq. 1 objective).
+    pub quant_dist: f64,
+    /// Fraction of conv weights pruned to exactly zero.
+    pub sparsity: f64,
+}
+
+/// Output of a hermetic training run.
+pub struct HermeticOutcome {
+    /// Checkpoint (full-precision shadow weights), history, final mAP —
+    /// the same shape the artifact trainer produces, so
+    /// [`save_outcome`] round-trips both.
+    pub outcome: TrainOutcome,
+    /// Final momentum buffer, for warm-started fine-tunes.
+    pub vel: Vec<f32>,
+    pub quant_dist: f64,
+    pub sparsity: f64,
+    pub loss_first: f64,
+    pub loss_last: f64,
+}
+
+/// Pure-Rust trainer over the synthetic µResNet detector: the same
+/// projected-SGD protocol as the artifact [`Trainer`] (Nesterov
+/// momentum, batch-stat BN, weight decay on conv shadows, gradient at
+/// the projected weights), but running `nn::grad` instead of an HLO
+/// artifact — so the whole paper loop (train float → quantize →
+/// retrain per method → evaluate mAP) works on a clean checkout.
+pub struct HermeticTrainer {
+    pub spec: ParamSpec,
+    graph: TrainGraph,
+    pub cfg: TrainConfig,
+    pub method: TrainMethod,
+    /// Scenes per step (the artifact path is pinned to `TRAIN_BATCH`;
+    /// hermetic tests shrink this for speed).
+    pub batch_size: usize,
+}
+
+impl HermeticTrainer {
+    pub fn new(cfg: TrainConfig, width: usize, method: TrainMethod) -> Result<Self> {
+        let spec = synthetic_spec(SynthConfig { width, stages: 3 });
+        let graph = TrainGraph::new(&spec)?;
+        Ok(HermeticTrainer { spec, graph, cfg, method, batch_size: TRAIN_BATCH })
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch_size = batch.max(1);
+        self
+    }
+
+    /// He-init (params, state) for this spec at the config seed.
+    pub fn init(&self) -> (Vec<f32>, Vec<f32>) {
+        (init_params(&self.spec, self.cfg.seed), init_state(&self.spec))
+    }
+
+    /// Apply this trainer's method to the shadow parameters.
+    pub fn project(&self, params: &[f32]) -> Projection {
+        let mut eff = params.to_vec();
+        let mut dist2 = 0.0f64;
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for e in self.spec.conv_entries() {
+            let w = &params[e.offset..e.offset + e.size];
+            let wq: Option<Vec<f32>> = match self.method {
+                TrainMethod::Float => None,
+                TrainMethod::TernaryExact => Some(crate::quant::exact::ternary_exact(w).wq),
+                TrainMethod::Lbw { bits } => {
+                    Some(lbw_quantize_layer(w, bits, self.cfg.mu_ratio).wq)
+                }
+                TrainMethod::Dorefa { bits } => Some(crate::quant::baselines::dorefa(w, bits)),
+            };
+            let wq = wq.unwrap_or_else(|| w.to_vec());
+            for (i, &q) in wq.iter().enumerate() {
+                let d = (w[i] - q) as f64;
+                dist2 += d * d;
+                if q == 0.0 {
+                    zeros += 1;
+                }
+                eff[e.offset + i] = q;
+            }
+            total += e.size;
+        }
+        Projection {
+            eff,
+            quant_dist: dist2.sqrt(),
+            sparsity: zeros as f64 / total.max(1) as f64,
+        }
+    }
+
+    /// The training batch for global step `gstep` — identical stream
+    /// law to the artifact trainer (`idx = (gstep·B + i) mod scenes`).
+    pub fn batch_at(&self, gstep: u64) -> crate::data::EncodedBatch {
+        let scenes: Vec<Scene> = (0..self.batch_size as u64)
+            .map(|i| {
+                let idx = (gstep * self.batch_size as u64 + i) % self.cfg.train_scenes;
+                generate_scene(self.cfg.seed, idx, &self.cfg.scene_cfg)
+            })
+            .collect();
+        encode_targets(&scenes)
+    }
+
+    /// One projected-SGD step in place. `frozen` marks slots (1.0)
+    /// whose gradient AND velocity are forced to zero — the INQ
+    /// contract that frozen weights stay bitwise-identical. Returns
+    /// `(total, cls, box)` losses; total includes the L2 term, like
+    /// the L2 graph.
+    pub fn step_once(
+        &self,
+        params: &mut [f32],
+        vel: &mut [f32],
+        state: &mut Vec<f32>,
+        gstep: u64,
+        lr: f32,
+        frozen: Option<&[f32]>,
+    ) -> Result<(f64, f64, f64)> {
+        let batch = self.batch_at(gstep);
+        let proj = self.project(params);
+        let fwd = self.graph.forward_train(&self.spec, &proj.eff, state, &batch)?;
+        let lg = detection_loss_grads(&fwd.cls_logits, &fwd.reg, &batch);
+        let mut g = self.graph.backward(&self.spec, &proj.eff, &fwd.cache, &lg.dlogits, &lg.dreg)?;
+        // weight decay on the full-precision conv shadows
+        let mut wd_term = 0.0f64;
+        let wd = self.cfg.weight_decay;
+        for e in self.spec.conv_entries() {
+            for i in e.offset..e.offset + e.size {
+                g[i] += wd * params[i];
+                wd_term += 0.5 * (wd as f64) * (params[i] as f64) * (params[i] as f64);
+            }
+        }
+        if let Some(mask) = frozen {
+            ensure!(mask.len() == g.len(), "frozen mask length mismatch");
+            for (gi, &m) in g.iter_mut().zip(mask) {
+                if m != 0.0 {
+                    *gi = 0.0;
+                }
+            }
+        }
+        let m = self.cfg.momentum;
+        for i in 0..params.len() {
+            vel[i] = m * vel[i] - lr * g[i];
+            params[i] += m * vel[i] - lr * g[i];
+        }
+        if let Some(mask) = frozen {
+            for (vi, &fm) in vel.iter_mut().zip(mask) {
+                if fm != 0.0 {
+                    *vi = 0.0;
+                }
+            }
+        }
+        *state = fwd.new_state;
+        let loss = lg.cls_loss + lg.box_loss + wd_term;
+        ensure!(loss.is_finite(), "hermetic loss diverged at step {gstep}: {loss}");
+        Ok((loss, lg.cls_loss, lg.box_loss))
+    }
+
+    /// Cold-start run: He-init, `cfg.steps` steps under the step-decay
+    /// schedule, final projected evaluation.
+    pub fn train(&self) -> Result<HermeticOutcome> {
+        let (params, state) = self.init();
+        let vel = vec![0.0f32; params.len()];
+        self.run(params, state, vel, self.cfg.steps, None, 0)
+    }
+
+    /// Warm-started fine-tune from an existing checkpoint at a fixed
+    /// learning rate (the re-training half of the paper loop).
+    /// `start_step` offsets the scene stream so fine-tuning does not
+    /// replay the pretraining batches.
+    pub fn train_from(
+        &self,
+        start: &Checkpoint,
+        steps: u64,
+        lr: f32,
+        start_step: u64,
+    ) -> Result<HermeticOutcome> {
+        ensure!(start.params.len() == self.spec.num_params, "checkpoint/spec mismatch");
+        let vel = vec![0.0f32; start.params.len()];
+        self.run(start.params.clone(), start.state.clone(), vel, steps, Some(lr), start_step)
+    }
+
+    fn run(
+        &self,
+        mut params: Vec<f32>,
+        mut state: Vec<f32>,
+        mut vel: Vec<f32>,
+        steps: u64,
+        fixed_lr: Option<f32>,
+        start_step: u64,
+    ) -> Result<HermeticOutcome> {
+        let mut history = Vec::new();
+        let mut loss_first = f64::NAN;
+        let mut loss_last = f64::NAN;
+        let mut step_ms_acc = 0.0f64;
+        for s in 0..steps {
+            let lr = fixed_lr
+                .unwrap_or_else(|| lr_schedule(self.cfg.lr, &self.cfg.lr_drops, s, steps));
+            let t0 = Instant::now();
+            let (loss, cls, bx) =
+                self.step_once(&mut params, &mut vel, &mut state, start_step + s, lr, None)?;
+            let step_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            step_ms_acc += step_ms;
+            if s == 0 {
+                loss_first = loss;
+            }
+            loss_last = loss;
+            if self.cfg.log_every > 0 && (s % self.cfg.log_every == 0 || s + 1 == steps) {
+                history.push(StepLog {
+                    step: start_step + s,
+                    loss: loss as f32,
+                    cls_loss: cls as f32,
+                    box_loss: bx as f32,
+                    lr,
+                    step_ms,
+                });
+                eprintln!(
+                    "[hermetic {} ] step {:>5} loss {loss:.4} lr {lr:.4} {step_ms:.0}ms",
+                    self.method.name(),
+                    start_step + s
+                );
+            }
+        }
+        let proj = self.project(&params);
+        let final_map = self.evaluate_projected(&proj.eff, &state)?;
+        Ok(HermeticOutcome {
+            outcome: TrainOutcome {
+                checkpoint: Checkpoint {
+                    arch: self.spec.arch.clone(),
+                    bits: self.method.bits(),
+                    step: start_step + steps,
+                    params,
+                    state,
+                },
+                history,
+                final_map,
+                mean_step_ms: step_ms_acc / steps.max(1) as f64,
+            },
+            vel,
+            quant_dist: proj.quant_dist,
+            sparsity: proj.sparsity,
+            loss_first,
+            loss_last,
+        })
+    }
+
+    /// mAP of the *projected* weights on the held-out split — the
+    /// number a deployed quantized model would score.
+    pub fn evaluate(&self, params: &[f32], state: &[f32]) -> Result<f64> {
+        let proj = self.project(params);
+        self.evaluate_projected(&proj.eff, state)
+    }
+
+    /// mAP at explicit effective weights (already projected).
+    pub fn evaluate_projected(&self, eff: &[f32], state: &[f32]) -> Result<f64> {
+        let mut dets: Vec<(usize, Detection)> = Vec::new();
+        let mut gts: Vec<(usize, GroundTruth)> = Vec::new();
+        let bs = self.batch_size;
+        let mut img_id = 0usize;
+        while (img_id as u64) < self.cfg.eval_scenes {
+            let scenes: Vec<Scene> = (0..bs as u64)
+                .map(|i| {
+                    generate_scene(
+                        self.cfg.seed,
+                        self.cfg.train_scenes + img_id as u64 + i,
+                        &self.cfg.scene_cfg,
+                    )
+                })
+                .collect();
+            let mut images = Vec::with_capacity(bs * IMG * IMG * 3);
+            for s in &scenes {
+                images.extend_from_slice(&s.image);
+            }
+            let (cls_prob, reg) =
+                self.graph.forward_eval(&self.spec, eff, state, &images, bs)?;
+            for (bi, scene) in scenes.iter().enumerate() {
+                if img_id as u64 >= self.cfg.eval_scenes {
+                    break;
+                }
+                let cp = &cls_prob[bi * GRID * GRID * NUM_CLS..(bi + 1) * GRID * GRID * NUM_CLS];
+                let rg = &reg[bi * GRID * GRID * 4..(bi + 1) * GRID * GRID * 4];
+                let raw = decode_grid(cp, rg, 0.05);
+                for d in nms(raw, 0.45) {
+                    dets.push((img_id, d));
+                }
+                for &gobj in &scene.objects {
+                    gts.push((img_id, gobj));
+                }
+                img_id += 1;
+            }
+        }
+        Ok(mean_ap(&dets, &gts, ApMode::Voc11Point))
+    }
+}
+
+/// One BENCH_train.json row: the accuracy-trajectory record per
+/// {method × bits × seed} that `examples/bench_train.rs` emits and
+/// `scripts/accuracy_gate.py` gates.
+#[derive(Debug, Clone)]
+pub struct TrainRow {
+    pub method: String,
+    pub bits: u32,
+    pub seed: u64,
+    pub steps: u64,
+    pub profile: String,
+    pub map: f64,
+    pub quant_dist: f64,
+    pub sparsity: f64,
+    pub compression: f64,
+    pub loss_first: f64,
+    pub loss_last: f64,
+    pub wall_s: f64,
+}
+
+impl TrainRow {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("bits", Json::num(self.bits as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("profile", Json::str(&self.profile)),
+            ("map", Json::num(self.map)),
+            ("quant_dist", Json::num(self.quant_dist)),
+            ("sparsity", Json::num(self.sparsity)),
+            ("compression", Json::num(self.compression)),
+            ("loss_first", Json::num(self.loss_first)),
+            ("loss_last", Json::num(self.loss_last)),
+            ("wall_s", Json::num(self.wall_s)),
+        ])
+    }
+}
+
+/// Write the accuracy trajectory `rows` to `path` in the
+/// BENCH_train.json document shape the accuracy gate reads.
+pub fn write_bench_train(path: &Path, profile: &str, rows: &[TrainRow]) -> Result<()> {
+    use crate::util::json::Json;
+    let doc = Json::obj(vec![
+        ("bench", Json::str("train_accuracy_trajectory")),
+        ("profile", Json::str(profile)),
+        (
+            "detector",
+            Json::str("synthetic width-8 µResNet + R-FCN-lite on SynthVOC, hermetic trainer"),
+        ),
+        ("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect())),
+    ]);
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
 }
 
 /// Quantize every conv layer of a flat parameter vector with the

@@ -1,0 +1,867 @@
+//! Trainable forward + backward for the synthetic µResNet detector —
+//! the hermetic training substrate behind `coordinator::trainer::
+//! HermeticTrainer`.
+//!
+//! The artifact path (`make artifacts` + PJRT) is the fast way to
+//! train; this module exists so the *whole* paper loop — train →
+//! quantize → retrain → evaluate — runs on a clean checkout with no
+//! Python and no XLA, exactly like the serving stack. It mirrors
+//! `python/compile/model.py::forward`/`detection_loss`/`train_step`:
+//! batch-statistics BN with running-average state updates, the
+//! positives-upweighted CE + smooth-L1 grid loss, and gradients taken
+//! at the *effective* (projected) weights so projected SGD and INQ are
+//! straight-through (§2.2).
+//!
+//! Only identity / strided-subsample skips are supported — the layout
+//! `nn::synth::synthetic_spec` generates. Specs with 1×1 skip
+//! convolutions (width changes between stages) are rejected at build.
+
+use anyhow::{bail, ensure, Result};
+
+use super::conv::{conv2d, pad_spatial, same_padding};
+use super::layers::ps_vote;
+use crate::consts::{GRID, IMG, K, NUM_CLS};
+use crate::coordinator::params::ParamSpec;
+use crate::data::EncodedBatch;
+use crate::tensor::Tensor;
+
+const BN_EPS: f32 = 1e-5;
+const BN_MOMENTUM: f32 = 0.9;
+
+/// One BN layer's names + channel count, resolved once at build.
+#[derive(Debug, Clone)]
+struct BnRef {
+    scale: String,
+    bias: String,
+    mean: String,
+    var: String,
+    c: usize,
+}
+
+/// One conv layer: the param entry name and its stride.
+#[derive(Debug, Clone)]
+struct ConvRef {
+    w: String,
+    stride: usize,
+}
+
+#[derive(Debug, Clone)]
+struct BlockRef {
+    conv1: ConvRef,
+    bn1: BnRef,
+    conv2: ConvRef,
+    bn2: BnRef,
+    stride: usize,
+}
+
+/// The trainable graph: layer references resolved against a spec.
+pub struct TrainGraph {
+    stem: ConvRef,
+    stem_bn: BnRef,
+    blocks: Vec<BlockRef>,
+    head: ConvRef,
+    head_bn: BnRef,
+    width: usize,
+}
+
+/// Per-layer activations cached by the training forward pass for the
+/// backward sweep.
+pub struct ForwardCache {
+    images: Tensor,
+    stem_bn: BnCache,
+    stem_out: Tensor, // post-BN pre-ReLU
+    blocks: Vec<BlockCache>,
+    head_in: Tensor,
+    head_bn: BnCache,
+    head_out: Tensor, // post-BN pre-ReLU
+    feat: Tensor,     // post-ReLU features feeding the 1x1 heads
+    batch: usize,
+}
+
+struct BlockCache {
+    input: Tensor,
+    bn1: BnCache,
+    bn1_out: Tensor,
+    mid: Tensor, // post-ReLU conv1 branch
+    bn2: BnCache,
+    sum: Tensor, // pre-ReLU residual sum
+}
+
+/// BN cache: normalized activations + inverse std (batch statistics).
+struct BnCache {
+    xhat: Tensor,
+    inv: Vec<f32>,
+    scale: Vec<f32>,
+}
+
+/// Training-forward outputs.
+pub struct TrainForward {
+    /// PS-voted class logits `[B, G, G, NUM_CLS]` (pre-softmax).
+    pub cls_logits: Tensor,
+    /// Box regression `[B, G, G, 4]`.
+    pub reg: Tensor,
+    pub cache: ForwardCache,
+    /// Updated running BN statistics (full state-vector layout).
+    pub new_state: Vec<f32>,
+}
+
+/// Loss values + output gradients of [`detection_loss_grads`].
+pub struct LossGrads {
+    pub cls_loss: f64,
+    pub box_loss: f64,
+    pub dlogits: Tensor,
+    pub dreg: Tensor,
+}
+
+impl TrainGraph {
+    /// Resolve the layer graph from a spec (`synth` layout). Rejects
+    /// specs with 1×1 skip convolutions.
+    pub fn new(spec: &ParamSpec) -> Result<Self> {
+        if spec.params.iter().any(|e| e.name.ends_with(".skip.w")) {
+            bail!("TrainGraph supports identity/subsample skips only (got a .skip.w)");
+        }
+        let stem_e = spec.param("stem.w")?;
+        ensure!(stem_e.shape.len() == 4, "stem.w must be rank-4");
+        let width = stem_e.shape[3];
+        let bn = |base: &str, c: usize| -> Result<BnRef> {
+            spec.param(&format!("{base}.scale"))?;
+            spec.state_entry(&format!("{base}.mean"))?;
+            Ok(BnRef {
+                scale: format!("{base}.scale"),
+                bias: format!("{base}.bias"),
+                mean: format!("{base}.mean"),
+                var: format!("{base}.var"),
+                c,
+            })
+        };
+        let mut blocks = Vec::new();
+        for si in 0.. {
+            let mut found_any = false;
+            for bi in 0.. {
+                let p = format!("s{si}.b{bi}");
+                if spec.param(&format!("{p}.conv1.w")).is_err() {
+                    break;
+                }
+                found_any = true;
+                let e = spec.param(&format!("{p}.conv1.w"))?;
+                ensure!(
+                    e.shape[2] == width && e.shape[3] == width,
+                    "TrainGraph requires constant width (block {p})"
+                );
+                let stride = if bi == 0 && si > 0 { 2 } else { 1 };
+                blocks.push(BlockRef {
+                    conv1: ConvRef { w: format!("{p}.conv1.w"), stride },
+                    bn1: bn(&format!("{p}.bn1"), width)?,
+                    conv2: ConvRef { w: format!("{p}.conv2.w"), stride: 1 },
+                    bn2: bn(&format!("{p}.bn2"), width)?,
+                    stride,
+                });
+            }
+            if !found_any {
+                break;
+            }
+        }
+        ensure!(!blocks.is_empty(), "no residual blocks in spec");
+        Ok(TrainGraph {
+            stem: ConvRef { w: "stem.w".into(), stride: 2 },
+            stem_bn: bn("stem.bn", width)?,
+            blocks,
+            head: ConvRef { w: "head.w".into(), stride: 1 },
+            head_bn: bn("head.bn", width)?,
+            width,
+        })
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    fn weights(&self, spec: &ParamSpec, eff: &[f32], name: &str) -> Result<Tensor> {
+        let e = spec.param(name)?;
+        Ok(Tensor::from_vec(&e.shape, eff[e.offset..e.offset + e.size].to_vec()))
+    }
+
+    /// Training forward pass at the effective weights `eff` (a full
+    /// params-layout vector: conv entries projected, the rest equal to
+    /// the shadow params). BN normalizes with *batch* statistics and
+    /// the returned `new_state` carries the running-average update.
+    pub fn forward_train(
+        &self,
+        spec: &ParamSpec,
+        eff: &[f32],
+        state: &[f32],
+        batch: &EncodedBatch,
+    ) -> Result<TrainForward> {
+        ensure!(eff.len() == spec.num_params, "eff/spec mismatch");
+        ensure!(state.len() == spec.num_state, "state/spec mismatch");
+        let b = batch.batch;
+        ensure!(batch.images.len() == b * IMG * IMG * 3, "bad image buffer");
+        let images = Tensor::from_vec(&[b, IMG, IMG, 3], batch.images.clone());
+        let mut new_state = state.to_vec();
+
+        let bn_train = |bn: &BnRef, x: Tensor, ns: &mut [f32]| -> Result<(Tensor, BnCache)> {
+            let scale = spec.view(eff, &bn.scale)?.to_vec();
+            let bias = spec.view(eff, &bn.bias)?.to_vec();
+            let (y, m, v, cache) = bn_forward_batch(x, &scale, &bias);
+            let me = spec.state_entry(&bn.mean)?;
+            let ve = spec.state_entry(&bn.var)?;
+            for i in 0..bn.c {
+                ns[me.offset + i] =
+                    BN_MOMENTUM * state[me.offset + i] + (1.0 - BN_MOMENTUM) * m[i];
+                ns[ve.offset + i] =
+                    BN_MOMENTUM * state[ve.offset + i] + (1.0 - BN_MOMENTUM) * v[i];
+            }
+            Ok((y, cache))
+        };
+
+        let h = conv2d(&images, &self.weights(spec, eff, &self.stem.w)?, self.stem.stride);
+        let (stem_out, stem_bn) = bn_train(&self.stem_bn, h, &mut new_state)?;
+        let mut h = stem_out.clone();
+        h.relu_();
+
+        let mut block_caches = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            let input = h.clone();
+            let r = conv2d(&h, &self.weights(spec, eff, &blk.conv1.w)?, blk.stride);
+            let (bn1_out, bn1) = bn_train(&blk.bn1, r, &mut new_state)?;
+            let mut mid = bn1_out.clone();
+            mid.relu_();
+            let r = conv2d(&mid, &self.weights(spec, eff, &blk.conv2.w)?, 1);
+            let (mut sum, bn2) = bn_train(&blk.bn2, r, &mut new_state)?;
+            let skip = if blk.stride != 1 { input.subsample(blk.stride) } else { input.clone() };
+            sum.add_(&skip);
+            h = sum.clone();
+            h.relu_();
+            block_caches.push(BlockCache { input, bn1, bn1_out, mid, bn2, sum });
+        }
+
+        let head_in = h.clone();
+        let r = conv2d(&h, &self.weights(spec, eff, &self.head.w)?, 1);
+        let (head_out, head_bn) = bn_train(&self.head_bn, r, &mut new_state)?;
+        let mut feat = head_out.clone();
+        feat.relu_();
+
+        let (cls_logits, reg) = heads_forward(spec, eff, &feat, b, self.width)?;
+        Ok(TrainForward {
+            cls_logits,
+            reg,
+            cache: ForwardCache {
+                images,
+                stem_bn,
+                stem_out,
+                blocks: block_caches,
+                head_in,
+                head_bn,
+                head_out,
+                feat,
+                batch: b,
+            },
+            new_state,
+        })
+    }
+
+    /// Backward sweep: gradients of the detection loss w.r.t. every
+    /// parameter, evaluated at the effective weights (straight-through
+    /// for quantized convs). Returns a full params-layout vector.
+    pub fn backward(
+        &self,
+        spec: &ParamSpec,
+        eff: &[f32],
+        cache: &ForwardCache,
+        dlogits: &Tensor,
+        dreg: &Tensor,
+    ) -> Result<Vec<f32>> {
+        let b = cache.batch;
+        let w = self.width;
+        let mut g = vec![0.0f32; spec.num_params];
+        let acc = |g: &mut [f32], name: &str, grad: &[f32]| -> Result<()> {
+            let e = spec.param(name)?;
+            ensure!(grad.len() == e.size, "grad size mismatch for {name}");
+            for (gi, &d) in g[e.offset..e.offset + e.size].iter_mut().zip(grad) {
+                *gi += d;
+            }
+            Ok(())
+        };
+
+        // 1x1 heads (feat [B,G,G,w] flattened to rows)
+        let rows = b * GRID * GRID;
+        let feat = &cache.feat;
+        let mut dfeat = Tensor::zeros(&[b, GRID, GRID, w]);
+        {
+            // reg head
+            let reg_w = spec.view(eff, "reg.w")?;
+            let mut dw = vec![0.0f32; w * 4];
+            let mut db = vec![0.0f32; 4];
+            for r in 0..rows {
+                let f = &feat.data[r * w..(r + 1) * w];
+                let d = &dreg.data[r * 4..(r + 1) * 4];
+                for (ci, &fv) in f.iter().enumerate() {
+                    for (co, &dv) in d.iter().enumerate() {
+                        dw[ci * 4 + co] += fv * dv;
+                    }
+                }
+                for (co, &dv) in d.iter().enumerate() {
+                    db[co] += dv;
+                }
+                let df = &mut dfeat.data[r * w..(r + 1) * w];
+                for (ci, dfv) in df.iter_mut().enumerate() {
+                    for (co, &dv) in d.iter().enumerate() {
+                        *dfv += dv * reg_w[ci * 4 + co];
+                    }
+                }
+            }
+            acc(&mut g, "reg.w", &dw)?;
+            acc(&mut g, "reg.b", &db)?;
+        }
+        {
+            // cls head through the PS vote (linear -> transpose)
+            let cout = K * K * NUM_CLS;
+            let dmaps = ps_vote_backward(dlogits, b);
+            let cls_w = spec.view(eff, "cls.w")?;
+            let mut dw = vec![0.0f32; w * cout];
+            let mut db = vec![0.0f32; cout];
+            for r in 0..rows {
+                let f = &feat.data[r * w..(r + 1) * w];
+                let d = &dmaps.data[r * cout..(r + 1) * cout];
+                for (ci, &fv) in f.iter().enumerate() {
+                    if fv != 0.0 {
+                        let dwrow = &mut dw[ci * cout..(ci + 1) * cout];
+                        for (dwv, &dv) in dwrow.iter_mut().zip(d) {
+                            *dwv += fv * dv;
+                        }
+                    }
+                }
+                for (co, &dv) in d.iter().enumerate() {
+                    db[co] += dv;
+                }
+                let df = &mut dfeat.data[r * w..(r + 1) * w];
+                for (ci, dfv) in df.iter_mut().enumerate() {
+                    let wrow = &cls_w[ci * cout..(ci + 1) * cout];
+                    let mut s = 0.0f32;
+                    for (&dv, &wv) in d.iter().zip(wrow) {
+                        s += dv * wv;
+                    }
+                    *dfv += s;
+                }
+            }
+            acc(&mut g, "cls.w", &dw)?;
+            acc(&mut g, "cls.b", &db)?;
+        }
+
+        // head conv + BN + ReLU
+        relu_mask_(&mut dfeat, &cache.head_out);
+        let (dh, ds, db) = bn_backward(&dfeat, &cache.head_bn);
+        acc(&mut g, &self.head_bn.scale, &ds)?;
+        acc(&mut g, &self.head_bn.bias, &db)?;
+        let head_w = self.weights(spec, eff, &self.head.w)?;
+        let (mut dh, dw) = conv2d_backward(&cache.head_in, &head_w, 1, &dh);
+        acc(&mut g, &self.head.w, &dw.data)?;
+
+        // residual blocks, reverse order
+        for (blk, bc) in self.blocks.iter().zip(&cache.blocks).rev() {
+            relu_mask_(&mut dh, &bc.sum);
+            let dskip = dh.clone();
+            let (dr, ds, db) = bn_backward(&dh, &bc.bn2);
+            acc(&mut g, &blk.bn2.scale, &ds)?;
+            acc(&mut g, &blk.bn2.bias, &db)?;
+            let conv2_w = self.weights(spec, eff, &blk.conv2.w)?;
+            let (mut dr, dw) = conv2d_backward(&bc.mid, &conv2_w, 1, &dr);
+            acc(&mut g, &blk.conv2.w, &dw.data)?;
+            relu_mask_(&mut dr, &bc.bn1_out);
+            let (dr, ds, db) = bn_backward(&dr, &bc.bn1);
+            acc(&mut g, &blk.bn1.scale, &ds)?;
+            acc(&mut g, &blk.bn1.bias, &db)?;
+            let conv1_w = self.weights(spec, eff, &blk.conv1.w)?;
+            let (dx, dw) = conv2d_backward(&bc.input, &conv1_w, blk.stride, &dr);
+            acc(&mut g, &blk.conv1.w, &dw.data)?;
+            dh = dx;
+            // skip-path gradient: identity, or scatter for subsample
+            if blk.stride != 1 {
+                let (n, oh, ow, c) =
+                    (dskip.shape[0], dskip.shape[1], dskip.shape[2], dskip.shape[3]);
+                for ni in 0..n {
+                    for y in 0..oh {
+                        for x in 0..ow {
+                            for ci in 0..c {
+                                *dh.at4_mut(ni, y * blk.stride, x * blk.stride, ci) +=
+                                    dskip.at4(ni, y, x, ci);
+                            }
+                        }
+                    }
+                }
+            } else {
+                dh.add_(&dskip);
+            }
+        }
+
+        // stem
+        relu_mask_(&mut dh, &cache.stem_out);
+        let (dh, ds, db) = bn_backward(&dh, &cache.stem_bn);
+        acc(&mut g, &self.stem_bn.scale, &ds)?;
+        acc(&mut g, &self.stem_bn.bias, &db)?;
+        let stem_w = self.weights(spec, eff, &self.stem.w)?;
+        let (_, dw) = conv2d_backward(&cache.images, &stem_w, self.stem.stride, &dh);
+        acc(&mut g, &self.stem.w, &dw.data)?;
+        Ok(g)
+    }
+
+    /// Eval-mode forward at the effective weights: BN uses the running
+    /// statistics in `state`. Returns `(softmax cls_prob, reg)` in the
+    /// same layout as `DetectorModel::forward`.
+    pub fn forward_eval(
+        &self,
+        spec: &ParamSpec,
+        eff: &[f32],
+        state: &[f32],
+        images: &[f32],
+        b: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(images.len() == b * IMG * IMG * 3, "bad image buffer");
+        let x = Tensor::from_vec(&[b, IMG, IMG, 3], images.to_vec());
+        let bn_eval = |bn: &BnRef, mut x: Tensor| -> Result<Tensor> {
+            let scale = spec.view(eff, &bn.scale)?;
+            let bias = spec.view(eff, &bn.bias)?;
+            let mean = spec.view_state(state, &bn.mean)?;
+            let var = spec.view_state(state, &bn.var)?;
+            let (a, bb) = super::layers::fold_bn(scale, bias, mean, var, BN_EPS);
+            x.affine_channels_(&a, &bb);
+            Ok(x)
+        };
+        let mut h = conv2d(&x, &self.weights(spec, eff, &self.stem.w)?, self.stem.stride);
+        h = bn_eval(&self.stem_bn, h)?;
+        h.relu_();
+        for blk in &self.blocks {
+            let r = conv2d(&h, &self.weights(spec, eff, &blk.conv1.w)?, blk.stride);
+            let mut r = bn_eval(&blk.bn1, r)?;
+            r.relu_();
+            let r2 = conv2d(&r, &self.weights(spec, eff, &blk.conv2.w)?, 1);
+            let mut sum = bn_eval(&blk.bn2, r2)?;
+            let skip = if blk.stride != 1 { h.subsample(blk.stride) } else { h };
+            sum.add_(&skip);
+            sum.relu_();
+            h = sum;
+        }
+        let r = conv2d(&h, &self.weights(spec, eff, &self.head.w)?, 1);
+        let mut feat = bn_eval(&self.head_bn, r)?;
+        feat.relu_();
+        let (logits, reg) = heads_forward(spec, eff, &feat, b, self.width)?;
+        let prob = logits.softmax_last();
+        Ok((prob.data, reg.data))
+    }
+}
+
+/// Shared 1×1 heads: `feat [B,G,G,w]` → PS-voted class logits + reg.
+fn heads_forward(
+    spec: &ParamSpec,
+    eff: &[f32],
+    feat: &Tensor,
+    b: usize,
+    w: usize,
+) -> Result<(Tensor, Tensor)> {
+    let cls_w = spec.view(eff, "cls.w")?;
+    let cls_b = spec.view(eff, "cls.b")?;
+    let reg_w = spec.view(eff, "reg.w")?;
+    let reg_b = spec.view(eff, "reg.b")?;
+    let cout = K * K * NUM_CLS;
+    let rows = b * GRID * GRID;
+    let mut maps = Tensor::zeros(&[b, GRID, GRID, cout]);
+    let mut reg = Tensor::zeros(&[b, GRID, GRID, 4]);
+    for r in 0..rows {
+        let f = &feat.data[r * w..(r + 1) * w];
+        let m = &mut maps.data[r * cout..(r + 1) * cout];
+        m.copy_from_slice(cls_b);
+        for (ci, &fv) in f.iter().enumerate() {
+            if fv != 0.0 {
+                let wrow = &cls_w[ci * cout..(ci + 1) * cout];
+                for (mv, &wv) in m.iter_mut().zip(wrow) {
+                    *mv += fv * wv;
+                }
+            }
+        }
+        let rg = &mut reg.data[r * 4..(r + 1) * 4];
+        rg.copy_from_slice(reg_b);
+        for (ci, &fv) in f.iter().enumerate() {
+            for (co, rv) in rg.iter_mut().enumerate() {
+                *rv += fv * reg_w[ci * 4 + co];
+            }
+        }
+    }
+    Ok((ps_vote(&maps), reg))
+}
+
+/// Batch-statistics BN forward: returns `(y, mean, var, cache)`.
+fn bn_forward_batch(x: Tensor, scale: &[f32], bias: &[f32]) -> (Tensor, Vec<f32>, Vec<f32>, BnCache) {
+    let c = *x.shape.last().unwrap();
+    let n = (x.len() / c) as f64;
+    let mut mean = vec![0.0f64; c];
+    for chunk in x.data.chunks(c) {
+        for (m, &v) in mean.iter_mut().zip(chunk) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n;
+    }
+    let mut var = vec![0.0f64; c];
+    for chunk in x.data.chunks(c) {
+        for ((vv, &xv), &m) in var.iter_mut().zip(chunk).zip(&mean) {
+            let d = xv as f64 - m;
+            *vv += d * d;
+        }
+    }
+    for v in &mut var {
+        *v /= n;
+    }
+    let inv: Vec<f32> =
+        var.iter().map(|&v| (1.0 / (v + BN_EPS as f64).sqrt()) as f32).collect();
+    let meanf: Vec<f32> = mean.iter().map(|&m| m as f32).collect();
+    let varf: Vec<f32> = var.iter().map(|&v| v as f32).collect();
+    let mut xhat = x;
+    for chunk in xhat.data.chunks_mut(c) {
+        for ((xv, &m), &iv) in chunk.iter_mut().zip(&meanf).zip(&inv) {
+            *xv = (*xv - m) * iv;
+        }
+    }
+    let mut y = xhat.clone();
+    for chunk in y.data.chunks_mut(c) {
+        for ((yv, &s), &b) in chunk.iter_mut().zip(scale).zip(bias) {
+            *yv = *yv * s + b;
+        }
+    }
+    let cache = BnCache { xhat, inv, scale: scale.to_vec() };
+    (y, meanf, varf, cache)
+}
+
+/// BN backward through the batch statistics:
+/// `dx = inv/N · (N·dxhat − Σdxhat − x̂·Σ(dxhat·x̂))`, `dxhat = dy·scale`.
+fn bn_backward(dout: &Tensor, cache: &BnCache) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let c = *dout.shape.last().unwrap();
+    let n = (dout.len() / c) as f64;
+    let mut dscale = vec![0.0f64; c];
+    let mut dbias = vec![0.0f64; c];
+    let mut sum_dxhat = vec![0.0f64; c];
+    let mut sum_dxhat_xhat = vec![0.0f64; c];
+    for (dchunk, xchunk) in dout.data.chunks(c).zip(cache.xhat.data.chunks(c)) {
+        for i in 0..c {
+            let dy = dchunk[i] as f64;
+            let xh = xchunk[i] as f64;
+            dscale[i] += dy * xh;
+            dbias[i] += dy;
+            let dxh = dy * cache.scale[i] as f64;
+            sum_dxhat[i] += dxh;
+            sum_dxhat_xhat[i] += dxh * xh;
+        }
+    }
+    let mut dx = Tensor::zeros(&dout.shape);
+    for ((dxchunk, dchunk), xchunk) in dx
+        .data
+        .chunks_mut(c)
+        .zip(dout.data.chunks(c))
+        .zip(cache.xhat.data.chunks(c))
+    {
+        for i in 0..c {
+            let dxh = dchunk[i] as f64 * cache.scale[i] as f64;
+            let v = (cache.inv[i] as f64 / n)
+                * (n * dxh - sum_dxhat[i] - xchunk[i] as f64 * sum_dxhat_xhat[i]);
+            dxchunk[i] = v as f32;
+        }
+    }
+    let ds: Vec<f32> = dscale.iter().map(|&v| v as f32).collect();
+    let db: Vec<f32> = dbias.iter().map(|&v| v as f32).collect();
+    (dx, ds, db)
+}
+
+/// Zero `d` wherever the forward pre-activation was non-positive.
+fn relu_mask_(d: &mut Tensor, pre: &Tensor) {
+    assert_eq!(d.shape, pre.shape);
+    for (dv, &pv) in d.data.iter_mut().zip(&pre.data) {
+        if pv <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+}
+
+/// Gradients of SAME-padded conv2d: returns `(dx, dw)`.
+fn conv2d_backward(x: &Tensor, w: &Tensor, stride: usize, dout: &Tensor) -> (Tensor, Tensor) {
+    let (n, h, ww_in, cin) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, _, cout) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (oh, ow) = (dout.shape[1], dout.shape[2]);
+    let (lo_h, hi_h) = same_padding(h, kh, stride);
+    let (lo_w, hi_w) = same_padding(ww_in, kw, stride);
+    let xp = pad_spatial(x, lo_h, hi_h, lo_w, hi_w);
+    let (ph, pw) = (h + lo_h + hi_h, ww_in + lo_w + hi_w);
+    let mut dxp = Tensor::zeros(&[n, ph, pw, cin]);
+    let mut dw = Tensor::zeros(&[kh, kw, cin, cout]);
+    for ni in 0..n {
+        for oy in 0..oh {
+            let iy0 = oy * stride;
+            for ox in 0..ow {
+                let ix0 = ox * stride;
+                let dbase = ((ni * oh + oy) * ow + ox) * cout;
+                let dvec = &dout.data[dbase..dbase + cout];
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let ibase = ((ni * ph + iy0 + ky) * pw + ix0 + kx) * cin;
+                        let wbase = (ky * kw + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = xp.data[ibase + ci];
+                            let wrow = &w.data[wbase + ci * cout..wbase + (ci + 1) * cout];
+                            let dwrow =
+                                &mut dw.data[wbase + ci * cout..wbase + (ci + 1) * cout];
+                            let mut dxv = 0.0f32;
+                            for co in 0..cout {
+                                let dv = dvec[co];
+                                dwrow[co] += xv * dv;
+                                dxv += dv * wrow[co];
+                            }
+                            dxp.data[ibase + ci] += dxv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // crop the padding off dx
+    let mut dx = Tensor::zeros(&[n, h, ww_in, cin]);
+    for ni in 0..n {
+        for y in 0..h {
+            let src = ((ni * ph + y + lo_h) * pw + lo_w) * cin;
+            let dst = ((ni * h + y) * ww_in) * cin;
+            dx.data[dst..dst + ww_in * cin].copy_from_slice(&dxp.data[src..src + ww_in * cin]);
+        }
+    }
+    (dx, dw)
+}
+
+/// Transpose of [`ps_vote`]: scatter `dout [B,G,G,NUM_CLS]` back to
+/// `dmaps [B,G,G,K·K·NUM_CLS]` (both /= K·K like the forward).
+fn ps_vote_backward(dout: &Tensor, b: usize) -> Tensor {
+    let kk = (K * K) as f32;
+    let mut dmaps = Tensor::zeros(&[b, GRID, GRID, K * K * NUM_CLS]);
+    for ni in 0..b {
+        for y in 0..GRID as i64 {
+            for x in 0..GRID as i64 {
+                for dy in -1i64..=1 {
+                    for dx in -1i64..=1 {
+                        let (sy, sx) = (y + dy, x + dx);
+                        if sy < 0 || sy >= GRID as i64 || sx < 0 || sx >= GRID as i64 {
+                            continue;
+                        }
+                        let g = ((dy + 1) * K as i64 + (dx + 1)) as usize;
+                        let src = ((ni * GRID + y as usize) * GRID + x as usize) * NUM_CLS;
+                        let dst = ((ni * GRID + sy as usize) * GRID + sx as usize)
+                            * (K * K * NUM_CLS)
+                            + g * NUM_CLS;
+                        for c in 0..NUM_CLS {
+                            dmaps.data[dst + c] += dout.data[src + c] / kk;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dmaps
+}
+
+/// The grid detection loss of `model.py::detection_loss` plus its
+/// output gradients: positives-upweighted softmax CE + masked
+/// smooth-L1, `w = 1 + 3·pos`.
+pub fn detection_loss_grads(
+    cls_logits: &Tensor,
+    reg: &Tensor,
+    batch: &EncodedBatch,
+) -> LossGrads {
+    let b = batch.batch;
+    let cells = b * GRID * GRID;
+    assert_eq!(cls_logits.len(), cells * NUM_CLS);
+    assert_eq!(reg.len(), cells * 4);
+    let mut dlogits = Tensor::zeros(&[b, GRID, GRID, NUM_CLS]);
+    let mut dreg = Tensor::zeros(&[b, GRID, GRID, 4]);
+
+    let mut wsum = 0.0f64;
+    for &p in &batch.pos {
+        wsum += (1.0 + 3.0 * p) as f64;
+    }
+    let npos = batch.pos.iter().map(|&p| p as f64).sum::<f64>().max(1.0);
+
+    let mut cls_loss = 0.0f64;
+    let mut box_loss = 0.0f64;
+    for cell in 0..cells {
+        let target = batch.cls_t[cell] as usize;
+        let wcell = (1.0 + 3.0 * batch.pos[cell]) as f64;
+        let logits = &cls_logits.data[cell * NUM_CLS..(cell + 1) * NUM_CLS];
+        let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &l in logits {
+            denom += ((l - max) as f64).exp();
+        }
+        let log_denom = denom.ln();
+        cls_loss += wcell * (log_denom - (logits[target] - max) as f64);
+        let dl = &mut dlogits.data[cell * NUM_CLS..(cell + 1) * NUM_CLS];
+        for (c, dv) in dl.iter_mut().enumerate() {
+            let sm = ((logits[c] - max) as f64).exp() / denom;
+            let onehot = if c == target { 1.0 } else { 0.0 };
+            *dv = ((sm - onehot) * wcell / wsum) as f32;
+        }
+
+        let pos = batch.pos[cell] as f64;
+        let r = &reg.data[cell * 4..(cell + 1) * 4];
+        let t = &batch.box_t[cell * 4..(cell + 1) * 4];
+        let dr = &mut dreg.data[cell * 4..(cell + 1) * 4];
+        for i in 0..4 {
+            let d = (r[i] - t[i]) as f64;
+            let sl1 = if d.abs() < 1.0 { 0.5 * d * d } else { d.abs() - 0.5 };
+            box_loss += sl1 * pos;
+            dr[i] = (d.clamp(-1.0, 1.0) * pos / npos) as f32;
+        }
+    }
+    cls_loss /= wsum;
+    box_loss /= npos;
+    LossGrads { cls_loss, box_loss, dlogits, dreg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{encode_targets, generate_scene, SceneConfig};
+    use crate::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
+
+    fn setup(width: usize) -> (ParamSpec, Vec<f32>, Vec<f32>, EncodedBatch) {
+        let spec = synthetic_spec(SynthConfig { width, stages: 3 });
+        let ck = synthetic_checkpoint(&spec, 5, 32);
+        let cfg = SceneConfig::default();
+        let scenes: Vec<_> = (0..2).map(|i| generate_scene(11, i, &cfg)).collect();
+        let batch = encode_targets(&scenes);
+        (spec, ck.params, ck.state, batch)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let (spec, params, state, batch) = setup(4);
+        let graph = TrainGraph::new(&spec).unwrap();
+        let out = graph.forward_train(&spec, &params, &state, &batch).unwrap();
+        assert_eq!(out.cls_logits.shape, vec![2, GRID, GRID, NUM_CLS]);
+        assert_eq!(out.reg.shape, vec![2, GRID, GRID, 4]);
+        assert!(out.cls_logits.data.iter().all(|x| x.is_finite()));
+        assert!(out.new_state.iter().all(|x| x.is_finite()));
+        // running stats moved away from the init
+        assert_ne!(out.new_state, state);
+    }
+
+    #[test]
+    fn loss_grads_match_finite_difference_on_outputs() {
+        let (spec, params, state, batch) = setup(4);
+        let graph = TrainGraph::new(&spec).unwrap();
+        let out = graph.forward_train(&spec, &params, &state, &batch).unwrap();
+        let lg = detection_loss_grads(&out.cls_logits, &out.reg, &batch);
+        assert!(lg.cls_loss.is_finite() && lg.box_loss.is_finite());
+        // perturb one logit and compare the loss delta with the gradient
+        let idx = 3 * NUM_CLS + 1;
+        let eps = 1e-3f32;
+        let mut up = out.cls_logits.clone();
+        up.data[idx] += eps;
+        let mut down = out.cls_logits.clone();
+        down.data[idx] -= eps;
+        let lu = detection_loss_grads(&up, &out.reg, &batch);
+        let ld = detection_loss_grads(&down, &out.reg, &batch);
+        let fd = (lu.cls_loss - ld.cls_loss) / (2.0 * eps as f64);
+        let an = lg.dlogits.data[idx] as f64;
+        assert!(
+            (fd - an).abs() <= 1e-4 + 0.05 * an.abs().max(fd.abs()),
+            "fd {fd} vs analytic {an}"
+        );
+        // reg gradient likewise
+        let ridx = 5 * 4 + 2;
+        let mut up = out.reg.clone();
+        up.data[ridx] += eps;
+        let mut down = out.reg.clone();
+        down.data[ridx] -= eps;
+        let lu = detection_loss_grads(&out.cls_logits, &up, &batch);
+        let ld = detection_loss_grads(&out.cls_logits, &down, &batch);
+        let fd = (lu.box_loss - ld.box_loss) / (2.0 * eps as f64);
+        let an = lg.dreg.data[ridx] as f64;
+        assert!((fd - an).abs() <= 1e-4 + 0.05 * an.abs().max(fd.abs()), "fd {fd} vs {an}");
+    }
+
+    #[test]
+    fn backward_matches_directional_finite_difference() {
+        let (spec, params, state, batch) = setup(4);
+        let graph = TrainGraph::new(&spec).unwrap();
+
+        let loss_at = |p: &[f32]| -> f64 {
+            let out = graph.forward_train(&spec, p, &state, &batch).unwrap();
+            let lg = detection_loss_grads(&out.cls_logits, &out.reg, &batch);
+            lg.cls_loss + lg.box_loss
+        };
+        let out = graph.forward_train(&spec, &params, &state, &batch).unwrap();
+        let lg = detection_loss_grads(&out.cls_logits, &out.reg, &batch);
+        let g = graph.backward(&spec, &params, &out.cache, &lg.dlogits, &lg.dreg).unwrap();
+        assert_eq!(g.len(), spec.num_params);
+        assert!(g.iter().all(|x| x.is_finite()));
+
+        // deterministic pseudo-random direction
+        let mut rng = crate::data::Rng::new(123);
+        let dir: Vec<f32> = (0..spec.num_params).map(|_| rng.normal()).collect();
+        let norm = (dir.iter().map(|&d| (d as f64) * (d as f64)).sum::<f64>()).sqrt();
+        let dir: Vec<f32> = dir.iter().map(|&d| (d as f64 / norm) as f32).collect();
+        let an: f64 = g.iter().zip(&dir).map(|(&gv, &dv)| gv as f64 * dv as f64).sum();
+        let eps = 5e-3f64;
+        let up: Vec<f32> =
+            params.iter().zip(&dir).map(|(&p, &d)| p + (eps as f32) * d).collect();
+        let dn: Vec<f32> =
+            params.iter().zip(&dir).map(|(&p, &d)| p - (eps as f32) * d).collect();
+        let fd = (loss_at(&up) - loss_at(&dn)) / (2.0 * eps);
+        // f32 forward + ReLU kinks: accept a few percent of mismatch
+        assert!(
+            (fd - an).abs() <= 0.08 * an.abs().max(fd.abs()).max(1e-3),
+            "directional derivative mismatch: fd {fd} vs analytic {an}"
+        );
+    }
+
+    #[test]
+    fn eval_forward_matches_detector_model() {
+        use crate::nn::{DetectorModel, EngineKind};
+        let (spec, params, state, batch) = setup(4);
+        let graph = TrainGraph::new(&spec).unwrap();
+        let ck = crate::coordinator::params::Checkpoint {
+            arch: spec.arch.clone(),
+            bits: 32,
+            step: 0,
+            params: params.clone(),
+            state: state.clone(),
+        };
+        let mut model = DetectorModel::build(&spec, &ck, EngineKind::Float).unwrap();
+        let (p1, r1) = model.forward_naive(&batch.images, batch.batch);
+        let (p2, r2) = graph.forward_eval(&spec, &params, &state, &batch.images, batch.batch).unwrap();
+        let dp = p1
+            .iter()
+            .zip(&p2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let dr = r1
+            .iter()
+            .zip(&r2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(dp < 1e-4, "cls prob mismatch {dp}");
+        assert!(dr < 1e-3, "reg mismatch {dr}");
+    }
+
+    #[test]
+    fn rejects_skip_conv_specs() {
+        // width-changing specs need 1x1 skip convs; synth never makes
+        // them, but guard the error path with a hand-built entry.
+        let mut spec = synthetic_spec(SynthConfig { width: 4, stages: 2 });
+        let off = spec.num_params;
+        spec.params.push(crate::coordinator::params::SpecEntry {
+            name: "s1.b0.skip.w".into(),
+            shape: vec![1, 1, 4, 4],
+            kind: "conv".into(),
+            quantize: true,
+            offset: off,
+            size: 16,
+        });
+        spec.num_params += 16;
+        assert!(TrainGraph::new(&spec).is_err());
+    }
+}

@@ -22,8 +22,14 @@
 //! * [`synth`] — synthetic spec/checkpoint builder so the engines (and
 //!   the sharded server on top of them) run hermetically, with no
 //!   Python artifacts.
+//! * [`grad`] — the trainable twin of the eval engines: batch-stat BN
+//!   forward, full backward sweep, and the detection-loss gradients
+//!   behind `coordinator::trainer::HermeticTrainer`, so the paper's
+//!   train → quantize → retrain → evaluate loop also runs with no
+//!   Python and no artifacts.
 
 pub mod conv;
+pub mod grad;
 pub mod layers;
 pub mod model;
 pub mod plan;

@@ -101,24 +101,31 @@ pub fn qtilde(w: &[f32], mu: f32, bits: u32) -> (Vec<f32>, Vec<i32>) {
 /// `s = ⌊log2(4u / 3v)⌋` with `u = Σ_t 2^{-t} ‖W_[k_t]‖₁` and
 /// `v = Σ_t k_t 2^{-2t}`, both truncated to the first
 /// [`SCALE_TERMS`] levels. Returns 0 when every weight was pruned.
+///
+/// The partial sums accumulate in f64: near `f32::MAX` a layer-sized
+/// `‖W‖₁` overflows f32 to inf, and `inf as i32` saturates so the
+/// caller's `2^s` becomes inf (then `inf·0` = NaN for pruned weights).
+/// The result is clamped to `[-126, 127]` so `2^s` stays a finite,
+/// normal f32 even for extreme-magnitude inputs.
 pub fn scale_power(w: &[f32], levels: &[i32], bits: u32) -> i32 {
     let n = levels_for_bits(bits).min(SCALE_TERMS);
-    let mut num = 0.0f32;
-    let mut den = 0.0f32;
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
     for lv in 0..n as i32 {
-        let mut l1 = 0.0f32;
+        let mut l1 = 0.0f64;
         let mut k = 0usize;
         for (i, &t) in levels.iter().enumerate() {
             if t == lv {
-                l1 += w[i].abs();
+                l1 += w[i].abs() as f64;
                 k += 1;
             }
         }
-        num += f32::powi(2.0, -lv) * l1;
-        den += f32::powi(2.0, -2 * lv) * k as f32;
+        num += f64::powi(2.0, -lv) * l1;
+        den += f64::powi(2.0, -2 * lv) * k as f64;
     }
     if den > 0.0 && num > 0.0 {
-        (4.0 * num / (3.0 * den)).log2().floor() as i32
+        let s = (4.0 * num / (3.0 * den)).log2().floor();
+        s.clamp(-126.0, 127.0) as i32
     } else {
         0
     }

@@ -1,9 +1,13 @@
 //! End-to-end training integration: a short projected-SGD run through
 //! the real `train_step` artifact must reduce the loss, produce finite
-//! state, evaluate, and round-trip through a checkpoint.
+//! state, evaluate, and round-trip through a checkpoint. The
+//! `save_outcome` round-trip at the bottom runs on the hermetic
+//! trainer, so it needs no artifacts.
 
 use lbw_net::coordinator::params::Checkpoint;
-use lbw_net::coordinator::trainer::{TrainConfig, Trainer};
+use lbw_net::coordinator::trainer::{
+    save_outcome, HermeticTrainer, TrainConfig, TrainMethod, Trainer,
+};
 use lbw_net::data::SceneConfig;
 use lbw_net::runtime::{default_artifacts_dir, Runtime};
 
@@ -81,6 +85,61 @@ fn checkpoint_roundtrip_preserves_evaluation() {
     let m1 = trainer.evaluate(&out.checkpoint.params, &out.checkpoint.state).unwrap();
     let m2 = trainer.evaluate(&ck.params, &ck.state).unwrap();
     assert_eq!(m1, m2, "evaluation must be deterministic after reload");
+}
+
+/// `save_outcome` writes the checkpoint plus a `.history.jsonl`
+/// sidecar; both must round-trip from a *hermetic* training run — the
+/// checkpoint bitwise, the history as one valid JSON object per
+/// logged step. No artifacts required.
+#[test]
+fn hermetic_save_outcome_roundtrip() {
+    let cfg = TrainConfig {
+        seed: 7,
+        steps: 5,
+        lr: 0.02,
+        train_scenes: 8,
+        eval_scenes: 2,
+        log_every: 2,
+        ..Default::default()
+    };
+    let trainer = HermeticTrainer::new(cfg, 4, TrainMethod::Lbw { bits: 6 })
+        .unwrap()
+        .with_batch(2);
+    let out = trainer.train().unwrap().outcome;
+    assert!(!out.history.is_empty(), "log_every=2 over 5 steps must log");
+
+    let dir = std::env::temp_dir().join("lbw_int_train");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("hermetic_roundtrip.lbw");
+    save_outcome(&out, &path).unwrap();
+
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.arch, out.checkpoint.arch);
+    assert_eq!(ck.bits, out.checkpoint.bits);
+    assert_eq!(ck.step, out.checkpoint.step);
+    assert_eq!(ck.params.len(), out.checkpoint.params.len());
+    for (i, (a, b)) in ck.params.iter().zip(&out.checkpoint.params).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "param {i} changed across save/load");
+    }
+    for (a, b) in ck.state.iter().zip(&out.checkpoint.state) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    let hist_path = path.with_extension("history.jsonl");
+    let text = std::fs::read_to_string(&hist_path).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(lines.len(), out.history.len(), "one JSONL line per logged step");
+    for (line, h) in lines.iter().zip(&out.history) {
+        assert!(line.starts_with('{') && line.ends_with('}'), "not an object: {line}");
+        assert!(
+            line.contains(&format!("\"step\":{}", h.step)),
+            "step {} missing from {line}",
+            h.step
+        );
+        // a NaN loss would serialize as invalid JSON — the hermetic
+        // step must produce real numbers for every field
+        assert!(!line.contains("NaN") && !line.contains("inf"), "{line}");
+    }
 }
 
 #[test]

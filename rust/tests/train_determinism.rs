@@ -1,0 +1,188 @@
+//! Seeded determinism for the hermetic training loop (ISSUE 6): the
+//! same `TrainConfig` seed must reproduce the **bitwise-identical**
+//! checkpoint, and a trained-then-quantized checkpoint must serve the
+//! exact same detections through every shards × threads server shape.
+//! Together these pin the whole paper loop — train → quantize →
+//! `build_with_quants` → serve — to a deterministic function of the
+//! seed, which is what lets BENCH_train.json rows be compared across
+//! machines and CI runs.
+//!
+//! Hermetic — no Python, no artifacts; runs on a clean checkout.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lbw_net::consts::IMG;
+use lbw_net::coordinator::server::{DetectServer, Executor, ServerConfig};
+use lbw_net::coordinator::trainer::{
+    quantize_conv_layers, HermeticTrainer, TrainConfig, TrainMethod,
+};
+use lbw_net::data::{generate_scene, SceneConfig};
+use lbw_net::detection::{decode_grid, nms, Detection};
+use lbw_net::nn::{DetectorModel, EngineKind};
+use lbw_net::runtime::pool::ThreadPool;
+
+fn tiny_cfg(seed: u64) -> TrainConfig {
+    TrainConfig {
+        seed,
+        steps: 6,
+        lr: 0.02,
+        train_scenes: 8,
+        eval_scenes: 4,
+        log_every: 0,
+        ..Default::default()
+    }
+}
+
+fn tiny_trainer(seed: u64, method: TrainMethod) -> HermeticTrainer {
+    HermeticTrainer::new(tiny_cfg(seed), 4, method).unwrap().with_batch(2)
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} differs ({x} vs {y})");
+    }
+}
+
+/// Same seed ⇒ bitwise-identical params, state, and mAP; a different
+/// seed must actually change the outcome (the seed is live, not
+/// decorative).
+#[test]
+fn same_seed_reproduces_bitwise_identical_checkpoint() {
+    for method in [TrainMethod::Float, TrainMethod::Lbw { bits: 6 }] {
+        let a = tiny_trainer(21, method).train().unwrap();
+        let b = tiny_trainer(21, method).train().unwrap();
+        let tag = method.name();
+        assert_bitwise(
+            &a.outcome.checkpoint.params,
+            &b.outcome.checkpoint.params,
+            &format!("{tag} params"),
+        );
+        assert_bitwise(
+            &a.outcome.checkpoint.state,
+            &b.outcome.checkpoint.state,
+            &format!("{tag} state"),
+        );
+        assert_eq!(
+            a.outcome.final_map.to_bits(),
+            b.outcome.final_map.to_bits(),
+            "{tag} mAP must be bit-reproducible"
+        );
+    }
+    let a = tiny_trainer(21, TrainMethod::Float).train().unwrap();
+    let c = tiny_trainer(22, TrainMethod::Float).train().unwrap();
+    assert!(
+        a.outcome
+            .checkpoint
+            .params
+            .iter()
+            .zip(&c.outcome.checkpoint.params)
+            .any(|(x, y)| x.to_bits() != y.to_bits()),
+        "different seeds produced identical checkpoints"
+    );
+}
+
+/// Fine-tuning is deterministic too: the warm-started projected-SGD
+/// run (`train_from`) replays bitwise-identically from the same
+/// pretrained checkpoint.
+#[test]
+fn warm_start_fine_tune_is_deterministic() {
+    let float = tiny_trainer(33, TrainMethod::Float).train().unwrap();
+    let start = &float.outcome.checkpoint;
+    let t = tiny_trainer(33, TrainMethod::TernaryExact);
+    let a = t.train_from(start, 4, 0.01, 6).unwrap();
+    let b = t.train_from(start, 4, 0.01, 6).unwrap();
+    assert_bitwise(
+        &a.outcome.checkpoint.params,
+        &b.outcome.checkpoint.params,
+        "ternary fine-tune params",
+    );
+    assert_eq!(a.quant_dist.to_bits(), b.quant_dist.to_bits());
+}
+
+fn detect_all(
+    server: &DetectServer,
+    images: &[Vec<f32>],
+) -> Vec<Vec<Detection>> {
+    let handle = server.handle();
+    images.iter().map(|img| handle.detect(img.clone()).unwrap()).collect()
+}
+
+/// The full loop: train a tiny float detector, LBW-quantize the
+/// checkpoint once, and serve it. Every server shape (1 shard × 1
+/// thread up to 2 shards × 4 threads) must return detections bitwise
+/// equal to the single-threaded plan built from the same shared
+/// projection — training feeding serving does not break the
+/// thread-count determinism the runtime guarantees.
+#[test]
+fn trained_checkpoint_serves_identically_across_shards_and_threads() {
+    let trainer = tiny_trainer(44, TrainMethod::Float);
+    let ckpt = trainer.train().unwrap().outcome.checkpoint;
+    let spec = &trainer.spec;
+    let engine = EngineKind::Shift { bits: 6 };
+
+    // the projection the server computes at startup, done once here
+    let qpool = ThreadPool::new(2);
+    let quants = quantize_conv_layers(spec, &ckpt.params, 6, 0.75, &qpool);
+    let model = DetectorModel::build_with_quants(spec, &ckpt, engine, Some(&quants)).unwrap();
+    let mut plan = model.plan_with_pool(1, Arc::new(ThreadPool::new(1)));
+
+    let scene_cfg = SceneConfig::default();
+    let images: Vec<Vec<f32>> =
+        (0..6u64).map(|i| generate_scene(44, 100 + i, &scene_cfg).image).collect();
+    let score_thresh = ServerConfig::default().score_thresh;
+    let nms_iou = ServerConfig::default().nms_iou;
+    let reference: Vec<Vec<Detection>> = images
+        .iter()
+        .map(|img| {
+            assert_eq!(img.len(), IMG * IMG * 3);
+            let (cp, rg) = plan.forward(img, 1);
+            nms(decode_grid(cp, rg, score_thresh), nms_iou)
+        })
+        .collect();
+    assert!(
+        reference.iter().any(|d| !d.is_empty()),
+        "trained detector found nothing — the comparison would be vacuous"
+    );
+
+    for (shards, threads) in [(1usize, 1usize), (1, 4), (2, 4)] {
+        let cfg = ServerConfig {
+            shards,
+            threads,
+            max_batch: 4,
+            batch_window: Duration::from_millis(2),
+            executor: Executor::Planned,
+            ..Default::default()
+        };
+        let server = DetectServer::start_engine(spec, &ckpt, engine, cfg).unwrap();
+        let got = detect_all(&server, &images);
+        server.shutdown();
+        for (i, (g, want)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(g.len(), want.len(), "{shards}x{threads} image {i}: count");
+            for (a, b) in g.iter().zip(want) {
+                assert_eq!(a.class, b.class, "{shards}x{threads} image {i}: class");
+                assert_eq!(
+                    a.score.to_bits(),
+                    b.score.to_bits(),
+                    "{shards}x{threads} image {i}: score bits"
+                );
+                for (k, (ac, bc)) in [
+                    (a.bbox.x1, b.bbox.x1),
+                    (a.bbox.y1, b.bbox.y1),
+                    (a.bbox.x2, b.bbox.x2),
+                    (a.bbox.y2, b.bbox.y2),
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    assert_eq!(
+                        ac.to_bits(),
+                        bc.to_bits(),
+                        "{shards}x{threads} image {i}: bbox corner {k}"
+                    );
+                }
+            }
+        }
+    }
+}

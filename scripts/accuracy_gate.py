@@ -1,0 +1,205 @@
+#!/usr/bin/env python3
+"""Accuracy-trajectory regression gate for BENCH_train.json.
+
+Parses the file `make bench-train-smoke` just wrote and FAILS (exit 1)
+when the trained-checkpoint trajectory regresses below the floors the
+ROADMAP commits to. All checks run on the **mean mAP over seeds** per
+method (individual seeds are noisy at smoke scale):
+
+  * coverage — every method in {float, ternary-exact, lbw-4, lbw-6,
+    inq-6, dorefa-6} must appear on >= MIN_SEEDS distinct seeds, every
+    mAP finite in [0, 1];
+  * 6-bit fidelity — mean lbw-6 mAP >= mean float mAP - DELTA6 (the
+    paper's headline: ~6 bits is nearly lossless);
+  * ternary floor — mean ternary-exact mAP >= TERNARY_FLOOR (2-bit
+    quantization degrades but must not destroy the detector);
+  * monotone-in-bits sanity — mean mAP at 2 bits <= 4 bits + MONO_TOL
+    and 4 bits <= 6 bits + MONO_TOL over the LBW family
+    (ternary-exact, lbw-4, lbw-6).
+
+Floors are overridable via env (GATE_DELTA6, GATE_TERNARY_FLOOR,
+GATE_MONO_TOL, GATE_MIN_SEEDS) so a deliberate trade-off can be landed
+without editing this script.
+
+Usage:
+    scripts/accuracy_gate.py [BENCH_train.json]
+    scripts/accuracy_gate.py --self-test
+
+--self-test feeds the gate doctored rows (a collapsed 6-bit mAP, a
+missing method, a dead ternary detector, an inverted bit ordering, a
+NaN mAP) and asserts each one is caught, then feeds a healthy set and
+asserts it passes — proof in CI that the gate *can* fail before it is
+trusted to pass.
+"""
+
+import json
+import math
+import os
+import sys
+
+DELTA6 = float(os.environ.get("GATE_DELTA6", "0.06"))
+TERNARY_FLOOR = float(os.environ.get("GATE_TERNARY_FLOOR", "0.015"))
+MONO_TOL = float(os.environ.get("GATE_MONO_TOL", "0.06"))
+MIN_SEEDS = int(os.environ.get("GATE_MIN_SEEDS", "2"))
+
+METHODS = ("float", "ternary-exact", "lbw-4", "lbw-6", "inq-6", "dorefa-6")
+
+
+def mean_map(rows, method):
+    """Mean mAP over seeds for one method, or None if absent."""
+    maps = [r["map"] for r in rows if r.get("method") == method]
+    return sum(maps) / len(maps) if maps else None
+
+
+def check(rows):
+    """Return a list of failure strings (empty = gate passes)."""
+    failures = []
+    for m in METHODS:
+        seeds = {r.get("seed") for r in rows if r.get("method") == m}
+        if len(seeds) < MIN_SEEDS:
+            failures.append(
+                f"{m}: only {len(seeds)} seed(s), need >= {MIN_SEEDS} "
+                "(did the trajectory sweep run every method?)"
+            )
+    for r in rows:
+        v = r.get("map")
+        if v is None or not math.isfinite(v) or not 0.0 <= v <= 1.0:
+            failures.append(
+                f"{r.get('method')} seed {r.get('seed')}: mAP {v!r} is not "
+                "a finite value in [0, 1]"
+            )
+    if failures:
+        return failures  # means below would be meaningless
+
+    float_map = mean_map(rows, "float")
+    lbw6 = mean_map(rows, "lbw-6")
+    ternary = mean_map(rows, "ternary-exact")
+    lbw4 = mean_map(rows, "lbw-4")
+    if lbw6 < float_map - DELTA6:
+        failures.append(
+            f"6-bit fidelity: mean lbw-6 mAP {lbw6:.4f} < "
+            f"float {float_map:.4f} - {DELTA6} (quantization is no longer "
+            "nearly lossless)"
+        )
+    if ternary < TERNARY_FLOOR:
+        failures.append(
+            f"ternary floor: mean ternary-exact mAP {ternary:.4f} < "
+            f"{TERNARY_FLOOR} (2-bit training collapsed)"
+        )
+    if ternary > lbw4 + MONO_TOL:
+        failures.append(
+            f"bit monotonicity: 2-bit mean mAP {ternary:.4f} beats 4-bit "
+            f"{lbw4:.4f} by more than {MONO_TOL}"
+        )
+    if lbw4 > lbw6 + MONO_TOL:
+        failures.append(
+            f"bit monotonicity: 4-bit mean mAP {lbw4:.4f} beats 6-bit "
+            f"{lbw6:.4f} by more than {MONO_TOL}"
+        )
+    return failures
+
+
+def healthy_rows():
+    rows = []
+    maps = {
+        "float": 0.117,
+        "ternary-exact": 0.091,
+        "lbw-4": 0.130,
+        "lbw-6": 0.161,
+        "inq-6": 0.147,
+        "dorefa-6": 0.157,
+    }
+    bits = {
+        "float": 32, "ternary-exact": 2, "lbw-4": 4,
+        "lbw-6": 6, "inq-6": 6, "dorefa-6": 6,
+    }
+    for seed in (17, 18):
+        for m, v in maps.items():
+            rows.append(
+                {
+                    "method": m,
+                    "bits": bits[m],
+                    "seed": seed,
+                    "map": v + (0.01 if seed == 18 else -0.01),
+                }
+            )
+    return rows
+
+
+def self_test():
+    assert check(healthy_rows()) == [], "healthy trajectory must pass the gate"
+
+    # injected regression 1: 6-bit mAP collapses far below float
+    doctored = healthy_rows()
+    for r in doctored:
+        if r["method"] == "lbw-6":
+            r["map"] = 0.01
+    fails = check(doctored)
+    assert any("6-bit fidelity" in f for f in fails), fails
+
+    # injected regression 2: a method silently dropped from the sweep
+    doctored = [r for r in healthy_rows() if r["method"] != "inq-6"]
+    fails = check(doctored)
+    assert any("inq-6" in f and "seed" in f for f in fails), fails
+
+    # injected regression 3: the ternary detector died
+    doctored = healthy_rows()
+    for r in doctored:
+        if r["method"] == "ternary-exact":
+            r["map"] = 0.001
+    fails = check(doctored)
+    assert any("ternary floor" in f for f in fails), fails
+
+    # injected regression 4: bit ordering inverts (2-bit >> 6-bit)
+    doctored = healthy_rows()
+    for r in doctored:
+        if r["method"] == "ternary-exact":
+            r["map"] = 0.30
+        if r["method"] == "lbw-6":
+            r["map"] = 0.12
+    fails = check(doctored)
+    assert any("bit monotonicity" in f for f in fails), fails
+
+    # injected regression 5: a NaN mAP sneaks into a row
+    doctored = healthy_rows()
+    doctored[0]["map"] = float("nan")
+    fails = check(doctored)
+    assert any("finite" in f for f in fails), fails
+
+    # one seed only must also fail coverage
+    doctored = [r for r in healthy_rows() if r["seed"] == 17]
+    fails = check(doctored)
+    assert any("seed(s)" in f for f in fails), fails
+
+    print(
+        "accuracy_gate self-test: all injected regressions caught, "
+        "healthy set passes"
+    )
+
+
+def main(argv):
+    if len(argv) > 1 and argv[1] == "--self-test":
+        self_test()
+        return 0
+    path = argv[1] if len(argv) > 1 else "BENCH_train.json"
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("rows", [])
+    failures = check(rows)
+    if failures:
+        print(f"accuracy gate FAILED on {path}:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    summary = ", ".join(
+        f"{m} {mean_map(rows, m):.4f}" for m in METHODS
+    )
+    print(
+        f"accuracy gate passed on {path} (mean mAP over seeds): {summary}; "
+        f"lbw-6 within {DELTA6} of float, ternary >= {TERNARY_FLOOR}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

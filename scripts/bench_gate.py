@@ -46,6 +46,9 @@ def closed_loop_rate(rows, executor, engine, threads):
             and r.get("window") == "fixed"
             and r.get("batch_window_ms") == 2
             and "load" not in r
+            # trained-checkpoint cells are a separate dimension; the
+            # closed-loop baselines compare synth rows only
+            and r.get("checkpoint") in (None, "synth")
         ):
             return r.get("imgs_per_s", 0.0)
     return None
