@@ -15,8 +15,13 @@
 #                   autoscaling regressions fail loudly here
 #   make bench-gate   regression-gate the fresh BENCH_serve.json
 #                   (self-tests the gate on doctored rows first, then
-#                   fails if planned/naive < 2x, 4t/1t < 1.5x, or an
-#                   autoscale row shows no scale events)
+#                   fails if planned/naive < 2x, 4t/1t < 1.5x, the
+#                   shift-engine simd/scalar ratio < 1.3x when SIMD
+#                   rows are present, or an autoscale row shows no
+#                   scale events)
+#   make bench-kernels  scalar-vs-SIMD GEMM micro-bench (f32 + shift
+#                   kernels at the width-8/13 shapes, bitwise parity
+#                   checked, GFLOP-equiv + speedup printed)
 #   make bench-train-smoke  hermetic accuracy trajectory: train the
 #                   float detector, quantize + retrain every method
 #                   (exact ternary, LBW 4/6-bit, DoReFa, INQ) on 2
@@ -31,7 +36,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 
 .PHONY: build test artifacts bench bench-smoke bench-gate \
-	bench-train-smoke accuracy-gate lint clean
+	bench-kernels bench-train-smoke accuracy-gate lint clean
 
 build:
 	$(CARGO) build --release
@@ -51,6 +56,9 @@ bench-smoke: build
 bench-gate:
 	$(PYTHON) scripts/bench_gate.py --self-test
 	$(PYTHON) scripts/bench_gate.py BENCH_serve.json
+
+bench-kernels: build
+	$(CARGO) run --release --example bench_kernels
 
 bench-train-smoke: build
 	$(CARGO) run --release --example bench_train -- --smoke

@@ -1,0 +1,170 @@
+//! Kernel micro-bench: scalar vs explicit-SIMD GEMM tiles (ISSUE 7).
+//!
+//! Times the two planned-executor hot loops in isolation — the fused
+//! f32 conv+BN+ReLU GEMM (`gemm_bn_relu_on`) and the shift-add GEMM
+//! over `DenseLanes` (`shift_gemm_bn_relu_on`) — at the width-8 and
+//! width-13 layer shapes the determinism suite uses (width 13 covers
+//! the ragged lane/tile tails). For each shape it runs the scalar
+//! reference and the detected backend (AVX2/NEON, or scalar again on
+//! hosts without either), verifies the outputs are **bitwise
+//! identical**, and prints GFLOP-equivalents and the simd/scalar
+//! speedup. "FLOP-equivalent" counts 2·m·k·cout ops per call for both
+//! kernels so the shift engine's rate is directly comparable to the
+//! float GEMM it replaces (the paper's shift-for-multiply story).
+//!
+//! Usage: `cargo run --release --example bench_kernels [-- --smoke]`
+//! (`--smoke` shrinks rows/reps for CI).
+
+use std::time::Instant;
+
+use lbw_net::nn::conv::{gemm_bn_relu_on, pack_lanes, Residual, LANES};
+use lbw_net::nn::shift_conv::{shift_gemm_bn_relu_on, ShiftConv, FIX};
+use lbw_net::nn::{KernelBackend, SimdMode};
+use lbw_net::quant::threshold::lbw_quantize_layer;
+
+fn randv(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 11) as f32 / (1u64 << 53) as f32 - 0.3
+        })
+        .collect()
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} differs ({x} vs {y})");
+    }
+}
+
+/// Best-of-`reps` wall time for `f`, in seconds.
+fn time_best<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (m, reps) = if smoke { (256usize, 3usize) } else { (4096, 20) };
+    let backend = KernelBackend::detect(SimdMode::from_env());
+    println!(
+        "=== bench_kernels: m = {m} patch rows, best of {reps}, backend = {} ===",
+        backend.label()
+    );
+    println!(
+        "{:<7} {:<9} {:>5} {:>6} {:>12} {:>12} {:>9}",
+        "kernel", "shape", "k", "cout", "scalar GF/s", "simd GF/s", "speedup"
+    );
+
+    // the determinism-suite layer shapes: 3×3 convs at widths 8 and 13
+    // (width 13 exercises the padded-lane and ragged-tile tails)
+    for &width in &[8usize, 13] {
+        let (kh, kw, cin, cout) = (3usize, 3usize, width, 2 * width);
+        let k = kh * kw * cin;
+        let flops = 2.0 * m as f64 * k as f64 * cout as f64;
+        let a = randv(m * k, 0xA11CE ^ width as u64);
+        let w = randv(k * cout, 0xB0B ^ width as u64);
+        let scale = randv(cout, 3 ^ width as u64);
+        let bias = randv(cout, 5 ^ width as u64);
+
+        // --- f32 GEMM ---
+        let (cp, b) = pack_lanes(&w, k, cout);
+        let mut out_s = vec![0.0f32; m * cout];
+        let mut out_v = vec![0.0f32; m * cout];
+        let ts = time_best(reps, || {
+            gemm_bn_relu_on(
+                KernelBackend::Scalar,
+                &a,
+                m,
+                k,
+                &b,
+                cout,
+                cp,
+                &scale,
+                &bias,
+                true,
+                &Residual::None,
+                &mut out_s,
+            )
+        });
+        let tv = time_best(reps, || {
+            gemm_bn_relu_on(
+                backend, &a, m, k, &b, cout, cp, &scale, &bias, true, &Residual::None, &mut out_v,
+            )
+        });
+        assert_bitwise(&out_s, &out_v, &format!("f32 gemm width {width}"));
+        println!(
+            "{:<7} {:<9} {:>5} {:>6} {:>12.2} {:>12.2} {:>8.2}x",
+            "float",
+            format!("w{width} 3x3"),
+            k,
+            cout,
+            flops / ts / 1e9,
+            flops / tv / 1e9,
+            ts / tv
+        );
+
+        // --- shift-add GEMM (6-bit LBW weights, 16.16 activations) ---
+        let q = lbw_quantize_layer(&w, 6, 0.75);
+        let sc = ShiftConv::from_quant(&q, kh, kw, cin, cout, 6);
+        let lanes = sc.dense_lanes(LANES);
+        let scale_out = f32::powi(2.0, sc.s - FIX);
+        let aq: Vec<i32> = a.iter().map(|&v| (v * (1 << FIX) as f32).round() as i32).collect();
+        let ts = time_best(reps, || {
+            shift_gemm_bn_relu_on(
+                KernelBackend::Scalar,
+                &aq,
+                m,
+                k,
+                &lanes,
+                scale_out,
+                cout,
+                &scale,
+                &bias,
+                true,
+                &Residual::None,
+                &mut out_s,
+            )
+        });
+        let tv = time_best(reps, || {
+            shift_gemm_bn_relu_on(
+                backend,
+                &aq,
+                m,
+                k,
+                &lanes,
+                scale_out,
+                cout,
+                &scale,
+                &bias,
+                true,
+                &Residual::None,
+                &mut out_v,
+            )
+        });
+        assert_bitwise(&out_s, &out_v, &format!("shift gemm width {width}"));
+        println!(
+            "{:<7} {:<9} {:>5} {:>6} {:>12.2} {:>12.2} {:>8.2}x",
+            "shift6",
+            format!("w{width} 3x3"),
+            k,
+            cout,
+            flops / ts / 1e9,
+            flops / tv / 1e9,
+            ts / tv
+        );
+    }
+
+    if !backend.is_simd() {
+        println!("(no SIMD backend on this host — both columns ran the scalar kernels)");
+    }
+}

@@ -39,6 +39,16 @@
 //! hermetic training run (`"checkpoint": "trained"`) — the gate's
 //! baselines stay on the synth rows.
 //!
+//! Since the SIMD-kernel PR every row also carries `"simd"`
+//! (`"on"` when the serving plans used the explicit AVX2/NEON kernels,
+//! `"off"` for the scalar reference — naive-executor rows are always
+//! `"off"`; rows from before this PR are implicitly `"off"`), and two
+//! extra closed-loop cells re-run the planned float/shift6 single-
+//! shard single-thread config with the backend forced `off`, so the
+//! simd/scalar ratio `scripts/bench_gate.py` gates on is measured
+//! through the identical serving stack. The summary prints that ratio
+//! per engine.
+//!
 //! Run with: `cargo run --release --example bench_serve`
 //! Smoke mode (CI): `cargo run --release --example bench_serve -- --smoke`
 //! (reduced request count + 1-shard cells only; also honours the
@@ -52,7 +62,7 @@ use lbw_net::coordinator::server::{DetectServer, Executor, ServerConfig, WindowM
 use lbw_net::coordinator::trainer::{HermeticTrainer, TrainConfig, TrainMethod};
 use lbw_net::data::{generate_scene, SceneConfig};
 use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
-use lbw_net::nn::EngineKind;
+use lbw_net::nn::{EngineKind, KernelBackend, SimdMode};
 use lbw_net::util::json::Json;
 
 const CONCURRENCY: usize = 8;
@@ -76,6 +86,10 @@ struct Cell {
     /// Where the served weights came from: "synth" (He-init synthetic
     /// checkpoint) or "trained" (a hermetic training run).
     checkpoint: &'static str,
+    /// Kernel backend the serving plans ran: "on" (explicit AVX2/NEON
+    /// kernels) or "off" (scalar reference; always "off" for the naive
+    /// executor, which has no planned kernels).
+    simd: &'static str,
     wall_s: f64,
     imgs_per_s: f64,
     p50_ms: f64,
@@ -163,6 +177,11 @@ fn main() -> Result<()> {
     let shard_list: &[usize] = if smoke { &[1] } else { &[1, 2, 4] };
     let window_list: &[u64] = if smoke { &[2] } else { &[0, 2] };
 
+    // what the planned executor's plans will actually run under the
+    // default SimdMode — recorded on every planned cell
+    let detected: &'static str =
+        if KernelBackend::detect(SimdMode::from_env()).is_simd() { "on" } else { "off" };
+
     let spec = synthetic_spec(SynthConfig::default());
     let ckpt = synthetic_checkpoint(&spec, 2027, 6);
     let scene_cfg = SceneConfig::default();
@@ -219,6 +238,10 @@ fn main() -> Result<()> {
                             shed: 0,
                             auto: None,
                             checkpoint: "synth",
+                            simd: match executor {
+                                Executor::Planned => detected,
+                                Executor::Naive => "off",
+                            },
                             wall_s: wall.as_secs_f64(),
                             imgs_per_s: agg.throughput(wall),
                             p50_ms: snap.percentile_ms(50.0),
@@ -245,6 +268,72 @@ fn main() -> Result<()> {
                     }
                 }
             }
+        }
+    }
+
+    // ---- forced-scalar baseline cells (closed loop) ----
+    // the planned float/shift6 single-shard single-thread configs
+    // re-run with the kernel backend forced off — the scalar
+    // denominator of the simd/scalar ratio the bench gate enforces,
+    // measured through the identical serving stack. Only meaningful
+    // (and only run) when the detected backend is actually SIMD;
+    // without it the sweep above already produced these exact rows.
+    if detected == "on" {
+        println!("\n--- forced-scalar cells (simd off): planned, 1 shard x 1 thread ---");
+        for (engine_name, engine) in
+            [("float", EngineKind::Float), ("shift6", EngineKind::Shift { bits: 6 })]
+        {
+            let cfg = ServerConfig {
+                shards: 1,
+                threads: 1,
+                max_batch: 8,
+                batch_window: Duration::from_millis(2),
+                queue_depth: 256,
+                executor: Executor::Planned,
+                simd: SimdMode::Off,
+                ..Default::default()
+            };
+            let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
+            let wall = drive(&server, &scenes, requests)?;
+            let agg = server.handle().latency();
+            let snap = agg.snapshot();
+            let shard_counts: Vec<usize> =
+                server.shard_latencies().iter().map(|s| s.count()).collect();
+            let cell = Cell {
+                executor: "planned".to_string(),
+                engine: engine_name.to_string(),
+                shards: 1,
+                threads: 1,
+                window: "fixed".to_string(),
+                window_ms: 2,
+                load: None,
+                shed: 0,
+                auto: None,
+                checkpoint: "synth",
+                simd: "off",
+                wall_s: wall.as_secs_f64(),
+                imgs_per_s: agg.throughput(wall),
+                p50_ms: snap.percentile_ms(50.0),
+                p95_ms: snap.percentile_ms(95.0),
+                p99_ms: snap.percentile_ms(99.0),
+                mean_batch: agg.mean_batch(),
+                shard_counts,
+            };
+            println!(
+                "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  (simd off)",
+                cell.executor,
+                cell.engine,
+                cell.shards,
+                cell.threads,
+                "2ms",
+                cell.imgs_per_s,
+                cell.p50_ms,
+                cell.p95_ms,
+                cell.p99_ms,
+                cell.mean_batch
+            );
+            server.shutdown();
+            cells.push(cell);
         }
     }
 
@@ -305,6 +394,7 @@ fn main() -> Result<()> {
                 shed: agg.shed(),
                 auto: None,
                 checkpoint: "synth",
+                simd: detected,
                 wall_s: wall.as_secs_f64(),
                 imgs_per_s: agg.throughput(wall),
                 p50_ms: snap.percentile_ms(50.0),
@@ -397,6 +487,7 @@ fn main() -> Result<()> {
             shed: agg.shed(),
             auto: elastic.then(|| AutoCell { shards_max: 4, scale_ups: ups, scale_downs: downs }),
             checkpoint: "synth",
+            simd: detected,
             wall_s: wall.as_secs_f64(),
             imgs_per_s: agg.throughput(wall),
             p50_ms: snap.percentile_ms(50.0),
@@ -482,6 +573,7 @@ fn main() -> Result<()> {
             shed: 0,
             auto: None,
             checkpoint: "trained",
+            simd: detected,
             wall_s: wall.as_secs_f64(),
             imgs_per_s: agg.throughput(wall),
             p50_ms: snap.percentile_ms(50.0),
@@ -508,7 +600,7 @@ fn main() -> Result<()> {
         cells.push(cell);
     }
 
-    let rate = |exec: &str, engine: &str, shards: usize, threads: usize| {
+    let rate_simd = |exec: &str, engine: &str, shards: usize, threads: usize, simd: &str| {
         cells
             .iter()
             .find(|c| {
@@ -519,9 +611,16 @@ fn main() -> Result<()> {
                     && c.window_ms == 2
                     && c.load.is_none() // classic closed-loop cells only
                     && c.checkpoint == "synth"
+                    && c.simd == simd
             })
             .map(|c| c.imgs_per_s)
             .unwrap_or(0.0)
+    };
+    // the pre-SIMD summary ratios compare cells under the *detected*
+    // backend (naive rows are always scalar — the naive walk has no
+    // planned kernels to vectorize)
+    let rate = |exec: &str, engine: &str, shards: usize, threads: usize| {
+        rate_simd(exec, engine, shards, threads, if exec == "naive" { "off" } else { detected })
     };
     // the headline ratio: planned vs naive through the identical
     // serving stack, single shard, single thread (the ISSUE-2
@@ -541,6 +640,18 @@ fn main() -> Result<()> {
                 "{engine}: planned 4-thread/1-thread speedup at 1 shard = {:.2}x",
                 t4 / t1
             );
+        }
+    }
+    // the ISSUE-7 acceptance number: explicit SIMD vs forced-scalar
+    // through the identical serving stack (only measurable when the
+    // host actually has a SIMD backend)
+    if detected == "on" {
+        for engine in ["float", "shift6"] {
+            let (on, off) =
+                (rate_simd("planned", engine, 1, 1, "on"), rate_simd("planned", engine, 1, 1, "off"));
+            if off > 0.0 {
+                println!("{engine}: planned simd/scalar speedup at 1 shard x 1 thread = {:.2}x", on / off);
+            }
         }
     }
     if !smoke {
@@ -572,6 +683,7 @@ fn main() -> Result<()> {
                     ("window", Json::str(c.window.as_str())),
                     ("batch_window_ms", Json::num(c.window_ms as f64)),
                     ("checkpoint", Json::str(c.checkpoint)),
+                    ("simd", Json::str(c.simd)),
                     ("requests", Json::num(requests as f64)),
                     ("concurrency", Json::num(CONCURRENCY as f64)),
                     ("wall_s", Json::num(c.wall_s)),
@@ -603,7 +715,7 @@ fn main() -> Result<()> {
         (
             "detector",
             Json::str(
-                "synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors, threads {1,4} tile pools, fixed+adaptive batch windows (open-loop steady/bursty), elastic shards-auto cells (open-loop bursty, scale events recorded)",
+                "synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors, threads {1,4} tile pools, fixed+adaptive batch windows (open-loop steady/bursty), elastic shards-auto cells (open-loop bursty, scale events recorded), simd on/off kernel-backend cells (forced-scalar baselines when SIMD is detected)",
             ),
         ),
         ("rows", rows),

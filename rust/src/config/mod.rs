@@ -96,6 +96,15 @@ pub struct ServeSection {
     /// Upper autoscale bound. 0 = use the default (env
     /// `LBW_SHARDS_MAX`, else 4).
     pub shards_max: usize,
+    /// Kernel backend for the planned executor: "auto" (runtime
+    /// feature detection, the default), "on" (same detection — SIMD
+    /// when the host has it), or "off" (force the scalar reference
+    /// kernels). Bitwise-neutral knob.
+    pub simd: String,
+    /// Pin each shard's pool workers to consecutive CPUs
+    /// (`sched_setaffinity`; Linux-only no-op elsewhere). Placement
+    /// only — never affects results.
+    pub pin_cores: bool,
 }
 
 impl Default for ServeSection {
@@ -115,6 +124,8 @@ impl Default for ServeSection {
             autoscale: false,
             shards_min: 1,
             shards_max: 0,
+            simd: s.simd.to_string(),
+            pin_cores: s.pin_cores,
         }
     }
 }
@@ -189,6 +200,8 @@ impl Config {
                 "serve.autoscale" => cfg.serve.autoscale = v.as_bool()?,
                 "serve.shards_min" => cfg.serve.shards_min = v.as_usize()?,
                 "serve.shards_max" => cfg.serve.shards_max = v.as_usize()?,
+                "serve.simd" => cfg.serve.simd = v.as_str()?.to_string(),
+                "serve.pin_cores" => cfg.serve.pin_cores = v.as_bool()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -231,6 +244,11 @@ impl Config {
             "serve.window must be fixed|adaptive, got {}",
             self.serve.window
         );
+        ensure!(
+            matches!(self.serve.simd.as_str(), "auto" | "on" | "off"),
+            "serve.simd must be auto|on|off, got {}",
+            self.serve.simd
+        );
         ensure!(self.serve.shards_min >= 1, "serve.shards_min must be >= 1");
         ensure!(
             self.serve.shards_max == 0 || self.serve.shards_max >= self.serve.shards_min,
@@ -258,6 +276,8 @@ impl Config {
                 Executor::Planned
             },
             autoscale: self.serve.autoscale.then(|| self.autoscale_bounds()),
+            simd: self.serve.simd.parse().unwrap_or_default(),
+            pin_cores: self.serve.pin_cores,
             ..ServerConfig::default()
         }
     }
@@ -427,6 +447,34 @@ mod tests {
         assert!(cfg.to_server_config().autoscale.is_none());
         let b = cfg.autoscale_bounds();
         assert_eq!((b.min_shards, b.max_shards), (2, 8));
+    }
+
+    #[test]
+    fn simd_and_pin_parse_validate_and_lower() {
+        let cfg = Config::from_toml(
+            r#"
+            [serve]
+            simd = "off"
+            pin_cores = true
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.simd, "off");
+        assert!(cfg.serve.pin_cores);
+        let s = cfg.to_server_config();
+        assert_eq!(s.simd, crate::coordinator::server::SimdMode::Off);
+        assert!(s.pin_cores);
+        // validated: only auto|on|off pass
+        assert!(Config::from_toml("[serve]
+simd = "avx512"
+").is_err());
+        assert!(Config::from_toml("[serve]
+simd = "on"
+").is_ok());
+        // pin_cores must be a boolean
+        assert!(Config::from_toml("[serve]
+pin_cores = "yes"
+").is_err());
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::coordinator::metrics::{LatencyStats, ShardStats};
 use crate::coordinator::params::{Checkpoint, ParamSpec};
 use crate::coordinator::queue::{self, Recv, SendError};
 use crate::detection::{decode_grid, nms, Detection};
+pub use crate::nn::{KernelBackend, SimdMode};
 use crate::nn::{DetectorModel, EngineKind};
 use crate::runtime::{lit_f32, to_f32, Runtime};
 
@@ -116,6 +117,20 @@ pub struct ServerConfig {
     /// fixed-at-start pool. `shards` is the *initial* shard count
     /// either way (clamped into the autoscale bounds when enabled).
     pub autoscale: Option<AutoscaleConfig>,
+    /// Kernel backend selection for the planned executor, resolved
+    /// once per engine start via [`KernelBackend::detect`]:
+    /// [`SimdMode::Auto`]/[`SimdMode::On`] use the explicit SIMD
+    /// kernels when the host supports them (AVX2 / NEON),
+    /// [`SimdMode::Off`] forces the scalar reference kernels. Outputs
+    /// are bitwise identical either way.
+    pub simd: SimdMode,
+    /// Pin each shard's pool participants to consecutive CPUs
+    /// (`sched_setaffinity`, best-effort, Linux-only no-op elsewhere)
+    /// so fixed resident workers stop migrating across the tile loop.
+    /// Shard generation `g` with `t` threads occupies CPUs
+    /// `g*t .. g*t+t` (mod ncpus). Placement only — never affects
+    /// results.
+    pub pin_cores: bool,
 }
 
 /// Default per-shard thread count: `LBW_THREADS` when set (CI runs the
@@ -137,6 +152,19 @@ fn default_window() -> WindowMode {
         .unwrap_or_default()
 }
 
+/// Default kernel-backend mode: `LBW_SIMD=auto|on|off` when set, else
+/// auto (runtime feature detection; the CI `LBW_SIMD=off` leg soaks
+/// the scalar fallback through the whole suite).
+fn default_simd() -> SimdMode {
+    SimdMode::from_env()
+}
+
+/// Default core pinning: `LBW_PIN=1|true` when set, else off (pinning
+/// assumes the process owns its CPUs, which is a deployment choice).
+fn default_pin() -> bool {
+    std::env::var("LBW_PIN").map(|v| v == "1" || v.eq_ignore_ascii_case("true")).unwrap_or(false)
+}
+
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
@@ -153,6 +181,8 @@ impl Default for ServerConfig {
             pad_batch: 1,
             executor: Executor::Planned,
             autoscale: None,
+            simd: default_simd(),
+            pin_cores: default_pin(),
         }
     }
 }
@@ -332,6 +362,12 @@ impl DetectServer {
     ) -> Result<DetectServer> {
         let executor = cfg.executor;
         let threads = cfg.threads.max(1);
+        // resolve the kernel backend once, up front — every shard ever
+        // spawned (including elastic scale-ups) serves with the same
+        // kernels, so a run is never a mid-flight mix of backends
+        let backend = KernelBackend::detect(cfg.simd);
+        let pin = cfg.pin_cores;
+        let ncpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         // a shard never runs a batch larger than max(max_batch, pad_batch)
         let plan_batch = cfg.max_batch.max(cfg.pad_batch).max(1);
         // quantize every conv layer once, in parallel — every shard
@@ -354,25 +390,37 @@ impl DetectServer {
         anyhow::ensure!(ckpt.state.len() == spec.num_state, "checkpoint/spec state mismatch");
         let spec = spec.clone();
         let ckpt = ckpt.clone();
-        let factory: ShardFactory = Box::new(move |_gen| {
+        let factory: ShardFactory = Box::new(move |generation| {
             let model =
                 DetectorModel::build_with_quants(&spec, &ckpt, engine, quants.as_ref().as_ref());
             // one tile pool per planned shard (the naive walk has no
-            // tiled kernels to feed it)
+            // tiled kernels to feed it); with pinning on, generation g
+            // claims the CPU stripe starting at g*threads — the base
+            // CPU is taken by the shard thread itself (the calling
+            // pool participant), workers fill the rest of the stripe
+            let base_cpu = (generation * threads) % ncpus;
             let pool = match executor {
-                Executor::Planned => {
-                    Some(Arc::new(crate::runtime::pool::ThreadPool::new(threads)))
-                }
+                Executor::Planned => Some(Arc::new(if pin {
+                    crate::runtime::pool::ThreadPool::new_pinned(threads, base_cpu)
+                } else {
+                    crate::runtime::pool::ThreadPool::new(threads)
+                })),
                 Executor::Naive => None,
             };
             Box::new(move |_shard: usize| -> Result<InferFn> {
                 Ok(match executor {
                     Executor::Planned => {
+                        if pin {
+                            crate::runtime::pool::pin_current_thread(base_cpu);
+                        }
                         // compile once on the shard thread; the builder
                         // model is dropped — the shard owns only the
                         // plan and its pool
-                        let mut plan =
-                            model?.plan_with_pool(plan_batch, pool.expect("planned shard pool"));
+                        let mut plan = model?.plan_with(
+                            plan_batch,
+                            pool.expect("planned shard pool"),
+                            backend,
+                        );
                         Box::new(move |images: &[f32], batch: usize| {
                             Ok(plan.forward_vec(images, batch))
                         })

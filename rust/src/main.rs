@@ -38,6 +38,7 @@ USAGE: repro <subcommand> [--flag value ...]
   serve     [--ckpt PATH --engine shift|float|artifact --shards N --threads N
              --executor planned|naive --window fixed|adaptive --deadline-ms N
              --autoscale true|false --shards-max N
+             --simd auto|on|off --pin-cores true|false
              --requests N --concurrency N]                             (sharded serving)
   gen-data  [--count N --seed N --out DIR]                             (SynthVOC scenes)
 
@@ -49,6 +50,13 @@ threads total). Results are bitwise identical for any thread count.
 (EWMA arrival rate + queue depth; batch_window_ms caps it; env
 LBW_WINDOW sets the default). --deadline-ms sheds requests that wait
 longer than N ms before a shard picks them up (backpressure error).
+
+--simd picks the planned executor's kernel backend: auto/on use the
+explicit AVX2/NEON kernels when the host supports them, off forces the
+scalar reference kernels (env LBW_SIMD sets the default). SIMD and
+scalar outputs are bitwise identical. --pin-cores true pins each
+shard's tile-pool workers to consecutive CPUs (Linux sched_setaffinity;
+env LBW_PIN) — placement only, never results.
 
 --autoscale true puts the shard set under an elastic supervisor: shards
 are spawned under load (reusing the quantize-once projection) and
@@ -415,6 +423,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         "deadline-ms",
         "autoscale",
         "shards-max",
+        "simd",
+        "pin-cores",
         "requests",
         "concurrency",
         "config",
@@ -431,6 +441,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         other => bail!("unknown executor `{other}` (planned|naive)"),
     }
     server_cfg.window = args.str_or("window", &cfg.serve.window).parse()?;
+    server_cfg.simd = args.str_or("simd", &cfg.serve.simd).parse()?;
+    server_cfg.pin_cores = args.parse_or("pin-cores", cfg.serve.pin_cores)?;
     let deadline_ms: u64 = args.parse_or("deadline-ms", cfg.serve.deadline_ms)?;
     server_cfg.deadline =
         (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
@@ -468,14 +480,16 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             } else {
                 EngineKind::Shift { bits: ck.bits.clamp(2, 6) }
             };
+            let kernels =
+                lbw_net::nn::KernelBackend::detect(server_cfg.simd).label();
             match &server_cfg.autoscale {
                 Some(a) => println!(
-                    "serving {} via hermetic {kind:?} engine ({:?} executor), elastic shards {}..{} (start {}) x {} thread(s), {} window",
+                    "serving {} via hermetic {kind:?} engine ({:?} executor, {kernels} kernels), elastic shards {}..{} (start {}) x {} thread(s), {} window",
                     ck.arch, server_cfg.executor, a.min_shards, a.max_shards,
                     server_cfg.shards, server_cfg.threads, server_cfg.window
                 ),
                 None => println!(
-                    "serving {} via hermetic {kind:?} engine ({:?} executor), {} shard(s) x {} thread(s), {} window",
+                    "serving {} via hermetic {kind:?} engine ({:?} executor, {kernels} kernels), {} shard(s) x {} thread(s), {} window",
                     ck.arch, server_cfg.executor, server_cfg.shards, server_cfg.threads,
                     server_cfg.window
                 ),

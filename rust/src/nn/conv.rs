@@ -16,6 +16,7 @@
 //!   allocations — all buffers come from the executor's arena
 //!   (`crate::nn::plan`).
 
+use crate::nn::simd::{self, KernelBackend};
 use crate::runtime::pool::{SendPtr, ThreadPool};
 use crate::tensor::Tensor;
 
@@ -379,11 +380,32 @@ pub fn gemm_bn_relu(
     residual: &Residual,
     out: &mut [f32],
 ) {
+    gemm_bn_relu_on(KernelBackend::Scalar, a, m, k, b, cout, cp, scale, bias, relu, residual, out);
+}
+
+/// [`gemm_bn_relu`] with an explicit kernel backend (SIMD tiles when
+/// the plan selected one — bitwise identical to scalar by contract,
+/// see [`crate::nn::simd`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bn_relu_on(
+    backend: KernelBackend,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    cout: usize,
+    cp: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &Residual,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * cp);
     debug_assert_eq!(out.len(), m * cout);
     debug_assert!(scale.len() == cout && bias.len() == cout);
-    gemm_rows(a, k, b, cout, cp, scale, bias, relu, residual, 0, m, out);
+    simd::gemm_rows_backend(backend, a, k, b, cout, cp, scale, bias, relu, residual, 0, m, out);
 }
 
 /// Parallel [`gemm_bn_relu`]: output rows `[0, m)` are split into
@@ -407,6 +429,43 @@ pub fn par_gemm_bn_relu(
     residual: &Residual,
     out: &mut [f32],
 ) {
+    par_gemm_bn_relu_on(
+        pool,
+        KernelBackend::Scalar,
+        a,
+        m,
+        k,
+        b,
+        cout,
+        cp,
+        scale,
+        bias,
+        relu,
+        residual,
+        out,
+    );
+}
+
+/// [`par_gemm_bn_relu`] with an explicit kernel backend. Chunk
+/// boundaries depend only on `(m, GEMM_CHUNK)` and the backend only
+/// changes how a tile's accumulators are held in registers, so the
+/// output stays bitwise identical across thread counts *and* backends.
+#[allow(clippy::too_many_arguments)]
+pub fn par_gemm_bn_relu_on(
+    pool: &ThreadPool,
+    backend: KernelBackend,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    cout: usize,
+    cp: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &Residual,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * cp);
     debug_assert_eq!(out.len(), m * cout);
@@ -418,7 +477,7 @@ pub fn par_gemm_bn_relu(
         let sub = unsafe {
             std::slice::from_raw_parts_mut(base.get().add(r0 * cout), (r1 - r0) * cout)
         };
-        gemm_rows(a, k, b, cout, cp, scale, bias, relu, residual, r0, r1, sub);
+        simd::gemm_rows_backend(backend, a, k, b, cout, cp, scale, bias, relu, residual, r0, r1, sub);
     });
 }
 
@@ -426,9 +485,10 @@ pub fn par_gemm_bn_relu(
 /// (which covers exactly those rows). Row indices into `a` and the
 /// residual stay absolute; per-row accumulation order is independent
 /// of how rows are grouped into tiles, so any row partition reproduces
-/// the full-range result bit for bit.
+/// the full-range result bit for bit. This scalar kernel is the parity
+/// reference the SIMD backends in [`crate::nn::simd`] must match.
 #[allow(clippy::too_many_arguments)]
-fn gemm_rows(
+pub(crate) fn gemm_rows_scalar(
     a: &[f32],
     k: usize,
     b: &[f32],
@@ -478,25 +538,49 @@ fn gemm_rows(
             }
             // fused writeback: affine + residual + relu, real lanes only
             let jn = (cout - jb).min(LANES);
-            for (r, ar) in acc.iter().enumerate().take(m4) {
-                let mi = i0 + r;
-                let res = residual.base(mi, cout);
-                let orow = &mut out[(mi - r0) * cout + jb..(mi - r0) * cout + jb + jn];
-                for (j, o) in orow.iter_mut().enumerate() {
-                    let c = jb + j;
-                    let mut y = ar[j] * scale[c] + bias[c];
-                    if let Some((buf, base)) = res {
-                        y += buf[base + c];
-                    }
-                    if relu && y < 0.0 {
-                        y = 0.0;
-                    }
-                    *o = y;
-                }
-            }
+            gemm_epilogue_tile(&acc, m4, i0, jb, jn, cout, scale, bias, relu, residual, r0, out);
             jb += LANES;
         }
         i0 += m4;
+    }
+}
+
+/// Fused tile writeback shared by the scalar and SIMD GEMM kernels:
+/// folded-BN affine + optional residual + ReLU over the `jn` real
+/// lanes of a 4×[`LANES`] accumulator tile. Keeping a single epilogue
+/// makes scalar/SIMD divergence in the writeback structurally
+/// impossible.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_epilogue_tile(
+    acc: &[[f32; LANES]; 4],
+    m4: usize,
+    i0: usize,
+    jb: usize,
+    jn: usize,
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &Residual,
+    r0: usize,
+    out: &mut [f32],
+) {
+    for (r, ar) in acc.iter().enumerate().take(m4) {
+        let mi = i0 + r;
+        let res = residual.base(mi, cout);
+        let orow = &mut out[(mi - r0) * cout + jb..(mi - r0) * cout + jb + jn];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let c = jb + j;
+            let mut y = ar[j] * scale[c] + bias[c];
+            if let Some((buf, base)) = res {
+                y += buf[base + c];
+            }
+            if relu && y < 0.0 {
+                y = 0.0;
+            }
+            *o = y;
+        }
     }
 }
 

@@ -19,6 +19,9 @@
 //!   with fused conv+BN+ReLU GEMM steps and zero heap allocation per
 //!   forward. This is the serving hot path; the naive per-op walk is
 //!   kept as `DetectorModel::forward_naive` for parity/benchmarks.
+//! * [`simd`] — explicit SIMD kernel backends (AVX2/NEON behind
+//!   runtime dispatch) for both GEMMs and the fixed-point im2col,
+//!   bitwise identical to the scalar reference kernels.
 //! * [`synth`] — synthetic spec/checkpoint builder so the engines (and
 //!   the sharded server on top of them) run hermetically, with no
 //!   Python artifacts.
@@ -34,7 +37,9 @@ pub mod layers;
 pub mod model;
 pub mod plan;
 pub mod shift_conv;
+pub mod simd;
 pub mod synth;
 
 pub use model::{DetectorModel, EngineKind};
 pub use plan::Plan;
+pub use simd::{KernelBackend, SimdMode};

@@ -272,6 +272,19 @@ impl DetectorModel {
         Plan::compile_with_pool(self, max_batch, pool)
     }
 
+    /// Like [`DetectorModel::plan_with_pool`], but pinning the kernel
+    /// backend explicitly instead of resolving `LBW_SIMD` (the server
+    /// resolves `serve.simd` once per engine; parity tests pin
+    /// `Scalar`). SIMD and scalar plans are bitwise identical.
+    pub fn plan_with(
+        &self,
+        max_batch: usize,
+        pool: Arc<ThreadPool>,
+        backend: crate::nn::simd::KernelBackend,
+    ) -> Plan {
+        Plan::compile_with(self, max_batch, pool, backend)
+    }
+
     /// Run detection through the **planned executor** (compiled lazily
     /// on first use, then reused — recompiled only if `batch` outgrows
     /// the cached arena). `images`: `[B, IMG, IMG, 3]` flat. Returns

@@ -27,10 +27,11 @@
 use std::sync::Arc;
 
 use crate::consts::{GRID, IMG, K, NUM_CLS};
-use crate::nn::conv::{pack_lanes, par_gemm_bn_relu, par_im2col, same_padding, Residual, LANES};
+use crate::nn::conv::{pack_lanes, par_gemm_bn_relu_on, par_im2col, same_padding, Residual, LANES};
 use crate::nn::layers::ps_vote_into;
 use crate::nn::model::{ConvOp, DetectorModel};
-use crate::nn::shift_conv::{par_im2col_fix, par_shift_gemm_bn_relu, DenseLanes, FIX};
+use crate::nn::shift_conv::{par_im2col_fix_on, par_shift_gemm_bn_relu_on, DenseLanes, FIX};
+use crate::nn::simd::KernelBackend;
 use crate::nn::EngineKind;
 use crate::runtime::pool::ThreadPool;
 use crate::tensor::softmax_rows_;
@@ -220,6 +221,11 @@ pub struct Plan {
     /// output-row chunks stolen by the pool's participants. A 1-thread
     /// pool (the [`Plan::compile`] default) runs everything inline.
     pool: Arc<ThreadPool>,
+    /// Kernel backend every conv in this plan dispatches to — resolved
+    /// once at compile time (runtime feature detection honoring
+    /// `LBW_SIMD` by default; see [`crate::nn::simd`]). SIMD and
+    /// scalar backends produce bitwise-identical outputs.
+    backend: KernelBackend,
     /// Largest batch the arena can hold.
     pub max_batch: usize,
     pub engine: EngineKind,
@@ -263,6 +269,19 @@ impl Plan {
         model: &DetectorModel,
         max_batch: usize,
         pool: Arc<ThreadPool>,
+    ) -> Plan {
+        Plan::compile_with(model, max_batch, pool, KernelBackend::detect_env())
+    }
+
+    /// Like [`Plan::compile_with_pool`], but with an explicit kernel
+    /// backend instead of the `LBW_SIMD` env default (parity tests pin
+    /// `Scalar`; the server resolves `serve.simd` once and passes the
+    /// result here).
+    pub fn compile_with(
+        model: &DetectorModel,
+        max_batch: usize,
+        pool: Arc<ThreadPool>,
+        backend: KernelBackend,
     ) -> Plan {
         let mb = max_batch.max(1);
         let mut steps: Vec<Step> = Vec::new();
@@ -415,6 +434,7 @@ impl Plan {
             steps,
             arena,
             pool,
+            backend,
             max_batch: mb,
             engine: model.engine,
             weight_bits: model.weight_bits,
@@ -425,6 +445,11 @@ impl Plan {
     /// Participants in this plan's tile pool (1 = single-threaded).
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// Kernel backend this plan's convs dispatch to.
+    pub fn backend(&self) -> KernelBackend {
+        self.backend
     }
 
     /// Execute the plan on `batch ≤ max_batch` images
@@ -440,6 +465,7 @@ impl Plan {
         );
         assert_eq!(images.len(), batch * IMG * IMG * 3, "bad image buffer size");
         let pool = &self.pool;
+        let backend = self.backend;
         let Arena { bufs, col, colq } = &mut self.arena;
         for step in &self.steps {
             match step {
@@ -458,9 +484,10 @@ impl Plan {
                                 pool, src, batch, cs.h_in, cs.w_in, cs.cin, cs.kh, cs.kw,
                                 cs.stride, cs.lo_h, cs.lo_w, cs.oh, cs.ow, &mut col[..m * kdim],
                             ),
-                            PlannedKernel::Shift { .. } => par_im2col_fix(
-                                pool, src, batch, cs.h_in, cs.w_in, cs.cin, cs.kh, cs.kw,
-                                cs.stride, cs.lo_h, cs.lo_w, cs.oh, cs.ow, &mut colq[..m * kdim],
+                            PlannedKernel::Shift { .. } => par_im2col_fix_on(
+                                pool, backend, src, batch, cs.h_in, cs.w_in, cs.cin, cs.kh,
+                                cs.kw, cs.stride, cs.lo_h, cs.lo_w, cs.oh, cs.ow,
+                                &mut colq[..m * kdim],
                             ),
                         }
                     }
@@ -493,14 +520,15 @@ impl Plan {
                             } else {
                                 &col[..m * kdim]
                             };
-                            par_gemm_bn_relu(
-                                pool, a, m, kdim, w, cs.cout, *cp, &cs.scale, &cs.bias, cs.relu,
-                                &res, &mut dst[..m * cs.cout],
+                            par_gemm_bn_relu_on(
+                                pool, backend, a, m, kdim, w, cs.cout, *cp, &cs.scale, &cs.bias,
+                                cs.relu, &res, &mut dst[..m * cs.cout],
                             );
                         }
-                        PlannedKernel::Shift { lanes, scale_out } => par_shift_gemm_bn_relu(
-                            pool, &colq[..m * kdim], m, kdim, lanes, *scale_out, cs.cout,
-                            &cs.scale, &cs.bias, cs.relu, &res, &mut dst[..m * cs.cout],
+                        PlannedKernel::Shift { lanes, scale_out } => par_shift_gemm_bn_relu_on(
+                            pool, backend, &colq[..m * kdim], m, kdim, lanes, *scale_out,
+                            cs.cout, &cs.scale, &cs.bias, cs.relu, &res,
+                            &mut dst[..m * cs.cout],
                         ),
                     }
                 }

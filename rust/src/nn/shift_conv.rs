@@ -372,6 +372,86 @@ pub fn par_im2col_fix(
     );
 }
 
+/// [`im2col_fix`] with an explicit kernel backend: the SIMD paths
+/// vectorize the 16.16 conversion of each contiguous valid segment
+/// (bitwise identical to the scalar `f32::round` definition — see
+/// [`crate::nn::simd`] for the exactness argument).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_fix_on(
+    backend: crate::nn::simd::KernelBackend,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    lo_h: usize,
+    lo_w: usize,
+    oh: usize,
+    ow: usize,
+    col: &mut [i32],
+) {
+    debug_assert_eq!(x.len(), n * h * w * cin);
+    crate::nn::simd::fix_rows_backend(
+        backend,
+        x,
+        h,
+        w,
+        cin,
+        kh,
+        kw,
+        stride,
+        lo_h,
+        lo_w,
+        ow,
+        oh * ow,
+        0,
+        n * oh * ow,
+        col,
+    );
+}
+
+/// [`par_im2col_fix`] with an explicit kernel backend: chunked over
+/// the pool exactly like the scalar packer (chunk boundaries depend
+/// only on the row count), each chunk converting through the
+/// backend's vector path.
+#[allow(clippy::too_many_arguments)]
+pub fn par_im2col_fix_on(
+    pool: &crate::runtime::pool::ThreadPool,
+    backend: crate::nn::simd::KernelBackend,
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    lo_h: usize,
+    lo_w: usize,
+    oh: usize,
+    ow: usize,
+    col: &mut [i32],
+) {
+    use crate::nn::conv::IM2COL_CHUNK;
+    use crate::runtime::pool::SendPtr;
+    let k = kh * kw * cin;
+    let rows = n * oh * ow;
+    debug_assert_eq!(x.len(), n * h * w * cin);
+    debug_assert_eq!(col.len(), rows * k);
+    let base = SendPtr::new(col.as_mut_ptr());
+    pool.run(rows, IM2COL_CHUNK, |r0, r1| {
+        // SAFETY: each chunk writes only column rows [r0, r1); chunk
+        // ranges are disjoint by construction
+        let sub = unsafe { std::slice::from_raw_parts_mut(base.get().add(r0 * k), (r1 - r0) * k) };
+        crate::nn::simd::fix_rows_backend(
+            backend, x, h, w, cin, kh, kw, stride, lo_h, lo_w, ow, oh * ow, r0, r1, sub,
+        );
+    });
+}
+
 /// Register-blocked shift-add GEMM with the same fused epilogue as
 /// `conv::gemm_bn_relu`: 4 fixed-point patch rows × `LANES` output
 /// channels per tile, the integer accumulator living in registers
@@ -399,11 +479,49 @@ pub fn shift_gemm_bn_relu(
     // the tile loop reads LANES-wide rows; a DenseLanes built with a
     // different lane width would read the next patch row's codes
     assert_eq!(lanes.cp % LANES, 0, "DenseLanes must be built with lane width {LANES}");
+    shift_gemm_bn_relu_on(
+        crate::nn::simd::KernelBackend::Scalar,
+        aq,
+        m,
+        k,
+        lanes,
+        scale_out,
+        cout,
+        scale,
+        bias,
+        relu,
+        residual,
+        out,
+    );
+}
+
+/// [`shift_gemm_bn_relu`] with an explicit kernel backend (integer
+/// SIMD tiles when the plan selected one — exact by construction, so
+/// bitwise identical to scalar).
+#[allow(clippy::too_many_arguments)]
+pub fn shift_gemm_bn_relu_on(
+    backend: crate::nn::simd::KernelBackend,
+    aq: &[i32],
+    m: usize,
+    k: usize,
+    lanes: &DenseLanes,
+    scale_out: f32,
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &crate::nn::conv::Residual,
+    out: &mut [f32],
+) {
+    use crate::nn::conv::LANES;
+    assert_eq!(lanes.cp % LANES, 0, "DenseLanes must be built with lane width {LANES}");
     debug_assert_eq!(aq.len(), m * k);
     debug_assert_eq!(lanes.shifts.len(), k * lanes.cp);
     debug_assert_eq!(out.len(), m * cout);
     debug_assert!(scale.len() == cout && bias.len() == cout);
-    shift_gemm_rows(aq, k, lanes, scale_out, cout, scale, bias, relu, residual, 0, m, out);
+    crate::nn::simd::shift_gemm_rows_backend(
+        backend, aq, k, lanes, scale_out, cout, scale, bias, relu, residual, 0, m, out,
+    );
 }
 
 /// Parallel [`shift_gemm_bn_relu`]: fixed-size output-row tiles stolen
@@ -413,6 +531,43 @@ pub fn shift_gemm_bn_relu(
 #[allow(clippy::too_many_arguments)]
 pub fn par_shift_gemm_bn_relu(
     pool: &crate::runtime::pool::ThreadPool,
+    aq: &[i32],
+    m: usize,
+    k: usize,
+    lanes: &DenseLanes,
+    scale_out: f32,
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &crate::nn::conv::Residual,
+    out: &mut [f32],
+) {
+    par_shift_gemm_bn_relu_on(
+        pool,
+        crate::nn::simd::KernelBackend::Scalar,
+        aq,
+        m,
+        k,
+        lanes,
+        scale_out,
+        cout,
+        scale,
+        bias,
+        relu,
+        residual,
+        out,
+    );
+}
+
+/// [`par_shift_gemm_bn_relu`] with an explicit kernel backend. Chunk
+/// boundaries depend only on `(m, GEMM_CHUNK)` and the i32 tile math
+/// is exact under any lane grouping, so the output is bitwise
+/// identical across thread counts *and* backends.
+#[allow(clippy::too_many_arguments)]
+pub fn par_shift_gemm_bn_relu_on(
+    pool: &crate::runtime::pool::ThreadPool,
+    backend: crate::nn::simd::KernelBackend,
     aq: &[i32],
     m: usize,
     k: usize,
@@ -439,15 +594,19 @@ pub fn par_shift_gemm_bn_relu(
         let sub = unsafe {
             std::slice::from_raw_parts_mut(base.get().add(r0 * cout), (r1 - r0) * cout)
         };
-        shift_gemm_rows(aq, k, lanes, scale_out, cout, scale, bias, relu, residual, r0, r1, sub);
+        crate::nn::simd::shift_gemm_rows_backend(
+            backend, aq, k, lanes, scale_out, cout, scale, bias, relu, residual, r0, r1, sub,
+        );
     });
 }
 
 /// Row-range core of the blocked shift-add GEMM: output rows
 /// `[r0, r1)` into `out` (covering exactly those rows); `aq` and
-/// residual row indices stay absolute.
+/// residual row indices stay absolute. This scalar kernel is the
+/// parity reference the SIMD backends in [`crate::nn::simd`] must
+/// match.
 #[allow(clippy::too_many_arguments)]
-fn shift_gemm_rows(
+pub(crate) fn shift_gemm_rows_scalar(
     aq: &[i32],
     k: usize,
     lanes: &DenseLanes,
@@ -494,25 +653,52 @@ fn shift_gemm_rows(
             }
             // fused writeback: layer scale + affine + residual + relu
             let jn = (cout - jb).min(LANES);
-            for (r, ar) in acc.iter().enumerate().take(m4) {
-                let mi = i0 + r;
-                let res = residual.base(mi, cout);
-                let orow = &mut out[(mi - r0) * cout + jb..(mi - r0) * cout + jb + jn];
-                for (j, o) in orow.iter_mut().enumerate() {
-                    let c = jb + j;
-                    let mut y = (ar[j] as f32 * scale_out) * scale[c] + bias[c];
-                    if let Some((buf, rbase)) = res {
-                        y += buf[rbase + c];
-                    }
-                    if relu && y < 0.0 {
-                        y = 0.0;
-                    }
-                    *o = y;
-                }
-            }
+            shift_epilogue_tile(
+                &acc, m4, i0, jb, jn, scale_out, cout, scale, bias, relu, residual, r0, out,
+            );
             jb += LANES;
         }
         i0 += m4;
+    }
+}
+
+/// Fused tile writeback shared by the scalar and SIMD shift-add GEMM
+/// kernels: layer scale `2^{s-FIX}` + folded-BN affine + optional
+/// residual + ReLU over the `jn` real lanes of a 4×`LANES` integer
+/// accumulator tile. One epilogue for every backend makes writeback
+/// divergence structurally impossible.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn shift_epilogue_tile(
+    acc: &[[i32; crate::nn::conv::LANES]; 4],
+    m4: usize,
+    i0: usize,
+    jb: usize,
+    jn: usize,
+    scale_out: f32,
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &crate::nn::conv::Residual,
+    r0: usize,
+    out: &mut [f32],
+) {
+    for (r, ar) in acc.iter().enumerate().take(m4) {
+        let mi = i0 + r;
+        let res = residual.base(mi, cout);
+        let orow = &mut out[(mi - r0) * cout + jb..(mi - r0) * cout + jb + jn];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let c = jb + j;
+            let mut y = (ar[j] as f32 * scale_out) * scale[c] + bias[c];
+            if let Some((buf, rbase)) = res {
+                y += buf[rbase + c];
+            }
+            if relu && y < 0.0 {
+                y = 0.0;
+            }
+            *o = y;
+        }
     }
 }
 

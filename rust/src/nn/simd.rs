@@ -1,0 +1,1014 @@
+//! Explicit SIMD kernel backend for the planned executor's GEMMs.
+//!
+//! The scalar tile kernels in [`crate::nn::conv`] and
+//! [`crate::nn::shift_conv`] stay the *parity reference*; this module
+//! adds `std::arch` implementations of the same 4-row × [`LANES`]-lane
+//! tiles — AVX2 on x86_64 (behind `is_x86_feature_detected!`), NEON on
+//! aarch64 (baseline, always present) — plus a vectorized fixed-point
+//! im2col pack for the shift engine.
+//!
+//! # Bitwise parity contract
+//!
+//! SIMD output is **bitwise identical** to scalar, not merely close:
+//!
+//! * vector lanes map 1:1 onto the existing [`LANES`] = 8 independent
+//!   per-channel accumulators, so per-channel accumulation *order* over
+//!   `k` is unchanged;
+//! * the f32 path issues separate multiply and add intrinsics (no FMA
+//!   contraction — rustc never contracts scalar `a + x * b` either, so
+//!   both sides perform the same two IEEE roundings per step);
+//! * the shift path is pure i32 shift/xor/sub/and/add — exact by
+//!   construction; skipping an all-zero activation quad is lossless
+//!   because a zero activation contributes exactly `0` to every lane;
+//! * both paths finish through the *same* scalar epilogue
+//!   (`conv::gemm_epilogue_tile` / `shift_conv::shift_epilogue_tile`),
+//!   so the affine + residual + ReLU writeback cannot diverge;
+//! * the fixed-point im2col emulates `f32::round` (half away from
+//!   zero) exactly: `_mm256_cvtps_epi32` rounds half-to-even, so ties
+//!   (`t - round(t) == ±0.5`, detectable exactly because the residual
+//!   of a nearest rounding is representable) are nudged away from
+//!   zero. Exact for `|v · 2^16| < 2^31`, i.e. activations below
+//!   32768.0 in magnitude — far beyond anything the detector produces
+//!   (the scalar `as i32` cast only saturates beyond the same bound).
+//!
+//! The backend is chosen **once at plan-build time** (`KernelBackend`
+//! is threaded through `nn/plan.rs`), overridable via `serve.simd`,
+//! `repro serve --simd` or `LBW_SIMD=auto|on|off`. `off` forces the
+//! scalar reference kernels everywhere; `on` asks for SIMD and falls
+//! back to scalar (with the same outputs) when the host lacks it.
+
+use crate::nn::conv::{self, Residual, LANES};
+use crate::nn::shift_conv::{self, DenseLanes};
+
+/// User-facing SIMD policy (`LBW_SIMD`, `serve.simd`, `--simd`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Use SIMD when the host supports it (the default).
+    #[default]
+    Auto,
+    /// Ask for SIMD; still falls back to scalar on hosts without it
+    /// (outputs are bitwise identical either way).
+    On,
+    /// Force the scalar reference kernels.
+    Off,
+}
+
+impl SimdMode {
+    /// Policy from `LBW_SIMD` (unset or unparseable ⇒ `Auto`, so an
+    /// empty matrix variable in CI behaves like the default).
+    pub fn from_env() -> SimdMode {
+        std::env::var("LBW_SIMD").ok().and_then(|s| s.parse().ok()).unwrap_or_default()
+    }
+}
+
+impl std::str::FromStr for SimdMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(SimdMode::Auto),
+            "on" => Ok(SimdMode::On),
+            "off" => Ok(SimdMode::Off),
+            other => Err(anyhow::anyhow!("simd mode must be auto|on|off, got `{other}`")),
+        }
+    }
+}
+
+impl std::fmt::Display for SimdMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimdMode::Auto => "auto",
+            SimdMode::On => "on",
+            SimdMode::Off => "off",
+        })
+    }
+}
+
+/// Resolved kernel implementation, fixed at plan-build time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// The register-blocked scalar kernels — always available, and the
+    /// reference every SIMD path must match bit for bit.
+    Scalar,
+    /// 8-lane AVX2 tiles (f32 mul/add, i32 `vpsravd` variable shift).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 2×4-lane NEON tiles (`sshl` with negated counts for the
+    /// variable right shift; `fcvtas` for the ties-away fixed-point
+    /// convert).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl KernelBackend {
+    /// Resolve a policy against the host: runtime feature detection on
+    /// x86_64, baseline NEON on aarch64, scalar everywhere else.
+    pub fn detect(mode: SimdMode) -> KernelBackend {
+        if mode == SimdMode::Off {
+            return KernelBackend::Scalar;
+        }
+        Self::detect_host()
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn detect_host() -> KernelBackend {
+        if is_x86_feature_detected!("avx2") {
+            KernelBackend::Avx2
+        } else {
+            KernelBackend::Scalar
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    fn detect_host() -> KernelBackend {
+        KernelBackend::Neon
+    }
+
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn detect_host() -> KernelBackend {
+        KernelBackend::Scalar
+    }
+
+    /// Resolve the `LBW_SIMD` policy against the host.
+    pub fn detect_env() -> KernelBackend {
+        Self::detect(SimdMode::from_env())
+    }
+
+    /// Stable label for logs and bench rows.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            KernelBackend::Neon => "neon",
+        }
+    }
+
+    /// Whether this backend runs vector kernels (the bench `simd`
+    /// dimension: `on` for any vector backend, `off` for scalar).
+    pub fn is_simd(&self) -> bool {
+        !matches!(self, KernelBackend::Scalar)
+    }
+}
+
+/// Backend-dispatched row-range f32 GEMM (see `conv::gemm_bn_relu` for
+/// the contract; `out` covers exactly rows `[r0, r1)`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_rows_backend(
+    backend: KernelBackend,
+    a: &[f32],
+    k: usize,
+    b: &[f32],
+    cout: usize,
+    cp: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &Residual,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    match backend {
+        KernelBackend::Scalar => {
+            conv::gemm_rows_scalar(a, k, b, cout, cp, scale, bias, relu, residual, r0, r1, out)
+        }
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe {
+            // SAFETY: Avx2 is only constructed after runtime detection
+            avx2::gemm_rows(a, k, b, cout, cp, scale, bias, relu, residual, r0, r1, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe {
+            // SAFETY: NEON is baseline on aarch64
+            neon::gemm_rows(a, k, b, cout, cp, scale, bias, relu, residual, r0, r1, out)
+        },
+    }
+}
+
+/// Backend-dispatched row-range shift-add GEMM (see
+/// `shift_conv::shift_gemm_bn_relu` for the contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn shift_gemm_rows_backend(
+    backend: KernelBackend,
+    aq: &[i32],
+    k: usize,
+    lanes: &DenseLanes,
+    scale_out: f32,
+    cout: usize,
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+    residual: &Residual,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    match backend {
+        KernelBackend::Scalar => shift_conv::shift_gemm_rows_scalar(
+            aq, k, lanes, scale_out, cout, scale, bias, relu, residual, r0, r1, out,
+        ),
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe {
+            // SAFETY: Avx2 is only constructed after runtime detection
+            avx2::shift_gemm_rows(
+                aq, k, lanes, scale_out, cout, scale, bias, relu, residual, r0, r1, out,
+            )
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe {
+            // SAFETY: NEON is baseline on aarch64
+            neon::shift_gemm_rows(
+                aq, k, lanes, scale_out, cout, scale, bias, relu, residual, r0, r1, out,
+            )
+        },
+    }
+}
+
+/// Backend-dispatched fixed-point im2col for patch rows `[row0, row1)`
+/// (see `conv::im2col_rows_map`; `col` covers exactly those rows).
+/// Converts activations to 16.16 during the gather; the SIMD paths
+/// vectorize the conversion of each contiguous valid segment.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fix_rows_backend(
+    backend: KernelBackend,
+    x: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    lo_h: usize,
+    lo_w: usize,
+    ow: usize,
+    ohw: usize,
+    row0: usize,
+    row1: usize,
+    col: &mut [i32],
+) {
+    match backend {
+        KernelBackend::Scalar => {
+            let scale_in = f32::powi(2.0, shift_conv::FIX);
+            conv::im2col_rows_map(
+                x,
+                h,
+                w,
+                cin,
+                kh,
+                kw,
+                stride,
+                lo_h,
+                lo_w,
+                ow,
+                ohw,
+                row0,
+                row1,
+                |v| (v * scale_in).round() as i32,
+                col,
+            );
+        }
+        #[cfg(target_arch = "x86_64")]
+        KernelBackend::Avx2 => unsafe {
+            // SAFETY: Avx2 is only constructed after runtime detection
+            avx2::fix_rows(x, h, w, cin, kh, kw, stride, lo_h, lo_w, ow, ohw, row0, row1, col)
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelBackend::Neon => unsafe {
+            // SAFETY: NEON is baseline on aarch64
+            neon::fix_rows(x, h, w, cin, kh, kw, stride, lo_h, lo_w, ow, ohw, row0, row1, col)
+        },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{DenseLanes, Residual, LANES};
+    use crate::nn::conv::gemm_epilogue_tile;
+    use crate::nn::shift_conv::{shift_epilogue_tile, FIX};
+    use std::arch::x86_64::*;
+
+    /// AVX2 mirror of `conv::gemm_rows_scalar`: 4 patch rows × one
+    /// 8-lane channel vector per tile, separate mul/add per `k` step
+    /// (no FMA — two roundings, exactly like the scalar kernel).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn gemm_rows(
+        a: &[f32],
+        k: usize,
+        b: &[f32],
+        cout: usize,
+        cp: usize,
+        scale: &[f32],
+        bias: &[f32],
+        relu: bool,
+        residual: &Residual,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), (r1 - r0) * cout);
+        debug_assert_eq!(b.len(), k * cp);
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut i0 = r0;
+        while i0 < r1 {
+            let m4 = (r1 - i0).min(4);
+            let mut jb = 0usize;
+            while jb < cp {
+                let mut acc = [_mm256_setzero_ps(); 4];
+                if m4 == 4 {
+                    for p in 0..k {
+                        let bv = _mm256_loadu_ps(bp.add(p * cp + jb));
+                        let x0 = _mm256_set1_ps(*ap.add(i0 * k + p));
+                        let x1 = _mm256_set1_ps(*ap.add((i0 + 1) * k + p));
+                        let x2 = _mm256_set1_ps(*ap.add((i0 + 2) * k + p));
+                        let x3 = _mm256_set1_ps(*ap.add((i0 + 3) * k + p));
+                        acc[0] = _mm256_add_ps(acc[0], _mm256_mul_ps(x0, bv));
+                        acc[1] = _mm256_add_ps(acc[1], _mm256_mul_ps(x1, bv));
+                        acc[2] = _mm256_add_ps(acc[2], _mm256_mul_ps(x2, bv));
+                        acc[3] = _mm256_add_ps(acc[3], _mm256_mul_ps(x3, bv));
+                    }
+                } else {
+                    for p in 0..k {
+                        let bv = _mm256_loadu_ps(bp.add(p * cp + jb));
+                        for (r, ar) in acc.iter_mut().enumerate().take(m4) {
+                            let xv = _mm256_set1_ps(*ap.add((i0 + r) * k + p));
+                            *ar = _mm256_add_ps(*ar, _mm256_mul_ps(xv, bv));
+                        }
+                    }
+                }
+                let mut tile = [[0.0f32; LANES]; 4];
+                for (t, &v) in tile.iter_mut().zip(acc.iter()).take(m4) {
+                    _mm256_storeu_ps(t.as_mut_ptr(), v);
+                }
+                let jn = (cout - jb).min(LANES);
+                gemm_epilogue_tile(&tile, m4, i0, jb, jn, cout, scale, bias, relu, residual, r0, out);
+                jb += LANES;
+            }
+            i0 += m4;
+        }
+    }
+
+    /// AVX2 mirror of `shift_conv::shift_gemm_rows_scalar`: the hot op
+    /// is `vpsravd` (per-lane arithmetic right shift) + xor-sign + sub
+    /// + nz-mask + add on i32 lanes — integer-exact, so parity with
+    /// scalar is structural. Keeps both scalar skips: an all-zero
+    /// activation quad and a zero per-row activation contribute
+    /// exactly 0 to every lane.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn shift_gemm_rows(
+        aq: &[i32],
+        k: usize,
+        lanes: &DenseLanes,
+        scale_out: f32,
+        cout: usize,
+        scale: &[f32],
+        bias: &[f32],
+        relu: bool,
+        residual: &Residual,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
+        let cp = lanes.cp;
+        debug_assert_eq!(out.len(), (r1 - r0) * cout);
+        debug_assert_eq!(lanes.shifts.len(), k * cp);
+        let shp = lanes.shifts.as_ptr();
+        let sgp = lanes.signs.as_ptr();
+        let nzp = lanes.nz.as_ptr();
+        let mut i0 = r0;
+        while i0 < r1 {
+            let m4 = (r1 - i0).min(4);
+            let mut jb = 0usize;
+            while jb < cp {
+                let mut acc = [_mm256_setzero_si256(); 4];
+                for p in 0..k {
+                    let mut xs = [0i32; 4];
+                    for (r, xr) in xs.iter_mut().enumerate().take(m4) {
+                        *xr = *aq.get_unchecked((i0 + r) * k + p);
+                    }
+                    if (xs[0] | xs[1] | xs[2] | xs[3]) == 0 {
+                        continue;
+                    }
+                    let base = p * cp + jb;
+                    let sh = _mm256_loadu_si256(shp.add(base) as *const __m256i);
+                    let sg = _mm256_loadu_si256(sgp.add(base) as *const __m256i);
+                    let nzm = _mm256_loadu_si256(nzp.add(base) as *const __m256i);
+                    for (r, ar) in acc.iter_mut().enumerate().take(m4) {
+                        let xv = xs[r];
+                        if xv != 0 {
+                            let xvv = _mm256_set1_epi32(xv);
+                            let v = _mm256_xor_si256(_mm256_srav_epi32(xvv, sh), sg);
+                            let term = _mm256_and_si256(_mm256_sub_epi32(v, sg), nzm);
+                            *ar = _mm256_add_epi32(*ar, term);
+                        }
+                    }
+                }
+                let mut tile = [[0i32; LANES]; 4];
+                for (t, &v) in tile.iter_mut().zip(acc.iter()).take(m4) {
+                    _mm256_storeu_si256(t.as_mut_ptr() as *mut __m256i, v);
+                }
+                let jn = (cout - jb).min(LANES);
+                shift_epilogue_tile(
+                    &tile, m4, i0, jb, jn, scale_out, cout, scale, bias, relu, residual, r0, out,
+                );
+                jb += LANES;
+            }
+            i0 += m4;
+        }
+    }
+
+    /// Convert 8 activations to 16.16 fixed point, matching
+    /// `(v * 65536f32).round() as i32` (round half *away* from zero)
+    /// bit for bit: `_mm256_cvtps_epi32` rounds half-to-even, and the
+    /// residual `d = t - cvt(t)` of a nearest rounding is exact, so
+    /// `d == ±0.5` identifies ties precisely; ties that landed toward
+    /// zero are nudged one step outward. Exact for `|t| < 2^31`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support; `src` must point at 8
+    /// readable f32s.
+    #[target_feature(enable = "avx2")]
+    unsafe fn fix8(src: *const f32) -> __m256i {
+        let t = _mm256_mul_ps(_mm256_loadu_ps(src), _mm256_set1_ps(65536.0));
+        let r = _mm256_cvtps_epi32(t);
+        let d = _mm256_sub_ps(t, _mm256_cvtepi32_ps(r));
+        // sign lanes of t: -1 where negative (incl. -0.0), else 0
+        let sg = _mm256_srai_epi32::<31>(_mm256_castps_si256(t));
+        let half = _mm256_set1_ps(0.5);
+        let mhalf = _mm256_set1_ps(-0.5);
+        // tie rounded toward zero on the positive side: d == +0.5, t >= 0
+        let mp = _mm256_andnot_si256(
+            sg,
+            _mm256_castps_si256(_mm256_cmp_ps::<_CMP_EQ_OQ>(d, half)),
+        );
+        // tie rounded toward zero on the negative side: d == -0.5, t < 0
+        let mm = _mm256_and_si256(
+            sg,
+            _mm256_castps_si256(_mm256_cmp_ps::<_CMP_EQ_OQ>(d, mhalf)),
+        );
+        // mask lanes are -1: subtracting mp adds 1, adding mm subtracts 1
+        _mm256_add_epi32(_mm256_sub_epi32(r, mp), mm)
+    }
+
+    /// Convert a contiguous run of `len` activations (vector body +
+    /// scalar tail; the scalar formula is the reference definition, so
+    /// the tail is trivially exact).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support; `src`/`dst` must cover
+    /// `len` elements.
+    #[target_feature(enable = "avx2")]
+    unsafe fn convert_run(src: *const f32, dst: *mut i32, len: usize) {
+        let scale_in = f32::powi(2.0, FIX);
+        let mut i = 0usize;
+        while i + LANES <= len {
+            _mm256_storeu_si256(dst.add(i) as *mut __m256i, fix8(src.add(i)));
+            i += LANES;
+        }
+        while i < len {
+            *dst.add(i) = (*src.add(i) * scale_in).round() as i32;
+            i += 1;
+        }
+    }
+
+    /// AVX2 mirror of the fixed-point `im2col_rows_map` instantiation:
+    /// identical implicit-padding walk, with each contiguous valid
+    /// segment converted through [`fix8`].
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn fix_rows(
+        x: &[f32],
+        h: usize,
+        w: usize,
+        cin: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        lo_h: usize,
+        lo_w: usize,
+        ow: usize,
+        ohw: usize,
+        row0: usize,
+        row1: usize,
+        col: &mut [i32],
+    ) {
+        let k = kh * kw * cin;
+        debug_assert_eq!(col.len(), (row1 - row0) * k);
+        for row in row0..row1 {
+            let ni = row / ohw;
+            let rem = row - ni * ohw;
+            let (oy, ox) = (rem / ow, rem % ow);
+            let iy0 = (oy * stride) as isize - lo_h as isize;
+            let ix0 = (ox * stride) as isize - lo_w as isize;
+            let dst = &mut col[(row - row0) * k..(row - row0 + 1) * k];
+            for ky in 0..kh {
+                let y = iy0 + ky as isize;
+                let seg = &mut dst[ky * kw * cin..(ky + 1) * kw * cin];
+                if y < 0 || y >= h as isize {
+                    seg.fill(0);
+                    continue;
+                }
+                let kx_lo = ((-ix0).max(0) as usize).min(kw);
+                let kx_hi = ((w as isize - ix0).clamp(0, kw as isize)) as usize;
+                if kx_lo > 0 {
+                    seg[..kx_lo * cin].fill(0);
+                }
+                if kx_hi < kw {
+                    seg[kx_hi * cin..].fill(0);
+                }
+                if kx_hi > kx_lo {
+                    let sbase =
+                        ((ni * h + y as usize) * w + (ix0 + kx_lo as isize) as usize) * cin;
+                    convert_run(
+                        x.as_ptr().add(sbase),
+                        seg.as_mut_ptr().add(kx_lo * cin),
+                        (kx_hi - kx_lo) * cin,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{DenseLanes, Residual, LANES};
+    use crate::nn::conv::gemm_epilogue_tile;
+    use crate::nn::shift_conv::{shift_epilogue_tile, FIX};
+    use std::arch::aarch64::*;
+
+    /// NEON mirror of `conv::gemm_rows_scalar`: the 8 channel lanes are
+    /// two q-registers; separate `fmul`/`fadd` per step (the intrinsics
+    /// carry no fast-math flags, so LLVM cannot contract them to fmla).
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; pointers are derived from the slice
+    /// arguments whose bounds the debug asserts check.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn gemm_rows(
+        a: &[f32],
+        k: usize,
+        b: &[f32],
+        cout: usize,
+        cp: usize,
+        scale: &[f32],
+        bias: &[f32],
+        relu: bool,
+        residual: &Residual,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), (r1 - r0) * cout);
+        debug_assert_eq!(b.len(), k * cp);
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut i0 = r0;
+        while i0 < r1 {
+            let m4 = (r1 - i0).min(4);
+            let mut jb = 0usize;
+            while jb < cp {
+                let mut acc = [[vdupq_n_f32(0.0); 2]; 4];
+                for p in 0..k {
+                    let bq = bp.add(p * cp + jb);
+                    let b0 = vld1q_f32(bq);
+                    let b1 = vld1q_f32(bq.add(4));
+                    for (r, ar) in acc.iter_mut().enumerate().take(m4) {
+                        let xv = vdupq_n_f32(*ap.add((i0 + r) * k + p));
+                        ar[0] = vaddq_f32(ar[0], vmulq_f32(xv, b0));
+                        ar[1] = vaddq_f32(ar[1], vmulq_f32(xv, b1));
+                    }
+                }
+                let mut tile = [[0.0f32; LANES]; 4];
+                for (t, v) in tile.iter_mut().zip(acc.iter()).take(m4) {
+                    vst1q_f32(t.as_mut_ptr(), v[0]);
+                    vst1q_f32(t.as_mut_ptr().add(4), v[1]);
+                }
+                let jn = (cout - jb).min(LANES);
+                gemm_epilogue_tile(&tile, m4, i0, jb, jn, cout, scale, bias, relu, residual, r0, out);
+                jb += LANES;
+            }
+            i0 += m4;
+        }
+    }
+
+    /// NEON mirror of `shift_conv::shift_gemm_rows_scalar`: `sshl`
+    /// with negated counts performs the per-lane arithmetic right
+    /// shift (truncating toward −∞, same as Rust `>>` on i32).
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; pointers are derived from the slice
+    /// arguments whose bounds the debug asserts check.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn shift_gemm_rows(
+        aq: &[i32],
+        k: usize,
+        lanes: &DenseLanes,
+        scale_out: f32,
+        cout: usize,
+        scale: &[f32],
+        bias: &[f32],
+        relu: bool,
+        residual: &Residual,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+    ) {
+        let cp = lanes.cp;
+        debug_assert_eq!(out.len(), (r1 - r0) * cout);
+        debug_assert_eq!(lanes.shifts.len(), k * cp);
+        let shp = lanes.shifts.as_ptr();
+        let sgp = lanes.signs.as_ptr();
+        let nzp = lanes.nz.as_ptr();
+        let mut i0 = r0;
+        while i0 < r1 {
+            let m4 = (r1 - i0).min(4);
+            let mut jb = 0usize;
+            while jb < cp {
+                let mut acc = [[vdupq_n_s32(0); 2]; 4];
+                for p in 0..k {
+                    let mut xs = [0i32; 4];
+                    for (r, xr) in xs.iter_mut().enumerate().take(m4) {
+                        *xr = *aq.get_unchecked((i0 + r) * k + p);
+                    }
+                    if (xs[0] | xs[1] | xs[2] | xs[3]) == 0 {
+                        continue;
+                    }
+                    let base = p * cp + jb;
+                    let nsh0 = vnegq_s32(vld1q_s32(shp.add(base)));
+                    let nsh1 = vnegq_s32(vld1q_s32(shp.add(base + 4)));
+                    let sg0 = vld1q_s32(sgp.add(base));
+                    let sg1 = vld1q_s32(sgp.add(base + 4));
+                    let nz0 = vld1q_s32(nzp.add(base));
+                    let nz1 = vld1q_s32(nzp.add(base + 4));
+                    for (r, ar) in acc.iter_mut().enumerate().take(m4) {
+                        let xv = xs[r];
+                        if xv != 0 {
+                            let xvv = vdupq_n_s32(xv);
+                            let v0 = veorq_s32(vshlq_s32(xvv, nsh0), sg0);
+                            let v1 = veorq_s32(vshlq_s32(xvv, nsh1), sg1);
+                            ar[0] = vaddq_s32(ar[0], vandq_s32(vsubq_s32(v0, sg0), nz0));
+                            ar[1] = vaddq_s32(ar[1], vandq_s32(vsubq_s32(v1, sg1), nz1));
+                        }
+                    }
+                }
+                let mut tile = [[0i32; LANES]; 4];
+                for (t, v) in tile.iter_mut().zip(acc.iter()).take(m4) {
+                    vst1q_s32(t.as_mut_ptr(), v[0]);
+                    vst1q_s32(t.as_mut_ptr().add(4), v[1]);
+                }
+                let jn = (cout - jb).min(LANES);
+                shift_epilogue_tile(
+                    &tile, m4, i0, jb, jn, scale_out, cout, scale, bias, relu, residual, r0, out,
+                );
+                jb += LANES;
+            }
+            i0 += m4;
+        }
+    }
+
+    /// Convert a contiguous run of activations to 16.16 fixed point.
+    /// `vcvtaq_s32_f32` (fcvtas) rounds to nearest with ties away from
+    /// zero and saturates — exactly `f32::round` + the saturating
+    /// `as i32` cast, so the NEON convert is exact everywhere.
+    ///
+    /// # Safety
+    /// `src`/`dst` must cover `len` elements.
+    #[target_feature(enable = "neon")]
+    unsafe fn convert_run(src: *const f32, dst: *mut i32, len: usize) {
+        let scale_in = f32::powi(2.0, FIX);
+        let sv = vdupq_n_f32(scale_in);
+        let mut i = 0usize;
+        while i + 4 <= len {
+            let t = vmulq_f32(vld1q_f32(src.add(i)), sv);
+            vst1q_s32(dst.add(i), vcvtaq_s32_f32(t));
+            i += 4;
+        }
+        while i < len {
+            *dst.add(i) = (*src.add(i) * scale_in).round() as i32;
+            i += 1;
+        }
+    }
+
+    /// NEON mirror of the fixed-point `im2col_rows_map` instantiation.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; `col` must cover rows
+    /// `[row0, row1)`.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn fix_rows(
+        x: &[f32],
+        h: usize,
+        w: usize,
+        cin: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        lo_h: usize,
+        lo_w: usize,
+        ow: usize,
+        ohw: usize,
+        row0: usize,
+        row1: usize,
+        col: &mut [i32],
+    ) {
+        let k = kh * kw * cin;
+        debug_assert_eq!(col.len(), (row1 - row0) * k);
+        for row in row0..row1 {
+            let ni = row / ohw;
+            let rem = row - ni * ohw;
+            let (oy, ox) = (rem / ow, rem % ow);
+            let iy0 = (oy * stride) as isize - lo_h as isize;
+            let ix0 = (ox * stride) as isize - lo_w as isize;
+            let dst = &mut col[(row - row0) * k..(row - row0 + 1) * k];
+            for ky in 0..kh {
+                let y = iy0 + ky as isize;
+                let seg = &mut dst[ky * kw * cin..(ky + 1) * kw * cin];
+                if y < 0 || y >= h as isize {
+                    seg.fill(0);
+                    continue;
+                }
+                let kx_lo = ((-ix0).max(0) as usize).min(kw);
+                let kx_hi = ((w as isize - ix0).clamp(0, kw as isize)) as usize;
+                if kx_lo > 0 {
+                    seg[..kx_lo * cin].fill(0);
+                }
+                if kx_hi < kw {
+                    seg[kx_hi * cin..].fill(0);
+                }
+                if kx_hi > kx_lo {
+                    let sbase =
+                        ((ni * h + y as usize) * w + (ix0 + kx_lo as isize) as usize) * cin;
+                    convert_run(
+                        x.as_ptr().add(sbase),
+                        seg.as_mut_ptr().add(kx_lo * cin),
+                        (kx_hi - kx_lo) * cin,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::conv::pack_lanes;
+
+    fn randv(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f32 / (1u64 << 53) as f32 - 0.5) * 2.0 * scale
+            })
+            .collect()
+    }
+
+    fn randi(n: usize, seed: u64) -> Vec<i32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|i| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                // sprinkle exact zeros to exercise both skip paths;
+                // magnitudes stay near real 16.16 activations so the
+                // i32 accumulator cannot overflow in debug builds
+                if i % 5 == 0 {
+                    0
+                } else {
+                    ((s >> 40) as i32) - (1 << 23)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mode_parsing_and_env_default() {
+        assert_eq!("auto".parse::<SimdMode>().unwrap(), SimdMode::Auto);
+        assert_eq!("on".parse::<SimdMode>().unwrap(), SimdMode::On);
+        assert_eq!("off".parse::<SimdMode>().unwrap(), SimdMode::Off);
+        assert!("fast".parse::<SimdMode>().is_err());
+        assert_eq!(SimdMode::On.to_string(), "on");
+    }
+
+    #[test]
+    fn off_forces_scalar() {
+        assert_eq!(KernelBackend::detect(SimdMode::Off), KernelBackend::Scalar);
+        assert_eq!(KernelBackend::Scalar.label(), "scalar");
+        assert!(!KernelBackend::Scalar.is_simd());
+    }
+
+    /// f32 GEMM: detected backend vs scalar must be bitwise identical,
+    /// including lane tails (cout = 13) and partial 4-row tiles.
+    #[test]
+    fn gemm_backend_matches_scalar_bitwise() {
+        let backend = KernelBackend::detect(SimdMode::Auto);
+        for &(m, cin, cout) in &[(5usize, 3usize, 8usize), (16, 8, 13), (7, 13, 13)] {
+            let k = 3 * 3 * cin;
+            let a = randv(m * k, 11 + m as u64, 1.0);
+            let w = randv(k * cout, 23 + cout as u64, 0.3);
+            let (cp, b) = pack_lanes(&w, k, cout);
+            let scale = randv(cout, 31, 0.5);
+            let bias = randv(cout, 37, 0.2);
+            let res = randv(m * cout, 41, 0.1);
+            for (relu, residual) in
+                [(false, Residual::None), (true, Residual::Add(&res))]
+            {
+                let mut ys = vec![0.0f32; m * cout];
+                let mut yb = vec![0.0f32; m * cout];
+                gemm_rows_backend(
+                    KernelBackend::Scalar,
+                    &a,
+                    k,
+                    &b,
+                    cout,
+                    cp,
+                    &scale,
+                    &bias,
+                    relu,
+                    &residual,
+                    0,
+                    m,
+                    &mut ys,
+                );
+                gemm_rows_backend(
+                    backend, &a, k, &b, cout, cp, &scale, &bias, relu, &residual, 0, m, &mut yb,
+                );
+                for (i, (s, v)) in ys.iter().zip(yb.iter()).enumerate() {
+                    assert_eq!(
+                        s.to_bits(),
+                        v.to_bits(),
+                        "f32 gemm {:?} diverged at {i} (m={m}, cout={cout})",
+                        backend
+                    );
+                }
+            }
+        }
+    }
+
+    /// Shift-add GEMM: detected backend vs scalar, bitwise, over
+    /// synthetic DenseLanes planes with zero weights and zero
+    /// activations in the mix.
+    #[test]
+    fn shift_backend_matches_scalar_bitwise() {
+        let backend = KernelBackend::detect(SimdMode::Auto);
+        for &(m, cin, cout) in &[(5usize, 3usize, 8usize), (16, 8, 13)] {
+            let k = 3 * 3 * cin;
+            let cp = cout.div_ceil(LANES).max(1) * LANES;
+            let aq = randi(m * k, 7 + m as u64);
+            let mut s = 101u64;
+            let mut shifts = vec![0i32; k * cp];
+            let mut signs = vec![0i32; k * cp];
+            let mut nz = vec![0i32; k * cp];
+            for p in 0..k {
+                for j in 0..cout {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    let idx = p * cp + j;
+                    shifts[idx] = ((s >> 20) % 16) as i32;
+                    signs[idx] = if s & 2 == 0 { 0 } else { -1 };
+                    nz[idx] = if s % 7 == 0 { 0 } else { -1 };
+                }
+            }
+            let lanes = DenseLanes { cp, shifts, signs, nz };
+            let scale = randv(cout, 51, 0.5);
+            let bias = randv(cout, 53, 0.2);
+            let scale_out = f32::powi(2.0, -16);
+            let mut ys = vec![0.0f32; m * cout];
+            let mut yb = vec![0.0f32; m * cout];
+            shift_gemm_rows_backend(
+                KernelBackend::Scalar,
+                &aq,
+                k,
+                &lanes,
+                scale_out,
+                cout,
+                &scale,
+                &bias,
+                true,
+                &Residual::None,
+                0,
+                m,
+                &mut ys,
+            );
+            shift_gemm_rows_backend(
+                backend,
+                &aq,
+                k,
+                &lanes,
+                scale_out,
+                cout,
+                &scale,
+                &bias,
+                true,
+                &Residual::None,
+                0,
+                m,
+                &mut yb,
+            );
+            for (i, (a, b)) in ys.iter().zip(yb.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "shift gemm {:?} diverged at {i} (m={m}, cout={cout})",
+                    backend
+                );
+            }
+        }
+    }
+
+    /// Fixed-point im2col: the SIMD round emulation must match
+    /// `f32::round` bit for bit, including exact halfway cases on both
+    /// sides of zero, across padded borders and non-multiple-of-8 run
+    /// lengths.
+    #[test]
+    fn fix_im2col_backend_matches_scalar_exactly() {
+        let backend = KernelBackend::detect(SimdMode::Auto);
+        let (h, w, cin, kh, kw, stride) = (7usize, 9usize, 3usize, 3usize, 3usize, 1usize);
+        let (lo_h, lo_w) = (1usize, 1usize);
+        let (oh, ow) = (h, w);
+        let mut x = randv(h * w * cin, 67, 4.0);
+        // adversarial values: exact ties (k + 0.5)/2^16 both signs,
+        // tiny halfway 2^-17, zeros, and large magnitudes
+        let ties: Vec<f32> = (0..24)
+            .map(|i| {
+                let kk = (i * 2731 + 1) as f64;
+                let v = ((kk + 0.5) / 65536.0) as f32;
+                if i % 2 == 0 {
+                    v
+                } else {
+                    -v
+                }
+            })
+            .collect();
+        for (i, t) in ties.iter().enumerate() {
+            x[i * 7 % x.len()] = *t;
+        }
+        x[0] = f32::powi(2.0, -17);
+        x[1] = -f32::powi(2.0, -17);
+        x[2] = 0.0;
+        x[3] = -0.0;
+        x[4] = 12345.678;
+        x[5] = -9876.543;
+        let rows = oh * ow;
+        let k = kh * kw * cin;
+        let mut cs = vec![0i32; rows * k];
+        let mut cb = vec![0i32; rows * k];
+        fix_rows_backend(
+            KernelBackend::Scalar,
+            &x,
+            h,
+            w,
+            cin,
+            kh,
+            kw,
+            stride,
+            lo_h,
+            lo_w,
+            ow,
+            oh * ow,
+            0,
+            rows,
+            &mut cs,
+        );
+        fix_rows_backend(
+            backend,
+            &x,
+            h,
+            w,
+            cin,
+            kh,
+            kw,
+            stride,
+            lo_h,
+            lo_w,
+            ow,
+            oh * ow,
+            0,
+            rows,
+            &mut cb,
+        );
+        assert_eq!(cs, cb, "fixed-point im2col diverged on {:?}", backend);
+    }
+}

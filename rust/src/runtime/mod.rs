@@ -230,13 +230,36 @@ impl InferBackend {
     /// pool. The pool is created once, drives the parallel per-layer
     /// LBW quantization of the checkpoint (shift engines), and is then
     /// owned by the plan — every subsequent `infer` call reuses it.
-    /// Outputs are bitwise identical to the single-threaded backend.
+    /// The kernel backend follows `LBW_SIMD` (auto-detected SIMD by
+    /// default). Outputs are bitwise identical to the single-threaded
+    /// backend and to the scalar backend.
     pub fn planned_threaded(
         spec: &ParamSpec,
         ck: &Checkpoint,
         engine: EngineKind,
         max_batch: usize,
         threads: usize,
+    ) -> Result<InferBackend> {
+        Self::planned_with(
+            spec,
+            ck,
+            engine,
+            max_batch,
+            threads,
+            crate::nn::simd::KernelBackend::detect_env(),
+        )
+    }
+
+    /// Like [`InferBackend::planned_threaded`] with the kernel backend
+    /// pinned explicitly (the server resolves `serve.simd` once per
+    /// engine start and passes the result here; tests pin `Scalar`).
+    pub fn planned_with(
+        spec: &ParamSpec,
+        ck: &Checkpoint,
+        engine: EngineKind,
+        max_batch: usize,
+        threads: usize,
+        backend: crate::nn::simd::KernelBackend,
     ) -> Result<InferBackend> {
         let pool = Arc::new(pool::ThreadPool::new(threads.max(1)));
         let quants = match engine {
@@ -246,7 +269,7 @@ impl InferBackend {
             EngineKind::Float => None,
         };
         let model = DetectorModel::build_with_quants(spec, ck, engine, quants.as_ref())?;
-        Ok(InferBackend::Planned(Box::new(model.plan_with_pool(max_batch, pool))))
+        Ok(InferBackend::Planned(Box::new(model.plan_with(max_batch, pool, backend))))
     }
 
     /// `(cls_prob, reg)` for a flat `[batch, IMG, IMG, 3]` image slab.

@@ -84,7 +84,24 @@ impl ThreadPool {
     /// thread plus `threads - 1` resident workers. `threads <= 1`
     /// spawns nothing and `run` executes inline.
     pub fn new(threads: usize) -> ThreadPool {
+        ThreadPool::with_pin(threads, None)
+    }
+
+    /// Like [`ThreadPool::new`], but each resident worker `i` pins
+    /// itself to CPU `(base_cpu + i) % ncpus` before entering its work
+    /// loop (`sched_setaffinity`; no-op off Linux). CPU `base_cpu`
+    /// itself is left for the *calling* participant — pin it with
+    /// [`pin_current_thread`] from the thread that will call `run`
+    /// (the server pins each shard thread in its setup closure).
+    /// Pinning is best-effort: a rejected mask falls back to the
+    /// scheduler's placement and changes nothing about results.
+    pub fn new_pinned(threads: usize, base_cpu: usize) -> ThreadPool {
+        ThreadPool::with_pin(threads, Some(base_cpu))
+    }
+
+    fn with_pin(threads: usize, pin_base: Option<usize>) -> ThreadPool {
         let threads = threads.max(1);
+        let ncpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let shared = Arc::new(Shared {
             desc: Mutex::new(JobDesc {
                 epoch: 0,
@@ -105,7 +122,12 @@ impl ThreadPool {
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("lbw-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || {
+                        if let Some(base) = pin_base {
+                            pin_current_thread((base + i) % ncpus);
+                        }
+                        worker_loop(&shared)
+                    })
                     .expect("spawning pool worker")
             })
             .collect();
@@ -271,6 +293,77 @@ impl<T> SendPtr<T> {
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+// ---------------------------------------------------------------------------
+// best-effort CPU pinning (satellite of the SIMD kernel backend: once
+// the tiles saturate the vector units, worker migration across cores
+// is the next source of wall-clock jitter)
+// ---------------------------------------------------------------------------
+
+/// Pin the calling thread to `cpu` with `sched_setaffinity(0, ...)`.
+/// Returns whether the kernel accepted the mask; a `false` is always
+/// safe to ignore (placement stays with the scheduler, results are
+/// unaffected). Implemented as a raw syscall so the crate stays
+/// dependency-free; a no-op returning `false` off Linux x86_64/aarch64.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    pin_impl(cpu)
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn pin_impl(cpu: usize) -> bool {
+    // cpu_set_t as a flat bitmask; 1024 CPUs is the glibc default size
+    let mut mask = [0usize; 1024 / usize::BITS as usize];
+    let bits = usize::BITS as usize;
+    if cpu / bits >= mask.len() {
+        return false;
+    }
+    mask[cpu / bits] = 1usize << (cpu % bits);
+    let ret: isize;
+    // SAFETY: sched_setaffinity(pid=0 ⇒ calling thread, size, *mask)
+    // reads `mask` only; no memory is written and no Rust invariant is
+    // affected whatever the kernel answers.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret, // __NR_sched_setaffinity
+            in("rdi") 0,
+            in("rsi") std::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn pin_impl(cpu: usize) -> bool {
+    let mut mask = [0usize; 1024 / usize::BITS as usize];
+    let bits = usize::BITS as usize;
+    if cpu / bits >= mask.len() {
+        return false;
+    }
+    mask[cpu / bits] = 1usize << (cpu % bits);
+    let ret: isize;
+    // SAFETY: as above — the syscall only reads `mask`.
+    unsafe {
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 122isize, // __NR_sched_setaffinity
+            inlateout("x0") 0isize => ret,
+            in("x1") std::mem::size_of_val(&mask),
+            in("x2") mask.as_ptr(),
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn pin_impl(_cpu: usize) -> bool {
+    false
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -359,5 +452,28 @@ mod tests {
                 assert_eq!(got, expect);
             }
         }
+    }
+
+    #[test]
+    fn pinned_pool_matches_unpinned() {
+        // pinning is a placement hint only: same chunk walk, same
+        // results, and a pool whose pins were rejected still serves
+        let a = ThreadPool::new(3);
+        let b = ThreadPool::new_pinned(3, 0);
+        let fill = |pool: &ThreadPool| {
+            let mut v = vec![0u32; 501];
+            let base = SendPtr::new(v.as_mut_ptr());
+            pool.run(v.len(), 16, |s, e| {
+                for i in s..e {
+                    // SAFETY: disjoint chunk ranges
+                    unsafe { *base.get().add(i) = (i * 3) as u32 };
+                }
+            });
+            v
+        };
+        assert_eq!(fill(&a), fill(&b));
+        // best-effort: must not crash whatever it returns
+        let _ = pin_current_thread(0);
+        let _ = pin_current_thread(100_000);
     }
 }

@@ -10,11 +10,18 @@ to:
   * planned 4-thread/1-thread img/s speedup at 1 shard must stay
     >= THREAD_RATIO_MIN for every engine;
   * every `"shards": "auto"` row must record >= 1 scale-up AND >= 1
-    drain (an elastic supervisor that never scales is a regression).
+    drain (an elastic supervisor that never scales is a regression);
+  * when the sweep ran with a detected SIMD backend (`"simd": "on"`
+    rows present), the planned shift6 simd/scalar img/s ratio at 1
+    shard, 1 thread must stay >= SIMD_RATIO_MIN. Skipped entirely on
+    hosts without AVX2/NEON (no "on" rows) and on pre-SIMD bench files
+    (rows without a "simd" field are implicitly "off"); but "on" rows
+    WITHOUT the forced-scalar baseline row are a failure — the sweep
+    lost its denominator.
 
 Floors are overridable via env (GATE_PLANNED_RATIO_MIN,
-GATE_THREAD_RATIO_MIN) so a deliberate trade-off can be landed without
-editing this script.
+GATE_THREAD_RATIO_MIN, GATE_SIMD_RATIO_MIN) so a deliberate trade-off
+can be landed without editing this script.
 
 Usage:
     scripts/bench_gate.py [BENCH_serve.json]
@@ -32,11 +39,19 @@ import sys
 
 PLANNED_RATIO_MIN = float(os.environ.get("GATE_PLANNED_RATIO_MIN", "2.0"))
 THREAD_RATIO_MIN = float(os.environ.get("GATE_THREAD_RATIO_MIN", "1.5"))
+SIMD_RATIO_MIN = float(os.environ.get("GATE_SIMD_RATIO_MIN", "1.3"))
 ENGINES = ("float", "shift6")
 
 
-def closed_loop_rate(rows, executor, engine, threads):
-    """img/s of the classic closed-loop cell (1 shard, fixed 2ms)."""
+def closed_loop_rate(rows, executor, engine, threads, simd=None):
+    """img/s of the classic closed-loop cell (1 shard, fixed 2ms).
+
+    `simd=None` matches any backend (first row wins — the sweep emits
+    the detected-backend cells first, so the pre-SIMD checks keep
+    comparing the production configuration); `"on"`/`"off"` pins the
+    kernel backend, with rows from before the SIMD PR counting as
+    `"off"`.
+    """
     for r in rows:
         if (
             r.get("executor") == executor
@@ -49,6 +64,7 @@ def closed_loop_rate(rows, executor, engine, threads):
             # trained-checkpoint cells are a separate dimension; the
             # closed-loop baselines compare synth rows only
             and r.get("checkpoint") in (None, "synth")
+            and (simd is None or r.get("simd", "off") == simd)
         ):
             return r.get("imgs_per_s", 0.0)
     return None
@@ -81,6 +97,23 @@ def check(rows):
                 f"{engine}: planned 4-thread/1-thread speedup {ratio:.2f}x "
                 f"< {THREAD_RATIO_MIN}x floor"
             )
+    # simd/scalar ratio on the shift engine — the ISSUE-7 deployment
+    # claim. Gated only when the sweep actually ran a SIMD backend.
+    simd_on = closed_loop_rate(rows, "planned", "shift6", 1, simd="on")
+    if simd_on is not None:
+        simd_off = closed_loop_rate(rows, "planned", "shift6", 1, simd="off")
+        if simd_off is None:
+            failures.append(
+                "shift6: simd-on rows present but the forced-scalar baseline "
+                "row (planned, 1 shard, 1 thread, simd off) is missing — "
+                "the ratio has no denominator"
+            )
+        elif simd_off <= 0 or simd_on / simd_off < SIMD_RATIO_MIN:
+            ratio = simd_on / simd_off if simd_off > 0 else float("nan")
+            failures.append(
+                f"shift6: planned simd/scalar single-shard ratio {ratio:.2f}x "
+                f"< {SIMD_RATIO_MIN}x floor"
+            )
     for r in rows:
         if r.get("shards") == "auto":
             ups = r.get("scale_ups", 0)
@@ -99,10 +132,18 @@ def healthy_rows():
     rows = []
     for engine in ENGINES:
         rows += [
-            dict(base, executor="planned", engine=engine, shards=1, threads=1, imgs_per_s=300.0),
-            dict(base, executor="naive", engine=engine, shards=1, threads=1, imgs_per_s=100.0),
-            dict(base, executor="planned", engine=engine, shards=1, threads=4, imgs_per_s=600.0),
+            dict(base, executor="planned", engine=engine, shards=1, threads=1, imgs_per_s=300.0,
+                 simd="on"),
+            dict(base, executor="naive", engine=engine, shards=1, threads=1, imgs_per_s=100.0,
+                 simd="off"),
+            dict(base, executor="planned", engine=engine, shards=1, threads=4, imgs_per_s=600.0,
+                 simd="on"),
         ]
+    # the forced-scalar baseline the simd gate divides by (300/200 = 1.5x)
+    rows.append(
+        dict(base, executor="planned", engine="shift6", shards=1, threads=1, imgs_per_s=200.0,
+             simd="off")
+    )
     rows.append(
         dict(
             base,
@@ -150,6 +191,32 @@ def self_test():
     fails = check(doctored)
     assert any("missing" in f for f in fails), fails
 
+    # injected regression 5: the simd/scalar ratio collapses to ~1.07x
+    doctored = healthy_rows()
+    for r in doctored:
+        if r.get("simd") == "off" and r["executor"] == "planned" and r["engine"] == "shift6":
+            r["imgs_per_s"] = 280.0
+    fails = check(doctored)
+    assert any("simd/scalar" in f for f in fails), fails
+
+    # injected regression 6: simd-on rows without the scalar baseline
+    doctored = [
+        r
+        for r in healthy_rows()
+        if not (r.get("simd") == "off" and r["executor"] == "planned")
+    ]
+    fails = check(doctored)
+    assert any("no denominator" in f for f in fails), fails
+
+    # a pre-SIMD bench file (no "simd" fields at all) must still pass:
+    # the simd gate skips, the legacy gates keep working
+    stripped = []
+    for r in healthy_rows():
+        r = dict(r)
+        r.pop("simd", None)
+        stripped.append(r)
+    assert check(stripped) == [], "simd-less trajectory must pass (gate skipped)"
+
     print("bench_gate self-test: all injected regressions caught, healthy set passes")
 
 
@@ -167,9 +234,14 @@ def main(argv):
         for f in failures:
             print(f"  - {f}")
         return 1
+    simd_note = (
+        f"simd/scalar >= {SIMD_RATIO_MIN}x"
+        if closed_loop_rate(rows, "planned", "shift6", 1, simd="on") is not None
+        else "simd gate skipped (no simd-on rows)"
+    )
     print(
         f"bench gate passed on {path}: planned/naive >= {PLANNED_RATIO_MIN}x, "
-        f"4t/1t >= {THREAD_RATIO_MIN}x, autoscale rows show scale events"
+        f"4t/1t >= {THREAD_RATIO_MIN}x, {simd_note}, autoscale rows show scale events"
     )
     return 0
 
