@@ -9,16 +9,19 @@
 #   make bench-smoke  reduced bench_serve sweep (planned vs naive
 #                   executors, 1 shard, tile pools at 1 and 4 threads,
 #                   the adaptive-vs-fixed window cells under open-loop
-#                   steady/bursty load, plus the elastic
-#                   fixed-vs-autoscale cells under bursty load) — fast
-#                   enough for CI; kernel, threading, batching, or
-#                   autoscaling regressions fail loudly here
+#                   steady/bursty load, the elastic fixed-vs-autoscale
+#                   cells under bursty load, plus the fault sweep: the
+#                   closed-loop cell under a seeded crash-storm plan
+#                   with retrying clients) — fast enough for CI;
+#                   kernel, threading, batching, autoscaling, or
+#                   crash-recovery regressions fail loudly here
 #   make bench-gate   regression-gate the fresh BENCH_serve.json
 #                   (self-tests the gate on doctored rows first, then
 #                   fails if planned/naive < 2x, 4t/1t < 1.5x, the
 #                   shift-engine simd/scalar ratio < 1.3x when SIMD
-#                   rows are present, or an autoscale row shows no
-#                   scale events)
+#                   rows are present, an autoscale row shows no scale
+#                   events, or a fault row lost a response / never
+#                   respawned / never fired its storm plan)
 #   make bench-kernels  scalar-vs-SIMD GEMM micro-bench (f32 + shift
 #                   kernels at the width-8/13 shapes, bitwise parity
 #                   checked, GFLOP-equiv + speedup printed)

@@ -39,6 +39,15 @@
 //! hermetic training run (`"checkpoint": "trained"`) — the gate's
 //! baselines stay on the synth rows.
 //!
+//! Since the fault-domain PR a **fault sweep** re-runs the planned
+//! shift6 single-shard closed loop fault-free and under a seeded panic
+//! storm (`seed=11;panic@pre:nth=3,every=5,...`) with retry-enabled
+//! clients: those two rows carry `"faults"` (`"none"`/`"storm"`) plus
+//! `"crashes"`, `"respawns"`, and `"lost"`. The gate fails any row
+//! with `crashes > 0` and `lost > 0` (a crash must never cost a
+//! response) or crashes without respawns; rows carrying a `"faults"`
+//! marker sit outside the healthy closed-loop baselines.
+//!
 //! Since the SIMD-kernel PR every row also carries `"simd"`
 //! (`"on"` when the serving plans used the explicit AVX2/NEON kernels,
 //! `"off"` for the scalar reference — naive-executor rows are always
@@ -58,7 +67,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use lbw_net::coordinator::autoscale::AutoscaleConfig;
-use lbw_net::coordinator::server::{DetectServer, Executor, ServerConfig, WindowMode};
+use lbw_net::coordinator::server::{
+    DetectServer, Executor, FaultPlan, RetryPolicy, ServerConfig, WindowMode,
+};
 use lbw_net::coordinator::trainer::{HermeticTrainer, TrainConfig, TrainMethod};
 use lbw_net::data::{generate_scene, SceneConfig};
 use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
@@ -90,6 +101,10 @@ struct Cell {
     /// kernels) or "off" (scalar reference; always "off" for the naive
     /// executor, which has no planned kernels).
     simd: &'static str,
+    /// Fault-sweep cell: `Some` marks the chaos rows (`"storm"` under
+    /// the injected panic schedule, `"none"` for the fault-free twin);
+    /// rows without the field predate or sit outside the fault sweep.
+    faults: Option<FaultCell>,
     wall_s: f64,
     imgs_per_s: f64,
     p50_ms: f64,
@@ -104,6 +119,18 @@ struct AutoCell {
     shards_max: usize,
     scale_ups: u64,
     scale_downs: u64,
+}
+
+/// The fault dimensions of a chaos cell. `lost` counts closed-loop
+/// requests whose client got an error back instead of detections —
+/// under the crash storm every panic is caught, the batch is bisected,
+/// and the generation respawns, so a healthy fault domain answers
+/// every request (`lost == 0` is what `scripts/bench_gate.py` gates).
+struct FaultCell {
+    spec: &'static str,
+    crashes: u64,
+    respawns: u64,
+    lost: u64,
 }
 
 fn drive(server: &DetectServer, scenes: &[Vec<f32>], requests: usize) -> Result<Duration> {
@@ -219,6 +246,9 @@ fn main() -> Result<()> {
                             batch_window: Duration::from_millis(window_ms),
                             queue_depth: 256,
                             executor,
+                            // sweep cells must stay fault-free even when
+                            // the chaos CI leg exports LBW_FAULTS
+                            faults: None,
                             ..Default::default()
                         };
                         let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
@@ -242,6 +272,7 @@ fn main() -> Result<()> {
                                 Executor::Planned => detected,
                                 Executor::Naive => "off",
                             },
+                            faults: None,
                             wall_s: wall.as_secs_f64(),
                             imgs_per_s: agg.throughput(wall),
                             p50_ms: snap.percentile_ms(50.0),
@@ -291,6 +322,7 @@ fn main() -> Result<()> {
                 queue_depth: 256,
                 executor: Executor::Planned,
                 simd: SimdMode::Off,
+                faults: None,
                 ..Default::default()
             };
             let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
@@ -311,6 +343,7 @@ fn main() -> Result<()> {
                 auto: None,
                 checkpoint: "synth",
                 simd: "off",
+                faults: None,
                 wall_s: wall.as_secs_f64(),
                 imgs_per_s: agg.throughput(wall),
                 p50_ms: snap.percentile_ms(50.0),
@@ -374,6 +407,7 @@ fn main() -> Result<()> {
                 deadline: Some(Duration::from_millis(250)),
                 queue_depth: 256,
                 executor: Executor::Planned,
+                faults: None,
                 ..Default::default()
             };
             let server =
@@ -395,6 +429,7 @@ fn main() -> Result<()> {
                 auto: None,
                 checkpoint: "synth",
                 simd: detected,
+                faults: None,
                 wall_s: wall.as_secs_f64(),
                 imgs_per_s: agg.throughput(wall),
                 p50_ms: snap.percentile_ms(50.0),
@@ -466,6 +501,7 @@ fn main() -> Result<()> {
                 down_idle_ticks: 10,
                 ..AutoscaleConfig::default()
             }),
+            faults: None,
             ..Default::default()
         };
         let server =
@@ -488,6 +524,7 @@ fn main() -> Result<()> {
             auto: elastic.then(|| AutoCell { shards_max: 4, scale_ups: ups, scale_downs: downs }),
             checkpoint: "synth",
             simd: detected,
+            faults: None,
             wall_s: wall.as_secs_f64(),
             imgs_per_s: agg.throughput(wall),
             p50_ms: snap.percentile_ms(50.0),
@@ -553,6 +590,7 @@ fn main() -> Result<()> {
             batch_window: Duration::from_millis(2),
             queue_depth: 256,
             executor: Executor::Planned,
+            faults: None,
             ..Default::default()
         };
         let server =
@@ -574,6 +612,7 @@ fn main() -> Result<()> {
             auto: None,
             checkpoint: "trained",
             simd: detected,
+            faults: None,
             wall_s: wall.as_secs_f64(),
             imgs_per_s: agg.throughput(wall),
             p50_ms: snap.percentile_ms(50.0),
@@ -600,6 +639,120 @@ fn main() -> Result<()> {
         cells.push(cell);
     }
 
+    // ---- fault sweep (closed loop, injected panic storm) ----
+    // the same planned shift6 single-shard closed loop twice: once
+    // fault-free ("none") and once under a seeded panic schedule that
+    // crashes the shard on its 3rd batch and every 5th after, per
+    // generation ("storm"). Clients carry the default bounded retry.
+    // A healthy fault domain turns every crash into: batch bisected
+    // and answered, generation retired, replacement respawned — so the
+    // storm row must show crashes > 0 with lost == 0 and bounded p95
+    // inflation over the "none" twin (the gate enforces the loss rule).
+    println!("\n--- fault sweep (closed loop): planned shift6, 1 shard ---");
+    let storm_spec = "seed=11;panic@pre:nth=3,every=5,count=1000000";
+    let mut fault_free_p95 = 0.0f64;
+    for (fault_name, plan) in [("none", None), ("storm", Some(storm_spec))] {
+        let cfg = ServerConfig {
+            shards: 1,
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+            queue_depth: 256,
+            executor: Executor::Planned,
+            faults: plan.map(|p| FaultPlan::parse(p).expect("storm plan")),
+            ..Default::default()
+        };
+        let server =
+            DetectServer::start_engine(&spec, &ckpt, EngineKind::Shift { bits: 6 }, cfg)?;
+        let handle = server.handle().with_retry(RetryPolicy::default());
+        let t0 = Instant::now();
+        let per = requests / CONCURRENCY;
+        let mut clients = Vec::new();
+        for c in 0..CONCURRENCY {
+            let h = handle.clone();
+            let imgs: Vec<Vec<f32>> =
+                (0..per).map(|i| scenes[(c * per + i) % scenes.len()].clone()).collect();
+            clients.push(std::thread::spawn(move || {
+                // count errors instead of bailing: a request answered
+                // with an error under the storm is a lost response
+                let mut lost = 0u64;
+                for img in imgs {
+                    if h.detect(img).is_err() {
+                        lost += 1;
+                    }
+                }
+                lost
+            }));
+        }
+        let lost: u64 = clients.into_iter().map(|c| c.join().expect("fault client")).sum();
+        let wall = t0.elapsed();
+        // a crash near the end of the run respawns asynchronously:
+        // give the supervisor a beat so the row's respawn counter
+        // reflects every crash it answered
+        let respawn_deadline = Instant::now() + Duration::from_secs(2);
+        while server.respawns() < server.crashes() && Instant::now() < respawn_deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let agg = server.handle().latency();
+        let snap = agg.snapshot();
+        let shard_counts: Vec<usize> =
+            server.shard_latencies().iter().map(|s| s.count()).collect();
+        let (crashes, respawns) = (server.crashes(), server.respawns());
+        let cell = Cell {
+            executor: "planned".to_string(),
+            engine: "shift6".to_string(),
+            shards: 1,
+            threads: 1,
+            window: "fixed".to_string(),
+            window_ms: 2,
+            load: None,
+            shed: 0,
+            auto: None,
+            checkpoint: "synth",
+            simd: detected,
+            faults: Some(FaultCell { spec: fault_name, crashes, respawns, lost }),
+            wall_s: wall.as_secs_f64(),
+            imgs_per_s: agg.throughput(wall),
+            p50_ms: snap.percentile_ms(50.0),
+            p95_ms: snap.percentile_ms(95.0),
+            p99_ms: snap.percentile_ms(99.0),
+            mean_batch: agg.mean_batch(),
+            shard_counts,
+        };
+        println!(
+            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  ({fault_name}: {crashes} crash(es), {respawns} respawn(s), lost {lost})",
+            cell.executor,
+            cell.engine,
+            cell.shards,
+            cell.threads,
+            "2ms",
+            cell.imgs_per_s,
+            cell.p50_ms,
+            cell.p95_ms,
+            cell.p99_ms,
+            cell.mean_batch
+        );
+        if fault_name == "none" {
+            fault_free_p95 = cell.p95_ms;
+        }
+        server.shutdown();
+        cells.push(cell);
+    }
+    if let Some(s) =
+        cells.iter().find(|c| c.faults.as_ref().is_some_and(|f| f.spec == "storm"))
+    {
+        let f = s.faults.as_ref().expect("storm cell");
+        println!(
+            "fault storm: p95 {:.2}ms vs fault-free {:.2}ms ({:+.0}%), {} crash(es) -> {} respawn(s), lost {}",
+            s.p95_ms,
+            fault_free_p95,
+            if fault_free_p95 > 0.0 { 100.0 * (s.p95_ms / fault_free_p95 - 1.0) } else { 0.0 },
+            f.crashes,
+            f.respawns,
+            f.lost
+        );
+    }
+
     let rate_simd = |exec: &str, engine: &str, shards: usize, threads: usize, simd: &str| {
         cells
             .iter()
@@ -610,6 +763,7 @@ fn main() -> Result<()> {
                     && c.threads == threads
                     && c.window_ms == 2
                     && c.load.is_none() // classic closed-loop cells only
+                    && c.faults.is_none()
                     && c.checkpoint == "synth"
                     && c.simd == simd
             })
@@ -705,6 +859,12 @@ fn main() -> Result<()> {
                     fields.push(("shards_max", Json::num(a.shards_max as f64)));
                     fields.push(("scale_ups", Json::num(a.scale_ups as f64)));
                     fields.push(("scale_downs", Json::num(a.scale_downs as f64)));
+                }
+                if let Some(f) = &c.faults {
+                    fields.push(("faults", Json::str(f.spec)));
+                    fields.push(("crashes", Json::num(f.crashes as f64)));
+                    fields.push(("respawns", Json::num(f.respawns as f64)));
+                    fields.push(("lost", Json::num(f.lost as f64)));
                 }
                 Json::obj(fields)
             })

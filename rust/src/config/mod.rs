@@ -7,7 +7,7 @@ use std::time::Duration;
 
 use anyhow::{ensure, Result};
 
-use crate::coordinator::server::{AutoscaleConfig, Executor, ServerConfig};
+use crate::coordinator::server::{AutoscaleConfig, Executor, FaultPlan, ServerConfig};
 use crate::coordinator::trainer::TrainConfig;
 use crate::data::SceneConfig;
 use crate::util::toml::{parse as toml_parse, TomlDoc};
@@ -105,6 +105,12 @@ pub struct ServeSection {
     /// (`sched_setaffinity`; Linux-only no-op elsewhere). Placement
     /// only — never affects results.
     pub pin_cores: bool,
+    /// Deterministic fault-injection plan (testing/chaos drills only):
+    /// a seeded schedule of panics/delays/NaN writes at named sites in
+    /// the serve loop, e.g. `"seed=7;panic@pre:nth=25,every=40"`.
+    /// Empty = off (the default; production path is untouched). The
+    /// env var `LBW_FAULTS` supplies a plan when this key is unset.
+    pub faults: String,
 }
 
 impl Default for ServeSection {
@@ -126,6 +132,7 @@ impl Default for ServeSection {
             shards_max: 0,
             simd: s.simd.to_string(),
             pin_cores: s.pin_cores,
+            faults: String::new(),
         }
     }
 }
@@ -202,6 +209,7 @@ impl Config {
                 "serve.shards_max" => cfg.serve.shards_max = v.as_usize()?,
                 "serve.simd" => cfg.serve.simd = v.as_str()?.to_string(),
                 "serve.pin_cores" => cfg.serve.pin_cores = v.as_bool()?,
+                "serve.faults" => cfg.serve.faults = v.as_str()?.to_string(),
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -249,6 +257,10 @@ impl Config {
             "serve.simd must be auto|on|off, got {}",
             self.serve.simd
         );
+        if !self.serve.faults.trim().is_empty() {
+            FaultPlan::parse(&self.serve.faults)
+                .map_err(|e| anyhow::anyhow!("serve.faults: {e}"))?;
+        }
         ensure!(self.serve.shards_min >= 1, "serve.shards_min must be >= 1");
         ensure!(
             self.serve.shards_max == 0 || self.serve.shards_max >= self.serve.shards_min,
@@ -260,7 +272,7 @@ impl Config {
     /// Lower into the server's config (engine selection is separate —
     /// see `ServeSection::engine`).
     pub fn to_server_config(&self) -> ServerConfig {
-        ServerConfig {
+        let mut cfg = ServerConfig {
             shards: self.serve.shards,
             threads: self.serve.threads,
             max_batch: self.serve.max_batch,
@@ -278,8 +290,15 @@ impl Config {
             autoscale: self.serve.autoscale.then(|| self.autoscale_bounds()),
             simd: self.serve.simd.parse().unwrap_or_default(),
             pin_cores: self.serve.pin_cores,
+            // `..default()` keeps the env-var fault plan (LBW_FAULTS)
+            // when the config file does not set one
             ..ServerConfig::default()
+        };
+        if !self.serve.faults.trim().is_empty() {
+            // validate() guarantees parseability for loaded configs
+            cfg.faults = FaultPlan::parse(&self.serve.faults).ok();
         }
+        cfg
     }
 
     /// The autoscale bounds lowered from `[serve]`, independent of
@@ -465,16 +484,35 @@ mod tests {
         assert_eq!(s.simd, crate::coordinator::server::SimdMode::Off);
         assert!(s.pin_cores);
         // validated: only auto|on|off pass
-        assert!(Config::from_toml("[serve]
-simd = "avx512"
-").is_err());
-        assert!(Config::from_toml("[serve]
-simd = "on"
-").is_ok());
+        assert!(Config::from_toml("[serve]\nsimd = \"avx512\"\n").is_err());
+        assert!(Config::from_toml("[serve]\nsimd = \"on\"\n").is_ok());
         // pin_cores must be a boolean
-        assert!(Config::from_toml("[serve]
-pin_cores = "yes"
-").is_err());
+        assert!(Config::from_toml("[serve]\npin_cores = \"yes\"\n").is_err());
+    }
+
+    #[test]
+    fn faults_key_parses_validates_and_lowers() {
+        let cfg = Config::from_toml(
+            r#"
+            [serve]
+            faults = "seed=9;panic@pre:nth=3,every=5,count=2"
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.faults, "seed=9;panic@pre:nth=3,every=5,count=2");
+        let s = cfg.to_server_config();
+        let plan = s.faults.expect("fault plan lowered");
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.rules.len(), 1);
+
+        // malformed plans are rejected at validate time
+        assert!(Config::from_toml("[serve]\nfaults = \"panic@nowhere\"\n").is_err());
+        assert!(Config::from_toml("[serve]\nfaults = \"garbage\"\n").is_err());
+
+        // the default is off (no injection) unless LBW_FAULTS is set
+        if std::env::var("LBW_FAULTS").map_or(true, |v| v.trim().is_empty()) {
+            assert!(Config::default().to_server_config().faults.is_none());
+        }
     }
 
     #[test]

@@ -104,6 +104,17 @@ impl RateEwma {
         self.rate
     }
 
+    /// Re-anchor the clock at `now` without taking a rate sample.
+    /// Used after a stall that is *not* traffic evidence — a crash
+    /// bisection or respawn backoff — so the dead time is excluded
+    /// from the next observation's interval instead of being read as
+    /// "traffic got slow" and skewing the EWMA toward zero.
+    pub fn reanchor(&mut self, now: Instant) {
+        if self.last_obs.is_some() {
+            self.last_obs = Some(now);
+        }
+    }
+
     /// Seconds since the last observation (`None` before the first).
     pub fn idle_secs(&self, now: Instant) -> Option<f64> {
         self.last_obs.map(|prev| now.duration_since(prev).as_secs_f64())
@@ -151,6 +162,12 @@ impl AdaptiveWindow {
     /// Smoothed arrival rate (requests/second) — diagnostics.
     pub fn rate(&self) -> f64 {
         self.ewma.rate()
+    }
+
+    /// See [`RateEwma::reanchor`]: exclude a crash/respawn stall from
+    /// the rate estimate.
+    pub fn reanchor(&mut self, now: Instant) {
+        self.ewma.reanchor(now);
     }
 
     /// The window for the batch whose first request was just popped
@@ -296,6 +313,39 @@ mod tests {
         assert!(e.rate() < hot, "idle gap must decay the rate");
         let idle = e.idle_secs(t0 + Duration::from_secs(3)).unwrap();
         assert!((idle - 2.0).abs() < 1e-9);
+    }
+
+    /// A crash stall must not read as "traffic stopped": re-anchoring
+    /// after the stall keeps the EWMA where the real traffic left it.
+    #[test]
+    fn reanchor_excludes_stall_time_from_the_rate() {
+        let mut stalled = RateEwma::new();
+        let mut clean = RateEwma::new();
+        let t0 = Instant::now();
+        for (e, _) in [(&mut stalled, 0), (&mut clean, 0)] {
+            e.observe(0, t0);
+            e.observe(8, t0 + Duration::from_millis(1));
+        }
+        let hot = stalled.rate();
+        // shard stalls 2s in crash bisection + respawn backoff, then
+        // re-anchors; the next real observation covers only its own 1ms
+        stalled.reanchor(t0 + Duration::from_secs(2));
+        stalled.observe(8, t0 + Duration::from_secs(2) + Duration::from_millis(1));
+        clean.observe(8, t0 + Duration::from_millis(2));
+        assert!(
+            (stalled.rate() - clean.rate()).abs() < 1e-6,
+            "reanchored rate {} must match the stall-free rate {}",
+            stalled.rate(),
+            clean.rate()
+        );
+        assert!(stalled.rate() >= hot, "the stall must not decay the rate");
+        // before any observation, reanchor stays a no-op (first real
+        // observation must still anchor-only, not rate over a synthetic
+        // interval)
+        let mut fresh = RateEwma::new();
+        fresh.reanchor(t0);
+        fresh.observe(100, t0 + Duration::from_millis(1));
+        assert_eq!(fresh.rate(), 0.0, "anchor-only semantics preserved");
     }
 
     #[test]

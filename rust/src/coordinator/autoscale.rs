@@ -20,7 +20,13 @@
 //!   thread, and mark the generation retired (its counters stay on the
 //!   books). No accepted request is ever dropped by a scale-down: a
 //!   cancelled shard stops *before* popping, so everything still queued
-//!   is served by the survivors.
+//!   is served by the survivors. The pool is also the **fault
+//!   domain supervisor**: a shard whose batch panics answers every
+//!   in-flight request, retires its generation, and (on factory-backed
+//!   pools) respawns a replacement under deterministic exponential
+//!   backoff — with a circuit breaker that marks the pool degraded
+//!   after too many consecutive crash-respawns
+//!   ([`crate::coordinator::faults::RespawnPolicy`]).
 //! * [`decide`]/[`steer_batch`] — the pure control law, driven by the
 //!   same signals the adaptive window controller uses (EWMA arrival
 //!   rate, queue depth) plus the shed counter: scale up when the queue
@@ -37,18 +43,21 @@
 //! bitwise identical to a fixed-shard run for any scaling schedule
 //! (pinned by `rust/tests/elastic_autoscale.rs`).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::adaptive::RateEwma;
+use crate::coordinator::faults::{plock, Quarantine};
 use crate::coordinator::metrics::ShardStats;
 use crate::coordinator::queue::Monitor;
-use crate::coordinator::server::{serve_loop, Request, ServerConfig, ShardCtl, ShardSetup};
+use crate::coordinator::server::{
+    serve_loop, Request, ServeExit, ServerConfig, ShardCtl, ShardSetup,
+};
 
 /// Builds the [`ShardSetup`] for a given shard generation — the seam
 /// through which the pool spawns shards at runtime. Engine mode
@@ -237,20 +246,34 @@ pub struct ShardPool {
     factory: Option<ShardFactory>,
     events: ScaleEvents,
     inner: Mutex<PoolInner>,
+    /// Pool-shared poison quarantine every shard's bisection inserts
+    /// into and every handle's admission check reads from.
+    quarantine: Arc<Quarantine>,
+    /// Consecutive crash-respawns with no healthy batch in between —
+    /// the circuit breaker's input. Any shard serving a healthy batch
+    /// resets it.
+    crash_streak: Arc<AtomicU32>,
+    /// Self-reference for the crash-respawn path: a dying shard thread
+    /// upgrades this to respawn its own replacement. `Weak` so shard
+    /// threads never keep a shut-down pool alive.
+    myself: Weak<ShardPool>,
 }
 
 impl ShardPool {
     /// A pool over `monitor`'s queue. `factory` enables runtime
-    /// scale-up; without one the pool can still drain (scale down) but
-    /// not spawn beyond its initial shards.
+    /// scale-up (and crash-respawn); without one the pool can still
+    /// drain (scale down) but not spawn beyond its initial shards.
+    /// Returns an `Arc` because shard threads hold a weak
+    /// self-reference for the crash-respawn protocol.
     pub fn new(
         cfg: ServerConfig,
         monitor: Monitor<Request>,
         stats: Arc<ShardStats>,
+        quarantine: Arc<Quarantine>,
         factory: Option<ShardFactory>,
-    ) -> Self {
+    ) -> Arc<Self> {
         let eff_batch = Arc::new(AtomicUsize::new(cfg.max_batch.max(1)));
-        ShardPool {
+        Arc::new_cyclic(|me| ShardPool {
             cfg,
             monitor,
             stats,
@@ -258,12 +281,15 @@ impl ShardPool {
             factory,
             events: ScaleEvents::default(),
             inner: Mutex::new(PoolInner { live: Vec::new() }),
-        }
+            quarantine,
+            crash_streak: Arc::new(AtomicU32::new(0)),
+            myself: me.clone(),
+        })
     }
 
     /// Live shard count.
     pub fn live(&self) -> usize {
-        self.inner.lock().unwrap().live.len()
+        plock(&self.inner).live.len()
     }
 
     /// Scale events since startup: `(ups, downs)`.
@@ -324,8 +350,19 @@ impl ShardPool {
         let setup = make(gen);
         let rx = self.monitor.subscribe();
         let cancel = Arc::new(AtomicBool::new(false));
-        let ctl = ShardCtl { cancel: cancel.clone(), max_batch: self.eff_batch.clone() };
+        let ctl = ShardCtl {
+            cancel: cancel.clone(),
+            max_batch: self.eff_batch.clone(),
+            faults: self.cfg.faults.as_ref().map(|p| p.state_for(gen as u64)),
+            quarantine: self.quarantine.clone(),
+            // only factory-backed pools can replace a crashed shard;
+            // fixed pools recover in place inside the serve loop
+            retire_on_crash: self.factory.is_some(),
+            crash_streak: self.crash_streak.clone(),
+        };
         let shard_cfg = self.cfg.clone();
+        let me = self.myself.clone();
+        let thread_cancel = cancel.clone();
         let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
         let join = std::thread::Builder::new()
             .name(format!("lbw-shard-g{gen}"))
@@ -342,7 +379,19 @@ impl ShardPool {
                         return;
                     }
                 };
-                serve_loop(rx, &shard_cfg, shard_stats, ctl, infer);
+                // a keepalive receiver held across the crash-respawn
+                // window: if the sole live shard crashes, its serve
+                // receiver drops, and without this clone the queue
+                // would close — dropping every buffered responder —
+                // before the replacement subscribes
+                let keepalive = rx.clone();
+                let exit = serve_loop(rx, &shard_cfg, shard_stats, ctl, infer);
+                if matches!(exit, ServeExit::Crashed) {
+                    if let Some(pool) = me.upgrade() {
+                        pool.respawn_after_crash(gen, &thread_cancel);
+                    }
+                }
+                drop(keepalive);
             })
             .map_err(|e| anyhow!("spawning shard generation {gen}: {e}"))?;
         let ready = ready_rx
@@ -356,8 +405,73 @@ impl ShardPool {
             self.stats.discard(gen);
             return Err(e);
         }
-        self.inner.lock().unwrap().live.push(ShardHandle { gen, cancel, join });
+        plock(&self.inner).live.push(ShardHandle { gen, cancel, join });
         Ok(gen)
+    }
+
+    /// Crash-respawn protocol — runs on the **dying shard's own
+    /// thread** after [`serve_loop`] returns [`ServeExit::Crashed`]
+    /// (every request that shard held has already been answered).
+    ///
+    /// Ordering is deliberate: detach our own handle first (the thread
+    /// is exiting — leaving a corpse in the live list would make a
+    /// concurrent [`ShardPool::drain_one`] join a sleeping thread and
+    /// stall the supervisor for the whole backoff), then either trip
+    /// the circuit breaker or sleep the deterministic backoff and
+    /// spawn a replacement generation. The handle is removed **without
+    /// joining** — joining our own thread would deadlock.
+    fn respawn_after_crash(&self, gen: usize, cancel: &AtomicBool) {
+        let streak = self.crash_streak.fetch_add(1, Ordering::AcqRel) + 1;
+        self.detach_handle(gen);
+        self.stats.retire(gen);
+        if self.stats.degraded() {
+            return; // breaker already tripped: stay degraded
+        }
+        if streak >= self.cfg.respawn.breaker {
+            // K consecutive crash-respawns with no healthy batch in
+            // between: stop feeding generations to whatever is killing
+            // them. Survivors keep serving; `summary()` says DEGRADED.
+            self.stats.set_degraded();
+            self.monitor.kick();
+            return;
+        }
+        let delay = self.cfg.respawn.delay(streak);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        if self.monitor.is_closed() || cancel.load(Ordering::Acquire) {
+            return; // shutdown or a drain raced the respawn
+        }
+        if self.respawn_one().is_ok() {
+            self.stats.note_respawn();
+            // wake senders that waited out the crash window so they
+            // re-check capacity against the replacement
+            self.monitor.kick();
+        }
+        // a failed factory is left to the supervisor: `decide` returns
+        // `Up` whenever `live < min_shards`, so the pool heals on the
+        // next tick instead of hammering a broken factory here
+    }
+
+    /// Spawn a replacement generation through the factory (no scale-up
+    /// event — respawns are fault recovery, not load response).
+    fn respawn_one(&self) -> Result<usize> {
+        let factory = self
+            .factory
+            .as_ref()
+            .ok_or_else(|| anyhow!("this server has no shard factory (fixed pool)"))?;
+        self.spawn_inner(|g| factory(g))
+    }
+
+    /// Remove `gen`'s handle from the live list **without joining** —
+    /// the caller *is* that thread. Dropping the [`JoinHandle`]
+    /// detaches it; the thread exits on its own moments later.
+    fn detach_handle(&self, gen: usize) {
+        let mut inner = plock(&self.inner);
+        if let Some(pos) = inner.live.iter().position(|h| h.gen == gen) {
+            let handle = inner.live.remove(pos);
+            drop(handle); // detach, never join
+        }
     }
 
     /// Retire the newest shard via the drain protocol: flag its cancel
@@ -368,7 +482,7 @@ impl ShardPool {
     /// strand every queued request.
     pub fn drain_one(&self) -> Result<usize> {
         let handle = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = plock(&self.inner);
             anyhow::ensure!(inner.live.len() > 1, "cannot drain the last live shard");
             inner.live.pop().expect("checked non-empty")
         };
@@ -388,7 +502,7 @@ impl ShardPool {
     /// Cancel and join every shard (startup-failure rollback).
     pub fn abort_all(&self) {
         let handles = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = plock(&self.inner);
             std::mem::take(&mut inner.live)
         };
         for h in &handles {
@@ -405,7 +519,7 @@ impl ShardPool {
     /// shards exit on their own once the queue is drained).
     pub fn join_all(&self) {
         let handles = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = plock(&self.inner);
             std::mem::take(&mut inner.live)
         };
         for h in handles {

@@ -1,0 +1,636 @@
+//! Fault-domain plumbing for the serving stack.
+//!
+//! Four related pieces live here because they are all about *surviving
+//! and reproducing* failures rather than doing useful work:
+//!
+//! - **Poison-recovering lock helpers** ([`plock`], [`pwait`],
+//!   [`pwait_timeout`]): a shard thread that panics while holding the
+//!   queue or stats mutex must not wedge every other producer and
+//!   consumer. All coordinator state guarded by these locks is a plain
+//!   value snapshot (counters, ring buffers, request deques) that stays
+//!   internally consistent at every await point, so recovering the
+//!   guard from a [`PoisonError`] is safe.
+//! - **A deterministic fault-injection plan** ([`FaultPlan`] /
+//!   [`FaultState`]): seeded schedules of panics, delays, and NaN
+//!   writes at named sites inside `serve_loop`. Off by default and a
+//!   no-op `Option` check when off; when on, the schedule depends only
+//!   on (plan, shard generation, site visit count), so chaos tests and
+//!   bench recovery rows are bitwise reproducible.
+//! - **The quarantine ring** ([`Quarantine`]): bounded set of content
+//!   hashes of requests that crashed a shard. Repeat offenders are
+//!   rejected at admission — a poison image never crashes the same
+//!   server twice.
+//! - **Pure backoff policies** ([`RespawnPolicy`], [`RetryPolicy`]):
+//!   exponential backoff with deterministic jitter for crash-respawn
+//!   and client-side retry. Pure `delay(n)` functions so tests can pin
+//!   the exact schedule for a fixed seed.
+//!
+//! Error classification is by marker substring (the vendored `anyhow`
+//! shim carries flattened text, no downcasting): [`ERR_SHARD_CRASHED`],
+//! [`ERR_POISONED`], [`ERR_QUARANTINED`], plus the pre-existing
+//! "queue full" backpressure text.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------------------
+// Poison-recovering lock helpers
+// ---------------------------------------------------------------------------
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// Every mutex in the coordinator guards plain-old-data that is
+/// consistent whenever the lock is released (normally or by unwind),
+/// so the poison flag carries no information we need.
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait` with poison recovery.
+pub fn pwait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `Condvar::wait_timeout` with poison recovery.
+pub fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    d: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, d)
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------------
+// Error markers (substring classification; the anyhow shim flattens
+// context chains to text, so these must survive `.context(...)`).
+// ---------------------------------------------------------------------------
+
+/// Marker in errors produced when a shard panicked under a request.
+pub const ERR_SHARD_CRASHED: &str = "shard crashed";
+/// Marker in errors produced when bisection isolated this request.
+pub const ERR_POISONED: &str = "poisoned request";
+/// Marker in errors produced when admission rejected a quarantined hash.
+pub const ERR_QUARANTINED: &str = "quarantined";
+/// Marker in backpressure errors (pre-existing text in `submit`).
+pub const ERR_FULL: &str = "queue full";
+
+/// True for errors a client retry can help with: transient overload
+/// (`queue full`) or a crash that took the request down with the shard.
+pub fn is_retryable(msg: &str) -> bool {
+    msg.contains(ERR_FULL) || msg.contains(ERR_SHARD_CRASHED)
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic PRNG bits (shared by jitter + schedules)
+// ---------------------------------------------------------------------------
+
+/// SplitMix64 — one deterministic mixing step. Good enough for jitter
+/// and cheap enough to call per-decision without carried state.
+pub(crate) fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection: sites, actions, rules, plans, per-shard state
+// ---------------------------------------------------------------------------
+
+/// Named instrumentation points inside `serve_loop`'s batch execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Just before the engine forward pass.
+    PreForward,
+    /// Just after the forward pass, before decode.
+    PostForward,
+    /// Just before responders are completed.
+    Respond,
+}
+
+impl FaultSite {
+    fn parse(s: &str) -> Result<FaultSite> {
+        Ok(match s {
+            "pre" | "pre-forward" => FaultSite::PreForward,
+            "post" | "post-forward" => FaultSite::PostForward,
+            "respond" => FaultSite::Respond,
+            other => bail!("unknown fault site '{other}' (pre|post|respond)"),
+        })
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            FaultSite::PreForward => "pre",
+            FaultSite::PostForward => "post",
+            FaultSite::Respond => "respond",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::PreForward => 0,
+            FaultSite::PostForward => 1,
+            FaultSite::Respond => 2,
+        }
+    }
+}
+
+/// What an armed rule does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// `panic!` at the site (exercises catch_unwind + respawn).
+    Panic,
+    /// Sleep for the given duration (exercises deadline/latency paths).
+    Delay(Duration),
+    /// Overwrite the forward output with NaN (exercises output
+    /// validation; only meaningful at [`FaultSite::PostForward`]).
+    Nan,
+}
+
+/// One scheduled fault: fire at the `nth` visit to `site` (1-based),
+/// then every `every` visits after that (0 = fire once), at most
+/// `count` times total.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    pub action: FaultAction,
+    pub nth: u64,
+    pub every: u64,
+    pub count: u64,
+}
+
+impl FaultRule {
+    /// Does this rule fire on visit number `v` (1-based) given it has
+    /// already fired `fired` times?
+    fn fires(&self, v: u64, fired: u64) -> bool {
+        if fired >= self.count || v < self.nth {
+            return false;
+        }
+        if self.every == 0 {
+            v == self.nth
+        } else {
+            (v - self.nth) % self.every == 0
+        }
+    }
+}
+
+/// A seeded, parseable schedule of fault rules. Off ⇔ absent
+/// (`Option<FaultPlan>` is `None`); an empty plan is rejected at parse.
+///
+/// Spec grammar (`;`-separated, spaces ignored):
+///
+/// ```text
+/// [seed=N;] kind@site[:nth=N,every=N,count=N,ms=N] [;...]
+/// kind  := panic | delay | nan
+/// site  := pre | post | respond
+/// ```
+///
+/// Defaults: `nth=1`, `every=0` (once), `count=1`, `ms=10` (delay only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse a plan spec. Empty/whitespace input is an error — "no
+    /// faults" is expressed as the absence of a plan, not an empty one.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut rules = Vec::new();
+        for part in spec.split(';') {
+            let part: String = part.chars().filter(|c| !c.is_whitespace()).collect();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(v) = part.strip_prefix("seed=") {
+                seed = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad fault seed '{v}'"))?;
+                continue;
+            }
+            let (head, opts) = match part.split_once(':') {
+                Some((h, o)) => (h.to_string(), Some(o.to_string())),
+                None => (part, None),
+            };
+            let (kind, site) = head
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault rule '{head}' needs kind@site"))?;
+            let site = FaultSite::parse(site)?;
+            let (mut nth, mut every, mut count, mut ms) = (1u64, 0u64, 1u64, 10u64);
+            if let Some(opts) = opts {
+                for kv in opts.split(',').filter(|s| !s.is_empty()) {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| anyhow::anyhow!("bad fault option '{kv}'"))?;
+                    let n: u64 = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad fault option value '{kv}'"))?;
+                    match k {
+                        "nth" => nth = n,
+                        "every" => every = n,
+                        "count" => count = n,
+                        "ms" => ms = n,
+                        other => bail!("unknown fault option '{other}'"),
+                    }
+                }
+            }
+            if nth == 0 {
+                bail!("fault option nth is 1-based; nth=0 never fires");
+            }
+            let action = match kind {
+                "panic" => FaultAction::Panic,
+                "delay" => FaultAction::Delay(Duration::from_millis(ms)),
+                "nan" => FaultAction::Nan,
+                other => bail!("unknown fault kind '{other}' (panic|delay|nan)"),
+            };
+            rules.push(FaultRule { site, action, nth, every, count });
+        }
+        if rules.is_empty() {
+            bail!("fault plan '{spec}' has no rules");
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+
+    /// Render back to the spec grammar (round-trips through `parse`).
+    pub fn spec(&self) -> String {
+        let mut out = format!("seed={}", self.seed);
+        for r in &self.rules {
+            let kind = match r.action {
+                FaultAction::Panic => "panic",
+                FaultAction::Delay(_) => "delay",
+                FaultAction::Nan => "nan",
+            };
+            out.push_str(&format!(
+                ";{kind}@{}:nth={},every={},count={}",
+                r.site.name(),
+                r.nth,
+                r.every,
+                r.count
+            ));
+            if let FaultAction::Delay(d) = r.action {
+                out.push_str(&format!(",ms={}", d.as_millis()));
+            }
+        }
+        out
+    }
+
+    /// Does any rule inject NaN? Output finiteness checks are only
+    /// armed when this is true, so fault-free serving keeps its exact
+    /// pre-existing semantics (an all-NaN engine yields empty
+    /// detections, not an error).
+    pub fn checks_nan(&self) -> bool {
+        self.rules.iter().any(|r| r.action == FaultAction::Nan)
+    }
+
+    /// Instantiate the per-shard mutable schedule state for one shard
+    /// generation. Deterministic in (plan, gen).
+    pub fn state_for(&self, gen: u64) -> FaultState {
+        FaultState {
+            plan: self.clone(),
+            _gen: gen,
+            visits: [0; 3],
+            fired: vec![0; self.rules.len()],
+        }
+    }
+}
+
+/// Per-shard-generation schedule state: counts visits per site and
+/// firings per rule. Owned by one shard thread — no locking.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    plan: FaultPlan,
+    _gen: u64,
+    visits: [u64; 3],
+    fired: Vec<u64>,
+}
+
+impl FaultState {
+    /// Record a visit to `site` and return the armed action, if any.
+    /// At most one rule fires per visit (first match wins).
+    pub fn check(&mut self, site: FaultSite) -> Option<FaultAction> {
+        let i = site.index();
+        self.visits[i] += 1;
+        let v = self.visits[i];
+        for (ri, r) in self.plan.rules.iter().enumerate() {
+            if r.site == site && r.fires(v, self.fired[ri]) {
+                self.fired[ri] += 1;
+                return Some(r.action);
+            }
+        }
+        None
+    }
+
+    /// See [`FaultPlan::checks_nan`].
+    pub fn checks_nan(&self) -> bool {
+        self.plan.checks_nan()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quarantine ring
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over the bit patterns of an image. Content-addressed so the
+/// same poison image is recognized on resubmission regardless of which
+/// clone carried it.
+pub fn content_hash(image: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in image {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Bounded ring of content hashes of requests that crashed a shard.
+/// Admission checks membership; insertion evicts the oldest entry once
+/// the ring is full, so the memory footprint is fixed no matter how
+/// hostile the traffic.
+pub struct Quarantine {
+    ring: Mutex<VecDeque<u64>>,
+    cap: usize,
+    /// Occupancy fast path: admission skips the lock entirely while
+    /// the ring has never held an entry (the common, fault-free case).
+    occupancy: AtomicUsize,
+}
+
+impl Quarantine {
+    pub const DEFAULT_CAP: usize = 64;
+
+    pub fn new(cap: usize) -> Quarantine {
+        Quarantine {
+            ring: Mutex::new(VecDeque::with_capacity(cap.max(1))),
+            cap: cap.max(1),
+            occupancy: AtomicUsize::new(0),
+        }
+    }
+
+    /// Record a poison hash. Idempotent for hashes already present.
+    pub fn insert(&self, hash: u64) {
+        let mut ring = plock(&self.ring);
+        if ring.contains(&hash) {
+            return;
+        }
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(hash);
+        self.occupancy.store(ring.len(), Ordering::Release);
+    }
+
+    /// Is this hash currently quarantined?
+    pub fn contains(&self, hash: u64) -> bool {
+        if self.occupancy.load(Ordering::Acquire) == 0 {
+            return false;
+        }
+        plock(&self.ring).contains(&hash)
+    }
+
+    /// Current number of quarantined hashes.
+    pub fn len(&self) -> usize {
+        self.occupancy.load(Ordering::Acquire)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backoff policies
+// ---------------------------------------------------------------------------
+
+/// Crash-respawn schedule for the shard pool: exponential backoff with
+/// deterministic jitter, plus the circuit-breaker threshold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RespawnPolicy {
+    /// Backoff before the 2nd consecutive respawn (the 1st is instant).
+    pub base: Duration,
+    /// Backoff ceiling.
+    pub max: Duration,
+    /// Consecutive crash-respawns that trip the breaker (pool stops
+    /// respawning and surfaces `degraded`).
+    pub breaker: u32,
+    /// Jitter seed — same seed ⇒ same schedule.
+    pub seed: u64,
+}
+
+impl Default for RespawnPolicy {
+    fn default() -> RespawnPolicy {
+        RespawnPolicy {
+            base: Duration::from_millis(10),
+            max: Duration::from_secs(1),
+            breaker: 5,
+            seed: 0,
+        }
+    }
+}
+
+impl RespawnPolicy {
+    /// Delay before respawn number `consecutive` (1-based count of
+    /// consecutive crashes). Pure: same (policy, n) ⇒ same delay.
+    /// The first respawn is immediate; after that the delay doubles
+    /// per crash with +0..50% deterministic jitter, clamped to `max`.
+    pub fn delay(&self, consecutive: u32) -> Duration {
+        if consecutive <= 1 {
+            return Duration::ZERO;
+        }
+        let exp = (consecutive - 2).min(30);
+        let base = self.base.as_nanos() as u64;
+        let raw = base.saturating_mul(1u64 << exp);
+        let jitter = splitmix64(self.seed ^ (consecutive as u64)) % (raw / 2 + 1);
+        let nanos = raw.saturating_add(jitter).min(self.max.as_nanos() as u64);
+        Duration::from_nanos(nanos)
+    }
+}
+
+/// Client-side retry schedule for `DetectHandle::detect` — opt-in,
+/// bounded, deterministic, and deadline-aware (enforced by the caller).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retry).
+    pub max_attempts: u32,
+    /// Backoff before the 2nd attempt; doubles per attempt.
+    pub backoff: Duration,
+    /// Jitter seed.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            backoff: Duration::from_millis(5),
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay before attempt number `attempt` (1-based; attempt 1 is
+    /// immediate). Pure and deterministic for a fixed seed.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        if attempt <= 1 {
+            return Duration::ZERO;
+        }
+        let exp = (attempt - 2).min(20);
+        let base = self.backoff.as_nanos() as u64;
+        let raw = base.saturating_mul(1u64 << exp);
+        let jitter = splitmix64(self.seed ^ 0x5eed ^ (attempt as u64)) % (raw / 2 + 1);
+        Duration::from_nanos(raw.saturating_add(jitter))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parses_and_round_trips() {
+        let p = FaultPlan::parse("seed=7;panic@pre:nth=3,every=5,count=2;delay@post:ms=4;nan@post:nth=2").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(p.rules[0].site, FaultSite::PreForward);
+        assert_eq!(p.rules[0].action, FaultAction::Panic);
+        assert_eq!((p.rules[0].nth, p.rules[0].every, p.rules[0].count), (3, 5, 2));
+        assert_eq!(p.rules[1].action, FaultAction::Delay(Duration::from_millis(4)));
+        assert!(p.checks_nan());
+        let round = FaultPlan::parse(&p.spec()).unwrap();
+        assert_eq!(round, p);
+    }
+
+    #[test]
+    fn plan_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("seed=3").is_err()); // no rules
+        assert!(FaultPlan::parse("panic").is_err()); // no site
+        assert!(FaultPlan::parse("panic@nowhere").is_err());
+        assert!(FaultPlan::parse("frob@pre").is_err());
+        assert!(FaultPlan::parse("panic@pre:nth=0").is_err());
+        assert!(FaultPlan::parse("panic@pre:wat=1").is_err());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_bounded() {
+        let p = FaultPlan::parse("panic@pre:nth=3,every=5,count=2").unwrap();
+        let fire = |n: u64| {
+            let mut st = p.state_for(0);
+            let mut fired = Vec::new();
+            for v in 1..=n {
+                if st.check(FaultSite::PreForward).is_some() {
+                    fired.push(v);
+                }
+                // other sites never fire for this plan
+                assert!(st.check(FaultSite::PostForward).is_none());
+                assert!(st.check(FaultSite::Respond).is_none());
+            }
+            fired
+        };
+        // fires at visits 3 and 8, then exhausted (count=2).
+        assert_eq!(fire(20), vec![3, 8]);
+        // two states from the same plan are independent and identical.
+        assert_eq!(fire(20), fire(20));
+    }
+
+    #[test]
+    fn once_rule_fires_exactly_once() {
+        let p = FaultPlan::parse("delay@respond:nth=2").unwrap();
+        let mut st = p.state_for(1);
+        let mut n = 0;
+        for _ in 0..10 {
+            if st.check(FaultSite::Respond).is_some() {
+                n += 1;
+            }
+        }
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn quarantine_ring_is_bounded_and_idempotent() {
+        let q = Quarantine::new(4);
+        assert!(q.is_empty());
+        for h in 0..4u64 {
+            q.insert(h);
+        }
+        assert_eq!(q.len(), 4);
+        assert!(q.contains(0));
+        q.insert(0); // idempotent — no eviction
+        assert_eq!(q.len(), 4);
+        assert!(q.contains(0));
+        q.insert(99); // evicts the oldest (0)
+        assert_eq!(q.len(), 4);
+        assert!(!q.contains(0));
+        assert!(q.contains(99) && q.contains(3));
+    }
+
+    #[test]
+    fn content_hash_is_content_addressed() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![1.0f32, 2.0, 3.0];
+        let c = vec![1.0f32, 2.0, 3.5];
+        assert_eq!(content_hash(&a), content_hash(&b));
+        assert_ne!(content_hash(&a), content_hash(&c));
+        // bit-pattern sensitivity: -0.0 != +0.0 as content
+        assert_ne!(content_hash(&[0.0]), content_hash(&[-0.0]));
+    }
+
+    #[test]
+    fn respawn_backoff_is_deterministic_monotone_and_clamped() {
+        let p = RespawnPolicy { seed: 42, ..RespawnPolicy::default() };
+        assert_eq!(p.delay(1), Duration::ZERO);
+        let d2 = p.delay(2);
+        let d3 = p.delay(3);
+        assert!(d2 >= p.base && d2 <= p.base * 3 / 2);
+        assert!(d3 >= p.base * 2 && d3 <= p.base * 3);
+        // deterministic: same policy, same n, same delay
+        assert_eq!(p.delay(2), d2);
+        // different seed ⇒ (almost surely) different jitter
+        let q = RespawnPolicy { seed: 43, ..p.clone() };
+        assert!(q.delay(2) != d2 || q.delay(3) != d3);
+        // clamped at the ceiling
+        assert_eq!(p.delay(60), p.max);
+    }
+
+    #[test]
+    fn retry_backoff_is_deterministic() {
+        let p = RetryPolicy { seed: 9, ..RetryPolicy::default() };
+        assert_eq!(p.delay(1), Duration::ZERO);
+        let d2 = p.delay(2);
+        assert!(d2 >= p.backoff && d2 <= p.backoff * 3 / 2);
+        assert_eq!(p.delay(2), d2);
+    }
+
+    #[test]
+    fn retryable_classification() {
+        assert!(is_retryable("server overloaded: request queue full after 1ms (backpressure)"));
+        assert!(is_retryable("detect failed: shard crashed while serving this batch"));
+        assert!(!is_retryable("inference failed: engine down"));
+        assert!(!is_retryable(&format!("request {ERR_QUARANTINED} after crashing a shard")));
+        assert!(!is_retryable(&format!("{ERR_POISONED}: this request crashed a shard")));
+    }
+
+    #[test]
+    fn poison_recovery_helpers_recover() {
+        use std::sync::Arc;
+        let m = Arc::new(Mutex::new(5u32));
+        let m2 = m.clone();
+        // poison the mutex from a panicking thread
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*plock(&m), 5);
+        *plock(&m) = 6;
+        assert_eq!(*plock(&m), 6);
+    }
+}

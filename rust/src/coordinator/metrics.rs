@@ -3,8 +3,11 @@
 //! counters, and the per-shard → aggregate merge used by the sharded
 //! serving engine.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use crate::coordinator::faults::plock;
 
 /// Retained latency samples per recorder. Counters and the mean cover
 /// *every* request ever recorded; percentile queries read the most
@@ -46,6 +49,12 @@ pub struct LatencyStats {
     depth_last: u64,
     /// Queue-depth gauge: deepest queue this shard ever observed.
     depth_max: u64,
+    /// Batch executions that panicked (caught by the shard's
+    /// `catch_unwind` fault domain).
+    crashes: u64,
+    /// Requests isolated by bisection as the cause of a batch
+    /// panic/failure and failed individually.
+    poisoned: u64,
 }
 
 impl Default for LatencyStats {
@@ -72,6 +81,8 @@ impl LatencyStats {
             shed: 0,
             depth_last: 0,
             depth_max: 0,
+            crashes: 0,
+            poisoned: 0,
         }
     }
 
@@ -112,6 +123,19 @@ impl LatencyStats {
         self.shed += n as u64;
     }
 
+    /// Count one panicked batch execution (the shard's fault domain
+    /// caught the unwind). The batch itself is also counted via
+    /// [`LatencyStats::record_batch`] / [`LatencyStats::record_failed_batch`]
+    /// by the bisection bookkeeping, so occupancy stays truthful.
+    pub fn record_crash(&mut self) {
+        self.crashes += 1;
+    }
+
+    /// Count `n` requests isolated as poison and failed individually.
+    pub fn record_poisoned(&mut self, n: usize) {
+        self.poisoned += n as u64;
+    }
+
     /// Update the queue-depth gauges with a fresh snapshot.
     pub fn observe_queue_depth(&mut self, depth: usize) {
         self.depth_last = depth as u64;
@@ -126,6 +150,16 @@ impl LatencyStats {
     /// Requests shed at admission (deadline backpressure).
     pub fn shed(&self) -> u64 {
         self.shed
+    }
+
+    /// Panicked batch executions caught by the fault domain.
+    pub fn crashes(&self) -> u64 {
+        self.crashes
+    }
+
+    /// Requests isolated as poison by bisection.
+    pub fn poisoned(&self) -> u64 {
+        self.poisoned
     }
 
     /// Most recent queue-depth observation.
@@ -175,6 +209,8 @@ impl LatencyStats {
         self.batches += other.batches;
         self.errors += other.errors;
         self.shed += other.shed;
+        self.crashes += other.crashes;
+        self.poisoned += other.poisoned;
         // gauges: the aggregate reads the deepest shard (a sum would
         // double-count the one shared queue every shard observes)
         self.depth_last = self.depth_last.max(other.depth_last);
@@ -218,6 +254,8 @@ impl LatencyStats {
             shed: self.shed,
             depth_last: self.depth_last,
             depth_max: self.depth_max,
+            crashes: self.crashes,
+            poisoned: self.poisoned,
         }
     }
 
@@ -238,6 +276,8 @@ pub struct LatencySnapshot {
     shed: u64,
     depth_last: u64,
     depth_max: u64,
+    crashes: u64,
+    poisoned: u64,
 }
 
 impl LatencySnapshot {
@@ -273,9 +313,17 @@ impl LatencySnapshot {
         self.shed
     }
 
+    pub fn crashes(&self) -> u64 {
+        self.crashes
+    }
+
+    pub fn poisoned(&self) -> u64 {
+        self.poisoned
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms err={} shed={} qdepth={}/{}",
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms err={} shed={} qdepth={}/{} crashes={} poisoned={}",
             self.count(),
             self.mean_ms(),
             self.percentile_ms(50.0),
@@ -285,6 +333,8 @@ impl LatencySnapshot {
             self.shed,
             self.depth_last,
             self.depth_max,
+            self.crashes,
+            self.poisoned,
         )
     }
 }
@@ -332,7 +382,7 @@ impl Registry {
                 .position(|s| !s.live)
                 .expect("counted at least one retired slot");
             let slot = self.slots.remove(i);
-            self.folded.merge(&slot.stats.lock().unwrap());
+            self.folded.merge(&plock(&slot.stats));
             self.folded_gens += 1;
         }
     }
@@ -352,9 +402,21 @@ impl Registry {
 /// generations, the oldest fold into one accumulated-history recorder
 /// (exact totals, per-generation detail dropped), and a failed spawn's
 /// never-served generation is discarded outright.
+/// Pool-level fault counters live beside the registry as atomics: they
+/// are bumped from crash/respawn/admission paths that must never take
+/// the registry lock (a respawning shard thread, the client handle's
+/// quarantine check).
 #[derive(Debug)]
 pub struct ShardStats {
     inner: Mutex<Registry>,
+    /// Shard generations respawned after a crash.
+    respawns: AtomicU64,
+    /// Requests rejected at admission because their content hash was
+    /// quarantined.
+    quarantine_hits: AtomicU64,
+    /// Sticky flag: the crash circuit breaker tripped and the pool
+    /// stopped respawning (it keeps serving on surviving shards).
+    degraded: AtomicBool,
 }
 
 impl ShardStats {
@@ -375,6 +437,9 @@ impl ShardStats {
                 folded: LatencyStats::new(),
                 folded_gens: 0,
             }),
+            respawns: AtomicU64::new(0),
+            quarantine_hits: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
         }
     }
 
@@ -388,12 +453,46 @@ impl ShardStats {
                 folded: LatencyStats::new(),
                 folded_gens: 0,
             }),
+            respawns: AtomicU64::new(0),
+            quarantine_hits: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
         }
+    }
+
+    /// Count one crash-respawn (a replacement generation spawned after
+    /// a shard panicked).
+    pub fn note_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Shard generations respawned after a crash.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Count one admission rejection of a quarantined request.
+    pub fn note_quarantine_hit(&self) {
+        self.quarantine_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests rejected at admission for being quarantined.
+    pub fn quarantine_hits(&self) -> u64 {
+        self.quarantine_hits.load(Ordering::Relaxed)
+    }
+
+    /// Trip the sticky degraded flag (crash circuit breaker).
+    pub fn set_degraded(&self) {
+        self.degraded.store(true, Ordering::Release);
+    }
+
+    /// Has the crash circuit breaker tripped?
+    pub fn degraded(&self) -> bool {
+        self.degraded.load(Ordering::Acquire)
     }
 
     /// Mint the next shard generation and return `(gen, recorder)`.
     pub fn register(&self) -> (usize, Arc<Mutex<LatencyStats>>) {
-        let mut reg = self.inner.lock().unwrap();
+        let mut reg = plock(&self.inner);
         let gen = reg.next_gen;
         reg.next_gen += 1;
         let stats = Arc::new(Mutex::new(LatencyStats::new()));
@@ -406,7 +505,7 @@ impl ShardStats {
     /// every counter in it — stays in the registry and keeps counting
     /// toward [`ShardStats::merged`].
     pub fn retire(&self, gen: usize) {
-        let mut reg = self.inner.lock().unwrap();
+        let mut reg = plock(&self.inner);
         if let Some(s) = reg.slots.iter_mut().find(|s| s.gen == gen) {
             s.live = false;
         }
@@ -418,11 +517,16 @@ impl ShardStats {
     /// — a supervisor retrying a failing factory must not grow the
     /// registry — otherwise it degrades to [`ShardStats::retire`].
     pub fn discard(&self, gen: usize) {
-        let mut reg = self.inner.lock().unwrap();
+        let mut reg = plock(&self.inner);
         if let Some(i) = reg.slots.iter().position(|s| s.gen == gen) {
             let untouched = {
-                let g = reg.slots[i].stats.lock().unwrap();
-                g.count == 0 && g.batches == 0 && g.shed == 0 && g.errors == 0
+                let g = plock(&reg.slots[i].stats);
+                g.count == 0
+                    && g.batches == 0
+                    && g.shed == 0
+                    && g.errors == 0
+                    && g.crashes == 0
+                    && g.poisoned == 0
             };
             if untouched {
                 reg.slots.remove(i);
@@ -434,20 +538,20 @@ impl ShardStats {
 
     /// Live shard count (retired generations excluded).
     pub fn num_shards(&self) -> usize {
-        self.inner.lock().unwrap().slots.iter().filter(|s| s.live).count()
+        plock(&self.inner).slots.iter().filter(|s| s.live).count()
     }
 
     /// Generations ever registered and not discarded, live, retired,
     /// or folded.
     pub fn num_generations(&self) -> usize {
-        let reg = self.inner.lock().unwrap();
+        let reg = plock(&self.inner);
         reg.slots.len() + reg.folded_gens
     }
 
     /// The recorder owned by the `i`-th generation (fixed pools index
     /// their shards 0..n).
     pub fn shard(&self, i: usize) -> Arc<Mutex<LatencyStats>> {
-        self.inner.lock().unwrap().slots[i].stats.clone()
+        plock(&self.inner).slots[i].stats.clone()
     }
 
     /// Snapshot of each generation's recorder, in generation order —
@@ -455,9 +559,9 @@ impl ShardStats {
     /// entry once old generations have been folded), so per-shard
     /// counts always sum to the aggregate.
     pub fn per_shard(&self) -> Vec<LatencyStats> {
-        let reg = self.inner.lock().unwrap();
+        let reg = plock(&self.inner);
         let mut all: Vec<LatencyStats> =
-            reg.slots.iter().map(|s| s.stats.lock().unwrap().clone()).collect();
+            reg.slots.iter().map(|s| plock(&s.stats).clone()).collect();
         if reg.folded_gens > 0 {
             all.push(reg.folded.clone());
         }
@@ -468,10 +572,10 @@ impl ShardStats {
     /// `(requests, shed, errors)` — without cloning any percentile
     /// window. The autoscale supervisor polls this every tick.
     pub fn counter_totals(&self) -> (u64, u64, u64) {
-        let reg = self.inner.lock().unwrap();
+        let reg = plock(&self.inner);
         let mut t = (reg.folded.count, reg.folded.shed, reg.folded.errors);
         for s in reg.slots.iter() {
-            let g = s.stats.lock().unwrap();
+            let g = plock(&s.stats);
             t.0 += g.count;
             t.1 += g.shed;
             t.2 += g.errors;
@@ -485,11 +589,11 @@ impl ShardStats {
     /// survives the merge — percentiles cover the whole pool's
     /// history, not whichever shard merged last.
     pub fn merged(&self) -> LatencyStats {
-        let reg = self.inner.lock().unwrap();
+        let reg = plock(&self.inner);
         let mut all = LatencyStats::with_window(DEFAULT_WINDOW * (reg.slots.len() + 1).max(1));
         all.merge(&reg.folded);
         for s in reg.slots.iter() {
-            all.merge(&s.stats.lock().unwrap());
+            all.merge(&plock(&s.stats));
         }
         all
     }
@@ -500,17 +604,25 @@ impl ShardStats {
     /// "gen 1 was drained after serving 12" — and folded history as
     /// one `(+k gens: n)` entry.
     pub fn summary(&self) -> String {
-        let reg = self.inner.lock().unwrap();
+        let reg = plock(&self.inner);
         let mut counts: Vec<String> = Vec::with_capacity(reg.slots.len() + 1);
         if reg.folded_gens > 0 {
             counts.push(format!("(+{} gens: {})", reg.folded_gens, reg.folded.count()));
         }
         for s in reg.slots.iter() {
-            let n = s.stats.lock().unwrap().count();
+            let n = plock(&s.stats).count();
             counts.push(if s.live { n.to_string() } else { format!("({n})") });
         }
         drop(reg);
-        format!("{} shard_n=[{}]", self.merged().summary(), counts.join(","))
+        let degraded = if self.degraded() { " DEGRADED" } else { "" };
+        format!(
+            "{} respawns={} qhits={}{} shard_n=[{}]",
+            self.merged().summary(),
+            self.respawns(),
+            self.quarantine_hits(),
+            degraded,
+            counts.join(",")
+        )
     }
 }
 
@@ -822,5 +934,49 @@ mod tests {
         assert_eq!(per.iter().map(|s| s.count()).collect::<Vec<_>>(), vec![1, 2, 3]);
         let s = hub.summary();
         assert!(s.contains("shard_n=[1,2,3]"), "{s}");
+    }
+
+    /// Fault counters add under merge, survive snapshot, render in the
+    /// summary, and the hub's pool-level atomics are independent of the
+    /// registry lock.
+    #[test]
+    fn fault_counters_merge_and_render() {
+        let mut a = LatencyStats::new();
+        a.record_crash();
+        a.record_poisoned(2);
+        let mut b = LatencyStats::new();
+        b.record_crash();
+        b.merge(&a);
+        assert_eq!(b.crashes(), 2);
+        assert_eq!(b.poisoned(), 2);
+        let snap = b.snapshot();
+        assert_eq!((snap.crashes(), snap.poisoned()), (2, 2));
+        assert!(snap.summary().contains("crashes=2 poisoned=2"), "{}", snap.summary());
+
+        let hub = ShardStats::new(1);
+        assert_eq!((hub.respawns(), hub.quarantine_hits()), (0, 0));
+        assert!(!hub.degraded());
+        hub.note_respawn();
+        hub.note_quarantine_hit();
+        hub.note_quarantine_hit();
+        assert_eq!((hub.respawns(), hub.quarantine_hits()), (1, 2));
+        let s = hub.summary();
+        assert!(s.contains("respawns=1 qhits=2"), "{s}");
+        assert!(!s.contains("DEGRADED"), "{s}");
+        hub.set_degraded();
+        assert!(hub.degraded());
+        assert!(hub.summary().contains("DEGRADED"));
+    }
+
+    /// A crashed-but-never-serving generation must still be retired by
+    /// `discard` (not erased): its crash count is evidence.
+    #[test]
+    fn discard_keeps_generations_with_fault_counts() {
+        let hub = ShardStats::empty();
+        let (g, s) = hub.register();
+        s.lock().unwrap().record_crash();
+        hub.discard(g);
+        assert_eq!(hub.num_generations(), 1, "crash evidence survives discard");
+        assert_eq!(hub.merged().crashes(), 1);
     }
 }

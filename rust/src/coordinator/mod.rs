@@ -5,6 +5,7 @@
 
 pub mod adaptive;
 pub mod autoscale;
+pub mod faults;
 pub mod init;
 pub mod inq;
 pub mod metrics;

@@ -19,12 +19,20 @@
 //!   [`Monitor::kick`], and the shard's [`Receiver::recv_cancellable`]
 //!   returns [`Recv::Cancelled`] instead of popping another request.
 //!   Everything still queued stays in the buffer for the surviving
-//!   consumers, so scale-down never drops an accepted request.
+//!   consumers, so scale-down never drops an accepted request,
+//! * **crash-safe** — every lock goes through the poison-recovering
+//!   helpers in [`crate::coordinator::faults`]: a shard thread that
+//!   panics while holding the state mutex must not wedge every other
+//!   producer and consumer. The guarded state is a plain deque plus
+//!   counters, consistent at every release point, so recovering the
+//!   guard is sound.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::coordinator::faults::{plock, pwait, pwait_timeout};
 
 /// Why a push was refused. The value is handed back to the caller.
 #[derive(Debug)]
@@ -91,7 +99,7 @@ pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
 impl<T> Sender<T> {
     /// Non-blocking push.
     pub fn try_send(&self, v: T) -> Result<(), SendError<T>> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = plock(&self.shared.state);
         if st.closed {
             return Err(SendError::Closed(v));
         }
@@ -119,7 +127,7 @@ impl<T> Sender<T> {
     /// client.
     pub fn send_timeout(&self, v: T, timeout: Duration) -> Result<(), SendError<T>> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = plock(&self.shared.state);
         loop {
             if st.closed {
                 return Err(SendError::Closed(v));
@@ -134,14 +142,14 @@ impl<T> Sender<T> {
             if left.is_zero() {
                 return Err(SendError::Full(v));
             }
-            let (g, _timed_out) = self.shared.not_full.wait_timeout(st, left).unwrap();
+            let (g, _timed_out) = pwait_timeout(&self.shared.not_full, st, left);
             st = g;
         }
     }
 
     /// Close the channel explicitly (consumers drain, then exit).
     pub fn close(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = plock(&self.shared.state);
         st.closed = true;
         drop(st);
         self.shared.not_empty.notify_all();
@@ -150,7 +158,7 @@ impl<T> Sender<T> {
 
     /// Requests currently waiting (diagnostics only).
     pub fn len(&self) -> usize {
-        self.shared.state.lock().unwrap().buf.len()
+        plock(&self.shared.state).buf.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -160,14 +168,14 @@ impl<T> Sender<T> {
 
 impl<T> Clone for Sender<T> {
     fn clone(&self) -> Self {
-        self.shared.state.lock().unwrap().senders += 1;
+        plock(&self.shared.state).senders += 1;
         Sender { shared: self.shared.clone() }
     }
 }
 
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = plock(&self.shared.state);
         st.senders -= 1;
         let last = st.senders == 0;
         if last {
@@ -184,7 +192,7 @@ impl<T> Drop for Sender<T> {
 impl<T> Receiver<T> {
     /// Blocking pop. `None` means closed-and-drained.
     pub fn recv(&self) -> Option<T> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = plock(&self.shared.state);
         loop {
             if let Some(v) = st.buf.pop_front() {
                 drop(st);
@@ -194,13 +202,13 @@ impl<T> Receiver<T> {
             if st.closed {
                 return None;
             }
-            st = self.shared.not_empty.wait(st).unwrap();
+            st = pwait(&self.shared.not_empty, st);
         }
     }
 
     /// Pop with an absolute deadline (the batching-window primitive).
     pub fn recv_deadline(&self, deadline: Instant) -> Recv<T> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = plock(&self.shared.state);
         loop {
             if let Some(v) = st.buf.pop_front() {
                 drop(st);
@@ -214,7 +222,7 @@ impl<T> Receiver<T> {
             if left.is_zero() {
                 return Recv::Timeout;
             }
-            let (g, _timed_out) = self.shared.not_empty.wait_timeout(st, left).unwrap();
+            let (g, _timed_out) = pwait_timeout(&self.shared.not_empty, st, left);
             st = g;
         }
     }
@@ -225,7 +233,7 @@ impl<T> Receiver<T> {
     /// queue-depth signal. One short lock; the value is a snapshot and
     /// may be stale the moment it returns (control/diagnostics only).
     pub fn depth(&self) -> usize {
-        self.shared.state.lock().unwrap().buf.len()
+        plock(&self.shared.state).buf.len()
     }
 
     /// Blocking pop that also honours a drain token: returns
@@ -236,7 +244,7 @@ impl<T> Receiver<T> {
     /// after setting the flag so a consumer parked on an empty queue
     /// wakes up and notices.
     pub fn recv_cancellable(&self, cancel: &AtomicBool) -> Recv<T> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = plock(&self.shared.state);
         loop {
             if cancel.load(Ordering::Acquire) {
                 return Recv::Cancelled;
@@ -249,7 +257,7 @@ impl<T> Receiver<T> {
             if st.closed {
                 return Recv::Closed;
             }
-            st = self.shared.not_empty.wait(st).unwrap();
+            st = pwait(&self.shared.not_empty, st);
         }
     }
 
@@ -279,13 +287,13 @@ impl<T> Clone for Monitor<T> {
 impl<T> Monitor<T> {
     /// Requests currently buffered (snapshot).
     pub fn depth(&self) -> usize {
-        self.shared.state.lock().unwrap().buf.len()
+        plock(&self.shared.state).buf.len()
     }
 
     /// True once the channel is closed (senders gone, `close()` called,
     /// or every consumer died).
     pub fn is_closed(&self) -> bool {
-        self.shared.state.lock().unwrap().closed
+        plock(&self.shared.state).closed
     }
 
     /// Wake every parked producer and consumer so they re-check their
@@ -301,7 +309,7 @@ impl<T> Monitor<T> {
     /// drained shard parked forever on an idle queue (and
     /// `drain_one`'s join wedged behind it).
     pub fn kick(&self) {
-        drop(self.shared.state.lock().unwrap());
+        drop(plock(&self.shared.state));
         self.shared.not_empty.notify_all();
         self.shared.not_full.notify_all();
     }
@@ -310,7 +318,7 @@ impl<T> Monitor<T> {
     /// already closed the new [`Receiver`] observes `Closed`
     /// immediately — a shard spawned into a dying server exits cleanly.
     pub fn subscribe(&self) -> Receiver<T> {
-        self.shared.state.lock().unwrap().receivers += 1;
+        plock(&self.shared.state).receivers += 1;
         Receiver { shared: self.shared.clone() }
     }
 
@@ -318,7 +326,7 @@ impl<T> Monitor<T> {
 
 impl<T> Clone for Receiver<T> {
     fn clone(&self) -> Self {
-        self.shared.state.lock().unwrap().receivers += 1;
+        plock(&self.shared.state).receivers += 1;
         Receiver { shared: self.shared.clone() }
     }
 }
@@ -330,7 +338,7 @@ impl<T> Drop for Receiver<T> {
         // whatever is still buffered: queued server requests carry
         // response channels, and dropping them is what unblocks the
         // clients waiting on replies nobody will ever send
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = plock(&self.shared.state);
         st.receivers -= 1;
         let last = st.receivers == 0;
         let orphaned = if last {

@@ -36,7 +36,8 @@
 //! of blocking forever — callers shed load instead of deadlocking the
 //! fleet.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -48,6 +49,11 @@ use crate::coordinator::adaptive::AdaptiveWindow;
 pub use crate::coordinator::adaptive::WindowMode;
 pub use crate::coordinator::autoscale::{AutoscaleConfig, ShardFactory};
 use crate::coordinator::autoscale::{ShardPool, Supervisor};
+use crate::coordinator::faults::{
+    content_hash, is_retryable, plock, FaultAction, FaultSite, FaultState, Quarantine,
+    ERR_POISONED, ERR_QUARANTINED, ERR_SHARD_CRASHED,
+};
+pub use crate::coordinator::faults::{FaultPlan, RespawnPolicy, RetryPolicy};
 use crate::coordinator::metrics::{LatencyStats, ShardStats};
 use crate::coordinator::params::{Checkpoint, ParamSpec};
 use crate::coordinator::queue::{self, Recv, SendError};
@@ -131,6 +137,19 @@ pub struct ServerConfig {
     /// `g*t .. g*t+t` (mod ncpus). Placement only — never affects
     /// results.
     pub pin_cores: bool,
+    /// Deterministic fault injection (`serve.faults` / `--faults` /
+    /// `LBW_FAULTS`). `None` (the default) is a no-op: the serving
+    /// loop's fault checks reduce to one `Option` test per site.
+    /// `Some(plan)` injects panics/delays/NaN on the plan's seeded
+    /// schedule — chaos tests and bench recovery rows are bitwise
+    /// reproducible. Injected faults cost latency, never answers.
+    pub faults: Option<FaultPlan>,
+    /// Crash-respawn backoff + circuit breaker for factory-backed
+    /// pools: after a shard panics, its replacement spawns after
+    /// `respawn.delay(consecutive)`; after `respawn.breaker`
+    /// consecutive crash-respawns the pool stops respawning and
+    /// surfaces `degraded` in the stats summary.
+    pub respawn: RespawnPolicy,
 }
 
 /// Default per-shard thread count: `LBW_THREADS` when set (CI runs the
@@ -165,6 +184,21 @@ fn default_pin() -> bool {
     std::env::var("LBW_PIN").map(|v| v == "1" || v.eq_ignore_ascii_case("true")).unwrap_or(false)
 }
 
+/// Default fault plan: `LBW_FAULTS=<plan spec>` when set (the CI chaos
+/// leg soaks the whole suite under a seeded plan), else `None` — no
+/// injection. A malformed spec panics loudly rather than silently
+/// serving fault-free under a chaos leg that believes it is injecting.
+fn default_faults() -> Option<FaultPlan> {
+    let spec = std::env::var("LBW_FAULTS").ok()?;
+    if spec.trim().is_empty() {
+        return None;
+    }
+    Some(
+        FaultPlan::parse(&spec)
+            .unwrap_or_else(|e| panic!("invalid LBW_FAULTS plan '{spec}': {e}")),
+    )
+}
+
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
@@ -183,6 +217,8 @@ impl Default for ServerConfig {
             autoscale: None,
             simd: default_simd(),
             pin_cores: default_pin(),
+            faults: default_faults(),
+            respawn: RespawnPolicy::default(),
         }
     }
 }
@@ -198,6 +234,21 @@ pub struct ShardCtl {
     /// Effective max batch, read once per batch head; always clamped
     /// to `[1, cfg.max_batch]` (the plan arena's capacity).
     pub max_batch: Arc<AtomicUsize>,
+    /// Per-generation fault-injection schedule state (`None` = no
+    /// injection — the common case, one `Option` test per site).
+    pub faults: Option<FaultState>,
+    /// Pool-shared quarantine ring: bisection inserts poison hashes
+    /// here; admission (the client handle) rejects repeat offenders.
+    pub quarantine: Arc<Quarantine>,
+    /// Whether a batch panic should retire this shard's generation so
+    /// the pool can respawn a replacement (factory-backed pools). A
+    /// fixed pool has nothing to respawn from — its shards recover in
+    /// place after bisection instead of dying.
+    pub retire_on_crash: bool,
+    /// Pool-shared consecutive crash counter: incremented by the
+    /// respawn path, reset to zero by any shard serving a healthy
+    /// batch. Feeds the respawn backoff and the circuit breaker.
+    pub crash_streak: Arc<AtomicU32>,
 }
 
 impl ShardCtl {
@@ -206,6 +257,10 @@ impl ShardCtl {
         ShardCtl {
             cancel: Arc::new(AtomicBool::new(false)),
             max_batch: Arc::new(AtomicUsize::new(max_batch.max(1))),
+            faults: None,
+            quarantine: Arc::new(Quarantine::new(Quarantine::DEFAULT_CAP)),
+            retire_on_crash: false,
+            crash_streak: Arc::new(AtomicU32::new(0)),
         }
     }
 }
@@ -228,25 +283,81 @@ pub struct Request {
 pub struct DetectHandle {
     tx: queue::Sender<Request>,
     stats: Arc<ShardStats>,
+    quarantine: Arc<Quarantine>,
     submit_timeout: Duration,
     deadline: Option<Duration>,
+    /// Opt-in bounded retry for transient failures (`queue full`
+    /// backpressure, `shard crashed`); `None` = single attempt.
+    retry: Option<RetryPolicy>,
 }
 
 impl DetectHandle {
     /// Detect objects in one `IMG×IMG×3` image. Blocks until served,
     /// except for admission: if the queue stays full for
     /// `submit_timeout`, returns a backpressure error immediately.
+    ///
+    /// With a retry policy attached ([`DetectHandle::with_retry`]),
+    /// transient errors — backpressure and shard crashes — are retried
+    /// up to `max_attempts` times under the policy's deterministic
+    /// jittered backoff. Retries never outlive the server's admission
+    /// deadline (`serve.deadline_ms`): once the elapsed time plus the
+    /// next backoff would exceed it, the last error is returned.
+    /// Poisoned/quarantined rejections are never retried — the request
+    /// itself is the problem.
     pub fn detect(&self, image: Vec<f32>) -> Result<Vec<Detection>> {
-        self.submit(image, self.submit_timeout)
+        let Some(policy) = &self.retry else {
+            return self.submit(image, self.submit_timeout);
+        };
+        let start = Instant::now();
+        let attempts = policy.max_attempts.max(1);
+        let mut last_image = image;
+        for attempt in 1..=attempts {
+            let img = if attempt < attempts { last_image.clone() } else { std::mem::take(&mut last_image) };
+            match self.submit(img, self.submit_timeout) {
+                Ok(dets) => return Ok(dets),
+                Err(e) => {
+                    let msg = e.to_string();
+                    if attempt == attempts || !is_retryable(&msg) {
+                        return Err(e);
+                    }
+                    let backoff = policy.delay(attempt + 1);
+                    if let Some(budget) = self.deadline {
+                        if start.elapsed() + backoff >= budget {
+                            return Err(e); // a retry could not be served in time
+                        }
+                    }
+                    if !backoff.is_zero() {
+                        std::thread::sleep(backoff);
+                    }
+                }
+            }
+        }
+        unreachable!("retry loop returns on the last attempt")
     }
 
-    /// Like [`DetectHandle::detect`] but never waits for queue space.
+    /// Like [`DetectHandle::detect`] but never waits for queue space —
+    /// and never retries, regardless of any attached policy.
     pub fn try_detect(&self, image: Vec<f32>) -> Result<Vec<Detection>> {
         self.submit(image, Duration::ZERO)
     }
 
+    /// Attach a bounded retry policy to this handle (builder-style;
+    /// clones are cheap). See [`DetectHandle::detect`] for semantics.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
+        self
+    }
+
     fn submit(&self, image: Vec<f32>, wait: Duration) -> Result<Vec<Detection>> {
         anyhow::ensure!(image.len() == IMG * IMG * 3, "bad image size {}", image.len());
+        // admission: a content hash that already crashed a shard is
+        // rejected up front — a poison image never gets a second chance
+        // to take a generation down (the occupancy fast path makes this
+        // one relaxed atomic load in the fault-free case)
+        if !self.quarantine.is_empty() && self.quarantine.contains(content_hash(&image)) {
+            self.stats.note_quarantine_hit();
+            bail!("request rejected: content {ERR_QUARANTINED} after crashing a shard");
+        }
         let (resp, rx) = sync_channel(1);
         let now = Instant::now();
         let req = Request {
@@ -480,7 +591,14 @@ impl DetectServer {
         cfg.autoscale = auto.clone();
         let (tx, rx) = queue::bounded(cfg.queue_depth);
         let stats = Arc::new(ShardStats::empty());
-        let pool = Arc::new(ShardPool::new(cfg.clone(), rx.monitor(), stats.clone(), factory));
+        let quarantine = Arc::new(Quarantine::new(Quarantine::DEFAULT_CAP));
+        let pool = ShardPool::new(
+            cfg.clone(),
+            rx.monitor(),
+            stats.clone(),
+            quarantine.clone(),
+            factory,
+        );
         // the template receiver keeps the queue open until the first
         // shard subscribes; from then on the shards themselves keep
         // the consumer count honest (all-shards-died still closes it)
@@ -498,8 +616,10 @@ impl DetectServer {
         let handle = DetectHandle {
             tx,
             stats: stats.clone(),
+            quarantine,
             submit_timeout: cfg.submit_timeout,
             deadline: cfg.deadline,
+            retry: None,
         };
         Ok(DetectServer { handle, stats, pool, supervisor })
     }
@@ -516,6 +636,28 @@ impl DetectServer {
     /// Scale events since startup: `(scale_ups, drains)`.
     pub fn scale_events(&self) -> (u64, u64) {
         self.pool.events()
+    }
+
+    /// Batch executions that panicked (caught by the shard fault
+    /// domains), across every generation.
+    pub fn crashes(&self) -> u64 {
+        self.stats.merged().crashes()
+    }
+
+    /// Shard generations respawned after a crash.
+    pub fn respawns(&self) -> u64 {
+        self.stats.respawns()
+    }
+
+    /// Has the crash circuit breaker tripped? A degraded pool keeps
+    /// serving on its surviving shards but stops respawning.
+    pub fn degraded(&self) -> bool {
+        self.stats.degraded()
+    }
+
+    /// Requests rejected at admission for being quarantined.
+    pub fn quarantine_hits(&self) -> u64 {
+        self.stats.quarantine_hits()
     }
 
     /// Manual scaling seam: drive the pool by hand (tests, operational
@@ -580,6 +722,269 @@ impl Scaler {
     }
 }
 
+/// Why a shard's serving loop returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeExit {
+    /// Queue closed-and-drained, or the drain token was set.
+    Clean,
+    /// A batch execution panicked and this shard's generation should
+    /// retire so a factory-backed pool can respawn a replacement.
+    /// Every request the shard held was answered before returning.
+    Crashed,
+}
+
+/// Outcome of one engine attempt over a request subset.
+enum Attempt {
+    /// Per-request detections, in subset order.
+    Served(Vec<Vec<Detection>>),
+    /// The engine returned an error. `injected` = a fault fired during
+    /// the attempt, so the failure is the harness's doing, not the
+    /// requests' content.
+    Failed { msg: String, injected: bool },
+    /// The execution panicked (caught by the fault domain).
+    Panicked { msg: String, injected: bool },
+}
+
+/// Best-effort text from a caught panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Fire the armed fault (if any) at `site`. `outputs` is the engine
+/// output at the post-forward site, where the NaN action overwrites
+/// activations; at other sites NaN is a no-op.
+fn apply_fault(
+    faults: &mut Option<FaultState>,
+    site: FaultSite,
+    injected: &mut bool,
+    outputs: Option<(&mut [f32], &mut [f32])>,
+) {
+    let Some(state) = faults.as_mut() else { return };
+    let Some(action) = state.check(site) else { return };
+    *injected = true;
+    match action {
+        FaultAction::Panic => panic!("injected fault: panic at {site:?}"),
+        FaultAction::Delay(d) => std::thread::sleep(d),
+        FaultAction::Nan => {
+            if let Some((cls, reg)) = outputs {
+                for v in cls.iter_mut() {
+                    *v = f32::NAN;
+                }
+                for v in reg.iter_mut() {
+                    *v = f32::NAN;
+                }
+            }
+        }
+    }
+}
+
+/// Run `subset` through the engine inside a `catch_unwind` fault
+/// domain: pad, forward, validate, decode + NMS. The [`Request`]
+/// values stay **outside** the closure — only image bytes go in — so
+/// an unwinding execution can never drop a responder (a dropped
+/// responder is a silently lost response; an answered `Err` is not).
+///
+/// `faults` is the injection schedule; bisection re-runs pass `None`
+/// (injection-exempt) so injected faults cost latency, never answers.
+fn run_subset(
+    cfg: &ServerConfig,
+    infer: &mut impl FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
+    subset: &[Request],
+    faults: &mut Option<FaultState>,
+) -> Attempt {
+    let n = subset.len();
+    let run_batch = cfg.pad_batch.max(n);
+    let mut images = Vec::with_capacity(run_batch * IMG * IMG * 3);
+    for r in subset {
+        images.extend_from_slice(&r.image);
+    }
+    images.resize(run_batch * IMG * IMG * 3, 0.0);
+
+    let mut injected = false;
+    let result = catch_unwind(AssertUnwindSafe(|| -> Result<Vec<Vec<Detection>>> {
+        apply_fault(faults, FaultSite::PreForward, &mut injected, None);
+        let (mut cls_prob, mut reg) = infer(&images, run_batch)?;
+        apply_fault(
+            faults,
+            FaultSite::PostForward,
+            &mut injected,
+            Some((cls_prob.as_mut_slice(), reg.as_mut_slice())),
+        );
+        // a short engine output would make the per-request slicing
+        // below panic — reject it as an error instead
+        anyhow::ensure!(
+            cls_prob.len() >= run_batch * GRID * GRID * NUM_CLS
+                && reg.len() >= run_batch * GRID * GRID * 4,
+            "engine returned {} cls / {} reg values for batch {run_batch}",
+            cls_prob.len(),
+            reg.len()
+        );
+        // finiteness is validated only when the active plan can inject
+        // NaN, so fault-free serving keeps its exact pre-existing
+        // semantics (an all-NaN engine scores below threshold and
+        // yields empty detections — it does not error)
+        if faults.as_ref().is_some_and(|f| f.checks_nan())
+            && (cls_prob.iter().any(|v| !v.is_finite()) || reg.iter().any(|v| !v.is_finite()))
+        {
+            anyhow::bail!("engine produced non-finite activations");
+        }
+        let mut out = Vec::with_capacity(n);
+        for bi in 0..n {
+            let cp = &cls_prob[bi * GRID * GRID * NUM_CLS..(bi + 1) * GRID * GRID * NUM_CLS];
+            let rg = &reg[bi * GRID * GRID * 4..(bi + 1) * GRID * GRID * 4];
+            out.push(nms(decode_grid(cp, rg, cfg.score_thresh), cfg.nms_iou));
+        }
+        apply_fault(faults, FaultSite::Respond, &mut injected, None);
+        Ok(out)
+    }));
+    match result {
+        Ok(Ok(dets)) => Attempt::Served(dets),
+        Ok(Err(e)) => Attempt::Failed { msg: e.to_string(), injected },
+        Err(payload) => Attempt::Panicked { msg: panic_message(payload), injected },
+    }
+}
+
+/// Per-request verdicts produced by [`bisect_and_respond`].
+enum Verdict {
+    Served(Vec<Detection>),
+    /// The engine failed this leaf with an error (classification into
+    /// poisoned vs engine-wide failure happens once all leaves are in).
+    FailedLeaf(String),
+    /// This single request reproducibly panics the engine.
+    Poisoned(String),
+    /// Unresolved: the poison budget was exhausted before this range
+    /// could be isolated.
+    Crashed,
+}
+
+/// Cap on reproducibly-panicking leaves isolated per batch: beyond
+/// this, the batch is hostile (or the engine is broken) and the
+/// remaining requests are failed with `shard crashed` instead of
+/// burning more forward passes on isolation.
+const POISON_BUDGET: usize = 3;
+
+/// What the bisection did, for the caller's accounting.
+struct BisectOutcome {
+    /// Requests answered with an error.
+    errors: usize,
+    /// Requests isolated as poison (subset of `errors`).
+    poisoned: usize,
+    /// Forward passes burned by re-runs (the original attempt not
+    /// included).
+    extra_runs: u64,
+    /// Latencies of the requests that were served after all.
+    latencies: Vec<Duration>,
+}
+
+/// Isolate the offender(s) in a failed/panicked batch by re-running
+/// halves, then answer **every** request exactly once: innocents get
+/// their detections (bitwise identical to an undisturbed run — the
+/// engines are batch-size invariant), isolated offenders get
+/// `Poisoned` + a quarantine entry, unresolved requests get
+/// `ShardCrashed`. Re-runs are injection-exempt.
+fn bisect_and_respond(
+    cfg: &ServerConfig,
+    infer: &mut impl FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
+    live: Vec<Request>,
+    quarantine: &Quarantine,
+) -> BisectOutcome {
+    let n = live.len();
+    let mut verdicts: Vec<Option<Verdict>> = (0..n).map(|_| None).collect();
+    let mut budget = POISON_BUDGET;
+    let mut extra_runs = 0u64;
+    let mut any_served = false;
+    let mut no_faults: Option<FaultState> = None;
+    // LIFO over index ranges, left half first — deterministic order
+    let mut stack: Vec<(usize, usize)> = vec![(0, n)];
+    while let Some((lo, hi)) = stack.pop() {
+        if budget == 0 {
+            for v in verdicts[lo..hi].iter_mut() {
+                *v = Some(Verdict::Crashed);
+            }
+            continue;
+        }
+        extra_runs += 1;
+        match run_subset(cfg, infer, &live[lo..hi], &mut no_faults) {
+            Attempt::Served(dets) => {
+                any_served = true;
+                for (v, d) in verdicts[lo..hi].iter_mut().zip(dets) {
+                    *v = Some(Verdict::Served(d));
+                }
+            }
+            Attempt::Panicked { msg, .. } => {
+                if hi - lo == 1 {
+                    budget -= 1;
+                    verdicts[lo] = Some(Verdict::Poisoned(msg));
+                } else {
+                    let mid = lo + (hi - lo) / 2;
+                    stack.push((mid, hi));
+                    stack.push((lo, mid));
+                }
+            }
+            Attempt::Failed { msg, .. } => {
+                if hi - lo == 1 {
+                    verdicts[lo] = Some(Verdict::FailedLeaf(msg));
+                } else {
+                    let mid = lo + (hi - lo) / 2;
+                    stack.push((mid, hi));
+                    stack.push((lo, mid));
+                }
+            }
+        }
+    }
+
+    let mut out = BisectOutcome { errors: 0, poisoned: 0, extra_runs, latencies: Vec::new() };
+    for (req, verdict) in live.into_iter().zip(verdicts) {
+        match verdict.expect("every range resolves to a verdict") {
+            Verdict::Served(dets) => {
+                out.latencies.push(req.enqueued.elapsed());
+                let _ = req.resp.send(Ok(dets));
+            }
+            Verdict::Poisoned(msg) => {
+                out.errors += 1;
+                out.poisoned += 1;
+                quarantine.insert(content_hash(&req.image));
+                let _ = req.resp.send(Err(anyhow!(
+                    "{ERR_POISONED}: this request reproducibly crashes the engine \
+                     (isolated by bisection, now quarantined): {msg}"
+                )));
+            }
+            Verdict::FailedLeaf(msg) => {
+                out.errors += 1;
+                if any_served {
+                    // the rest of the batch served fine — this request
+                    // alone trips the engine: poison, same as a panic
+                    out.poisoned += 1;
+                    quarantine.insert(content_hash(&req.image));
+                    let _ = req.resp.send(Err(anyhow!(
+                        "{ERR_POISONED}: this request reproducibly fails the engine \
+                         (isolated by bisection, now quarantined): {msg}"
+                    )));
+                } else {
+                    // nothing in the batch could be served: engine-wide
+                    // failure, same answer the pre-fault-domain server
+                    // gave
+                    let _ = req.resp.send(Err(anyhow!("inference failed: {msg}")));
+                }
+            }
+            Verdict::Crashed => {
+                out.errors += 1;
+                let _ = req.resp.send(Err(anyhow!(
+                    "detect failed: {ERR_SHARD_CRASHED} while serving this batch \
+                     (isolation budget exhausted)"
+                )));
+            }
+        }
+    }
+    out
+}
+
 /// One shard's batching loop, generic over the inference function so
 /// tests can inject a mock engine. Exits when the queue is closed and
 /// drained, **or** when the shard's drain token (`shard.cancel`) is
@@ -587,6 +992,15 @@ impl Scaler {
 /// batch it already holds, takes nothing more, and leaves everything
 /// still queued to the surviving shards (zero lost requests on
 /// scale-down).
+///
+/// **Fault domain**: every batch executes inside `catch_unwind`
+/// ([`run_subset`]); a panic never unwinds through the pool machinery
+/// and never drops a responder. A failed or panicked batch is bisected
+/// ([`bisect_and_respond`]) so innocents are served, the offender is
+/// quarantined, and everyone is answered exactly once. After a panic
+/// the loop returns [`ServeExit::Crashed`] on factory-backed pools
+/// (`shard.retire_on_crash`) so the generation can be respawned; fixed
+/// pools recover in place.
 ///
 /// Hot-loop discipline: the shard stats mutex (which metrics scrapes
 /// contend on) is taken exactly **once per batch**, after every
@@ -596,9 +1010,9 @@ pub fn serve_loop(
     rx: queue::Receiver<Request>,
     cfg: &ServerConfig,
     stats: Arc<Mutex<LatencyStats>>,
-    shard: ShardCtl,
+    mut shard: ShardCtl,
     mut infer: impl FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
-) {
+) -> ServeExit {
     // the plan arena's hard capacity; the steered effective max batch
     // can narrow below it but never exceed it
     let plan_cap = cfg.max_batch.max(1);
@@ -610,7 +1024,7 @@ pub fn serve_loop(
             // Closed: queue drained at shutdown. Cancelled: this shard
             // is being drained — stop popping, exit; final stats are
             // already recorded per batch.
-            _ => return,
+            _ => return ServeExit::Clean,
         };
         // the autoscale supervisor steers the effective batch budget
         // between ticks; read once per batch head
@@ -655,47 +1069,26 @@ pub fn serve_loop(
             }
         }
         if live.is_empty() {
-            let mut stats = stats.lock().unwrap();
+            let mut stats = plock(&stats);
             stats.record_shed(shed);
             stats.observe_queue_depth(depth);
             continue;
         }
 
-        let run_batch = cfg.pad_batch.max(live.len());
-        let mut images = Vec::with_capacity(run_batch * IMG * IMG * 3);
-        for r in &live {
-            images.extend_from_slice(&r.image);
-        }
-        images.resize(run_batch * IMG * IMG * 3, 0.0);
-
-        let result = infer(&images, run_batch).and_then(|(cls_prob, reg)| {
-            // a short engine output would make the per-request slicing
-            // below panic and kill the shard — reject it instead
-            anyhow::ensure!(
-                cls_prob.len() >= run_batch * GRID * GRID * NUM_CLS
-                    && reg.len() >= run_batch * GRID * GRID * 4,
-                "engine returned {} cls / {} reg values for batch {run_batch}",
-                cls_prob.len(),
-                reg.len()
-            );
-            Ok((cls_prob, reg))
-        });
-        let served = live.len();
-        match result {
-            Ok((cls_prob, reg)) => {
-                // decode + respond with no lock held...
+        let served_n = live.len();
+        match run_subset(cfg, &mut infer, &live, &mut shard.faults) {
+            Attempt::Served(dets) => {
+                // healthy batch: respond with no lock held...
                 latencies.clear();
-                for (bi, req) in live.into_iter().enumerate() {
-                    let cp =
-                        &cls_prob[bi * GRID * GRID * NUM_CLS..(bi + 1) * GRID * GRID * NUM_CLS];
-                    let rg = &reg[bi * GRID * GRID * 4..(bi + 1) * GRID * GRID * 4];
-                    let dets = nms(decode_grid(cp, rg, cfg.score_thresh), cfg.nms_iou);
+                for (req, d) in live.into_iter().zip(dets) {
                     latencies.push(req.enqueued.elapsed());
-                    let _ = req.resp.send(Ok(dets));
+                    let _ = req.resp.send(Ok(d));
                 }
+                // ...reset the pool's consecutive-crash streak...
+                shard.crash_streak.store(0, Ordering::Release);
                 // ...then fold the whole batch into one short critical
                 // section
-                let mut stats = stats.lock().unwrap();
+                let mut stats = plock(&stats);
                 stats.record_batch();
                 for &d in &latencies {
                     stats.record(d);
@@ -703,17 +1096,49 @@ pub fn serve_loop(
                 stats.record_shed(shed);
                 stats.observe_queue_depth(depth);
             }
-            Err(e) => {
-                let msg = format!("{e}");
-                for req in live {
-                    let _ = req.resp.send(Err(anyhow!("inference failed: {msg}")));
-                }
-                // failed batches burn a forward pass serving nobody —
-                // record them so occupancy accounting stays truthful
-                let mut stats = stats.lock().unwrap();
-                stats.record_failed_batch(served);
+            Attempt::Failed { msg, injected } if served_n == 1 && !injected => {
+                // a deterministic engine error on a singleton batch
+                // with no fault in play: there is nothing to isolate
+                // and a re-run would burn a pass to learn nothing —
+                // answer it directly (and keep `batches` truthful: one
+                // executed batch, one error)
+                let req = live.into_iter().next().expect("one live request");
+                let _ = req.resp.send(Err(anyhow!("inference failed: {msg}")));
+                let mut stats = plock(&stats);
+                stats.record_failed_batch(1);
                 stats.record_shed(shed);
                 stats.observe_queue_depth(depth);
+            }
+            attempt @ (Attempt::Failed { .. } | Attempt::Panicked { .. }) => {
+                let crashed = matches!(attempt, Attempt::Panicked { .. });
+                let outcome = bisect_and_respond(cfg, &mut infer, live, &shard.quarantine);
+                let mut stats = plock(&stats);
+                if crashed {
+                    stats.record_crash();
+                }
+                // the original attempt is one executed (failed) batch
+                // carrying this batch's errors; every bisect re-run
+                // burned a further forward pass
+                stats.record_failed_batch(outcome.errors);
+                for _ in 0..outcome.extra_runs {
+                    stats.record_batch();
+                }
+                stats.record_poisoned(outcome.poisoned);
+                for &d in &outcome.latencies {
+                    stats.record(d);
+                }
+                stats.record_shed(shed);
+                stats.observe_queue_depth(depth);
+                drop(stats);
+                // the bisection stall is not traffic evidence — exclude
+                // it from the adaptive controller's EWMA
+                ctl.reanchor(Instant::now());
+                if crashed && shard.retire_on_crash && !shard.cancel.load(Ordering::Acquire) {
+                    // retire this generation; the pool respawns a
+                    // replacement under backoff (every request this
+                    // shard held has been answered above)
+                    return ServeExit::Crashed;
+                }
             }
         }
     }

@@ -39,6 +39,7 @@ USAGE: repro <subcommand> [--flag value ...]
              --executor planned|naive --window fixed|adaptive --deadline-ms N
              --autoscale true|false --shards-max N
              --simd auto|on|off --pin-cores true|false
+             --faults \"seed=7;panic@pre:nth=9,every=16\"
              --requests N --concurrency N]                             (sharded serving)
   gen-data  [--count N --seed N --out DIR]                             (SynthVOC scenes)
 
@@ -64,6 +65,14 @@ drained — finish in-flight batches, lose nothing — when traffic
 recedes, between [serve.shards_min, --shards-max] (env LBW_SHARDS_MAX
 sets the default upper bound). Scaling never changes outputs, only
 placement. --shards stays the initial count.
+
+--faults arms the deterministic fault-injection harness (chaos drills;
+env LBW_FAULTS sets the default, off otherwise): a seeded schedule of
+panic/delay/nan faults at the pre-forward/post-forward/respond sites of
+the serve loop. Panics are caught by the shard fault domain: in-flight
+requests are answered (bisection isolates a poison request and
+quarantines it), the generation retires, and factory-backed pools
+respawn it under backoff with a circuit breaker.
 
 serve runs hermetically with the pure-Rust engines (shift/float): with
 no --ckpt it builds a synthetic He-initialized detector, so it works on
@@ -425,6 +434,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         "shards-max",
         "simd",
         "pin-cores",
+        "faults",
         "requests",
         "concurrency",
         "config",
@@ -446,6 +456,15 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let deadline_ms: u64 = args.parse_or("deadline-ms", cfg.serve.deadline_ms)?;
     server_cfg.deadline =
         (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
+    if let Some(spec) = args.get("faults") {
+        // explicit flag overrides both the config key and LBW_FAULTS;
+        // `--faults ""` is not accepted (omit the flag to disable)
+        server_cfg.faults = Some(
+            lbw_net::coordinator::server::FaultPlan::parse(spec)
+                .map_err(|e| anyhow!("--faults: {e}"))?,
+        );
+        println!("fault injection armed: {}", server_cfg.faults.as_ref().unwrap().spec());
+    }
     let autoscale: bool = args.parse_or("autoscale", cfg.serve.autoscale)?;
     if autoscale {
         // the config's shards_min/shards_max bounds apply whether
@@ -531,6 +550,15 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         println!(
             "autoscale: {ups} scale-up(s), {downs} drain(s), {} shard(s) live at exit",
             server.num_shards()
+        );
+    }
+    if server.crashes() + server.quarantine_hits() > 0 || server.degraded() {
+        println!(
+            "faults: {} crash(es), {} respawn(s), {} quarantine hit(s){}",
+            server.crashes(),
+            server.respawns(),
+            server.quarantine_hits(),
+            if server.degraded() { ", pool DEGRADED" } else { "" }
         );
     }
     drop(handle);

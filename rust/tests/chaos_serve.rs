@@ -1,0 +1,524 @@
+//! Fault-domain serving chaos tests: a seeded crash storm loses no
+//! responses and never changes the math (bitwise parity with a
+//! fault-free twin run), bisection isolates a poison request and
+//! quarantines it so it can never crash a second shard, the crash
+//! circuit breaker degrades a wedged pool instead of respawning
+//! forever, the respawn/retry backoff schedules are deterministic for
+//! a fixed seed, and the opt-in client retry rides out transient
+//! backpressure without outliving the admission deadline.
+//!
+//! Hermetic: mock engines throughout. Every `ServerConfig` pins
+//! `faults` explicitly so the CI chaos leg's `LBW_FAULTS` environment
+//! plan never leaks into these scenarios.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lbw_net::consts::{GRID, IMG, NUM_CLS};
+use lbw_net::coordinator::server::{
+    DetectServer, FaultPlan, RespawnPolicy, RetryPolicy, ServerConfig, ShardFactory, ShardSetup,
+};
+use lbw_net::detection::Detection;
+
+/// Pixel-1 sentinel: an image carrying it reproducibly panics the mock
+/// engine — the "poison request" of the bisection tests.
+const POISON_MARK: f32 = 1e9;
+
+/// Mock engine: echoes each image's pixel 0 as a class-1 detection
+/// score in cell 0 (the tag idiom from the elastic tests), sleeping
+/// `work` per batch. With `poison_mark` set, any image whose pixel 1
+/// carries the mark panics the whole batch — an organic engine crash,
+/// not an injected one. Tracks how many setups ever ran (= generations
+/// actually spawned, initial + respawns + scale-ups).
+fn mock_factory(
+    work: Duration,
+    poison_mark: Option<f32>,
+    setups: Arc<AtomicUsize>,
+) -> ShardFactory {
+    Box::new(move |_gen| {
+        setups.fetch_add(1, Ordering::SeqCst);
+        Box::new(move |_shard| {
+            Ok(Box::new(move |images: &[f32], batch: usize| {
+                if let Some(mark) = poison_mark {
+                    for bi in 0..batch {
+                        if images[bi * IMG * IMG * 3 + 1] == mark {
+                            panic!("engine choked on poison pixel (batch slot {bi})");
+                        }
+                    }
+                }
+                if work > Duration::ZERO {
+                    std::thread::sleep(work);
+                }
+                let mut cls = vec![0.0f32; batch * GRID * GRID * NUM_CLS];
+                for bi in 0..batch {
+                    let v = images[bi * IMG * IMG * 3];
+                    for cell in 0..GRID * GRID {
+                        cls[(bi * GRID * GRID + cell) * NUM_CLS] = 1.0;
+                    }
+                    cls[bi * GRID * GRID * NUM_CLS] = 1.0 - v;
+                    cls[bi * GRID * GRID * NUM_CLS + 1] = v;
+                }
+                let reg = vec![0.0f32; batch * GRID * GRID * 4];
+                Ok((cls, reg))
+            }))
+        }) as ShardSetup
+    })
+}
+
+/// Mock engine that panics on every batch: the wedged pool of the
+/// circuit-breaker test.
+fn wedged_factory(setups: Arc<AtomicUsize>) -> ShardFactory {
+    Box::new(move |_gen| {
+        setups.fetch_add(1, Ordering::SeqCst);
+        Box::new(move |_shard| {
+            Ok(Box::new(move |images: &[f32], _batch: usize| {
+                // a served batch always carries at least one padded
+                // image, so this fires on every single execution
+                assert!(images.is_empty(), "engine wedged: every batch dies");
+                Ok((Vec::new(), Vec::new()))
+            }))
+        }) as ShardSetup
+    })
+}
+
+fn tagged_image(v: f32) -> Vec<f32> {
+    let mut img = vec![0.0f32; IMG * IMG * 3];
+    img[0] = v;
+    img
+}
+
+fn poison_image(v: f32) -> Vec<f32> {
+    let mut img = tagged_image(v);
+    img[1] = POISON_MARK;
+    img
+}
+
+/// Post-run bookkeeping captured by [`run_burst`].
+struct BurstBooks {
+    crashes: u64,
+    respawns: u64,
+    errors: u64,
+    count: usize,
+    quarantine_hits: u64,
+    degraded: bool,
+    generations: usize,
+    summary: String,
+}
+
+/// Drive `burst` concurrent tagged requests through a fresh 1-shard
+/// elastic server under `cfg`, panicking if any response is lost, and
+/// return the detections (in tag order) plus the fault books. Waits —
+/// while the handle still keeps the queue open — for every recorded
+/// crash to have respawned before reading the counters.
+fn run_burst(cfg: ServerConfig, burst: usize) -> (Vec<Vec<Detection>>, BurstBooks) {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let factory = mock_factory(Duration::from_millis(1), None, setups.clone());
+    let server = DetectServer::start_elastic(cfg, factory).unwrap();
+    let handle = server
+        .handle()
+        .with_retry(RetryPolicy { max_attempts: 4, backoff: Duration::from_millis(2), seed: 9 });
+    let mut clients = Vec::new();
+    for k in 0..burst {
+        let h = handle.clone();
+        let v = 0.5 + 0.4 * (k as f32 / burst as f32);
+        clients.push((v, std::thread::spawn(move || h.detect(tagged_image(v)))));
+    }
+    let mut out = Vec::new();
+    for (v, c) in clients {
+        out.push(c.join().unwrap().unwrap_or_else(|e| panic!("tag {v} lost to crash storm: {e}")));
+    }
+    // a crash respawns asynchronously on the dying shard's own thread;
+    // the live handle keeps the queue open, so every crash must settle
+    // into a respawn — poll rather than race the supervisor
+    let t0 = Instant::now();
+    while server.respawns() < server.crashes() && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let agg = handle.latency();
+    let books = BurstBooks {
+        crashes: server.crashes(),
+        respawns: server.respawns(),
+        errors: agg.errors(),
+        count: agg.count(),
+        quarantine_hits: server.quarantine_hits(),
+        degraded: server.degraded(),
+        generations: setups.load(Ordering::SeqCst),
+        summary: handle.latency_summary(),
+    };
+    drop(handle);
+    server.shutdown();
+    (out, books)
+}
+
+fn storm_cfg(faults: Option<FaultPlan>) -> ServerConfig {
+    ServerConfig {
+        shards: 1,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+        queue_depth: 64,
+        submit_timeout: Duration::from_secs(30),
+        faults,
+        respawn: RespawnPolicy {
+            base: Duration::from_millis(1),
+            max: Duration::from_millis(20),
+            breaker: 8,
+            seed: 42,
+        },
+        ..Default::default()
+    }
+}
+
+/// The tentpole acceptance test: a seeded panic storm — every second
+/// batch of every generation dies pre-forward — must lose nothing,
+/// duplicate nothing, and change nothing. Survivor detections are
+/// bitwise identical to a fault-free twin run, every crash respawned a
+/// fresh generation, and the books stay truthful.
+#[test]
+fn crash_storm_loses_nothing_and_matches_fault_free_run() {
+    let burst = 40;
+    let (clean_dets, clean) = run_burst(storm_cfg(None), burst);
+    assert_eq!(clean.crashes, 0, "fault-free twin must not crash");
+    assert_eq!(clean.errors, 0);
+
+    let plan = FaultPlan::parse("seed=5;panic@pre:nth=2,every=2,count=1000000").unwrap();
+    let (storm_dets, storm) = run_burst(storm_cfg(Some(plan)), burst);
+
+    // the storm actually stormed, and the supervisor kept up: every
+    // crash retired its generation and a replacement spawned
+    assert!(storm.crashes >= 1, "the seeded plan must fire: {}", storm.summary);
+    assert!(
+        storm.respawns >= storm.crashes,
+        "every crash respawns while the queue is open: {} crashes, {} respawns",
+        storm.crashes,
+        storm.respawns
+    );
+    assert_eq!(
+        storm.generations as u64,
+        1 + storm.respawns,
+        "factory setups = initial shard + one per respawn"
+    );
+    assert!(!storm.degraded, "alternating healthy batches reset the crash streak");
+
+    // truthful books: injected faults cost latency, never answers —
+    // every request served exactly once, zero errors, no quarantine
+    // (the panics are the harness's doing, not the requests' content)
+    assert_eq!(storm.errors, 0, "{}", storm.summary);
+    assert_eq!(storm.count, burst, "every request lands in the served count");
+    assert_eq!(storm.quarantine_hits, 0);
+
+    // bitwise parity with the undisturbed twin: crash recovery and
+    // bisection re-runs never change the math
+    assert!(clean_dets.iter().any(|d| !d.is_empty()), "parity would be vacuous");
+    for (k, (s, c)) in storm_dets.iter().zip(&clean_dets).enumerate() {
+        assert_eq!(s.len(), c.len(), "tag {k}: detection count");
+        for (a, b) in s.iter().zip(c) {
+            assert_eq!(a.class, b.class, "tag {k}");
+            assert_eq!(
+                a.score.to_bits(),
+                b.score.to_bits(),
+                "tag {k}: crash recovery changed the score"
+            );
+            for (ga, gb) in [
+                (a.bbox.x1, b.bbox.x1),
+                (a.bbox.y1, b.bbox.y1),
+                (a.bbox.x2, b.bbox.x2),
+                (a.bbox.y2, b.bbox.y2),
+            ] {
+                assert_eq!(ga.to_bits(), gb.to_bits(), "tag {k}: bbox");
+            }
+        }
+    }
+}
+
+/// A request whose content reproducibly panics the engine is isolated
+/// by bisection, answered with a poisoned error, and quarantined — the
+/// innocents sharing its batch are served, and the same bytes are
+/// rejected at admission instead of ever crashing a second shard.
+#[test]
+fn poison_request_is_isolated_served_around_and_quarantined() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig {
+        shards: 1,
+        max_batch: 8,
+        batch_window: Duration::from_millis(30),
+        queue_depth: 64,
+        submit_timeout: Duration::from_secs(30),
+        faults: None,
+        respawn: RespawnPolicy {
+            base: Duration::from_millis(1),
+            max: Duration::from_millis(10),
+            breaker: 5,
+            seed: 7,
+        },
+        ..Default::default()
+    };
+    let factory = mock_factory(Duration::ZERO, Some(POISON_MARK), setups);
+    let server = DetectServer::start_elastic(cfg, factory).unwrap();
+    let handle = server.handle();
+
+    let poison = poison_image(0.9);
+    let poison_client = {
+        let h = handle.clone();
+        let img = poison.clone();
+        std::thread::spawn(move || h.detect(img))
+    };
+    let innocents: Vec<_> = (0..7)
+        .map(|k| {
+            let h = handle.clone();
+            let v = 0.5 + 0.05 * k as f32;
+            (v, std::thread::spawn(move || h.detect(tagged_image(v))))
+        })
+        .collect();
+
+    // exactly one request is the problem, and only it pays for it
+    let err = poison_client.join().unwrap().unwrap_err();
+    assert!(err.to_string().contains("poisoned request"), "{err}");
+    for (v, c) in innocents {
+        let dets = c.join().unwrap().unwrap_or_else(|e| panic!("innocent {v} lost: {e}"));
+        assert_eq!(dets.len(), 1, "innocent {v}");
+        assert!((dets[0].score - v).abs() < 1e-6, "innocent {v} got score {}", dets[0].score);
+    }
+    assert!(server.crashes() >= 1, "the poison batch crashed the shard");
+    let agg = handle.latency();
+    assert_eq!(agg.errors(), 1, "only the poison request errors");
+    assert_eq!(agg.poisoned(), 1, "and it is booked as poisoned");
+
+    // the generation respawned before we probe it again
+    let t0 = Instant::now();
+    while server.respawns() < server.crashes() && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(server.respawns() >= server.crashes());
+
+    // the same bytes never crash a second shard: rejected at admission
+    let crashes_before = server.crashes();
+    let err = handle.detect(poison).unwrap_err();
+    assert!(err.to_string().contains("quarantined"), "{err}");
+    assert_eq!(server.quarantine_hits(), 1);
+    assert_eq!(server.crashes(), crashes_before, "quarantine stopped the repeat crash");
+    // and the healed pool still serves fresh traffic
+    let dets = handle.detect(tagged_image(0.77)).unwrap();
+    assert_eq!(dets.len(), 1);
+
+    drop(handle);
+    server.shutdown();
+}
+
+/// A pool whose engine dies on every batch must not respawn forever:
+/// after `breaker` consecutive crash-respawns the circuit breaker
+/// trips, the pool surfaces `degraded`, and respawning stops.
+#[test]
+fn circuit_breaker_degrades_pool_after_consecutive_crashes() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig {
+        shards: 1,
+        max_batch: 1,
+        batch_window: Duration::ZERO,
+        queue_depth: 8,
+        submit_timeout: Duration::from_secs(5),
+        faults: None,
+        respawn: RespawnPolicy {
+            base: Duration::from_micros(200),
+            max: Duration::from_millis(2),
+            breaker: 3,
+            seed: 1,
+        },
+        ..Default::default()
+    };
+    let server = DetectServer::start_elastic(cfg, wedged_factory(setups.clone())).unwrap();
+    let handle = server.handle();
+
+    // three distinct requests (distinct content dodges the quarantine)
+    // ride three consecutive generations into the ground; each is
+    // still answered — isolated as a poisoned singleton, never lost
+    for k in 0..3 {
+        let err = handle.detect(tagged_image(0.6 + 0.01 * k as f32)).unwrap_err();
+        assert!(err.to_string().contains("poisoned request"), "request {k}: {err}");
+    }
+
+    // breaker = 3: crashes 1 and 2 respawn (instant, then ~base), the
+    // third trips the breaker instead of spawning generation 4
+    let t0 = Instant::now();
+    while !server.degraded() && t0.elapsed() < Duration::from_secs(3) {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(server.degraded(), "three consecutive crash-respawns must trip the breaker");
+    assert_eq!(server.crashes(), 3);
+    assert_eq!(server.respawns(), 2, "the breaker stopped the third respawn");
+    assert_eq!(setups.load(Ordering::SeqCst), 3, "initial + two respawned generations");
+    assert!(handle.latency_summary().contains("DEGRADED"), "{}", handle.latency_summary());
+    let agg = handle.latency();
+    assert_eq!(agg.errors(), 3, "every doomed request was answered, not dropped");
+    assert_eq!(agg.poisoned(), 3);
+
+    // with zero live shards the queue closes — clients get an error,
+    // never a hang
+    assert!(handle.detect(tagged_image(0.9)).is_err());
+
+    drop(handle);
+    server.shutdown();
+}
+
+/// The respawn and retry backoff schedules are pure functions of
+/// (policy, seed): same seed ⇒ same schedule, first step immediate,
+/// doubling growth that stays monotone under jitter, clamped at `max`.
+#[test]
+fn backoff_schedules_are_deterministic_jittered_and_clamped() {
+    let a = RespawnPolicy {
+        base: Duration::from_millis(10),
+        max: Duration::from_millis(400),
+        breaker: 5,
+        seed: 0xfeed,
+    };
+    assert_eq!(a.delay(0), Duration::ZERO);
+    assert_eq!(a.delay(1), Duration::ZERO, "the first respawn is immediate");
+    let twin = RespawnPolicy {
+        base: Duration::from_millis(10),
+        max: Duration::from_millis(400),
+        breaker: 5,
+        seed: 0xfeed,
+    };
+    let sched: Vec<Duration> = (1..=12).map(|n| a.delay(n)).collect();
+    let again: Vec<Duration> = (1..=12).map(|n| twin.delay(n)).collect();
+    assert_eq!(sched, again, "same seed, same schedule");
+    for w in sched.windows(2) {
+        assert!(w[0] <= w[1], "jitter never breaks monotonicity: {sched:?}");
+    }
+    assert!(
+        sched[1] >= Duration::from_millis(10) && sched[1] <= Duration::from_millis(15),
+        "second respawn waits base + at most 50% jitter, got {:?}",
+        sched[1]
+    );
+    assert_eq!(*sched.last().unwrap(), Duration::from_millis(400), "clamped at max");
+    let other = RespawnPolicy { seed: 0xbeef, ..a.clone() };
+    assert!(
+        (2..=6).any(|n| other.delay(n) != a.delay(n)),
+        "a different seed must reshuffle the jitter"
+    );
+
+    let r = RetryPolicy { max_attempts: 5, backoff: Duration::from_millis(4), seed: 3 };
+    let r_twin = RetryPolicy { max_attempts: 5, backoff: Duration::from_millis(4), seed: 3 };
+    assert_eq!(r.delay(1), Duration::ZERO, "the first attempt never waits");
+    let sched: Vec<Duration> = (1..=8).map(|n| r.delay(n)).collect();
+    let again: Vec<Duration> = (1..=8).map(|n| r_twin.delay(n)).collect();
+    assert_eq!(sched, again);
+    for w in sched.windows(2) {
+        assert!(w[0] <= w[1], "{sched:?}");
+    }
+    assert!(
+        sched[1] >= Duration::from_millis(4) && sched[1] <= Duration::from_millis(6),
+        "{:?}",
+        sched[1]
+    );
+}
+
+/// Opt-in retry rides out transient backpressure: a handle with a
+/// policy keeps a client alive through a full queue, while `try_detect`
+/// (and a plain handle's short submit timeout) stay single-shot.
+#[test]
+fn retry_rides_out_backpressure_and_try_detect_stays_single_shot() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig {
+        shards: 1,
+        max_batch: 1,
+        batch_window: Duration::ZERO,
+        queue_depth: 1,
+        submit_timeout: Duration::from_millis(1),
+        faults: None,
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_elastic(cfg, mock_factory(Duration::from_millis(40), None, setups))
+            .unwrap();
+    let handle = server.handle();
+
+    // wedge the server: one request in flight (40ms of engine time),
+    // one parked in the only queue slot
+    let c1 = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.detect(tagged_image(0.5)))
+    };
+    std::thread::sleep(Duration::from_millis(10));
+    let c2 = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.detect(tagged_image(0.6)))
+    };
+    std::thread::sleep(Duration::from_millis(5));
+
+    // single-shot paths fail fast with backpressure
+    let err = handle.try_detect(tagged_image(0.7)).unwrap_err();
+    assert!(err.to_string().contains("queue full"), "{err}");
+    let err = handle.detect(tagged_image(0.7)).unwrap_err();
+    assert!(err.to_string().contains("queue full"), "{err}");
+
+    // the retrying handle outlasts the wedge and gets a real answer
+    let retrying = handle
+        .clone()
+        .with_retry(RetryPolicy { max_attempts: 30, backoff: Duration::from_millis(4), seed: 11 });
+    let dets = retrying.detect(tagged_image(0.8)).unwrap();
+    assert_eq!(dets.len(), 1);
+    assert!((dets[0].score - 0.8).abs() < 1e-6);
+
+    c1.join().unwrap().unwrap();
+    c2.join().unwrap().unwrap();
+    drop(handle);
+    drop(retrying);
+    server.shutdown();
+}
+
+/// Retry is deadline-aware: once the elapsed time plus the next
+/// backoff would cross the server's admission deadline, the client
+/// gets its error back instead of sleeping toward a response the
+/// server would shed anyway.
+#[test]
+fn retry_gives_up_before_the_admission_deadline() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig {
+        shards: 1,
+        max_batch: 1,
+        batch_window: Duration::ZERO,
+        queue_depth: 1,
+        submit_timeout: Duration::from_millis(1),
+        deadline: Some(Duration::from_millis(30)),
+        faults: None,
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_elastic(cfg, mock_factory(Duration::from_millis(250), None, setups))
+            .unwrap();
+    let handle = server.handle();
+
+    let c1 = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.detect(tagged_image(0.5)))
+    };
+    std::thread::sleep(Duration::from_millis(10));
+    let c2 = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.detect(tagged_image(0.6)))
+    };
+    std::thread::sleep(Duration::from_millis(5));
+
+    // a generous attempt budget, but the 30ms admission deadline cuts
+    // the retry loop off long before the 250ms engine stall resolves
+    let retrying = handle
+        .clone()
+        .with_retry(RetryPolicy { max_attempts: 50, backoff: Duration::from_millis(8), seed: 4 });
+    let t0 = Instant::now();
+    let err = retrying.detect(tagged_image(0.9)).unwrap_err();
+    let gave_up_after = t0.elapsed();
+    assert!(err.to_string().contains("queue full"), "{err}");
+    assert!(
+        gave_up_after < Duration::from_millis(150),
+        "retry must give up near the 30ms deadline, took {gave_up_after:?}"
+    );
+
+    // the in-flight request was popped fresh and serves; the parked one
+    // goes stale in the queue and is shed at pop — answered, not lost
+    c1.join().unwrap().unwrap();
+    assert!(c2.join().unwrap().is_err(), "the stale queued request is shed");
+    drop(handle);
+    drop(retrying);
+    server.shutdown();
+}

@@ -17,7 +17,14 @@ to:
     hosts without AVX2/NEON (no "on" rows) and on pre-SIMD bench files
     (rows without a "simd" field are implicitly "off"); but "on" rows
     WITHOUT the forced-scalar baseline row are a failure — the sweep
-    lost its denominator.
+    lost its denominator;
+  * fault rows (`"faults"` field present): no row may record
+    `crashes > 0` together with `lost > 0` — a caught panic must never
+    cost a client its response; crashes without respawns mean the
+    supervisor failed to replace a dead generation; and a `"storm"`
+    row with zero crashes means the injection harness never fired.
+    Rows carrying a `"faults"` marker other than `"none"` are excluded
+    from the healthy closed-loop baselines above.
 
 Floors are overridable via env (GATE_PLANNED_RATIO_MIN,
 GATE_THREAD_RATIO_MIN, GATE_SIMD_RATIO_MIN) so a deliberate trade-off
@@ -64,6 +71,9 @@ def closed_loop_rate(rows, executor, engine, threads, simd=None):
             # trained-checkpoint cells are a separate dimension; the
             # closed-loop baselines compare synth rows only
             and r.get("checkpoint") in (None, "synth")
+            # chaos cells measure the fault domain, not the engine —
+            # only fault-free rows are baseline material
+            and r.get("faults") in (None, "none")
             and (simd is None or r.get("simd", "off") == simd)
         ):
             return r.get("imgs_per_s", 0.0)
@@ -115,6 +125,28 @@ def check(rows):
                 f"< {SIMD_RATIO_MIN}x floor"
             )
     for r in rows:
+        if "faults" in r:
+            crashes = r.get("crashes", 0)
+            respawns = r.get("respawns", 0)
+            lost = r.get("lost", 0)
+            label = f"fault row ({r.get('engine')}, faults {r.get('faults')})"
+            if crashes > 0 and lost > 0:
+                failures.append(
+                    f"{label}: {crashes} crash(es) with {lost} lost "
+                    "response(s) — a caught panic must never cost a client "
+                    "its response"
+                )
+            if crashes > 0 and respawns < 1:
+                failures.append(
+                    f"{label}: {crashes} crash(es) but 0 respawns — the "
+                    "pool must replace crashed generations"
+                )
+            if r.get("faults") == "storm" and crashes < 1:
+                failures.append(
+                    f"{label}: storm row recorded no crashes — the "
+                    "fault-injection harness never fired"
+                )
+    for r in rows:
         if r.get("shards") == "auto":
             ups = r.get("scale_ups", 0)
             downs = r.get("scale_downs", 0)
@@ -155,6 +187,18 @@ def healthy_rows():
             scale_ups=2,
             scale_downs=1,
         )
+    )
+    # the fault sweep's twin rows: fault-free control + panic storm
+    # (crashes happened, every one respawned, nothing lost)
+    rows.append(
+        dict(base, executor="planned", engine="shift6", shards=1, threads=1,
+             imgs_per_s=290.0, simd="on", faults="none", crashes=0,
+             respawns=0, lost=0)
+    )
+    rows.append(
+        dict(base, executor="planned", engine="shift6", shards=1, threads=1,
+             imgs_per_s=240.0, simd="on", faults="storm", crashes=3,
+             respawns=3, lost=0)
     )
     return rows
 
@@ -208,6 +252,36 @@ def self_test():
     fails = check(doctored)
     assert any("no denominator" in f for f in fails), fails
 
+    # injected regression 7: the crash storm lost responses
+    doctored = healthy_rows()
+    for r in doctored:
+        if r.get("faults") == "storm":
+            r["lost"] = 2
+    fails = check(doctored)
+    assert any("lost" in f for f in fails), fails
+
+    # injected regression 8: crashes happened but nothing respawned
+    doctored = healthy_rows()
+    for r in doctored:
+        if r.get("faults") == "storm":
+            r["respawns"] = 0
+    fails = check(doctored)
+    assert any("0 respawns" in f for f in fails), fails
+
+    # injected regression 9: the storm row shows the harness never fired
+    doctored = healthy_rows()
+    for r in doctored:
+        if r.get("faults") == "storm":
+            r["crashes"] = 0
+            r["respawns"] = 0
+    fails = check(doctored)
+    assert any("never fired" in f for f in fails), fails
+
+    # a pre-fault bench file (no "faults" rows at all) must still pass:
+    # the fault gate only judges rows that carry the marker
+    prefault = [r for r in healthy_rows() if "faults" not in r]
+    assert check(prefault) == [], "pre-fault trajectory must pass (gate skipped)"
+
     # a pre-SIMD bench file (no "simd" fields at all) must still pass:
     # the simd gate skips, the legacy gates keep working
     stripped = []
@@ -239,9 +313,15 @@ def main(argv):
         if closed_loop_rate(rows, "planned", "shift6", 1, simd="on") is not None
         else "simd gate skipped (no simd-on rows)"
     )
+    fault_note = (
+        "fault rows lose nothing"
+        if any("faults" in r for r in rows)
+        else "fault gate skipped (no fault rows)"
+    )
     print(
         f"bench gate passed on {path}: planned/naive >= {PLANNED_RATIO_MIN}x, "
-        f"4t/1t >= {THREAD_RATIO_MIN}x, {simd_note}, autoscale rows show scale events"
+        f"4t/1t >= {THREAD_RATIO_MIN}x, {simd_note}, autoscale rows show "
+        f"scale events, {fault_note}"
     )
     return 0
 
