@@ -10,18 +10,23 @@
 #                   executors, 1 shard, tile pools at 1 and 4 threads,
 #                   the adaptive-vs-fixed window cells under open-loop
 #                   steady/bursty load, the elastic fixed-vs-autoscale
-#                   cells under bursty load, plus the fault sweep: the
+#                   cells under bursty load, the fault sweep: the
 #                   closed-loop cell under a seeded crash-storm plan
-#                   with retrying clients) — fast enough for CI;
-#                   kernel, threading, batching, autoscaling, or
-#                   crash-recovery regressions fail loudly here
+#                   with retrying clients, plus the registry cells: a
+#                   mixed-tenant two-model cell under 3:1 weighted-fair
+#                   shares and a hot-swap-under-load cell) — fast
+#                   enough for CI; kernel, threading, batching,
+#                   autoscaling, crash-recovery, tenant-fairness, or
+#                   swap regressions fail loudly here
 #   make bench-gate   regression-gate the fresh BENCH_serve.json
 #                   (self-tests the gate on doctored rows first, then
 #                   fails if planned/naive < 2x, 4t/1t < 1.5x, the
 #                   shift-engine simd/scalar ratio < 1.3x when SIMD
 #                   rows are present, an autoscale row shows no scale
-#                   events, or a fault row lost a response / never
-#                   respawned / never fired its storm plan)
+#                   events, a fault row lost a response / never
+#                   respawned / never fired its storm plan, a hot-swap
+#                   row lost a response, or a tenant row starved a
+#                   listed class)
 #   make bench-kernels  scalar-vs-SIMD GEMM micro-bench (f32 + shift
 #                   kernels at the width-8/13 shapes, bitwise parity
 #                   checked, GFLOP-equiv + speedup printed)

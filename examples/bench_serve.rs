@@ -58,6 +58,16 @@
 //! through the identical serving stack. The summary prints that ratio
 //! per engine.
 //!
+//! Since the multi-model PR a **registry sweep** drives two cells
+//! through a `ModelRegistry`: a mixed-tenant cell (6-bit + 2-bit
+//! models behind one apportioned shard budget, tenant shares 3:1)
+//! whose row carries `"models"`, `"tenant_mix"`, `"tenant_counts"`,
+//! `"tenant_p95_ms"`, and `"resident_weight_bytes"`, and a
+//! hot-swap-under-load cell whose row carries `"swaps"` and `"lost"`.
+//! The gate fails a swap row that lost a request and a tenant row
+//! with a starved tenant; rows carrying `"models"` sit outside the
+//! single-model closed-loop baselines.
+//!
 //! Run with: `cargo run --release --example bench_serve`
 //! Smoke mode (CI): `cargo run --release --example bench_serve -- --smoke`
 //! (reduced request count + 1-shard cells only; also honours the
@@ -70,6 +80,8 @@ use lbw_net::coordinator::autoscale::AutoscaleConfig;
 use lbw_net::coordinator::server::{
     DetectServer, Executor, FaultPlan, RetryPolicy, ServerConfig, WindowMode,
 };
+use lbw_net::coordinator::metrics::LatencyStats;
+use lbw_net::coordinator::registry::{resident_weight_bytes, ModelDef, ModelRegistry};
 use lbw_net::coordinator::trainer::{HermeticTrainer, TrainConfig, TrainMethod};
 use lbw_net::data::{generate_scene, SceneConfig};
 use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
@@ -105,6 +117,10 @@ struct Cell {
     /// the injected panic schedule, `"none"` for the fault-free twin);
     /// rows without the field predate or sit outside the fault sweep.
     faults: Option<FaultCell>,
+    /// Multi-model registry cell: `Some` marks rows driven through a
+    /// `ModelRegistry` (tenant mix and/or hot swap); such rows carry a
+    /// `"models"` field and sit outside the closed-loop baselines.
+    multi: Option<MultiCell>,
     wall_s: f64,
     imgs_per_s: f64,
     p50_ms: f64,
@@ -131,6 +147,29 @@ struct FaultCell {
     crashes: u64,
     respawns: u64,
     lost: u64,
+}
+
+/// The multi-model registry dimensions. Every registry row carries
+/// `"models"` — `scripts/bench_gate.py` keeps such rows out of the
+/// single-model closed-loop baselines and instead enforces the tenant
+/// and swap rules on them.
+struct MultiCell {
+    /// The registry roster, e.g. `"hi=shift6+lo=shift2"`.
+    models: String,
+    /// Total resident quantized weight bytes across the registry — the
+    /// LBW packing story measured, not asserted.
+    resident_bytes: usize,
+    /// Weighted-fair cell: the tenant share spec (e.g. `"3:1"`) plus
+    /// per-tenant dequeue counts and client-side p95, both merged
+    /// across every model cell in the registry.
+    tenant_mix: Option<String>,
+    tenant_counts: Vec<u64>,
+    tenant_p95_ms: Vec<f64>,
+    /// Hot-swap cell: checkpoint swaps landed mid-run, and closed-loop
+    /// requests whose client got an error back — the gate fails any
+    /// swap row with `lost > 0` (a swap must never cost a response).
+    swaps: Option<u64>,
+    lost: Option<u64>,
 }
 
 fn drive(server: &DetectServer, scenes: &[Vec<f32>], requests: usize) -> Result<Duration> {
@@ -273,6 +312,7 @@ fn main() -> Result<()> {
                                 Executor::Naive => "off",
                             },
                             faults: None,
+                            multi: None,
                             wall_s: wall.as_secs_f64(),
                             imgs_per_s: agg.throughput(wall),
                             p50_ms: snap.percentile_ms(50.0),
@@ -344,6 +384,7 @@ fn main() -> Result<()> {
                 checkpoint: "synth",
                 simd: "off",
                 faults: None,
+                multi: None,
                 wall_s: wall.as_secs_f64(),
                 imgs_per_s: agg.throughput(wall),
                 p50_ms: snap.percentile_ms(50.0),
@@ -430,6 +471,7 @@ fn main() -> Result<()> {
                 checkpoint: "synth",
                 simd: detected,
                 faults: None,
+                multi: None,
                 wall_s: wall.as_secs_f64(),
                 imgs_per_s: agg.throughput(wall),
                 p50_ms: snap.percentile_ms(50.0),
@@ -525,6 +567,7 @@ fn main() -> Result<()> {
             checkpoint: "synth",
             simd: detected,
             faults: None,
+            multi: None,
             wall_s: wall.as_secs_f64(),
             imgs_per_s: agg.throughput(wall),
             p50_ms: snap.percentile_ms(50.0),
@@ -613,6 +656,7 @@ fn main() -> Result<()> {
             checkpoint: "trained",
             simd: detected,
             faults: None,
+            multi: None,
             wall_s: wall.as_secs_f64(),
             imgs_per_s: agg.throughput(wall),
             p50_ms: snap.percentile_ms(50.0),
@@ -711,6 +755,7 @@ fn main() -> Result<()> {
             checkpoint: "synth",
             simd: detected,
             faults: Some(FaultCell { spec: fault_name, crashes, respawns, lost }),
+            multi: None,
             wall_s: wall.as_secs_f64(),
             imgs_per_s: agg.throughput(wall),
             p50_ms: snap.percentile_ms(50.0),
@@ -753,6 +798,252 @@ fn main() -> Result<()> {
         );
     }
 
+    // ---- multi-model multi-tenant cell (closed loop) ----
+    // one ModelRegistry serving a 6-bit and a 2-bit model behind one
+    // apportioned shard budget, with two weighted-fair tenant classes
+    // (shares 3:1). Clients split across model x tenant; the row
+    // records per-tenant dequeue counts and client-side p95 (merged
+    // across both model cells) plus the registry's total resident
+    // quantized weight bytes — the LBW packing story: both models
+    // together occupy a fraction of one float model's weights. The
+    // gate fails the row if any listed tenant saw zero dequeues.
+    println!("\n--- multi-model tenant cell: registry hi=shift6 + lo=shift2, tenants 3:1 ---");
+    {
+        let base = ServerConfig {
+            shards: 2, // apportioned: one per model
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+            queue_depth: 256,
+            executor: Executor::Planned,
+            tenants: vec![3, 1],
+            faults: None,
+            ..Default::default()
+        };
+        let defs = vec![
+            ModelDef {
+                name: "hi".into(),
+                spec: spec.clone(),
+                ckpt: ckpt.clone(),
+                engine: EngineKind::Shift { bits: 6 },
+            },
+            ModelDef {
+                name: "lo".into(),
+                spec: spec.clone(),
+                ckpt: synthetic_checkpoint(&spec, 2027, 2),
+                engine: EngineKind::Shift { bits: 2 },
+            },
+        ];
+        let registry = ModelRegistry::start(defs, &base)?;
+        let router = registry.router();
+        let t0 = Instant::now();
+        let per = requests / CONCURRENCY;
+        let names = ["hi", "lo"];
+        let mut clients = Vec::new();
+        for c in 0..CONCURRENCY {
+            let r = router.clone();
+            let imgs: Vec<Vec<f32>> =
+                (0..per).map(|i| scenes[(c * per + i) % scenes.len()].clone()).collect();
+            let model = names[c % names.len()];
+            let tenant = c % 2;
+            clients.push(std::thread::spawn(move || -> Result<()> {
+                for img in imgs {
+                    r.detect(model, tenant, img)?;
+                }
+                Ok(())
+            }));
+        }
+        for c in clients {
+            c.join().expect("tenant client")?;
+        }
+        let wall = t0.elapsed();
+        let mut agg = LatencyStats::new();
+        let mut tenant_stats = vec![LatencyStats::new(); 2];
+        let mut tenant_counts = vec![0u64; 2];
+        let mut shard_counts: Vec<usize> = Vec::new();
+        for m in names {
+            let cell = registry.server(m)?;
+            agg.merge(&cell.handle().latency());
+            for (t, s) in cell.tenant_latencies().iter().enumerate() {
+                tenant_stats[t].merge(s);
+            }
+            for (t, &n) in cell.tenant_served().iter().enumerate() {
+                tenant_counts[t] += n;
+            }
+            shard_counts.extend(cell.shard_latencies().iter().map(|s| s.count()));
+        }
+        let snap = agg.snapshot();
+        let tenant_p95_ms: Vec<f64> =
+            tenant_stats.iter().map(|s| s.percentile_ms(95.0)).collect();
+        let resident = registry.total_resident_bytes();
+        println!(
+            "resident weights: hi {} B (6-bit) + lo {} B (2-bit) = {} B vs one float model {} B",
+            registry.resident_bytes("hi")?,
+            registry.resident_bytes("lo")?,
+            resident,
+            resident_weight_bytes(spec.num_params, EngineKind::Float)
+        );
+        let cell = Cell {
+            executor: "planned".to_string(),
+            engine: "multi".to_string(),
+            shards: 2,
+            threads: 1,
+            window: "fixed".to_string(),
+            window_ms: 2,
+            load: None,
+            shed: 0,
+            auto: None,
+            checkpoint: "synth",
+            simd: detected,
+            faults: None,
+            multi: Some(MultiCell {
+                models: "hi=shift6+lo=shift2".to_string(),
+                resident_bytes: resident,
+                tenant_mix: Some("3:1".to_string()),
+                tenant_counts: tenant_counts.clone(),
+                tenant_p95_ms: tenant_p95_ms.clone(),
+                swaps: None,
+                lost: None,
+            }),
+            wall_s: wall.as_secs_f64(),
+            imgs_per_s: agg.throughput(wall),
+            p50_ms: snap.percentile_ms(50.0),
+            p95_ms: snap.percentile_ms(95.0),
+            p99_ms: snap.percentile_ms(99.0),
+            mean_batch: agg.mean_batch(),
+            shard_counts,
+        };
+        println!(
+            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  (tenants 3:1, dequeues {:?}, p95 {:?} ms)",
+            cell.executor,
+            cell.engine,
+            cell.shards,
+            cell.threads,
+            "2ms",
+            cell.imgs_per_s,
+            cell.p50_ms,
+            cell.p95_ms,
+            cell.p99_ms,
+            cell.mean_batch,
+            tenant_counts,
+            tenant_p95_ms.iter().map(|p| (p * 100.0).round() / 100.0).collect::<Vec<_>>()
+        );
+        drop(router);
+        registry.shutdown();
+        cells.push(cell);
+    }
+
+    // ---- hot-swap-under-load cell (closed loop) ----
+    // one registry model, two shards, the classic closed loop — with
+    // two checkpoint swaps landed while the burst is in flight. Each
+    // swap loads + quantizes off the serving path, spawns a fresh
+    // generation, and drains the old via the cancel-before-pop
+    // handshake, so every in-flight request is answered by exactly one
+    // generation: the row must show `swaps >= 1` with `lost == 0`
+    // (the gate enforces both).
+    println!("\n--- hot-swap-under-load cell: registry m6=shift6, 2 shards ---");
+    {
+        let base = ServerConfig {
+            shards: 2,
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_millis(2),
+            queue_depth: 256,
+            executor: Executor::Planned,
+            faults: None,
+            ..Default::default()
+        };
+        let registry = ModelRegistry::start(
+            vec![ModelDef {
+                name: "m6".into(),
+                spec: spec.clone(),
+                ckpt: ckpt.clone(),
+                engine: EngineKind::Shift { bits: 6 },
+            }],
+            &base,
+        )?;
+        let handle = registry.handle("m6")?;
+        let t0 = Instant::now();
+        let per = requests / CONCURRENCY;
+        let mut clients = Vec::new();
+        for c in 0..CONCURRENCY {
+            let h = handle.clone();
+            let imgs: Vec<Vec<f32>> =
+                (0..per).map(|i| scenes[(c * per + i) % scenes.len()].clone()).collect();
+            clients.push(std::thread::spawn(move || {
+                // count errors instead of bailing: a request answered
+                // with an error across a swap is a lost response
+                let mut lost = 0u64;
+                for img in imgs {
+                    if h.detect(img).is_err() {
+                        lost += 1;
+                    }
+                }
+                lost
+            }));
+        }
+        let mut swaps = 0u64;
+        for _ in 0..2 {
+            std::thread::sleep(Duration::from_millis(5));
+            registry.swap("m6", &ckpt)?;
+            swaps += 1;
+        }
+        let lost: u64 = clients.into_iter().map(|c| c.join().expect("swap client")).sum();
+        let wall = t0.elapsed();
+        let cell_srv = registry.server("m6")?;
+        let agg = cell_srv.handle().latency();
+        let snap = agg.snapshot();
+        let shard_counts: Vec<usize> =
+            cell_srv.shard_latencies().iter().map(|s| s.count()).collect();
+        let resident = registry.total_resident_bytes();
+        let cell = Cell {
+            executor: "planned".to_string(),
+            engine: "shift6".to_string(),
+            shards: 2,
+            threads: 1,
+            window: "fixed".to_string(),
+            window_ms: 2,
+            load: None,
+            shed: 0,
+            auto: None,
+            checkpoint: "synth",
+            simd: detected,
+            faults: None,
+            multi: Some(MultiCell {
+                models: "m6=shift6".to_string(),
+                resident_bytes: resident,
+                tenant_mix: None,
+                tenant_counts: Vec::new(),
+                tenant_p95_ms: Vec::new(),
+                swaps: Some(swaps),
+                lost: Some(lost),
+            }),
+            wall_s: wall.as_secs_f64(),
+            imgs_per_s: agg.throughput(wall),
+            p50_ms: snap.percentile_ms(50.0),
+            p95_ms: snap.percentile_ms(95.0),
+            p99_ms: snap.percentile_ms(99.0),
+            mean_batch: agg.mean_batch(),
+            shard_counts,
+        };
+        println!(
+            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  ({swaps} hot swap(s) mid-burst, lost {lost})",
+            cell.executor,
+            cell.engine,
+            cell.shards,
+            cell.threads,
+            "2ms",
+            cell.imgs_per_s,
+            cell.p50_ms,
+            cell.p95_ms,
+            cell.p99_ms,
+            cell.mean_batch
+        );
+        drop(handle);
+        registry.shutdown();
+        cells.push(cell);
+    }
+
     let rate_simd = |exec: &str, engine: &str, shards: usize, threads: usize, simd: &str| {
         cells
             .iter()
@@ -764,6 +1055,7 @@ fn main() -> Result<()> {
                     && c.window_ms == 2
                     && c.load.is_none() // classic closed-loop cells only
                     && c.faults.is_none()
+                    && c.multi.is_none()
                     && c.checkpoint == "synth"
                     && c.simd == simd
             })
@@ -865,6 +1157,27 @@ fn main() -> Result<()> {
                     fields.push(("crashes", Json::num(f.crashes as f64)));
                     fields.push(("respawns", Json::num(f.respawns as f64)));
                     fields.push(("lost", Json::num(f.lost as f64)));
+                }
+                if let Some(m) = &c.multi {
+                    fields.push(("models", Json::str(m.models.as_str())));
+                    fields.push(("resident_weight_bytes", Json::num(m.resident_bytes as f64)));
+                    if let Some(mix) = &m.tenant_mix {
+                        fields.push(("tenant_mix", Json::str(mix.as_str())));
+                        fields.push((
+                            "tenant_counts",
+                            Json::Arr(
+                                m.tenant_counts.iter().map(|&n| Json::num(n as f64)).collect(),
+                            ),
+                        ));
+                        fields.push((
+                            "tenant_p95_ms",
+                            Json::Arr(m.tenant_p95_ms.iter().map(|&p| Json::num(p)).collect()),
+                        ));
+                    }
+                    if let (Some(s), Some(l)) = (m.swaps, m.lost) {
+                        fields.push(("swaps", Json::num(s as f64)));
+                        fields.push(("lost", Json::num(l as f64)));
+                    }
                 }
                 Json::obj(fields)
             })

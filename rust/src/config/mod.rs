@@ -57,6 +57,25 @@ pub struct DataSection {
     pub noise: f32,
 }
 
+/// One `[serve.models.<name>]` entry: a named model in the serving
+/// registry. The registry apportions the global shard budget across
+/// entries and serves them behind one admission front.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    /// Registry key (the table name); requests address the model by it.
+    pub name: String,
+    /// "float" or "shift" (artifact mode is single-model only).
+    pub engine: String,
+    /// Weight bit-width for the shift engine (ignored by float).
+    pub bits: u32,
+}
+
+impl ModelEntry {
+    fn new(name: &str) -> Self {
+        ModelEntry { name: name.to_string(), engine: "shift".into(), bits: 6 }
+    }
+}
+
 /// Deployment-server knobs (the sharded serving engine).
 #[derive(Debug, Clone)]
 pub struct ServeSection {
@@ -111,6 +130,13 @@ pub struct ServeSection {
     /// Empty = off (the default; production path is untouched). The
     /// env var `LBW_FAULTS` supplies a plan when this key is unset.
     pub faults: String,
+    /// Tenant classes as comma-separated weighted-fair dequeue shares,
+    /// e.g. `"3,1"` = two classes arbitrated 3:1 (weight 0 still gets
+    /// the starvation floor). Empty = one class at weight 1.
+    pub tenants: String,
+    /// Multi-model registry entries from `[serve.models.<name>]`
+    /// tables, in name order. Empty = classic single-model serving.
+    pub models: Vec<ModelEntry>,
 }
 
 impl Default for ServeSection {
@@ -133,6 +159,8 @@ impl Default for ServeSection {
             simd: s.simd.to_string(),
             pin_cores: s.pin_cores,
             faults: String::new(),
+            tenants: String::new(),
+            models: Vec::new(),
         }
     }
 }
@@ -210,7 +238,37 @@ impl Config {
                 "serve.simd" => cfg.serve.simd = v.as_str()?.to_string(),
                 "serve.pin_cores" => cfg.serve.pin_cores = v.as_bool()?,
                 "serve.faults" => cfg.serve.faults = v.as_str()?.to_string(),
-                other => anyhow::bail!("unknown config key `{other}`"),
+                "serve.tenants" => cfg.serve.tenants = v.as_str()?.to_string(),
+                other => {
+                    // `[serve.models.<name>]` tables arrive as flat
+                    // dotted keys; group them into per-model entries
+                    // (name order — the doc map is sorted). Anything
+                    // else is still a loud unknown-key error.
+                    let Some(rest) = other.strip_prefix("serve.models.") else {
+                        anyhow::bail!("unknown config key `{other}`")
+                    };
+                    let Some((name, field)) = rest.split_once('.') else {
+                        anyhow::bail!(
+                            "malformed model key `{other}` \
+                             (expected [serve.models.<name>] with engine/bits keys)"
+                        )
+                    };
+                    ensure!(!name.is_empty(), "empty model name in `{other}`");
+                    if !cfg.serve.models.iter().any(|m| m.name == name) {
+                        cfg.serve.models.push(ModelEntry::new(name));
+                    }
+                    let entry = cfg
+                        .serve
+                        .models
+                        .iter_mut()
+                        .find(|m| m.name == name)
+                        .expect("entry just ensured");
+                    match field {
+                        "engine" => entry.engine = v.as_str()?.to_string(),
+                        "bits" => entry.bits = v.as_u32()?,
+                        _ => anyhow::bail!("unknown model config key `{other}`"),
+                    }
+                }
             }
         }
         cfg.validate()?;
@@ -266,7 +324,38 @@ impl Config {
             self.serve.shards_max == 0 || self.serve.shards_max >= self.serve.shards_min,
             "serve.shards_max must be 0 (default) or >= serve.shards_min"
         );
+        self.tenant_weights()?;
+        for m in &self.serve.models {
+            ensure!(
+                matches!(m.engine.as_str(), "float" | "shift"),
+                "serve.models.{}.engine must be float|shift, got {}",
+                m.name,
+                m.engine
+            );
+            ensure!(
+                m.engine != "shift" || matches!(m.bits, 2 | 4 | 5 | 6),
+                "serve.models.{}.bits must be one of 2/4/5/6 for the shift engine, got {}",
+                m.name,
+                m.bits
+            );
+        }
         Ok(())
+    }
+
+    /// Parse `serve.tenants` into weighted-fair dequeue weights.
+    /// Empty = one class at weight 1.
+    pub fn tenant_weights(&self) -> Result<Vec<u32>> {
+        let spec = self.serve.tenants.trim();
+        if spec.is_empty() {
+            return Ok(vec![1]);
+        }
+        spec.split(',')
+            .map(|w| {
+                w.trim()
+                    .parse::<u32>()
+                    .map_err(|_| anyhow::anyhow!("serve.tenants: bad weight `{w}` in `{spec}`"))
+            })
+            .collect()
     }
 
     /// Lower into the server's config (engine selection is separate —
@@ -298,6 +387,8 @@ impl Config {
             // validate() guarantees parseability for loaded configs
             cfg.faults = FaultPlan::parse(&self.serve.faults).ok();
         }
+        // validate() guarantees parseability for loaded configs
+        cfg.tenants = self.tenant_weights().unwrap_or_else(|_| vec![1]);
         cfg
     }
 
@@ -513,6 +604,49 @@ mod tests {
         if std::env::var("LBW_FAULTS").map_or(true, |v| v.trim().is_empty()) {
             assert!(Config::default().to_server_config().faults.is_none());
         }
+    }
+
+    #[test]
+    fn tenants_and_models_parse_validate_and_lower() {
+        let cfg = Config::from_toml(
+            r#"
+            [serve]
+            tenants = "3,1"
+            [serve.models.hi]
+            engine = "shift"
+            bits = 6
+            [serve.models.lo]
+            engine = "shift"
+            bits = 2
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.tenants, "3,1");
+        assert_eq!(cfg.to_server_config().tenants, vec![3, 1]);
+        // entries grouped per table, in name order (the doc map sorts)
+        assert_eq!(cfg.serve.models.len(), 2);
+        assert_eq!(cfg.serve.models[0].name, "hi");
+        assert_eq!(cfg.serve.models[0].bits, 6);
+        assert_eq!(cfg.serve.models[1].name, "lo");
+        assert_eq!(cfg.serve.models[1].bits, 2);
+
+        // empty tenants = one class at weight 1
+        assert_eq!(Config::default().to_server_config().tenants, vec![1]);
+        // weight 0 parses (the queue grants it the starvation floor)
+        assert_eq!(
+            Config::from_toml("[serve]\ntenants = \"4,0\"\n").unwrap().to_server_config().tenants,
+            vec![4, 0]
+        );
+
+        // malformed tenants / models rejected loudly
+        assert!(Config::from_toml("[serve]\ntenants = \"3,x\"\n").is_err());
+        assert!(Config::from_toml("[serve.models.bad]\nengine = \"gpu\"\n").is_err());
+        assert!(Config::from_toml("[serve.models.bad]\nbits = 3\n").is_err());
+        assert!(Config::from_toml("[serve.models.bad]\nbitz = 6\n").is_err());
+        // float models ignore bits (any value passes)
+        let cfg =
+            Config::from_toml("[serve.models.ref]\nengine = \"float\"\nbits = 32\n").unwrap();
+        assert_eq!(cfg.serve.models[0].engine, "float");
     }
 
     #[test]

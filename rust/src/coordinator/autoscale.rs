@@ -26,7 +26,12 @@
 //!   pools) respawns a replacement under deterministic exponential
 //!   backoff — with a circuit breaker that marks the pool degraded
 //!   after too many consecutive crash-respawns
-//!   ([`crate::coordinator::faults::RespawnPolicy`]).
+//!   ([`crate::coordinator::faults::RespawnPolicy`]). The pool's shard
+//!   factory is **swappable** ([`ShardPool::swap_factory`]): the model
+//!   registry's hot checkpoint swap installs a factory built from the
+//!   new checkpoint, spawns replacement generations, and retires the
+//!   old ones by name ([`ShardPool::drain_gen`]) — zero requests
+//!   dropped across the swap.
 //! * [`decide`]/[`steer_batch`] — the pure control law, driven by the
 //!   same signals the adaptive window controller uses (EWMA arrival
 //!   rate, queue depth) plus the shed counter: scale up when the queue
@@ -72,6 +77,20 @@ pub fn default_max_shards() -> usize {
         .and_then(|v| v.parse().ok())
         .filter(|&n| n >= 1)
         .unwrap_or(4)
+}
+
+/// Apportion one global shard budget across `n` models (the model
+/// registry's supervisor-budget split): every model gets at least one
+/// shard, and the remainder spreads one each to the earliest entries.
+/// When `total < n` every model still gets its one shard — the budget
+/// is a ceiling target, never a reason to leave a model unservable.
+pub fn apportion(total: usize, n: usize) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let base = (total / n).max(1);
+    let extra = total.saturating_sub(base * n);
+    (0..n).map(|i| base + usize::from(i < extra)).collect()
 }
 
 /// Supervisor knobs. Defaults are tuned for the synthetic detector's
@@ -243,7 +262,14 @@ pub struct ShardPool {
     /// Effective max batch every shard reads per loop iteration; the
     /// supervisor steers it within `[1, cfg.max_batch]`.
     eff_batch: Arc<AtomicUsize>,
-    factory: Option<ShardFactory>,
+    /// The shard builder, swappable at runtime: the hot checkpoint
+    /// swap installs a factory built from the new checkpoint, so every
+    /// generation spawned from then on (scale-up, crash-respawn, the
+    /// swap's own replacements) serves the new model.
+    factory: Mutex<Option<ShardFactory>>,
+    /// Whether this pool was built with a factory (fixed pools can
+    /// never gain one). Immutable so crash paths read it lock-free.
+    factory_backed: bool,
     events: ScaleEvents,
     inner: Mutex<PoolInner>,
     /// Pool-shared poison quarantine every shard's bisection inserts
@@ -273,12 +299,14 @@ impl ShardPool {
         factory: Option<ShardFactory>,
     ) -> Arc<Self> {
         let eff_batch = Arc::new(AtomicUsize::new(cfg.max_batch.max(1)));
+        let factory_backed = factory.is_some();
         Arc::new_cyclic(|me| ShardPool {
             cfg,
             monitor,
             stats,
             eff_batch,
-            factory,
+            factory: Mutex::new(factory),
+            factory_backed,
             events: ScaleEvents::default(),
             inner: Mutex::new(PoolInner { live: Vec::new() }),
             quarantine,
@@ -327,22 +355,60 @@ impl ShardPool {
     /// Spawn one startup shard through the factory (no scale-up event
     /// recorded — events count only runtime rescales).
     pub fn spawn_initial_from_factory(&self) -> Result<usize> {
-        let factory = self
-            .factory
+        self.spawn_from_factory()
+    }
+
+    /// Spawn one shard through the factory and count a scale-up event.
+    pub fn scale_up(&self) -> Result<usize> {
+        let gen = self.spawn_from_factory()?;
+        self.events.ups.fetch_add(1, Ordering::Relaxed);
+        Ok(gen)
+    }
+
+    /// Spawn one generation through whatever factory is currently
+    /// installed. The factory lock is held across the spawn so a
+    /// concurrent [`ShardPool::swap_factory`] cannot interleave —
+    /// every generation is built whole from exactly one factory.
+    fn spawn_from_factory(&self) -> Result<usize> {
+        let guard = plock(&self.factory);
+        let factory = guard
             .as_ref()
             .ok_or_else(|| anyhow!("this server has no shard factory (fixed pool)"))?;
         self.spawn_inner(|g| factory(g))
     }
 
-    /// Spawn one shard through the factory and count a scale-up event.
-    pub fn scale_up(&self) -> Result<usize> {
-        let factory = self
-            .factory
-            .as_ref()
-            .ok_or_else(|| anyhow!("this server has no shard factory (fixed pool)"))?;
-        let gen = self.spawn_inner(|g| factory(g))?;
-        self.events.ups.fetch_add(1, Ordering::Relaxed);
-        Ok(gen)
+    /// Hot-swap the shard builder: install `new_factory`, spawn one
+    /// replacement generation per currently-live generation (the
+    /// replacements subscribe to the shared queue and start consuming
+    /// immediately), then retire each **old** generation through the
+    /// cancel-before-pop drain protocol. At every instant at least one
+    /// generation is consuming the queue, a cancelled shard finishes
+    /// the batch it already holds, and queued requests stay buffered
+    /// for the survivors — so a swap under load answers every in-flight
+    /// request from exactly one generation and drops nothing. Returns
+    /// `(spawned, retired)` generation ids.
+    pub fn swap_factory(&self, new_factory: ShardFactory) -> Result<(Vec<usize>, Vec<usize>)> {
+        anyhow::ensure!(
+            self.factory_backed,
+            "cannot hot-swap a fixed pool (no shard factory)"
+        );
+        *plock(&self.factory) = Some(new_factory);
+        // snapshot the generations serving the OLD model; anything
+        // spawned after this point already builds from the new factory
+        let old: Vec<usize> = plock(&self.inner).live.iter().map(|h| h.gen).collect();
+        let mut spawned = Vec::with_capacity(old.len());
+        for _ in 0..old.len() {
+            spawned.push(self.spawn_from_factory()?);
+        }
+        let mut retired = Vec::with_capacity(old.len());
+        for gen in old {
+            // a generation that crashed (and detached itself) between
+            // the snapshot and here is simply no longer ours to drain
+            if self.drain_gen(gen)? {
+                retired.push(gen);
+            }
+        }
+        Ok((spawned, retired))
     }
 
     fn spawn_inner(&self, make: impl FnOnce(usize) -> ShardSetup) -> Result<usize> {
@@ -357,7 +423,7 @@ impl ShardPool {
             quarantine: self.quarantine.clone(),
             // only factory-backed pools can replace a crashed shard;
             // fixed pools recover in place inside the serve loop
-            retire_on_crash: self.factory.is_some(),
+            retire_on_crash: self.factory_backed,
             crash_streak: self.crash_streak.clone(),
         };
         let shard_cfg = self.cfg.clone();
@@ -454,13 +520,10 @@ impl ShardPool {
     }
 
     /// Spawn a replacement generation through the factory (no scale-up
-    /// event — respawns are fault recovery, not load response).
+    /// event — respawns are fault recovery, not load response). After
+    /// a hot swap the replacement naturally serves the *new* model.
     fn respawn_one(&self) -> Result<usize> {
-        let factory = self
-            .factory
-            .as_ref()
-            .ok_or_else(|| anyhow!("this server has no shard factory (fixed pool)"))?;
-        self.spawn_inner(|g| factory(g))
+        self.spawn_from_factory()
     }
 
     /// Remove `gen`'s handle from the live list **without joining** —
@@ -486,17 +549,47 @@ impl ShardPool {
             anyhow::ensure!(inner.live.len() > 1, "cannot drain the last live shard");
             inner.live.pop().expect("checked non-empty")
         };
+        let gen = handle.gen;
+        self.drain_handle(handle);
+        self.events.downs.fetch_add(1, Ordering::Relaxed);
+        Ok(gen)
+    }
+
+    /// Retire a *specific* generation via the same drain protocol —
+    /// the hot checkpoint swap's primitive. Unlike
+    /// [`ShardPool::drain_one`] it targets a named generation (the
+    /// swap must retire the OLD generations, never the replacements it
+    /// just spawned) and records no scale event (a swap is a
+    /// deployment action, not a load response). Returns `false` if the
+    /// generation is no longer live (it crashed or drained in a race —
+    /// nothing to do). Refuses to drain the last live shard.
+    pub fn drain_gen(&self, gen: usize) -> Result<bool> {
+        let handle = {
+            let mut inner = plock(&self.inner);
+            anyhow::ensure!(inner.live.len() > 1, "cannot drain the last live shard");
+            match inner.live.iter().position(|h| h.gen == gen) {
+                Some(pos) => inner.live.remove(pos),
+                None => return Ok(false),
+            }
+        };
+        self.drain_handle(handle);
+        Ok(true)
+    }
+
+    /// The drain protocol on a handle already removed from the live
+    /// list: flag its cancel token, kick it awake, let it finish the
+    /// batch it already holds, join the thread, and mark its
+    /// generation retired (counters survive in the merged stats).
+    /// Synchronous: when this returns, the shard's in-flight batch has
+    /// been served and its final stats are recorded.
+    fn drain_handle(&self, handle: ShardHandle) {
         handle.cancel.store(true, Ordering::Release);
         self.monitor.kick();
-        // synchronous: when this returns, the shard's in-flight batch
-        // has been served and its final stats are recorded
         let _ = handle.join.join();
         self.stats.retire(handle.gen);
         // wake senders that sat out the drain window so they re-check
         // capacity (see Sender::send_timeout's drain-safety notes)
         self.monitor.kick();
-        self.events.downs.fetch_add(1, Ordering::Relaxed);
-        Ok(handle.gen)
     }
 
     /// Cancel and join every shard (startup-failure rollback).
@@ -706,6 +799,17 @@ mod tests {
         let c = AutoscaleConfig { min_shards: 5, max_shards: 2, ..AutoscaleConfig::default() }
             .normalized();
         assert_eq!((c.min_shards, c.max_shards), (5, 5));
+    }
+
+    #[test]
+    fn apportion_splits_a_budget_with_a_floor_of_one() {
+        assert_eq!(apportion(8, 2), vec![4, 4]);
+        assert_eq!(apportion(5, 2), vec![3, 2], "remainder goes to the earliest model");
+        assert_eq!(apportion(7, 3), vec![3, 2, 2]);
+        // a budget below the model count still gives each model a shard
+        assert_eq!(apportion(1, 3), vec![1, 1, 1]);
+        assert_eq!(apportion(0, 2), vec![1, 1]);
+        assert_eq!(apportion(4, 0), Vec::<usize>::new());
     }
 
     #[test]

@@ -78,6 +78,14 @@ pub const ERR_POISONED: &str = "poisoned request";
 pub const ERR_QUARANTINED: &str = "quarantined";
 /// Marker in backpressure errors (pre-existing text in `submit`).
 pub const ERR_FULL: &str = "queue full";
+/// Marker in admission-deadline shed errors — shared by the serve
+/// loop's pre-forward shed path and the client handle's admission
+/// check, so an expired request reports the same pinned text wherever
+/// it is caught.
+pub const ERR_DEADLINE: &str = "exceeding its admission deadline";
+/// Marker in admission rejections for a model name the registry does
+/// not serve.
+pub const ERR_UNKNOWN_MODEL: &str = "unknown model";
 
 /// True for errors a client retry can help with: transient overload
 /// (`queue full`) or a crash that took the request down with the shard.

@@ -626,6 +626,55 @@ impl ShardStats {
     }
 }
 
+/// Per-tenant latency recorders for one serving cell — the client-side
+/// half of the multi-tenant picture. The queue's weighted-fair law
+/// decides *dequeue order* (see [`crate::coordinator::queue::pick_next`]
+/// and `Monitor::served_counts`); this records what each tenant class
+/// actually experienced end to end (submit → response received, as the
+/// client handle saw it). One slot per configured tenant class;
+/// out-of-range classes clamp to the last slot, mirroring the queue's
+/// clamp.
+#[derive(Debug)]
+pub struct TenantStats {
+    slots: Vec<Mutex<LatencyStats>>,
+}
+
+impl TenantStats {
+    /// One recorder per tenant class (≥ 1 enforced — a single-tenant
+    /// server still records into slot 0).
+    pub fn new(tenants: usize) -> Self {
+        TenantStats {
+            slots: (0..tenants.max(1)).map(|_| Mutex::new(LatencyStats::new())).collect(),
+        }
+    }
+
+    /// Configured tenant classes.
+    pub fn tenants(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one served request's end-to-end latency for a tenant.
+    pub fn record(&self, tenant: usize, d: Duration) {
+        let t = tenant.min(self.slots.len() - 1);
+        plock(&self.slots[t]).record(d);
+    }
+
+    /// Snapshot of every tenant's recorder, in class order.
+    pub fn per_tenant(&self) -> Vec<LatencyStats> {
+        self.slots.iter().map(|s| plock(s).clone()).collect()
+    }
+
+    /// One line per tenant class.
+    pub fn summary(&self) -> String {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| format!("tenant{}: {}", i, plock(s).summary()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
 /// One row of the training log.
 #[derive(Debug, Clone)]
 pub struct StepLog {
@@ -966,6 +1015,26 @@ mod tests {
         hub.set_degraded();
         assert!(hub.degraded());
         assert!(hub.summary().contains("DEGRADED"));
+    }
+
+    /// Tenant recorders are independent slots; out-of-range classes
+    /// clamp to the last slot instead of panicking.
+    #[test]
+    fn tenant_stats_record_per_class_and_clamp() {
+        let t = TenantStats::new(2);
+        assert_eq!(t.tenants(), 2);
+        t.record(0, Duration::from_millis(2));
+        t.record(0, Duration::from_millis(4));
+        t.record(1, Duration::from_millis(8));
+        t.record(99, Duration::from_millis(10)); // clamps to tenant 1
+        let per = t.per_tenant();
+        assert_eq!(per.iter().map(|s| s.count()).collect::<Vec<_>>(), vec![2, 2]);
+        assert!((per[0].mean_ms() - 3.0).abs() < 1e-9);
+        assert!((per[1].mean_ms() - 9.0).abs() < 1e-9);
+        let s = t.summary();
+        assert!(s.contains("tenant0:") && s.contains("tenant1:"), "{s}");
+        // degenerate constructor still has one slot
+        assert_eq!(TenantStats::new(0).tenants(), 1);
     }
 
     /// A crashed-but-never-serving generation must still be retired by

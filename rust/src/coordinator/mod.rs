@@ -11,6 +11,7 @@ pub mod inq;
 pub mod metrics;
 pub mod params;
 pub mod queue;
+pub mod registry;
 pub mod server;
 pub mod trainer;
 

@@ -11,6 +11,12 @@
 //! * **multi-consumer** — every shard owns a [`Receiver`] clone and
 //!   competes for requests, which is what makes shard scaling
 //!   work-conserving (an idle shard always steals the next request),
+//! * **multi-tenant** — the buffer is a *set* of per-tenant FIFOs with
+//!   configured weights ([`bounded_tenants`]); every pop runs the pure
+//!   weighted-fair control law [`pick_next`], so a heavy tenant cannot
+//!   starve a light one and even a zero-weight (best-effort) tenant
+//!   keeps a floor share. [`bounded`] is the single-tenant special
+//!   case: one FIFO, `pick_next` degenerates to plain FIFO order,
 //! * **graceful close** — dropping the last [`Sender`] closes the
 //!   channel; consumers drain whatever is queued and then observe
 //!   `Closed`, so shutdown never abandons accepted requests,
@@ -23,7 +29,7 @@
 //! * **crash-safe** — every lock goes through the poison-recovering
 //!   helpers in [`crate::coordinator::faults`]: a shard thread that
 //!   panics while holding the state mutex must not wedge every other
-//!   producer and consumer. The guarded state is a plain deque plus
+//!   producer and consumer. The guarded state is a plain deque set plus
 //!   counters, consistent at every release point, so recovering the
 //!   guard is sound.
 
@@ -55,12 +61,98 @@ pub enum Recv<T> {
     Cancelled,
 }
 
+/// Weight multiplier for the virtual-finish-time law: a tenant of
+/// weight `w` gets effective rate `SHARE_SCALE * w`, and a zero-weight
+/// tenant gets effective rate 1 — still served, at a floor share of
+/// roughly `1 / (SHARE_SCALE * Σw)` of the dequeues. Starvation-free by
+/// construction: every backlogged tenant's next finish time is finite
+/// and frozen until it is served, while each service pushes the chosen
+/// tenant's finish time strictly forward, so any waiting tenant becomes
+/// the minimum after boundedly many dequeues.
+pub const SHARE_SCALE: u64 = 64;
+
+/// The deterministic weighted-fair dequeue control law: given each
+/// tenant's cumulative dequeue count (`served`), current backlog
+/// (`depths`), and configured weight, pick the tenant to pop from next.
+/// Pure and threadless — the queue calls it under its mutex, tests call
+/// it directly.
+///
+/// Rule: among tenants with a non-empty backlog, pick the smallest
+/// *virtual finish time* `(served + 1) / eff(weight)` where
+/// `eff(w) = SHARE_SCALE * w` for `w > 0` and `1` for `w = 0` (the
+/// starvation floor). Ties break to the lowest tenant index, so the law
+/// is a deterministic function of its inputs. Returns `None` iff every
+/// tenant is empty.
+pub fn pick_next(served: &[u64], depths: &[usize], weights: &[u32]) -> Option<usize> {
+    debug_assert_eq!(served.len(), depths.len());
+    debug_assert_eq!(served.len(), weights.len());
+    let eff = |w: u32| -> u128 {
+        if w > 0 {
+            SHARE_SCALE as u128 * w as u128
+        } else {
+            1
+        }
+    };
+    let mut best: Option<usize> = None;
+    for i in 0..served.len() {
+        if depths[i] == 0 {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                // finish(i) < finish(b) compared exactly by
+                // cross-multiplication (u64 × u128-safe factors):
+                // (served_i+1)/eff_i < (served_b+1)/eff_b
+                let lhs = (served[i] as u128 + 1) * eff(weights[b]);
+                let rhs = (served[b] as u128 + 1) * eff(weights[i]);
+                if lhs < rhs {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best
+}
+
 struct State<T> {
-    buf: VecDeque<T>,
+    /// One FIFO per tenant; index = tenant class.
+    bufs: Vec<VecDeque<T>>,
+    /// Cumulative dequeues per tenant — `pick_next`'s memory.
+    served: Vec<u64>,
+    /// Configured tenant weights (0 = best-effort floor).
+    weights: Vec<u32>,
+    /// Total capacity across every tenant (backpressure bound).
     cap: usize,
     closed: bool,
     senders: usize,
     receivers: usize,
+}
+
+impl<T> State<T> {
+    fn total(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+
+    /// Pop the next item under the weighted-fair law (single-tenant
+    /// queues short-circuit to a plain FIFO pop).
+    fn pop_next(&mut self) -> Option<T> {
+        if self.bufs.len() == 1 {
+            let v = self.bufs[0].pop_front();
+            if v.is_some() {
+                self.served[0] += 1;
+            }
+            return v;
+        }
+        let depths: Vec<usize> = self.bufs.iter().map(|b| b.len()).collect();
+        let i = pick_next(&self.served, &depths, &self.weights)?;
+        let v = self.bufs[i].pop_front();
+        debug_assert!(v.is_some(), "pick_next returned an empty tenant");
+        if v.is_some() {
+            self.served[i] += 1;
+        }
+        v
+    }
 }
 
 struct Shared<T> {
@@ -80,11 +172,24 @@ pub struct Receiver<T> {
     shared: Arc<Shared<T>>,
 }
 
-/// Create a bounded MPMC channel of capacity `cap` (≥ 1 enforced).
+/// Create a bounded MPMC channel of capacity `cap` (≥ 1 enforced) with
+/// a single tenant — the classic FIFO queue.
 pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    bounded_tenants(cap, &[1])
+}
+
+/// Create a bounded MPMC channel with one FIFO per tenant and the given
+/// dequeue weights (at least one tenant enforced; weight 0 = served at
+/// the starvation floor). `cap` bounds the *total* buffered count
+/// across every tenant.
+pub fn bounded_tenants<T>(cap: usize, weights: &[u32]) -> (Sender<T>, Receiver<T>) {
+    let weights: Vec<u32> = if weights.is_empty() { vec![1] } else { weights.to_vec() };
+    let n = weights.len();
     let shared = Arc::new(Shared {
         state: Mutex::new(State {
-            buf: VecDeque::with_capacity(cap.max(1)),
+            bufs: (0..n).map(|_| VecDeque::new()).collect(),
+            served: vec![0; n],
+            weights,
             cap: cap.max(1),
             closed: false,
             senders: 1,
@@ -97,23 +202,36 @@ pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
 }
 
 impl<T> Sender<T> {
-    /// Non-blocking push.
+    /// Non-blocking push to tenant 0.
     pub fn try_send(&self, v: T) -> Result<(), SendError<T>> {
+        self.try_send_to(0, v)
+    }
+
+    /// Non-blocking push to a tenant's FIFO (out-of-range tenants clamp
+    /// to the last configured class — admission validates names before
+    /// they reach the queue).
+    pub fn try_send_to(&self, tenant: usize, v: T) -> Result<(), SendError<T>> {
         let mut st = plock(&self.shared.state);
         if st.closed {
             return Err(SendError::Closed(v));
         }
-        if st.buf.len() >= st.cap {
+        if st.total() >= st.cap {
             return Err(SendError::Full(v));
         }
-        st.buf.push_back(v);
+        let t = tenant.min(st.bufs.len() - 1);
+        st.bufs[t].push_back(v);
         drop(st);
         self.shared.not_empty.notify_one();
         Ok(())
     }
 
-    /// Push, waiting at most `timeout` for space. `Duration::ZERO`
-    /// degenerates to [`Sender::try_send`].
+    /// Push to tenant 0, waiting at most `timeout` for space.
+    pub fn send_timeout(&self, v: T, timeout: Duration) -> Result<(), SendError<T>> {
+        self.send_timeout_to(0, v, timeout)
+    }
+
+    /// Push to a tenant's FIFO, waiting at most `timeout` for space.
+    /// `Duration::ZERO` degenerates to [`Sender::try_send_to`].
     ///
     /// Drain-safe: while a shard drain is in progress the queue may
     /// momentarily have nobody popping — even *zero* active consumers
@@ -125,15 +243,21 @@ impl<T> Sender<T> {
     /// replacement shard's pops notify `not_full`) a blocked submit
     /// proceeds instead of surfacing a spurious "queue full" to the
     /// client.
-    pub fn send_timeout(&self, v: T, timeout: Duration) -> Result<(), SendError<T>> {
+    pub fn send_timeout_to(
+        &self,
+        tenant: usize,
+        v: T,
+        timeout: Duration,
+    ) -> Result<(), SendError<T>> {
         let deadline = Instant::now() + timeout;
         let mut st = plock(&self.shared.state);
         loop {
             if st.closed {
                 return Err(SendError::Closed(v));
             }
-            if st.buf.len() < st.cap {
-                st.buf.push_back(v);
+            if st.total() < st.cap {
+                let t = tenant.min(st.bufs.len() - 1);
+                st.bufs[t].push_back(v);
                 drop(st);
                 self.shared.not_empty.notify_one();
                 return Ok(());
@@ -156,9 +280,10 @@ impl<T> Sender<T> {
         self.shared.not_full.notify_all();
     }
 
-    /// Requests currently waiting (diagnostics only).
+    /// Requests currently waiting across every tenant (diagnostics
+    /// only).
     pub fn len(&self) -> usize {
-        plock(&self.shared.state).buf.len()
+        plock(&self.shared.state).total()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -194,7 +319,7 @@ impl<T> Receiver<T> {
     pub fn recv(&self) -> Option<T> {
         let mut st = plock(&self.shared.state);
         loop {
-            if let Some(v) = st.buf.pop_front() {
+            if let Some(v) = st.pop_next() {
                 drop(st);
                 self.shared.not_full.notify_one();
                 return Some(v);
@@ -210,7 +335,7 @@ impl<T> Receiver<T> {
     pub fn recv_deadline(&self, deadline: Instant) -> Recv<T> {
         let mut st = plock(&self.shared.state);
         loop {
-            if let Some(v) = st.buf.pop_front() {
+            if let Some(v) = st.pop_next() {
                 drop(st);
                 self.shared.not_full.notify_one();
                 return Recv::Item(v);
@@ -229,11 +354,12 @@ impl<T> Receiver<T> {
 }
 
 impl<T> Receiver<T> {
-    /// Requests currently buffered — the adaptive-window controller's
-    /// queue-depth signal. One short lock; the value is a snapshot and
-    /// may be stale the moment it returns (control/diagnostics only).
+    /// Requests currently buffered across every tenant — the
+    /// adaptive-window controller's queue-depth signal. One short lock;
+    /// the value is a snapshot and may be stale the moment it returns
+    /// (control/diagnostics only).
     pub fn depth(&self) -> usize {
-        plock(&self.shared.state).buf.len()
+        plock(&self.shared.state).total()
     }
 
     /// Blocking pop that also honours a drain token: returns
@@ -249,7 +375,7 @@ impl<T> Receiver<T> {
             if cancel.load(Ordering::Acquire) {
                 return Recv::Cancelled;
             }
-            if let Some(v) = st.buf.pop_front() {
+            if let Some(v) = st.pop_next() {
                 drop(st);
                 self.shared.not_full.notify_one();
                 return Recv::Item(v);
@@ -285,9 +411,20 @@ impl<T> Clone for Monitor<T> {
 }
 
 impl<T> Monitor<T> {
-    /// Requests currently buffered (snapshot).
+    /// Requests currently buffered across every tenant (snapshot).
     pub fn depth(&self) -> usize {
-        plock(&self.shared.state).buf.len()
+        plock(&self.shared.state).total()
+    }
+
+    /// Cumulative dequeues per tenant (snapshot) — the bench's
+    /// per-tenant service evidence.
+    pub fn served_counts(&self) -> Vec<u64> {
+        plock(&self.shared.state).served.clone()
+    }
+
+    /// Per-tenant backlog (snapshot).
+    pub fn tenant_depths(&self) -> Vec<usize> {
+        plock(&self.shared.state).bufs.iter().map(|b| b.len()).collect()
     }
 
     /// True once the channel is closed (senders gone, `close()` called,
@@ -321,7 +458,6 @@ impl<T> Monitor<T> {
         plock(&self.shared.state).receivers += 1;
         Receiver { shared: self.shared.clone() }
     }
-
 }
 
 impl<T> Clone for Receiver<T> {
@@ -341,11 +477,11 @@ impl<T> Drop for Receiver<T> {
         let mut st = plock(&self.shared.state);
         st.receivers -= 1;
         let last = st.receivers == 0;
-        let orphaned = if last {
+        let orphaned: Vec<VecDeque<T>> = if last {
             st.closed = true;
-            std::mem::take(&mut st.buf)
+            st.bufs.iter_mut().map(std::mem::take).collect()
         } else {
-            VecDeque::new()
+            Vec::new()
         };
         drop(st);
         if last {
@@ -558,5 +694,76 @@ mod tests {
         drop(tx2);
         assert_eq!(rx.recv(), Some(9));
         assert_eq!(rx.recv(), None);
+    }
+
+    // ---- weighted-fair multi-tenant law ----
+
+    #[test]
+    fn pick_next_is_deterministic_and_skips_empty() {
+        // only tenant 1 has backlog -> it is picked regardless of weight
+        assert_eq!(pick_next(&[0, 0], &[0, 3], &[9, 1]), Some(1));
+        // everything empty -> None
+        assert_eq!(pick_next(&[5, 5], &[0, 0], &[1, 1]), None);
+        // equal state ties break to the lowest index
+        assert_eq!(pick_next(&[0, 0], &[1, 1], &[2, 2]), Some(0));
+    }
+
+    #[test]
+    fn pick_next_tracks_weights_over_a_backlogged_window() {
+        // 3:1 weights, both tenants permanently backlogged: dequeue
+        // counts over any window converge to the weight ratio
+        let weights = [3u32, 1];
+        let mut served = [0u64; 2];
+        for _ in 0..400 {
+            let i = pick_next(&served, &[10, 10], &weights).unwrap();
+            served[i] += 1;
+        }
+        assert_eq!(served[0] + served[1], 400);
+        let ratio = served[0] as f64 / served[1] as f64;
+        assert!((2.8..=3.2).contains(&ratio), "ratio {ratio} strayed from 3:1");
+    }
+
+    #[test]
+    fn zero_weight_tenant_keeps_a_floor_share() {
+        let weights = [1u32, 0];
+        let mut served = [0u64; 2];
+        for _ in 0..(SHARE_SCALE as usize * 4) {
+            let i = pick_next(&served, &[10, 10], &weights).unwrap();
+            served[i] += 1;
+        }
+        assert!(served[1] >= 1, "zero-weight tenant starved");
+        assert!(served[0] > served[1] * 16, "floor share should stay small");
+    }
+
+    #[test]
+    fn tenant_queues_dequeue_by_weight() {
+        // one consumer, two tenants at 3:1, both fully backlogged
+        let (tx, rx) = bounded_tenants(64, &[3, 1]);
+        for i in 0..24 {
+            tx.try_send_to(0, i).unwrap();
+            tx.try_send_to(1, 100 + i).unwrap();
+        }
+        let mon = rx.monitor();
+        assert_eq!(mon.tenant_depths(), vec![24, 24]);
+        // over the first 16 pops tenant 0 gets ~12, tenant 1 ~4
+        let first: Vec<i32> = (0..16).map(|_| rx.recv().unwrap()).collect();
+        let t1 = first.iter().filter(|&&v| v >= 100).count();
+        assert!((3..=5).contains(&t1), "tenant 1 got {t1}/16 dequeues at weight 1:3");
+        let served = mon.served_counts();
+        assert_eq!(served.iter().sum::<u64>(), 16);
+        assert!(served[0] > served[1]);
+    }
+
+    #[test]
+    fn tenant_cap_is_shared_and_out_of_range_clamps() {
+        let (tx, rx) = bounded_tenants(2, &[1, 1]);
+        tx.try_send_to(0, 1).unwrap();
+        tx.try_send_to(1, 2).unwrap();
+        // total cap spans tenants
+        assert!(matches!(tx.try_send_to(0, 3), Err(SendError::Full(3))));
+        assert!(rx.recv().is_some());
+        // an out-of-range tenant clamps to the last class
+        tx.try_send_to(99, 4).unwrap();
+        assert!(rx.monitor().tenant_depths()[1] >= 1);
     }
 }

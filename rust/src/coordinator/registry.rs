@@ -1,0 +1,562 @@
+//! Multi-model, multi-tenant serving: the model registry and the
+//! admission front.
+//!
+//! The paper's deployment claim — low bit-width weights buy **memory
+//! savings** — compounds at fleet scale: a production detector box
+//! serves many checkpoints (different bit-widths, different training
+//! runs) for many traffic classes, not one. This module generalizes
+//! the single-model [`DetectServer`] into that shape:
+//!
+//! * [`ModelRegistry`] — N named models, each a full serving cell
+//!   (its own request queue, quantized projection, supervised
+//!   [`crate::coordinator::autoscale::ShardPool`], and metrics
+//!   registry) under **one apportioned shard budget**
+//!   ([`crate::coordinator::autoscale::apportion`]): the global
+//!   `shards_max` splits across models so the registry never oversells
+//!   the box. Per-model resident weight bytes
+//!   ([`resident_weight_bytes`]) make the LBW angle measurable — a
+//!   6-bit + ternary + 4-bit trio fits where one float model did.
+//! * **Hot checkpoint swap** ([`ModelRegistry::swap`]) — load and
+//!   quantize the new checkpoint *off* the serving path (the factory
+//!   build runs the quantize-once projection before any serving
+//!   generation is touched), then
+//!   [`crate::coordinator::autoscale::ShardPool::swap_factory`] spawns
+//!   replacement generations and retires the old ones through the
+//!   cancel-before-pop drain handshake. Every in-flight request is
+//!   answered by exactly one generation; a swap under load drops zero
+//!   requests, and a swap to an *identical* checkpoint is bitwise
+//!   invisible (pinned by `rust/tests/multi_model.rs`).
+//! * [`Router`] — the admission front: requests carry a model name +
+//!   tenant class; unknown models are rejected loudly
+//!   ([`crate::coordinator::faults::ERR_UNKNOWN_MODEL`]) instead of
+//!   silently landing on a default model.
+//! * [`DetectHandle`] / [`Request`] — the client-side admission layer,
+//!   moved here from `server.rs`. Admission order is pinned:
+//!   size → deadline → quarantine → capacity, with the deadline
+//!   stamped **once** per logical request (retries inherit it instead
+//!   of minting a fresh budget per attempt).
+//!
+//! Tenant classes ride the queue layer: every cell's queue is built
+//! with [`crate::coordinator::queue::bounded_tenants`], so the
+//! weighted-fair `pick_next` law arbitrates dequeues and
+//! [`crate::coordinator::metrics::TenantStats`] records what each
+//! class experienced.
+
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::consts::IMG;
+use crate::coordinator::autoscale::{apportion, ShardFactory};
+use crate::coordinator::faults::{
+    content_hash, is_retryable, Quarantine, RetryPolicy, ERR_DEADLINE, ERR_QUARANTINED,
+    ERR_UNKNOWN_MODEL,
+};
+use crate::coordinator::metrics::{LatencyStats, ShardStats, TenantStats};
+use crate::coordinator::params::{Checkpoint, ParamSpec};
+use crate::coordinator::queue::{self, SendError};
+use crate::coordinator::server::{DetectServer, Executor, InferFn, ServerConfig, ShardSetup};
+use crate::detection::Detection;
+use crate::nn::{DetectorModel, EngineKind, KernelBackend};
+
+/// An in-flight request (exposed for
+/// [`crate::coordinator::server::serve_loop`]'s signature; built only
+/// through [`DetectHandle::detect`]).
+pub struct Request {
+    pub(crate) image: Vec<f32>,
+    pub(crate) resp: std::sync::mpsc::SyncSender<Result<Vec<Detection>>>,
+    pub(crate) enqueued: Instant,
+    /// Admission deadline stamped at submit; a shard that pops this
+    /// request after the deadline sheds it instead of serving it.
+    pub(crate) deadline: Option<Instant>,
+}
+
+/// Handle used by clients to submit detection requests. Cloneable and
+/// thread-safe; dropping every handle closes the queue and lets the
+/// shards drain and exit.
+///
+/// A handle is bound to one tenant class (class 0 by default —
+/// re-bind with [`DetectHandle::for_tenant`]); the queue's
+/// weighted-fair law arbitrates between classes.
+#[derive(Clone)]
+pub struct DetectHandle {
+    pub(crate) tx: queue::Sender<Request>,
+    pub(crate) stats: Arc<ShardStats>,
+    pub(crate) tenants: Arc<TenantStats>,
+    pub(crate) quarantine: Arc<Quarantine>,
+    pub(crate) submit_timeout: Duration,
+    pub(crate) deadline: Option<Duration>,
+    /// Tenant class this handle submits as (clamped by the queue to
+    /// the configured classes).
+    pub(crate) tenant: usize,
+    /// Opt-in bounded retry for transient failures (`queue full`
+    /// backpressure, `shard crashed`); `None` = single attempt.
+    pub(crate) retry: Option<RetryPolicy>,
+}
+
+impl DetectHandle {
+    /// Detect objects in one `IMG×IMG×3` image. Blocks until served,
+    /// except for admission: if the queue stays full for
+    /// `submit_timeout`, returns a backpressure error immediately.
+    ///
+    /// The admission deadline (`serve.deadline_ms`, or
+    /// [`DetectHandle::with_deadline`]) is stamped **once** here, at
+    /// the start of the logical request. With a retry policy attached
+    /// ([`DetectHandle::with_retry`]), transient errors — backpressure
+    /// and shard crashes — are retried up to `max_attempts` times
+    /// under the policy's deterministic jittered backoff, and every
+    /// attempt carries the *same* deadline: a retry can never outlive
+    /// the budget the client was promised (re-stamping per attempt was
+    /// the latent bug this replaces). Poisoned/quarantined rejections
+    /// are never retried — the request itself is the problem.
+    pub fn detect(&self, image: Vec<f32>) -> Result<Vec<Detection>> {
+        let start = Instant::now();
+        let deadline = self.deadline.map(|d| start + d);
+        let Some(policy) = &self.retry else {
+            return self.submit(image, self.submit_timeout, deadline);
+        };
+        let attempts = policy.max_attempts.max(1);
+        let mut last_image = image;
+        for attempt in 1..=attempts {
+            let img = if attempt < attempts {
+                last_image.clone()
+            } else {
+                std::mem::take(&mut last_image)
+            };
+            match self.submit(img, self.submit_timeout, deadline) {
+                Ok(dets) => return Ok(dets),
+                Err(e) => {
+                    let msg = e.to_string();
+                    if attempt == attempts || !is_retryable(&msg) {
+                        return Err(e);
+                    }
+                    let backoff = policy.delay(attempt + 1);
+                    if let Some(budget) = self.deadline {
+                        if start.elapsed() + backoff >= budget {
+                            return Err(e); // a retry could not be served in time
+                        }
+                    }
+                    if !backoff.is_zero() {
+                        std::thread::sleep(backoff);
+                    }
+                }
+            }
+        }
+        unreachable!("retry loop returns on the last attempt")
+    }
+
+    /// Like [`DetectHandle::detect`] but never waits for queue space —
+    /// and never retries, regardless of any attached policy.
+    pub fn try_detect(&self, image: Vec<f32>) -> Result<Vec<Detection>> {
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        self.submit(image, Duration::ZERO, deadline)
+    }
+
+    /// Attach a bounded retry policy to this handle (builder-style;
+    /// clones are cheap). See [`DetectHandle::detect`] for semantics.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
+        self
+    }
+
+    /// Override the admission deadline for requests submitted through
+    /// this handle (builder-style; the server's `deadline_ms` is the
+    /// default).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Re-bind this handle to a tenant class (class 0 is the default;
+    /// out-of-range classes clamp to the last configured one).
+    pub fn for_tenant(mut self, tenant: usize) -> Self {
+        self.tenant = tenant;
+        self
+    }
+
+    /// Admission order is pinned: **size → deadline → quarantine →
+    /// capacity**. A request whose admission deadline has already
+    /// passed is shed before any other verdict — its client's budget
+    /// is spent, so reporting a quarantine rejection (or burning a
+    /// queue slot) would misclassify plain lateness as a content
+    /// problem. Each verdict returns its pinned marker
+    /// ([`ERR_DEADLINE`], [`ERR_QUARANTINED`],
+    /// [`crate::coordinator::faults::ERR_FULL`]) so clients and the
+    /// retry classifier see one consistent vocabulary wherever a
+    /// request dies.
+    fn submit(
+        &self,
+        image: Vec<f32>,
+        wait: Duration,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<Detection>> {
+        anyhow::ensure!(image.len() == IMG * IMG * 3, "bad image size {}", image.len());
+        if matches!(deadline, Some(d) if Instant::now() >= d) {
+            bail!("server overloaded: request shed after {ERR_DEADLINE} (backpressure)");
+        }
+        // a content hash that already crashed a shard is rejected up
+        // front — a poison image never gets a second chance to take a
+        // generation down (the occupancy fast path makes this one
+        // relaxed atomic load in the fault-free case)
+        if !self.quarantine.is_empty() && self.quarantine.contains(content_hash(&image)) {
+            self.stats.note_quarantine_hit();
+            bail!("request rejected: content {ERR_QUARANTINED} after crashing a shard");
+        }
+        let (resp, rx) = sync_channel(1);
+        let now = Instant::now();
+        let req = Request { image, resp, enqueued: now, deadline };
+        match self.tx.send_timeout_to(self.tenant, req, wait) {
+            Ok(()) => {}
+            Err(SendError::Full(_)) => {
+                bail!("server overloaded: request queue full after {wait:?} (backpressure)")
+            }
+            Err(SendError::Closed(_)) => bail!("server stopped"),
+        }
+        let out = rx.recv().map_err(|_| anyhow!("server dropped request"))?;
+        if out.is_ok() {
+            self.tenants.record(self.tenant, now.elapsed());
+        }
+        out
+    }
+
+    /// Aggregate latency across all shards.
+    pub fn latency(&self) -> LatencyStats {
+        self.stats.merged()
+    }
+
+    /// Per-shard latency snapshots.
+    pub fn shard_latencies(&self) -> Vec<LatencyStats> {
+        self.stats.per_shard()
+    }
+
+    /// Per-tenant end-to-end latency snapshots (class order).
+    pub fn tenant_latencies(&self) -> Vec<LatencyStats> {
+        self.tenants.per_tenant()
+    }
+
+    pub fn latency_summary(&self) -> String {
+        self.stats.summary()
+    }
+}
+
+/// Per-model resident weight bytes — the LBW residency arithmetic. A
+/// float model keeps 4 bytes per weight; a `b`-bit shift-add model
+/// packs to `⌈params·b/8⌉` bytes, so a 6-bit + ternary (2-bit) + 4-bit
+/// trio (12 bits/weight total) is resident where ~0.38 of one float
+/// model was.
+pub fn resident_weight_bytes(num_params: usize, engine: EngineKind) -> usize {
+    match engine {
+        EngineKind::Float => num_params * 4,
+        EngineKind::Shift { bits } => (num_params * bits as usize).div_ceil(8),
+    }
+}
+
+/// Build the engine-mode [`ShardFactory`] for one model: resolve the
+/// kernel backend once, run the quantize-once projection (shift
+/// engines), and capture everything each spawned generation needs.
+/// This is the single construction path for initial spawn, elastic
+/// scale-up, crash-respawn, **and** hot swap — calling it with a new
+/// checkpoint is how [`ModelRegistry::swap`] prepares a swap off the
+/// serving path (a bad checkpoint fails here, before any serving
+/// generation is touched).
+pub fn engine_shard_factory(
+    spec: &ParamSpec,
+    ckpt: &Checkpoint,
+    engine: EngineKind,
+    cfg: &ServerConfig,
+) -> Result<ShardFactory> {
+    let executor = cfg.executor;
+    let threads = cfg.threads.max(1);
+    // resolve the kernel backend once, up front — every shard ever
+    // spawned (including elastic scale-ups) serves with the same
+    // kernels, so a run is never a mid-flight mix of backends
+    let backend = KernelBackend::detect(cfg.simd);
+    let pin = cfg.pin_cores;
+    let ncpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // a shard never runs a batch larger than max(max_batch, pad_batch)
+    let plan_batch = cfg.max_batch.max(cfg.pad_batch).max(1);
+    // fail fast on a bad spec/checkpoint before any quantization work
+    // or thread spawn (the factory also runs on the supervisor thread
+    // later, where a mismatch error would surface asynchronously)
+    anyhow::ensure!(ckpt.params.len() == spec.num_params, "checkpoint/spec param mismatch");
+    anyhow::ensure!(ckpt.state.len() == spec.num_state, "checkpoint/spec state mismatch");
+    // quantize every conv layer once, in parallel — every shard
+    // generation ever spawned shares the projection (this is what
+    // makes elastic scale-up memory-light, and what keeps a hot swap
+    // off the serving path: a new generation costs one plan + arena +
+    // tile pool, never a quantization pass)
+    let quants = Arc::new(match engine {
+        EngineKind::Shift { bits } => {
+            let qpool = crate::runtime::pool::ThreadPool::new(threads);
+            Some(crate::coordinator::trainer::quantize_conv_layers(
+                spec, &ckpt.params, bits, 0.75, &qpool,
+            ))
+        }
+        EngineKind::Float => None,
+    });
+    let spec = spec.clone();
+    let ckpt = ckpt.clone();
+    Ok(Box::new(move |generation| {
+        let model =
+            DetectorModel::build_with_quants(&spec, &ckpt, engine, quants.as_ref().as_ref());
+        // one tile pool per planned shard (the naive walk has no
+        // tiled kernels to feed it); with pinning on, generation g
+        // claims the CPU stripe starting at g*threads — the base
+        // CPU is taken by the shard thread itself (the calling
+        // pool participant), workers fill the rest of the stripe
+        let base_cpu = (generation * threads) % ncpus;
+        let pool = match executor {
+            Executor::Planned => Some(Arc::new(if pin {
+                crate::runtime::pool::ThreadPool::new_pinned(threads, base_cpu)
+            } else {
+                crate::runtime::pool::ThreadPool::new(threads)
+            })),
+            Executor::Naive => None,
+        };
+        Box::new(move |_shard: usize| -> Result<InferFn> {
+            Ok(match executor {
+                Executor::Planned => {
+                    if pin {
+                        crate::runtime::pool::pin_current_thread(base_cpu);
+                    }
+                    // compile once on the shard thread; the builder
+                    // model is dropped — the shard owns only the
+                    // plan and its pool
+                    let mut plan = model?.plan_with(
+                        plan_batch,
+                        pool.expect("planned shard pool"),
+                        backend,
+                    );
+                    Box::new(move |images: &[f32], batch: usize| {
+                        Ok(plan.forward_vec(images, batch))
+                    })
+                }
+                Executor::Naive => {
+                    let mut model = model?;
+                    Box::new(move |images: &[f32], batch: usize| {
+                        Ok(model.forward_naive(images, batch))
+                    })
+                }
+            })
+        }) as ShardSetup
+    }))
+}
+
+/// One model's definition handed to [`ModelRegistry::start`].
+pub struct ModelDef {
+    /// Registry key; requests address the model by this name.
+    pub name: String,
+    pub spec: ParamSpec,
+    pub ckpt: Checkpoint,
+    pub engine: EngineKind,
+}
+
+/// One resident model: a full serving cell plus the spec/engine kept
+/// for swap validation and the residency bookkeeping.
+struct ModelCell {
+    name: String,
+    server: DetectServer,
+    /// The cell's lowered config (shard share applied) — swaps rebuild
+    /// the factory from exactly this.
+    cfg: ServerConfig,
+    spec: ParamSpec,
+    engine: EngineKind,
+    resident_bytes: usize,
+}
+
+/// N models behind one admission layer, each with its own queue,
+/// quantized projection, shard pool, and metrics — under one
+/// apportioned shard budget. See the module docs for the full
+/// semantics.
+pub struct ModelRegistry {
+    cells: Vec<ModelCell>,
+}
+
+impl ModelRegistry {
+    /// Start every model's serving cell. `base` is the per-cell config
+    /// template; the global shard budget — `autoscale.max_shards` when
+    /// autoscaling, else `base.shards` — is apportioned across models
+    /// ([`apportion`]: everyone gets ≥ 1, remainder to the earliest
+    /// entries), so N models never oversubscribe the budget one model
+    /// was given. Fails loudly on an empty registry or a duplicate
+    /// model name.
+    pub fn start(models: Vec<ModelDef>, base: &ServerConfig) -> Result<ModelRegistry> {
+        anyhow::ensure!(!models.is_empty(), "model registry needs at least one model");
+        for (i, m) in models.iter().enumerate() {
+            anyhow::ensure!(
+                !models[..i].iter().any(|p| p.name == m.name),
+                "duplicate model name `{}` in registry",
+                m.name
+            );
+        }
+        let n = models.len();
+        let shares = match &base.autoscale {
+            Some(a) => apportion(a.max_shards.max(1), n),
+            None => apportion(base.shards.max(1), n),
+        };
+        let mut cells = Vec::with_capacity(n);
+        for (m, share) in models.into_iter().zip(shares) {
+            let mut cfg = base.clone();
+            if let Some(a) = cfg.autoscale.as_mut() {
+                a.max_shards = share;
+                a.min_shards = a.min_shards.clamp(1, share);
+                cfg.shards = cfg.shards.clamp(a.min_shards, share);
+            } else {
+                cfg.shards = share;
+            }
+            let server = DetectServer::start_engine(&m.spec, &m.ckpt, m.engine, cfg.clone())
+                .map_err(|e| anyhow!("starting model `{}`: {e}", m.name))?;
+            let resident_bytes = resident_weight_bytes(m.spec.num_params, m.engine);
+            cells.push(ModelCell {
+                name: m.name,
+                server,
+                cfg,
+                spec: m.spec,
+                engine: m.engine,
+                resident_bytes,
+            });
+        }
+        Ok(ModelRegistry { cells })
+    }
+
+    fn cell(&self, model: &str) -> Result<&ModelCell> {
+        self.cells.iter().find(|c| c.name == model).ok_or_else(|| {
+            let known: Vec<&str> = self.cells.iter().map(|c| c.name.as_str()).collect();
+            anyhow!("{ERR_UNKNOWN_MODEL} `{model}`: this registry serves [{}]", known.join(", "))
+        })
+    }
+
+    /// Registry keys, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.cells.iter().map(|c| c.name.as_str()).collect()
+    }
+
+    /// A client handle onto one model's cell (tenant class 0; re-bind
+    /// with [`DetectHandle::for_tenant`]). Unknown models are rejected
+    /// loudly.
+    pub fn handle(&self, model: &str) -> Result<DetectHandle> {
+        Ok(self.cell(model)?.server.handle())
+    }
+
+    /// The model's serving cell (scale events, crash counters, manual
+    /// scaler — the operational surface).
+    pub fn server(&self, model: &str) -> Result<&DetectServer> {
+        Ok(&self.cell(model)?.server)
+    }
+
+    /// Bytes of weight storage this model keeps resident (packed
+    /// low-bit arithmetic for shift engines, 4 bytes/weight for
+    /// float).
+    pub fn resident_bytes(&self, model: &str) -> Result<usize> {
+        Ok(self.cell(model)?.resident_bytes)
+    }
+
+    /// Total resident weight bytes across every model.
+    pub fn total_resident_bytes(&self) -> usize {
+        self.cells.iter().map(|c| c.resident_bytes).sum()
+    }
+
+    /// The cloneable admission front over every model.
+    pub fn router(&self) -> Router {
+        Router {
+            handles: Arc::new(
+                self.cells.iter().map(|c| (c.name.clone(), c.server.handle())).collect(),
+            ),
+        }
+    }
+
+    /// **Hot checkpoint swap.** Validates + quantizes `ckpt` off the
+    /// serving path (a bad checkpoint fails here and leaves the old
+    /// model serving untouched), installs the new factory, spawns one
+    /// replacement generation per live generation, and retires the old
+    /// generations through the cancel-before-pop drain handshake —
+    /// every in-flight request is answered by exactly one generation
+    /// and nothing queued is dropped. Returns
+    /// `(spawned, retired)` generation counts.
+    pub fn swap(&self, model: &str, ckpt: &Checkpoint) -> Result<(usize, usize)> {
+        let cell = self.cell(model)?;
+        let factory = engine_shard_factory(&cell.spec, ckpt, cell.engine, &cell.cfg)
+            .map_err(|e| anyhow!("swap rejected for model `{model}`: {e}"))?;
+        let (spawned, retired) = cell.server.swap_factory(factory)?;
+        Ok((spawned.len(), retired.len()))
+    }
+
+    /// Per-model one-line reports, keyed by model name.
+    pub fn summary(&self) -> String {
+        self.cells
+            .iter()
+            .map(|c| format!("model {}: {}", c.name, c.server.handle().latency_summary()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Shut every cell down (drain + join). Clients still holding
+    /// handles or [`Router`] clones keep the queues open — drop them
+    /// first, exactly like [`DetectServer::shutdown`].
+    pub fn shutdown(self) {
+        for c in self.cells {
+            c.server.shutdown();
+        }
+    }
+}
+
+/// The admission front: a cheap, cloneable map from model name to that
+/// model's [`DetectHandle`]. Holding a `Router` keeps every cell's
+/// queue open (it owns real handles) — drop routers before registry
+/// shutdown.
+#[derive(Clone)]
+pub struct Router {
+    handles: Arc<Vec<(String, DetectHandle)>>,
+}
+
+impl Router {
+    /// The handle for `model`, or a loud [`ERR_UNKNOWN_MODEL`] error
+    /// naming what this router *does* serve.
+    pub fn handle(&self, model: &str) -> Result<DetectHandle> {
+        self.handles.iter().find(|(n, _)| n == model).map(|(_, h)| h.clone()).ok_or_else(
+            || {
+                let known: Vec<&str> = self.handles.iter().map(|(n, _)| n.as_str()).collect();
+                anyhow!(
+                    "{ERR_UNKNOWN_MODEL} `{model}`: this registry serves [{}]",
+                    known.join(", ")
+                )
+            },
+        )
+    }
+
+    /// Route one request: model name + tenant class + image.
+    pub fn detect(&self, model: &str, tenant: usize, image: Vec<f32>) -> Result<Vec<Detection>> {
+        self.handle(model)?.for_tenant(tenant).detect(image)
+    }
+
+    /// Model names this router serves, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.handles.iter().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The residency arithmetic behind the "more models per box"
+    /// claim: 6-bit + 2-bit + 4-bit together need 12 bits/weight —
+    /// 0.375 of one float model's 32.
+    #[test]
+    fn resident_bytes_pack_low_bit_models() {
+        let p = 1000;
+        assert_eq!(resident_weight_bytes(p, EngineKind::Float), 4000);
+        assert_eq!(resident_weight_bytes(p, EngineKind::Shift { bits: 6 }), 750);
+        assert_eq!(resident_weight_bytes(p, EngineKind::Shift { bits: 2 }), 250);
+        assert_eq!(resident_weight_bytes(p, EngineKind::Shift { bits: 4 }), 500);
+        let trio = [6u32, 2, 4]
+            .iter()
+            .map(|&b| resident_weight_bytes(p, EngineKind::Shift { bits: b }))
+            .sum::<usize>();
+        assert!(trio * 2 < resident_weight_bytes(p, EngineKind::Float), "trio fits in half a float model");
+        // packing rounds up, never truncates a weight away
+        assert_eq!(resident_weight_bytes(3, EngineKind::Shift { bits: 6 }), 3);
+    }
+}

@@ -35,14 +35,19 @@
 //! `submit_timeout`, [`DetectHandle::detect`] returns an error instead
 //! of blocking forever — callers shed load instead of deadlocking the
 //! fleet.
+//!
+//! This module is the **cell**: one model's queue, shards, and
+//! supervisor. The admission layer — [`DetectHandle`] / [`Request`],
+//! model routing, the multi-model registry, and hot checkpoint swap —
+//! lives one level up in [`crate::coordinator::registry`] (the types
+//! are re-exported here so single-model callers never notice).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
-use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
 use crate::consts::{GRID, IMG, NUM_CLS};
 use crate::coordinator::adaptive::AdaptiveWindow;
@@ -50,16 +55,17 @@ pub use crate::coordinator::adaptive::WindowMode;
 pub use crate::coordinator::autoscale::{AutoscaleConfig, ShardFactory};
 use crate::coordinator::autoscale::{ShardPool, Supervisor};
 use crate::coordinator::faults::{
-    content_hash, is_retryable, plock, FaultAction, FaultSite, FaultState, Quarantine,
-    ERR_POISONED, ERR_QUARANTINED, ERR_SHARD_CRASHED,
+    content_hash, plock, FaultAction, FaultSite, FaultState, Quarantine, ERR_DEADLINE,
+    ERR_POISONED, ERR_SHARD_CRASHED,
 };
 pub use crate::coordinator::faults::{FaultPlan, RespawnPolicy, RetryPolicy};
-use crate::coordinator::metrics::{LatencyStats, ShardStats};
+use crate::coordinator::metrics::{LatencyStats, ShardStats, TenantStats};
 use crate::coordinator::params::{Checkpoint, ParamSpec};
-use crate::coordinator::queue::{self, Recv, SendError};
+use crate::coordinator::queue::{self, Recv};
+pub use crate::coordinator::registry::{DetectHandle, Request};
 use crate::detection::{decode_grid, nms, Detection};
 pub use crate::nn::{KernelBackend, SimdMode};
-use crate::nn::{DetectorModel, EngineKind};
+use crate::nn::EngineKind;
 use crate::runtime::{lit_f32, to_f32, Runtime};
 
 /// Which engine-mode executor runs inside each shard.
@@ -109,6 +115,12 @@ pub struct ServerConfig {
     pub nms_iou: f32,
     /// Request queue depth (the backpressure bound, shared by shards).
     pub queue_depth: usize,
+    /// Tenant classes and their weighted-fair shares: entry `t` is the
+    /// dequeue weight of tenant class `t`
+    /// ([`crate::coordinator::queue::pick_next`] arbitrates; weight 0
+    /// still gets the starvation floor). `vec![1]` = the classic
+    /// single-tenant queue. The queue depth is shared across classes.
+    pub tenants: Vec<u32>,
     /// How long `detect` may wait for queue space before erroring.
     pub submit_timeout: Duration,
     /// Pad every executed batch up to this size (1 = no padding). The
@@ -211,6 +223,7 @@ impl Default for ServerConfig {
             score_thresh: 0.4,
             nms_iou: 0.45,
             queue_depth: 256,
+            tenants: vec![1],
             submit_timeout: Duration::from_secs(5),
             pad_batch: 1,
             executor: Executor::Planned,
@@ -262,132 +275,6 @@ impl ShardCtl {
             retire_on_crash: false,
             crash_streak: Arc::new(AtomicU32::new(0)),
         }
-    }
-}
-
-/// An in-flight request (exposed for [`serve_loop`]'s signature; built
-/// only through [`DetectHandle::detect`]).
-pub struct Request {
-    image: Vec<f32>,
-    resp: std::sync::mpsc::SyncSender<Result<Vec<Detection>>>,
-    enqueued: Instant,
-    /// Admission deadline stamped at submit; a shard that pops this
-    /// request after the deadline sheds it instead of serving it.
-    deadline: Option<Instant>,
-}
-
-/// Handle used by clients to submit detection requests. Cloneable and
-/// thread-safe; dropping every handle closes the queue and lets the
-/// shards drain and exit.
-#[derive(Clone)]
-pub struct DetectHandle {
-    tx: queue::Sender<Request>,
-    stats: Arc<ShardStats>,
-    quarantine: Arc<Quarantine>,
-    submit_timeout: Duration,
-    deadline: Option<Duration>,
-    /// Opt-in bounded retry for transient failures (`queue full`
-    /// backpressure, `shard crashed`); `None` = single attempt.
-    retry: Option<RetryPolicy>,
-}
-
-impl DetectHandle {
-    /// Detect objects in one `IMG×IMG×3` image. Blocks until served,
-    /// except for admission: if the queue stays full for
-    /// `submit_timeout`, returns a backpressure error immediately.
-    ///
-    /// With a retry policy attached ([`DetectHandle::with_retry`]),
-    /// transient errors — backpressure and shard crashes — are retried
-    /// up to `max_attempts` times under the policy's deterministic
-    /// jittered backoff. Retries never outlive the server's admission
-    /// deadline (`serve.deadline_ms`): once the elapsed time plus the
-    /// next backoff would exceed it, the last error is returned.
-    /// Poisoned/quarantined rejections are never retried — the request
-    /// itself is the problem.
-    pub fn detect(&self, image: Vec<f32>) -> Result<Vec<Detection>> {
-        let Some(policy) = &self.retry else {
-            return self.submit(image, self.submit_timeout);
-        };
-        let start = Instant::now();
-        let attempts = policy.max_attempts.max(1);
-        let mut last_image = image;
-        for attempt in 1..=attempts {
-            let img = if attempt < attempts { last_image.clone() } else { std::mem::take(&mut last_image) };
-            match self.submit(img, self.submit_timeout) {
-                Ok(dets) => return Ok(dets),
-                Err(e) => {
-                    let msg = e.to_string();
-                    if attempt == attempts || !is_retryable(&msg) {
-                        return Err(e);
-                    }
-                    let backoff = policy.delay(attempt + 1);
-                    if let Some(budget) = self.deadline {
-                        if start.elapsed() + backoff >= budget {
-                            return Err(e); // a retry could not be served in time
-                        }
-                    }
-                    if !backoff.is_zero() {
-                        std::thread::sleep(backoff);
-                    }
-                }
-            }
-        }
-        unreachable!("retry loop returns on the last attempt")
-    }
-
-    /// Like [`DetectHandle::detect`] but never waits for queue space —
-    /// and never retries, regardless of any attached policy.
-    pub fn try_detect(&self, image: Vec<f32>) -> Result<Vec<Detection>> {
-        self.submit(image, Duration::ZERO)
-    }
-
-    /// Attach a bounded retry policy to this handle (builder-style;
-    /// clones are cheap). See [`DetectHandle::detect`] for semantics.
-    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
-        self.retry = Some(policy);
-        self
-    }
-
-    fn submit(&self, image: Vec<f32>, wait: Duration) -> Result<Vec<Detection>> {
-        anyhow::ensure!(image.len() == IMG * IMG * 3, "bad image size {}", image.len());
-        // admission: a content hash that already crashed a shard is
-        // rejected up front — a poison image never gets a second chance
-        // to take a generation down (the occupancy fast path makes this
-        // one relaxed atomic load in the fault-free case)
-        if !self.quarantine.is_empty() && self.quarantine.contains(content_hash(&image)) {
-            self.stats.note_quarantine_hit();
-            bail!("request rejected: content {ERR_QUARANTINED} after crashing a shard");
-        }
-        let (resp, rx) = sync_channel(1);
-        let now = Instant::now();
-        let req = Request {
-            image,
-            resp,
-            enqueued: now,
-            deadline: self.deadline.map(|d| now + d),
-        };
-        match self.tx.send_timeout(req, wait) {
-            Ok(()) => {}
-            Err(SendError::Full(_)) => {
-                bail!("server overloaded: request queue full after {wait:?} (backpressure)")
-            }
-            Err(SendError::Closed(_)) => bail!("server stopped"),
-        }
-        rx.recv().map_err(|_| anyhow!("server dropped request"))?
-    }
-
-    /// Aggregate latency across all shards.
-    pub fn latency(&self) -> LatencyStats {
-        self.stats.merged()
-    }
-
-    /// Per-shard latency snapshots.
-    pub fn shard_latencies(&self) -> Vec<LatencyStats> {
-        self.stats.per_shard()
-    }
-
-    pub fn latency_summary(&self) -> String {
-        self.stats.summary()
     }
 }
 
@@ -471,80 +358,10 @@ impl DetectServer {
         engine: EngineKind,
         cfg: ServerConfig,
     ) -> Result<DetectServer> {
-        let executor = cfg.executor;
-        let threads = cfg.threads.max(1);
-        // resolve the kernel backend once, up front — every shard ever
-        // spawned (including elastic scale-ups) serves with the same
-        // kernels, so a run is never a mid-flight mix of backends
-        let backend = KernelBackend::detect(cfg.simd);
-        let pin = cfg.pin_cores;
-        let ncpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        // a shard never runs a batch larger than max(max_batch, pad_batch)
-        let plan_batch = cfg.max_batch.max(cfg.pad_batch).max(1);
-        // quantize every conv layer once, in parallel — every shard
-        // generation ever spawned shares the projection (this is what
-        // makes elastic scale-up memory-light: a new shard costs one
-        // plan + arena + tile pool, never a quantization pass)
-        let quants = Arc::new(match engine {
-            EngineKind::Shift { bits } => {
-                let qpool = crate::runtime::pool::ThreadPool::new(threads);
-                Some(crate::coordinator::trainer::quantize_conv_layers(
-                    spec, &ckpt.params, bits, 0.75, &qpool,
-                ))
-            }
-            EngineKind::Float => None,
-        });
-        // fail fast on a bad spec/checkpoint before any thread spawns
-        // (the factory also runs on the supervisor thread later, where
-        // a mismatch error would surface asynchronously)
-        anyhow::ensure!(ckpt.params.len() == spec.num_params, "checkpoint/spec param mismatch");
-        anyhow::ensure!(ckpt.state.len() == spec.num_state, "checkpoint/spec state mismatch");
-        let spec = spec.clone();
-        let ckpt = ckpt.clone();
-        let factory: ShardFactory = Box::new(move |generation| {
-            let model =
-                DetectorModel::build_with_quants(&spec, &ckpt, engine, quants.as_ref().as_ref());
-            // one tile pool per planned shard (the naive walk has no
-            // tiled kernels to feed it); with pinning on, generation g
-            // claims the CPU stripe starting at g*threads — the base
-            // CPU is taken by the shard thread itself (the calling
-            // pool participant), workers fill the rest of the stripe
-            let base_cpu = (generation * threads) % ncpus;
-            let pool = match executor {
-                Executor::Planned => Some(Arc::new(if pin {
-                    crate::runtime::pool::ThreadPool::new_pinned(threads, base_cpu)
-                } else {
-                    crate::runtime::pool::ThreadPool::new(threads)
-                })),
-                Executor::Naive => None,
-            };
-            Box::new(move |_shard: usize| -> Result<InferFn> {
-                Ok(match executor {
-                    Executor::Planned => {
-                        if pin {
-                            crate::runtime::pool::pin_current_thread(base_cpu);
-                        }
-                        // compile once on the shard thread; the builder
-                        // model is dropped — the shard owns only the
-                        // plan and its pool
-                        let mut plan = model?.plan_with(
-                            plan_batch,
-                            pool.expect("planned shard pool"),
-                            backend,
-                        );
-                        Box::new(move |images: &[f32], batch: usize| {
-                            Ok(plan.forward_vec(images, batch))
-                        })
-                    }
-                    Executor::Naive => {
-                        let mut model = model?;
-                        Box::new(move |images: &[f32], batch: usize| {
-                            Ok(model.forward_naive(images, batch))
-                        })
-                    }
-                })
-            }) as ShardSetup
-        });
+        // the factory build (backend resolution + quantize-once) lives
+        // in the registry so initial start and hot checkpoint swap are
+        // the same construction path
+        let factory = crate::coordinator::registry::engine_shard_factory(spec, ckpt, engine, &cfg)?;
         Self::start_elastic(cfg, factory)
     }
 
@@ -589,8 +406,10 @@ impl DetectServer {
         };
         let mut cfg = cfg;
         cfg.autoscale = auto.clone();
-        let (tx, rx) = queue::bounded(cfg.queue_depth);
+        let tenant_weights = if cfg.tenants.is_empty() { vec![1] } else { cfg.tenants.clone() };
+        let (tx, rx) = queue::bounded_tenants(cfg.queue_depth, &tenant_weights);
         let stats = Arc::new(ShardStats::empty());
+        let tenants = Arc::new(TenantStats::new(tenant_weights.len()));
         let quarantine = Arc::new(Quarantine::new(Quarantine::DEFAULT_CAP));
         let pool = ShardPool::new(
             cfg.clone(),
@@ -616,9 +435,11 @@ impl DetectServer {
         let handle = DetectHandle {
             tx,
             stats: stats.clone(),
+            tenants,
             quarantine,
             submit_timeout: cfg.submit_timeout,
             deadline: cfg.deadline,
+            tenant: 0,
             retry: None,
         };
         Ok(DetectServer { handle, stats, pool, supervisor })
@@ -671,6 +492,29 @@ impl DetectServer {
     /// included (aggregate via [`DetectHandle::latency`]).
     pub fn shard_latencies(&self) -> Vec<LatencyStats> {
         self.stats.per_shard()
+    }
+
+    /// Requests dequeued per tenant class, in class order — the
+    /// weighted-fair law's ground truth (what the shards actually
+    /// popped, not what clients submitted).
+    pub fn tenant_served(&self) -> Vec<u64> {
+        self.pool.monitor().served_counts()
+    }
+
+    /// Per-tenant end-to-end latency snapshots, in class order.
+    pub fn tenant_latencies(&self) -> Vec<LatencyStats> {
+        self.handle.tenants.per_tenant()
+    }
+
+    /// **Hot-swap seam** (used by
+    /// [`crate::coordinator::registry::ModelRegistry::swap`]): install
+    /// `factory` as the pool's construction path, spawn one
+    /// replacement generation per live generation, then drain the old
+    /// generations through the cancel-before-pop handshake. Requires a
+    /// factory-backed pool. Returns the `(spawned, retired)`
+    /// generation ids.
+    pub fn swap_factory(&self, factory: ShardFactory) -> Result<(Vec<usize>, Vec<usize>)> {
+        self.pool.swap_factory(factory)
     }
 
     /// Stop accepting requests, drain what was admitted, and join
@@ -1061,8 +905,7 @@ pub fn serve_loop(
             if matches!(r.deadline, Some(d) if now > d) {
                 shed += 1;
                 let _ = r.resp.send(Err(anyhow!(
-                    "server overloaded: request shed after exceeding its admission deadline \
-                     (backpressure)"
+                    "server overloaded: request shed after {ERR_DEADLINE} (backpressure)"
                 )));
             } else {
                 live.push(r);

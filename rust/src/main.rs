@@ -40,6 +40,7 @@ USAGE: repro <subcommand> [--flag value ...]
              --autoscale true|false --shards-max N
              --simd auto|on|off --pin-cores true|false
              --faults \"seed=7;panic@pre:nth=9,every=16\"
+             --models \"hi=shift:6,lo=shift:2\" --tenants \"3,1\"
              --requests N --concurrency N]                             (sharded serving)
   gen-data  [--count N --seed N --out DIR]                             (SynthVOC scenes)
 
@@ -73,6 +74,16 @@ the serve loop. Panics are caught by the shard fault domain: in-flight
 requests are answered (bisection isolates a poison request and
 quarantines it), the generation retires, and factory-backed pools
 respawn it under backoff with a circuit breaker.
+
+--models serves a multi-model registry instead of one model: each
+<name>=<engine>[:bits] entry (or [serve.models.<name>] config table)
+gets its own queue, quantized projection, and supervised shard pool,
+with the global shard budget apportioned across models. Requests are
+routed by model name; unknown names are rejected loudly. --tenants
+\"3,1\" splits each cell's queue into weighted-fair tenant classes
+(weight 0 still gets a starvation floor). Registry cells support hot
+checkpoint swap: quantize off-path, spawn replacements, drain old
+generations — zero dropped requests.
 
 serve runs hermetically with the pure-Rust engines (shift/float): with
 no --ckpt it builds a synthetic He-initialized detector, so it works on
@@ -435,6 +446,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         "simd",
         "pin-cores",
         "faults",
+        "models",
+        "tenants",
         "requests",
         "concurrency",
         "config",
@@ -474,6 +487,20 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         server_cfg.autoscale = Some(auto.normalized());
     } else {
         server_cfg.autoscale = None;
+    }
+    if let Some(spec) = args.get("tenants") {
+        server_cfg.tenants = spec
+            .split(',')
+            .map(|w| w.trim().parse().map_err(|_| anyhow!("--tenants: bad weight `{w}`")))
+            .collect::<Result<_>>()?;
+    }
+    // multi-model registry path: --models overrides [serve.models.*]
+    let models = match args.get("models") {
+        Some(spec) => parse_models_flag(spec)?,
+        None => cfg.serve.models.clone(),
+    };
+    if !models.is_empty() {
+        return serve_registry(&models, server_cfg, cfg, requests, concurrency);
     }
 
     let server = match engine.as_str() {
@@ -563,6 +590,111 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     }
     drop(handle);
     server.shutdown();
+    Ok(())
+}
+
+/// Parse `--models "hi=shift:6,lo=shift:2"` into registry entries
+/// (`<name>=<engine>[:bits]`, bits defaulting to 6).
+fn parse_models_flag(spec: &str) -> Result<Vec<lbw_net::config::ModelEntry>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let part = part.trim();
+        let (name, rest) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--models: expected <name>=<engine>[:bits], got `{part}`"))?;
+        let (engine, bits) = match rest.split_once(':') {
+            Some((e, b)) => {
+                (e.to_string(), b.parse().map_err(|_| anyhow!("--models: bad bits `{b}`"))?)
+            }
+            None => (rest.to_string(), 6),
+        };
+        out.push(lbw_net::config::ModelEntry { name: name.trim().to_string(), engine, bits });
+    }
+    Ok(out)
+}
+
+/// The multi-model serve path: start a registry (one serving cell per
+/// entry, shard budget apportioned), then drive it with clients
+/// round-robining over models × tenant classes and report per-model
+/// summaries, per-tenant dequeue counts, and resident weight bytes.
+fn serve_registry(
+    entries: &[lbw_net::config::ModelEntry],
+    server_cfg: ServerConfig,
+    cfg: &Config,
+    requests: usize,
+    concurrency: usize,
+) -> Result<()> {
+    use lbw_net::coordinator::registry::{ModelDef, ModelRegistry};
+    let mut defs = Vec::new();
+    for m in entries {
+        anyhow::ensure!(
+            matches!(m.engine.as_str(), "float" | "shift"),
+            "model `{}`: engine must be float|shift (artifact mode is single-model)",
+            m.name
+        );
+        // hermetic: each model is a synthetic He-initialized detector
+        // at its own bit-width (a real fleet would load per-model
+        // checkpoints here)
+        let (spec, ck) = lbw_net::nn::synth::load_or_synthetic(None, m.bits, cfg.train.seed)?;
+        let kind = if m.engine == "float" {
+            EngineKind::Float
+        } else {
+            EngineKind::Shift { bits: m.bits.clamp(2, 6) }
+        };
+        defs.push(ModelDef { name: m.name.clone(), spec, ckpt: ck, engine: kind });
+    }
+    println!(
+        "serving {} hermetic model(s) behind one registry, tenant weights {:?}",
+        defs.len(),
+        server_cfg.tenants
+    );
+    let registry = ModelRegistry::start(defs, &server_cfg)?;
+    for m in registry.models() {
+        println!(
+            "  model {m}: {} shard(s), {} resident weight bytes",
+            registry.server(m)?.num_shards(),
+            registry.resident_bytes(m)?
+        );
+    }
+    println!("  total resident weight bytes: {}", registry.total_resident_bytes());
+
+    let router = registry.router();
+    let names: Vec<String> = registry.models().iter().map(|s| s.to_string()).collect();
+    let tenants_n = server_cfg.tenants.len().max(1);
+    let per = requests / concurrency.max(1);
+    let t0 = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..concurrency {
+        let router = router.clone();
+        let names = names.clone();
+        clients.push(std::thread::spawn(move || {
+            let scene_cfg = SceneConfig::default();
+            let mut n_dets = 0usize;
+            for i in 0..per {
+                let k = c * per + i;
+                // round-robin over models × tenant classes
+                let model = &names[k % names.len()];
+                let tenant = k % tenants_n;
+                let s = generate_scene(777, k as u64, &scene_cfg);
+                n_dets += router.detect(model, tenant, s.image).expect("detect").len();
+            }
+            n_dets
+        }));
+    }
+    let total_dets: usize = clients.into_iter().map(|c| c.join().expect("client")).sum();
+    let wall = t0.elapsed();
+    let served = per * concurrency;
+    println!(
+        "served {served} requests ({concurrency} clients) in {:.2}s -> {:.1} img/s, {total_dets} detections",
+        wall.as_secs_f64(),
+        served as f64 / wall.as_secs_f64()
+    );
+    println!("{}", registry.summary());
+    for m in &names {
+        println!("  model {m} tenant dequeues: {:?}", registry.server(m)?.tenant_served());
+    }
+    drop(router);
+    registry.shutdown();
     Ok(())
 }
 

@@ -1,0 +1,632 @@
+//! Multi-model multi-tenant serving tests: the weighted-fair dequeue
+//! law converges to the configured weights under arbitrary arrival
+//! patterns (and never starves a zero-weight class), the registry
+//! apportions one shard budget across models and rejects unknown
+//! models loudly, hot checkpoint swap under sustained load loses zero
+//! requests and is bitwise invisible when the incoming checkpoint is
+//! identical, swap composes with the crash-respawn machinery under a
+//! seeded panic storm, and the admission order is pinned — an
+//! expired-deadline poisoned request reports its deadline, not its
+//! quarantine.
+//!
+//! Hermetic: real engines run the synthetic He-initialized detector;
+//! mock engines drive the fault scenarios. Every `ServerConfig` pins
+//! `faults` explicitly so the CI chaos leg's `LBW_FAULTS` plan never
+//! leaks into scenarios that reason about exact counts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lbw_net::consts::{GRID, IMG, NUM_CLS};
+use lbw_net::coordinator::queue::{pick_next, SHARE_SCALE};
+use lbw_net::coordinator::registry::{resident_weight_bytes, ModelDef, ModelRegistry};
+use lbw_net::coordinator::server::{
+    DetectServer, FaultPlan, RespawnPolicy, RetryPolicy, ServerConfig, ShardFactory, ShardSetup,
+};
+use lbw_net::data::{generate_scene, SceneConfig};
+use lbw_net::detection::Detection;
+use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
+use lbw_net::nn::EngineKind;
+
+/// Pixel-1 sentinel: an image carrying it reproducibly panics the mock
+/// engine (the chaos-test poison idiom).
+const POISON_MARK: f32 = 1e9;
+
+fn tagged_image(v: f32) -> Vec<f32> {
+    let mut img = vec![0.0f32; IMG * IMG * 3];
+    img[0] = v;
+    img
+}
+
+fn poison_image(v: f32) -> Vec<f32> {
+    let mut img = tagged_image(v);
+    img[1] = POISON_MARK;
+    img
+}
+
+/// Tag-echo mock engine (see `chaos_serve.rs`): pixel 0 becomes the
+/// class-1 score in cell 0; `poison_mark` panics the batch.
+fn mock_factory(
+    work: Duration,
+    poison_mark: Option<f32>,
+    setups: Arc<AtomicUsize>,
+) -> ShardFactory {
+    Box::new(move |_gen| {
+        setups.fetch_add(1, Ordering::SeqCst);
+        Box::new(move |_shard| {
+            Ok(Box::new(move |images: &[f32], batch: usize| {
+                if let Some(mark) = poison_mark {
+                    for bi in 0..batch {
+                        if images[bi * IMG * IMG * 3 + 1] == mark {
+                            panic!("engine choked on poison pixel (batch slot {bi})");
+                        }
+                    }
+                }
+                if work > Duration::ZERO {
+                    std::thread::sleep(work);
+                }
+                let mut cls = vec![0.0f32; batch * GRID * GRID * NUM_CLS];
+                for bi in 0..batch {
+                    let v = images[bi * IMG * IMG * 3];
+                    for cell in 0..GRID * GRID {
+                        cls[(bi * GRID * GRID + cell) * NUM_CLS] = 1.0;
+                    }
+                    cls[bi * GRID * GRID * NUM_CLS] = 1.0 - v;
+                    cls[bi * GRID * GRID * NUM_CLS + 1] = v;
+                }
+                let reg = vec![0.0f32; batch * GRID * GRID * 4];
+                Ok((cls, reg))
+            }))
+        }) as ShardSetup
+    })
+}
+
+fn assert_bitwise_eq(a: &[Vec<Detection>], b: &[Vec<Detection>], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: request count");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.len(), y.len(), "{label}: request {k} detection count");
+        for (da, db) in x.iter().zip(y) {
+            assert_eq!(da.class, db.class, "{label}: request {k}");
+            assert_eq!(da.score.to_bits(), db.score.to_bits(), "{label}: request {k} score");
+            for (ga, gb) in [
+                (da.bbox.x1, db.bbox.x1),
+                (da.bbox.y1, db.bbox.y1),
+                (da.bbox.x2, db.bbox.x2),
+                (da.bbox.y2, db.bbox.y2),
+            ] {
+                assert_eq!(ga.to_bits(), gb.to_bits(), "{label}: request {k} bbox");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// weighted-fair dequeue: the pure law
+// ---------------------------------------------------------------------
+
+/// Property test: for several weight vectors and several LCG-seeded
+/// arrival patterns, dequeue counts over any fully-backlogged window
+/// converge to the configured weights within a bounded tolerance —
+/// regardless of what chaotic arrival history preceded the window.
+#[test]
+fn weighted_fair_dequeue_converges_for_any_arrival_pattern() {
+    let weight_sets: &[&[u32]] = &[&[3, 1], &[5, 2, 1], &[1, 1, 1, 1], &[7, 3]];
+    for (si, &weights) in weight_sets.iter().enumerate() {
+        for seed in 0..4u64 {
+            let n = weights.len();
+            let mut lcg = 0x9E3779B97F4A7C15u64 ^ (seed * 1111 + si as u64);
+            let mut next = || {
+                lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (lcg >> 33) as usize
+            };
+            let mut served = vec![0u64; n];
+            let mut depths = vec![0usize; n];
+
+            // chaotic prefix: random arrivals, dequeue when possible —
+            // leaves `served` in an arbitrary (pattern-dependent) state
+            for _ in 0..600 {
+                depths[next() % n] += 1;
+                if next() % 3 != 0 {
+                    if let Some(t) = pick_next(&served, &depths, weights) {
+                        depths[t] -= 1;
+                        served[t] += 1;
+                    }
+                }
+            }
+
+            // flood every class, then give the arbiter one bounded
+            // window to absorb the prefix's virtual-time debt (a class
+            // the arrivals starved is owed a catch-up burst)
+            for d in depths.iter_mut() {
+                *d = 1_000_000;
+            }
+            for _ in 0..600 * n as u64 {
+                let t = pick_next(&served, &depths, weights).expect("backlogged");
+                served[t] += 1;
+            }
+
+            // steady state: counts over any further window must track
+            // the weights tightly, whatever the arrival history was
+            let before = served.clone();
+            let window = 300 * n as u64;
+            for _ in 0..window {
+                let t = pick_next(&served, &depths, weights).expect("backlogged");
+                served[t] += 1;
+            }
+            let total_w: u64 = weights.iter().map(|&w| w as u64).sum();
+            for t in 0..n {
+                let got = (served[t] - before[t]) as f64;
+                let want = window as f64 * weights[t] as f64 / total_w as f64;
+                assert!(
+                    (got - want).abs() <= 2.0 + want * 0.05,
+                    "weights {weights:?} seed {seed}: class {t} got {got} want ~{want}"
+                );
+            }
+        }
+    }
+}
+
+/// A zero-weight tenant is background traffic, not dead traffic: the
+/// starvation floor keeps serving it at a bounded trickle.
+#[test]
+fn zero_weight_tenant_is_served_at_the_floor_rate() {
+    let weights: &[u32] = &[4, 0];
+    let mut served = vec![0u64; 2];
+    let depths = vec![1_000_000usize; 2];
+    let window = 4_000u64;
+    for _ in 0..window {
+        let t = pick_next(&served, &depths, weights).expect("backlogged");
+        served[t] += 1;
+    }
+    assert!(served[1] >= 1, "zero-weight class must never starve: {served:?}");
+    // ...but it stays a trickle: effective share 1 vs 4*SHARE_SCALE
+    assert!(
+        served[1] * (4 * SHARE_SCALE) <= served[0] + 4 * SHARE_SCALE,
+        "floor share must stay bounded: {served:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// registry: budget, routing, residency
+// ---------------------------------------------------------------------
+
+fn registry_cfg() -> ServerConfig {
+    ServerConfig {
+        shards: 4,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+        queue_depth: 64,
+        submit_timeout: Duration::from_secs(30),
+        faults: None,
+        ..Default::default()
+    }
+}
+
+fn two_model_defs(spec: &lbw_net::coordinator::ParamSpec) -> Vec<ModelDef> {
+    vec![
+        ModelDef {
+            name: "hi".into(),
+            spec: spec.clone(),
+            ckpt: synthetic_checkpoint(spec, 2027, 6),
+            engine: EngineKind::Shift { bits: 6 },
+        },
+        ModelDef {
+            name: "lo".into(),
+            spec: spec.clone(),
+            ckpt: synthetic_checkpoint(spec, 2027, 2),
+            engine: EngineKind::Shift { bits: 2 },
+        },
+    ]
+}
+
+/// One global shard budget apportioned across models, loud rejection
+/// of unknown model names, and per-model low-bit weight residency.
+#[test]
+fn registry_apportions_budget_routes_and_rejects_unknown_models() {
+    let spec = synthetic_spec(SynthConfig::default());
+    let registry = ModelRegistry::start(two_model_defs(&spec), &registry_cfg()).unwrap();
+    assert_eq!(registry.models(), vec!["hi", "lo"]);
+    // fixed pool: base.shards = 4 splits 2 + 2
+    assert_eq!(registry.server("hi").unwrap().num_shards(), 2);
+    assert_eq!(registry.server("lo").unwrap().num_shards(), 2);
+
+    // the LBW residency claim, measured: the 2-bit model keeps a third
+    // of the 6-bit model's bytes, both a fraction of one float model
+    let hi = registry.resident_bytes("hi").unwrap();
+    let lo = registry.resident_bytes("lo").unwrap();
+    assert_eq!(hi, resident_weight_bytes(spec.num_params, EngineKind::Shift { bits: 6 }));
+    assert!(lo * 2 < hi, "2-bit residency must undercut 6-bit: {lo} vs {hi}");
+    assert!(
+        registry.total_resident_bytes() < resident_weight_bytes(spec.num_params, EngineKind::Float),
+        "the whole two-model registry fits inside one float model's weights"
+    );
+
+    // routing: both models answer; the same scene lands different
+    // detections because the checkpoints quantized differently
+    let router = registry.router();
+    let scene = generate_scene(4242, 0, &SceneConfig::default());
+    router.detect("hi", 0, scene.image.clone()).unwrap();
+    router.detect("lo", 0, scene.image.clone()).unwrap();
+
+    // unknown models are rejected loudly, naming what IS served
+    for err in [
+        registry.handle("nope").unwrap_err(),
+        router.handle("nope").unwrap_err(),
+        router.detect("nope", 0, scene.image.clone()).unwrap_err(),
+    ] {
+        let msg = err.to_string();
+        assert!(msg.contains("unknown model"), "{msg}");
+        assert!(msg.contains("hi") && msg.contains("lo"), "must name served models: {msg}");
+    }
+
+    // duplicate and empty registries fail at start
+    let mut dup = two_model_defs(&spec);
+    dup[1].name = "hi".into();
+    assert!(ModelRegistry::start(dup, &registry_cfg()).unwrap_err().to_string().contains("duplicate"));
+    assert!(ModelRegistry::start(Vec::new(), &registry_cfg()).is_err());
+
+    drop(router);
+    registry.shutdown();
+}
+
+/// With autoscaling on, the apportioned budget caps each model's
+/// `max_shards` so N models can never oversubscribe the global bound.
+#[test]
+fn registry_splits_the_autoscale_budget() {
+    let spec = synthetic_spec(SynthConfig::default());
+    let mut cfg = registry_cfg();
+    cfg.shards = 1;
+    cfg.autoscale = Some(lbw_net::coordinator::server::AutoscaleConfig {
+        min_shards: 1,
+        max_shards: 6,
+        // keep the idle scale-down out of this test's way: only the
+        // manual scaler moves the shard count here
+        down_idle_ticks: u32::MAX,
+        ..Default::default()
+    });
+    let registry = ModelRegistry::start(two_model_defs(&spec), &cfg).unwrap();
+    // 6 across 2 models = 3 + 3; each cell starts at its own min
+    for m in ["hi", "lo"] {
+        let s = registry.server(m).unwrap();
+        assert_eq!(s.num_shards(), 1, "model {m} starts at min");
+        // drive the cell's manual scaler to its apportioned ceiling
+        let scaler = s.scaler();
+        while scaler.live() < 3 {
+            scaler.scale_up().unwrap();
+        }
+        assert_eq!(s.num_shards(), 3, "model {m} capped at its share");
+    }
+    registry.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// tenant classes through a serving cell
+// ---------------------------------------------------------------------
+
+/// End-to-end tenant arbitration: a backlogged 3:1 cell dequeues ~3x
+/// as much tenant-0 as tenant-1 work, both classes finish, and the
+/// per-tenant books (dequeue counts, latency records) are truthful.
+#[test]
+fn tenant_classes_share_a_cell_by_weight() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig {
+        shards: 1,
+        max_batch: 1,
+        batch_window: Duration::ZERO,
+        queue_depth: 256,
+        tenants: vec![3, 1],
+        submit_timeout: Duration::from_secs(30),
+        faults: None,
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_elastic(cfg, mock_factory(Duration::from_micros(300), None, setups))
+            .unwrap();
+    let handle = server.handle();
+
+    // pre-load a backlog for both classes, then let the shard drain it
+    let per_class = 40;
+    let mut clients = Vec::new();
+    for k in 0..per_class {
+        for t in 0..2usize {
+            let h = handle.clone().for_tenant(t);
+            let v = 0.5 + 0.3 * (k as f32 / per_class as f32);
+            clients.push(std::thread::spawn(move || h.detect(tagged_image(v))));
+        }
+    }
+    for c in clients {
+        c.join().unwrap().unwrap();
+    }
+
+    let served = server.tenant_served();
+    assert_eq!(served.len(), 2);
+    assert_eq!(served.iter().sum::<u64>(), 2 * per_class as u64, "{served:?}");
+    // both classes completed everything (the queue drained), so the
+    // weighted arbitration shows up in the books, not the totals
+    let lat = server.tenant_latencies();
+    assert_eq!(lat[0].count(), per_class);
+    assert_eq!(lat[1].count(), per_class);
+    // the low-weight class waited longer on average: it kept losing
+    // the 3:1 arbitration while the backlog drained
+    assert!(
+        lat[1].mean_ms() > lat[0].mean_ms(),
+        "tenant 1 (weight 1) must queue behind tenant 0 (weight 3): {:.2}ms vs {:.2}ms",
+        lat[1].mean_ms(),
+        lat[0].mean_ms()
+    );
+
+    drop(handle);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// hot checkpoint swap
+// ---------------------------------------------------------------------
+
+fn swap_cfg() -> ServerConfig {
+    ServerConfig {
+        shards: 2,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+        queue_depth: 64,
+        submit_timeout: Duration::from_secs(30),
+        faults: None,
+        ..Default::default()
+    }
+}
+
+/// Drive `n` scene requests through `registry`'s model `m6` from 4
+/// client threads; optionally hot-swap to `swap_ckpt` mid-burst.
+/// Returns detections in request order.
+fn drive_burst(
+    registry: &ModelRegistry,
+    n: usize,
+    swap_ckpt: Option<&lbw_net::coordinator::Checkpoint>,
+) -> Vec<Vec<Detection>> {
+    let handle = registry.handle("m6").unwrap();
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let h = handle.clone();
+            let scene_cfg = SceneConfig::default();
+            std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for i in 0..n / 4 {
+                    let k = c * (n / 4) + i;
+                    let s = generate_scene(4242, k as u64, &scene_cfg);
+                    out.push((k, h.detect(s.image).expect("swap must drop nothing")));
+                }
+                out
+            })
+        })
+        .collect();
+    if let Some(ck) = swap_ckpt {
+        // land the swap while the burst is in flight
+        std::thread::sleep(Duration::from_millis(5));
+        let (spawned, retired) = registry.swap("m6", ck).unwrap();
+        assert!(spawned >= 1 && retired >= 1, "swap must turn over generations");
+    }
+    let mut all: Vec<(usize, Vec<Detection>)> =
+        clients.into_iter().flat_map(|c| c.join().unwrap()).collect();
+    all.sort_by_key(|(k, _)| *k);
+    all.into_iter().map(|(_, d)| d).collect()
+}
+
+/// The tentpole acceptance test: a hot swap under sustained load loses
+/// zero requests, and swapping to an *identical* checkpoint is bitwise
+/// invisible — every detection equals the swap-free twin run.
+#[test]
+fn hot_swap_under_load_is_zero_drop_and_bitwise_invisible() {
+    let spec = synthetic_spec(SynthConfig::default());
+    let ckpt = synthetic_checkpoint(&spec, 2027, 6);
+    let def = || {
+        vec![ModelDef {
+            name: "m6".into(),
+            spec: spec.clone(),
+            ckpt: ckpt.clone(),
+            engine: EngineKind::Shift { bits: 6 },
+        }]
+    };
+    let n = 48;
+
+    let baseline = ModelRegistry::start(def(), &swap_cfg()).unwrap();
+    let clean = drive_burst(&baseline, n, None);
+    let clean_events = baseline.server("m6").unwrap().scale_events();
+    baseline.shutdown();
+    assert!(clean.iter().any(|d| !d.is_empty()), "parity would be vacuous");
+
+    let swapped = ModelRegistry::start(def(), &swap_cfg()).unwrap();
+    let stormy = drive_burst(&swapped, n, Some(&ckpt));
+    let cell = swapped.server("m6").unwrap();
+    // zero drops: every request answered exactly once, zero errors
+    let agg = cell.handle().latency();
+    assert_eq!(agg.count(), n, "every request served across the swap");
+    assert_eq!(agg.errors(), 0);
+    // a swap is a replacement, not a scaling decision: the event
+    // counters stay exactly where the swap-free twin left them
+    assert_eq!(cell.scale_events(), clean_events, "swap must not book scale events");
+    assert_eq!(cell.num_shards(), 2, "generation count restored after turnover");
+    swapped.shutdown();
+
+    assert_bitwise_eq(&stormy, &clean, "identical-checkpoint swap");
+}
+
+/// A swap to a *different* checkpoint still drops nothing — and
+/// afterwards the cell provably serves the new weights (fresh requests
+/// match a from-scratch server on the new checkpoint).
+#[test]
+fn swap_to_new_checkpoint_takes_effect_without_drops() {
+    let spec = synthetic_spec(SynthConfig::default());
+    let old = synthetic_checkpoint(&spec, 2027, 6);
+    let new = synthetic_checkpoint(&spec, 3031, 6);
+    let registry = ModelRegistry::start(
+        vec![ModelDef {
+            name: "m6".into(),
+            spec: spec.clone(),
+            ckpt: old,
+            engine: EngineKind::Shift { bits: 6 },
+        }],
+        &swap_cfg(),
+    )
+    .unwrap();
+    drive_burst(&registry, 24, Some(&new));
+    let agg = registry.server("m6").unwrap().handle().latency();
+    assert_eq!(agg.count(), 24);
+    assert_eq!(agg.errors(), 0);
+
+    // post-swap requests run on the new weights: compare against a
+    // fresh single-model server started directly from `new`
+    let scene = generate_scene(9090, 0, &SceneConfig::default());
+    let after = registry.handle("m6").unwrap().detect(scene.image.clone()).unwrap();
+    let twin = ModelRegistry::start(
+        vec![ModelDef {
+            name: "m6".into(),
+            spec: spec.clone(),
+            ckpt: new.clone(),
+            engine: EngineKind::Shift { bits: 6 },
+        }],
+        &swap_cfg(),
+    )
+    .unwrap();
+    let want = twin.handle("m6").unwrap().detect(scene.image).unwrap();
+    twin.shutdown();
+    assert_bitwise_eq(&[after], &[want], "post-swap serves the new checkpoint");
+
+    // a bad checkpoint is rejected off-path: the cell keeps serving
+    let mut bad = new.clone();
+    bad.params.pop();
+    let err = registry.swap("m6", &bad).unwrap_err();
+    assert!(err.to_string().contains("swap rejected"), "{err}");
+    let scene = generate_scene(9090, 1, &SceneConfig::default());
+    registry.handle("m6").unwrap().detect(scene.image).unwrap();
+
+    registry.shutdown();
+}
+
+/// Swap and crash-respawn compose: a seeded panic storm rages while a
+/// hot swap turns the generations over — retrying clients still lose
+/// nothing, and the books stay truthful.
+#[test]
+fn swap_composes_with_crash_respawn_under_a_panic_storm() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let plan = FaultPlan::parse("seed=5;panic@pre:nth=3,every=3,count=1000000").unwrap();
+    let cfg = ServerConfig {
+        shards: 2,
+        max_batch: 4,
+        batch_window: Duration::from_millis(1),
+        queue_depth: 64,
+        submit_timeout: Duration::from_secs(30),
+        faults: Some(plan),
+        respawn: RespawnPolicy {
+            base: Duration::from_millis(1),
+            max: Duration::from_millis(20),
+            breaker: 16,
+            seed: 42,
+        },
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_elastic(cfg, mock_factory(Duration::from_millis(1), None, setups.clone()))
+            .unwrap();
+    let handle = server
+        .handle()
+        .with_retry(RetryPolicy { max_attempts: 6, backoff: Duration::from_millis(2), seed: 9 });
+
+    let burst = 40;
+    let clients: Vec<_> = (0..burst)
+        .map(|k| {
+            let h = handle.clone();
+            let v = 0.5 + 0.4 * (k as f32 / burst as f32);
+            (v, std::thread::spawn(move || h.detect(tagged_image(v))))
+        })
+        .collect();
+    // swap mid-storm: the new generations inherit the same mock (and
+    // the same seeded fault plan, keyed by generation)
+    std::thread::sleep(Duration::from_millis(8));
+    let swap_setups = Arc::new(AtomicUsize::new(0));
+    let (spawned, retired) =
+        server.swap_factory(mock_factory(Duration::from_millis(1), None, swap_setups)).unwrap();
+    assert!(!spawned.is_empty() && !retired.is_empty());
+
+    for (v, c) in clients {
+        let dets = c.join().unwrap().unwrap_or_else(|e| panic!("tag {v} lost in swap+storm: {e}"));
+        assert_eq!(dets.len(), 1, "tag {v}");
+        assert!((dets[0].score - v).abs() < 1e-6, "tag {v}");
+    }
+    let agg = handle.latency();
+    assert_eq!(agg.count(), burst, "every request served exactly once");
+    assert_eq!(agg.errors(), 0);
+    assert!(!server.degraded());
+
+    drop(handle);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// admission order
+// ---------------------------------------------------------------------
+
+/// Regression for the pinned admission order (size → deadline →
+/// quarantine → capacity): a request that is BOTH past its deadline
+/// and quarantined reports the deadline — lateness is not a content
+/// verdict — and the deadline is stamped once per logical request, so
+/// a retry loop cannot mint itself a fresh budget.
+#[test]
+fn expired_deadline_wins_over_quarantine_at_admission() {
+    let setups = Arc::new(AtomicUsize::new(0));
+    let cfg = ServerConfig {
+        shards: 1,
+        max_batch: 8,
+        batch_window: Duration::from_millis(5),
+        queue_depth: 64,
+        submit_timeout: Duration::from_secs(30),
+        faults: None,
+        respawn: RespawnPolicy {
+            base: Duration::from_millis(1),
+            max: Duration::from_millis(10),
+            breaker: 5,
+            seed: 7,
+        },
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_elastic(cfg, mock_factory(Duration::ZERO, Some(POISON_MARK), setups))
+            .unwrap();
+    let handle = server.handle();
+
+    // get the poison content quarantined the organic way
+    let poison = poison_image(0.9);
+    let err = handle.detect(poison.clone()).unwrap_err();
+    assert!(err.to_string().contains("poisoned request"), "{err}");
+    let t0 = Instant::now();
+    while server.respawns() < server.crashes() && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // sanity: without a deadline, the same bytes report quarantine
+    let err = handle.detect(poison.clone()).unwrap_err();
+    assert!(err.to_string().contains("quarantined"), "{err}");
+
+    // an already-expired deadline must win over the quarantine verdict
+    let expired = handle.clone().with_deadline(Duration::ZERO);
+    let hits_before = server.quarantine_hits();
+    let err = expired.detect(poison.clone()).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("exceeding its admission deadline"), "want deadline error, got: {msg}");
+    assert!(!msg.contains("quarantined"), "deadline must preempt the content verdict: {msg}");
+    assert_eq!(server.quarantine_hits(), hits_before, "no quarantine hit booked for lateness");
+
+    // ...and a retrying handle reports the same: the one-shot deadline
+    // stamp makes every attempt equally expired, and an expired-
+    // deadline error is not retryable
+    let expired_retry = expired
+        .with_retry(RetryPolicy { max_attempts: 5, backoff: Duration::from_millis(1), seed: 3 });
+    let err = expired_retry.detect(tagged_image(0.5)).unwrap_err();
+    assert!(err.to_string().contains("exceeding its admission deadline"), "{err}");
+
+    // a healthy handle still serves
+    let dets = handle.detect(tagged_image(0.7)).unwrap();
+    assert_eq!(dets.len(), 1);
+    drop(handle);
+    drop(expired_retry);
+    server.shutdown();
+}

@@ -24,7 +24,15 @@ to:
     supervisor failed to replace a dead generation; and a `"storm"`
     row with zero crashes means the injection harness never fired.
     Rows carrying a `"faults"` marker other than `"none"` are excluded
-    from the healthy closed-loop baselines above.
+    from the healthy closed-loop baselines above;
+  * multi-model registry rows (`"models"` field present) sit outside
+    the closed-loop baselines and carry their own laws: a hot-swap row
+    (`"swaps"` present) with `lost > 0` fails — a checkpoint swap must
+    never cost a client its response — and one with `swaps < 1` means
+    the swap harness never fired; a tenant row (`"tenant_mix"`
+    present) where any listed tenant recorded zero dequeues fails —
+    the weighted-fair arbiter must never starve a class, including
+    weight-0 background tenants.
 
 Floors are overridable via env (GATE_PLANNED_RATIO_MIN,
 GATE_THREAD_RATIO_MIN, GATE_SIMD_RATIO_MIN) so a deliberate trade-off
@@ -74,6 +82,10 @@ def closed_loop_rate(rows, executor, engine, threads, simd=None):
             # chaos cells measure the fault domain, not the engine —
             # only fault-free rows are baseline material
             and r.get("faults") in (None, "none")
+            # multi-model registry cells route through tenant queues
+            # and (for swap rows) a mid-run generation turnover — not
+            # the single-model configuration the baselines compare
+            and "models" not in r
             and (simd is None or r.get("simd", "off") == simd)
         ):
             return r.get("imgs_per_s", 0.0)
@@ -147,6 +159,38 @@ def check(rows):
                     "fault-injection harness never fired"
                 )
     for r in rows:
+        if "models" not in r:
+            continue
+        label = f"registry row (models {r.get('models')})"
+        if "swaps" in r:
+            swaps = r.get("swaps", 0)
+            lost = r.get("lost", 0)
+            if lost > 0:
+                failures.append(
+                    f"{label}: {lost} lost response(s) across {swaps} hot "
+                    "swap(s) — a checkpoint swap must never cost a client "
+                    "its response"
+                )
+            if swaps < 1:
+                failures.append(
+                    f"{label}: swap row recorded no swaps — the "
+                    "hot-swap harness never fired"
+                )
+        if "tenant_mix" in r:
+            counts = r.get("tenant_counts", [])
+            if not counts:
+                failures.append(
+                    f"{label}: tenant row (mix {r.get('tenant_mix')}) "
+                    "carries no dequeue counts"
+                )
+            for t, n in enumerate(counts):
+                if n < 1:
+                    failures.append(
+                        f"{label}: tenant {t} (mix {r.get('tenant_mix')}) "
+                        "recorded zero dequeues — the weighted-fair "
+                        "arbiter starved a listed class"
+                    )
+    for r in rows:
         if r.get("shards") == "auto":
             ups = r.get("scale_ups", 0)
             downs = r.get("scale_downs", 0)
@@ -199,6 +243,20 @@ def healthy_rows():
         dict(base, executor="planned", engine="shift6", shards=1, threads=1,
              imgs_per_s=240.0, simd="on", faults="storm", crashes=3,
              respawns=3, lost=0)
+    )
+    # the multi-model registry rows: a mixed-tenant cell (every listed
+    # tenant saw dequeues) and a hot-swap cell (swaps landed, nothing
+    # lost)
+    rows.append(
+        dict(base, executor="planned", engine="multi", shards=2, threads=1,
+             imgs_per_s=250.0, simd="on", models="hi=shift6+lo=shift2",
+             resident_weight_bytes=1000, tenant_mix="3:1",
+             tenant_counts=[36, 12], tenant_p95_ms=[8.0, 14.0])
+    )
+    rows.append(
+        dict(base, executor="planned", engine="shift6", shards=2, threads=1,
+             imgs_per_s=260.0, simd="on", models="m6=shift6",
+             resident_weight_bytes=750, swaps=2, lost=0)
     )
     return rows
 
@@ -276,6 +334,35 @@ def self_test():
             r["respawns"] = 0
     fails = check(doctored)
     assert any("never fired" in f for f in fails), fails
+
+    # injected regression 10: the hot swap lost a response
+    doctored = healthy_rows()
+    for r in doctored:
+        if "swaps" in r:
+            r["lost"] = 1
+    fails = check(doctored)
+    assert any("hot" in f and "swap" in f for f in fails), fails
+
+    # injected regression 11: the weighted-fair arbiter starved a tenant
+    doctored = healthy_rows()
+    for r in doctored:
+        if "tenant_counts" in r:
+            r["tenant_counts"] = [48, 0]
+    fails = check(doctored)
+    assert any("starved" in f for f in fails), fails
+
+    # injected regression 12: the swap harness never fired
+    doctored = healthy_rows()
+    for r in doctored:
+        if "swaps" in r:
+            r["swaps"] = 0
+    fails = check(doctored)
+    assert any("hot-swap harness" in f for f in fails), fails
+
+    # a pre-registry bench file (no "models" rows at all) must still
+    # pass: the registry gate only judges rows carrying the marker
+    premodel = [r for r in healthy_rows() if "models" not in r]
+    assert check(premodel) == [], "pre-registry trajectory must pass (gate skipped)"
 
     # a pre-fault bench file (no "faults" rows at all) must still pass:
     # the fault gate only judges rows that carry the marker
