@@ -6,45 +6,44 @@
 #                   (needs the python env; optional — everything in
 #                   `make test` passes without artifacts)
 #   make bench      run every in-tree benchmark binary
-#   make bench-smoke  reduced bench_serve sweep (planned vs naive
-#                   executors, 1 shard, tile pools at 1 and 4 threads,
-#                   the adaptive-vs-fixed window cells under open-loop
-#                   steady/bursty load, the elastic fixed-vs-autoscale
-#                   cells under bursty load, the fault sweep: the
-#                   closed-loop cell under a seeded crash-storm plan
-#                   with retrying clients, plus the registry cells: a
-#                   mixed-tenant two-model cell under 3:1 weighted-fair
-#                   shares and a hot-swap-under-load cell) — fast
-#                   enough for CI; kernel, threading, batching,
-#                   autoscaling, crash-recovery, tenant-fairness, or
-#                   swap regressions fail loudly here
+#   make bench-smoke  the serve half of the committed CI lab plan
+#                   (`repro lab run plans/ci-smoke.toml --only serve`):
+#                   the planned-vs-naive / thread / simd grid at 2
+#                   repeats plus every named scenario cell (open-loop
+#                   window cells, elastic autoscale, trained
+#                   checkpoint, crash-storm, tenants, hot swap).
+#                   Completed trials resume from lab/runs/<id>/ instead
+#                   of re-measuring; BENCH_serve.json is regenerated in
+#                   place from the run (no append clobbering)
 #   make bench-gate   regression-gate the fresh BENCH_serve.json
-#                   (self-tests the gate on doctored rows first, then
-#                   fails if planned/naive < 2x, 4t/1t < 1.5x, the
-#                   shift-engine simd/scalar ratio < 1.3x when SIMD
-#                   rows are present, an autoscale row shows no scale
-#                   events, a fault row lost a response / never
-#                   respawned / never fired its storm plan, a hot-swap
-#                   row lost a response, or a tenant row starved a
-#                   listed class)
+#                   (self-tests the gate on doctored rows AND doctored
+#                   lab tables first, then gates the lab tables:
+#                   ratio floors — planned/naive 2x, 4t/1t 1.5x,
+#                   simd/scalar 1.3x — compare cell means and fail
+#                   only past the pooled std; the absolute laws
+#                   (autoscale events, fault/swap rows lose nothing,
+#                   tenants never starved) hold on every repeat)
 #   make bench-kernels  scalar-vs-SIMD GEMM micro-bench (f32 + shift
 #                   kernels at the width-8/13 shapes, bitwise parity
 #                   checked, GFLOP-equiv + speedup printed)
-#   make bench-train-smoke  hermetic accuracy trajectory: train the
-#                   float detector, quantize + retrain every method
-#                   (exact ternary, LBW 4/6-bit, DoReFa, INQ) on 2
-#                   seeds, write BENCH_train.json
+#   make bench-train-smoke  the train half of the CI lab plan
+#                   (`--only train`): float detector per seed, then
+#                   every method (exact ternary, LBW 4/6-bit, DoReFa,
+#                   INQ) on 2 seeds; resumes completed cells, writes
+#                   BENCH_train.json from the lab tables
 #   make accuracy-gate  regression-gate the fresh BENCH_train.json
-#                   (self-tests on doctored rows first, then fails if
-#                   6-bit drifts > 0.06 mAP below float, ternary
-#                   collapses, or the bit ordering inverts)
+#                   (self-tests on doctored rows + tables first, then
+#                   fails if the 6-bit mean drifts > 0.06 mAP below
+#                   float past the pooled seed std, ternary collapses,
+#                   or the bit ordering inverts)
+#   make lab-gc     remove lab runs no committed plan references
 #   make lint       rustfmt + clippy, as CI runs them
 
 CARGO ?= cargo
 PYTHON ?= python3
 
 .PHONY: build test artifacts bench bench-smoke bench-gate \
-	bench-kernels bench-train-smoke accuracy-gate lint clean
+	bench-kernels bench-train-smoke accuracy-gate lab-gc lint clean
 
 build:
 	$(CARGO) build --release
@@ -59,7 +58,7 @@ bench: build
 	$(CARGO) bench
 
 bench-smoke: build
-	$(CARGO) run --release --example bench_serve -- --smoke
+	$(CARGO) run --release -- lab run plans/ci-smoke.toml --only serve
 
 bench-gate:
 	$(PYTHON) scripts/bench_gate.py --self-test
@@ -69,7 +68,10 @@ bench-kernels: build
 	$(CARGO) run --release --example bench_kernels
 
 bench-train-smoke: build
-	$(CARGO) run --release --example bench_train -- --smoke
+	$(CARGO) run --release -- lab run plans/ci-smoke.toml --only train
+
+lab-gc: build
+	$(CARGO) run --release -- lab gc
 
 accuracy-gate:
 	$(PYTHON) scripts/accuracy_gate.py --self-test

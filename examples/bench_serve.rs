@@ -1,1199 +1,93 @@
-//! Serving load generator: sweep executor × engine × shard count ×
-//! intra-op threads × batch window over SynthVOC scenes and record the
-//! throughput/latency trajectory — plus an adaptive-vs-fixed window
-//! comparison under open-loop steady and bursty load.
+//! Serving benchmark — thin driver over the experiment lab.
 //!
-//! Fully hermetic — the sweep drives the pure-Rust engines behind the
-//! sharded server on a synthetic He-initialized detector, so it runs
-//! on a clean checkout (no Python, no artifacts). Emits
-//! `BENCH_serve.json`: one row per (executor, engine, shards, threads,
-//! batch window) cell with wall time, img/s, latency percentiles, mean
-//! batch occupancy, and the per-shard request counts. The `executor`
-//! field distinguishes the planned arena executor (production path)
-//! from the naive per-op reference; the `threads` field is the
-//! per-shard tile-pool width (planned executor only — the naive walk
-//! is always single-threaded). The summary prints the planned/naive
-//! img/s ratio and the planned 4-thread/1-thread speedup per engine at
-//! a single shard.
+//! The sweep itself (grid cells, window/load comparisons, autoscale,
+//! trained-checkpoint, fault-storm, tenant and swap cells) lives in
+//! `lbw_net::lab::runner`; this binary just picks a plan and runs it:
 //!
-//! Since the adaptive-window PR every row also carries `"window"`
-//! (`"fixed"` for the classic closed-loop sweep), and an extra
-//! open-loop sweep drives window ∈ {fixed-2ms, adaptive(max 10ms)} ×
-//! load ∈ {steady, bursty} through one planned shift6 shard — those
-//! rows additionally carry `"load"` and the merged `"shed"` counter.
-//! The summary quotes bursty mean-batch occupancy (adaptive vs
-//! fixed-2ms) and steady p95 (adaptive must not lose).
+//! * `--smoke` (CI): the committed `plans/ci-smoke.toml`, serve trials
+//!   only — identical cells to `repro lab run ci-smoke --only serve`,
+//!   so a bench run and a lab run share one content-addressed run
+//!   directory and resume each other's completed trials instead of
+//!   re-measuring (and `BENCH_serve.json` is regenerated in place, not
+//!   appended to — re-running an identical cell can no longer clobber
+//!   or duplicate the accumulated rows).
+//! * default (full): a wider built-in plan — 192 requests, shards
+//!   {1,2,4}, batch windows {0,2} ms — for local deep measurements.
 //!
-//! Since the elastic-autoscaling PR an **autoscale sweep** drives the
-//! same open-loop bursty schedule through a fixed single shard and an
-//! elastic pool bounded [1, 4]: the elastic row carries
-//! `"shards": "auto"` plus `"shards_max"`, `"scale_ups"`, and
-//! `"scale_downs"` (the supervisor must both spawn under bursts and
-//! drain in the gaps), and its `"shard_counts"` lists every shard
-//! generation that ever lived. The summary quotes elastic p95 vs the
-//! fixed single shard (elastic must not lose).
-//!
-//! Since the trained-checkpoint PR every row also carries
-//! `"checkpoint"` (`"synth"` for the He-init synthetic checkpoint) and
-//! one extra closed-loop cell serves a checkpoint produced by a short
-//! hermetic training run (`"checkpoint": "trained"`) — the gate's
-//! baselines stay on the synth rows.
-//!
-//! Since the fault-domain PR a **fault sweep** re-runs the planned
-//! shift6 single-shard closed loop fault-free and under a seeded panic
-//! storm (`seed=11;panic@pre:nth=3,every=5,...`) with retry-enabled
-//! clients: those two rows carry `"faults"` (`"none"`/`"storm"`) plus
-//! `"crashes"`, `"respawns"`, and `"lost"`. The gate fails any row
-//! with `crashes > 0` and `lost > 0` (a crash must never cost a
-//! response) or crashes without respawns; rows carrying a `"faults"`
-//! marker sit outside the healthy closed-loop baselines.
-//!
-//! Since the SIMD-kernel PR every row also carries `"simd"`
-//! (`"on"` when the serving plans used the explicit AVX2/NEON kernels,
-//! `"off"` for the scalar reference — naive-executor rows are always
-//! `"off"`; rows from before this PR are implicitly `"off"`), and two
-//! extra closed-loop cells re-run the planned float/shift6 single-
-//! shard single-thread config with the backend forced `off`, so the
-//! simd/scalar ratio `scripts/bench_gate.py` gates on is measured
-//! through the identical serving stack. The summary prints that ratio
-//! per engine.
-//!
-//! Since the multi-model PR a **registry sweep** drives two cells
-//! through a `ModelRegistry`: a mixed-tenant cell (6-bit + 2-bit
-//! models behind one apportioned shard budget, tenant shares 3:1)
-//! whose row carries `"models"`, `"tenant_mix"`, `"tenant_counts"`,
-//! `"tenant_p95_ms"`, and `"resident_weight_bytes"`, and a
-//! hot-swap-under-load cell whose row carries `"swaps"` and `"lost"`.
-//! The gate fails a swap row that lost a request and a tenant row
-//! with a starved tenant; rows carrying `"models"` sit outside the
-//! single-model closed-loop baselines.
-//!
-//! Run with: `cargo run --release --example bench_serve`
-//! Smoke mode (CI): `cargo run --release --example bench_serve -- --smoke`
-//! (reduced request count + 1-shard cells only; also honours the
-//! `BENCH_SERVE_REQUESTS` env var).
+//! `BENCH_SERVE_REQUESTS` overrides the request budget; the override
+//! is hashed into the run id like any other knob, so different budgets
+//! never share trials.
 
-use std::time::{Duration, Instant};
+use std::path::Path;
 
-use anyhow::Result;
-use lbw_net::coordinator::autoscale::AutoscaleConfig;
-use lbw_net::coordinator::server::{
-    DetectServer, Executor, FaultPlan, RetryPolicy, ServerConfig, WindowMode,
-};
-use lbw_net::coordinator::metrics::LatencyStats;
-use lbw_net::coordinator::registry::{resident_weight_bytes, ModelDef, ModelRegistry};
-use lbw_net::coordinator::trainer::{HermeticTrainer, TrainConfig, TrainMethod};
-use lbw_net::data::{generate_scene, SceneConfig};
-use lbw_net::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
-use lbw_net::nn::{EngineKind, KernelBackend, SimdMode};
-use lbw_net::util::json::Json;
+use anyhow::{Context, Result};
 
-const CONCURRENCY: usize = 8;
+use lbw_net::lab::plan::{Plan, ServeGrid, KNOWN_EXTRAS};
+use lbw_net::lab::runner::{self, RunOpts};
+use lbw_net::lab::store::LabStore;
 
-struct Cell {
-    executor: String,
-    engine: String,
-    shards: usize,
-    threads: usize,
-    /// Window policy: "fixed" (classic sweep) or "adaptive".
-    window: String,
-    /// For fixed cells the window; for adaptive cells the max window.
-    window_ms: u64,
-    /// Open-loop load shape ("steady"/"bursty"); None for the classic
-    /// closed-loop sweep.
-    load: Option<String>,
-    shed: u64,
-    /// Elastic cell: `shards` is the initial count and the JSON row
-    /// carries `"shards": "auto"` plus the scale-event counters.
-    auto: Option<AutoCell>,
-    /// Where the served weights came from: "synth" (He-init synthetic
-    /// checkpoint) or "trained" (a hermetic training run).
-    checkpoint: &'static str,
-    /// Kernel backend the serving plans ran: "on" (explicit AVX2/NEON
-    /// kernels) or "off" (scalar reference; always "off" for the naive
-    /// executor, which has no planned kernels).
-    simd: &'static str,
-    /// Fault-sweep cell: `Some` marks the chaos rows (`"storm"` under
-    /// the injected panic schedule, `"none"` for the fault-free twin);
-    /// rows without the field predate or sit outside the fault sweep.
-    faults: Option<FaultCell>,
-    /// Multi-model registry cell: `Some` marks rows driven through a
-    /// `ModelRegistry` (tenant mix and/or hot swap); such rows carry a
-    /// `"models"` field and sit outside the closed-loop baselines.
-    multi: Option<MultiCell>,
-    wall_s: f64,
-    imgs_per_s: f64,
-    p50_ms: f64,
-    p95_ms: f64,
-    p99_ms: f64,
-    mean_batch: f64,
-    shard_counts: Vec<usize>,
-}
-
-/// The elastic dimensions of an autoscale cell.
-struct AutoCell {
-    shards_max: usize,
-    scale_ups: u64,
-    scale_downs: u64,
-}
-
-/// The fault dimensions of a chaos cell. `lost` counts closed-loop
-/// requests whose client got an error back instead of detections —
-/// under the crash storm every panic is caught, the batch is bisected,
-/// and the generation respawns, so a healthy fault domain answers
-/// every request (`lost == 0` is what `scripts/bench_gate.py` gates).
-struct FaultCell {
-    spec: &'static str,
-    crashes: u64,
-    respawns: u64,
-    lost: u64,
-}
-
-/// The multi-model registry dimensions. Every registry row carries
-/// `"models"` — `scripts/bench_gate.py` keeps such rows out of the
-/// single-model closed-loop baselines and instead enforces the tenant
-/// and swap rules on them.
-struct MultiCell {
-    /// The registry roster, e.g. `"hi=shift6+lo=shift2"`.
-    models: String,
-    /// Total resident quantized weight bytes across the registry — the
-    /// LBW packing story measured, not asserted.
-    resident_bytes: usize,
-    /// Weighted-fair cell: the tenant share spec (e.g. `"3:1"`) plus
-    /// per-tenant dequeue counts and client-side p95, both merged
-    /// across every model cell in the registry.
-    tenant_mix: Option<String>,
-    tenant_counts: Vec<u64>,
-    tenant_p95_ms: Vec<f64>,
-    /// Hot-swap cell: checkpoint swaps landed mid-run, and closed-loop
-    /// requests whose client got an error back — the gate fails any
-    /// swap row with `lost > 0` (a swap must never cost a response).
-    swaps: Option<u64>,
-    lost: Option<u64>,
-}
-
-fn drive(server: &DetectServer, scenes: &[Vec<f32>], requests: usize) -> Result<Duration> {
-    let handle = server.handle();
-    let t0 = Instant::now();
-    let per = requests / CONCURRENCY;
-    let mut clients = Vec::new();
-    for c in 0..CONCURRENCY {
-        let h = handle.clone();
-        let imgs: Vec<Vec<f32>> =
-            (0..per).map(|i| scenes[(c * per + i) % scenes.len()].clone()).collect();
-        clients.push(std::thread::spawn(move || -> Result<()> {
-            for img in imgs {
-                h.detect(img)?;
-            }
-            Ok(())
-        }));
+fn full_plan() -> Plan {
+    Plan {
+        name: "bench-serve-full".to_string(),
+        repeats: 1,
+        seed: 4242,
+        requests: 192,
+        concurrency: 8,
+        serve: Some(ServeGrid {
+            engines: vec!["float".into(), "shift6".into()],
+            executors: vec!["planned".into(), "naive".into()],
+            shards: vec![1, 2, 4],
+            threads: vec![1, 4],
+            window_ms: vec![0, 2],
+            simd: vec!["auto".into(), "off".into()],
+            extras: KNOWN_EXTRAS.iter().map(|s| s.to_string()).collect(),
+            trained_steps: 120,
+        }),
+        train: None,
     }
-    for c in clients {
-        c.join().expect("client thread")?;
-    }
-    Ok(t0.elapsed())
-}
-
-/// Open-loop driver: every request fires at its scheduled offset from
-/// the start, whether or not earlier ones have completed — the
-/// arrival process is independent of service times, like real traffic.
-/// Returns (wall, requests that got an error, e.g. shed).
-fn drive_open_loop(
-    server: &DetectServer,
-    scenes: &[Vec<f32>],
-    offsets: &[Duration],
-) -> (Duration, usize) {
-    let handle = server.handle();
-    let t0 = Instant::now();
-    let mut clients = Vec::new();
-    for (i, &off) in offsets.iter().enumerate() {
-        let h = handle.clone();
-        let img = scenes[i % scenes.len()].clone();
-        clients.push(std::thread::spawn(move || {
-            std::thread::sleep(off.saturating_sub(t0.elapsed()));
-            h.detect(img).is_err()
-        }));
-    }
-    let mut errors = 0usize;
-    for c in clients {
-        if c.join().expect("open-loop client") {
-            errors += 1;
-        }
-    }
-    (t0.elapsed(), errors)
-}
-
-/// `n` arrivals evenly spaced `gap` apart.
-fn steady_schedule(n: usize, gap: Duration) -> Vec<Duration> {
-    (0..n).map(|i| gap * i as u32).collect()
-}
-
-/// `n` arrivals in bursts of `burst`: `intra` apart inside a burst,
-/// burst heads `period` apart.
-fn bursty_schedule(n: usize, burst: usize, intra: Duration, period: Duration) -> Vec<Duration> {
-    (0..n).map(|i| period * (i / burst) as u32 + intra * (i % burst) as u32).collect()
 }
 
 fn main() -> Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    let requests: usize = std::env::var("BENCH_SERVE_REQUESTS")
+    let mut plan = if smoke {
+        Plan::load(Path::new("plans/ci-smoke.toml"))
+            .context("bench_serve --smoke drives the committed CI plan")?
+    } else {
+        full_plan()
+    };
+    if let Some(req) = std::env::var("BENCH_SERVE_REQUESTS")
         .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(if smoke { 48 } else { 192 });
-    let shard_list: &[usize] = if smoke { &[1] } else { &[1, 2, 4] };
-    let window_list: &[u64] = if smoke { &[2] } else { &[0, 2] };
-
-    // what the planned executor's plans will actually run under the
-    // default SimdMode — recorded on every planned cell
-    let detected: &'static str =
-        if KernelBackend::detect(SimdMode::from_env()).is_simd() { "on" } else { "off" };
-
-    let spec = synthetic_spec(SynthConfig::default());
-    let ckpt = synthetic_checkpoint(&spec, 2027, 6);
-    let scene_cfg = SceneConfig::default();
-    let scenes: Vec<Vec<f32>> =
-        (0..32u64).map(|i| generate_scene(4242, i, &scene_cfg).image).collect();
-
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        anyhow::ensure!(
+            req >= 1 && req % plan.concurrency == 0,
+            "BENCH_SERVE_REQUESTS ({req}) must be a positive multiple of concurrency ({})",
+            plan.concurrency
+        );
+        plan.requests = req;
+    }
     println!(
-        "=== bench_serve: {requests} requests, {CONCURRENCY} clients, synthetic detector{} ===",
-        if smoke { " (smoke)" } else { "" }
+        "bench_serve{}: plan `{}` -> {}",
+        if smoke { " (smoke)" } else { "" },
+        plan.name,
+        plan.run_id()
     );
+    let store = LabStore::new(LabStore::default_root());
+    let opts = RunOpts { force: false, only: Some("serve".to_string()), quiet: false };
+    let report = runner::run_plan(&plan, &store, &opts)?;
     println!(
-        "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9} {:>9} {:>9} {:>9} {:>11}",
-        "executor", "engine", "shards", "threads", "window", "img/s", "p50 ms", "p95 ms",
-        "p99 ms", "mean batch"
+        "{} executed, {} resumed -> {}",
+        report.executed,
+        report.resumed,
+        report.run_dir.display()
     );
-
-    let mut cells: Vec<Cell> = Vec::new();
-    for (exec_name, executor) in [("planned", Executor::Planned), ("naive", Executor::Naive)] {
-        // the tile pool only feeds the planned executor's kernels; the
-        // naive walk is single-threaded by construction
-        let thread_list: &[usize] = match executor {
-            Executor::Planned => &[1, 4],
-            Executor::Naive => &[1],
-        };
-        for (engine_name, engine) in
-            [("float", EngineKind::Float), ("shift6", EngineKind::Shift { bits: 6 })]
-        {
-            for &shards in shard_list {
-                for &threads in thread_list {
-                    for &window_ms in window_list {
-                        let cfg = ServerConfig {
-                            shards,
-                            threads,
-                            max_batch: 8,
-                            batch_window: Duration::from_millis(window_ms),
-                            queue_depth: 256,
-                            executor,
-                            // sweep cells must stay fault-free even when
-                            // the chaos CI leg exports LBW_FAULTS
-                            faults: None,
-                            ..Default::default()
-                        };
-                        let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
-                        let wall = drive(&server, &scenes, requests)?;
-                        let agg = server.handle().latency();
-                        let snap = agg.snapshot();
-                        let shard_counts: Vec<usize> =
-                            server.shard_latencies().iter().map(|s| s.count()).collect();
-                        let cell = Cell {
-                            executor: exec_name.to_string(),
-                            engine: engine_name.to_string(),
-                            shards,
-                            threads,
-                            window: "fixed".to_string(),
-                            window_ms,
-                            load: None,
-                            shed: 0,
-                            auto: None,
-                            checkpoint: "synth",
-                            simd: match executor {
-                                Executor::Planned => detected,
-                                Executor::Naive => "off",
-                            },
-                            faults: None,
-                            multi: None,
-                            wall_s: wall.as_secs_f64(),
-                            imgs_per_s: agg.throughput(wall),
-                            p50_ms: snap.percentile_ms(50.0),
-                            p95_ms: snap.percentile_ms(95.0),
-                            p99_ms: snap.percentile_ms(99.0),
-                            mean_batch: agg.mean_batch(),
-                            shard_counts,
-                        };
-                        println!(
-                            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}",
-                            cell.executor,
-                            cell.engine,
-                            cell.shards,
-                            cell.threads,
-                            format!("{window_ms}ms"),
-                            cell.imgs_per_s,
-                            cell.p50_ms,
-                            cell.p95_ms,
-                            cell.p99_ms,
-                            cell.mean_batch
-                        );
-                        server.shutdown();
-                        cells.push(cell);
-                    }
-                }
-            }
-        }
-    }
-
-    // ---- forced-scalar baseline cells (closed loop) ----
-    // the planned float/shift6 single-shard single-thread configs
-    // re-run with the kernel backend forced off — the scalar
-    // denominator of the simd/scalar ratio the bench gate enforces,
-    // measured through the identical serving stack. Only meaningful
-    // (and only run) when the detected backend is actually SIMD;
-    // without it the sweep above already produced these exact rows.
-    if detected == "on" {
-        println!("\n--- forced-scalar cells (simd off): planned, 1 shard x 1 thread ---");
-        for (engine_name, engine) in
-            [("float", EngineKind::Float), ("shift6", EngineKind::Shift { bits: 6 })]
-        {
-            let cfg = ServerConfig {
-                shards: 1,
-                threads: 1,
-                max_batch: 8,
-                batch_window: Duration::from_millis(2),
-                queue_depth: 256,
-                executor: Executor::Planned,
-                simd: SimdMode::Off,
-                faults: None,
-                ..Default::default()
-            };
-            let server = DetectServer::start_engine(&spec, &ckpt, engine, cfg)?;
-            let wall = drive(&server, &scenes, requests)?;
-            let agg = server.handle().latency();
-            let snap = agg.snapshot();
-            let shard_counts: Vec<usize> =
-                server.shard_latencies().iter().map(|s| s.count()).collect();
-            let cell = Cell {
-                executor: "planned".to_string(),
-                engine: engine_name.to_string(),
-                shards: 1,
-                threads: 1,
-                window: "fixed".to_string(),
-                window_ms: 2,
-                load: None,
-                shed: 0,
-                auto: None,
-                checkpoint: "synth",
-                simd: "off",
-                faults: None,
-                multi: None,
-                wall_s: wall.as_secs_f64(),
-                imgs_per_s: agg.throughput(wall),
-                p50_ms: snap.percentile_ms(50.0),
-                p95_ms: snap.percentile_ms(95.0),
-                p99_ms: snap.percentile_ms(99.0),
-                mean_batch: agg.mean_batch(),
-                shard_counts,
-            };
-            println!(
-                "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  (simd off)",
-                cell.executor,
-                cell.engine,
-                cell.shards,
-                cell.threads,
-                "2ms",
-                cell.imgs_per_s,
-                cell.p50_ms,
-                cell.p95_ms,
-                cell.p99_ms,
-                cell.mean_batch
-            );
-            server.shutdown();
-            cells.push(cell);
-        }
-    }
-
-    // ---- adaptive-vs-fixed window sweep (open-loop load) ----
-    // one planned shift6 shard; "fixed" is the classic 2ms window,
-    // "adaptive" lets the load observer pick within [0, 10ms]. The
-    // offered load (~160 req/s both shapes) stays under engine
-    // capacity on purpose: a saturated queue batches fully under ANY
-    // policy, so the comparison would measure saturation, not the
-    // window controller.
-    println!("\n--- window sweep (open-loop): planned shift6, 1 shard ---");
-    let steady_gap = Duration::from_millis(6);
-    let burst = 16usize;
-    let window_cells: &[(&str, WindowMode, u64)] =
-        &[("fixed", WindowMode::Fixed, 2), ("adaptive", WindowMode::Adaptive, 10)];
-    for &(win_name, window, window_ms) in window_cells {
-        for load in ["steady", "bursty"] {
-            let offsets = match load {
-                "steady" => steady_schedule(requests, steady_gap),
-                _ => bursty_schedule(
-                    requests,
-                    burst,
-                    Duration::from_millis(1),
-                    Duration::from_millis(100),
-                ),
-            };
-            let cfg = ServerConfig {
-                shards: 1,
-                threads: 1,
-                max_batch: 8,
-                batch_window: Duration::from_millis(window_ms),
-                window,
-                // generous admission deadline: healthy runs shed
-                // nothing (nominal p99 is ~10x lower), but every
-                // request runs the stamp + expiry check, so a
-                // false-shedding regression shows up as nonzero
-                // "shed"/errors in these rows
-                deadline: Some(Duration::from_millis(250)),
-                queue_depth: 256,
-                executor: Executor::Planned,
-                faults: None,
-                ..Default::default()
-            };
-            let server =
-                DetectServer::start_engine(&spec, &ckpt, EngineKind::Shift { bits: 6 }, cfg)?;
-            let (wall, errors) = drive_open_loop(&server, &scenes, &offsets);
-            let agg = server.handle().latency();
-            let snap = agg.snapshot();
-            let shard_counts: Vec<usize> =
-                server.shard_latencies().iter().map(|s| s.count()).collect();
-            let cell = Cell {
-                executor: "planned".to_string(),
-                engine: "shift6".to_string(),
-                shards: 1,
-                threads: 1,
-                window: win_name.to_string(),
-                window_ms,
-                load: Some(load.to_string()),
-                shed: agg.shed(),
-                auto: None,
-                checkpoint: "synth",
-                simd: detected,
-                faults: None,
-                multi: None,
-                wall_s: wall.as_secs_f64(),
-                imgs_per_s: agg.throughput(wall),
-                p50_ms: snap.percentile_ms(50.0),
-                p95_ms: snap.percentile_ms(95.0),
-                p99_ms: snap.percentile_ms(99.0),
-                mean_batch: agg.mean_batch(),
-                shard_counts,
-            };
-            println!(
-                "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  ({load}, errors {errors})",
-                cell.executor,
-                cell.engine,
-                cell.shards,
-                cell.threads,
-                win_name,
-                cell.imgs_per_s,
-                cell.p50_ms,
-                cell.p95_ms,
-                cell.p99_ms,
-                cell.mean_batch
-            );
-            server.shutdown();
-            cells.push(cell);
-        }
-    }
-    // the adaptive-window acceptance numbers: occupancy must win under
-    // bursts, p95 must not lose under steady light load
-    let open = |win: &str, load: &str| {
-        cells.iter().find(|c| c.window == win && c.load.as_deref() == Some(load))
-    };
-    if let (Some(af), Some(ff)) = (open("adaptive", "bursty"), open("fixed", "bursty")) {
-        println!(
-            "bursty: adaptive mean batch {:.2} vs fixed-2ms {:.2} ({:+.0}%)",
-            af.mean_batch,
-            ff.mean_batch,
-            100.0 * (af.mean_batch / ff.mean_batch - 1.0)
-        );
-    }
-    if let (Some(a), Some(f)) = (open("adaptive", "steady"), open("fixed", "steady")) {
-        println!("steady: adaptive p95 {:.2}ms vs fixed-2ms p95 {:.2}ms", a.p95_ms, f.p95_ms);
-    }
-
-    // ---- autoscale sweep (open-loop bursty) ----
-    // same engine/executor, same bursty schedule, two servers: a fixed
-    // single shard vs an elastic pool [1, 4]. Bursts land all at once
-    // (intra 0) so the queue-depth spike is load-shaped, not
-    // engine-speed-shaped; the ~100ms inter-burst gaps are long enough
-    // for the supervisor's idle law to drain back down — each run
-    // should show scale-ups during bursts AND drains between them,
-    // with p95 no worse than the fixed shard (the elastic pool eats
-    // the burst tail faster).
-    println!("\n--- autoscale sweep (open-loop bursty): planned shift6 ---");
-    let auto_offsets =
-        bursty_schedule(requests, burst, Duration::ZERO, Duration::from_millis(100));
-    let mut fixed_1shard_p95 = 0.0f64;
-    for elastic in [false, true] {
-        let cfg = ServerConfig {
-            shards: 1,
-            threads: 1,
-            max_batch: 8,
-            batch_window: Duration::from_millis(2),
-            queue_depth: 256,
-            executor: Executor::Planned,
-            autoscale: elastic.then(|| AutoscaleConfig {
-                min_shards: 1,
-                max_shards: 4,
-                tick: Duration::from_millis(2),
-                cooldown_ticks: 2,
-                down_idle_ticks: 10,
-                ..AutoscaleConfig::default()
-            }),
-            faults: None,
-            ..Default::default()
-        };
-        let server =
-            DetectServer::start_engine(&spec, &ckpt, EngineKind::Shift { bits: 6 }, cfg)?;
-        let (wall, errors) = drive_open_loop(&server, &scenes, &auto_offsets);
-        let agg = server.handle().latency();
-        let snap = agg.snapshot();
-        let shard_counts: Vec<usize> =
-            server.shard_latencies().iter().map(|s| s.count()).collect();
-        let (ups, downs) = server.scale_events();
-        let cell = Cell {
-            executor: "planned".to_string(),
-            engine: "shift6".to_string(),
-            shards: 1,
-            threads: 1,
-            window: "fixed".to_string(),
-            window_ms: 2,
-            load: Some("bursty".to_string()),
-            shed: agg.shed(),
-            auto: elastic.then(|| AutoCell { shards_max: 4, scale_ups: ups, scale_downs: downs }),
-            checkpoint: "synth",
-            simd: detected,
-            faults: None,
-            multi: None,
-            wall_s: wall.as_secs_f64(),
-            imgs_per_s: agg.throughput(wall),
-            p50_ms: snap.percentile_ms(50.0),
-            p95_ms: snap.percentile_ms(95.0),
-            p99_ms: snap.percentile_ms(99.0),
-            mean_batch: agg.mean_batch(),
-            shard_counts,
-        };
-        println!(
-            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  (bursty, errors {errors}, ups {ups}, drains {downs})",
-            cell.executor,
-            cell.engine,
-            if elastic { "auto".to_string() } else { "1".to_string() },
-            cell.threads,
-            "2ms",
-            cell.imgs_per_s,
-            cell.p50_ms,
-            cell.p95_ms,
-            cell.p99_ms,
-            cell.mean_batch
-        );
-        if !elastic {
-            fixed_1shard_p95 = cell.p95_ms;
-        }
-        server.shutdown();
-        cells.push(cell);
-    }
-    if let Some(a) = cells.iter().find(|c| c.auto.is_some()) {
-        let e = a.auto.as_ref().expect("auto cell");
-        println!(
-            "autoscale bursty: p95 {:.2}ms vs fixed-1shard {:.2}ms, {} scale-up(s) / {} drain(s) across {} shard generation(s)",
-            a.p95_ms, fixed_1shard_p95, e.scale_ups, e.scale_downs, a.shard_counts.len()
-        );
-    }
-
-    // ---- trained-checkpoint cell ----
-    // the same planned shift6 single-shard closed loop, but serving a
-    // checkpoint a short hermetic training run produced instead of the
-    // He-init synthetic one — proof the serving stack consumes real
-    // trainer output, and a throughput cross-check that trained weight
-    // statistics (lower variance, more pruned-to-zero after LBW) do
-    // not regress the shift engine. `checkpoint: "trained"` keeps the
-    // gate's closed-loop baselines on the synth rows.
-    println!("\n--- trained-checkpoint cell: planned shift6, 1 shard ---");
-    let train_cfg = TrainConfig {
-        seed: 2027,
-        steps: if smoke { 30 } else { 120 },
-        lr: 0.05,
-        train_scenes: 64,
-        eval_scenes: 8,
-        log_every: 0,
-        ..Default::default()
-    };
-    let trained = HermeticTrainer::new(train_cfg, 8, TrainMethod::Float)?
-        .train()?
-        .outcome
-        .checkpoint;
-    {
-        let cfg = ServerConfig {
-            shards: 1,
-            threads: 1,
-            max_batch: 8,
-            batch_window: Duration::from_millis(2),
-            queue_depth: 256,
-            executor: Executor::Planned,
-            faults: None,
-            ..Default::default()
-        };
-        let server =
-            DetectServer::start_engine(&spec, &trained, EngineKind::Shift { bits: 6 }, cfg)?;
-        let wall = drive(&server, &scenes, requests)?;
-        let agg = server.handle().latency();
-        let snap = agg.snapshot();
-        let shard_counts: Vec<usize> =
-            server.shard_latencies().iter().map(|s| s.count()).collect();
-        let cell = Cell {
-            executor: "planned".to_string(),
-            engine: "shift6".to_string(),
-            shards: 1,
-            threads: 1,
-            window: "fixed".to_string(),
-            window_ms: 2,
-            load: None,
-            shed: 0,
-            auto: None,
-            checkpoint: "trained",
-            simd: detected,
-            faults: None,
-            multi: None,
-            wall_s: wall.as_secs_f64(),
-            imgs_per_s: agg.throughput(wall),
-            p50_ms: snap.percentile_ms(50.0),
-            p95_ms: snap.percentile_ms(95.0),
-            p99_ms: snap.percentile_ms(99.0),
-            mean_batch: agg.mean_batch(),
-            shard_counts,
-        };
-        println!(
-            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  (trained ckpt, step {})",
-            cell.executor,
-            cell.engine,
-            cell.shards,
-            cell.threads,
-            "2ms",
-            cell.imgs_per_s,
-            cell.p50_ms,
-            cell.p95_ms,
-            cell.p99_ms,
-            cell.mean_batch,
-            trained.step
-        );
-        server.shutdown();
-        cells.push(cell);
-    }
-
-    // ---- fault sweep (closed loop, injected panic storm) ----
-    // the same planned shift6 single-shard closed loop twice: once
-    // fault-free ("none") and once under a seeded panic schedule that
-    // crashes the shard on its 3rd batch and every 5th after, per
-    // generation ("storm"). Clients carry the default bounded retry.
-    // A healthy fault domain turns every crash into: batch bisected
-    // and answered, generation retired, replacement respawned — so the
-    // storm row must show crashes > 0 with lost == 0 and bounded p95
-    // inflation over the "none" twin (the gate enforces the loss rule).
-    println!("\n--- fault sweep (closed loop): planned shift6, 1 shard ---");
-    let storm_spec = "seed=11;panic@pre:nth=3,every=5,count=1000000";
-    let mut fault_free_p95 = 0.0f64;
-    for (fault_name, plan) in [("none", None), ("storm", Some(storm_spec))] {
-        let cfg = ServerConfig {
-            shards: 1,
-            threads: 1,
-            max_batch: 8,
-            batch_window: Duration::from_millis(2),
-            queue_depth: 256,
-            executor: Executor::Planned,
-            faults: plan.map(|p| FaultPlan::parse(p).expect("storm plan")),
-            ..Default::default()
-        };
-        let server =
-            DetectServer::start_engine(&spec, &ckpt, EngineKind::Shift { bits: 6 }, cfg)?;
-        let handle = server.handle().with_retry(RetryPolicy::default());
-        let t0 = Instant::now();
-        let per = requests / CONCURRENCY;
-        let mut clients = Vec::new();
-        for c in 0..CONCURRENCY {
-            let h = handle.clone();
-            let imgs: Vec<Vec<f32>> =
-                (0..per).map(|i| scenes[(c * per + i) % scenes.len()].clone()).collect();
-            clients.push(std::thread::spawn(move || {
-                // count errors instead of bailing: a request answered
-                // with an error under the storm is a lost response
-                let mut lost = 0u64;
-                for img in imgs {
-                    if h.detect(img).is_err() {
-                        lost += 1;
-                    }
-                }
-                lost
-            }));
-        }
-        let lost: u64 = clients.into_iter().map(|c| c.join().expect("fault client")).sum();
-        let wall = t0.elapsed();
-        // a crash near the end of the run respawns asynchronously:
-        // give the supervisor a beat so the row's respawn counter
-        // reflects every crash it answered
-        let respawn_deadline = Instant::now() + Duration::from_secs(2);
-        while server.respawns() < server.crashes() && Instant::now() < respawn_deadline {
-            std::thread::sleep(Duration::from_millis(5));
-        }
-        let agg = server.handle().latency();
-        let snap = agg.snapshot();
-        let shard_counts: Vec<usize> =
-            server.shard_latencies().iter().map(|s| s.count()).collect();
-        let (crashes, respawns) = (server.crashes(), server.respawns());
-        let cell = Cell {
-            executor: "planned".to_string(),
-            engine: "shift6".to_string(),
-            shards: 1,
-            threads: 1,
-            window: "fixed".to_string(),
-            window_ms: 2,
-            load: None,
-            shed: 0,
-            auto: None,
-            checkpoint: "synth",
-            simd: detected,
-            faults: Some(FaultCell { spec: fault_name, crashes, respawns, lost }),
-            multi: None,
-            wall_s: wall.as_secs_f64(),
-            imgs_per_s: agg.throughput(wall),
-            p50_ms: snap.percentile_ms(50.0),
-            p95_ms: snap.percentile_ms(95.0),
-            p99_ms: snap.percentile_ms(99.0),
-            mean_batch: agg.mean_batch(),
-            shard_counts,
-        };
-        println!(
-            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  ({fault_name}: {crashes} crash(es), {respawns} respawn(s), lost {lost})",
-            cell.executor,
-            cell.engine,
-            cell.shards,
-            cell.threads,
-            "2ms",
-            cell.imgs_per_s,
-            cell.p50_ms,
-            cell.p95_ms,
-            cell.p99_ms,
-            cell.mean_batch
-        );
-        if fault_name == "none" {
-            fault_free_p95 = cell.p95_ms;
-        }
-        server.shutdown();
-        cells.push(cell);
-    }
-    if let Some(s) =
-        cells.iter().find(|c| c.faults.as_ref().is_some_and(|f| f.spec == "storm"))
-    {
-        let f = s.faults.as_ref().expect("storm cell");
-        println!(
-            "fault storm: p95 {:.2}ms vs fault-free {:.2}ms ({:+.0}%), {} crash(es) -> {} respawn(s), lost {}",
-            s.p95_ms,
-            fault_free_p95,
-            if fault_free_p95 > 0.0 { 100.0 * (s.p95_ms / fault_free_p95 - 1.0) } else { 0.0 },
-            f.crashes,
-            f.respawns,
-            f.lost
-        );
-    }
-
-    // ---- multi-model multi-tenant cell (closed loop) ----
-    // one ModelRegistry serving a 6-bit and a 2-bit model behind one
-    // apportioned shard budget, with two weighted-fair tenant classes
-    // (shares 3:1). Clients split across model x tenant; the row
-    // records per-tenant dequeue counts and client-side p95 (merged
-    // across both model cells) plus the registry's total resident
-    // quantized weight bytes — the LBW packing story: both models
-    // together occupy a fraction of one float model's weights. The
-    // gate fails the row if any listed tenant saw zero dequeues.
-    println!("\n--- multi-model tenant cell: registry hi=shift6 + lo=shift2, tenants 3:1 ---");
-    {
-        let base = ServerConfig {
-            shards: 2, // apportioned: one per model
-            threads: 1,
-            max_batch: 8,
-            batch_window: Duration::from_millis(2),
-            queue_depth: 256,
-            executor: Executor::Planned,
-            tenants: vec![3, 1],
-            faults: None,
-            ..Default::default()
-        };
-        let defs = vec![
-            ModelDef {
-                name: "hi".into(),
-                spec: spec.clone(),
-                ckpt: ckpt.clone(),
-                engine: EngineKind::Shift { bits: 6 },
-            },
-            ModelDef {
-                name: "lo".into(),
-                spec: spec.clone(),
-                ckpt: synthetic_checkpoint(&spec, 2027, 2),
-                engine: EngineKind::Shift { bits: 2 },
-            },
-        ];
-        let registry = ModelRegistry::start(defs, &base)?;
-        let router = registry.router();
-        let t0 = Instant::now();
-        let per = requests / CONCURRENCY;
-        let names = ["hi", "lo"];
-        let mut clients = Vec::new();
-        for c in 0..CONCURRENCY {
-            let r = router.clone();
-            let imgs: Vec<Vec<f32>> =
-                (0..per).map(|i| scenes[(c * per + i) % scenes.len()].clone()).collect();
-            let model = names[c % names.len()];
-            let tenant = c % 2;
-            clients.push(std::thread::spawn(move || -> Result<()> {
-                for img in imgs {
-                    r.detect(model, tenant, img)?;
-                }
-                Ok(())
-            }));
-        }
-        for c in clients {
-            c.join().expect("tenant client")?;
-        }
-        let wall = t0.elapsed();
-        let mut agg = LatencyStats::new();
-        let mut tenant_stats = vec![LatencyStats::new(); 2];
-        let mut tenant_counts = vec![0u64; 2];
-        let mut shard_counts: Vec<usize> = Vec::new();
-        for m in names {
-            let cell = registry.server(m)?;
-            agg.merge(&cell.handle().latency());
-            for (t, s) in cell.tenant_latencies().iter().enumerate() {
-                tenant_stats[t].merge(s);
-            }
-            for (t, &n) in cell.tenant_served().iter().enumerate() {
-                tenant_counts[t] += n;
-            }
-            shard_counts.extend(cell.shard_latencies().iter().map(|s| s.count()));
-        }
-        let snap = agg.snapshot();
-        let tenant_p95_ms: Vec<f64> =
-            tenant_stats.iter().map(|s| s.percentile_ms(95.0)).collect();
-        let resident = registry.total_resident_bytes();
-        println!(
-            "resident weights: hi {} B (6-bit) + lo {} B (2-bit) = {} B vs one float model {} B",
-            registry.resident_bytes("hi")?,
-            registry.resident_bytes("lo")?,
-            resident,
-            resident_weight_bytes(spec.num_params, EngineKind::Float)
-        );
-        let cell = Cell {
-            executor: "planned".to_string(),
-            engine: "multi".to_string(),
-            shards: 2,
-            threads: 1,
-            window: "fixed".to_string(),
-            window_ms: 2,
-            load: None,
-            shed: 0,
-            auto: None,
-            checkpoint: "synth",
-            simd: detected,
-            faults: None,
-            multi: Some(MultiCell {
-                models: "hi=shift6+lo=shift2".to_string(),
-                resident_bytes: resident,
-                tenant_mix: Some("3:1".to_string()),
-                tenant_counts: tenant_counts.clone(),
-                tenant_p95_ms: tenant_p95_ms.clone(),
-                swaps: None,
-                lost: None,
-            }),
-            wall_s: wall.as_secs_f64(),
-            imgs_per_s: agg.throughput(wall),
-            p50_ms: snap.percentile_ms(50.0),
-            p95_ms: snap.percentile_ms(95.0),
-            p99_ms: snap.percentile_ms(99.0),
-            mean_batch: agg.mean_batch(),
-            shard_counts,
-        };
-        println!(
-            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  (tenants 3:1, dequeues {:?}, p95 {:?} ms)",
-            cell.executor,
-            cell.engine,
-            cell.shards,
-            cell.threads,
-            "2ms",
-            cell.imgs_per_s,
-            cell.p50_ms,
-            cell.p95_ms,
-            cell.p99_ms,
-            cell.mean_batch,
-            tenant_counts,
-            tenant_p95_ms.iter().map(|p| (p * 100.0).round() / 100.0).collect::<Vec<_>>()
-        );
-        drop(router);
-        registry.shutdown();
-        cells.push(cell);
-    }
-
-    // ---- hot-swap-under-load cell (closed loop) ----
-    // one registry model, two shards, the classic closed loop — with
-    // two checkpoint swaps landed while the burst is in flight. Each
-    // swap loads + quantizes off the serving path, spawns a fresh
-    // generation, and drains the old via the cancel-before-pop
-    // handshake, so every in-flight request is answered by exactly one
-    // generation: the row must show `swaps >= 1` with `lost == 0`
-    // (the gate enforces both).
-    println!("\n--- hot-swap-under-load cell: registry m6=shift6, 2 shards ---");
-    {
-        let base = ServerConfig {
-            shards: 2,
-            threads: 1,
-            max_batch: 8,
-            batch_window: Duration::from_millis(2),
-            queue_depth: 256,
-            executor: Executor::Planned,
-            faults: None,
-            ..Default::default()
-        };
-        let registry = ModelRegistry::start(
-            vec![ModelDef {
-                name: "m6".into(),
-                spec: spec.clone(),
-                ckpt: ckpt.clone(),
-                engine: EngineKind::Shift { bits: 6 },
-            }],
-            &base,
-        )?;
-        let handle = registry.handle("m6")?;
-        let t0 = Instant::now();
-        let per = requests / CONCURRENCY;
-        let mut clients = Vec::new();
-        for c in 0..CONCURRENCY {
-            let h = handle.clone();
-            let imgs: Vec<Vec<f32>> =
-                (0..per).map(|i| scenes[(c * per + i) % scenes.len()].clone()).collect();
-            clients.push(std::thread::spawn(move || {
-                // count errors instead of bailing: a request answered
-                // with an error across a swap is a lost response
-                let mut lost = 0u64;
-                for img in imgs {
-                    if h.detect(img).is_err() {
-                        lost += 1;
-                    }
-                }
-                lost
-            }));
-        }
-        let mut swaps = 0u64;
-        for _ in 0..2 {
-            std::thread::sleep(Duration::from_millis(5));
-            registry.swap("m6", &ckpt)?;
-            swaps += 1;
-        }
-        let lost: u64 = clients.into_iter().map(|c| c.join().expect("swap client")).sum();
-        let wall = t0.elapsed();
-        let cell_srv = registry.server("m6")?;
-        let agg = cell_srv.handle().latency();
-        let snap = agg.snapshot();
-        let shard_counts: Vec<usize> =
-            cell_srv.shard_latencies().iter().map(|s| s.count()).collect();
-        let resident = registry.total_resident_bytes();
-        let cell = Cell {
-            executor: "planned".to_string(),
-            engine: "shift6".to_string(),
-            shards: 2,
-            threads: 1,
-            window: "fixed".to_string(),
-            window_ms: 2,
-            load: None,
-            shed: 0,
-            auto: None,
-            checkpoint: "synth",
-            simd: detected,
-            faults: None,
-            multi: Some(MultiCell {
-                models: "m6=shift6".to_string(),
-                resident_bytes: resident,
-                tenant_mix: None,
-                tenant_counts: Vec::new(),
-                tenant_p95_ms: Vec::new(),
-                swaps: Some(swaps),
-                lost: Some(lost),
-            }),
-            wall_s: wall.as_secs_f64(),
-            imgs_per_s: agg.throughput(wall),
-            p50_ms: snap.percentile_ms(50.0),
-            p95_ms: snap.percentile_ms(95.0),
-            p99_ms: snap.percentile_ms(99.0),
-            mean_batch: agg.mean_batch(),
-            shard_counts,
-        };
-        println!(
-            "{:<9} {:<8} {:<7} {:<8} {:<10} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>11.2}  ({swaps} hot swap(s) mid-burst, lost {lost})",
-            cell.executor,
-            cell.engine,
-            cell.shards,
-            cell.threads,
-            "2ms",
-            cell.imgs_per_s,
-            cell.p50_ms,
-            cell.p95_ms,
-            cell.p99_ms,
-            cell.mean_batch
-        );
-        drop(handle);
-        registry.shutdown();
-        cells.push(cell);
-    }
-
-    let rate_simd = |exec: &str, engine: &str, shards: usize, threads: usize, simd: &str| {
-        cells
-            .iter()
-            .find(|c| {
-                c.executor == exec
-                    && c.engine == engine
-                    && c.shards == shards
-                    && c.threads == threads
-                    && c.window_ms == 2
-                    && c.load.is_none() // classic closed-loop cells only
-                    && c.faults.is_none()
-                    && c.multi.is_none()
-                    && c.checkpoint == "synth"
-                    && c.simd == simd
-            })
-            .map(|c| c.imgs_per_s)
-            .unwrap_or(0.0)
-    };
-    // the pre-SIMD summary ratios compare cells under the *detected*
-    // backend (naive rows are always scalar — the naive walk has no
-    // planned kernels to vectorize)
-    let rate = |exec: &str, engine: &str, shards: usize, threads: usize| {
-        rate_simd(exec, engine, shards, threads, if exec == "naive" { "off" } else { detected })
-    };
-    // the headline ratio: planned vs naive through the identical
-    // serving stack, single shard, single thread (the ISSUE-2
-    // acceptance number)
-    for engine in ["float", "shift6"] {
-        let (p, n) = (rate("planned", engine, 1, 1), rate("naive", engine, 1, 1));
-        if n > 0.0 {
-            println!("{engine}: planned/naive single-shard speedup = {:.2}x", p / n);
-        }
-    }
-    // intra-op scaling: 4-thread vs 1-thread pools at a single shard
-    // (the ISSUE-3 acceptance number)
-    for engine in ["float", "shift6"] {
-        let (t4, t1) = (rate("planned", engine, 1, 4), rate("planned", engine, 1, 1));
-        if t1 > 0.0 {
-            println!(
-                "{engine}: planned 4-thread/1-thread speedup at 1 shard = {:.2}x",
-                t4 / t1
-            );
-        }
-    }
-    // the ISSUE-7 acceptance number: explicit SIMD vs forced-scalar
-    // through the identical serving stack (only measurable when the
-    // host actually has a SIMD backend)
-    if detected == "on" {
-        for engine in ["float", "shift6"] {
-            let (on, off) =
-                (rate_simd("planned", engine, 1, 1, "on"), rate_simd("planned", engine, 1, 1, "off"));
-            if off > 0.0 {
-                println!("{engine}: planned simd/scalar speedup at 1 shard x 1 thread = {:.2}x", on / off);
-            }
-        }
-    }
-    if !smoke {
-        // scaling summary on the production path: shards=4 vs shards=1
-        for engine in ["float", "shift6"] {
-            let (r1, r4) = (rate("planned", engine, 1, 1), rate("planned", engine, 4, 1));
-            if r1 > 0.0 {
-                println!("{engine}: planned 4-shard speedup over 1 shard = {:.2}x", r4 / r1);
-            }
-        }
-    }
-
-    let rows = Json::Arr(
-        cells
-            .iter()
-            .map(|c| {
-                let shards_field = match &c.auto {
-                    // elastic rows: shard count is a supervisor
-                    // decision, not a config cell — the row records
-                    // "auto" plus the bound and the scale events
-                    Some(_) => Json::str("auto"),
-                    None => Json::num(c.shards as f64),
-                };
-                let mut fields = vec![
-                    ("executor", Json::str(c.executor.as_str())),
-                    ("engine", Json::str(c.engine.as_str())),
-                    ("shards", shards_field),
-                    ("threads", Json::num(c.threads as f64)),
-                    ("window", Json::str(c.window.as_str())),
-                    ("batch_window_ms", Json::num(c.window_ms as f64)),
-                    ("checkpoint", Json::str(c.checkpoint)),
-                    ("simd", Json::str(c.simd)),
-                    ("requests", Json::num(requests as f64)),
-                    ("concurrency", Json::num(CONCURRENCY as f64)),
-                    ("wall_s", Json::num(c.wall_s)),
-                    ("imgs_per_s", Json::num(c.imgs_per_s)),
-                    ("p50_ms", Json::num(c.p50_ms)),
-                    ("p95_ms", Json::num(c.p95_ms)),
-                    ("p99_ms", Json::num(c.p99_ms)),
-                    ("mean_batch", Json::num(c.mean_batch)),
-                    (
-                        "shard_counts",
-                        Json::Arr(c.shard_counts.iter().map(|&n| Json::num(n as f64)).collect()),
-                    ),
-                ];
-                if let Some(load) = &c.load {
-                    fields.push(("load", Json::str(load.as_str())));
-                    fields.push(("shed", Json::num(c.shed as f64)));
-                }
-                if let Some(a) = &c.auto {
-                    fields.push(("shards_max", Json::num(a.shards_max as f64)));
-                    fields.push(("scale_ups", Json::num(a.scale_ups as f64)));
-                    fields.push(("scale_downs", Json::num(a.scale_downs as f64)));
-                }
-                if let Some(f) = &c.faults {
-                    fields.push(("faults", Json::str(f.spec)));
-                    fields.push(("crashes", Json::num(f.crashes as f64)));
-                    fields.push(("respawns", Json::num(f.respawns as f64)));
-                    fields.push(("lost", Json::num(f.lost as f64)));
-                }
-                if let Some(m) = &c.multi {
-                    fields.push(("models", Json::str(m.models.as_str())));
-                    fields.push(("resident_weight_bytes", Json::num(m.resident_bytes as f64)));
-                    if let Some(mix) = &m.tenant_mix {
-                        fields.push(("tenant_mix", Json::str(mix.as_str())));
-                        fields.push((
-                            "tenant_counts",
-                            Json::Arr(
-                                m.tenant_counts.iter().map(|&n| Json::num(n as f64)).collect(),
-                            ),
-                        ));
-                        fields.push((
-                            "tenant_p95_ms",
-                            Json::Arr(m.tenant_p95_ms.iter().map(|&p| Json::num(p)).collect()),
-                        ));
-                    }
-                    if let (Some(s), Some(l)) = (m.swaps, m.lost) {
-                        fields.push(("swaps", Json::num(s as f64)));
-                        fields.push(("lost", Json::num(l as f64)));
-                    }
-                }
-                Json::obj(fields)
-            })
-            .collect(),
-    );
-    let doc = Json::obj(vec![
-        ("bench", Json::str("serve_shard_sweep")),
-        (
-            "detector",
-            Json::str(
-                "synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors, threads {1,4} tile pools, fixed+adaptive batch windows (open-loop steady/bursty), elastic shards-auto cells (open-loop bursty, scale events recorded), simd on/off kernel-backend cells (forced-scalar baselines when SIMD is detected)",
-            ),
-        ),
-        ("rows", rows),
-    ]);
-    std::fs::write("BENCH_serve.json", doc.to_string())?;
-    println!("\nwrote BENCH_serve.json ({} cells)", cells.len());
+    let (serve_rows, _train_rows) = runner::export_flat(
+        &store,
+        &report.run_id,
+        Path::new("BENCH_serve.json"),
+        Path::new("BENCH_train.json"),
+    )?;
+    println!("\n--- summary ({} serve rows -> BENCH_serve.json) ---", serve_rows.len());
+    runner::print_serve_summary(&serve_rows);
     Ok(())
 }

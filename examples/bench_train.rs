@@ -1,245 +1,82 @@
-//! Trained-checkpoint accuracy trajectory: the paper's Table-1 loop,
-//! hermetic. Train the float µResNet detector on SynthVOC, then carry
-//! each checkpoint through every quantization method — exact ternary
-//! (Theorem 1, b = 2), the semi-analytical LBW threshold at 4 and 6
-//! bits, a DoReFa straight-through uniform baseline at 6 bits, and INQ
-//! partitioned freezing at 6 bits — re-training each with projected
-//! SGD and scoring held-out mAP. One `BENCH_train.json` row per
-//! {method × bits × seed} with mAP, quantization distance ‖Wq − W‖₂,
-//! zero-weight sparsity, compression ratio, first/last loss, and wall
-//! time. `scripts/accuracy_gate.py` gates the result (6-bit within a
-//! fixed mAP delta of float; ternary above a floor; error monotone in
-//! bit-width).
+//! Accuracy-trajectory benchmark — thin driver over the experiment
+//! lab.
 //!
-//! Fully hermetic: runs on a clean checkout with no Python and no
-//! artifacts (`nn::grad` supplies the backward pass).
+//! The training cells (float pre-train, then per-method fine-tunes and
+//! INQ resuming from the float checkpoint, per seed) live in
+//! `lbw_net::lab::runner`; this binary just picks a plan and runs the
+//! train task:
 //!
-//! Run with: `cargo run --release --example bench_train -- --smoke`
-//! (the CI profile: 600 float + 200 fine-tune steps, 2 seeds, ~2 min).
-//! The full profile (`--full`) stretches to 3000 + 1000 steps on 3
-//! seeds for a smoother trajectory.
+//! * default (smoke, CI): the committed `plans/ci-smoke.toml`, train
+//!   trials only — the same content-addressed run directory as
+//!   `repro lab run ci-smoke --only train`, so completed cells resume
+//!   instead of re-training, and `BENCH_train.json` is regenerated in
+//!   place (identical-cell re-runs can no longer clobber or duplicate
+//!   trajectory rows).
+//! * `--full`: a built-in deep profile — 3000 float steps, 1000
+//!   fine-tune steps, 2000 train scenes, seeds {17, 18, 19}.
 
 use std::path::Path;
-use std::time::Instant;
 
-use anyhow::Result;
-use lbw_net::coordinator::inq::train_inq_hermetic;
-use lbw_net::coordinator::trainer::{
-    write_bench_train, HermeticTrainer, TrainConfig, TrainMethod, TrainRow,
-};
-use lbw_net::quant::threshold::compression_ratio;
+use anyhow::{Context, Result};
 
-/// INQ cumulative-freeze schedule (the INQ paper's default).
-const INQ_PHASES: [f64; 4] = [0.5, 0.75, 0.875, 1.0];
+use lbw_net::lab::plan::{Plan, TrainGrid, KNOWN_METHODS};
+use lbw_net::lab::runner::{self, RunOpts};
+use lbw_net::lab::store::LabStore;
 
-struct Profile {
-    name: &'static str,
-    width: usize,
-    batch: usize,
-    float_steps: u64,
-    float_lr: f32,
-    ft_steps: u64,
-    ft_lr: f32,
-    train_scenes: u64,
-    eval_scenes: u64,
-    seeds: &'static [u64],
-}
-
-const SMOKE: Profile = Profile {
-    name: "smoke",
-    width: 8,
-    batch: 8,
-    float_steps: 600,
-    float_lr: 0.05,
-    ft_steps: 200,
-    ft_lr: 0.01,
-    train_scenes: 256,
-    eval_scenes: 48,
-    seeds: &[17, 18],
-};
-
-const FULL: Profile = Profile {
-    name: "full",
-    width: 8,
-    batch: 8,
-    float_steps: 3000,
-    float_lr: 0.05,
-    ft_steps: 1000,
-    ft_lr: 0.01,
-    train_scenes: 2000,
-    eval_scenes: 256,
-    seeds: &[17, 18, 19],
-};
-
-fn base_cfg(p: &Profile, seed: u64) -> TrainConfig {
-    TrainConfig {
-        seed,
-        steps: p.float_steps,
-        lr: p.float_lr,
-        train_scenes: p.train_scenes,
-        eval_scenes: p.eval_scenes,
-        log_every: 100,
-        ..Default::default()
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn row(
-    p: &Profile,
-    method: &str,
-    bits: u32,
-    seed: u64,
-    steps: u64,
-    map: f64,
-    quant_dist: f64,
-    sparsity: f64,
-    loss_first: f64,
-    loss_last: f64,
-    wall_s: f64,
-) -> TrainRow {
-    TrainRow {
-        method: method.to_string(),
-        bits,
-        seed,
-        steps,
-        profile: p.name.to_string(),
-        map,
-        quant_dist,
-        sparsity,
-        compression: if bits >= 32 { 1.0 } else { compression_ratio(bits) },
-        loss_first,
-        loss_last,
-        wall_s,
+fn full_plan() -> Plan {
+    Plan {
+        name: "bench-train-full".to_string(),
+        repeats: 1,
+        seed: 4242,
+        requests: 48,
+        concurrency: 8,
+        serve: None,
+        train: Some(TrainGrid {
+            profile: "full".to_string(),
+            methods: KNOWN_METHODS.iter().map(|s| s.to_string()).collect(),
+            seeds: vec![17, 18, 19],
+            width: 8,
+            batch: 8,
+            float_steps: 3000,
+            float_lr: 0.05,
+            ft_steps: 1000,
+            ft_lr: 0.01,
+            train_scenes: 2000,
+            eval_scenes: 256,
+        }),
     }
 }
 
 fn main() -> Result<()> {
     let full = std::env::args().any(|a| a == "--full");
-    let p = if full { FULL } else { SMOKE };
+    let plan = if full {
+        full_plan()
+    } else {
+        Plan::load(Path::new("plans/ci-smoke.toml"))
+            .context("bench_train smoke drives the committed CI plan")?
+    };
     println!(
-        "bench_train [{}]: {} float + {} ft steps, {} train / {} eval scenes, seeds {:?}",
-        p.name, p.float_steps, p.ft_steps, p.train_scenes, p.eval_scenes, p.seeds
+        "bench_train ({}): plan `{}` -> {}",
+        if full { "full" } else { "smoke" },
+        plan.name,
+        plan.run_id()
     );
-
-    let ft_methods = [
-        TrainMethod::TernaryExact,
-        TrainMethod::Lbw { bits: 4 },
-        TrainMethod::Lbw { bits: 6 },
-        TrainMethod::Dorefa { bits: 6 },
-    ];
-
-    let mut rows: Vec<TrainRow> = Vec::new();
-    for &seed in p.seeds {
-        let cfg = base_cfg(&p, seed);
-
-        // 1. float pretraining
-        let float_trainer =
-            HermeticTrainer::new(cfg.clone(), p.width, TrainMethod::Float)?.with_batch(p.batch);
-        let t0 = Instant::now();
-        let float_out = float_trainer.train()?;
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "[seed {seed}] float: mAP {:.4} loss {:.3} -> {:.3} ({wall:.1}s)",
-            float_out.outcome.final_map, float_out.loss_first, float_out.loss_last
-        );
-        rows.push(row(
-            &p,
-            "float",
-            32,
-            seed,
-            p.float_steps,
-            float_out.outcome.final_map,
-            float_out.quant_dist,
-            float_out.sparsity,
-            float_out.loss_first,
-            float_out.loss_last,
-            wall,
-        ));
-        let float_ckpt = float_out.outcome.checkpoint;
-
-        // 2. quantize + retrain per projection method
-        for method in ft_methods {
-            let trainer =
-                HermeticTrainer::new(cfg.clone(), p.width, method)?.with_batch(p.batch);
-            let t0 = Instant::now();
-            let out = trainer.train_from(&float_ckpt, p.ft_steps, p.ft_lr, p.float_steps)?;
-            let wall = t0.elapsed().as_secs_f64();
-            println!(
-                "[seed {seed}] {}: mAP {:.4} dist {:.2} sparsity {:.3} ({wall:.1}s)",
-                method.name(),
-                out.outcome.final_map,
-                out.quant_dist,
-                out.sparsity
-            );
-            rows.push(row(
-                &p,
-                &method.name(),
-                method.bits(),
-                seed,
-                p.ft_steps,
-                out.outcome.final_map,
-                out.quant_dist,
-                out.sparsity,
-                out.loss_first,
-                out.loss_last,
-                wall,
-            ));
-        }
-
-        // 3. INQ partitioned freezing (retrains the float shadows)
-        let t0 = Instant::now();
-        let inq = train_inq_hermetic(
-            &float_trainer,
-            6,
-            &INQ_PHASES,
-            &float_ckpt,
-            p.ft_steps,
-            p.ft_lr,
-            p.float_steps,
-        )?;
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "[seed {seed}] inq-6: mAP {:.4} dist {:.2} phases {:?} ({wall:.1}s)",
-            inq.final_map,
-            inq.quant_dist,
-            inq.phases.iter().map(|ph| ph.frozen_total).collect::<Vec<_>>()
-        );
-        rows.push(row(
-            &p,
-            "inq-6",
-            6,
-            seed,
-            p.ft_steps,
-            inq.final_map,
-            inq.quant_dist,
-            inq.sparsity,
-            inq.loss_first,
-            inq.loss_last,
-            wall,
-        ));
-    }
-
-    // summary: mean mAP per method across seeds
-    println!("\n== accuracy trajectory (mean mAP over {} seeds) ==", p.seeds.len());
-    let mut methods: Vec<String> = Vec::new();
-    for r in &rows {
-        if !methods.contains(&r.method) {
-            methods.push(r.method.clone());
-        }
-    }
-    for m in &methods {
-        let maps: Vec<f64> =
-            rows.iter().filter(|r| &r.method == m).map(|r| r.map).collect();
-        let mean = maps.iter().sum::<f64>() / maps.len() as f64;
-        let r0 = rows.iter().find(|r| &r.method == m).unwrap();
-        println!(
-            "  {m:>13}  bits {:>2}  mAP {mean:.4}  compression {:.1}x",
-            r0.bits, r0.compression
-        );
-    }
-
-    let out = Path::new("BENCH_train.json");
-    write_bench_train(out, p.name, &rows)?;
-    println!("\nwrote {} ({} rows)", out.display(), rows.len());
+    let store = LabStore::new(LabStore::default_root());
+    let opts = RunOpts { force: false, only: Some("train".to_string()), quiet: false };
+    let report = runner::run_plan(&plan, &store, &opts)?;
+    println!(
+        "{} executed, {} resumed -> {}",
+        report.executed,
+        report.resumed,
+        report.run_dir.display()
+    );
+    let (_serve_rows, train_rows) = runner::export_flat(
+        &store,
+        &report.run_id,
+        Path::new("BENCH_serve.json"),
+        Path::new("BENCH_train.json"),
+    )?;
+    println!("\n--- summary ({} train rows -> BENCH_train.json) ---", train_rows.len());
+    runner::print_train_summary(&train_rows);
     Ok(())
 }

@@ -19,6 +19,26 @@ pub struct Config {
     pub quant: QuantSection,
     pub data: DataSection,
     pub serve: ServeSection,
+    pub lab: LabSection,
+}
+
+/// Experiment-lab paths (`repro lab`): where content-addressed run
+/// directories live and where committed sweep plans are looked up by
+/// name. The `LBW_LAB` env var and the `--lab`/`--plans` flags
+/// override these.
+#[derive(Debug, Clone)]
+pub struct LabSection {
+    /// Lab root; runs go under `<dir>/runs/<name>-<hash>/`.
+    pub dir: String,
+    /// Directory scanned for `<name>.toml` plan references (and by
+    /// `repro lab gc` to compute the keep set).
+    pub plans: String,
+}
+
+impl Default for LabSection {
+    fn default() -> Self {
+        LabSection { dir: "lab".into(), plans: "plans".into() }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -190,6 +210,7 @@ impl Default for Config {
                 noise: s.noise,
             },
             serve: ServeSection::default(),
+            lab: LabSection::default(),
         }
     }
 }
@@ -239,6 +260,8 @@ impl Config {
                 "serve.pin_cores" => cfg.serve.pin_cores = v.as_bool()?,
                 "serve.faults" => cfg.serve.faults = v.as_str()?.to_string(),
                 "serve.tenants" => cfg.serve.tenants = v.as_str()?.to_string(),
+                "lab.dir" => cfg.lab.dir = v.as_str()?.to_string(),
+                "lab.plans" => cfg.lab.plans = v.as_str()?.to_string(),
                 other => {
                     // `[serve.models.<name>]` tables arrive as flat
                     // dotted keys; group them into per-model entries
@@ -319,6 +342,8 @@ impl Config {
             FaultPlan::parse(&self.serve.faults)
                 .map_err(|e| anyhow::anyhow!("serve.faults: {e}"))?;
         }
+        ensure!(!self.lab.dir.trim().is_empty(), "lab.dir must not be empty");
+        ensure!(!self.lab.plans.trim().is_empty(), "lab.plans must not be empty");
         ensure!(self.serve.shards_min >= 1, "serve.shards_min must be >= 1");
         ensure!(
             self.serve.shards_max == 0 || self.serve.shards_max >= self.serve.shards_min,
@@ -647,6 +672,27 @@ mod tests {
         let cfg =
             Config::from_toml("[serve.models.ref]\nengine = \"float\"\nbits = 32\n").unwrap();
         assert_eq!(cfg.serve.models[0].engine, "float");
+    }
+
+    #[test]
+    fn lab_section_parses_and_validates() {
+        let cfg = Config::from_toml(
+            r#"
+            [lab]
+            dir = "scratch/lab"
+            plans = "sweeps"
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.lab.dir, "scratch/lab");
+        assert_eq!(cfg.lab.plans, "sweeps");
+        // defaults
+        let d = Config::default();
+        assert_eq!(d.lab.dir, "lab");
+        assert_eq!(d.lab.plans, "plans");
+        // empty paths rejected
+        assert!(Config::from_toml("[lab]\ndir = \"\"\n").is_err());
+        assert!(Config::from_toml("[lab]\nplans = \" \"\n").is_err());
     }
 
     #[test]

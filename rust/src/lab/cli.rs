@@ -1,0 +1,309 @@
+//! The `repro lab` subcommand.
+//!
+//! `util::cli::Args` is a pure `--flag value` parser, so the lab verbs
+//! (which take positionals: a plan path, a trial path) parse their own
+//! argv here; `main.rs` hands over everything after the `lab` token.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::Config;
+use crate::util::json::Json;
+
+use super::plan::Plan;
+use super::runner::{self, RunOpts};
+use super::store::LabStore;
+use super::tables;
+
+const USAGE: &str = "\
+repro lab — declarative experiment sweeps with content-addressed runs
+
+USAGE: repro lab <verb> [args] [--flag ...]
+
+  run <plan>      execute a plan (path, or a name under the plans dir)
+                  into lab/runs/<name>-<hash>/; completed trials resume
+                  untouched. Exports BENCH_serve.json/BENCH_train.json
+                  from the run afterwards.
+                    --force        re-run every trial
+                    --only T       only trials of task T (serve|train)
+                    --dry-run      list the trials, execute nothing
+                    --no-export    skip the flat BENCH_*.json export
+                    --quiet        no per-trial progress lines
+  table <plan|run-id>   aggregate a run's trials into per-cell
+                  mean/std/min/max tables and print them
+  list            enumerate runs (trials done, git rev, updated)
+  trace <run-id>/<task>/<cell>/r<K>   print one trial's provenance
+                  (resolved spec, seed, git rev, wall time, row)
+  gc              remove run dirs not referenced by any plans/*.toml
+                    --dry-run      report only, delete nothing
+
+Common flags:
+  --lab DIR       lab root (default: $LBW_LAB, else [lab] dir config,
+                  else `lab`)
+  --plans DIR     plan directory (default: [lab] plans config, `plans`)
+  --config PATH   TOML config file (for the [lab] section)
+";
+
+struct LabArgs {
+    verb: String,
+    positionals: Vec<String>,
+    force: bool,
+    dry_run: bool,
+    quiet: bool,
+    no_export: bool,
+    only: Option<String>,
+    lab: Option<String>,
+    plans: Option<String>,
+    config: Option<String>,
+}
+
+fn split_args(argv: &[String]) -> Result<LabArgs> {
+    let mut a = LabArgs {
+        verb: argv.first().cloned().unwrap_or_default(),
+        positionals: Vec::new(),
+        force: false,
+        dry_run: false,
+        quiet: false,
+        no_export: false,
+        only: None,
+        lab: None,
+        plans: None,
+        config: None,
+    };
+    let mut it = argv.iter().skip(1);
+    while let Some(tok) = it.next() {
+        let Some(flag) = tok.strip_prefix("--") else {
+            a.positionals.push(tok.clone());
+            continue;
+        };
+        let (key, inline) = match flag.split_once('=') {
+            Some((k, v)) => (k, Some(v.to_string())),
+            None => (flag, None),
+        };
+        let mut value = |key: &str| -> Result<String> {
+            match inline.clone() {
+                Some(v) => Ok(v),
+                None => it
+                    .next()
+                    .cloned()
+                    .ok_or_else(|| anyhow!("lab flag --{key} expects a value")),
+            }
+        };
+        match key {
+            "force" => a.force = true,
+            "dry-run" => a.dry_run = true,
+            "quiet" => a.quiet = true,
+            "no-export" => a.no_export = true,
+            "only" => a.only = Some(value(key)?),
+            "lab" => a.lab = Some(value(key)?),
+            "plans" => a.plans = Some(value(key)?),
+            "config" => a.config = Some(value(key)?),
+            other => bail!("unknown lab flag --{other}\n{USAGE}"),
+        }
+    }
+    if let Some(t) = &a.only {
+        ensure!(
+            t == "serve" || t == "train",
+            "--only expects serve|train, got `{t}`"
+        );
+    }
+    Ok(a)
+}
+
+pub fn main(argv: &[String]) -> Result<()> {
+    let a = split_args(argv)?;
+    let cfg = match &a.config {
+        Some(p) => Config::load(Path::new(p))?,
+        None => Config::default(),
+    };
+    // flag > env > config for the lab root; flag > config for plans
+    let lab_root: PathBuf = a
+        .lab
+        .clone()
+        .map(PathBuf::from)
+        .or_else(|| {
+            std::env::var("LBW_LAB").ok().filter(|s| !s.is_empty()).map(PathBuf::from)
+        })
+        .unwrap_or_else(|| PathBuf::from(cfg.lab.dir.clone()));
+    let plans_dir: PathBuf =
+        a.plans.clone().map(PathBuf::from).unwrap_or_else(|| PathBuf::from(cfg.lab.plans.clone()));
+    let store = LabStore::new(lab_root);
+    match a.verb.as_str() {
+        "run" => cmd_run(&a, &store, &plans_dir),
+        "table" => cmd_table(&a, &store, &plans_dir),
+        "list" => cmd_list(&store),
+        "trace" => cmd_trace(&a, &store),
+        "gc" => cmd_gc(&a, &store, &plans_dir),
+        "" | "help" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown lab verb `{other}`\n{USAGE}"),
+    }
+}
+
+/// A plan reference is a path if one exists there, else a name under
+/// the plans directory.
+fn resolve_plan(arg: &str, plans_dir: &Path) -> Result<Plan> {
+    let direct = Path::new(arg);
+    let path = if direct.exists() {
+        direct.to_path_buf()
+    } else {
+        plans_dir.join(format!("{arg}.toml"))
+    };
+    ensure!(
+        path.exists(),
+        "no plan at `{arg}` and no {} either",
+        path.display()
+    );
+    Plan::load(&path)
+}
+
+fn cmd_run(a: &LabArgs, store: &LabStore, plans_dir: &Path) -> Result<()> {
+    let plan_ref = a
+        .positionals
+        .first()
+        .context("lab run: missing <plan> (a path or a name under the plans dir)")?;
+    let plan = resolve_plan(plan_ref, plans_dir)?;
+    println!("lab run: plan `{}` -> {}", plan.name, plan.run_id());
+    if a.dry_run {
+        for t in plan.trials() {
+            println!("  {}", t.rel_dir());
+        }
+        return Ok(());
+    }
+    let opts = RunOpts { force: a.force, only: a.only.clone(), quiet: a.quiet };
+    let report = runner::run_plan(&plan, store, &opts)?;
+    println!(
+        "run {}: {} executed, {} resumed, {} filtered of {} trial(s) -> {}",
+        report.run_id,
+        report.executed,
+        report.resumed,
+        report.filtered,
+        report.total,
+        report.run_dir.display()
+    );
+    if !a.no_export {
+        let (serve_rows, train_rows) = runner::export_flat(
+            store,
+            &report.run_id,
+            Path::new("BENCH_serve.json"),
+            Path::new("BENCH_train.json"),
+        )?;
+        if !serve_rows.is_empty() {
+            println!("exported {} serve row(s) -> BENCH_serve.json", serve_rows.len());
+            runner::print_serve_summary(&serve_rows);
+        }
+        if !train_rows.is_empty() {
+            println!("exported {} train row(s) -> BENCH_train.json", train_rows.len());
+            runner::print_train_summary(&train_rows);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table(a: &LabArgs, store: &LabStore, plans_dir: &Path) -> Result<()> {
+    let arg = a.positionals.first().context("lab table: missing <plan|run-id>")?;
+    let run_id = if store.run_dir(arg).is_dir() {
+        arg.clone()
+    } else {
+        resolve_plan(arg, plans_dir)?.run_id()
+    };
+    let trials = store.completed_trials(&run_id)?;
+    ensure!(
+        !trials.is_empty(),
+        "run {run_id} has no completed trials (run `repro lab run` first)"
+    );
+    let (serve, train) = tables::build_tables(&trials)?;
+    if let Some(t) = serve {
+        println!("-- serve ({run_id}) --");
+        print!("{}", tables::render(&t));
+    }
+    if let Some(t) = train {
+        println!("-- train ({run_id}) --");
+        print!("{}", tables::render(&t));
+    }
+    Ok(())
+}
+
+fn cmd_list(store: &LabStore) -> Result<()> {
+    let runs = store.list_runs()?;
+    if runs.is_empty() {
+        println!("no lab runs under {}", store.runs_dir().display());
+        return Ok(());
+    }
+    println!("{:<44} {:>7}  {:<12} {}", "run", "trials", "git", "updated-unix");
+    for r in runs {
+        let rev = &r.git_rev[..r.git_rev.len().min(12)];
+        println!("{:<44} {:>7}  {:<12} {:.0}", r.id, r.trials_done, rev, r.updated_unix);
+    }
+    Ok(())
+}
+
+fn cmd_trace(a: &LabArgs, store: &LabStore) -> Result<()> {
+    let arg = a
+        .positionals
+        .first()
+        .context("lab trace: missing <run-id>/<task>/<cell>/r<K>")?;
+    let (run_id, rel) = arg
+        .split_once('/')
+        .context("lab trace expects <run-id>/<trial-path> (see `repro lab list`)")?;
+    let path = store.run_dir(run_id).join("trials").join(rel).join("trial.json");
+    let text = fs::read_to_string(&path)
+        .with_context(|| format!("no completed trial at {}", path.display()))?;
+    let doc = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    println!("run        {run_id}");
+    println!("trial      {rel}");
+    for key in ["task", "cell", "repeat", "seed", "git_rev", "wall_s", "finished_unix"] {
+        if let Some(v) = doc.opt(key) {
+            println!("{key:<10} {}", v.to_string().trim_matches('"'));
+        }
+    }
+    if let Some(spec) = doc.opt("spec") {
+        println!("spec       {}", spec.to_string());
+    }
+    if let Some(row) = doc.opt("row") {
+        println!("row        {}", row.to_string());
+    }
+    let resolved = store.run_dir(run_id).join("plan.resolved.toml");
+    if resolved.exists() {
+        println!("resolved   {}", resolved.display());
+    }
+    Ok(())
+}
+
+fn cmd_gc(a: &LabArgs, store: &LabStore, plans_dir: &Path) -> Result<()> {
+    let mut keep: BTreeSet<String> = BTreeSet::new();
+    let entries = fs::read_dir(plans_dir)
+        .with_context(|| format!("reading plans dir {}", plans_dir.display()))?;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if !path.extension().is_some_and(|x| x == "toml") {
+            continue;
+        }
+        // a plan that fails to parse aborts gc: never delete runs
+        // because their plan was unreadable
+        let plan = Plan::load(&path)
+            .with_context(|| format!("lab gc refuses to proceed: bad plan {}", path.display()))?;
+        keep.insert(plan.run_id());
+    }
+    let (removed, kept) = store.gc(&keep, a.dry_run)?;
+    for id in &kept {
+        println!("keep     {id}");
+    }
+    let action = if a.dry_run { "would rm" } else { "removed " };
+    for id in &removed {
+        println!("{action} {id}");
+    }
+    println!(
+        "{} removed, {} kept ({} plan(s) under {})",
+        removed.len(),
+        kept.len(),
+        keep.len(),
+        plans_dir.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! The experiment lab: declarative sweep plans executed into
+//! content-addressed run directories with resume-by-default, plus the
+//! analysis tables the CI gates consume.
+//!
+//! * [`plan`] — TOML plan schema, grid expansion, run-id hashing
+//! * [`store`] — run-directory layout, atomic trial I/O, gc
+//! * [`runner`] — trial execution (every legacy bench cell) + export
+//! * [`tables`] — per-cell mean/std/min/max aggregation + rendering
+//! * [`cli`] — the `repro lab` subcommand (run/table/list/trace/gc)
+
+pub mod cli;
+pub mod plan;
+pub mod runner;
+pub mod store;
+pub mod tables;

@@ -1,0 +1,548 @@
+//! Declarative experiment plans: a TOML grid over the serving and
+//! training knobs, expanded into a deterministic trial list and hashed
+//! into a content address.
+//!
+//! A plan is the unit of reproducibility: the canonical dump of every
+//! knob (plus the row-schema version) is FNV-hashed into the run id,
+//! so the same plan always lands in the same run directory and any
+//! knob change — an axis value, the repeat count, the request budget —
+//! opens a fresh one. Unknown keys, unknown axis values, empty axes,
+//! and duplicate axis entries are all rejected loudly at parse time:
+//! a typo must never silently shrink a sweep.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::toml::{parse as toml_parse, TomlValue};
+
+use super::store::fnv1a64;
+
+/// Bumped whenever the trial row schema or cell semantics change:
+/// hashed into every run id so stale cached run directories from an
+/// older lab simply stop resolving instead of being resumed wrongly.
+pub const LAB_SCHEMA: u32 = 1;
+
+/// Engines a serve grid may sweep.
+pub const KNOWN_ENGINES: &[&str] = &["float", "shift2", "shift4", "shift6"];
+
+/// Executors a serve grid may sweep.
+pub const KNOWN_EXECUTORS: &[&str] = &["planned", "naive"];
+
+/// SIMD policies a serve grid may sweep (resolved per-host at run
+/// time; rows record the backend that actually ran).
+pub const KNOWN_SIMD: &[&str] = &["auto", "on", "off"];
+
+/// Named non-grid cells (each is one trial × repeats). These are the
+/// special benchmark scenarios the grid product cannot express: open-
+/// loop load shapes, elastic pools, chaos storms, registry cells.
+pub const KNOWN_EXTRAS: &[&str] = &[
+    "win-fixed-steady",
+    "win-fixed-bursty",
+    "win-adaptive-steady",
+    "win-adaptive-bursty",
+    "auto-fixed",
+    "auto-elastic",
+    "trained",
+    "fault-none",
+    "fault-storm",
+    "tenants",
+    "swap",
+];
+
+/// Training methods a train grid may list.
+pub const KNOWN_METHODS: &[&str] =
+    &["float", "ternary-exact", "lbw-4", "lbw-6", "inq-6", "dorefa-6"];
+
+/// A parsed, validated experiment plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub name: String,
+    /// Repeats per serving cell (training repeats over `seeds` instead
+    /// — the seed IS the variance axis there).
+    pub repeats: u32,
+    /// Scene-generation seed shared by every serving cell.
+    pub seed: u64,
+    /// Closed-loop request budget per serving cell.
+    pub requests: usize,
+    /// Closed-loop client count.
+    pub concurrency: usize,
+    pub serve: Option<ServeGrid>,
+    pub train: Option<TrainGrid>,
+}
+
+/// The serving sweep: a full product over the listed axes plus the
+/// named extra cells.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeGrid {
+    pub engines: Vec<String>,
+    pub executors: Vec<String>,
+    pub shards: Vec<usize>,
+    pub threads: Vec<usize>,
+    pub window_ms: Vec<u64>,
+    pub simd: Vec<String>,
+    pub extras: Vec<String>,
+    /// Float pre-training steps for the `trained` extra cell.
+    pub trained_steps: u64,
+}
+
+/// The accuracy sweep: every method × every seed, float cells first
+/// (fine-tune and INQ cells load the float checkpoint artifact).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainGrid {
+    pub profile: String,
+    pub methods: Vec<String>,
+    pub seeds: Vec<u64>,
+    pub width: usize,
+    pub batch: usize,
+    pub float_steps: u64,
+    pub float_lr: f32,
+    pub ft_steps: u64,
+    pub ft_lr: f32,
+    pub train_scenes: u64,
+    pub eval_scenes: u64,
+}
+
+/// One point of the serving grid product (post-normalization).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeCell {
+    pub executor: String,
+    pub engine: String,
+    pub shards: usize,
+    pub threads: usize,
+    pub window_ms: u64,
+    pub simd: String,
+}
+
+impl ServeCell {
+    /// Stable directory slug for the cell.
+    pub fn slug(&self) -> String {
+        format!(
+            "{}-{}-s{}-t{}-w{}-{}",
+            self.executor, self.engine, self.shards, self.threads, self.window_ms, self.simd
+        )
+    }
+}
+
+/// What a single trial executes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrialKind {
+    ServeGrid(ServeCell),
+    ServeExtra(String),
+    TrainCell { method: String, seed: u64 },
+}
+
+/// One executable unit: a cell at one repeat index. `cell` is the
+/// task-prefixed slug (`serve/...` / `train/...`), stable across
+/// repeats; the trial directory is `<cell>/r<repeat>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trial {
+    pub kind: TrialKind,
+    pub cell: String,
+    pub repeat: u32,
+}
+
+impl Trial {
+    pub fn task(&self) -> &'static str {
+        match self.kind {
+            TrialKind::TrainCell { .. } => "train",
+            _ => "serve",
+        }
+    }
+
+    /// Path of the trial directory relative to `<run>/trials/`.
+    pub fn rel_dir(&self) -> String {
+        format!("{}/r{}", self.cell, self.repeat)
+    }
+}
+
+fn str_list(key: &str, v: &TomlValue) -> Result<Vec<String>> {
+    match v {
+        TomlValue::Arr(items) => items
+            .iter()
+            .map(|x| {
+                Ok(x.as_str()
+                    .with_context(|| format!("{key}: expected an array of strings"))?
+                    .to_string())
+            })
+            .collect(),
+        _ => bail!("{key}: expected an array of strings"),
+    }
+}
+
+fn usize_list(key: &str, v: &TomlValue) -> Result<Vec<usize>> {
+    match v {
+        TomlValue::Arr(items) => items
+            .iter()
+            .map(|x| x.as_usize().with_context(|| format!("{key}: expected an array of integers")))
+            .collect(),
+        _ => bail!("{key}: expected an array of integers"),
+    }
+}
+
+fn u64_list(key: &str, v: &TomlValue) -> Result<Vec<u64>> {
+    match v {
+        TomlValue::Arr(items) => items
+            .iter()
+            .map(|x| x.as_u64().with_context(|| format!("{key}: expected an array of integers")))
+            .collect(),
+        _ => bail!("{key}: expected an array of integers"),
+    }
+}
+
+fn check_axis(key: &str, values: &[String], known: &[&str]) -> Result<()> {
+    ensure!(!values.is_empty(), "{key}: axis is empty — delete the key or list values");
+    for v in values {
+        ensure!(known.contains(&v.as_str()), "{key}: unknown value `{v}` (known: {known:?})");
+    }
+    for (i, v) in values.iter().enumerate() {
+        ensure!(!values[..i].contains(v), "{key}: duplicate value `{v}`");
+    }
+    Ok(())
+}
+
+fn check_num_axis<T: PartialEq + std::fmt::Debug>(key: &str, values: &[T]) -> Result<()> {
+    ensure!(!values.is_empty(), "{key}: axis is empty — delete the key or list values");
+    for (i, v) in values.iter().enumerate() {
+        ensure!(!values[..i].contains(v), "{key}: duplicate value `{v:?}`");
+    }
+    Ok(())
+}
+
+impl Default for ServeGrid {
+    fn default() -> Self {
+        ServeGrid {
+            engines: Vec::new(),
+            executors: Vec::new(),
+            shards: vec![1],
+            threads: vec![1],
+            window_ms: vec![2],
+            simd: vec!["auto".to_string()],
+            extras: Vec::new(),
+            trained_steps: 30,
+        }
+    }
+}
+
+impl Default for TrainGrid {
+    fn default() -> Self {
+        TrainGrid {
+            profile: "smoke".to_string(),
+            methods: Vec::new(),
+            seeds: Vec::new(),
+            width: 8,
+            batch: 8,
+            float_steps: 600,
+            float_lr: 0.05,
+            ft_steps: 200,
+            ft_lr: 0.01,
+            train_scenes: 256,
+            eval_scenes: 48,
+        }
+    }
+}
+
+impl Plan {
+    /// Parse and validate a plan from TOML text.
+    pub fn parse(text: &str) -> Result<Plan> {
+        let doc = toml_parse(text).context("plan is not valid TOML")?;
+        let mut plan = Plan {
+            name: String::new(),
+            repeats: 1,
+            seed: 4242,
+            requests: 48,
+            concurrency: 8,
+            serve: None,
+            train: None,
+        };
+        let mut serve = ServeGrid::default();
+        let mut train = TrainGrid::default();
+        let (mut has_serve, mut has_train) = (false, false);
+        for (key, v) in &doc {
+            let at = || format!("plan key `{key}`");
+            match key.as_str() {
+                "name" => plan.name = v.as_str().with_context(at)?.to_string(),
+                "repeats" => plan.repeats = v.as_u32().with_context(at)?,
+                "seed" => plan.seed = v.as_u64().with_context(at)?,
+                "requests" => plan.requests = v.as_usize().with_context(at)?,
+                "concurrency" => plan.concurrency = v.as_usize().with_context(at)?,
+                "serve.engines" => {
+                    serve.engines = str_list(key, v)?;
+                    has_serve = true;
+                }
+                "serve.executors" => {
+                    serve.executors = str_list(key, v)?;
+                    has_serve = true;
+                }
+                "serve.shards" => {
+                    serve.shards = usize_list(key, v)?;
+                    has_serve = true;
+                }
+                "serve.threads" => {
+                    serve.threads = usize_list(key, v)?;
+                    has_serve = true;
+                }
+                "serve.window_ms" => {
+                    serve.window_ms = u64_list(key, v)?;
+                    has_serve = true;
+                }
+                "serve.simd" => {
+                    serve.simd = str_list(key, v)?;
+                    has_serve = true;
+                }
+                "serve.extras" => {
+                    serve.extras = str_list(key, v)?;
+                    has_serve = true;
+                }
+                "serve.trained_steps" => {
+                    serve.trained_steps = v.as_u64().with_context(at)?;
+                    has_serve = true;
+                }
+                "train.profile" => {
+                    train.profile = v.as_str().with_context(at)?.to_string();
+                    has_train = true;
+                }
+                "train.methods" => {
+                    train.methods = str_list(key, v)?;
+                    has_train = true;
+                }
+                "train.seeds" => {
+                    train.seeds = u64_list(key, v)?;
+                    has_train = true;
+                }
+                "train.width" => {
+                    train.width = v.as_usize().with_context(at)?;
+                    has_train = true;
+                }
+                "train.batch" => {
+                    train.batch = v.as_usize().with_context(at)?;
+                    has_train = true;
+                }
+                "train.float_steps" => {
+                    train.float_steps = v.as_u64().with_context(at)?;
+                    has_train = true;
+                }
+                "train.float_lr" => {
+                    train.float_lr = v.as_f32().with_context(at)?;
+                    has_train = true;
+                }
+                "train.ft_steps" => {
+                    train.ft_steps = v.as_u64().with_context(at)?;
+                    has_train = true;
+                }
+                "train.ft_lr" => {
+                    train.ft_lr = v.as_f32().with_context(at)?;
+                    has_train = true;
+                }
+                "train.train_scenes" => {
+                    train.train_scenes = v.as_u64().with_context(at)?;
+                    has_train = true;
+                }
+                "train.eval_scenes" => {
+                    train.eval_scenes = v.as_u64().with_context(at)?;
+                    has_train = true;
+                }
+                other => bail!("unknown plan key `{other}`"),
+            }
+        }
+        if has_serve {
+            plan.serve = Some(serve);
+        }
+        if has_train {
+            plan.train = Some(train);
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Load a plan file.
+    pub fn load(path: &Path) -> Result<Plan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan {}", path.display()))?;
+        Plan::parse(&text).with_context(|| format!("in plan {}", path.display()))
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "plan needs a `name`");
+        ensure!(
+            self.name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'),
+            "plan name `{}` must be lowercase [a-z0-9-] (it becomes a directory name)",
+            self.name
+        );
+        ensure!(self.repeats >= 1, "repeats must be >= 1");
+        ensure!(self.requests >= 1, "requests must be >= 1");
+        ensure!(self.concurrency >= 1, "concurrency must be >= 1");
+        ensure!(
+            self.requests % self.concurrency == 0,
+            "requests ({}) must divide evenly across concurrency ({}) — a remainder would \
+             silently drop requests",
+            self.requests,
+            self.concurrency
+        );
+        ensure!(
+            self.serve.is_some() || self.train.is_some(),
+            "plan declares no work: add a [serve] or [train] section"
+        );
+        if let Some(g) = &self.serve {
+            check_axis("serve.engines", &g.engines, KNOWN_ENGINES)?;
+            check_axis("serve.executors", &g.executors, KNOWN_EXECUTORS)?;
+            check_num_axis("serve.shards", &g.shards)?;
+            check_num_axis("serve.threads", &g.threads)?;
+            check_num_axis("serve.window_ms", &g.window_ms)?;
+            check_axis("serve.simd", &g.simd, KNOWN_SIMD)?;
+            for x in &g.extras {
+                ensure!(
+                    KNOWN_EXTRAS.contains(&x.as_str()),
+                    "serve.extras: unknown cell `{x}` (known: {KNOWN_EXTRAS:?})"
+                );
+            }
+            for (i, x) in g.extras.iter().enumerate() {
+                ensure!(!g.extras[..i].contains(x), "serve.extras: duplicate cell `{x}`");
+            }
+            for &s in &g.shards {
+                ensure!(s >= 1, "serve.shards: shard counts must be >= 1");
+            }
+            for &t in &g.threads {
+                ensure!(t >= 1, "serve.threads: thread counts must be >= 1");
+            }
+            ensure!(g.trained_steps >= 1, "serve.trained_steps must be >= 1");
+        }
+        if let Some(t) = &self.train {
+            check_axis("train.methods", &t.methods, KNOWN_METHODS)?;
+            check_num_axis("train.seeds", &t.seeds)?;
+            let has_float = t.methods.iter().any(|m| m == "float");
+            ensure!(
+                has_float || t.methods.is_empty(),
+                "train.methods: fine-tune methods need `float` in the list — they resume from \
+                 the float cell's checkpoint"
+            );
+            ensure!(t.float_steps >= 1, "train.float_steps must be >= 1");
+            ensure!(t.ft_steps >= 1, "train.ft_steps must be >= 1");
+            ensure!(t.width >= 1, "train.width must be >= 1");
+            ensure!(t.batch >= 1, "train.batch must be >= 1");
+            ensure!(t.train_scenes >= 1, "train.train_scenes must be >= 1");
+            ensure!(t.eval_scenes >= 1, "train.eval_scenes must be >= 1");
+            ensure!(t.float_lr > 0.0, "train.float_lr must be > 0");
+            ensure!(t.ft_lr > 0.0, "train.ft_lr must be > 0");
+        }
+        Ok(())
+    }
+
+    /// Deterministic dump of every knob — the content that gets
+    /// hashed into the run id, and what `plan.resolved.toml` records.
+    pub fn canonical(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "lab_schema = {LAB_SCHEMA}");
+        let _ = writeln!(s, "name = \"{}\"", self.name);
+        let _ = writeln!(s, "repeats = {}", self.repeats);
+        let _ = writeln!(s, "seed = {}", self.seed);
+        let _ = writeln!(s, "requests = {}", self.requests);
+        let _ = writeln!(s, "concurrency = {}", self.concurrency);
+        if let Some(g) = &self.serve {
+            let _ = writeln!(s, "serve.engines = {:?}", g.engines);
+            let _ = writeln!(s, "serve.executors = {:?}", g.executors);
+            let _ = writeln!(s, "serve.shards = {:?}", g.shards);
+            let _ = writeln!(s, "serve.threads = {:?}", g.threads);
+            let _ = writeln!(s, "serve.window_ms = {:?}", g.window_ms);
+            let _ = writeln!(s, "serve.simd = {:?}", g.simd);
+            let _ = writeln!(s, "serve.extras = {:?}", g.extras);
+            let _ = writeln!(s, "serve.trained_steps = {}", g.trained_steps);
+        }
+        if let Some(t) = &self.train {
+            let _ = writeln!(s, "train.profile = \"{}\"", t.profile);
+            let _ = writeln!(s, "train.methods = {:?}", t.methods);
+            let _ = writeln!(s, "train.seeds = {:?}", t.seeds);
+            let _ = writeln!(s, "train.width = {}", t.width);
+            let _ = writeln!(s, "train.batch = {}", t.batch);
+            let _ = writeln!(s, "train.float_steps = {}", t.float_steps);
+            let _ = writeln!(s, "train.float_lr = {}", t.float_lr);
+            let _ = writeln!(s, "train.ft_steps = {}", t.ft_steps);
+            let _ = writeln!(s, "train.ft_lr = {}", t.ft_lr);
+            let _ = writeln!(s, "train.train_scenes = {}", t.train_scenes);
+            let _ = writeln!(s, "train.eval_scenes = {}", t.eval_scenes);
+        }
+        s
+    }
+
+    /// The content address: plan name + 64-bit FNV of the canonical
+    /// dump (which embeds `LAB_SCHEMA`, so a row-schema bump retires
+    /// every old run directory at once).
+    pub fn run_id(&self) -> String {
+        format!("{}-{:016x}", self.name, fnv1a64(self.canonical().as_bytes()))
+    }
+
+    /// Expand the plan into its executable trial list, in a
+    /// deterministic order. Grid cells come first (naive cells
+    /// collapse their thread/simd axes — the naive walk is
+    /// single-threaded scalar by construction — and collapse-induced
+    /// duplicates are dropped), then the named extras, then training
+    /// cells with each seed's float run ordered before the fine-tune
+    /// methods that load its checkpoint.
+    pub fn trials(&self) -> Vec<Trial> {
+        let mut out = Vec::new();
+        if let Some(g) = &self.serve {
+            let mut seen: Vec<String> = Vec::new();
+            for executor in &g.executors {
+                for engine in &g.engines {
+                    for &shards in &g.shards {
+                        for &threads in &g.threads {
+                            for &window_ms in &g.window_ms {
+                                for simd in &g.simd {
+                                    let (threads, simd) = if executor == "naive" {
+                                        (1, "off".to_string())
+                                    } else {
+                                        (threads, simd.clone())
+                                    };
+                                    let cell = ServeCell {
+                                        executor: executor.clone(),
+                                        engine: engine.clone(),
+                                        shards,
+                                        threads,
+                                        window_ms,
+                                        simd,
+                                    };
+                                    let slug = cell.slug();
+                                    if seen.contains(&slug) {
+                                        continue;
+                                    }
+                                    seen.push(slug.clone());
+                                    for repeat in 0..self.repeats {
+                                        out.push(Trial {
+                                            kind: TrialKind::ServeGrid(cell.clone()),
+                                            cell: format!("serve/{slug}"),
+                                            repeat,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            for x in &g.extras {
+                for repeat in 0..self.repeats {
+                    out.push(Trial {
+                        kind: TrialKind::ServeExtra(x.clone()),
+                        cell: format!("serve/x-{x}"),
+                        repeat,
+                    });
+                }
+            }
+        }
+        if let Some(t) = &self.train {
+            let mut methods: Vec<&String> = t.methods.iter().collect();
+            methods.sort_by_key(|m| usize::from(m.as_str() != "float"));
+            for &seed in &t.seeds {
+                for m in &methods {
+                    out.push(Trial {
+                        kind: TrialKind::TrainCell { method: (*m).clone(), seed },
+                        cell: format!("train/{m}-s{seed}"),
+                        repeat: 0,
+                    });
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,1145 @@
+//! Trial execution: every benchmark cell the legacy `bench_serve` /
+//! `bench_train` loops ran, re-homed behind the lab's resume/force
+//! machinery. One trial = one cell at one repeat, producing exactly
+//! one row in the established `BENCH_serve.json` / `BENCH_train.json`
+//! row schema (the gates and the accumulated trajectory files keep
+//! their shape).
+//!
+//! Serving rows come from a closed-loop driver (fixed client count,
+//! back-to-back requests) except for the named extra cells, which
+//! reproduce the open-loop window/autoscale comparisons, the trained-
+//! checkpoint cell, the fault storm, and the registry tenant/swap
+//! cells. Training rows chain: the float cell persists its checkpoint
+//! (`ckpt.lbw`) in its trial directory and every fine-tune/INQ cell
+//! for that seed loads it — which is why the plan orders float first.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::autoscale::AutoscaleConfig;
+use crate::coordinator::inq::train_inq_hermetic;
+use crate::coordinator::metrics::LatencyStats;
+use crate::coordinator::params::{Checkpoint, ParamSpec};
+use crate::coordinator::registry::{ModelDef, ModelRegistry};
+use crate::coordinator::server::{
+    DetectServer, Executor, FaultPlan, RetryPolicy, ServerConfig, WindowMode,
+};
+use crate::coordinator::trainer::{
+    HermeticTrainer, TrainConfig, TrainMethod, TrainRow,
+};
+use crate::data::{generate_scene, SceneConfig};
+use crate::nn::synth::{synthetic_checkpoint, synthetic_spec, SynthConfig};
+use crate::nn::{EngineKind, KernelBackend, SimdMode};
+use crate::util::json::Json;
+
+use super::plan::{Plan, ServeCell, TrainGrid, Trial, TrialKind};
+use super::store::{git_rev, LabStore};
+use super::tables::build_tables;
+
+/// INQ cumulative-freeze schedule (the INQ paper's default).
+const INQ_PHASES: [f64; 4] = [0.5, 0.75, 0.875, 1.0];
+
+/// The `detector` header stamped into exported serve documents —
+/// unchanged from the legacy bench so downstream readers keep working.
+const SERVE_DETECTOR: &str = "synthetic width-8, 3 stages, b=6 shift + f32 engines, planned+naive executors, threads {1,4} tile pools, fixed+adaptive batch windows (open-loop steady/bursty), elastic shards-auto cells (open-loop bursty, scale events recorded), simd on/off kernel-backend cells (forced-scalar baselines when SIMD is detected)";
+
+const TRAIN_DETECTOR: &str =
+    "synthetic width-8 µResNet + R-FCN-lite on SynthVOC, hermetic trainer";
+
+pub struct RunOpts {
+    pub force: bool,
+    /// Run only trials of this task (`"serve"` / `"train"`).
+    pub only: Option<String>,
+    pub quiet: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts { force: false, only: None, quiet: true }
+    }
+}
+
+#[derive(Debug)]
+pub struct RunReport {
+    pub run_id: String,
+    pub run_dir: PathBuf,
+    pub total: usize,
+    pub executed: usize,
+    pub resumed: usize,
+    pub filtered: usize,
+}
+
+/// Shared serving fixtures, built once per process on first use.
+struct ServeCtx {
+    detected: &'static str,
+    spec: ParamSpec,
+    ckpts: BTreeMap<u32, Checkpoint>,
+    scenes: Vec<Vec<f32>>,
+}
+
+impl ServeCtx {
+    fn build(scene_seed: u64) -> ServeCtx {
+        let detected =
+            if KernelBackend::detect(SimdMode::from_env()).is_simd() { "on" } else { "off" };
+        let spec = synthetic_spec(SynthConfig::default());
+        let mut ckpts = BTreeMap::new();
+        for bits in [2u32, 4, 6] {
+            ckpts.insert(bits, synthetic_checkpoint(&spec, 2027, bits));
+        }
+        let scene_cfg = SceneConfig::default();
+        let scenes: Vec<Vec<f32>> =
+            (0..32u64).map(|i| generate_scene(scene_seed, i, &scene_cfg).image).collect();
+        ServeCtx { detected, spec, ckpts, scenes }
+    }
+
+    fn ckpt(&self, bits: u32) -> &Checkpoint {
+        &self.ckpts[&bits]
+    }
+}
+
+fn engine_of(name: &str) -> Result<(EngineKind, u32)> {
+    Ok(match name {
+        "float" => (EngineKind::Float, 6),
+        "shift2" => (EngineKind::Shift { bits: 2 }, 2),
+        "shift4" => (EngineKind::Shift { bits: 4 }, 4),
+        "shift6" => (EngineKind::Shift { bits: 6 }, 6),
+        other => bail!("unknown engine `{other}`"),
+    })
+}
+
+fn train_method_of(name: &str) -> Result<TrainMethod> {
+    Ok(match name {
+        "float" => TrainMethod::Float,
+        "ternary-exact" => TrainMethod::TernaryExact,
+        "lbw-4" => TrainMethod::Lbw { bits: 4 },
+        "lbw-6" => TrainMethod::Lbw { bits: 6 },
+        "dorefa-6" => TrainMethod::Dorefa { bits: 6 },
+        other => bail!("unknown train method `{other}`"),
+    })
+}
+
+/// Closed-loop driver: `concurrency` clients each fire their share of
+/// requests back-to-back; errors propagate (closed-loop cells are
+/// fault-free by construction).
+fn drive(
+    server: &DetectServer,
+    scenes: &[Vec<f32>],
+    requests: usize,
+    concurrency: usize,
+) -> Result<Duration> {
+    let handle = server.handle();
+    let t0 = Instant::now();
+    let per = requests / concurrency;
+    let mut clients = Vec::new();
+    for c in 0..concurrency {
+        let h = handle.clone();
+        let imgs: Vec<Vec<f32>> =
+            (0..per).map(|i| scenes[(c * per + i) % scenes.len()].clone()).collect();
+        clients.push(std::thread::spawn(move || -> Result<()> {
+            for img in imgs {
+                h.detect(img)?;
+            }
+            Ok(())
+        }));
+    }
+    for c in clients {
+        c.join().expect("client thread")?;
+    }
+    Ok(t0.elapsed())
+}
+
+/// Open-loop driver: every request fires at its scheduled offset from
+/// the start, whether or not earlier ones completed — the arrival
+/// process is independent of service times. Returns (wall, errors).
+fn drive_open_loop(
+    server: &DetectServer,
+    scenes: &[Vec<f32>],
+    offsets: &[Duration],
+) -> (Duration, usize) {
+    let handle = server.handle();
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for (i, &off) in offsets.iter().enumerate() {
+        let h = handle.clone();
+        let img = scenes[i % scenes.len()].clone();
+        clients.push(std::thread::spawn(move || {
+            std::thread::sleep(off.saturating_sub(t0.elapsed()));
+            h.detect(img).is_err()
+        }));
+    }
+    let mut errors = 0usize;
+    for c in clients {
+        if c.join().expect("open-loop client") {
+            errors += 1;
+        }
+    }
+    (t0.elapsed(), errors)
+}
+
+fn steady_schedule(n: usize, gap: Duration) -> Vec<Duration> {
+    (0..n).map(|i| gap * i as u32).collect()
+}
+
+fn bursty_schedule(n: usize, burst: usize, intra: Duration, period: Duration) -> Vec<Duration> {
+    (0..n).map(|i| period * (i / burst) as u32 + intra * (i % burst) as u32).collect()
+}
+
+/// Assemble a serving row in the established `BENCH_serve.json`
+/// schema. `extra` appends the optional marker fields (`load`/`shed`,
+/// autoscale counters, `faults`, registry fields) in their legacy
+/// order.
+#[allow(clippy::too_many_arguments)]
+fn serve_row(
+    executor: &str,
+    engine: &str,
+    shards: Json,
+    threads: usize,
+    window: &str,
+    window_ms: u64,
+    checkpoint: &str,
+    simd: &str,
+    requests: usize,
+    concurrency: usize,
+    wall: Duration,
+    agg: &LatencyStats,
+    shard_counts: &[usize],
+    extra: Vec<(&str, Json)>,
+) -> Json {
+    let snap = agg.snapshot();
+    let mut fields = vec![
+        ("executor", Json::str(executor)),
+        ("engine", Json::str(engine)),
+        ("shards", shards),
+        ("threads", Json::num(threads as f64)),
+        ("window", Json::str(window)),
+        ("batch_window_ms", Json::num(window_ms as f64)),
+        ("checkpoint", Json::str(checkpoint)),
+        ("simd", Json::str(simd)),
+        ("requests", Json::num(requests as f64)),
+        ("concurrency", Json::num(concurrency as f64)),
+        ("wall_s", Json::num(wall.as_secs_f64())),
+        ("imgs_per_s", Json::num(agg.throughput(wall))),
+        ("p50_ms", Json::num(snap.percentile_ms(50.0))),
+        ("p95_ms", Json::num(snap.percentile_ms(95.0))),
+        ("p99_ms", Json::num(snap.percentile_ms(99.0))),
+        ("mean_batch", Json::num(agg.mean_batch())),
+        (
+            "shard_counts",
+            Json::Arr(shard_counts.iter().map(|&n| Json::num(n as f64)).collect()),
+        ),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+fn shard_counts_of(server: &DetectServer) -> Vec<usize> {
+    server.shard_latencies().iter().map(|s| s.count()).collect()
+}
+
+/// One grid-product cell: the classic closed-loop sweep point.
+fn run_grid_cell(plan: &Plan, cell: &ServeCell, ctx: &ServeCtx) -> Result<Json> {
+    let (engine, bits) = engine_of(&cell.engine)?;
+    let executor = match cell.executor.as_str() {
+        "planned" => Executor::Planned,
+        "naive" => Executor::Naive,
+        other => bail!("unknown executor `{other}`"),
+    };
+    let simd_mode: SimdMode = cell.simd.parse()?;
+    let cfg = ServerConfig {
+        shards: cell.shards,
+        threads: cell.threads,
+        max_batch: 8,
+        batch_window: Duration::from_millis(cell.window_ms),
+        queue_depth: 256,
+        executor,
+        simd: simd_mode,
+        // sweep cells must stay fault-free even when the chaos CI leg
+        // exports LBW_FAULTS
+        faults: None,
+        ..Default::default()
+    };
+    let server = DetectServer::start_engine(&ctx.spec, ctx.ckpt(bits), engine, cfg)?;
+    let wall = drive(&server, &ctx.scenes, plan.requests, plan.concurrency)?;
+    let agg = server.handle().latency();
+    let shard_counts = shard_counts_of(&server);
+    // record the backend that actually ran, not the requested policy
+    let simd_label = match executor {
+        Executor::Naive => "off",
+        _ => {
+            if KernelBackend::detect(simd_mode).is_simd() {
+                "on"
+            } else {
+                "off"
+            }
+        }
+    };
+    let row = serve_row(
+        &cell.executor,
+        &cell.engine,
+        Json::num(cell.shards as f64),
+        cell.threads,
+        "fixed",
+        cell.window_ms,
+        "synth",
+        simd_label,
+        plan.requests,
+        plan.concurrency,
+        wall,
+        &agg,
+        &shard_counts,
+        vec![],
+    );
+    server.shutdown();
+    Ok(row)
+}
+
+/// `win-{fixed,adaptive}-{steady,bursty}`: the adaptive-vs-fixed
+/// window comparison under open-loop load, one planned shift6 shard.
+fn run_window_extra(plan: &Plan, ctx: &ServeCtx, win: &str, load: &str) -> Result<Json> {
+    let (window, window_ms) = match win {
+        "fixed" => (WindowMode::Fixed, 2),
+        _ => (WindowMode::Adaptive, 10),
+    };
+    let offsets = match load {
+        "steady" => steady_schedule(plan.requests, Duration::from_millis(6)),
+        _ => bursty_schedule(plan.requests, 16, Duration::from_millis(1), Duration::from_millis(100)),
+    };
+    let cfg = ServerConfig {
+        shards: 1,
+        threads: 1,
+        max_batch: 8,
+        batch_window: Duration::from_millis(window_ms),
+        window,
+        // generous admission deadline: healthy runs shed nothing, but
+        // every request runs the stamp + expiry check
+        deadline: Some(Duration::from_millis(250)),
+        queue_depth: 256,
+        executor: Executor::Planned,
+        faults: None,
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_engine(&ctx.spec, ctx.ckpt(6), EngineKind::Shift { bits: 6 }, cfg)?;
+    let (wall, _errors) = drive_open_loop(&server, &ctx.scenes, &offsets);
+    let agg = server.handle().latency();
+    let shard_counts = shard_counts_of(&server);
+    let row = serve_row(
+        "planned",
+        "shift6",
+        Json::num(1.0),
+        1,
+        win,
+        window_ms,
+        "synth",
+        ctx.detected,
+        plan.requests,
+        plan.concurrency,
+        wall,
+        &agg,
+        &shard_counts,
+        vec![("load", Json::str(load)), ("shed", Json::num(agg.shed() as f64))],
+    );
+    server.shutdown();
+    Ok(row)
+}
+
+/// `auto-{fixed,elastic}`: open-loop bursty load through a fixed
+/// single shard vs an elastic pool bounded [1, 4].
+fn run_autoscale_extra(plan: &Plan, ctx: &ServeCtx, elastic: bool) -> Result<Json> {
+    let offsets = bursty_schedule(plan.requests, 16, Duration::ZERO, Duration::from_millis(100));
+    let cfg = ServerConfig {
+        shards: 1,
+        threads: 1,
+        max_batch: 8,
+        batch_window: Duration::from_millis(2),
+        queue_depth: 256,
+        executor: Executor::Planned,
+        autoscale: elastic.then(|| AutoscaleConfig {
+            min_shards: 1,
+            max_shards: 4,
+            tick: Duration::from_millis(2),
+            cooldown_ticks: 2,
+            down_idle_ticks: 10,
+            ..AutoscaleConfig::default()
+        }),
+        faults: None,
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_engine(&ctx.spec, ctx.ckpt(6), EngineKind::Shift { bits: 6 }, cfg)?;
+    let (wall, _errors) = drive_open_loop(&server, &ctx.scenes, &offsets);
+    let agg = server.handle().latency();
+    let shard_counts = shard_counts_of(&server);
+    let (ups, downs) = server.scale_events();
+    let mut extra = vec![
+        ("load", Json::str("bursty")),
+        ("shed", Json::num(agg.shed() as f64)),
+    ];
+    let shards_field = if elastic {
+        extra.push(("shards_max", Json::num(4.0)));
+        extra.push(("scale_ups", Json::num(ups as f64)));
+        extra.push(("scale_downs", Json::num(downs as f64)));
+        Json::str("auto")
+    } else {
+        Json::num(1.0)
+    };
+    let row = serve_row(
+        "planned",
+        "shift6",
+        shards_field,
+        1,
+        "fixed",
+        2,
+        "synth",
+        ctx.detected,
+        plan.requests,
+        plan.concurrency,
+        wall,
+        &agg,
+        &shard_counts,
+        extra,
+    );
+    server.shutdown();
+    Ok(row)
+}
+
+/// `trained`: the closed-loop shift6 cell serving a checkpoint a short
+/// hermetic float training run produced instead of the He-init one.
+fn run_trained_extra(plan: &Plan, ctx: &ServeCtx, steps: u64) -> Result<Json> {
+    let train_cfg = TrainConfig {
+        seed: 2027,
+        steps,
+        lr: 0.05,
+        train_scenes: 64,
+        eval_scenes: 8,
+        log_every: 0,
+        ..Default::default()
+    };
+    let trained =
+        HermeticTrainer::new(train_cfg, 8, TrainMethod::Float)?.train()?.outcome.checkpoint;
+    let cfg = ServerConfig {
+        shards: 1,
+        threads: 1,
+        max_batch: 8,
+        batch_window: Duration::from_millis(2),
+        queue_depth: 256,
+        executor: Executor::Planned,
+        faults: None,
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_engine(&ctx.spec, &trained, EngineKind::Shift { bits: 6 }, cfg)?;
+    let wall = drive(&server, &ctx.scenes, plan.requests, plan.concurrency)?;
+    let agg = server.handle().latency();
+    let shard_counts = shard_counts_of(&server);
+    let row = serve_row(
+        "planned",
+        "shift6",
+        Json::num(1.0),
+        1,
+        "fixed",
+        2,
+        "trained",
+        ctx.detected,
+        plan.requests,
+        plan.concurrency,
+        wall,
+        &agg,
+        &shard_counts,
+        vec![],
+    );
+    server.shutdown();
+    Ok(row)
+}
+
+/// `fault-{none,storm}`: the closed-loop shift6 cell fault-free and
+/// under a seeded panic storm, with retrying clients counting lost
+/// responses.
+fn run_fault_extra(plan: &Plan, ctx: &ServeCtx, storm: bool) -> Result<Json> {
+    let storm_spec = "seed=11;panic@pre:nth=3,every=5,count=1000000";
+    let fault_name = if storm { "storm" } else { "none" };
+    let cfg = ServerConfig {
+        shards: 1,
+        threads: 1,
+        max_batch: 8,
+        batch_window: Duration::from_millis(2),
+        queue_depth: 256,
+        executor: Executor::Planned,
+        faults: if storm { Some(FaultPlan::parse(storm_spec)?) } else { None },
+        ..Default::default()
+    };
+    let server =
+        DetectServer::start_engine(&ctx.spec, ctx.ckpt(6), EngineKind::Shift { bits: 6 }, cfg)?;
+    let handle = server.handle().with_retry(RetryPolicy::default());
+    let t0 = Instant::now();
+    let per = plan.requests / plan.concurrency;
+    let mut clients = Vec::new();
+    for c in 0..plan.concurrency {
+        let h = handle.clone();
+        let imgs: Vec<Vec<f32>> =
+            (0..per).map(|i| ctx.scenes[(c * per + i) % ctx.scenes.len()].clone()).collect();
+        clients.push(std::thread::spawn(move || {
+            // count errors instead of bailing: a request answered with
+            // an error under the storm is a lost response
+            let mut lost = 0u64;
+            for img in imgs {
+                if h.detect(img).is_err() {
+                    lost += 1;
+                }
+            }
+            lost
+        }));
+    }
+    let lost: u64 = clients.into_iter().map(|c| c.join().expect("fault client")).sum();
+    let wall = t0.elapsed();
+    // a crash near the end respawns asynchronously: give the
+    // supervisor a beat so the respawn counter reflects every crash
+    let respawn_deadline = Instant::now() + Duration::from_secs(2);
+    while server.respawns() < server.crashes() && Instant::now() < respawn_deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let agg = server.handle().latency();
+    let shard_counts = shard_counts_of(&server);
+    let (crashes, respawns) = (server.crashes(), server.respawns());
+    let row = serve_row(
+        "planned",
+        "shift6",
+        Json::num(1.0),
+        1,
+        "fixed",
+        2,
+        "synth",
+        ctx.detected,
+        plan.requests,
+        plan.concurrency,
+        wall,
+        &agg,
+        &shard_counts,
+        vec![
+            ("faults", Json::str(fault_name)),
+            ("crashes", Json::num(crashes as f64)),
+            ("respawns", Json::num(respawns as f64)),
+            ("lost", Json::num(lost as f64)),
+        ],
+    );
+    server.shutdown();
+    Ok(row)
+}
+
+/// `tenants`: a two-model registry (6-bit + 2-bit) behind one
+/// apportioned shard budget with weighted-fair tenant classes 3:1.
+fn run_tenant_extra(plan: &Plan, ctx: &ServeCtx) -> Result<Json> {
+    let base = ServerConfig {
+        shards: 2, // apportioned: one per model
+        threads: 1,
+        max_batch: 8,
+        batch_window: Duration::from_millis(2),
+        queue_depth: 256,
+        executor: Executor::Planned,
+        tenants: vec![3, 1],
+        faults: None,
+        ..Default::default()
+    };
+    let defs = vec![
+        ModelDef {
+            name: "hi".into(),
+            spec: ctx.spec.clone(),
+            ckpt: ctx.ckpt(6).clone(),
+            engine: EngineKind::Shift { bits: 6 },
+        },
+        ModelDef {
+            name: "lo".into(),
+            spec: ctx.spec.clone(),
+            ckpt: ctx.ckpt(2).clone(),
+            engine: EngineKind::Shift { bits: 2 },
+        },
+    ];
+    let registry = ModelRegistry::start(defs, &base)?;
+    let router = registry.router();
+    let t0 = Instant::now();
+    let per = plan.requests / plan.concurrency;
+    let names = ["hi", "lo"];
+    let mut clients = Vec::new();
+    for c in 0..plan.concurrency {
+        let r = router.clone();
+        let imgs: Vec<Vec<f32>> =
+            (0..per).map(|i| ctx.scenes[(c * per + i) % ctx.scenes.len()].clone()).collect();
+        let model = names[c % names.len()];
+        let tenant = c % 2;
+        clients.push(std::thread::spawn(move || -> Result<()> {
+            for img in imgs {
+                r.detect(model, tenant, img)?;
+            }
+            Ok(())
+        }));
+    }
+    for c in clients {
+        c.join().expect("tenant client")?;
+    }
+    let wall = t0.elapsed();
+    let mut agg = LatencyStats::new();
+    let mut tenant_stats = vec![LatencyStats::new(); 2];
+    let mut tenant_counts = vec![0u64; 2];
+    let mut shard_counts: Vec<usize> = Vec::new();
+    for m in names {
+        let cell = registry.server(m)?;
+        agg.merge(&cell.handle().latency());
+        for (t, s) in cell.tenant_latencies().iter().enumerate() {
+            tenant_stats[t].merge(s);
+        }
+        for (t, &n) in cell.tenant_served().iter().enumerate() {
+            tenant_counts[t] += n;
+        }
+        shard_counts.extend(cell.shard_latencies().iter().map(|s| s.count()));
+    }
+    let tenant_p95_ms: Vec<f64> = tenant_stats.iter().map(|s| s.percentile_ms(95.0)).collect();
+    let resident = registry.total_resident_bytes();
+    let row = serve_row(
+        "planned",
+        "multi",
+        Json::num(2.0),
+        1,
+        "fixed",
+        2,
+        "synth",
+        ctx.detected,
+        plan.requests,
+        plan.concurrency,
+        wall,
+        &agg,
+        &shard_counts,
+        vec![
+            ("models", Json::str("hi=shift6+lo=shift2")),
+            ("resident_weight_bytes", Json::num(resident as f64)),
+            ("tenant_mix", Json::str("3:1")),
+            (
+                "tenant_counts",
+                Json::Arr(tenant_counts.iter().map(|&n| Json::num(n as f64)).collect()),
+            ),
+            (
+                "tenant_p95_ms",
+                Json::Arr(tenant_p95_ms.iter().map(|&p| Json::num(p)).collect()),
+            ),
+        ],
+    );
+    drop(router);
+    registry.shutdown();
+    Ok(row)
+}
+
+/// `swap`: one registry model, two shards, closed loop — with two hot
+/// checkpoint swaps landed while the burst is in flight.
+fn run_swap_extra(plan: &Plan, ctx: &ServeCtx) -> Result<Json> {
+    let base = ServerConfig {
+        shards: 2,
+        threads: 1,
+        max_batch: 8,
+        batch_window: Duration::from_millis(2),
+        queue_depth: 256,
+        executor: Executor::Planned,
+        faults: None,
+        ..Default::default()
+    };
+    let registry = ModelRegistry::start(
+        vec![ModelDef {
+            name: "m6".into(),
+            spec: ctx.spec.clone(),
+            ckpt: ctx.ckpt(6).clone(),
+            engine: EngineKind::Shift { bits: 6 },
+        }],
+        &base,
+    )?;
+    let handle = registry.handle("m6")?;
+    let t0 = Instant::now();
+    let per = plan.requests / plan.concurrency;
+    let mut clients = Vec::new();
+    for c in 0..plan.concurrency {
+        let h = handle.clone();
+        let imgs: Vec<Vec<f32>> =
+            (0..per).map(|i| ctx.scenes[(c * per + i) % ctx.scenes.len()].clone()).collect();
+        clients.push(std::thread::spawn(move || {
+            // a request answered with an error across a swap is a
+            // lost response
+            let mut lost = 0u64;
+            for img in imgs {
+                if h.detect(img).is_err() {
+                    lost += 1;
+                }
+            }
+            lost
+        }));
+    }
+    let mut swaps = 0u64;
+    for _ in 0..2 {
+        std::thread::sleep(Duration::from_millis(5));
+        registry.swap("m6", ctx.ckpt(6))?;
+        swaps += 1;
+    }
+    let lost: u64 = clients.into_iter().map(|c| c.join().expect("swap client")).sum();
+    let wall = t0.elapsed();
+    let cell_srv = registry.server("m6")?;
+    let agg = cell_srv.handle().latency();
+    let shard_counts: Vec<usize> =
+        cell_srv.shard_latencies().iter().map(|s| s.count()).collect();
+    let resident = registry.total_resident_bytes();
+    let row = serve_row(
+        "planned",
+        "shift6",
+        Json::num(2.0),
+        1,
+        "fixed",
+        2,
+        "synth",
+        ctx.detected,
+        plan.requests,
+        plan.concurrency,
+        wall,
+        &agg,
+        &shard_counts,
+        vec![
+            ("models", Json::str("m6=shift6")),
+            ("resident_weight_bytes", Json::num(resident as f64)),
+            ("swaps", Json::num(swaps as f64)),
+            ("lost", Json::num(lost as f64)),
+        ],
+    );
+    drop(handle);
+    registry.shutdown();
+    Ok(row)
+}
+
+fn run_extra(plan: &Plan, ctx: &ServeCtx, name: &str) -> Result<Json> {
+    let trained_steps = plan.serve.as_ref().map(|g| g.trained_steps).unwrap_or(30);
+    match name {
+        "win-fixed-steady" => run_window_extra(plan, ctx, "fixed", "steady"),
+        "win-fixed-bursty" => run_window_extra(plan, ctx, "fixed", "bursty"),
+        "win-adaptive-steady" => run_window_extra(plan, ctx, "adaptive", "steady"),
+        "win-adaptive-bursty" => run_window_extra(plan, ctx, "adaptive", "bursty"),
+        "auto-fixed" => run_autoscale_extra(plan, ctx, false),
+        "auto-elastic" => run_autoscale_extra(plan, ctx, true),
+        "trained" => run_trained_extra(plan, ctx, trained_steps),
+        "fault-none" => run_fault_extra(plan, ctx, false),
+        "fault-storm" => run_fault_extra(plan, ctx, true),
+        "tenants" => run_tenant_extra(plan, ctx),
+        "swap" => run_swap_extra(plan, ctx),
+        other => bail!("unknown extra cell `{other}`"),
+    }
+}
+
+fn load_float_ckpt(store: &LabStore, run_id: &str, seed: u64) -> Result<Checkpoint> {
+    let path = store
+        .run_dir(run_id)
+        .join("trials")
+        .join(format!("train/float-s{seed}/r0/ckpt.lbw"));
+    ensure!(
+        path.exists(),
+        "float checkpoint for seed {seed} not found at {} — the float cell runs first in plan \
+         order; was it filtered out or its artifact removed?",
+        path.display()
+    );
+    Checkpoint::load(&path)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn train_row_json(
+    grid: &TrainGrid,
+    method: &str,
+    bits: u32,
+    seed: u64,
+    steps: u64,
+    map: f64,
+    quant_dist: f64,
+    sparsity: f64,
+    loss_first: f64,
+    loss_last: f64,
+    wall_s: f64,
+) -> Json {
+    use crate::quant::threshold::compression_ratio;
+    TrainRow {
+        method: method.to_string(),
+        bits,
+        seed,
+        steps,
+        profile: grid.profile.clone(),
+        map,
+        quant_dist,
+        sparsity,
+        compression: if bits >= 32 { 1.0 } else { compression_ratio(bits) },
+        loss_first,
+        loss_last,
+        wall_s,
+    }
+    .to_json()
+}
+
+fn run_train_cell(
+    grid: &TrainGrid,
+    method: &str,
+    seed: u64,
+    store: &LabStore,
+    run_id: &str,
+    trial: &Trial,
+) -> Result<Json> {
+    let cfg = TrainConfig {
+        seed,
+        steps: grid.float_steps,
+        lr: grid.float_lr,
+        train_scenes: grid.train_scenes,
+        eval_scenes: grid.eval_scenes,
+        log_every: 0,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    match method {
+        "float" => {
+            let trainer =
+                HermeticTrainer::new(cfg, grid.width, TrainMethod::Float)?.with_batch(grid.batch);
+            let out = trainer.train()?;
+            // persist the float checkpoint: the seed's fine-tune and
+            // INQ cells resume from it
+            let dir = store.trial_dir(run_id, trial);
+            std::fs::create_dir_all(&dir)?;
+            out.outcome.checkpoint.save(&dir.join("ckpt.lbw"))?;
+            Ok(train_row_json(
+                grid,
+                "float",
+                32,
+                seed,
+                grid.float_steps,
+                out.outcome.final_map,
+                out.quant_dist,
+                out.sparsity,
+                out.loss_first,
+                out.loss_last,
+                t0.elapsed().as_secs_f64(),
+            ))
+        }
+        "inq-6" => {
+            let float_ckpt = load_float_ckpt(store, run_id, seed)?;
+            let float_trainer =
+                HermeticTrainer::new(cfg, grid.width, TrainMethod::Float)?.with_batch(grid.batch);
+            let inq = train_inq_hermetic(
+                &float_trainer,
+                6,
+                &INQ_PHASES,
+                &float_ckpt,
+                grid.ft_steps,
+                grid.ft_lr,
+                grid.float_steps,
+            )?;
+            Ok(train_row_json(
+                grid,
+                "inq-6",
+                6,
+                seed,
+                grid.ft_steps,
+                inq.final_map,
+                inq.quant_dist,
+                inq.sparsity,
+                inq.loss_first,
+                inq.loss_last,
+                t0.elapsed().as_secs_f64(),
+            ))
+        }
+        other => {
+            let m = train_method_of(other)?;
+            let float_ckpt = load_float_ckpt(store, run_id, seed)?;
+            let trainer = HermeticTrainer::new(cfg, grid.width, m)?.with_batch(grid.batch);
+            let out = trainer.train_from(&float_ckpt, grid.ft_steps, grid.ft_lr, grid.float_steps)?;
+            Ok(train_row_json(
+                grid,
+                &m.name(),
+                m.bits(),
+                seed,
+                grid.ft_steps,
+                out.outcome.final_map,
+                out.quant_dist,
+                out.sparsity,
+                out.loss_first,
+                out.loss_last,
+                t0.elapsed().as_secs_f64(),
+            ))
+        }
+    }
+}
+
+fn spec_json(plan: &Plan, trial: &Trial) -> Json {
+    match &trial.kind {
+        TrialKind::ServeGrid(c) => Json::obj(vec![
+            ("kind", Json::str("grid")),
+            ("executor", Json::str(c.executor.as_str())),
+            ("engine", Json::str(c.engine.as_str())),
+            ("shards", Json::num(c.shards as f64)),
+            ("threads", Json::num(c.threads as f64)),
+            ("window_ms", Json::num(c.window_ms as f64)),
+            ("simd", Json::str(c.simd.as_str())),
+            ("requests", Json::num(plan.requests as f64)),
+            ("concurrency", Json::num(plan.concurrency as f64)),
+        ]),
+        TrialKind::ServeExtra(name) => Json::obj(vec![
+            ("kind", Json::str("extra")),
+            ("name", Json::str(name.as_str())),
+            ("requests", Json::num(plan.requests as f64)),
+            ("concurrency", Json::num(plan.concurrency as f64)),
+        ]),
+        TrialKind::TrainCell { method, seed } => {
+            let g = plan.train.as_ref();
+            Json::obj(vec![
+                ("kind", Json::str("train")),
+                ("method", Json::str(method.as_str())),
+                ("seed", Json::num(*seed as f64)),
+                (
+                    "float_steps",
+                    Json::num(g.map(|t| t.float_steps).unwrap_or(0) as f64),
+                ),
+                ("ft_steps", Json::num(g.map(|t| t.ft_steps).unwrap_or(0) as f64)),
+            ])
+        }
+    }
+}
+
+/// A trial is complete when its `trial.json` parses — and, for float
+/// training cells, when the checkpoint artifact downstream cells load
+/// is also present.
+pub fn trial_complete(store: &LabStore, run_id: &str, trial: &Trial) -> bool {
+    if !store.trial_done(run_id, trial) {
+        return false;
+    }
+    if let TrialKind::TrainCell { method, .. } = &trial.kind {
+        if method == "float" {
+            return store.trial_dir(run_id, trial).join("ckpt.lbw").exists();
+        }
+    }
+    true
+}
+
+/// Execute a plan into its content-addressed run directory: resume
+/// completed trials (their files stay bitwise untouched), run the
+/// rest, then rebuild the analysis tables from everything present.
+pub fn run_plan(plan: &Plan, store: &LabStore, opts: &RunOpts) -> Result<RunReport> {
+    let run_id = plan.run_id();
+    let run_dir = store.prepare_run(plan)?;
+    let trials = plan.trials();
+    let mut ctx: Option<ServeCtx> = None;
+    let (mut executed, mut resumed, mut filtered) = (0usize, 0usize, 0usize);
+    for trial in &trials {
+        if let Some(task) = &opts.only {
+            if trial.task() != task {
+                filtered += 1;
+                continue;
+            }
+        }
+        if !opts.force && trial_complete(store, &run_id, trial) {
+            resumed += 1;
+            if !opts.quiet {
+                println!("  [resume] {}", trial.rel_dir());
+            }
+            continue;
+        }
+        let t0 = Instant::now();
+        let row = match &trial.kind {
+            TrialKind::ServeGrid(cell) => {
+                let ctx = ctx.get_or_insert_with(|| ServeCtx::build(plan.seed));
+                run_grid_cell(plan, cell, ctx)
+                    .with_context(|| format!("trial {}", trial.rel_dir()))?
+            }
+            TrialKind::ServeExtra(name) => {
+                let ctx = ctx.get_or_insert_with(|| ServeCtx::build(plan.seed));
+                run_extra(plan, ctx, name)
+                    .with_context(|| format!("trial {}", trial.rel_dir()))?
+            }
+            TrialKind::TrainCell { method, seed } => {
+                let grid = plan.train.as_ref().expect("train trial without train grid");
+                run_train_cell(grid, method, *seed, store, &run_id, trial)
+                    .with_context(|| format!("trial {}", trial.rel_dir()))?
+            }
+        };
+        let wall = t0.elapsed();
+        let finished = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let doc = Json::obj(vec![
+            ("task", Json::str(trial.task())),
+            ("cell", Json::str(trial.cell.as_str())),
+            ("repeat", Json::num(trial.repeat as f64)),
+            ("seed", Json::num(plan.seed as f64)),
+            ("spec", spec_json(plan, trial)),
+            ("git_rev", Json::str(git_rev())),
+            ("wall_s", Json::num(wall.as_secs_f64())),
+            ("finished_unix", Json::num(finished)),
+            ("row", row),
+        ]);
+        store.write_trial(&run_id, trial, &doc)?;
+        executed += 1;
+        if !opts.quiet {
+            println!("  [run]    {} ({:.1}s)", trial.rel_dir(), wall.as_secs_f64());
+        }
+    }
+    let all = store.completed_trials(&run_id)?;
+    let (serve_table, train_table) = build_tables(&all)?;
+    if let Some(t) = &serve_table {
+        std::fs::write(run_dir.join("tables").join("serve.json"), t.to_string())?;
+    }
+    if let Some(t) = &train_table {
+        std::fs::write(run_dir.join("tables").join("train.json"), t.to_string())?;
+    }
+    store.write_meta(plan, trials.len(), all.len())?;
+    Ok(RunReport {
+        run_id,
+        run_dir,
+        total: trials.len(),
+        executed,
+        resumed,
+        filtered,
+    })
+}
+
+/// Export a run's rows + tables as the flat `BENCH_serve.json` /
+/// `BENCH_train.json` documents the gates and downstream readers
+/// consume. Re-running an identical plan rewrites the same rows in
+/// place (same run id, same trials) instead of appending duplicates —
+/// the clobber/duplication fix for the legacy bench append path.
+/// Returns the rows written per task.
+pub fn export_flat(
+    store: &LabStore,
+    run_id: &str,
+    serve_out: &Path,
+    train_out: &Path,
+) -> Result<(Vec<Json>, Vec<Json>)> {
+    let trials = store.completed_trials(run_id)?;
+    let (serve_table, train_table) = build_tables(&trials)?;
+    let mut serve_rows: Vec<Json> = Vec::new();
+    let mut train_rows: Vec<Json> = Vec::new();
+    let mut profile = "smoke".to_string();
+    for (_, doc) in &trials {
+        let task = doc.get("task")?.as_str()?.to_string();
+        let row = doc.get("row")?.clone();
+        if task == "train" {
+            if let Some(p) = row.opt("profile").and_then(|p| p.as_str().ok()) {
+                profile = p.to_string();
+            }
+            train_rows.push(row);
+        } else {
+            serve_rows.push(row);
+        }
+    }
+    if let (false, Some(table)) = (serve_rows.is_empty(), serve_table) {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("serve_shard_sweep")),
+            ("detector", Json::str(SERVE_DETECTOR)),
+            ("lab_run", Json::str(run_id)),
+            ("rows", Json::Arr(serve_rows.clone())),
+            ("tables", table),
+        ]);
+        std::fs::write(serve_out, doc.to_string())?;
+    }
+    if let (false, Some(table)) = (train_rows.is_empty(), train_table) {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("train_accuracy_trajectory")),
+            ("profile", Json::str(profile)),
+            ("detector", Json::str(TRAIN_DETECTOR)),
+            ("lab_run", Json::str(run_id)),
+            ("rows", Json::Arr(train_rows.clone())),
+            ("tables", table),
+        ]);
+        std::fs::write(train_out, doc.to_string())?;
+    }
+    Ok((serve_rows, train_rows))
+}
+
+fn row_f64(r: &Json, k: &str) -> Option<f64> {
+    r.opt(k).and_then(|v| v.as_f64().ok())
+}
+
+fn row_str<'a>(r: &'a Json, k: &str) -> Option<&'a str> {
+    r.opt(k).and_then(|v| v.as_str().ok())
+}
+
+/// Closed-loop baseline img/s from exported rows: single shard, fixed
+/// 2ms window, synth checkpoint, no load/fault/registry markers.
+/// Prefers the detected-backend (`simd == "on"`) row when `simd` is
+/// unpinned, matching the legacy summary.
+fn closed_loop_rate(
+    rows: &[Json],
+    exec: &str,
+    engine: &str,
+    threads: f64,
+    simd: Option<&str>,
+) -> f64 {
+    let mut fallback = 0.0;
+    let mut have_fallback = false;
+    for r in rows {
+        let matches = row_str(r, "executor") == Some(exec)
+            && row_str(r, "engine") == Some(engine)
+            && row_f64(r, "shards") == Some(1.0)
+            && row_f64(r, "threads") == Some(threads)
+            && row_str(r, "window") == Some("fixed")
+            && row_f64(r, "batch_window_ms") == Some(2.0)
+            && r.opt("load").is_none()
+            && r.opt("faults").is_none()
+            && r.opt("models").is_none()
+            && row_str(r, "checkpoint").map_or(true, |c| c == "synth")
+            && simd.map_or(true, |s| row_str(r, "simd") == Some(s));
+        if !matches {
+            continue;
+        }
+        let rate = row_f64(r, "imgs_per_s").unwrap_or(0.0);
+        if row_str(r, "simd") == Some("on") {
+            return rate;
+        }
+        if !have_fallback {
+            fallback = rate;
+            have_fallback = true;
+        }
+    }
+    fallback
+}
+
+/// Print the legacy human-readable speedup summary from exported
+/// serving rows.
+pub fn print_serve_summary(rows: &[Json]) {
+    for engine in ["float", "shift6"] {
+        let p = closed_loop_rate(rows, "planned", engine, 1.0, None);
+        let n = closed_loop_rate(rows, "naive", engine, 1.0, None);
+        if p > 0.0 && n > 0.0 {
+            println!("{engine}: planned/naive single-shard speedup = {:.2}x", p / n);
+        }
+        let t4 = closed_loop_rate(rows, "planned", engine, 4.0, None);
+        if p > 0.0 && t4 > 0.0 {
+            println!("{engine}: planned 4-thread/1-thread speedup at 1 shard = {:.2}x", t4 / p);
+        }
+    }
+    let on = closed_loop_rate(rows, "planned", "shift6", 1.0, Some("on"));
+    let off = closed_loop_rate(rows, "planned", "shift6", 1.0, Some("off"));
+    if on > 0.0 && off > 0.0 {
+        println!("shift6: planned simd/scalar speedup at 1 shard x 1 thread = {:.2}x", on / off);
+    }
+}
+
+/// Print the mean-mAP-per-method summary from exported training rows.
+pub fn print_train_summary(rows: &[Json]) {
+    let mut methods: Vec<&str> = Vec::new();
+    for r in rows {
+        if let Some(m) = row_str(r, "method") {
+            if !methods.contains(&m) {
+                methods.push(m);
+            }
+        }
+    }
+    for m in &methods {
+        let maps: Vec<f64> = rows
+            .iter()
+            .filter(|r| row_str(r, "method") == Some(m))
+            .filter_map(|r| row_f64(r, "map"))
+            .collect();
+        if maps.is_empty() {
+            continue;
+        }
+        let mean = maps.iter().sum::<f64>() / maps.len() as f64;
+        println!("  {m:>13}  mean mAP {mean:.4} over {} seed(s)", maps.len());
+    }
+}

@@ -1,0 +1,271 @@
+//! Content-addressed run storage.
+//!
+//! Layout under the lab root (default `lab/`, `LBW_LAB` overrides):
+//!
+//! ```text
+//! lab/runs/<name>-<fnv64-of-plan>/
+//!   plan.resolved.toml          the canonical knob dump that was hashed
+//!   meta.json                   run provenance (git rev, counts, times)
+//!   trials/<task>/<cell>/r<k>/trial.json   one structured row per trial
+//!   trials/train/float-s<seed>/r0/ckpt.lbw the float checkpoint artifact
+//!   tables/{serve,train}.json   per-cell mean/std/min/max over repeats
+//! ```
+//!
+//! Trials are written atomically (tmp + rename) and **never rewritten
+//! on resume** — a completed trial file is bitwise stable until
+//! `--force` or a plan change moves the run id. `gc` removes every run
+//! directory whose id is not derivable from the current plan files,
+//! and nothing else.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::plan::{Plan, Trial};
+
+/// 64-bit FNV-1a over raw bytes — the run-id hash. (The fault
+/// injector's `content_hash` hashes f32 images; this one hashes the
+/// canonical plan text.)
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Best-effort commit id for provenance: `.git/HEAD` (following one
+/// level of ref indirection), falling back to `GITHUB_SHA`, then
+/// `"unknown"`. Never fails — provenance must not block a run.
+pub fn git_rev() -> String {
+    fn from_git_dir() -> Option<String> {
+        let head = fs::read_to_string(".git/HEAD").ok()?;
+        let head = head.trim();
+        if let Some(r) = head.strip_prefix("ref: ") {
+            let rev = fs::read_to_string(Path::new(".git").join(r)).ok()?;
+            return Some(rev.trim().to_string());
+        }
+        Some(head.to_string())
+    }
+    from_git_dir()
+        .or_else(|| std::env::var("GITHUB_SHA").ok())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn unix_now() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+/// Summary of one run directory, as `repro lab list` shows it.
+#[derive(Debug, Clone)]
+pub struct RunInfo {
+    pub id: String,
+    pub trials_done: usize,
+    pub git_rev: String,
+    pub updated_unix: f64,
+}
+
+pub struct LabStore {
+    root: PathBuf,
+}
+
+impl LabStore {
+    pub fn new(root: impl Into<PathBuf>) -> LabStore {
+        LabStore { root: root.into() }
+    }
+
+    /// Default lab root: `LBW_LAB` env var, else `lab/`.
+    pub fn default_root() -> PathBuf {
+        std::env::var("LBW_LAB").ok().filter(|s| !s.is_empty()).unwrap_or_else(|| "lab".into()).into()
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn runs_dir(&self) -> PathBuf {
+        self.root.join("runs")
+    }
+
+    pub fn run_dir(&self, run_id: &str) -> PathBuf {
+        self.runs_dir().join(run_id)
+    }
+
+    pub fn trial_dir(&self, run_id: &str, trial: &Trial) -> PathBuf {
+        self.run_dir(run_id).join("trials").join(trial.rel_dir())
+    }
+
+    pub fn trial_json(&self, run_id: &str, trial: &Trial) -> PathBuf {
+        self.trial_dir(run_id, trial).join("trial.json")
+    }
+
+    /// A trial counts as done only when its `trial.json` exists AND
+    /// parses — a half-written file (crash mid-write never happens
+    /// thanks to the rename, but a truncated copy might) re-runs.
+    pub fn trial_done(&self, run_id: &str, trial: &Trial) -> bool {
+        match fs::read_to_string(self.trial_json(run_id, trial)) {
+            Ok(text) => Json::parse(&text).is_ok(),
+            Err(_) => false,
+        }
+    }
+
+    /// Create the run directory skeleton and pin the resolved plan.
+    /// The plan file is written once: its content IS the run id, so an
+    /// existing copy is already identical.
+    pub fn prepare_run(&self, plan: &Plan) -> Result<PathBuf> {
+        let dir = self.run_dir(&plan.run_id());
+        fs::create_dir_all(dir.join("trials"))
+            .with_context(|| format!("creating run dir {}", dir.display()))?;
+        fs::create_dir_all(dir.join("tables"))?;
+        let resolved = dir.join("plan.resolved.toml");
+        if !resolved.exists() {
+            fs::write(&resolved, plan.canonical())?;
+        }
+        Ok(dir)
+    }
+
+    /// Atomically persist a completed trial document.
+    pub fn write_trial(&self, run_id: &str, trial: &Trial, doc: &Json) -> Result<()> {
+        let dir = self.trial_dir(run_id, trial);
+        fs::create_dir_all(&dir)?;
+        let tmp = dir.join("trial.json.tmp");
+        fs::write(&tmp, doc.to_string())?;
+        fs::rename(&tmp, dir.join("trial.json"))?;
+        Ok(())
+    }
+
+    pub fn read_trial(&self, run_id: &str, trial: &Trial) -> Result<Json> {
+        let path = self.trial_json(run_id, trial);
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Json::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Every completed trial in a run, as (path relative to
+    /// `trials/`, parsed document), sorted by path for deterministic
+    /// table and export order.
+    pub fn completed_trials(&self, run_id: &str) -> Result<Vec<(String, Json)>> {
+        let base = self.run_dir(run_id).join("trials");
+        let mut found: Vec<(String, Json)> = Vec::new();
+        let mut stack = vec![base.clone()];
+        while let Some(dir) = stack.pop() {
+            let entries = match fs::read_dir(&dir) {
+                Ok(e) => e,
+                Err(_) => continue,
+            };
+            for entry in entries.flatten() {
+                let path = entry.path();
+                if path.is_dir() {
+                    stack.push(path);
+                } else if path.file_name().is_some_and(|n| n == "trial.json") {
+                    let text = fs::read_to_string(&path)?;
+                    let doc = Json::parse(&text)
+                        .with_context(|| format!("parsing {}", path.display()))?;
+                    let rel = path
+                        .parent()
+                        .and_then(|p| p.strip_prefix(&base).ok())
+                        .map(|p| p.to_string_lossy().replace('\\', "/"))
+                        .unwrap_or_default();
+                    found.push((rel, doc));
+                }
+            }
+        }
+        found.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(found)
+    }
+
+    /// Refresh the run's provenance record.
+    pub fn write_meta(&self, plan: &Plan, trials_total: usize, trials_done: usize) -> Result<()> {
+        let dir = self.run_dir(&plan.run_id());
+        let meta_path = dir.join("meta.json");
+        // keep the first-run timestamp across resumes
+        let created = fs::read_to_string(&meta_path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|m| m.opt("created_unix").and_then(|v| v.as_f64().ok()))
+            .unwrap_or_else(unix_now);
+        let meta = Json::obj(vec![
+            ("run_id", Json::str(plan.run_id())),
+            ("name", Json::str(plan.name.as_str())),
+            ("git_rev", Json::str(git_rev())),
+            ("created_unix", Json::num(created)),
+            ("updated_unix", Json::num(unix_now())),
+            ("trials_total", Json::num(trials_total as f64)),
+            ("trials_done", Json::num(trials_done as f64)),
+        ]);
+        fs::write(meta_path, meta.to_string())?;
+        Ok(())
+    }
+
+    /// Enumerate run directories, newest-updated first.
+    pub fn list_runs(&self) -> Result<Vec<RunInfo>> {
+        let mut runs = Vec::new();
+        let entries = match fs::read_dir(self.runs_dir()) {
+            Ok(e) => e,
+            Err(_) => return Ok(runs), // no lab yet
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if !path.is_dir() {
+                continue;
+            }
+            let id = entry.file_name().to_string_lossy().to_string();
+            let meta = fs::read_to_string(path.join("meta.json"))
+                .ok()
+                .and_then(|t| Json::parse(&t).ok());
+            let trials_done = self.completed_trials(&id).map(|t| t.len()).unwrap_or(0);
+            let (rev, updated) = match &meta {
+                Some(m) => (
+                    m.opt("git_rev")
+                        .and_then(|v| v.as_str().ok())
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    m.opt("updated_unix").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                ),
+                None => ("unknown".to_string(), 0.0),
+            };
+            runs.push(RunInfo { id, trials_done, git_rev: rev, updated_unix: updated });
+        }
+        runs.sort_by(|a, b| {
+            b.updated_unix.partial_cmp(&a.updated_unix).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        Ok(runs)
+    }
+
+    /// Remove every run directory whose id is NOT in `keep`. Returns
+    /// (removed, kept) ids. With `dry_run` nothing is deleted.
+    pub fn gc(&self, keep: &BTreeSet<String>, dry_run: bool) -> Result<(Vec<String>, Vec<String>)> {
+        let mut removed = Vec::new();
+        let mut kept = Vec::new();
+        let entries = match fs::read_dir(self.runs_dir()) {
+            Ok(e) => e,
+            Err(_) => return Ok((removed, kept)),
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if !path.is_dir() {
+                continue;
+            }
+            let id = entry.file_name().to_string_lossy().to_string();
+            if keep.contains(&id) {
+                kept.push(id);
+            } else {
+                if !dry_run {
+                    fs::remove_dir_all(&path)
+                        .with_context(|| format!("removing {}", path.display()))?;
+                }
+                removed.push(id);
+            }
+        }
+        removed.sort();
+        kept.sort();
+        Ok((removed, kept))
+    }
+}

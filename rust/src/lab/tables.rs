@@ -1,0 +1,223 @@
+//! Analysis tables: collapse a run's per-trial rows into per-cell
+//! distributions.
+//!
+//! A cell's **identity** is every scalar row field that is not a
+//! measured metric (arrays like `shard_counts` are per-trial detail,
+//! not identity); repeats of the same cell — and, for training, the
+//! same method across seeds — collapse into one cell carrying
+//! mean/std/min/max per metric. Std is the sample deviation (n − 1),
+//! reported as 0 for a single observation, so a single-repeat table
+//! degrades exactly to the legacy one-shot numbers and the gates'
+//! pooled-std margins collapse to strict comparisons.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Measured (non-identity) fields of a serving row.
+pub const SERVE_METRICS: &[&str] = &[
+    "wall_s",
+    "imgs_per_s",
+    "p50_ms",
+    "p95_ms",
+    "p99_ms",
+    "mean_batch",
+    "shed",
+    "scale_ups",
+    "scale_downs",
+    "crashes",
+    "respawns",
+    "lost",
+    "swaps",
+];
+
+/// Measured (non-identity) fields of a training row. `seed` is also
+/// excluded from identity — it is the variance axis.
+pub const TRAIN_METRICS: &[&str] =
+    &["map", "quant_dist", "sparsity", "loss_first", "loss_last", "wall_s"];
+
+struct Acc {
+    identity: BTreeMap<String, Json>,
+    metrics: BTreeMap<String, Vec<f64>>,
+    seeds: BTreeSet<u64>,
+    n: usize,
+}
+
+fn stat_json(vals: &[f64]) -> Json {
+    let n = vals.len();
+    let mean = vals.iter().sum::<f64>() / n as f64;
+    let std = if n < 2 {
+        0.0
+    } else {
+        (vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (n - 1) as f64).sqrt()
+    };
+    let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Json::obj(vec![
+        ("mean", Json::num(mean)),
+        ("std", Json::num(std)),
+        ("min", Json::num(min)),
+        ("max", Json::num(max)),
+    ])
+}
+
+fn accumulate(
+    groups: &mut BTreeMap<String, Acc>,
+    row: &BTreeMap<String, Json>,
+    metrics: &[&str],
+    seed_key: Option<&str>,
+) {
+    let mut identity = BTreeMap::new();
+    for (k, v) in row {
+        if metrics.contains(&k.as_str())
+            || matches!(v, Json::Arr(_))
+            || seed_key == Some(k.as_str())
+        {
+            continue;
+        }
+        identity.insert(k.clone(), v.clone());
+    }
+    let key = Json::Obj(identity.clone()).to_string();
+    let acc = groups.entry(key).or_insert_with(|| Acc {
+        identity,
+        metrics: BTreeMap::new(),
+        seeds: BTreeSet::new(),
+        n: 0,
+    });
+    acc.n += 1;
+    for &m in metrics {
+        if let Some(x) = row.get(m).and_then(|v| v.as_f64().ok()) {
+            acc.metrics.entry(m.to_string()).or_default().push(x);
+        }
+    }
+    if let Some(s) =
+        seed_key.and_then(|sk| row.get(sk)).and_then(|v| v.as_f64().ok())
+    {
+        acc.seeds.insert(s as u64);
+    }
+}
+
+fn cell_json(acc: &Acc, with_seeds: bool) -> Json {
+    let mut m = acc.identity.clone();
+    m.insert("n".to_string(), Json::num(acc.n as f64));
+    if with_seeds {
+        m.insert(
+            "seeds".to_string(),
+            Json::Arr(acc.seeds.iter().map(|&s| Json::num(s as f64)).collect()),
+        );
+    }
+    m.insert(
+        "metrics".to_string(),
+        Json::Obj(acc.metrics.iter().map(|(k, vals)| (k.clone(), stat_json(vals))).collect()),
+    );
+    Json::Obj(m)
+}
+
+fn table_json(name: &str, groups: &BTreeMap<String, Acc>, with_seeds: bool) -> Option<Json> {
+    if groups.is_empty() {
+        return None;
+    }
+    Some(Json::obj(vec![
+        ("table", Json::str(name)),
+        ("cells", Json::Arr(groups.values().map(|a| cell_json(a, with_seeds)).collect())),
+    ]))
+}
+
+/// Build the (serve, train) analysis tables from completed trial
+/// documents (`(relative path, parsed trial.json)` pairs). A task with
+/// no trials yields `None`.
+pub fn build_tables(trials: &[(String, Json)]) -> Result<(Option<Json>, Option<Json>)> {
+    let mut serve: BTreeMap<String, Acc> = BTreeMap::new();
+    let mut train: BTreeMap<String, Acc> = BTreeMap::new();
+    for (path, doc) in trials {
+        let task = doc.get("task").and_then(|t| t.as_str().map(str::to_string))?;
+        let row = doc.get("row")?;
+        let row = row.as_obj()?;
+        match task.as_str() {
+            "serve" => accumulate(&mut serve, row, SERVE_METRICS, None),
+            "train" => accumulate(&mut train, row, TRAIN_METRICS, Some("seed")),
+            other => bail!("{path}: unknown trial task `{other}`"),
+        }
+    }
+    Ok((table_json("serve", &serve, false), table_json("train", &train, true)))
+}
+
+fn field(cell: &Json, key: &str) -> String {
+    match cell.opt(key) {
+        Some(Json::Str(s)) => s.clone(),
+        Some(other) => other.to_string(),
+        None => "-".to_string(),
+    }
+}
+
+fn metric(cell: &Json, key: &str) -> Option<(f64, f64)> {
+    let m = cell.opt("metrics")?.opt(key)?;
+    Some((m.opt("mean")?.as_f64().ok()?, m.opt("std")?.as_f64().ok()?))
+}
+
+/// Human rendering for `repro lab table`.
+pub fn render(table: &Json) -> String {
+    let mut out = String::new();
+    let name = table.opt("table").and_then(|t| t.as_str().ok()).unwrap_or("?");
+    let cells = match table.opt("cells").and_then(|c| c.as_arr().ok()) {
+        Some(c) => c,
+        None => return out,
+    };
+    if name == "serve" {
+        out.push_str(&format!(
+            "{:<9} {:<7} {:<6} {:<3} {:<9} {:<5} {:<3} {:>16} {:>14}\n",
+            "executor", "engine", "shards", "t", "window", "simd", "n", "img/s mean±std", "p95 mean±std"
+        ));
+        for c in cells {
+            let mut marks: Vec<String> = Vec::new();
+            for (k, tag) in [("load", "load"), ("faults", "faults"), ("models", "multi")] {
+                if c.opt(k).is_some() {
+                    marks.push(format!("{tag}={}", field(c, k)));
+                }
+            }
+            let rate = metric(c, "imgs_per_s").unwrap_or((0.0, 0.0));
+            let p95 = metric(c, "p95_ms").unwrap_or((0.0, 0.0));
+            out.push_str(&format!(
+                "{:<9} {:<7} {:<6} {:<3} {:<9} {:<5} {:<3} {:>8.1}±{:<7.1} {:>7.2}±{:<6.2} {}\n",
+                field(c, "executor"),
+                field(c, "engine"),
+                field(c, "shards"),
+                field(c, "threads"),
+                format!("{}/{}ms", field(c, "window"), field(c, "batch_window_ms")),
+                field(c, "simd"),
+                field(c, "n"),
+                rate.0,
+                rate.1,
+                p95.0,
+                p95.1,
+                marks.join(" "),
+            ));
+        }
+    } else {
+        out.push_str(&format!(
+            "{:<14} {:<5} {:<7} {:>18} {:>10}\n",
+            "method", "bits", "seeds", "mAP mean±std", "wall_s"
+        ));
+        for c in cells {
+            let map = metric(c, "map").unwrap_or((0.0, 0.0));
+            let wall = metric(c, "wall_s").unwrap_or((0.0, 0.0));
+            let seeds = c
+                .opt("seeds")
+                .and_then(|s| s.as_arr().ok())
+                .map(|a| a.len())
+                .unwrap_or(0);
+            out.push_str(&format!(
+                "{:<14} {:<5} {:<7} {:>10.4}±{:<7.4} {:>10.1}\n",
+                field(c, "method"),
+                field(c, "bits"),
+                seeds,
+                map.0,
+                map.1,
+                wall.0,
+            ));
+        }
+    }
+    out
+}

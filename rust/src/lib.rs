@@ -30,6 +30,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod detection;
+pub mod lab;
 pub mod nn;
 pub mod quant;
 pub mod runtime;

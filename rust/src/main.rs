@@ -35,6 +35,10 @@ USAGE: repro <subcommand> [--flag value ...]
   stats     --ckpt PATH [--layers l1,l2]                               (Fig. 2 + Tables 2-3)
   quantize  [--ckpt PATH --bits 2,4,5,6 --n N]                         (§2.1 exactness)
   inq       [--bits 4|5 --steps N --seed N --out ckpt.lbw]              (INQ baseline [25])
+  lab       run|table|list|trace|gc ...                               (experiment lab)
+            `repro lab help` — declarative sweep plans (plans/*.toml)
+            executed into content-addressed, resumable run directories
+            with per-cell mean/std tables for the CI gates
   serve     [--ckpt PATH --engine shift|float|artifact --shards N --threads N
              --executor planned|naive --window fixed|adaptive --deadline-ms N
              --autoscale true|false --shards-max N
@@ -91,7 +95,13 @@ a clean checkout. engine=artifact needs `make artifacts` + a checkpoint.
 ";
 
 fn main() -> Result<()> {
-    let args = Args::from_env()?;
+    // `lab` verbs take positionals (a plan path, a trial path), which
+    // the `--flag value` parser rejects — dispatch on raw argv first.
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.first().map(String::as_str) == Some("lab") {
+        return lbw_net::lab::cli::main(&raw[1..]);
+    }
+    let args = Args::parse(&raw)?;
     let cfg = match args.get("config") {
         Some(p) => Config::load(Path::new(p))?,
         None => Config::default(),

@@ -1,0 +1,309 @@
+//! Integration tests for the experiment lab: plan parsing and
+//! validation, content-addressed run ids, resume/force semantics on a
+//! real executed trial, gc safety, run listing/tracing, table
+//! aggregation, and the in-place flat export.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::PathBuf;
+
+use lbw_net::lab::plan::Plan;
+use lbw_net::lab::runner::{self, RunOpts};
+use lbw_net::lab::store::LabStore;
+use lbw_net::lab::tables::build_tables;
+use lbw_net::util::json::Json;
+
+/// A fresh scratch directory per test (tests run in parallel).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lbw-lab-test-{}-{}", tag, std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The smallest executable serve plan: one grid cell, one repeat,
+/// scalar kernels, 8 closed-loop requests.
+const TINY_SERVE: &str = r#"
+name = "lab-test-tiny"
+repeats = 1
+seed = 4242
+requests = 8
+concurrency = 2
+
+[serve]
+executors = ["planned"]
+engines = ["shift6"]
+shards = [1]
+threads = [1]
+window_ms = [2]
+simd = ["off"]
+"#;
+
+#[test]
+fn plan_parses_and_expands() {
+    let text = r#"
+name = "expand-check"
+repeats = 2
+seed = 7
+requests = 16
+concurrency = 4
+
+[serve]
+executors = ["planned", "naive"]
+engines = ["float", "shift6"]
+threads = [1, 4]
+simd = ["off"]
+extras = ["trained", "swap"]
+
+[train]
+methods = ["float", "lbw-6"]
+seeds = [17, 18]
+"#;
+    let plan = Plan::parse(text).unwrap();
+    assert_eq!(plan.name, "expand-check");
+    assert_eq!(plan.repeats, 2);
+    let trials = plan.trials();
+    // planned: 2 engines x 2 threads = 4 cells; naive collapses its
+    // thread axis to a single cell per engine = 2 cells; extras: 2.
+    // All serve cells carry 2 repeats => (4 + 2 + 2) * 2 = 16. Train
+    // cells run once per (method, seed) => 4.
+    assert_eq!(trials.len(), 16 + 4, "trial expansion changed: {trials:#?}");
+    let naive: Vec<&str> = trials
+        .iter()
+        .filter(|t| t.cell.contains("naive"))
+        .map(|t| t.cell.as_str())
+        .collect();
+    assert!(
+        naive.iter().all(|c| c.contains("-t1-") && c.ends_with("-off")),
+        "naive cells must collapse to single-thread scalar: {naive:?}"
+    );
+    // float cells must precede the fine-tune cells that load their
+    // checkpoints
+    let train_cells: Vec<&str> = trials
+        .iter()
+        .filter(|t| t.task() == "train")
+        .map(|t| t.cell.as_str())
+        .collect();
+    let first_ft = train_cells.iter().position(|c| !c.contains("float")).unwrap();
+    assert!(
+        train_cells[..first_ft].iter().all(|c| c.contains("float")),
+        "float cells must come first: {train_cells:?}"
+    );
+}
+
+#[test]
+fn bad_grids_rejected_loudly() {
+    let cases: &[(&str, &str)] = &[
+        (
+            "name = \"x\"\n[serve]\nexecutors = [\"planned\"]\nengines = [\"float8\"]\n",
+            "unknown value",
+        ),
+        (
+            "name = \"x\"\n[serve]\nexecutors = [\"planned\"]\nengines = []\n",
+            "axis is empty",
+        ),
+        (
+            "name = \"x\"\nrepeats = 0\n[serve]\nexecutors = [\"planned\"]\nengines = [\"float\"]\n",
+            "repeats",
+        ),
+        (
+            "name = \"x\"\nbogus_knob = 3\n[serve]\nexecutors = [\"planned\"]\nengines = [\"float\"]\n",
+            "bogus_knob",
+        ),
+        (
+            "name = \"x\"\nrequests = 10\nconcurrency = 4\n[serve]\nexecutors = [\"planned\"]\nengines = [\"float\"]\n",
+            "divide evenly",
+        ),
+        (
+            "name = \"x\"\n[serve]\nexecutors = [\"planned\"]\nengines = [\"float\"]\nextras = [\"warp-drive\"]\n",
+            "unknown cell",
+        ),
+        (
+            "name = \"x\"\n[train]\nmethods = [\"float\", \"alchemy\"]\nseeds = [1, 2]\n",
+            "unknown value",
+        ),
+        (
+            "name = \"x\"\n[train]\nmethods = [\"lbw-6\"]\nseeds = [1, 2]\n",
+            "float",
+        ),
+        ("name = \"x\"\n", "no work"),
+        (
+            "name = \"Bad Name\"\n[serve]\nexecutors = [\"planned\"]\nengines = [\"float\"]\n",
+            "lowercase",
+        ),
+    ];
+    for (text, needle) in cases {
+        let err = Plan::parse(text).expect_err(&format!("must reject: {text}"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(needle),
+            "error for bad plan must mention `{needle}`, got: {msg}\nplan: {text}"
+        );
+    }
+}
+
+#[test]
+fn content_address_stability() {
+    let a = Plan::parse(TINY_SERVE).unwrap();
+    // comments and blank lines are not content: same resolved knobs,
+    // same run id
+    let commented = format!("# a comment\n{TINY_SERVE}\n# trailing\n");
+    let b = Plan::parse(&commented).unwrap();
+    assert_eq!(a.run_id(), b.run_id(), "formatting must not change the address");
+    assert_eq!(a.canonical(), b.canonical());
+    // any knob change IS content: a different request budget opens a
+    // different run directory
+    let bumped = TINY_SERVE.replace("requests = 8", "requests = 16");
+    let c = Plan::parse(&bumped).unwrap();
+    assert_ne!(a.run_id(), c.run_id(), "a knob change must change the address");
+    // the id is prefixed by the plan name (human-greppable)
+    assert!(a.run_id().starts_with("lab-test-tiny-"), "{}", a.run_id());
+}
+
+#[test]
+fn resume_skips_bitwise_and_force_reruns() {
+    let plan = Plan::parse(TINY_SERVE).unwrap();
+    let store = LabStore::new(scratch("resume"));
+    let opts = RunOpts::default();
+
+    let first = runner::run_plan(&plan, &store, &opts).unwrap();
+    assert_eq!(first.total, 1);
+    assert_eq!(first.executed, 1, "fresh run must execute the trial");
+    assert_eq!(first.resumed, 0);
+    let trial_path = store
+        .run_dir(&first.run_id)
+        .join("trials/serve/planned-shift6-s1-t1-w2-off/r0/trial.json");
+    assert!(trial_path.is_file(), "missing {}", trial_path.display());
+    let bytes = fs::read(&trial_path).unwrap();
+
+    // second run: resume-by-default leaves the artifact bitwise
+    // untouched
+    let second = runner::run_plan(&plan, &store, &opts).unwrap();
+    assert_eq!(second.executed, 0, "identical plan must resume, not re-run");
+    assert_eq!(second.resumed, 1);
+    assert_eq!(fs::read(&trial_path).unwrap(), bytes, "resume must not rewrite the trial");
+
+    // --force re-executes
+    let forced = RunOpts { force: true, ..RunOpts::default() };
+    let third = runner::run_plan(&plan, &store, &forced).unwrap();
+    assert_eq!(third.executed, 1, "--force must re-run the trial");
+    assert_eq!(third.resumed, 0);
+
+    // a corrupt artifact does not count as completed
+    fs::write(&trial_path, b"{ truncated").unwrap();
+    let fourth = runner::run_plan(&plan, &store, &opts).unwrap();
+    assert_eq!(fourth.executed, 1, "a corrupt trial.json must be re-measured");
+}
+
+#[test]
+fn gc_removes_only_unreferenced() {
+    let plan = Plan::parse(TINY_SERVE).unwrap();
+    let store = LabStore::new(scratch("gc"));
+    let report = runner::run_plan(&plan, &store, &RunOpts::default()).unwrap();
+
+    // a stale run no plan references
+    let stale = store.runs_dir().join("old-plan-00000000deadbeef");
+    fs::create_dir_all(stale.join("trials")).unwrap();
+    fs::write(stale.join("meta.json"), "{}").unwrap();
+
+    let keep: BTreeSet<String> = [report.run_id.clone()].into_iter().collect();
+
+    // dry-run reports but deletes nothing
+    let (removed, kept) = store.gc(&keep, true).unwrap();
+    assert_eq!(removed, vec!["old-plan-00000000deadbeef".to_string()]);
+    assert_eq!(kept, vec![report.run_id.clone()]);
+    assert!(stale.is_dir(), "dry-run must not delete");
+
+    // the real pass removes exactly the unreferenced dir
+    let (removed, kept) = store.gc(&keep, false).unwrap();
+    assert_eq!(removed, vec!["old-plan-00000000deadbeef".to_string()]);
+    assert_eq!(kept, vec![report.run_id.clone()]);
+    assert!(!stale.exists(), "stale run must be gone");
+    assert!(store.run_dir(&report.run_id).is_dir(), "referenced run must survive");
+}
+
+#[test]
+fn list_and_trace_sane() {
+    let plan = Plan::parse(TINY_SERVE).unwrap();
+    let store = LabStore::new(scratch("list"));
+    let report = runner::run_plan(&plan, &store, &RunOpts::default()).unwrap();
+
+    let runs = store.list_runs().unwrap();
+    assert_eq!(runs.len(), 1);
+    assert_eq!(runs[0].id, report.run_id);
+    assert_eq!(runs[0].trials_done, 1);
+    assert!(!runs[0].git_rev.is_empty());
+
+    // the provenance a `lab trace` prints: completed trials carry the
+    // task, the resolved spec, the seed, and the measured row
+    let trials = store.completed_trials(&report.run_id).unwrap();
+    assert_eq!(trials.len(), 1);
+    let (rel, doc) = &trials[0];
+    assert_eq!(rel, "serve/planned-shift6-s1-t1-w2-off/r0");
+    assert_eq!(doc.get("task").unwrap().as_str().unwrap(), "serve");
+    assert!(doc.opt("spec").is_some(), "trial must record its resolved spec");
+    assert!(doc.opt("git_rev").is_some());
+    let row = doc.get("row").unwrap();
+    assert_eq!(row.get("engine").unwrap().as_str().unwrap(), "shift6");
+    assert!(row.get("imgs_per_s").unwrap().as_f64().unwrap() > 0.0);
+    // the resolved plan rides along with the run
+    assert!(store.run_dir(&report.run_id).join("plan.resolved.toml").is_file());
+}
+
+#[test]
+fn tables_aggregate_repeats() {
+    let mk = |rate: f64| {
+        Json::parse(&format!(
+            r#"{{"task":"serve","row":{{"executor":"planned","engine":"shift6",
+                "shards":1,"threads":1,"window":"fixed","batch_window_ms":2,
+                "simd":"off","imgs_per_s":{rate},"wall_s":1.0,
+                "shard_counts":[8]}}}}"#
+        ))
+        .unwrap()
+    };
+    let trials =
+        vec![("c/r0".to_string(), mk(100.0)), ("c/r1".to_string(), mk(110.0))];
+    let (serve, train) = build_tables(&trials).unwrap();
+    assert!(train.is_none());
+    let table = serve.unwrap();
+    let cells = table.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 1, "identical identities must collapse into one cell");
+    let cell = &cells[0];
+    assert_eq!(cell.get("n").unwrap().as_f64().unwrap(), 2.0);
+    let m = cell.get("metrics").unwrap().get("imgs_per_s").unwrap();
+    assert_eq!(m.get("mean").unwrap().as_f64().unwrap(), 105.0);
+    assert_eq!(m.get("min").unwrap().as_f64().unwrap(), 100.0);
+    assert_eq!(m.get("max").unwrap().as_f64().unwrap(), 110.0);
+    let std = m.get("std").unwrap().as_f64().unwrap();
+    assert!((std - 50.0f64.sqrt()).abs() < 1e-9, "sample std, got {std}");
+    // arrays are per-trial detail, not identity and not metrics
+    assert!(cell.opt("shard_counts").is_none());
+}
+
+#[test]
+fn export_rewrites_in_place() {
+    let plan = Plan::parse(TINY_SERVE).unwrap();
+    let root = scratch("export");
+    let store = LabStore::new(root.clone());
+    let report = runner::run_plan(&plan, &store, &RunOpts::default()).unwrap();
+
+    let serve_out = root.join("BENCH_serve.json");
+    let train_out = root.join("BENCH_train.json");
+    let (rows1, _) =
+        runner::export_flat(&store, &report.run_id, &serve_out, &train_out).unwrap();
+    assert_eq!(rows1.len(), 1);
+    // re-running the identical plan + re-exporting must NOT append or
+    // clobber: same single row, document replaced wholesale
+    runner::run_plan(&plan, &store, &RunOpts::default()).unwrap();
+    let (rows2, _) =
+        runner::export_flat(&store, &report.run_id, &serve_out, &train_out).unwrap();
+    assert_eq!(rows2.len(), 1, "identical-cell re-runs must not duplicate rows");
+
+    let doc = Json::parse(&fs::read_to_string(&serve_out).unwrap()).unwrap();
+    assert_eq!(doc.get("lab_run").unwrap().as_str().unwrap(), report.run_id);
+    assert_eq!(doc.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    // the variance-aware gates key off this: lab exports carry tables
+    let cells = doc.get("tables").unwrap().get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 1);
+    assert!(!train_out.exists(), "no train trials, no train export");
+}
